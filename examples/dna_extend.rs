@@ -1,0 +1,94 @@
+//! Partial convolutions for sequence-length extension (Table 8 analogue).
+//!
+//! The paper extends HyenaDNA from 1M to 4M tokens by sliding its (partial
+//! convolution) context window over the longer sequence. This example
+//! reproduces the workflow at testbed scale:
+//!
+//! 1. briefly pretrain the DNA model (context 4096, filter length 1024 —
+//!    a *partial* convolution) on synthetic DNA with long-range motifs;
+//! 2. copy the trained parameters into the evaluation artifact;
+//! 3. evaluate sequences 2x/4x longer than the training context with
+//!    the coordinator's sliding-window extension plan;
+//! 4. report PPL per length — flat PPL across lengths is the paper's
+//!    Table 8 result shape.
+//!
+//! ```bash
+//! cargo run --release --example dna_extend -- --train-steps 60
+//! ```
+
+use flashfftconv::coordinator::partial::ExtensionPlan;
+use flashfftconv::runtime::{HostTensor, Runtime};
+use flashfftconv::trainer::data::DnaGen;
+use flashfftconv::trainer::run::Budget;
+use flashfftconv::trainer::{TrainConfig, Trainer};
+use flashfftconv::util::Args;
+
+fn main() -> flashfftconv::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1))?;
+    let train_steps = args.get_usize("train-steps", 60)? as u64;
+    let factors = args.get_usize_list("extend-factors", &[1, 2, 4])?;
+    args.finish()?;
+
+    let runtime = Runtime::new("artifacts")?;
+
+    // 1. Pretrain briefly.
+    println!("pretraining dna model ({train_steps} steps)...");
+    let mut trainer = Trainer::new(
+        &runtime,
+        TrainConfig {
+            artifact: "dna_train".into(),
+            budget: Budget::Steps(train_steps),
+            log_every: 20,
+            seed: 1,
+            checkpoint: None,
+        },
+    )?;
+    let o = trainer.run()?;
+    println!("  train loss {:.4} -> {:.4}", o.first_loss, o.final_loss);
+
+    // 2. Copy trained params into the eval artifact.
+    let mut eval = runtime.load("dna_eval")?;
+    let names: Vec<String> = eval
+        .spec()
+        .inputs
+        .iter()
+        .filter(|i| i.spec.name.starts_with("param."))
+        .map(|i| i.spec.name.clone())
+        .collect();
+    for name in &names {
+        let t = trainer.artifact().state(name)?;
+        eval.set_operand(name, &t)?;
+    }
+    println!("  copied {} trained parameter tensors into dna_eval", names.len());
+
+    // 3/4. Sliding-window extension.
+    let spec = eval.spec().clone();
+    let context = spec.meta_usize("seq_len").unwrap();
+    let kmask_len =
+        spec.inputs.iter().find(|i| i.spec.name == "kmask").map(|i| i.spec.numel()).unwrap();
+    let mask = vec![1.0f32; kmask_len];
+    println!("\ncontext {context}, filter length {kmask_len} (partial conv)");
+    println!("{:>10}  {:>8}  {:>7}  {:>7}", "total_len", "windows", "loss", "ppl");
+    for f in factors {
+        let total = context * f.max(1);
+        let plan = ExtensionPlan::new(total, context, context / 2)?;
+        let mut gen = DnaGen::new(64, 7); // same data distribution per row
+        let seq = gen.sequence(total + 1);
+        let mut losses = vec![];
+        for w in &plan.windows {
+            let window: Vec<i32> = seq[w.start..w.start + context + 1].to_vec();
+            let outs = eval.call(&[
+                HostTensor::i32(window, &[1, context + 1]),
+                HostTensor::f32(mask.clone(), &[kmask_len]),
+            ])?;
+            losses.push(outs[0].item());
+        }
+        let loss = plan.combine_losses(&losses);
+        println!("{:>10}  {:>8}  {:>7.4}  {:>7.3}", total, plan.calls(), loss, loss.exp());
+    }
+    println!(
+        "\nTable-8 shape: PPL stays ~flat as the evaluated sequence grows past the \
+         training context — the partial-conv window extends the model for free."
+    );
+    Ok(())
+}

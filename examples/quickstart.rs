@@ -1,0 +1,64 @@
+//! Quickstart: load a FlashFFTConv artifact, run a convolution, verify it.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the full public API surface in ~60 lines: open the
+//! [`Runtime`] over the artifact directory, load the fused Monarch conv
+//! for N=1024, run it on random data, and check the result against both
+//! the recorded JAX golden output and the crate's native FFT oracle.
+
+use flashfftconv::fft;
+use flashfftconv::runtime::{golden, HostTensor, Runtime};
+use flashfftconv::util::Rng;
+
+fn main() -> flashfftconv::Result<()> {
+    let runtime = Runtime::new("artifacts")?;
+    let name = "conv_fwd_monarch_n1024";
+    let mut conv = runtime.load(name)?;
+    let spec = conv.spec().clone();
+    let (b, h, n) = (
+        spec.meta_usize("batch").unwrap(),
+        spec.meta_usize("heads").unwrap(),
+        spec.meta_usize("seq_len").unwrap(),
+    );
+    println!(
+        "loaded {name}: B={b} H={h} N={n} (order-{} Monarch, r2c packed)",
+        spec.meta("order").unwrap_or("2")
+    );
+
+    // 1. Replay the recorded golden transcript (python JAX -> rust PJRT).
+    let g = golden::load(runtime.manifest(), &spec)?.expect("golden transcript");
+    let outs = conv.call(&g.inputs)?;
+    let err = outs[0].max_abs_diff(&g.outputs[0]);
+    println!("golden replay: max|err| = {err:.2e}");
+    assert!(err < 2e-3);
+
+    // 2. Fresh random convolution, verified against the native FFT oracle.
+    let mut rng = Rng::new(42);
+    let u: Vec<f32> = rng.normal_vec(b * h * n);
+    let k: Vec<f32> = rng.normal_vec(h * n);
+    let outs = conv.call(&[
+        HostTensor::f32(u.clone(), &[b, h, n]),
+        HostTensor::f32(k.clone(), &[h, n]),
+    ])?;
+    let y = outs[0].as_f32();
+
+    let mut worst = 0.0f64;
+    for bi in 0..b {
+        for hi in 0..h {
+            let urow: Vec<f64> =
+                u[(bi * h + hi) * n..(bi * h + hi + 1) * n].iter().map(|&x| x as f64).collect();
+            let krow: Vec<f64> = k[hi * n..(hi + 1) * n].iter().map(|&x| x as f64).collect();
+            let want = fft::fft_conv(&urow, &krow);
+            for (g_, w) in y[(bi * h + hi) * n..(bi * h + hi + 1) * n].iter().zip(&want) {
+                worst = worst.max((*g_ as f64 - w).abs());
+            }
+        }
+    }
+    println!("oracle check over {b}x{h} sequences: max|err| = {worst:.2e}");
+    assert!(worst < 1e-2);
+    println!("quickstart OK");
+    Ok(())
+}

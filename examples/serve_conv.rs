@@ -1,0 +1,96 @@
+//! Serving example: the coordinator's batched convolution service.
+//!
+//! Spins up the [`ConvService`] (router -> dynamic batcher -> fused
+//! artifact on a dedicated PJRT thread), installs a filter bank, submits a
+//! stream of mixed-length requests from several client threads, and
+//! reports latency / throughput / batching statistics.
+//!
+//! ```bash
+//! cargo run --release --example serve_conv -- --requests 64
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use flashfftconv::coordinator::router::ConvKind;
+use flashfftconv::coordinator::service::{ConvRequest, ConvService};
+use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::util::{Args, Rng};
+
+fn main() -> flashfftconv::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1))?;
+    let requests = args.get_usize("requests", 64)?;
+    let clients = args.get_usize("clients", 4)?;
+    let variant = args.get("variant", "monarch");
+    args.finish()?;
+
+    let policy = BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(4) };
+    let service = ConvService::start("artifacts", &variant, policy)?;
+    let heads = 16usize;
+
+    // Pretend-pretrained filter banks for two buckets.
+    let mut rng = Rng::new(9);
+    for bucket in [256usize, 1024] {
+        service.set_filter(ConvKind::Forward, bucket, rng.normal_vec(heads * bucket))?;
+    }
+
+    // Warm up: first request per bucket pays artifact compile; exclude it
+    // from the serving statistics (steady-state is what Table 5 reports).
+    for bucket in [256usize, 1000] {
+        let u = rng.normal_vec(heads * bucket);
+        service
+            .call(ConvRequest { kind: ConvKind::Forward, len: bucket, streams: vec![u] })?;
+    }
+    let warm_reqs = service.stats().requests.load(Ordering::Relaxed);
+    let warm_lat = service.stats().latency_ns_sum.load(Ordering::Relaxed);
+    println!("(warmup: {warm_reqs} requests, compile included)");
+
+    println!("serving {requests} requests from {clients} clients ({variant} kernels)...");
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let service = &service;
+            s.spawn(move || {
+                let mut rng = Rng::new(100 + c as u64);
+                let per_client = requests / clients;
+                let mut pending = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    // Mixed lengths: exercise routing + padding.
+                    let len = if (i + c) % 3 == 0 { 1000 } else { 256 };
+                    let u = rng.normal_vec(heads * len);
+                    pending.push(service.submit(ConvRequest {
+                        kind: ConvKind::Forward,
+                        len,
+                        streams: vec![u],
+                    }));
+                }
+                for rx in pending {
+                    rx.recv().expect("service alive").expect("conv ok");
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+
+    let s = service.stats();
+    let served = s.rows_executed.load(Ordering::Relaxed) - warm_reqs;
+    let steady_reqs = s.requests.load(Ordering::Relaxed) - warm_reqs;
+    let steady_lat =
+        (s.latency_ns_sum.load(Ordering::Relaxed) - warm_lat) as f64 / steady_reqs as f64 / 1e6;
+    println!(
+        "\nserved {served} rows in {:.2}s  ({:.1} rows/s)\n\
+         batches          : {}\n\
+         mean occupancy   : {:.2} rows/batch\n\
+         mean latency     : {:.2} ms (steady state)\n\
+         max latency      : {:.2} ms (includes queueing)\n\
+         errors           : {}",
+        wall.as_secs_f64(),
+        served as f64 / wall.as_secs_f64(),
+        s.batches.load(Ordering::Relaxed),
+        s.mean_occupancy(),
+        steady_lat,
+        s.latency_ns_max.load(Ordering::Relaxed) as f64 / 1e6,
+        s.errors.load(Ordering::Relaxed),
+    );
+    Ok(())
+}

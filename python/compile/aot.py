@@ -1,0 +1,589 @@
+"""AOT artifact builder: lower every model/kernel to HLO text + manifest.
+
+This is the single entry point of the Python compile path (``make
+artifacts``).  It produces, under ``artifacts/``:
+
+  * ``<name>.hlo.txt``   — HLO text for each artifact (the interchange
+    format: jax >= 0.5 serialized protos use 64-bit ids that the runtime's
+    XLA rejects, but HLO text round-trips cleanly — see
+    /opt/xla-example/README.md);
+  * ``<name>.fix.bin``   — fixture payload: constant operands (DFT factor
+    matrices, twiddles, permutations) and initial state (model parameters,
+    optimizer moments) as raw little-endian arrays;
+  * ``<name>.golden.bin``— optional golden transcript (example runtime
+    inputs followed by expected outputs) for Rust integration tests;
+  * ``manifest.txt``     — the line-based index the Rust runtime parses
+    (see ``rust/src/util/manifest.rs`` for the grammar).
+
+Input kinds in the manifest:
+
+  * ``runtime`` — supplied by the Rust caller on every execution;
+  * ``const``   — loaded once from the fixture file (never changes);
+  * ``state``   — initialized from the fixture, then fed back from the
+    previous call's outputs (training state); the first ``n_state``
+    outputs of such artifacts are the next-step values of the first
+    ``n_state`` inputs, in order.
+
+Artifact groups map one-to-one onto the paper's experiments (DESIGN.md §5);
+select subsets with ``--groups`` for faster incremental builds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import conv_op, fftmats, monarch2, monarch3, ref
+
+_DTYPE_NAMES = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32"}
+
+
+def _dtype_name(dt) -> str:
+    return _DTYPE_NAMES[np.dtype(dt)]
+
+
+def _shape_str(shape: Tuple[int, ...]) -> str:
+    return ",".join(str(d) for d in shape) if shape else "-"
+
+
+class InputSpec:
+    """One artifact input: name, example/initial value, and kind."""
+
+    def __init__(self, name: str, value: np.ndarray, kind: str) -> None:
+        assert kind in ("runtime", "const", "state"), kind
+        self.name = name
+        self.value = np.ascontiguousarray(value)
+        self.kind = kind
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe bridge).
+
+    CRITICAL: print with ``print_large_constants=True``. The default
+    printer elides big literals as ``constant({...})``, which the runtime's
+    older HLO parser accepts *silently* and mis-materializes — every traced
+    constant (positional features, twiddle factors, decay windows) would be
+    garbage at execution time.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # Newer metadata attributes (source_end_line, ...) are rejected by the
+    # runtime's older HLO parser; metadata is debug-only, drop it.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+class ArtifactBuilder:
+    """Accumulates artifacts and writes the manifest + payload files."""
+
+    def __init__(self, out_dir: str, verbose: bool = True) -> None:
+        self.out_dir = out_dir
+        self.lines: List[str] = ["version 1"]
+        self.verbose = verbose
+        self.count = 0
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(
+        self,
+        name: str,
+        fn: Callable,
+        inputs: Sequence[InputSpec],
+        meta: Dict[str, object],
+        output_names: Optional[List[str]] = None,
+        golden: bool = False,
+    ) -> None:
+        """Lower ``fn(*inputs)`` and register it under ``name``."""
+        t0 = time.time()
+        specs = [jax.ShapeDtypeStruct(i.value.shape, i.value.dtype) for i in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        hlo = to_hlo_text(lowered)
+        hlo_file = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, hlo_file), "w") as f:
+            f.write(hlo)
+
+        out_shapes = jax.eval_shape(fn, *specs)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        if output_names is None:
+            output_names = [f"out{i}" for i in range(len(out_shapes))]
+        assert len(output_names) == len(out_shapes)
+
+        # Fixture payload: const + state inputs, in manifest order.
+        fix_file = ""
+        offset = 0
+        fix_chunks: List[bytes] = []
+        lines = [f"artifact {name}", f"hlo {hlo_file}"]
+        for k, v in meta.items():
+            lines.append(f"meta {k} {v}")
+        for spec in inputs:
+            entry = (
+                f"input {spec.name} {_dtype_name(spec.value.dtype)} "
+                f"{_shape_str(spec.value.shape)} {spec.kind}"
+            )
+            if spec.kind in ("const", "state"):
+                if not fix_file:
+                    fix_file = f"{name}.fix.bin"
+                raw = spec.value.tobytes()
+                entry += f" {fix_file} {offset}"
+                offset += len(raw)
+                fix_chunks.append(raw)
+            lines.append(entry)
+        for oname, osh in zip(output_names, out_shapes):
+            lines.append(
+                f"output {oname} {_dtype_name(osh.dtype)} {_shape_str(osh.shape)}"
+            )
+        if fix_chunks:
+            with open(os.path.join(self.out_dir, fix_file), "wb") as f:
+                f.write(b"".join(fix_chunks))
+
+        if golden:
+            outs = jax.jit(fn)(*[jnp.asarray(i.value) for i in inputs])
+            if not isinstance(outs, (tuple, list)):
+                outs = (outs,)
+            gfile = f"{name}.golden.bin"
+            with open(os.path.join(self.out_dir, gfile), "wb") as f:
+                for spec in inputs:
+                    if spec.kind == "runtime":
+                        f.write(spec.value.tobytes())
+                for o in outs:
+                    f.write(np.ascontiguousarray(np.array(o)).tobytes())
+            lines.append(f"golden {gfile}")
+
+        lines.append("end")
+        self.lines.extend(lines)
+        self.count += 1
+        if self.verbose:
+            print(f"  [{self.count}] {name}  ({time.time() - t0:.1f}s, "
+                  f"hlo {len(hlo) // 1024}KB)")
+
+    def finish(self) -> None:
+        with open(os.path.join(self.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+        if self.verbose:
+            print(f"wrote {self.count} artifacts -> {self.out_dir}/manifest.txt")
+
+
+# ---------------------------------------------------------------------------
+# Conv artifact group (Tables 3/4/11-15)
+# ---------------------------------------------------------------------------
+
+CONV_B, CONV_H = 2, 16  # bench shape; results scale linearly in B*H (§C.4)
+
+
+def _rand(shape, seed, dtype=np.float32):
+    return np.random.default_rng(seed).normal(size=shape).astype(dtype)
+
+
+def _conv_monarch_artifact(b: ArtifactBuilder, n: int, *, gated: bool,
+                           causal: bool, golden: bool) -> None:
+    """Fused Monarch conv: u (+gates) and time-domain k as runtime inputs,
+    FFT matrices as fixtures; packed coefficients computed in-HLO."""
+    input_len = n // 2 if causal else n
+    order = conv_op.default_order(n)
+    mod = monarch2 if order == 2 else monarch3
+    cfg_cls = monarch2.Monarch2Config if order == 2 else monarch3.Monarch3Config
+    cfg = cfg_cls(seq_len=n, input_len=input_len, gated=gated)
+    kernel_fn = mod.build_conv_fn(cfg)
+    consts = mod.constant_operands(cfg)
+
+    def fn(*args):
+        if gated:
+            u, v, w, k = args[:4]
+            rest = args[4:]
+            coeffs = conv_op.coeffs_from_padded(conv_op._pad_to(k, n), cfg.factors)
+            return (kernel_fn(u, v, w, *coeffs, *rest),)
+        u, k = args[:2]
+        rest = args[2:]
+        coeffs = conv_op.coeffs_from_padded(conv_op._pad_to(k, n), cfg.factors)
+        return (kernel_fn(u, *coeffs, *rest),)
+
+    inputs = [InputSpec("u", _rand((CONV_B, CONV_H, input_len), n), "runtime")]
+    if gated:
+        inputs += [InputSpec("v", _rand((CONV_B, CONV_H, input_len), n + 1), "runtime"),
+                   InputSpec("w", _rand((CONV_B, CONV_H, input_len), n + 2), "runtime")]
+    inputs.append(InputSpec("k", _rand((CONV_H, input_len), n + 3), "runtime"))
+    inputs += [InputSpec(cname, arr, "const") for cname, arr in consts.items()]
+    kind = ("conv_gated" if gated else "conv_causal" if causal else "conv_fwd")
+    name = f"{kind}_monarch_n{input_len}"
+    b.add(name, fn, inputs,
+          meta=dict(group="conv", kind=kind, variant="monarch", seq_len=input_len,
+                    fft_len=n, order=order, batch=CONV_B, heads=CONV_H),
+          output_names=["y"], golden=golden)
+
+
+def _conv_baseline_artifact(b: ArtifactBuilder, n: int, *, gated: bool,
+                            causal: bool, golden: bool) -> None:
+    """The PyTorch-analogue baseline: plain jnp.fft conv lowered to HLO."""
+    input_len = n // 2 if causal else n
+
+    if gated:
+        def fn(u, v, w, k):
+            return ((ref.fft_conv_gated_causal if causal else ref.fft_conv_gated)(u, v, w, k),)
+    elif causal:
+        def fn(u, k):
+            return (ref.fft_conv_causal(u, k),)
+    else:
+        def fn(u, k):
+            return (ref.fft_conv(u, k),)
+
+    inputs = [InputSpec("u", _rand((CONV_B, CONV_H, input_len), n), "runtime")]
+    if gated:
+        inputs += [InputSpec("v", _rand((CONV_B, CONV_H, input_len), n + 1), "runtime"),
+                   InputSpec("w", _rand((CONV_B, CONV_H, input_len), n + 2), "runtime")]
+    inputs.append(InputSpec("k", _rand((CONV_H, input_len), n + 3), "runtime"))
+    kind = ("conv_gated" if gated else "conv_causal" if causal else "conv_fwd")
+    name = f"{kind}_baseline_n{input_len}"
+    b.add(name, fn, inputs,
+          meta=dict(group="conv", kind=kind, variant="baseline", seq_len=input_len,
+                    fft_len=n, batch=CONV_B, heads=CONV_H),
+          output_names=["y"], golden=golden)
+
+
+def _conv_bwd_artifacts(b: ArtifactBuilder, n: int, golden: bool) -> None:
+    """Backward pass (Table 15): (u, k, dy) -> (du, dk), both variants."""
+    order = conv_op.default_order(n)
+
+    def fn_m(u, k, dy):
+        _, vjp = jax.vjp(lambda u_, k_: conv_op.long_conv_circular(u_, k_, order), u, k)
+        return vjp(dy)
+
+    def fn_b(u, k, dy):
+        _, vjp = jax.vjp(ref.fft_conv, u, k)
+        return vjp(dy)
+
+    inputs = [InputSpec("u", _rand((CONV_B, CONV_H, n), n), "runtime"),
+              InputSpec("k", _rand((CONV_H, n), n + 3), "runtime"),
+              InputSpec("dy", _rand((CONV_B, CONV_H, n), n + 4), "runtime")]
+    b.add(f"conv_bwd_monarch_n{n}", fn_m, inputs,
+          meta=dict(group="conv", kind="conv_bwd", variant="monarch", seq_len=n,
+                    fft_len=n, order=order, batch=CONV_B, heads=CONV_H),
+          output_names=["du", "dk"], golden=golden)
+    b.add(f"conv_bwd_baseline_n{n}", fn_b, inputs,
+          meta=dict(group="conv", kind="conv_bwd", variant="baseline", seq_len=n,
+                    fft_len=n, batch=CONV_B, heads=CONV_H),
+          output_names=["du", "dk"], golden=golden)
+
+
+def build_conv_group(b: ArtifactBuilder, seqlens: Sequence[int]) -> None:
+    for n in seqlens:
+        golden = n <= 4096
+        _conv_monarch_artifact(b, n, gated=False, causal=False, golden=golden)
+        _conv_baseline_artifact(b, n, gated=False, causal=False, golden=golden)
+        _conv_monarch_artifact(b, n, gated=True, causal=False, golden=golden)
+        _conv_baseline_artifact(b, n, gated=True, causal=False, golden=golden)
+        # Causal: input length n/2, FFT size n (Table 13's configuration).
+        _conv_monarch_artifact(b, n, gated=False, causal=True, golden=golden)
+        _conv_baseline_artifact(b, n, gated=False, causal=True, golden=golden)
+        if n <= 16384:
+            _conv_bwd_artifacts(b, n, golden=golden)
+
+
+def build_ablation_group(b: ArtifactBuilder, seqlens: Sequence[int]) -> None:
+    """Table 3 ablations: complex path (no r2c), 4-mult complex matmuls."""
+    for n in seqlens:
+        for tag, r2c, karatsuba in (("basic", False, True), ("r2c4m", True, False)):
+            cfg = monarch2.Monarch2Config(seq_len=n, input_len=n, r2c=r2c,
+                                          karatsuba=karatsuba)
+            kernel_fn = monarch2.build_conv_fn(cfg)
+            consts = monarch2.constant_operands(cfg)
+
+            def fn(u, k, *rest, _cfg=cfg, _kfn=kernel_fn, _r2c=r2c):
+                if _r2c:
+                    coeffs = conv_op.coeffs_from_padded(k, _cfg.factors)
+                    return (_kfn(u, *coeffs, *rest),)
+                kf = jnp.fft.fft(k.astype(jnp.float32), axis=-1)
+                # Reshape-transpose permutation (monarch_permute): gather at
+                # these shapes miscompiles on the runtime's XLA 0.5.1.
+                kr = conv_op.monarch_permute(jnp.real(kf), _cfg.factors)
+                ki = conv_op.monarch_permute(jnp.imag(kf), _cfg.factors)
+                return (_kfn(u, kr, ki, *rest),)
+
+            inputs = [InputSpec("u", _rand((CONV_B, CONV_H, n), n), "runtime"),
+                      InputSpec("k", _rand((CONV_H, n), n + 3), "runtime")]
+            inputs += [InputSpec(cn, arr, "const") for cn, arr in consts.items()]
+            b.add(f"conv_abl_{tag}_n{n}", fn, inputs,
+                  meta=dict(group="ablation", kind="conv_fwd", variant=tag,
+                            seq_len=n, fft_len=n, order=2, batch=CONV_B, heads=CONV_H),
+                  output_names=["y"], golden=True)
+
+
+def build_sparse_group(b: ArtifactBuilder, n: int = 4096) -> None:
+    """Table 9/10: frequency-sparse conv artifacts, one per pattern."""
+    n1, n2 = fftmats.monarch_factors(n, 2)
+    for tag, pat in fftmats.table10_patterns(n1, n2).items():
+        cfg = monarch2.Monarch2Config(seq_len=n, input_len=n, r2c=False,
+                                      keep_rows=pat.keep_rows, keep_cols=pat.keep_cols)
+        kernel_fn = monarch2.build_conv_fn(cfg)
+        consts = monarch2.constant_operands(cfg)
+
+        def fn(u, k, *rest, _cfg=cfg, _kfn=kernel_fn, _p=pat):
+            kfr, kfi = conv_op.kf_mon_sliced(k, _cfg.factors, _p.keep_rows, _p.keep_cols)
+            return (_kfn(u, kfr, kfi, *rest),)
+
+        inputs = [InputSpec("u", _rand((CONV_B, CONV_H, n), n), "runtime"),
+                  InputSpec("k", _rand((CONV_H, n), n + 3), "runtime")]
+        inputs += [InputSpec(cn, arr, "const") for cn, arr in consts.items()]
+        b.add(f"conv_sparse_{tag}_n{n}", fn, inputs,
+              meta=dict(group="sparse", kind="conv_fwd", variant=f"sparse_{tag}",
+                        seq_len=n, fft_len=n, order=2, batch=CONV_B, heads=CONV_H,
+                        sparsity=f"{pat.sparsity_fraction:.4f}",
+                        flop_fraction=f"{pat.matmul_flop_fraction:.4f}",
+                        keep_rows=pat.keep_rows, keep_cols=pat.keep_cols),
+              output_names=["y"], golden=True)
+
+
+# ---------------------------------------------------------------------------
+# Model artifact groups
+# ---------------------------------------------------------------------------
+
+
+def _flat_train_fn(cfg: M.ModelConfig, opt: M.AdamConfig, names: List[str],
+                   extra_inputs: int = 1):
+    """Flatten make_train_step over sorted param names for AOT lowering."""
+    ts = (M.make_classifier_train_step(cfg, opt) if cfg.mixer == "longconv"
+          else M.make_train_step(cfg, opt))
+    p = len(names)
+
+    def fn(*args):
+        params = dict(zip(names, args[:p]))
+        m = dict(zip(names, args[p:2 * p]))
+        v = dict(zip(names, args[2 * p:3 * p]))
+        step = args[3 * p]
+        data = args[3 * p + 1: 3 * p + 1 + extra_inputs]
+        p2, m2, v2, s2, loss = ts(params, m, v, step, *data)
+        return (tuple(p2[n] for n in names) + tuple(m2[n] for n in names)
+                + tuple(v2[n] for n in names) + (s2, loss))
+
+    return fn
+
+
+def _state_inputs(params: M.Params, names: List[str]) -> List[InputSpec]:
+    specs = [InputSpec(f"param.{n}", np.array(params[n]), "state") for n in names]
+    specs += [InputSpec(f"adam_m.{n}", np.zeros_like(np.array(params[n])), "state")
+              for n in names]
+    specs += [InputSpec(f"adam_v.{n}", np.zeros_like(np.array(params[n])), "state")
+              for n in names]
+    specs.append(InputSpec("step", np.array(0.0, dtype=np.float32), "state"))
+    return specs
+
+
+def _state_output_names(names: List[str]) -> List[str]:
+    return ([f"param.{n}" for n in names] + [f"adam_m.{n}" for n in names]
+            + [f"adam_v.{n}" for n in names] + ["step"])
+
+
+def add_train_artifact(b: ArtifactBuilder, name: str, cfg: M.ModelConfig,
+                       opt: M.AdamConfig, batch: int, seed: int = 0,
+                       extra_meta: Optional[Dict[str, object]] = None) -> None:
+    params = M.init_params(cfg, seed=seed)
+    names, _ = M.flatten_params(params)
+    inputs = _state_inputs(params, names)
+    if cfg.mixer == "longconv":
+        inputs += [InputSpec("pixels", _rand((batch, cfg.seq_len), 7), "runtime"),
+                   InputSpec("labels", np.zeros(batch, dtype=np.int32), "runtime")]
+        extra = 2
+    else:
+        tok = np.random.default_rng(7).integers(
+            0, cfg.vocab, size=(batch, cfg.seq_len + 1)).astype(np.int32)
+        inputs.append(InputSpec("tokens", tok, "runtime"))
+        extra = 1
+    fn = _flat_train_fn(cfg, opt, names, extra_inputs=extra)
+    meta = dict(group="model", kind="train_step", mixer=cfg.mixer,
+                variant=cfg.conv_impl, seq_len=cfg.seq_len, dim=cfg.dim,
+                layers=cfg.layers, vocab=cfg.vocab, batch=batch,
+                n_state=3 * len(names) + 1,
+                n_params=M.ModelConfig.param_count(params))
+    meta.update(extra_meta or {})
+    b.add(name, fn, inputs, meta=meta,
+          output_names=_state_output_names(names) + ["loss"])
+
+
+def add_eval_artifact(b: ArtifactBuilder, name: str, cfg: M.ModelConfig,
+                      batch: int, *, kmask: bool = False, logits: bool = False,
+                      seed: int = 0, golden: bool = False,
+                      extra_meta: Optional[Dict[str, object]] = None) -> None:
+    """Loss (or logits) forward artifact; params are state inputs."""
+    params = M.init_params(cfg, seed=seed)
+    names, _ = M.flatten_params(params)
+    p = len(names)
+
+    def fn(*args):
+        pd = dict(zip(names, args[:p]))
+        tokens = args[p]
+        mask = args[p + 1] if kmask else None
+        if logits:
+            return (M.lm_forward(pd, tokens, cfg, mask),)
+        return (M.lm_loss(pd, tokens, cfg, mask),)
+
+    inputs = [InputSpec(f"param.{n}", np.array(params[n]), "state") for n in names]
+    ltok = cfg.seq_len if logits else cfg.seq_len + 1
+    tok = np.random.default_rng(9).integers(0, cfg.vocab, size=(batch, ltok)).astype(np.int32)
+    inputs.append(InputSpec("tokens", tok, "runtime"))
+    if kmask:
+        inputs.append(InputSpec("kmask", np.ones(cfg.k_len, dtype=np.float32), "runtime"))
+    meta = dict(group="model", kind="lm_logits" if logits else "lm_eval",
+                mixer=cfg.mixer, variant=cfg.conv_impl, seq_len=cfg.seq_len,
+                dim=cfg.dim, layers=cfg.layers, vocab=cfg.vocab, batch=batch,
+                n_state=p)
+    meta.update(extra_meta or {})
+    b.add(name, fn, inputs, meta=meta,
+          output_names=["logits" if logits else "loss"], golden=golden)
+
+
+def build_lm_group(b: ArtifactBuilder, dim: int, layers: int, seq: int,
+                   batch: int, vocab: int) -> None:
+    opt = M.AdamConfig()
+    base = M.ModelConfig(vocab=vocab, dim=dim, layers=layers, seq_len=seq)
+    # Tiny config for fast Rust integration tests.
+    tiny = M.ModelConfig(vocab=32, dim=16, layers=1, seq_len=64)
+    add_train_artifact(b, "lm_tiny_train", tiny, opt, batch=2)
+    add_eval_artifact(b, "lm_tiny_eval", tiny, batch=2, golden=True)
+
+    # Table 1: same architecture, monarch vs baseline conv, same data shape.
+    add_train_artifact(b, "lm_train_monarch", base, opt, batch=batch)
+    add_train_artifact(b, "lm_train_baseline",
+                       M.ModelConfig(**{**base.__dict__, "conv_impl": "baseline"}),
+                       opt, batch=batch)
+    # Table 7/8: eval with a runtime filter mask (partial convolutions).
+    add_eval_artifact(b, "lm_eval_kmask", base, batch=batch, kmask=True)
+    # Serving logits (Table 5 / server example).
+    add_eval_artifact(b, "lm_fwd_logits", base, batch=batch, logits=True)
+    # Table 9: frequency-sparse eval at several Table 10 patterns.
+    n1, n2 = fftmats.monarch_factors(seq, 2)  # fft size = 2*seq; factors of seq
+    for tag, keep in (("s50", (n1 // 2, n2)), ("s75", (n1 // 2, n2 // 2)),
+                      ("s91", (n1 // 4, n2 * 3 // 8))):
+        cfg_s = M.ModelConfig(**{**base.__dict__, "sparse_block": keep})
+        frac = 1.0 - (keep[0] * keep[1]) / (n1 * n2)
+        add_eval_artifact(b, f"lm_eval_sparse_{tag}", cfg_s, batch=batch,
+                          extra_meta=dict(sparsity=f"{frac:.4f}"))
+
+
+def build_e2e_group(b: ArtifactBuilder) -> None:
+    """Table 5 model zoo: each model in monarch and baseline conv variants."""
+    zoo = [
+        ("m2bert", M.ModelConfig(vocab=128, dim=64, layers=2, seq_len=128), 8),
+        ("hyena4k", M.ModelConfig(vocab=128, dim=32, layers=2, seq_len=4096), 1),
+        ("sashimi", M.ModelConfig(vocab=64, dim=32, layers=2, seq_len=8192,
+                                  mixer="longconv", filter_len=4096), 1),
+        ("hyenadna", M.ModelConfig(vocab=8, dim=16, layers=2, seq_len=16384), 1),
+    ]
+    for tag, cfg, batch in zoo:
+        for impl in ("monarch", "baseline"):
+            cfg_i = M.ModelConfig(**{**cfg.__dict__, "conv_impl": impl})
+            if cfg.mixer == "longconv":
+                add_clf_eval_artifact(b, f"e2e_{tag}_{impl}", cfg_i, batch,
+                                      extra_meta=dict(group="e2e", model=tag))
+            else:
+                add_eval_artifact(b, f"e2e_{tag}_{impl}", cfg_i, batch=batch,
+                                  extra_meta=dict(group="e2e", model=tag))
+
+
+def build_attn_group(b: ArtifactBuilder) -> None:
+    """Table 6: Hyena vs GPT at matched dims across sequence lengths."""
+    for seq in (256, 1024, 4096):
+        for mixer in ("hyena", "attention"):
+            cfg = M.ModelConfig(vocab=128, dim=64, layers=2, seq_len=seq,
+                                mixer=mixer, heads=4)
+            add_eval_artifact(b, f"t6_{mixer}_n{seq}", cfg, batch=1,
+                              extra_meta=dict(group="attn", model=mixer))
+
+
+def add_clf_eval_artifact(b: ArtifactBuilder, name: str, cfg: M.ModelConfig,
+                          batch: int, golden: bool = False,
+                          extra_meta: Optional[Dict[str, object]] = None) -> None:
+    params = M.init_params(cfg, seed=0)
+    names, _ = M.flatten_params(params)
+    p = len(names)
+
+    def fn(*args):
+        pd = dict(zip(names, args[:p]))
+        return (M.classifier_forward(pd, args[p], cfg),)
+
+    inputs = [InputSpec(f"param.{n}", np.array(params[n]), "state") for n in names]
+    inputs.append(InputSpec("pixels", _rand((batch, cfg.seq_len), 11), "runtime"))
+    meta = dict(group="model", kind="clf_logits", mixer=cfg.mixer,
+                variant=cfg.conv_impl, seq_len=cfg.seq_len, dim=cfg.dim,
+                layers=cfg.layers, batch=batch, n_state=p)
+    meta.update(extra_meta or {})
+    b.add(name, fn, inputs, meta=meta, output_names=["logits"], golden=golden)
+
+
+def build_pathfinder_group(b: ArtifactBuilder) -> None:
+    """Table 2 analogue: long-conv classifier on synthetic Pathfinder."""
+    opt = M.AdamConfig(lr=3e-3)
+    cfg = M.ModelConfig(vocab=4, dim=48, layers=2, seq_len=1024, mixer="longconv")
+    add_train_artifact(b, "pf_train", cfg, opt, batch=8,
+                       extra_meta=dict(task="pathfinder"))
+    add_clf_eval_artifact(b, "pf_eval", cfg, batch=8,
+                          extra_meta=dict(task="pathfinder"))
+
+
+def build_dna_group(b: ArtifactBuilder) -> None:
+    """Table 8 analogue: partial-conv DNA model + extension eval."""
+    opt = M.AdamConfig(lr=2e-3)
+    cfg = M.ModelConfig(vocab=8, dim=24, layers=2, seq_len=4096, filter_len=1024)
+    add_train_artifact(b, "dna_train", cfg, opt, batch=1,
+                       extra_meta=dict(task="dna"))
+    add_eval_artifact(b, "dna_eval", cfg, batch=1, kmask=True,
+                      extra_meta=dict(task="dna"))
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+GROUPS = ("conv", "ablation", "sparse", "lm", "e2e", "attn", "pathfinder", "dna")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--groups", default="all",
+                    help=f"comma list from {GROUPS} or 'all'")
+    ap.add_argument("--conv-seqlens", default="256,1024,4096,16384,65536")
+    ap.add_argument("--lm-dim", type=int, default=64)
+    ap.add_argument("--lm-layers", type=int, default=2)
+    ap.add_argument("--lm-seq", type=int, default=256)
+    ap.add_argument("--lm-batch", type=int, default=4)
+    ap.add_argument("--lm-vocab", type=int, default=128)
+    args = ap.parse_args()
+
+    groups = GROUPS if args.groups == "all" else tuple(args.groups.split(","))
+    seqlens = [int(s) for s in args.conv_seqlens.split(",")]
+    b = ArtifactBuilder(args.out_dir)
+    t0 = time.time()
+    if "conv" in groups:
+        build_conv_group(b, seqlens)
+    if "ablation" in groups:
+        build_ablation_group(b, [1024, 4096])
+    if "sparse" in groups:
+        build_sparse_group(b)
+    if "lm" in groups:
+        build_lm_group(b, args.lm_dim, args.lm_layers, args.lm_seq,
+                       args.lm_batch, args.lm_vocab)
+    if "e2e" in groups:
+        build_e2e_group(b)
+    if "attn" in groups:
+        build_attn_group(b)
+    if "pathfinder" in groups:
+        build_pathfinder_group(b)
+    if "dna" in groups:
+        build_dna_group(b)
+    b.finish()
+    print(f"total {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

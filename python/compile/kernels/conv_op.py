@@ -1,0 +1,310 @@
+"""Differentiable FlashFFTConv ops (custom VJP with recomputation).
+
+Pallas kernels have no autodiff rule, and the paper deliberately does not
+store forward intermediates anyway — the backward pass *recomputes* them
+(§3.1 "Kernel Fusion and Recomputation").  This module packages the fused
+kernels as ``jax.custom_vjp`` ops whose backward passes are themselves
+Monarch convolutions:
+
+  * ``d/du`` of a causal conv is a causal conv with the *time-reversed*
+    kernel (conjugate spectrum) — another fused kernel call;
+  * ``d/dk`` is a batched circular correlation, computed spectrally;
+  * gated convs recompute the inner convolution for the gate gradient
+    instead of storing it (the paper's memory-saving trade).
+
+The filter's packed-domain coefficients are computed *inside* the traced
+function with ``jnp.fft`` over the (H, N) filter bank — cheap relative to
+the (B, H, N) convolution, and exactly what the paper does for Hyena-style
+filters that change every training step.
+
+Only static shapes appear at trace time, so everything here lowers into a
+single HLO module via ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fftmats, monarch2, monarch3
+
+Coeffs = Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]
+
+
+def monarch_permute(x: jnp.ndarray, factors: Tuple[int, ...]) -> jnp.ndarray:
+    """Apply the Monarch-order permutation ``x[..., order]`` gather-free.
+
+    The layout permutation is a digit reversal, i.e. a chain of
+    reshape-transposes (exactly the paper's observation that the Monarch
+    permutations "simply become matrix transposes"):
+
+        order[k1*M' + j2] = k1 + n1 * inner_order[j2]
+        =>  x.reshape(M', n1).T  then recurse on the last axis.
+
+    Besides being faster than a gather, this sidesteps an XLA-0.5.1 gather
+    miscompile observed at some shapes (see aot.py ablation note).
+    """
+    if len(factors) == 1:
+        return x
+    n1 = factors[0]
+    rest = factors[1:]
+    m = int(np.prod(rest))
+    batch = x.shape[:-1]
+    y = x.reshape(*batch, m, n1)
+    y = jnp.swapaxes(y, -1, -2)  # (..., n1, m)
+    y = monarch_permute(y, rest)  # inner permutation along the last axis
+    return y.reshape(*batch, n1 * m)
+
+
+def coeffs_from_padded(kpad: jnp.ndarray, factors: Tuple[int, ...]) -> Coeffs:
+    """Packed pointwise coefficients (A, B) in Monarch layout, in jnp.
+
+    Differentiable mirror of :func:`fftmats.kf_r2c_monarch`; runs inside the
+    traced model so filters generated per-step flow straight to the kernels.
+    """
+    n = kpad.shape[-1]
+    m = n // 2
+    kf = jnp.fft.fft(kpad.astype(jnp.float32), axis=-1)
+    s = (kf[..., :m] + kf[..., m:]) / 2.0
+    d = (kf[..., :m] - kf[..., m:]) / 2.0
+    theta = 2.0 * jnp.pi * jnp.arange(m) / n
+    a = s - d * jnp.sin(theta)
+    b = 1j * d * jnp.cos(theta)
+    perm = lambda t: monarch_permute(t.astype(jnp.float32), factors)
+    return (perm(jnp.real(a)), perm(jnp.imag(a)), perm(jnp.real(b)), perm(jnp.imag(b)))
+
+
+def _pad_to(k: jnp.ndarray, n: int) -> jnp.ndarray:
+    pad = n - k.shape[-1]
+    if pad < 0:
+        raise ValueError(f"filter length {k.shape[-1]} exceeds FFT size {n}")
+    if pad == 0:
+        return k
+    return jnp.concatenate([k, jnp.zeros(k.shape[:-1] + (pad,), k.dtype)], axis=-1)
+
+
+def _flip_padded(kpad: jnp.ndarray) -> jnp.ndarray:
+    """Time reversal ``k~[i] = k[(-i) mod N]`` — spectrum becomes conj."""
+    return jnp.roll(jnp.flip(kpad, axis=-1), 1, axis=-1)
+
+
+@functools.lru_cache(maxsize=None)
+def _build(seq_len: int, input_len: int, gated: bool, order: int):
+    """Build (and cache) the fused kernel + its constant operand list."""
+    # NOTE: constants are cached as *numpy* arrays and lifted into each trace
+    # on use — caching jnp arrays here would leak tracers across jit scopes.
+    if order == 2:
+        cfg = monarch2.Monarch2Config(seq_len=seq_len, input_len=input_len, gated=gated)
+        fn = monarch2.build_conv_fn(cfg)
+        consts = list(monarch2.constant_operands(cfg).values())
+    elif order == 3:
+        cfg = monarch3.Monarch3Config(seq_len=seq_len, input_len=input_len, gated=gated)
+        fn = monarch3.build_conv_fn(cfg)
+        consts = list(monarch3.constant_operands(cfg).values())
+    else:
+        raise ValueError(f"order must be 2 or 3, got {order}")
+    return cfg, fn, consts
+
+
+def default_order(seq_len: int) -> int:
+    """Pick the Monarch order for an FFT size, per the §3.2 cost model.
+
+    Order 2 while the factor matrices stay small enough to live in fast
+    memory; order 3 beyond that (the paper's p=2 -> p=3 crossover at ~32K).
+    """
+    return 2 if seq_len <= 32768 else 3
+
+
+def _run(fn, cfg, consts, *seqs: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    kpad = _pad_to(k, cfg.seq_len)
+    coeffs = coeffs_from_padded(kpad, cfg.factors)
+    return fn(*seqs, *coeffs, *consts)
+
+
+# ---------------------------------------------------------------------------
+# Plain causal long conv: y = (u conv k)[:L]
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def long_conv_causal(u: jnp.ndarray, k: jnp.ndarray, order: int = 2) -> jnp.ndarray:
+    """Causal long convolution ``y[i] = sum_{j<=i} u[j] k[i-j]``.
+
+    ``u : (B, H, L)``, ``k : (H, Lk)`` with ``Lk <= L`` (a *partial*
+    convolution when ``Lk < L`` — §3.3); FFT size ``2L``.
+    """
+    cfg, fn, consts = _build(2 * u.shape[-1], u.shape[-1], False, order)
+    return _run(fn, cfg, consts, u, k=k)
+
+
+def _long_conv_fwd(u, k, order):
+    return long_conv_causal(u, k, order), (u, k)
+
+
+def _long_conv_bwd(order, res, dy):
+    u, k = res
+    cfg, fn, consts = _build(2 * u.shape[-1], u.shape[-1], False, order)
+    n = cfg.seq_len
+    # du: causal conv of dy with the time-reversed kernel (conj spectrum).
+    kflip = _flip_padded(_pad_to(k, n))
+    coeffs = coeffs_from_padded(kflip, cfg.factors)
+    du = fn(dy, *coeffs, *consts)
+    # dk: batched circular correlation, spectral (recomputed, not stored).
+    dyf = jnp.fft.rfft(_pad_to(dy, n), axis=-1)
+    uf = jnp.fft.rfft(_pad_to(u, n), axis=-1)
+    dk_full = jnp.fft.irfft(jnp.sum(dyf * jnp.conj(uf), axis=0), n=n, axis=-1)
+    dk = dk_full[..., : k.shape[-1]].astype(k.dtype)
+    return du.astype(u.dtype), dk
+
+
+long_conv_causal.defvjp(_long_conv_fwd, _long_conv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Plain circular conv (FFT size == input size; Tables 3/11/15 workload)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def long_conv_circular(u: jnp.ndarray, k: jnp.ndarray, order: int = 2) -> jnp.ndarray:
+    """Circular convolution with FFT size equal to the input length.
+
+    The paper's "standard" benchmark configuration (Tables 3, 11, 15):
+    no causality padding, FFT size N = input size.
+    """
+    cfg, fn, consts = _build(u.shape[-1], u.shape[-1], False, order)
+    return _run(fn, cfg, consts, u, k=k)
+
+
+def _circ_fwd(u, k, order):
+    return long_conv_circular(u, k, order), (u, k)
+
+
+def _circ_bwd(order, res, dy):
+    u, k = res
+    cfg, fn, consts = _build(u.shape[-1], u.shape[-1], False, order)
+    n = cfg.seq_len
+    # du: circular conv with the time-reversed kernel — one more fused call.
+    coeffs = coeffs_from_padded(_flip_padded(_pad_to(k, n)), cfg.factors)
+    du = fn(dy, *coeffs, *consts)
+    dyf = jnp.fft.rfft(dy, axis=-1)
+    uf = jnp.fft.rfft(u, axis=-1)
+    dk_full = jnp.fft.irfft(jnp.sum(dyf * jnp.conj(uf), axis=0), n=n, axis=-1)
+    return du.astype(u.dtype), dk_full[..., : k.shape[-1]].astype(k.dtype)
+
+
+long_conv_circular.defvjp(_circ_fwd, _circ_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Gated causal conv: y = v * ((u * w) conv k)[:L]  (the Hyena operator)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def gated_conv_causal(
+    u: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray, k: jnp.ndarray, order: int = 2
+) -> jnp.ndarray:
+    """Fused gated causal convolution ``y = v * ((u*w) conv k)``.
+
+    Single fused kernel: the gating multiplies never touch HBM (Table 4's
+    I/O saving), and nothing but the inputs is saved for backward.
+    """
+    cfg, fn, consts = _build(2 * u.shape[-1], u.shape[-1], True, order)
+    return _run(fn, cfg, consts, u, v, w, k=k)
+
+
+def _gated_conv_fwd(u, v, w, k, order):
+    return gated_conv_causal(u, v, w, k, order), (u, v, w, k)
+
+
+def _gated_conv_bwd(order, res, dy):
+    u, v, w, k = res
+    cfg_p, fn_p, consts_p = _build(2 * u.shape[-1], u.shape[-1], False, order)
+    n = cfg_p.seq_len
+    x = u * w
+    kpad = _pad_to(k, n)
+    # Recompute the inner convolution for the gate gradient (recomputation
+    # instead of storing the forward intermediate — §3.1).
+    coeffs_k = coeffs_from_padded(kpad, cfg_p.factors)
+    c = fn_p(x, *coeffs_k, *consts_p)
+    dv = dy * c
+    # Gradient into the conv output, then back through the conv.
+    g = dy * v
+    coeffs_flip = coeffs_from_padded(_flip_padded(kpad), cfg_p.factors)
+    dx = fn_p(g, *coeffs_flip, *consts_p)
+    du = dx * w
+    dw = dx * u
+    # dk spectrally, summed over batch.
+    gf = jnp.fft.rfft(_pad_to(g, n), axis=-1)
+    xf = jnp.fft.rfft(_pad_to(x, n), axis=-1)
+    dk_full = jnp.fft.irfft(jnp.sum(gf * jnp.conj(xf), axis=0), n=n, axis=-1)
+    dk = dk_full[..., : k.shape[-1]].astype(k.dtype)
+    return du.astype(u.dtype), dv.astype(v.dtype), dw.astype(w.dtype), dk
+
+
+gated_conv_causal.defvjp(_gated_conv_fwd, _gated_conv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Frequency-sparse gated causal conv (eval-only; Table 9 workload)
+# ---------------------------------------------------------------------------
+
+
+def kf_mon_sliced(
+    kpad: jnp.ndarray, factors: Tuple[int, int], kr: int, kc: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Monarch-layout spectrum of ``kpad``, sliced to the kept (kr, kc) block.
+
+    jnp mirror of the build-time path: the Monarch layout is just the
+    permuted full FFT, so slicing the layout grid to its kept block both
+    sparsifies the spectrum and shrinks the kernel's pointwise operand.
+    """
+    n1, n2 = factors
+    kf = jnp.fft.fft(kpad.astype(jnp.float32), axis=-1)
+
+    def mon_block(plane: jnp.ndarray) -> jnp.ndarray:
+        mon = monarch_permute(plane.astype(jnp.float32), factors)
+        grid = mon.reshape(*mon.shape[:-1], n1, n2)[..., :kr, :kc]
+        return grid.reshape(*mon.shape[:-1], kr * kc).astype(jnp.float32)
+
+    return mon_block(jnp.real(kf)), mon_block(jnp.imag(kf))
+
+
+@functools.lru_cache(maxsize=None)
+def _build_sparse(seq_len: int, input_len: int, gated: bool, kr: int, kc: int):
+    cfg = monarch2.Monarch2Config(
+        seq_len=seq_len, input_len=input_len, gated=gated, r2c=False,
+        keep_rows=kr, keep_cols=kc,
+    )
+    fn = monarch2.build_conv_fn(cfg)
+    consts = list(monarch2.constant_operands(cfg).values())  # numpy; see _build
+    return cfg, fn, consts
+
+
+def sparse_gated_conv_causal(
+    u: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray, k: jnp.ndarray, kr: int, kc: int
+) -> jnp.ndarray:
+    """Gated causal conv with a frequency-sparsified kernel (inference only).
+
+    ``(kr, kc)`` is the kept block of the (N1, N2) Monarch layout grid; the
+    skipped blocks never enter any matmul (Appendix A.4).
+    """
+    n = 2 * u.shape[-1]
+    cfg, fn, consts = _build_sparse(n, u.shape[-1], True, kr, kc)
+    kfr, kfi = kf_mon_sliced(_pad_to(k, n), cfg.factors, kr, kc)
+    return fn(u, v, w, kfr, kfi, *consts)
+
+
+def sparse_long_conv_causal(
+    u: jnp.ndarray, k: jnp.ndarray, kr: int, kc: int
+) -> jnp.ndarray:
+    """Plain causal conv with a frequency-sparsified kernel (inference only)."""
+    n = 2 * u.shape[-1]
+    cfg, fn, consts = _build_sparse(n, u.shape[-1], False, kr, kc)
+    kfr, kfi = kf_mon_sliced(_pad_to(k, n), cfg.factors, kr, kc)
+    return fn(u, kfr, kfi, *consts)

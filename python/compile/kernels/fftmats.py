@@ -1,0 +1,351 @@
+"""Build-time FFT matrix / twiddle / permutation machinery for FlashFFTConv.
+
+Everything in this module runs ONCE, at artifact-build time (and in tests).
+It produces the constant operands that the Pallas kernels consume:
+
+  * DFT / inverse-DFT matrices for each Monarch factor,
+  * twiddle-factor grids (the diagonal ``D`` of the Monarch decomposition,
+    laid out as the 2-D grid Algorithm 1 multiplies elementwise),
+  * the *Monarch order* permutation — the digit-permuted output order the
+    decomposed transform naturally produces (Section 3.1 of the paper; we
+    never undo it, we bake it into the pre-computed ``k_f`` instead),
+  * real-to-complex packing coefficients (Appendix A.1: a length-``N`` real
+    FFT via a length-``N/2`` complex FFT),
+  * frequency-sparsity block patterns (Appendix A.4 / Table 10).
+
+All spectra live in float32 re/im pairs so the Pallas kernels only ever see
+real matrices — mirroring how the paper feeds complex data through real
+tensor-core GEMMs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Factorization helpers
+# ---------------------------------------------------------------------------
+
+
+def is_pow2(n: int) -> bool:
+    """True iff ``n`` is a positive power of two."""
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def monarch_factors(n: int, order: int) -> Tuple[int, ...]:
+    """Split power-of-two ``n`` into ``order`` balanced power-of-two factors.
+
+    Mirrors the paper's choice of near-square factors (so the matrices feed
+    the matrix unit efficiently): the log2 budget is distributed as evenly
+    as possible, larger factors first, e.g. ``monarch_factors(8192, 2) ==
+    (128, 64)`` and ``monarch_factors(4096, 3) == (16, 16, 16)``.
+    """
+    if not is_pow2(n):
+        raise ValueError(f"sequence length must be a power of two, got {n}")
+    if order < 1:
+        raise ValueError(f"order must be >= 1, got {order}")
+    logn = n.bit_length() - 1
+    if order > logn and n > 1:
+        raise ValueError(f"cannot split N={n} into {order} factors > 1")
+    base, extra = divmod(logn, order)
+    logs = [base + (1 if i < extra else 0) for i in range(order)]
+    return tuple(1 << l for l in logs)
+
+
+# ---------------------------------------------------------------------------
+# DFT matrices and twiddles
+# ---------------------------------------------------------------------------
+
+
+def dft_matrix(n: int, inverse: bool = False) -> np.ndarray:
+    """Dense ``n x n`` DFT matrix (complex128 at build time).
+
+    ``inverse=True`` returns the unitary-up-to-1/n inverse (includes the
+    ``1/n`` normalization, so ``dft_matrix(n, True) @ dft_matrix(n) == I``).
+    """
+    k = np.arange(n)
+    sign = 2j if inverse else -2j
+    mat = np.exp(sign * np.pi * np.outer(k, k) / n)
+    if inverse:
+        mat /= n
+    return mat
+
+
+def twiddle_grid(n1: int, n2: int, inverse: bool = False) -> np.ndarray:
+    """Twiddle grid ``T[k1, n2] = exp(-+ 2*pi*i * k1 * n2 / (n1*n2))``.
+
+    This is the diagonal ``D`` of the order-2 Monarch decomposition, laid
+    out as the ``n1 x n2`` grid Algorithm 1 multiplies elementwise between
+    the two matmul stages.
+    """
+    n = n1 * n2
+    k1 = np.arange(n1)[:, None]
+    j2 = np.arange(n2)[None, :]
+    sign = 2j if inverse else -2j
+    return np.exp(sign * np.pi * k1 * j2 / n)
+
+
+# ---------------------------------------------------------------------------
+# Monarch-order reference transform + permutation bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def monarch_fft_ref(x: np.ndarray, factors: Sequence[int]) -> np.ndarray:
+    """Reference Monarch-decomposed FFT (recursive; defines *the* layout).
+
+    Computes ``P @ FFT(x)`` where ``P`` is the digit permutation the
+    decomposition naturally produces.  Every kernel, and the pre-computed
+    ``k_f``, uses exactly this layout; the permutation cancels inside the
+    convolution (conv theorem is permutation-invariant) so it is never
+    materialized at runtime.
+
+    Order-2 identity (validated in tests): for ``x`` reshaped row-major to
+    ``(N1, N2)``, ``B = ((F_N1 @ X) * T) @ F_N2`` satisfies
+    ``B[k1, k2] == FFT(x)[k1 + N1*k2]``.
+    """
+    x = np.asarray(x, dtype=np.complex128)
+    factors = tuple(int(f) for f in factors)
+    n = int(np.prod(factors))
+    if x.shape[-1] != n:
+        raise ValueError(f"input length {x.shape[-1]} != prod(factors) {n}")
+    if len(factors) == 1:
+        return x @ dft_matrix(n).T  # plain DFT, identity permutation
+    n1, rest = factors[0], factors[1:]
+    m = n // n1
+    batch = x.shape[:-1]
+    mat = x.reshape(*batch, n1, m)
+    a = np.einsum("kn,...nm->...km", dft_matrix(n1), mat)
+    a = a * twiddle_grid(n1, m)
+    inner = monarch_fft_ref(a, rest)  # inner transform along last axis, per row
+    return inner.reshape(*batch, n)
+
+
+def monarch_ifft_ref(y: np.ndarray, factors: Sequence[int]) -> np.ndarray:
+    """Inverse of :func:`monarch_fft_ref` (undoes layout and transform)."""
+    y = np.asarray(y, dtype=np.complex128)
+    factors = tuple(int(f) for f in factors)
+    n = int(np.prod(factors))
+    if len(factors) == 1:
+        return y @ dft_matrix(n, inverse=True).T
+    n1, rest = factors[0], factors[1:]
+    m = n // n1
+    batch = y.shape[:-1]
+    mat = y.reshape(*batch, n1, m)
+    a = monarch_ifft_ref(mat, rest)
+    a = a * twiddle_grid(n1, m, inverse=True)
+    x = np.einsum("kn,...nm->...km", dft_matrix(n1, inverse=True), a)
+    return x.reshape(*batch, n)
+
+
+def monarch_order(factors: Sequence[int]) -> np.ndarray:
+    """``order[j]`` = true DFT frequency stored at Monarch-layout slot ``j``.
+
+    Recursive closed form derived from the order-2 identity:
+    ``order[k1*M + j2] = k1 + N1 * inner_order[j2]``.
+    """
+    factors = tuple(int(f) for f in factors)
+    n = int(np.prod(factors))
+    if len(factors) == 1:
+        return np.arange(n, dtype=np.int64)
+    n1, rest = factors[0], factors[1:]
+    m = n // n1
+    inner = monarch_order(rest)
+    k1 = np.arange(n1)[:, None]
+    return (k1 + n1 * inner[None, :]).reshape(n)
+
+
+def neg_freq_perm(factors: Sequence[int]) -> np.ndarray:
+    """Permutation ``r`` with ``layout_freq(r[j]) == (-layout_freq(j)) mod M``.
+
+    Used by the r2c packing: the ``Z[k] <-> conj(Z[M-k])`` pairing of
+    Appendix A.1, expressed directly in Monarch layout.
+    """
+    order = monarch_order(factors)
+    m = order.shape[0]
+    inv = np.empty(m, dtype=np.int64)
+    inv[order] = np.arange(m)
+    return inv[(-order) % m].astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Real-to-complex packing (Appendix A.1)
+# ---------------------------------------------------------------------------
+
+
+def r2c_pointwise_coeffs(kf: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Packed-domain pointwise coefficients ``(A, B)`` for a real conv.
+
+    Given the full length-``N`` spectrum ``kf`` of a *real* kernel, returns
+    length-``M = N/2`` complex coefficient arrays such that the circular
+    convolution ``y = ifft(fft(u) * kf)`` of a real ``u`` equals unpacking
+
+        Z_y[k] = A[k] * Z[k] + B[k] * conj(Z[(M-k) mod M])
+
+    where ``Z = fft_M(u[0::2] + 1j*u[1::2])`` and ``y[0::2], y[1::2] =
+    Re, Im of ifft_M(Z_y)``.  Derivation (from the even/odd split of both
+    the analysis and synthesis sides of Appendix A.1):
+
+        s[k] = (kf[k] + kf[k+M]) / 2,   d[k] = (kf[k] - kf[k+M]) / 2
+        A[k] = s[k] - d[k] * sin(2*pi*k/N)
+        B[k] = 1j * d[k] * cos(2*pi*k/N)
+
+    Validated against the direct spectrum path in tests.
+    """
+    kf = np.asarray(kf, dtype=np.complex128)
+    n = kf.shape[-1]
+    if n % 2 != 0:
+        raise ValueError("r2c packing needs even N")
+    m = n // 2
+    s = (kf[..., :m] + kf[..., m:]) / 2.0
+    d = (kf[..., :m] - kf[..., m:]) / 2.0
+    theta = 2.0 * np.pi * np.arange(m) / n
+    a = s - d * np.sin(theta)
+    b = 1j * d * np.cos(theta)
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# Frequency-sparsity patterns (Appendix A.4 / Table 10)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityPattern:
+    """Block-sparsity pattern for ``k_f`` in Monarch layout (order-2 view).
+
+    Zero out layout rows ``>= keep_rows`` and layout columns ``>= keep_cols``
+    of ``k_f`` reshaped to ``(N1, N2)``.  The kernels then *skip* the
+    corresponding slices of every matmul (forward stage 1 keeps ``keep_rows``
+    rows of ``F1``; stage 2 keeps ``keep_cols`` columns of ``F2``; the
+    inverse stages shrink symmetrically) — the Appendix A.4 mechanism.
+    """
+
+    n1: int
+    n2: int
+    keep_rows: int
+    keep_cols: int
+
+    def __post_init__(self) -> None:
+        if not (1 <= self.keep_rows <= self.n1):
+            raise ValueError(f"keep_rows {self.keep_rows} not in [1, {self.n1}]")
+        if not (1 <= self.keep_cols <= self.n2):
+            raise ValueError(f"keep_cols {self.keep_cols} not in [1, {self.n2}]")
+
+    @property
+    def sparsity_fraction(self) -> float:
+        """Fraction of ``k_f`` entries zeroed (Table 10's ``S``)."""
+        return 1.0 - (self.keep_rows * self.keep_cols) / (self.n1 * self.n2)
+
+    @property
+    def matmul_flop_fraction(self) -> float:
+        """Remaining fraction of Monarch matmul FLOPs after skipping.
+
+        Dense cost per sequence: ``2 * (N*N1 + N*N2)`` complex MACs (two
+        stages each way).  Sparse: stage-1 fwd scales by rows kept, stage-2
+        fwd by cols kept applied to full rows... computed exactly below and
+        used by the Table 9 speedup model.
+        """
+        r, c = self.keep_rows, self.keep_cols
+        n1, n2 = self.n1, self.n2
+        dense = 2 * (n1 * n1 * n2 + n1 * n2 * n2)  # fwd + inv, both stages
+        # fwd stage 1: (r x n1) @ (n1 x n2) ; fwd stage 2: (r x n2) @ (n2 x c)
+        # inv stage 1: (r x c) @ (c x n2)  ; inv stage 2: (n1 x r) @ (r x n2)
+        sparse = (r * n1 * n2) + (r * n2 * c) + (r * c * n2) + (n1 * r * n2)
+        return sparse / dense
+
+    def apply(self, kf_mon: np.ndarray) -> np.ndarray:
+        """Zero the pattern out of a Monarch-layout spectrum ``(..., N)``."""
+        n = self.n1 * self.n2
+        if kf_mon.shape[-1] != n:
+            raise ValueError(f"kf length {kf_mon.shape[-1]} != N1*N2 = {n}")
+        grid = kf_mon.reshape(*kf_mon.shape[:-1], self.n1, self.n2).copy()
+        grid[..., self.keep_rows :, :] = 0
+        grid[..., :, self.keep_cols :] = 0
+        return grid.reshape(*kf_mon.shape[:-1], n)
+
+
+def table10_patterns(n1: int, n2: int) -> "dict[str, SparsityPattern]":
+    """The Table 10 sparsity ladder, rescaled to an (n1, n2) order-2 grid.
+
+    The paper's 4-way ladder zeroes {0, 1/2, 3/4, ...} of successive digit
+    dimensions; in the order-2 view that corresponds to halving rows, then
+    halving columns, then quartering again — reproducing the same sparsity
+    fractions S = {0, .5, .75, ~.79, ~.84, ~.91}.
+    """
+    return {
+        "s0": SparsityPattern(n1, n2, n1, n2),
+        "s50": SparsityPattern(n1, n2, n1 // 2, n2),
+        "s75": SparsityPattern(n1, n2, n1 // 2, n2 // 2),
+        "s84": SparsityPattern(n1, n2, n1 // 4, n2 * 5 // 8),
+        "s91": SparsityPattern(n1, n2, n1 // 4, n2 * 3 // 8),
+        "s94": SparsityPattern(n1, n2, n1 // 4, n2 // 4),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Kernel operand bundles (what aot.py feeds the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def split_reim(z: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Complex -> (re, im) float32 pair."""
+    z = np.asarray(z)
+    return z.real.astype(np.float32), z.imag.astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Monarch2Operands:
+    """All constant operands of the order-2 fused kernel, as float32 re/im."""
+
+    n1: int
+    n2: int
+    f1: Tuple[np.ndarray, np.ndarray]
+    f2: Tuple[np.ndarray, np.ndarray]
+    f1_inv: Tuple[np.ndarray, np.ndarray]
+    f2_inv: Tuple[np.ndarray, np.ndarray]
+    tw: Tuple[np.ndarray, np.ndarray]
+    tw_inv: Tuple[np.ndarray, np.ndarray]
+
+
+def monarch2_operands(n: int) -> Monarch2Operands:
+    """Build the constant operand bundle for a length-``n`` order-2 kernel."""
+    n1, n2 = monarch_factors(n, 2)
+    return Monarch2Operands(
+        n1=n1,
+        n2=n2,
+        f1=split_reim(dft_matrix(n1)),
+        f2=split_reim(dft_matrix(n2)),
+        f1_inv=split_reim(dft_matrix(n1, inverse=True)),
+        f2_inv=split_reim(dft_matrix(n2, inverse=True)),
+        tw=split_reim(twiddle_grid(n1, n2)),
+        tw_inv=split_reim(twiddle_grid(n1, n2, inverse=True)),
+    )
+
+
+def kf_monarch(k: np.ndarray, factors: Sequence[int]) -> np.ndarray:
+    """Pre-compute a real kernel's spectrum in Monarch layout.
+
+    ``k`` is the (``H x N`` or ``N``) time-domain filter; returns complex128
+    ``P @ FFT(k)`` matching the layout the fused kernels produce internally.
+    """
+    return monarch_fft_ref(np.asarray(k, dtype=np.complex128), factors)
+
+
+def kf_r2c_monarch(
+    k: np.ndarray, factors_half: Sequence[int]
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Packed-domain coefficients ``(A_mon, B_mon, negperm)`` for real convs.
+
+    ``factors_half`` factorizes ``M = N/2``; coefficients are returned in the
+    Monarch layout of the half-length transform, with the index pairing
+    permutation ``negperm`` baked for the same layout.
+    """
+    k = np.asarray(k, dtype=np.complex128)
+    kf = np.fft.fft(k, axis=-1)
+    a, b = r2c_pointwise_coeffs(kf)
+    order = monarch_order(factors_half)
+    return a[..., order], b[..., order], neg_freq_perm(factors_half)

@@ -1,0 +1,501 @@
+"""Order-2 Monarch FFT convolution as fused Pallas kernels (Algorithm 1).
+
+One Pallas grid cell = one (batch, head) sequence, mirroring the paper's
+"broadcast the matrix operation across the sequence" layout (Figure 3): the
+whole convolution — forward Monarch FFT (two matmuls + twiddle), pointwise
+multiply with the pre-computed kernel spectrum, inverse Monarch FFT (two
+matmuls + twiddle), plus optional gating — runs inside a single kernel with
+every intermediate resident in VMEM.  The HBM<->VMEM schedule is expressed
+with ``BlockSpec``s; the permutation between stages is a plain on-chip
+reshape/transpose exactly as in Figure 3 (bottom).
+
+Hardware adaptation (DESIGN.md §2): the paper's 16x16x16 WMMA fragments
+become MXU-shaped ``jnp.dot``s over the ``N1 x N2`` factor matrices; complex
+arithmetic is carried as separate re/im planes through *real* matmuls (the
+same trick the paper uses to feed tensor cores), with an optional 3-mult
+Karatsuba form.  Kernels run under ``interpret=True`` — CPU PJRT cannot
+execute Mosaic custom-calls — so correctness is checked here and TPU
+performance is modeled analytically (EXPERIMENTS.md §Perf).
+
+Variants (each maps to a paper experiment):
+
+  * ``conv_basic``          — complex path, circular; the "no domain-specific
+                              optimizations" ablation row of Table 3.
+  * ``conv_r2c``            — real-to-complex packed path (Appendix A.1):
+                              length-N real conv via a length-N/2 complex
+                              Monarch FFT.  The default FlashFFTConv.
+  * ``conv_r2c_causal``     — implicit zero-padding: input length L, FFT
+                              size 2L, half the outermost matmuls skipped.
+  * ``conv_r2c_gated[_causal]`` — fused ``y = v * ((u*w) conv k)`` (Table 4).
+  * ``conv_sparse``         — frequency-sparse block skipping on the complex
+                              path (Appendix A.4, Tables 9/10).
+
+All kernel operands (DFT matrices, twiddles, packed-spectrum coefficients,
+the neg-frequency permutation) are *runtime inputs*, not baked constants —
+they are exported once by ``aot.py`` as binary fixtures and fed by the Rust
+runtime, keeping the HLO text small and letting the coordinator swap kernel
+spectra (partial / sparse convolutions) without recompiling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import fftmats
+
+Pair = Tuple[jnp.ndarray, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Complex arithmetic on (re, im) pairs — real matmuls only (MXU-friendly)
+# ---------------------------------------------------------------------------
+
+
+def cmatmul(a: Pair, b: Pair, karatsuba: bool = True) -> Pair:
+    """Complex matrix multiply via real ``jnp.dot``s.
+
+    ``karatsuba=True`` uses the 3-multiplication form
+    ``t1 = ar@br; t2 = ai@bi; t3 = (ar+ai)@(br+bi)`` (L1 perf optimization
+    — cuts matmul FLOPs 25% just like the paper's complex-GEMM trick);
+    ``False`` uses the plain 4-mult form (kept for the ablation bench).
+    """
+    ar, ai = a
+    br, bi = b
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    if karatsuba:
+        t1 = dot(ar, br)
+        t2 = dot(ai, bi)
+        t3 = dot(ar + ai, br + bi)
+        return t1 - t2, t3 - t1 - t2
+    return dot(ar, br) - dot(ai, bi), dot(ar, bi) + dot(ai, br)
+
+
+def cmatmul_real_lhs(ar: jnp.ndarray, b: Pair) -> Pair:
+    """``(ar + 0i) @ b`` — skips half the work when the lhs is real.
+
+    Used for the first forward stage of the complex path, where the input
+    sequence is real (imag plane identically zero).
+    """
+    br, bi = b
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    return dot(ar, br), dot(ar, bi)
+
+
+def cmul(a: Pair, b: Pair) -> Pair:
+    """Elementwise complex multiply on (re, im) pairs."""
+    ar, ai = a
+    br, bi = b
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+# ---------------------------------------------------------------------------
+# Kernel configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Monarch2Config:
+    """Static configuration of one compiled order-2 kernel.
+
+    ``seq_len``   — FFT size N (power of two).
+    ``input_len`` — runtime input length; ``seq_len`` for circular convs,
+                    ``seq_len // 2`` for causal (implicit-padding) convs.
+    ``gated``     — fuse ``y = v * ((u*w) conv k)``.
+    ``r2c``       — use the packed real-FFT path (Appendix A.1).
+    ``keep_rows/keep_cols`` — frequency-sparsity block (complex path only).
+    ``karatsuba`` — 3-mult complex matmuls.
+    """
+
+    seq_len: int
+    input_len: int
+    gated: bool = False
+    r2c: bool = True
+    keep_rows: int | None = None
+    keep_cols: int | None = None
+    karatsuba: bool = True
+    b_tile: int = 0  # 0 = whole batch per grid cell (paper's B_tile knob)
+    h_tile: int = 0  # 0 = all heads per grid cell (paper's H_tile knob)
+
+    def __post_init__(self) -> None:
+        if not fftmats.is_pow2(self.seq_len):
+            raise ValueError(f"seq_len must be a power of 2, got {self.seq_len}")
+        if self.input_len not in (self.seq_len, self.seq_len // 2):
+            raise ValueError("input_len must be N (circular) or N/2 (causal)")
+        if (self.keep_rows is not None) and self.r2c:
+            raise ValueError("frequency-sparse block skipping uses the complex path")
+
+    @property
+    def causal(self) -> bool:
+        return self.input_len == self.seq_len // 2
+
+    @property
+    def fft_len(self) -> int:
+        """Length of the complex transform actually computed."""
+        return self.seq_len // 2 if self.r2c else self.seq_len
+
+    @property
+    def factors(self) -> Tuple[int, int]:
+        return fftmats.monarch_factors(self.fft_len, 2)
+
+
+# ---------------------------------------------------------------------------
+# Operand construction (build-time; exported by aot.py as fixtures)
+# ---------------------------------------------------------------------------
+
+
+def constant_operands(cfg: Monarch2Config) -> "dict[str, np.ndarray]":
+    """The kernel's constant operands, in call order, as float32/int32.
+
+    For causal convs the first/last-stage DFT matrices are pre-sliced
+    (implicit zero-padding: only the non-zero half of the rows of the
+    reshaped input participate, and only the first half of the output is
+    written back — Section 3.1 "Domain-Specific Optimizations").
+    """
+    n1, n2 = cfg.factors
+    half = n1 // 2 if cfg.causal else n1
+    f1 = fftmats.dft_matrix(n1)
+    f1i = fftmats.dft_matrix(n1, inverse=True)
+    ops: "dict[str, np.ndarray]" = {}
+
+    def put(name: str, z: np.ndarray) -> None:
+        ops[name + "_re"], ops[name + "_im"] = fftmats.split_reim(z)
+
+    put("f1", f1[:, :half])       # (n1, half): stage-1 forward, rows sliced
+    put("f2", fftmats.dft_matrix(n2))
+    put("f1inv", f1i[:half, :])   # (half, n1): last-stage inverse, sliced
+    put("f2inv", fftmats.dft_matrix(n2, inverse=True))
+    put("tw", fftmats.twiddle_grid(n1, n2))
+    put("tw_inv", fftmats.twiddle_grid(n1, n2, inverse=True))
+    if cfg.r2c:
+        ops["negperm"] = fftmats.neg_freq_perm((n1, n2))
+    return ops
+
+
+def kernel_operands(cfg: Monarch2Config, k: np.ndarray) -> "dict[str, np.ndarray]":
+    """Per-filter operands derived from the time-domain kernel ``k (H, L)``.
+
+    r2c path: the packed-domain pointwise coefficients ``A, B`` in Monarch
+    layout.  Complex path: the Monarch-layout spectrum itself.
+    """
+    k = np.asarray(k, dtype=np.float64)
+    if k.shape[-1] < cfg.seq_len:
+        pad = cfg.seq_len - k.shape[-1]
+        k = np.pad(k, [(0, 0)] * (k.ndim - 1) + [(0, pad)])
+    elif k.shape[-1] != cfg.seq_len:
+        raise ValueError(f"kernel length {k.shape[-1]} > fft size {cfg.seq_len}")
+    ops: "dict[str, np.ndarray]" = {}
+    if cfg.r2c:
+        a, b, _ = fftmats.kf_r2c_monarch(k, cfg.factors)
+        ops["ka_re"], ops["ka_im"] = fftmats.split_reim(a)
+        ops["kb_re"], ops["kb_im"] = fftmats.split_reim(b)
+    else:
+        kf = fftmats.kf_monarch(k, cfg.factors)
+        if cfg.keep_rows is not None:
+            pat = fftmats.SparsityPattern(*cfg.factors, cfg.keep_rows, cfg.keep_cols)
+            kf = pat.apply(kf)
+            grid = kf.reshape(*kf.shape[:-1], *cfg.factors)
+            kf = grid[..., : cfg.keep_rows, : cfg.keep_cols].reshape(*kf.shape[:-1], -1)
+        ops["kf_re"], ops["kf_im"] = fftmats.split_reim(kf)
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _bcmm_axis1(f: Pair, x: Pair, karatsuba: bool) -> Pair:
+    """Batched ``F @_axis1 X`` for ``X : (S, rows, cols)`` as ONE large GEMM.
+
+    The S tile sequences are folded into the GEMM's N dimension
+    (``(rows_out, rows_in) @ (rows_in, S*cols)``), so the matrix unit sees
+    one large multiply instead of S small ones — this is what the paper's
+    B_tile/H_tile tiling buys (§3.1 "we also tile the computation across
+    the B and H dimensions").
+    """
+    fr, fi = f
+    xr, xi = x
+    # dot_general with a free batch dim (einsum) beats an explicit
+    # transpose+reshape chain by ~20% on this backend (§Perf log).
+    ein = functools.partial(jnp.einsum, "kh,shn->skn",
+                            preferred_element_type=jnp.float32)
+    if karatsuba:
+        t1 = ein(fr, xr)
+        t2 = ein(fi, xi)
+        t3 = ein(fr + fi, xr + xi)
+        return t1 - t2, t3 - t1 - t2
+    return ein(fr, xr) - ein(fi, xi), ein(fr, xi) + ein(fi, xr)
+
+
+def _bcmm_axis2(x: Pair, f: Pair, karatsuba: bool) -> Pair:
+    """Batched ``X @_axis2 F``: fold (S, rows) into the GEMM's M dimension."""
+    xr, xi = x
+    s_, rows, cols = xr.shape
+    rr, ri = cmatmul((xr.reshape(s_ * rows, cols), xi.reshape(s_ * rows, cols)), f, karatsuba)
+    cols_out = rr.shape[-1]
+    return rr.reshape(s_, rows, cols_out), ri.reshape(s_, rows, cols_out)
+
+
+def _bmul(x: Pair, w: Pair) -> Pair:
+    """Elementwise complex multiply with a broadcast (rows, cols) grid."""
+    xr, xi = x
+    wr, wi = w
+    return xr * wr[None] - xi * wi[None], xr * wi[None] + xi * wr[None]
+
+
+def _r2c_kernel_body(cfg: Monarch2Config, refs: List, out_ref) -> None:
+    """Fused r2c conv for one (b_tile, h_tile) grid cell; see module docstring."""
+    n1, n2 = cfg.factors
+    m = n1 * n2
+    half = n1 // 2 if cfg.causal else n1
+    it = iter(refs)
+
+    def nxt2() -> Pair:
+        r = next(it)[...]
+        i = next(it)[...]
+        return r, i
+
+    if cfg.gated:
+        u = next(it)[...]
+        v = next(it)[...]
+        w = next(it)[...]
+        u = u * w  # pre-gate, fused (Table 4's I/O saving)
+    else:
+        u = next(it)[...]
+        v = None
+    bt, ht, l = u.shape
+    s_ = bt * ht
+    ka = nxt2()  # (ht, m) each plane
+    kb = nxt2()
+    f1 = nxt2()
+    f2 = nxt2()
+    f1inv = nxt2()
+    f2inv = nxt2()
+    tw = nxt2()
+    tw_inv = nxt2()
+    negp = next(it)[...]
+    kt = cfg.karatsuba
+
+    # Pack: z[n] = u[2n] + i*u[2n+1]; causal inputs fill only the top half
+    # of each (n1, n2) tile — the rest is implicit zero padding.
+    pairs = u.reshape(s_, half * n2, 2)
+    x = (pairs[..., 0].reshape(s_, half, n2), pairs[..., 1].reshape(s_, half, n2))
+
+    z = _bcmm_axis1(f1, x, kt)
+    z = _bmul(z, tw)
+    z = _bcmm_axis2(z, f2, kt)
+    zr, zi = z[0].reshape(s_, m), z[1].reshape(s_, m)
+
+    # Packed-domain pointwise conv: Zy = A*Z + B*conj(Z[negperm]); the
+    # per-head coefficients broadcast over the b_tile rows.
+    cr = jnp.take(zr, negp, axis=-1)
+    ci = jnp.take(zi, negp, axis=-1)
+
+    def head_bcast(t: jnp.ndarray) -> jnp.ndarray:
+        return jnp.broadcast_to(t[None], (bt, ht, m)).reshape(s_, m)
+
+    ar, ai = head_bcast(ka[0]), head_bcast(ka[1])
+    br, bi = head_bcast(kb[0]), head_bcast(kb[1])
+    yr = ar * zr - ai * zi + br * cr + bi * ci
+    yi = ar * zi + ai * zr + bi * cr - br * ci
+
+    y = (yr.reshape(s_, n1, n2), yi.reshape(s_, n1, n2))
+    y = _bcmm_axis2(y, f2inv, kt)
+    y = _bmul(y, tw_inv)
+    y = _bcmm_axis1(f1inv, y, kt)
+    # Unpack: y[2n] = Re, y[2n+1] = Im; causal writes only the first L.
+    out = jnp.stack([y[0], y[1]], axis=-1).reshape(bt, ht, l)
+    if v is not None:
+        out = out * v  # post-gate, fused
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def _complex_kernel_body(cfg: Monarch2Config, refs: List, out_ref) -> None:
+    """Complex-path conv (ablation + frequency-sparse variant).
+
+    Batched over the (b_tile, h_tile) cell like the r2c body; supports
+    causal (implicit-padding) and gated forms so frequency-sparse
+    convolutions can drop into model evaluation (Table 9's workload).
+    """
+    n1, n2 = cfg.factors
+    half = n1 // 2 if cfg.causal else n1
+    kr = cfg.keep_rows if cfg.keep_rows is not None else n1
+    kc = cfg.keep_cols if cfg.keep_cols is not None else n2
+    it = iter(refs)
+
+    def nxt2() -> Pair:
+        r = next(it)[...]
+        i = next(it)[...]
+        return r, i
+
+    if cfg.gated:
+        u = next(it)[...]
+        v = next(it)[...]
+        w = next(it)[...]
+        u = u * w
+    else:
+        u = next(it)[...]
+        v = None
+    bt, ht, l = u.shape
+    s_ = bt * ht
+    kf = nxt2()  # (ht, kr*kc) planes
+    f1 = nxt2()
+    f2 = nxt2()
+    f1inv = nxt2()
+    f2inv = nxt2()
+    tw = nxt2()
+    tw_inv = nxt2()
+
+    x = u.reshape(s_, half, n2)
+    # Forward, with sparse block skipping: rows >= kr / cols >= kc of the
+    # spectrum are zeroed by the sparsity pattern, so we never compute them
+    # (Appendix A.4): stage 1 keeps kr rows of F1, stage 2 keeps kc cols.
+    f1r, f1i = f1
+    # Input is real (imag plane identically zero): stage 1 needs only two
+    # real batched matmuls instead of a full complex one.
+    ein = functools.partial(jnp.einsum, "kh,shn->skn",
+                            preferred_element_type=jnp.float32)
+    a = (ein(f1r[:kr, :], x), ein(f1i[:kr, :], x))
+    twr, twi = tw
+    a = _bmul(a, (twr[:kr, :], twi[:kr, :]))
+    f2r, f2i = f2
+    z = _bcmm_axis2(a, (f2r[:, :kc], f2i[:, :kc]), cfg.karatsuba)
+
+    # Pointwise with the (pre-sliced) Monarch-layout spectrum, per head.
+    def head_bcast(t: jnp.ndarray) -> jnp.ndarray:
+        return jnp.broadcast_to(t.reshape(1, ht, kr, kc), (bt, ht, kr, kc)).reshape(s_, kr, kc)
+
+    y = (z[0] * head_bcast(kf[0]) - z[1] * head_bcast(kf[1]),
+         z[0] * head_bcast(kf[1]) + z[1] * head_bcast(kf[0]))
+
+    # Inverse with the matching slices.
+    f2ir, f2ii = f2inv
+    c = _bcmm_axis2(y, (f2ir[:kc, :], f2ii[:kc, :]), cfg.karatsuba)
+    twir, twii = tw_inv
+    c = _bmul(c, (twir[:kr, :], twii[:kr, :]))
+    f1ir, f1ii = f1inv
+    xr, _ = _bcmm_axis1((f1ir[:, :kr], f1ii[:, :kr]), c, cfg.karatsuba)
+    out = xr.reshape(bt, ht, cfg.input_len)
+    if v is not None:
+        out = out * v
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+
+def _const_specs(cfg: Monarch2Config) -> List[pl.BlockSpec]:
+    """BlockSpecs for the constant operands (whole-array, grid-invariant)."""
+    shapes = [a.shape for a in constant_operands(cfg).values()]
+    return [pl.BlockSpec(s, lambda b, h, _ndim=len(s): (0,) * _ndim) for s in shapes]
+
+
+def build_conv_fn(cfg: Monarch2Config):
+    """Build the jittable fused conv ``fn(u, [v, w,] *filter_ops, *const_ops)``.
+
+    Operand order matches ``kernel_operands`` then ``constant_operands``
+    (dict order) — ``aot.py`` records this order in the manifest so the Rust
+    runtime can assemble calls without any Python.
+
+    The grid tiles (B, H) by ``cfg.b_tile``/``cfg.h_tile`` (0 = the whole
+    dimension in one cell). Each cell convolves its ``b_tile*h_tile``
+    sequences through *batched* matmuls — larger GEMMs for the matrix unit
+    and, under interpret mode, far fewer grid iterations (§Perf).
+    """
+    n1, n2 = cfg.factors
+    l = cfg.input_len
+    n_seq_inputs = 3 if cfg.gated else 1
+    if cfg.r2c:
+        filt_shapes = [cfg.fft_len] * 4  # ka_re, ka_im, kb_re, kb_im
+        body = _r2c_kernel_body
+    else:
+        kr = cfg.keep_rows if cfg.keep_rows is not None else n1
+        kc = cfg.keep_cols if cfg.keep_cols is not None else n2
+        filt_shapes = [kr * kc] * 2  # kf_re, kf_im (pre-sliced block)
+        body = _complex_kernel_body
+
+    def kernel(*refs) -> None:
+        body(cfg, list(refs[:-1]), refs[-1])
+
+    def conv(u: jnp.ndarray, *ops: jnp.ndarray) -> jnp.ndarray:
+        b, h, lin = u.shape
+        if lin != l:
+            raise ValueError(f"input length {lin} != configured {l}")
+        bt = cfg.b_tile or b
+        ht = cfg.h_tile or h
+        if b % bt or h % ht:
+            raise ValueError(f"tile ({bt},{ht}) must divide batch ({b},{h})")
+        seq_spec = pl.BlockSpec((bt, ht, l), lambda b_, h_: (b_, h_, 0))
+        filt_specs = [
+            pl.BlockSpec((ht, fs), lambda b_, h_: (h_, 0)) for fs in filt_shapes
+        ]
+        in_specs = [seq_spec] * n_seq_inputs + filt_specs + _const_specs(cfg)
+        return pl.pallas_call(
+            kernel,
+            grid=(b // bt, h // ht),
+            in_specs=in_specs,
+            out_specs=seq_spec,
+            out_shape=jax.ShapeDtypeStruct((b, h, l), u.dtype),
+            interpret=True,
+        )(u, *ops)
+
+    return conv
+
+
+# ---------------------------------------------------------------------------
+# Convenience wrappers used by tests and aot.py
+# ---------------------------------------------------------------------------
+
+
+def _ops_list(cfg: Monarch2Config, k: np.ndarray) -> List[np.ndarray]:
+    return list(kernel_operands(cfg, k).values()) + list(constant_operands(cfg).values())
+
+
+def conv_r2c(u, k, *, causal: bool = False, karatsuba: bool = True):
+    """Run the packed-real fused conv end to end (test/demo entry point)."""
+    n = u.shape[-1] * (2 if causal else 1)
+    cfg = Monarch2Config(seq_len=n, input_len=u.shape[-1], karatsuba=karatsuba)
+    fn = build_conv_fn(cfg)
+    return fn(jnp.asarray(u), *[jnp.asarray(o) for o in _ops_list(cfg, k)])
+
+
+def conv_r2c_gated(u, v, w, k, *, causal: bool = False):
+    """Run the fused gated conv ``v * ((u*w) conv k)`` end to end."""
+    n = u.shape[-1] * (2 if causal else 1)
+    cfg = Monarch2Config(seq_len=n, input_len=u.shape[-1], gated=True)
+    fn = build_conv_fn(cfg)
+    return fn(jnp.asarray(u), jnp.asarray(v), jnp.asarray(w),
+              *[jnp.asarray(o) for o in _ops_list(cfg, k)])
+
+
+def conv_basic(u, k, *, karatsuba: bool = True):
+    """Complex-path circular conv (the no-domain-opts ablation)."""
+    cfg = Monarch2Config(seq_len=u.shape[-1], input_len=u.shape[-1], r2c=False,
+                         karatsuba=karatsuba)
+    fn = build_conv_fn(cfg)
+    return fn(jnp.asarray(u), *[jnp.asarray(o) for o in _ops_list(cfg, k)])
+
+
+def conv_sparse(u, k, keep_rows: int, keep_cols: int):
+    """Frequency-sparse conv: returns (y, sparsified full-order spectrum)."""
+    n = u.shape[-1]
+    cfg = Monarch2Config(seq_len=n, input_len=n, r2c=False,
+                         keep_rows=keep_rows, keep_cols=keep_cols)
+    fn = build_conv_fn(cfg)
+    y = fn(jnp.asarray(u), *[jnp.asarray(o) for o in _ops_list(cfg, k)])
+    # Reference spectrum: sparsify in Monarch layout, map back to DFT order.
+    pat = fftmats.SparsityPattern(*cfg.factors, keep_rows, keep_cols)
+    kf_mon = pat.apply(fftmats.kf_monarch(np.asarray(k, dtype=np.float64), cfg.factors))
+    order = fftmats.monarch_order(cfg.factors)
+    kf_full = np.zeros_like(kf_mon)
+    kf_full[..., order] = kf_mon
+    return y, kf_full

@@ -1,0 +1,279 @@
+"""Order-3 Monarch FFT convolution as a fused Pallas kernel (Algorithm 3).
+
+For longer sequences the order-2 factor matrices outgrow fast memory; the
+paper's order-3 decomposition adds one matmul on either side of the FFT and
+iFFT, shrinking each factor to ``N^(1/3)``.  Structure (forward):
+
+    X : (m1, m2*m3)                    # one packed sequence, reshaped
+    A = (F1 @ X) * T_outer             # outer stage + twiddle
+    A : (m1, m2, m3)                   # inner order-2 runs per outer row,
+    A = (F2 @_axis1 A) * T2            #   batched as plain 2-D matmuls via
+    Z = A @_axis2 F3                   #   transpose/reshape (MXU-friendly)
+
+then the packed-domain pointwise multiply and the mirrored inverse chain.
+The inner per-row loop of Algorithm 3 is expressed as batched matmuls over
+the ``m1`` axis — the same arithmetic, but phrased so the systolic array
+sees large 2-D GEMMs instead of ``m1`` small ones (DESIGN.md §2).
+
+Causal (implicit-padding) inputs slice the outer-stage matrices exactly as
+in the order-2 kernel.  The r2c packing, coefficient layout, and operand
+conventions are shared with :mod:`monarch2` via :mod:`fftmats`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import fftmats
+from .monarch2 import Pair, cmatmul, cmul
+
+
+@dataclasses.dataclass(frozen=True)
+class Monarch3Config:
+    """Static configuration of one compiled order-3 kernel.
+
+    Same contract as :class:`monarch2.Monarch2Config` but with three Monarch
+    factors; only the r2c path is built at order 3 (the complex path exists
+    at order 2 for ablations; the paper likewise only ships the optimized
+    path at long lengths).
+    """
+
+    seq_len: int
+    input_len: int
+    gated: bool = False
+    karatsuba: bool = True
+    b_tile: int = 0  # 0 = whole batch per grid cell (paper's B_tile knob)
+    h_tile: int = 0  # 0 = all heads per grid cell (paper's H_tile knob)
+
+    def __post_init__(self) -> None:
+        if not fftmats.is_pow2(self.seq_len):
+            raise ValueError(f"seq_len must be a power of 2, got {self.seq_len}")
+        if self.input_len not in (self.seq_len, self.seq_len // 2):
+            raise ValueError("input_len must be N (circular) or N/2 (causal)")
+
+    @property
+    def causal(self) -> bool:
+        return self.input_len == self.seq_len // 2
+
+    @property
+    def fft_len(self) -> int:
+        return self.seq_len // 2  # r2c path only
+
+    @property
+    def factors(self) -> Tuple[int, int, int]:
+        return fftmats.monarch_factors(self.fft_len, 3)
+
+
+def constant_operands(cfg: Monarch3Config) -> "dict[str, np.ndarray]":
+    """Constant operands: three DFT factor matrices, two twiddle levels."""
+    m1, m2, m3 = cfg.factors
+    half = m1 // 2 if cfg.causal else m1
+    f1 = fftmats.dft_matrix(m1)
+    f1i = fftmats.dft_matrix(m1, inverse=True)
+    ops: "dict[str, np.ndarray]" = {}
+
+    def put(name: str, z: np.ndarray) -> None:
+        ops[name + "_re"], ops[name + "_im"] = fftmats.split_reim(z)
+
+    put("f1", f1[:, :half])
+    put("f2", fftmats.dft_matrix(m2))
+    put("f3", fftmats.dft_matrix(m3))
+    put("f1inv", f1i[:half, :])
+    put("f2inv", fftmats.dft_matrix(m2, inverse=True))
+    put("f3inv", fftmats.dft_matrix(m3, inverse=True))
+    put("tw1", fftmats.twiddle_grid(m1, m2 * m3))
+    put("tw1_inv", fftmats.twiddle_grid(m1, m2 * m3, inverse=True))
+    put("tw2", fftmats.twiddle_grid(m2, m3))
+    put("tw2_inv", fftmats.twiddle_grid(m2, m3, inverse=True))
+    ops["negperm"] = fftmats.neg_freq_perm(cfg.factors)
+    return ops
+
+
+def kernel_operands(cfg: Monarch3Config, k: np.ndarray) -> "dict[str, np.ndarray]":
+    """Packed pointwise coefficients in order-3 Monarch layout."""
+    k = np.asarray(k, dtype=np.float64)
+    if k.shape[-1] < cfg.seq_len:
+        pad = cfg.seq_len - k.shape[-1]
+        k = np.pad(k, [(0, 0)] * (k.ndim - 1) + [(0, pad)])
+    a, b, _ = fftmats.kf_r2c_monarch(k, cfg.factors)
+    ops: "dict[str, np.ndarray]" = {}
+    ops["ka_re"], ops["ka_im"] = fftmats.split_reim(a)
+    ops["kb_re"], ops["kb_im"] = fftmats.split_reim(b)
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Batched complex matmuls over the tile (single large GEMMs; see monarch2)
+# ---------------------------------------------------------------------------
+
+
+def _bcmm_mid(f: Pair, x: Pair, karatsuba: bool) -> Pair:
+    """``F @_axis2 X`` for ``X : (S, m1, m2, m3)``, ``F : (k, m2)``."""
+    fr, fi = f
+    xr, xi = x
+    ein = functools.partial(jnp.einsum, "km,samn->sakn",
+                            preferred_element_type=jnp.float32)
+    if karatsuba:
+        t1 = ein(fr, xr)
+        t2 = ein(fi, xi)
+        t3 = ein(fr + fi, xr + xi)
+        return t1 - t2, t3 - t1 - t2
+    return ein(fr, xr) - ein(fi, xi), ein(fr, xi) + ein(fi, xr)
+
+
+def _bcmm_last(x: Pair, f: Pair, karatsuba: bool) -> Pair:
+    """``X @_axis3 F`` for ``X : (S, m1, m2, m3)``, ``F : (m3, k)``."""
+    xr, xi = x
+    s_, m1, m2, m3 = xr.shape
+    rr, ri = cmatmul(
+        (xr.reshape(s_ * m1 * m2, m3), xi.reshape(s_ * m1 * m2, m3)), f, karatsuba
+    )
+    k = rr.shape[-1]
+    return rr.reshape(s_, m1, m2, k), ri.reshape(s_, m1, m2, k)
+
+
+def _bcmm_outer(f: Pair, x: Pair, karatsuba: bool) -> Pair:
+    """``F @_axis1 X`` for ``X : (S, rows, cols)`` (shared with monarch2)."""
+    from .monarch2 import _bcmm_axis1
+
+    return _bcmm_axis1(f, x, karatsuba)
+
+
+def _kernel_body(cfg: Monarch3Config, refs: List, out_ref) -> None:
+    m1, m2, m3 = cfg.factors
+    m = m1 * m2 * m3
+    half = m1 // 2 if cfg.causal else m1
+    it = iter(refs)
+
+    def nxt2() -> Pair:
+        r = next(it)[...]
+        i = next(it)[...]
+        return r, i
+
+    if cfg.gated:
+        u = next(it)[...]
+        v = next(it)[...]
+        w = next(it)[...]
+        u = u * w
+    else:
+        u = next(it)[...]
+        v = None
+    bt, ht, l = u.shape
+    s_ = bt * ht
+    ka = nxt2()
+    kb = nxt2()
+    f1 = nxt2()
+    f2 = nxt2()
+    f3 = nxt2()
+    f1inv = nxt2()
+    f2inv = nxt2()
+    f3inv = nxt2()
+    tw1 = nxt2()
+    tw1_inv = nxt2()
+    tw2 = nxt2()
+    tw2_inv = nxt2()
+    negp = next(it)[...]
+    kt = cfg.karatsuba
+
+    # Pack re/im planes; causal fills only the top half of the outer rows.
+    pairs = u.reshape(s_, half * m2 * m3, 2)
+    x = (pairs[..., 0].reshape(s_, half, m2 * m3), pairs[..., 1].reshape(s_, half, m2 * m3))
+
+    # Forward: outer stage then batched inner order-2.
+    a = _bcmm_outer(f1, x, kt)
+    a = (a[0] * tw1[0][None] - a[1] * tw1[1][None],
+         a[0] * tw1[1][None] + a[1] * tw1[0][None])
+    a4 = (a[0].reshape(s_, m1, m2, m3), a[1].reshape(s_, m1, m2, m3))
+    a4 = _bcmm_mid(f2, a4, kt)
+    a4 = (a4[0] * tw2[0][None, None] - a4[1] * tw2[1][None, None],
+          a4[0] * tw2[1][None, None] + a4[1] * tw2[0][None, None])
+    z = _bcmm_last(a4, f3, kt)
+    zr, zi = z[0].reshape(s_, m), z[1].reshape(s_, m)
+
+    # Packed-domain pointwise conv (shared convention with monarch2).
+    cr = jnp.take(zr, negp, axis=-1)
+    ci = jnp.take(zi, negp, axis=-1)
+
+    def head_bcast(t: jnp.ndarray) -> jnp.ndarray:
+        return jnp.broadcast_to(t[None], (bt, ht, m)).reshape(s_, m)
+
+    ar, ai = head_bcast(ka[0]), head_bcast(ka[1])
+    br, bi = head_bcast(kb[0]), head_bcast(kb[1])
+    yr = ar * zr - ai * zi + br * cr + bi * ci
+    yi = ar * zi + ai * zr + bi * cr - br * ci
+
+    # Inverse: batched inner inverse, then outer stage.
+    y4 = (yr.reshape(s_, m1, m2, m3), yi.reshape(s_, m1, m2, m3))
+    y4 = _bcmm_last(y4, f3inv, kt)
+    y4 = (y4[0] * tw2_inv[0][None, None] - y4[1] * tw2_inv[1][None, None],
+          y4[0] * tw2_inv[1][None, None] + y4[1] * tw2_inv[0][None, None])
+    y4 = _bcmm_mid(f2inv, y4, kt)
+    c = (y4[0].reshape(s_, m1, m2 * m3), y4[1].reshape(s_, m1, m2 * m3))
+    c = (c[0] * tw1_inv[0][None] - c[1] * tw1_inv[1][None],
+         c[0] * tw1_inv[1][None] + c[1] * tw1_inv[0][None])
+    out_c = _bcmm_outer(f1inv, c, kt)
+
+    out = jnp.stack([out_c[0], out_c[1]], axis=-1).reshape(bt, ht, l)
+    if v is not None:
+        out = out * v
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def build_conv_fn(cfg: Monarch3Config):
+    """Build the jittable fused order-3 conv (same contract as monarch2)."""
+    l = cfg.input_len
+    n_seq_inputs = 3 if cfg.gated else 1
+    filt_shapes = [cfg.fft_len] * 4
+
+    def kernel(*refs) -> None:
+        _kernel_body(cfg, list(refs[:-1]), refs[-1])
+
+    const_shapes = [a.shape for a in constant_operands(cfg).values()]
+
+    def conv(u: jnp.ndarray, *ops: jnp.ndarray) -> jnp.ndarray:
+        b, h, lin = u.shape
+        if lin != l:
+            raise ValueError(f"input length {lin} != configured {l}")
+        bt = cfg.b_tile or b
+        ht = cfg.h_tile or h
+        if b % bt or h % ht:
+            raise ValueError(f"tile ({bt},{ht}) must divide batch ({b},{h})")
+        seq_spec = pl.BlockSpec((bt, ht, l), lambda b_, h_: (b_, h_, 0))
+        in_specs = [seq_spec] * n_seq_inputs
+        in_specs += [pl.BlockSpec((ht, fs), lambda b_, h_: (h_, 0)) for fs in filt_shapes]
+        in_specs += [
+            pl.BlockSpec(sh, lambda b_, h_, _nd=len(sh): (0,) * _nd) for sh in const_shapes
+        ]
+        return pl.pallas_call(
+            kernel,
+            grid=(b // bt, h // ht),
+            in_specs=in_specs,
+            out_specs=seq_spec,
+            out_shape=jax.ShapeDtypeStruct((b, h, l), u.dtype),
+            interpret=True,
+        )(u, *ops)
+
+    return conv
+
+
+def _ops_list(cfg: Monarch3Config, k: np.ndarray) -> List[np.ndarray]:
+    return list(kernel_operands(cfg, k).values()) + list(constant_operands(cfg).values())
+
+
+def conv3_r2c(u, k, *, causal: bool = False, gated_vw=None):
+    """Run the order-3 fused conv end to end (test/demo entry point)."""
+    n = u.shape[-1] * (2 if causal else 1)
+    cfg = Monarch3Config(seq_len=n, input_len=u.shape[-1], gated=gated_vw is not None)
+    fn = build_conv_fn(cfg)
+    ops = [jnp.asarray(o) for o in _ops_list(cfg, k)]
+    if gated_vw is not None:
+        v, w = gated_vw
+        return fn(jnp.asarray(u), jnp.asarray(v), jnp.asarray(w), *ops)
+    return fn(jnp.asarray(u), *ops)

@@ -1,0 +1,85 @@
+"""Pure-jnp correctness oracles for the FlashFFTConv kernels.
+
+These implementations define *what the kernels must compute*.  They are used
+
+  * by pytest (every Pallas kernel is asserted allclose against them, with
+    hypothesis sweeping shapes and dtypes),
+  * as the "PyTorch FFT conv" baseline artifact (``fft_conv`` /
+    ``fft_conv_gated`` lowered to HLO: the standard unfused full-complex
+    ``ifft(fft(u) * kf)`` pipeline the paper benchmarks against), and
+  * as the differentiable reference for gradient checks of the custom VJP.
+
+Shapes follow the paper: ``u : (B, H, N)``, kernel ``k : (H, N)`` broadcast
+over the batch dimension; gating inputs ``v, w`` match ``u``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def direct_conv(u: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Circular convolution by the definition (O(N^2)); small-N oracle.
+
+    ``y[..., i] = sum_j u[..., j] * k[..., (i - j) mod N]``.
+    """
+    n = u.shape[-1]
+    idx = (jnp.arange(n)[:, None] - jnp.arange(n)[None, :]) % n
+    circ = k[..., idx]  # (H, N_out, N_in): circulant built from each filter
+    return jnp.einsum("hij,...hj->...hi", circ, u)
+
+
+def direct_causal_conv(u: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Causal (linear) convolution truncated to the input length; oracle.
+
+    ``y[i] = sum_{j<=i} u[j] * k[i - j]`` — what zero-padding the circular
+    convolution to ``2N`` computes (Section 2.1 of the paper).
+    """
+    n = u.shape[-1]
+    up = jnp.concatenate([u, jnp.zeros_like(u)], axis=-1)
+    kp = jnp.concatenate([k, jnp.zeros_like(k)], axis=-1)
+    return direct_conv(up, kp)[..., :n]
+
+
+def fft_conv(u: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Standard FFT convolution, Eq. (1) of the paper: the baseline.
+
+    Full complex FFT over the (circular) sequence — the structure of the
+    PyTorch baseline the paper benchmarks against: unfused FFT, pointwise
+    multiply in frequency domain, inverse FFT, take the real part.
+    """
+    uf = jnp.fft.fft(u.astype(jnp.float32), axis=-1)
+    kf = jnp.fft.fft(k.astype(jnp.float32), axis=-1)
+    return jnp.real(jnp.fft.ifft(uf * kf, axis=-1)).astype(u.dtype)
+
+
+def fft_conv_causal(u: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Causal FFT convolution: zero-pad to 2N, convolve, truncate."""
+    n = u.shape[-1]
+    up = jnp.concatenate([u, jnp.zeros_like(u)], axis=-1)
+    kp = jnp.concatenate([k, jnp.zeros_like(k)], axis=-1)
+    return fft_conv(up, kp)[..., :n]
+
+
+def fft_conv_gated(
+    u: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray, k: jnp.ndarray
+) -> jnp.ndarray:
+    """Gated convolution ``y = v * ((u * w) conv k)`` (Table 4 workload)."""
+    return v * fft_conv(u * w, k)
+
+
+def fft_conv_gated_causal(
+    u: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray, k: jnp.ndarray
+) -> jnp.ndarray:
+    """Causal gated convolution (the form used inside Hyena blocks)."""
+    return v * fft_conv_causal(u * w, k)
+
+
+def fft_conv_kf(u: jnp.ndarray, kf: jnp.ndarray) -> jnp.ndarray:
+    """Circular convolution against a pre-computed full spectrum ``kf``.
+
+    Used by frequency-sparse tests, where ``kf`` has been block-zeroed and
+    no longer corresponds to a real time-domain kernel's exact spectrum.
+    """
+    uf = jnp.fft.fft(u.astype(jnp.complex64), axis=-1)
+    return jnp.real(jnp.fft.ifft(uf * kf, axis=-1))

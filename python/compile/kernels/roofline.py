@@ -1,0 +1,193 @@
+"""Analytic TPU roofline estimates for the Monarch kernels (§Perf, L1).
+
+Interpret-mode wall-clock is a CPU artifact, so real-accelerator behaviour
+is estimated structurally, per shipped kernel configuration:
+
+  * **VMEM footprint** of one grid cell — every buffer the fused kernel
+    holds at once (input tile, re/im working planes, coefficient rows,
+    constant matrices). Must fit the ~16 MB/core VMEM budget for the fusion
+    story to hold; this is the analogue of the paper's SRAM bound (§3.1).
+  * **MXU utilization estimate** — the fraction of peak systolic-array
+    throughput the kernel's GEMM shapes can sustain, modeled as the product
+    of dimension-fill factors against the 128x128 MXU (a GEMM with K=32
+    fills 25% of the contraction dimension, etc.), weighted by FLOP share.
+  * **Arithmetic intensity** (FLOPs per HBM byte) — decides memory- vs
+    compute-bound per the §3.2 cost model.
+
+Run directly (``python -m compile.kernels.roofline``) to print the table
+recorded in EXPERIMENTS.md §Perf; unit-tested in ``test_roofline.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from . import fftmats
+
+MXU_DIM = 128                 # TPU systolic array dimension
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM
+DTYPE_BYTES = 4                # f32 planes (bf16 would halve this)
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmShape:
+    """One batched GEMM executed by the kernel: (m, k, n) x count."""
+
+    m: int
+    k: int
+    n: int
+    count: int = 1
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.m * self.k * self.n * self.count
+
+    @property
+    def mxu_fill(self) -> float:
+        """Fraction of the MXU the shape can keep busy.
+
+        The systolic array is MXU_DIM x MXU_DIM with the contraction
+        streaming through: fill = min(1, m/MXU) * min(1, n/MXU); short k
+        additionally costs pipeline drain, modeled as k/(k+MXU).
+        """
+        fill_m = min(1.0, self.m / MXU_DIM)
+        fill_n = min(1.0, self.n / MXU_DIM)
+        drain = self.k / (self.k + MXU_DIM)
+        return fill_m * fill_n * drain
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEstimate:
+    name: str
+    seq_len: int
+    tile_seqs: int
+    vmem_bytes: int
+    mxu_utilization: float
+    arithmetic_intensity: float
+    gemms: Tuple[GemmShape, ...]
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem_bytes <= VMEM_BYTES
+
+
+def order2_estimate(seq_len: int, tile_seqs: int, gated: bool = False,
+                    causal: bool = False) -> KernelEstimate:
+    """Estimate for the order-2 r2c kernel at one (N, tile) configuration."""
+    m = seq_len // 2  # packed transform length
+    n1, n2 = fftmats.monarch_factors(m, 2)
+    half = n1 // 2 if causal else n1
+    s = tile_seqs
+
+    # GEMMs per direction: stage1 (n1 x half) @ (half x s*n2) and
+    # stage2 (s*n1 x n2) @ (n2 x n2); karatsuba = 3 real GEMMs each.
+    gemms = (
+        GemmShape(n1, half, s * n2, 3),        # forward stage 1
+        GemmShape(s * n1, n2, n2, 3),          # forward stage 2
+        GemmShape(s * n1, n2, n2, 3),          # inverse stage 1
+        GemmShape(half, n1, s * n2, 3),        # inverse stage 2
+    )
+    flops = sum(g.flops for g in gemms)
+    util = sum(g.mxu_fill * g.flops for g in gemms) / flops
+
+    # VMEM: input tile (+2 gate tiles), two working plane pairs over the
+    # packed length, per-head coefficient rows, constant matrices+twiddles.
+    seq_tiles = (3 if gated else 1) * s * seq_len
+    planes = 2 * 2 * s * m           # two live (re, im) pairs
+    coeffs = 4 * s * m               # ka/kb rows for the tile's heads
+    consts = 2 * (n1 * half + n2 * n2 + n1 * n1 + 2 * n1 * n2) + m
+    vmem = DTYPE_BYTES * (seq_tiles + planes + coeffs + consts)
+
+    # HBM traffic: tile in/out + coefficients + constants, once per cell.
+    hbm = DTYPE_BYTES * ((2 if not gated else 4) * s * seq_len + 4 * m + consts)
+    # Pointwise work excluded from utilization (runs on the VPU).
+    return KernelEstimate(
+        name=f"order2{'_gated' if gated else ''}{'_causal' if causal else ''}",
+        seq_len=seq_len,
+        tile_seqs=s,
+        vmem_bytes=vmem,
+        mxu_utilization=util,
+        arithmetic_intensity=flops / hbm,
+        gemms=gemms,
+    )
+
+
+def order3_estimate(seq_len: int, tile_seqs: int) -> KernelEstimate:
+    """Estimate for the order-3 r2c kernel."""
+    m = seq_len // 2
+    m1, m2, m3 = fftmats.monarch_factors(m, 3)
+    s = tile_seqs
+    gemms = (
+        GemmShape(m1, m1, s * m2 * m3, 3),
+        GemmShape(m2, m2, s * m1 * m3, 3),
+        GemmShape(s * m1 * m2, m3, m3, 3),
+        GemmShape(s * m1 * m2, m3, m3, 3),
+        GemmShape(m2, m2, s * m1 * m3, 3),
+        GemmShape(m1, m1, s * m2 * m3, 3),
+    )
+    flops = sum(g.flops for g in gemms)
+    util = sum(g.mxu_fill * g.flops for g in gemms) / flops
+    planes = 2 * 2 * s * m
+    consts = 2 * (m1 * m1 * 2 + m2 * m2 * 2 + m3 * m3 * 2 + m1 * m2 * m3 + m2 * m3) + m
+    vmem = DTYPE_BYTES * (s * seq_len + planes + 4 * s * m + consts)
+    hbm = DTYPE_BYTES * (2 * s * seq_len + 4 * m + consts)
+    return KernelEstimate(
+        name="order3",
+        seq_len=seq_len,
+        tile_seqs=s,
+        vmem_bytes=vmem,
+        mxu_utilization=util,
+        arithmetic_intensity=flops / hbm,
+        gemms=gemms,
+    )
+
+
+def max_tile_for_vmem(seq_len: int, order: int = 2) -> int:
+    """Largest power-of-two tile (sequences/cell) that fits VMEM."""
+    est = order2_estimate if order == 2 else order3_estimate
+    s = 1
+    while 2 * s * seq_len * DTYPE_BYTES < VMEM_BYTES:
+        if not est(seq_len, 2 * s).fits_vmem:
+            break
+        s *= 2
+    return s
+
+
+def shipped_configs() -> List[KernelEstimate]:
+    """Estimates for the artifact set `aot.py` ships.
+
+    Tiles follow the VMEM budget: B*H = 32 sequences per cell while that
+    fits (the CPU bench shape), shrinking at long lengths exactly as the
+    paper's B_tile/H_tile would on an accelerator.
+    """
+    out = []
+    for n in (256, 1024, 4096, 16384):
+        tile = min(32, max_tile_for_vmem(n, 2))
+        out.append(order2_estimate(n, tile))
+        out.append(order2_estimate(n, tile, gated=True))
+    out.append(order3_estimate(65536, min(32, max_tile_for_vmem(65536, 3))))
+    return out
+
+
+def report() -> str:
+    lines = [
+        f"{'kernel':<22}{'N':>8}{'tile':>6}{'VMEM_MB':>9}{'fits':>6}"
+        f"{'MXU_util':>10}{'AI(F/B)':>9}"
+    ]
+    for e in shipped_configs():
+        lines.append(
+            f"{e.name:<22}{e.seq_len:>8}{e.tile_seqs:>6}"
+            f"{e.vmem_bytes / 1e6:>9.2f}{str(e.fits_vmem):>6}"
+            f"{e.mxu_utilization:>10.2f}{e.arithmetic_intensity:>9.1f}"
+        )
+    lines.append("")
+    lines.append("max tile sizes under the 16MB VMEM budget:")
+    for n in (4096, 16384, 65536, 262144):
+        order = 2 if n <= 65536 else 3
+        lines.append(f"  N={n:<8} order-{order}: {max_tile_for_vmem(n, order)} seqs/cell")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

@@ -1,0 +1,384 @@
+"""L2: JAX model definitions built on the FlashFFTConv kernels.
+
+Everything here is build-time Python: `aot.py` lowers these functions once
+to HLO text, and the Rust coordinator drives them through PJRT.  The module
+provides the three model families the paper evaluates:
+
+  * **Hyena-style gated-convolution LM** (Tables 1, 5, 6, 7, 9): stacked
+    blocks of ``y = v * ((u*w) conv k)`` with implicitly-parameterized
+    filters (an MLP over positional features, modulated by an exponential
+    decay window — the Hyena filter of [94]), tied-embedding next-token
+    loss, Adam-in-jnp training step.
+  * **GPT-style attention LM** (Table 6 comparator): identical skeleton
+    with causal multi-head attention as the mixer.
+  * **Long-conv Pathfinder classifier** (Table 2): non-gated long convs +
+    mean pooling over a flattened synthetic Pathfinder image.
+
+Every model exists in two convolution implementations, selected by
+``ModelConfig.conv_impl``:
+
+  * ``"monarch"``  — the fused Pallas FlashFFTConv (custom-VJP ops);
+  * ``"baseline"`` — the standard `jnp.fft` convolution (the paper's
+    PyTorch-baseline analogue), natively differentiable.
+
+Parameters are plain ``dict[str, jnp.ndarray]`` with deterministic
+(sorted-key) flattening so the Rust side can hold and feed them as a flat
+buffer list — see :func:`flatten_params`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv_op, ref
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture configuration (baked into each artifact)."""
+
+    vocab: int = 128
+    dim: int = 128
+    layers: int = 2
+    seq_len: int = 256
+    mixer: str = "hyena"          # "hyena" | "attention" | "longconv"
+    conv_impl: str = "monarch"    # "monarch" | "baseline"
+    conv_order: int = 0           # 0 = pick via cost-model heuristic
+    heads: int = 4                # attention only
+    mlp_expand: int = 2
+    filter_feats: int = 9         # positional feature dim for Hyena filters
+    filter_hidden: int = 32       # Hyena filter-MLP width
+    filter_len: int = 0           # 0 = full length; <seq_len = partial conv (§3.3)
+    sparse_block: Tuple[int, int] = (0, 0)  # (kr, kc): freq-sparse eval (§3.3)
+    n_classes: int = 2            # classifier head (longconv mixer)
+
+    @property
+    def order(self) -> int:
+        return self.conv_order or conv_op.default_order(2 * self.seq_len)
+
+    @property
+    def k_len(self) -> int:
+        return self.filter_len or self.seq_len
+
+    @staticmethod
+    def param_count(params: Params) -> int:
+        return int(sum(int(np.prod(p.shape)) for p in params.values()))
+
+
+# ---------------------------------------------------------------------------
+# Small building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm along the channel axis."""
+    scale = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x * scale * g
+
+
+def _uniform(rng: np.random.Generator, shape, scale: float) -> jnp.ndarray:
+    return jnp.asarray(rng.uniform(-scale, scale, size=shape).astype(np.float32))
+
+
+def _linear_init(rng: np.random.Generator, d_in: int, d_out: int) -> jnp.ndarray:
+    return _uniform(rng, (d_in, d_out), 1.0 / np.sqrt(d_in))
+
+
+def positional_features(seq_len: int, n_feats: int) -> jnp.ndarray:
+    """Hyena-style positional features: normalized time + sin/cos bands."""
+    t = np.arange(seq_len, dtype=np.float32) / seq_len
+    feats = [t[:, None]]
+    n_bands = (n_feats - 1) // 2
+    for i in range(n_bands):
+        f = 2.0 ** i
+        feats.append(np.sin(2 * np.pi * f * t)[:, None])
+        feats.append(np.cos(2 * np.pi * f * t)[:, None])
+    out = np.concatenate(feats, axis=1)[:, :n_feats].astype(np.float32)
+    return jnp.asarray(out)
+
+
+def decay_window(seq_len: int, dim: int) -> jnp.ndarray:
+    """Per-channel exponential decay modulation (Hyena's window)."""
+    t = np.arange(seq_len, dtype=np.float32)[None, :]
+    rates = np.geomspace(1e-3, 0.3, dim).astype(np.float32)[:, None]
+    return jnp.asarray(np.exp(-rates * t))
+
+
+# ---------------------------------------------------------------------------
+# Hyena filter + mixers
+# ---------------------------------------------------------------------------
+
+
+def hyena_filter(params: Params, prefix: str, cfg: ModelConfig) -> jnp.ndarray:
+    """Generate the (dim, k_len) implicit filter bank for one layer.
+
+    MLP over positional features -> per-channel filters, modulated by an
+    exponential decay window; regenerated every forward pass (the workload
+    FlashFFTConv's on-the-fly ``k_f`` computation serves — §C.2).
+    """
+    feats = positional_features(cfg.k_len, cfg.filter_feats)
+    h = jnp.sin(feats @ params[f"{prefix}.fw1"] + params[f"{prefix}.fb1"])
+    h = jnp.sin(h @ params[f"{prefix}.fw2"] + params[f"{prefix}.fb2"])
+    k = (h @ params[f"{prefix}.fw3"]).T  # (dim, k_len)
+    window = decay_window(cfg.k_len, cfg.dim)
+    return k * window
+
+
+def _pad_filter(k: jnp.ndarray, length: int) -> jnp.ndarray:
+    """Zero-pad a (possibly partial, §3.3) filter to the input length."""
+    if k.shape[-1] == length:
+        return k
+    return jnp.concatenate(
+        [k, jnp.zeros(k.shape[:-1] + (length - k.shape[-1],), k.dtype)], axis=-1
+    )
+
+
+def _conv_seq(cfg: ModelConfig, u, v, w, k) -> jnp.ndarray:
+    """Dispatch the gated causal conv to the configured implementation.
+
+    Inputs/outputs channel-major ``(B, D, L)`` as the kernels expect.
+    """
+    kr, kc = cfg.sparse_block
+    if kr:
+        return conv_op.sparse_gated_conv_causal(u, v, w, k, kr, kc)
+    if cfg.conv_impl == "monarch":
+        return conv_op.gated_conv_causal(u, v, w, k, cfg.order)
+    return ref.fft_conv_gated_causal(u, v, w, _pad_filter(k, u.shape[-1]))
+
+
+def hyena_block(params: Params, prefix: str, x: jnp.ndarray, cfg: ModelConfig,
+                kmask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """One Hyena block: gated long conv mixer + channel MLP, both residual."""
+    h = rmsnorm(x, params[f"{prefix}.norm1"])
+    proj = h @ params[f"{prefix}.win"]  # (B, L, 3D)
+    u, v, w = jnp.split(proj, 3, axis=-1)
+    k = hyena_filter(params, prefix, cfg)
+    if kmask is not None:
+        k = k * kmask[None, : cfg.k_len]  # partial-conv truncation (Table 7)
+    ut, vt, wt = (t.transpose(0, 2, 1) for t in (u, v, w))  # (B, D, L)
+    y = _conv_seq(cfg, ut, vt, wt, k).transpose(0, 2, 1)
+    x = x + y @ params[f"{prefix}.wout"]
+
+    h = rmsnorm(x, params[f"{prefix}.norm2"])
+    h = jax.nn.gelu(h @ params[f"{prefix}.w1"])
+    return x + h @ params[f"{prefix}.w2"]
+
+
+def attention_block(params: Params, prefix: str, x: jnp.ndarray, cfg: ModelConfig,
+                    kmask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """One GPT block: causal MHA mixer + channel MLP (Table 6 comparator)."""
+    del kmask
+    b, l, d = x.shape
+    nh, hd = cfg.heads, d // cfg.heads
+    h = rmsnorm(x, params[f"{prefix}.norm1"])
+    qkv = h @ params[f"{prefix}.wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, l, nh, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, l, nh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, l, nh, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhid,bhjd->bhij", q, k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((l, l), dtype=bool))
+    scores = jnp.where(mask, scores, -1e9)
+    att = jax.nn.softmax(scores, axis=-1)
+    y = jnp.einsum("bhij,bhjd->bhid", att, v).transpose(0, 2, 1, 3).reshape(b, l, d)
+    x = x + y @ params[f"{prefix}.wout"]
+
+    h = rmsnorm(x, params[f"{prefix}.norm2"])
+    h = jax.nn.gelu(h @ params[f"{prefix}.w1"])
+    return x + h @ params[f"{prefix}.w2"]
+
+
+def longconv_block(params: Params, prefix: str, x: jnp.ndarray, cfg: ModelConfig,
+                   kmask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Plain (non-gated) long-conv block — the [44]-style Path-X model."""
+    h = rmsnorm(x, params[f"{prefix}.norm1"])
+    k = hyena_filter(params, prefix, cfg)
+    if kmask is not None:
+        k = k * kmask[None, : cfg.k_len]
+    ht = h.transpose(0, 2, 1)
+    kr, kc = cfg.sparse_block
+    if kr:
+        y = conv_op.sparse_long_conv_causal(ht, k, kr, kc)
+    elif cfg.conv_impl == "monarch":
+        y = conv_op.long_conv_causal(ht, k, cfg.order)
+    else:
+        y = ref.fft_conv_causal(ht, _pad_filter(k, ht.shape[-1]))
+    y = jax.nn.gelu(y.transpose(0, 2, 1))
+    x = x + y @ params[f"{prefix}.wout"]
+
+    h = rmsnorm(x, params[f"{prefix}.norm2"])
+    h = jax.nn.gelu(h @ params[f"{prefix}.w1"])
+    return x + h @ params[f"{prefix}.w2"]
+
+
+_BLOCKS = {"hyena": hyena_block, "attention": attention_block, "longconv": longconv_block}
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Initialize all model parameters (sorted-key dict; see module doc)."""
+    rng = np.random.default_rng(seed)
+    d, fd, fh = cfg.dim, cfg.filter_feats, cfg.filter_hidden
+    p: Params = {}
+    if cfg.mixer == "longconv":
+        # Classifier head; no token embedding (an unused parameter would be
+        # pruned from the compiled executable's signature by the runtime's
+        # XLA, desynchronizing the manifest).
+        p["head"] = _linear_init(rng, d, cfg.n_classes)
+        p["pix_embed"] = _linear_init(rng, 1, d)
+    else:
+        p["embed"] = _uniform(rng, (cfg.vocab, d), 0.02)
+    p["norm_f"] = jnp.ones(d)
+    for i in range(cfg.layers):
+        pre = f"layer{i}"
+        p[f"{pre}.norm1"] = jnp.ones(d)
+        p[f"{pre}.norm2"] = jnp.ones(d)
+        p[f"{pre}.w1"] = _linear_init(rng, d, cfg.mlp_expand * d)
+        p[f"{pre}.w2"] = _linear_init(rng, cfg.mlp_expand * d, d)
+        p[f"{pre}.wout"] = _linear_init(rng, d, d)
+        if cfg.mixer == "attention":
+            p[f"{pre}.wqkv"] = _linear_init(rng, d, 3 * d)
+        else:
+            if cfg.mixer == "hyena":
+                p[f"{pre}.win"] = _linear_init(rng, d, 3 * d)
+            p[f"{pre}.fw1"] = _linear_init(rng, fd, fh)
+            p[f"{pre}.fb1"] = jnp.zeros(fh)
+            p[f"{pre}.fw2"] = _linear_init(rng, fh, fh)
+            p[f"{pre}.fb2"] = jnp.zeros(fh)
+            p[f"{pre}.fw3"] = _linear_init(rng, fh, d)
+    return p
+
+
+def flatten_params(params: Params) -> Tuple[List[str], List[jnp.ndarray]]:
+    """Deterministic (sorted-key) flattening shared with the Rust runtime."""
+    names = sorted(params.keys())
+    return names, [params[n] for n in names]
+
+
+def unflatten_params(names: List[str], leaves: List[jnp.ndarray]) -> Params:
+    return dict(zip(names, leaves))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes and losses
+# ---------------------------------------------------------------------------
+
+
+def lm_forward(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+               kmask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token LM forward: (B, L) int32 -> (B, L, vocab) logits (tied embed)."""
+    x = params["embed"][tokens]
+    block = _BLOCKS[cfg.mixer]
+    for i in range(cfg.layers):
+        x = block(params, f"layer{i}", x, cfg, kmask)
+    x = rmsnorm(x, params["norm_f"])
+    return x @ params["embed"].T
+
+
+def lm_loss(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+            kmask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token cross-entropy over the batch."""
+    logits = lm_forward(params, tokens[:, :-1], cfg, kmask)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def classifier_forward(params: Params, pixels: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Pathfinder classifier: (B, L) f32 pixels -> (B, n_classes) logits."""
+    x = pixels[..., None] @ params["pix_embed"]
+    for i in range(cfg.layers):
+        x = longconv_block(params, f"layer{i}", x, cfg)
+    x = rmsnorm(x, params["norm_f"])
+    return jnp.mean(x, axis=1) @ params["head"]
+
+
+def classifier_loss(params: Params, pixels: jnp.ndarray, labels: jnp.ndarray,
+                    cfg: ModelConfig) -> jnp.ndarray:
+    logits = classifier_forward(params, pixels, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Adam-in-jnp training step (optax is unavailable offline; DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+
+
+def adam_step(params: Params, m: Params, v: Params, step: jnp.ndarray,
+              grads: Params, opt: AdamConfig) -> Tuple[Params, Params, Params]:
+    """One Adam update with global-norm clipping; ``step`` is 1-based f32."""
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()) + 1e-12)
+    scale = jnp.minimum(1.0, opt.grad_clip / gnorm)
+    new_p, new_m, new_v = {}, {}, {}
+    bc1 = 1.0 - opt.b1 ** step
+    bc2 = 1.0 - opt.b2 ** step
+    for name, g in grads.items():
+        g = g * scale
+        mi = opt.b1 * m[name] + (1 - opt.b1) * g
+        vi = opt.b2 * v[name] + (1 - opt.b2) * g * g
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + opt.eps)
+        new_p[name] = params[name] - opt.lr * upd
+        new_m[name] = mi
+        new_v[name] = vi
+    return new_p, new_m, new_v
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamConfig):
+    """Build ``train_step(params, m, v, step, tokens) -> (..., loss)``.
+
+    The returned function is what `aot.py` lowers: one fused HLO module
+    containing forward, backward (through the custom-VJP Monarch convs),
+    and the Adam update.  The Rust trainer holds (params, m, v, step) as
+    opaque buffers and loops.
+    """
+
+    def train_step(params: Params, m: Params, v: Params, step: jnp.ndarray,
+                   tokens: jnp.ndarray):
+        loss, grads = jax.value_and_grad(lambda p: lm_loss(p, tokens, cfg))(params)
+        step = step + 1.0
+        params, m, v = adam_step(params, m, v, step, grads, opt)
+        return params, m, v, step, loss
+
+    return train_step
+
+
+def make_classifier_train_step(cfg: ModelConfig, opt: AdamConfig):
+    """Same contract as :func:`make_train_step`, for the Pathfinder task."""
+
+    def train_step(params: Params, m: Params, v: Params, step: jnp.ndarray,
+                   pixels: jnp.ndarray, labels: jnp.ndarray):
+        loss, grads = jax.value_and_grad(
+            lambda p: classifier_loss(p, pixels, labels, cfg)
+        )(params)
+        step = step + 1.0
+        params, m, v = adam_step(params, m, v, step, grads, opt)
+        return params, m, v, step, loss
+
+    return train_step

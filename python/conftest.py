@@ -1,0 +1,8 @@
+"""Pytest path setup: make `compile.*` importable from any invocation dir
+(`pytest python/tests/` from the repo root, or `pytest tests/` from
+`python/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,121 @@
+"""Artifact-builder tests: manifest grammar, fixtures, goldens, HLO text."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """Build a tiny artifact set once for the whole module."""
+    out = str(tmp_path_factory.mktemp("art"))
+    b = aot.ArtifactBuilder(out, verbose=False)
+
+    def fn(x, y):
+        return (x @ y + 1.0, jnp.sum(x))
+
+    b.add(
+        "tiny_matmul",
+        fn,
+        [
+            aot.InputSpec("x", np.ones((2, 3), np.float32), "runtime"),
+            aot.InputSpec("y", np.full((3, 4), 2.0, np.float32), "const"),
+        ],
+        meta=dict(group="test", kind="demo", seq_len=4),
+        output_names=["z", "s"],
+        golden=True,
+    )
+    b.finish()
+    return out
+
+
+class TestManifest:
+    def test_files_exist(self, built):
+        for f in ["manifest.txt", "tiny_matmul.hlo.txt", "tiny_matmul.fix.bin",
+                  "tiny_matmul.golden.bin"]:
+            assert os.path.exists(os.path.join(built, f)), f
+
+    def test_manifest_grammar(self, built):
+        text = open(os.path.join(built, "manifest.txt")).read()
+        assert text.startswith("version 1")
+        assert "artifact tiny_matmul" in text
+        assert "input x f32 2,3 runtime" in text
+        assert "input y f32 3,4 const tiny_matmul.fix.bin 0" in text
+        assert "output z f32 2,4" in text
+        assert "output s f32 -" in text  # scalar shape token
+        assert text.rstrip().split("\n").count("end") == 1
+
+    def test_fixture_bytes(self, built):
+        raw = open(os.path.join(built, "tiny_matmul.fix.bin"), "rb").read()
+        y = np.frombuffer(raw, dtype=np.float32).reshape(3, 4)
+        np.testing.assert_array_equal(y, np.full((3, 4), 2.0))
+
+    def test_golden_layout(self, built):
+        raw = open(os.path.join(built, "tiny_matmul.golden.bin"), "rb").read()
+        # runtime input (2*3) + out z (2*4) + out s (1), all f32.
+        assert len(raw) == (6 + 8 + 1) * 4
+        vals = np.frombuffer(raw, dtype=np.float32)
+        np.testing.assert_array_equal(vals[:6], np.ones(6))
+        np.testing.assert_allclose(vals[6:14], np.full(8, 7.0))  # 1*2*3 + 1
+        assert vals[14] == 6.0
+
+    def test_hlo_text_has_full_constants(self, built):
+        """Large constants must never be elided (the {...} trap)."""
+        hlo = open(os.path.join(built, "tiny_matmul.hlo.txt")).read()
+        assert "{...}" not in hlo
+        assert "ENTRY" in hlo
+
+    def test_hlo_has_no_new_metadata_attrs(self, built):
+        hlo = open(os.path.join(built, "tiny_matmul.hlo.txt")).read()
+        assert "source_end_line" not in hlo
+
+
+class TestHelpers:
+    def test_shape_str(self):
+        assert aot._shape_str(()) == "-"
+        assert aot._shape_str((2, 3)) == "2,3"
+
+    def test_dtype_names(self):
+        assert aot._dtype_name(np.float32) == "f32"
+        assert aot._dtype_name(np.int32) == "i32"
+        with pytest.raises(KeyError):
+            aot._dtype_name(np.float64)
+
+    def test_input_spec_validates_kind(self):
+        with pytest.raises(AssertionError):
+            aot.InputSpec("x", np.zeros(1, np.float32), "bogus")
+
+    def test_state_output_names_roundtrip(self):
+        names = ["a", "b"]
+        out = aot._state_output_names(names)
+        assert out == ["param.a", "param.b", "adam_m.a", "adam_m.b",
+                       "adam_v.a", "adam_v.b", "step"]
+
+    def test_flat_train_fn_shapes(self):
+        cfg = M.ModelConfig(vocab=16, dim=8, layers=1, seq_len=32)
+        opt = M.AdamConfig()
+        params = M.init_params(cfg)
+        names, leaves = M.flatten_params(params)
+        fn = aot._flat_train_fn(cfg, opt, names)
+        zeros = [jnp.zeros_like(l) for l in leaves]
+        tok = jnp.zeros((2, 33), dtype=jnp.int32)
+        outs = fn(*leaves, *zeros, *zeros, jnp.asarray(0.0), tok)
+        assert len(outs) == 3 * len(names) + 2
+        assert outs[-1].shape == ()  # loss scalar
+
+
+class TestMonarchPermute:
+    def test_matches_order_permutation(self):
+        from compile.kernels import conv_op, fftmats as fm
+
+        for factors in [(4, 8), (16, 16), (8, 8, 8), (2, 4, 2, 4)]:
+            n = int(np.prod(factors))
+            x = jnp.asarray(np.random.default_rng(0).normal(size=(3, n)).astype(np.float32))
+            got = np.array(conv_op.monarch_permute(x, factors))
+            want = np.array(x)[:, fm.monarch_order(factors)]
+            np.testing.assert_array_equal(got, want)

@@ -1,0 +1,128 @@
+"""Gradient-correctness tests for the custom-VJP FlashFFTConv ops."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv_op, ref
+
+TOL = dict(rtol=3e-3, atol=3e-3)
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+class TestForward:
+    @settings(max_examples=8, deadline=None)
+    @given(logl=st.integers(min_value=4, max_value=10), seed=st.integers(0, 2**31))
+    def test_long_conv_matches_ref(self, logl, seed):
+        l = 1 << logl
+        u, k = rand((2, 2, l), seed), rand((2, l), seed + 1)
+        got = conv_op.long_conv_causal(u, k, 2)
+        want = ref.fft_conv_causal(u, k)
+        np.testing.assert_allclose(np.array(got), np.array(want), **TOL)
+
+    def test_partial_filter_shorter_than_input(self):
+        l, lk = 256, 64
+        u, k = rand((2, 2, l), 0), rand((2, lk), 1)
+        got = conv_op.long_conv_causal(u, k, 2)
+        kpad = jnp.concatenate([k, jnp.zeros((2, l - lk))], axis=-1)
+        want = ref.fft_conv_causal(u, kpad)
+        np.testing.assert_allclose(np.array(got), np.array(want), **TOL)
+
+    def test_filter_longer_than_fft_raises(self):
+        u, k = rand((1, 1, 32), 0), rand((1, 128), 1)
+        with pytest.raises(ValueError):
+            conv_op.long_conv_causal(u, k, 2)
+
+    def test_default_order_heuristic(self):
+        assert conv_op.default_order(1024) == 2
+        assert conv_op.default_order(32768) == 2
+        assert conv_op.default_order(65536) == 3
+
+
+class TestGradients:
+    @settings(max_examples=5, deadline=None)
+    @given(logl=st.integers(min_value=4, max_value=8), seed=st.integers(0, 2**31))
+    def test_gated_grads_match_ref(self, logl, seed):
+        l = 1 << logl
+        u, v, w = (rand((2, 2, l), seed + i) for i in range(3))
+        k = rand((2, l), seed + 9)
+
+        def ours(u, v, w, k):
+            return jnp.sum(jnp.sin(conv_op.gated_conv_causal(u, v, w, k, 2)))
+
+        def theirs(u, v, w, k):
+            return jnp.sum(jnp.sin(ref.fft_conv_gated_causal(u, v, w, k)))
+
+        g1 = jax.grad(ours, argnums=(0, 1, 2, 3))(u, v, w, k)
+        g2 = jax.grad(theirs, argnums=(0, 1, 2, 3))(u, v, w, k)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-2, atol=1e-2)
+
+    def test_plain_grads_partial_filter(self):
+        l, lk = 128, 32
+        u, k = rand((2, 2, l), 5), rand((2, lk), 6)
+
+        def ours(u, k):
+            return jnp.sum(jnp.tanh(conv_op.long_conv_causal(u, k, 2)))
+
+        def theirs(u, kfull):
+            return jnp.sum(jnp.tanh(ref.fft_conv_causal(u, kfull)))
+
+        g1 = jax.grad(ours, argnums=(0, 1))(u, k)
+        kfull = jnp.concatenate([k, jnp.zeros((2, l - lk))], axis=-1)
+        g2 = jax.grad(theirs, argnums=(0, 1))(u, kfull)
+        np.testing.assert_allclose(np.array(g1[0]), np.array(g2[0]), rtol=1e-2, atol=1e-2)
+        np.testing.assert_allclose(np.array(g1[1]), np.array(g2[1][..., :lk]), rtol=1e-2, atol=1e-2)
+
+    def test_order3_grads(self):
+        l = 256
+        u, k = rand((1, 2, l), 7), rand((2, l), 8)
+        g1 = jax.grad(lambda u_, k_: jnp.sum(conv_op.long_conv_causal(u_, k_, 3) ** 2),
+                      argnums=(0, 1))(u, k)
+        g2 = jax.grad(lambda u_, k_: jnp.sum(ref.fft_conv_causal(u_, k_) ** 2),
+                      argnums=(0, 1))(u, k)
+        np.testing.assert_allclose(np.array(g1[0]), np.array(g2[0]), rtol=1e-2, atol=1e-2)
+        np.testing.assert_allclose(np.array(g1[1]), np.array(g2[1]), rtol=1e-2, atol=1e-2)
+
+    def test_vjp_under_jit(self):
+        """The whole fwd+bwd must trace and lower (the train_step path)."""
+        l = 64
+        u, v, w = (rand((1, 1, l), 10 + i) for i in range(3))
+        k = rand((1, l), 13)
+
+        @jax.jit
+        def step(u, v, w, k):
+            return jax.grad(
+                lambda k_: jnp.sum(conv_op.gated_conv_causal(u, v, w, k_, 2) ** 2)
+            )(k)
+
+        dk = step(u, v, w, k)
+        assert dk.shape == k.shape and bool(jnp.all(jnp.isfinite(dk)))
+
+
+class TestCoeffs:
+    def test_coeffs_match_buildtime(self):
+        """jnp coefficient path == numpy build-time path (fftmats)."""
+        from compile.kernels import fftmats as fm
+
+        n = 128
+        k = np.random.default_rng(3).normal(size=(2, n)).astype(np.float32)
+        factors = fm.monarch_factors(n // 2, 2)
+        a, b, _ = fm.kf_r2c_monarch(k, factors)
+        got = conv_op.coeffs_from_padded(jnp.asarray(k), factors)
+        np.testing.assert_allclose(np.array(got[0]), a.real.astype(np.float32), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.array(got[1]), a.imag.astype(np.float32), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.array(got[2]), b.real.astype(np.float32), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.array(got[3]), b.imag.astype(np.float32), rtol=1e-4, atol=1e-4)
+
+    def test_flip_padded_is_spectrum_conjugate(self):
+        n = 64
+        k = np.random.default_rng(4).normal(size=n).astype(np.float32)
+        kf = np.fft.fft(k)
+        kflip = np.array(conv_op._flip_padded(jnp.asarray(k)))
+        np.testing.assert_allclose(np.fft.fft(kflip), np.conj(kf), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,193 @@
+"""Unit tests for the build-time FFT matrix machinery (fftmats.py)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fftmats as fm
+
+RNG = np.random.default_rng(0)
+
+
+class TestFactorization:
+    def test_is_pow2(self):
+        assert fm.is_pow2(1) and fm.is_pow2(2) and fm.is_pow2(4096)
+        assert not fm.is_pow2(0) and not fm.is_pow2(3) and not fm.is_pow2(-4)
+
+    def test_balanced_factors(self):
+        assert fm.monarch_factors(4096, 2) == (64, 64)
+        assert fm.monarch_factors(8192, 2) == (128, 64)
+        assert fm.monarch_factors(4096, 3) == (16, 16, 16)
+        assert fm.monarch_factors(32768, 3) == (32, 32, 32)
+
+    def test_factors_product(self):
+        for logn in range(2, 22):
+            for order in (2, 3, 4):
+                if order > logn:
+                    continue
+                f = fm.monarch_factors(1 << logn, order)
+                assert int(np.prod(f)) == 1 << logn
+                assert len(f) == order
+                # balanced: factors within 2x of each other
+                assert max(f) <= 2 * min(f)
+
+    def test_rejects_non_pow2(self):
+        with pytest.raises(ValueError):
+            fm.monarch_factors(100, 2)
+
+    def test_rejects_over_split(self):
+        with pytest.raises(ValueError):
+            fm.monarch_factors(4, 5)
+
+
+class TestDftMatrix:
+    @pytest.mark.parametrize("n", [1, 2, 4, 8, 32])
+    def test_matches_numpy_fft(self, n):
+        x = RNG.normal(size=n) + 1j * RNG.normal(size=n)
+        assert np.allclose(fm.dft_matrix(n) @ x, np.fft.fft(x))
+
+    @pytest.mark.parametrize("n", [2, 8, 16])
+    def test_inverse_roundtrip(self, n):
+        assert np.allclose(
+            fm.dft_matrix(n, inverse=True) @ fm.dft_matrix(n), np.eye(n), atol=1e-10
+        )
+
+    def test_twiddle_unit_modulus(self):
+        t = fm.twiddle_grid(8, 4)
+        assert np.allclose(np.abs(t), 1.0)
+        assert np.allclose(t * fm.twiddle_grid(8, 4, inverse=True), 1.0)
+
+
+class TestMonarchRef:
+    @pytest.mark.parametrize(
+        "factors",
+        [(8,), (4, 8), (8, 4), (16, 16), (4, 4, 4), (2, 4, 8), (4, 4, 2, 4)],
+    )
+    def test_fwd_is_permuted_fft(self, factors):
+        n = int(np.prod(factors))
+        x = RNG.normal(size=(3, n)) + 1j * RNG.normal(size=(3, n))
+        got = fm.monarch_fft_ref(x, factors)
+        want = np.fft.fft(x, axis=-1)[:, fm.monarch_order(factors)]
+        assert np.allclose(got, want)
+
+    @pytest.mark.parametrize("factors", [(4, 8), (16, 16), (4, 4, 4), (2, 2, 2, 2)])
+    def test_inverse_roundtrip(self, factors):
+        n = int(np.prod(factors))
+        x = RNG.normal(size=n) + 1j * RNG.normal(size=n)
+        assert np.allclose(fm.monarch_ifft_ref(fm.monarch_fft_ref(x, factors), factors), x)
+
+    @pytest.mark.parametrize("factors", [(4, 8), (8, 8), (4, 4, 4)])
+    def test_order_is_permutation(self, factors):
+        order = fm.monarch_order(factors)
+        n = int(np.prod(factors))
+        assert sorted(order.tolist()) == list(range(n))
+
+    @pytest.mark.parametrize("factors", [(4, 8), (8, 8), (4, 4, 4)])
+    def test_neg_freq_perm(self, factors):
+        order = fm.monarch_order(factors)
+        neg = fm.neg_freq_perm(factors)
+        m = len(order)
+        # layout_freq(neg[j]) == -layout_freq(j) mod m, and it's an involution
+        assert np.array_equal(order[neg], (-order) % m)
+        assert np.array_equal(neg[neg], np.arange(m))
+
+    def test_length_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            fm.monarch_fft_ref(np.zeros(7, dtype=complex), (2, 4))
+
+
+class TestConvIdentity:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        logn=st.integers(min_value=3, max_value=9),
+        seed=st.integers(min_value=0, max_value=2**31),
+        order=st.integers(min_value=2, max_value=3),
+    )
+    def test_conv_through_monarch_layout(self, logn, seed, order):
+        """Permuted spectra still convolve exactly (conv theorem is P-invariant)."""
+        n = 1 << logn
+        if order > logn:
+            return
+        factors = fm.monarch_factors(n, order)
+        r = np.random.default_rng(seed)
+        u, k = r.normal(size=n), r.normal(size=n)
+        kf_mon = fm.kf_monarch(k, factors)
+        y = fm.monarch_ifft_ref(
+            fm.monarch_fft_ref(u.astype(complex), factors) * kf_mon, factors
+        )
+        want = np.fft.ifft(np.fft.fft(u) * np.fft.fft(k))
+        assert np.allclose(y, want)
+
+
+class TestR2cPacking:
+    @settings(max_examples=12, deadline=None)
+    @given(logn=st.integers(min_value=3, max_value=10), seed=st.integers(0, 2**31))
+    def test_packed_conv_equals_real_conv(self, logn, seed):
+        n = 1 << logn
+        fh = fm.monarch_factors(n // 2, 2) if logn >= 4 else (n // 2,)
+        r = np.random.default_rng(seed)
+        u, k = r.normal(size=n), r.normal(size=n)
+        a_mon, b_mon, negp = fm.kf_r2c_monarch(k, fh)
+        z = u[0::2] + 1j * u[1::2]
+        zmon = fm.monarch_fft_ref(z, fh)
+        zy = a_mon * zmon + b_mon * np.conj(zmon[negp])
+        zt = fm.monarch_ifft_ref(zy, fh)
+        y = np.empty(n)
+        y[0::2], y[1::2] = zt.real, zt.imag
+        want = np.fft.ifft(np.fft.fft(u) * np.fft.fft(k)).real
+        assert np.allclose(y, want)
+
+    def test_multihead_kernels(self):
+        n, h = 64, 4
+        k = RNG.normal(size=(h, n))
+        a, b, negp = fm.kf_r2c_monarch(k, (8, 4))
+        assert a.shape == (h, n // 2) and b.shape == (h, n // 2)
+        assert negp.shape == (n // 2,)
+
+    def test_odd_length_rejected(self):
+        with pytest.raises(ValueError):
+            fm.r2c_pointwise_coeffs(np.zeros(7, dtype=complex))
+
+
+class TestSparsityPatterns:
+    def test_fraction_math(self):
+        p = fm.SparsityPattern(32, 32, 16, 32)
+        assert abs(p.sparsity_fraction - 0.5) < 1e-12
+        p = fm.SparsityPattern(32, 32, 16, 16)
+        assert abs(p.sparsity_fraction - 0.75) < 1e-12
+
+    def test_flop_fraction_bounds(self):
+        for p in fm.table10_patterns(32, 32).values():
+            assert 0.0 < p.matmul_flop_fraction <= 1.0
+        dense = fm.SparsityPattern(32, 32, 32, 32)
+        assert abs(dense.matmul_flop_fraction - 1.0) < 1e-12
+
+    def test_flop_fraction_monotone_in_sparsity(self):
+        pats = sorted(
+            fm.table10_patterns(32, 32).values(), key=lambda p: p.sparsity_fraction
+        )
+        fracs = [p.matmul_flop_fraction for p in pats]
+        assert fracs == sorted(fracs, reverse=True)
+
+    def test_apply_zeroes_expected_entries(self):
+        p = fm.SparsityPattern(4, 4, 2, 3)
+        kf = np.ones(16, dtype=complex)
+        out = p.apply(kf).reshape(4, 4)
+        assert np.all(out[2:, :] == 0) and np.all(out[:, 3:] == 0)
+        assert np.all(out[:2, :3] == 1)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            fm.SparsityPattern(4, 4, 0, 4)
+        with pytest.raises(ValueError):
+            fm.SparsityPattern(4, 4, 2, 5)
+        with pytest.raises(ValueError):
+            fm.SparsityPattern(4, 4, 4, 4).apply(np.ones(8, dtype=complex))
+
+    def test_table10_fractions_match_paper_ladder(self):
+        pats = fm.table10_patterns(32, 32)
+        assert abs(pats["s0"].sparsity_fraction - 0.0) < 1e-9
+        assert abs(pats["s50"].sparsity_fraction - 0.5) < 1e-9
+        assert abs(pats["s75"].sparsity_fraction - 0.75) < 1e-9
+        assert pats["s84"].sparsity_fraction > 0.8
+        assert pats["s91"].sparsity_fraction > 0.9

@@ -1,0 +1,208 @@
+"""Pallas kernel vs pure-jnp oracle: the core correctness signal.
+
+Hypothesis sweeps shapes and dtypes across every kernel variant; each
+assertion compares the fused Monarch kernel against the `ref.py` oracle
+(`jnp.fft`-based), which is itself pinned against the O(N^2) definition.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import monarch2 as m2
+from compile.kernels import monarch3 as m3
+from compile.kernels import ref
+
+TOL = dict(rtol=2e-3, atol=2e-3)
+
+
+def rand(shape, seed, dtype=np.float32):
+    return np.random.default_rng(seed).normal(size=shape).astype(dtype)
+
+
+class TestOracleSelfConsistency:
+    """ref.fft_conv is pinned against the O(N^2) definition first."""
+
+    @pytest.mark.parametrize("n", [8, 32, 64])
+    def test_fft_conv_vs_direct(self, n):
+        u, k = rand((2, 3, n), 0), rand((3, n), 1)
+        got = ref.fft_conv(jnp.asarray(u), jnp.asarray(k))
+        want = ref.direct_conv(jnp.asarray(u), jnp.asarray(k))
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("n", [8, 32])
+    def test_fft_conv_causal_vs_direct(self, n):
+        u, k = rand((2, 2, n), 2), rand((2, n), 3)
+        got = ref.fft_conv_causal(jnp.asarray(u), jnp.asarray(k))
+        want = ref.direct_causal_conv(jnp.asarray(u), jnp.asarray(k))
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+    def test_causality(self):
+        """Causal conv output at i must not depend on inputs after i."""
+        n = 64
+        u1, k = rand((1, 1, n), 4), rand((1, n), 5)
+        u2 = u1.copy()
+        u2[..., n // 2 :] += 100.0
+        y1 = np.array(ref.fft_conv_causal(jnp.asarray(u1), jnp.asarray(k)))
+        y2 = np.array(ref.fft_conv_causal(jnp.asarray(u2), jnp.asarray(k)))
+        np.testing.assert_allclose(y1[..., : n // 2], y2[..., : n // 2], rtol=1e-4, atol=1e-4)
+
+
+class TestMonarch2Kernel:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        logn=st.integers(min_value=4, max_value=11),
+        b=st.integers(min_value=1, max_value=3),
+        h=st.integers(min_value=1, max_value=4),
+        seed=st.integers(0, 2**31),
+    )
+    def test_r2c_circular(self, logn, b, h, seed):
+        n = 1 << logn
+        u, k = rand((b, h, n), seed), rand((h, n), seed + 1)
+        got = np.array(m2.conv_r2c(u, k))
+        want = np.array(ref.fft_conv(jnp.asarray(u), jnp.asarray(k)))
+        np.testing.assert_allclose(got, want, **TOL)
+
+    @settings(max_examples=8, deadline=None)
+    @given(logn=st.integers(min_value=4, max_value=11), seed=st.integers(0, 2**31))
+    def test_r2c_causal(self, logn, seed):
+        n = 1 << logn
+        u, k = rand((2, 2, n), seed), rand((2, n), seed + 1)
+        got = np.array(m2.conv_r2c(u, k, causal=True))
+        want = np.array(ref.fft_conv_causal(jnp.asarray(u), jnp.asarray(k)))
+        np.testing.assert_allclose(got, want, **TOL)
+
+    @settings(max_examples=6, deadline=None)
+    @given(logn=st.integers(min_value=4, max_value=10), seed=st.integers(0, 2**31))
+    def test_gated(self, logn, seed):
+        n = 1 << logn
+        u, v, w = (rand((2, 2, n), seed + i) for i in range(3))
+        k = rand((2, n), seed + 9)
+        got = np.array(m2.conv_r2c_gated(u, v, w, k))
+        want = np.array(
+            ref.fft_conv_gated(jnp.asarray(u), jnp.asarray(v), jnp.asarray(w), jnp.asarray(k))
+        )
+        np.testing.assert_allclose(got, want, **TOL)
+
+    @settings(max_examples=6, deadline=None)
+    @given(logn=st.integers(min_value=4, max_value=10), seed=st.integers(0, 2**31))
+    def test_gated_causal(self, logn, seed):
+        n = 1 << logn
+        u, v, w = (rand((2, 2, n), seed + i) for i in range(3))
+        k = rand((2, n), seed + 9)
+        got = np.array(m2.conv_r2c_gated(u, v, w, k, causal=True))
+        want = np.array(
+            ref.fft_conv_gated_causal(
+                jnp.asarray(u), jnp.asarray(v), jnp.asarray(w), jnp.asarray(k)
+            )
+        )
+        np.testing.assert_allclose(got, want, **TOL)
+
+    @pytest.mark.parametrize("karatsuba", [True, False])
+    def test_complex_path_ablation(self, karatsuba):
+        """The no-domain-opts ablation row must also be exact."""
+        n = 256
+        u, k = rand((2, 3, n), 7), rand((3, n), 8)
+        got = np.array(m2.conv_basic(u, k, karatsuba=karatsuba))
+        want = np.array(ref.fft_conv(jnp.asarray(u), jnp.asarray(k)))
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_rectangular_factors(self):
+        """Non-square N1 != N2 splits (e.g. N=2048 -> M=1024=32x32, N=512 -> M=256=16x16,
+        N=8192 -> M=4096... pick N=2^odd so M has uneven split)."""
+        n = 512  # M=256 -> (16,16); also test n=2048 -> M=1024 (32,32) and n=128 -> M=64 (8,8)
+        for n in (128, 512, 2048):
+            u, k = rand((1, 2, n), n), rand((2, n), n + 1)
+            got = np.array(m2.conv_r2c(u, k))
+            want = np.array(ref.fft_conv(jnp.asarray(u), jnp.asarray(k)))
+            np.testing.assert_allclose(got, want, **TOL)
+
+    def test_bf16_inputs(self):
+        n = 256
+        u = rand((2, 2, n), 11).astype(jnp.bfloat16)
+        k = rand((2, n), 12)
+        got = np.array(m2.conv_r2c(np.asarray(u), k).astype(jnp.float32))
+        want = np.array(ref.fft_conv(jnp.asarray(u, dtype=jnp.float32), jnp.asarray(k)))
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-1)
+
+    def test_input_length_mismatch_raises(self):
+        cfg = m2.Monarch2Config(seq_len=64, input_len=64)
+        fn = m2.build_conv_fn(cfg)
+        with pytest.raises(ValueError):
+            fn(jnp.zeros((1, 1, 32)))
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            m2.Monarch2Config(seq_len=100, input_len=100)
+        with pytest.raises(ValueError):
+            m2.Monarch2Config(seq_len=64, input_len=16)
+        with pytest.raises(ValueError):
+            m2.Monarch2Config(seq_len=64, input_len=64, r2c=True, keep_rows=4, keep_cols=4)
+
+
+class TestSparseKernel:
+    @pytest.mark.parametrize("keep", [(16, 16), (8, 16), (16, 8), (8, 8), (4, 4)])
+    def test_sparse_vs_sparsified_spectrum(self, keep):
+        n = 256  # factors (16, 16)
+        u, k = rand((2, 2, n), 20), rand((2, n), 21)
+        y, kf_sp = m2.conv_sparse(u, k, *keep)
+        want = np.array(ref.fft_conv_kf(jnp.asarray(u), jnp.asarray(kf_sp.astype(np.complex64))))
+        np.testing.assert_allclose(np.array(y), want, **TOL)
+
+    def test_dense_pattern_recovers_exact_conv(self):
+        n = 256
+        u, k = rand((1, 1, n), 22), rand((1, n), 23)
+        y, _ = m2.conv_sparse(u, k, 16, 16)
+        want = np.array(ref.fft_conv(jnp.asarray(u), jnp.asarray(k)))
+        np.testing.assert_allclose(np.array(y), want, **TOL)
+
+    def test_sparse_preserves_kept_frequencies_exactly(self):
+        """Sparsification only *removes* frequencies: a pure tone whose
+        frequency lies in the kept block convolves exactly as in the dense
+        kernel (the (0, 0) layout slot — DC — is always kept)."""
+        n = 256
+        k = rand((1, n), 23)
+        u = np.ones((1, 1, n), dtype=np.float32)  # pure DC input
+        y_dense = np.array(m2.conv_r2c(u, k))
+        y_sparse, _ = m2.conv_sparse(u, k, 4, 4)
+        np.testing.assert_allclose(np.array(y_sparse), y_dense, **TOL)
+
+
+class TestMonarch3Kernel:
+    @settings(max_examples=6, deadline=None)
+    @given(logn=st.integers(min_value=7, max_value=12), seed=st.integers(0, 2**31))
+    def test_circular(self, logn, seed):
+        n = 1 << logn
+        u, k = rand((1, 2, n), seed), rand((2, n), seed + 1)
+        got = np.array(m3.conv3_r2c(u, k))
+        want = np.array(ref.fft_conv(jnp.asarray(u), jnp.asarray(k)))
+        np.testing.assert_allclose(got, want, **TOL)
+
+    @settings(max_examples=4, deadline=None)
+    @given(logn=st.integers(min_value=7, max_value=12), seed=st.integers(0, 2**31))
+    def test_causal(self, logn, seed):
+        n = 1 << logn
+        u, k = rand((1, 2, n), seed), rand((2, n), seed + 1)
+        got = np.array(m3.conv3_r2c(u, k, causal=True))
+        want = np.array(ref.fft_conv_causal(jnp.asarray(u), jnp.asarray(k)))
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_gated_causal(self):
+        n = 1024
+        u, v, w = (rand((1, 2, n), 30 + i) for i in range(3))
+        k = rand((2, n), 33)
+        got = np.array(m3.conv3_r2c(u, k, causal=True, gated_vw=(v, w)))
+        want = np.array(
+            ref.fft_conv_gated_causal(
+                jnp.asarray(u), jnp.asarray(v), jnp.asarray(w), jnp.asarray(k)
+            )
+        )
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_order2_order3_agree(self):
+        n = 2048
+        u, k = rand((1, 1, n), 40), rand((1, n), 41)
+        y2 = np.array(m2.conv_r2c(u, k))
+        y3 = np.array(m3.conv3_r2c(u, k))
+        np.testing.assert_allclose(y2, y3, **TOL)

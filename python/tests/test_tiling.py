@@ -1,0 +1,87 @@
+"""Tiling tests: the B_tile/H_tile knob (§3.1) must not change numerics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import monarch2 as m2
+from compile.kernels import monarch3 as m3
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+def run_m2(cfg, u, k):
+    fn = m2.build_conv_fn(cfg)
+    ops = list(m2.kernel_operands(cfg, k).values()) + list(
+        m2.constant_operands(cfg).values()
+    )
+    return np.array(fn(jnp.asarray(u), *[jnp.asarray(o) for o in ops]))
+
+
+class TestOrder2Tiling:
+    @pytest.mark.parametrize("bt,ht", [(1, 1), (1, 4), (2, 2), (4, 1), (0, 0)])
+    def test_tile_invariance(self, bt, ht):
+        """Every tile decomposition computes the identical convolution."""
+        b, h, n = 4, 4, 256
+        u, k = rand((b, h, n), 1), rand((h, n), 2)
+        cfg = m2.Monarch2Config(seq_len=n, input_len=n, b_tile=bt, h_tile=ht)
+        got = run_m2(cfg, u, k)
+        want = np.array(ref.fft_conv(jnp.asarray(u), jnp.asarray(k)))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_tile_must_divide(self):
+        cfg = m2.Monarch2Config(seq_len=64, input_len=64, b_tile=3, h_tile=1)
+        fn = m2.build_conv_fn(cfg)
+        ops = list(m2.kernel_operands(cfg, rand((4, 64), 0)).values()) + list(
+            m2.constant_operands(cfg).values()
+        )
+        with pytest.raises(ValueError):
+            fn(jnp.zeros((4, 4, 64)), *[jnp.asarray(o) for o in ops])
+
+    def test_tiled_causal_gated(self):
+        b, h, n = 2, 4, 128
+        u, v, w = (rand((b, h, n), i) for i in range(3))
+        k = rand((h, n), 9)
+        cfg = m2.Monarch2Config(seq_len=2 * n, input_len=n, gated=True,
+                                b_tile=1, h_tile=2)
+        fn = m2.build_conv_fn(cfg)
+        ops = list(m2.kernel_operands(cfg, k).values()) + list(
+            m2.constant_operands(cfg).values()
+        )
+        got = np.array(
+            fn(jnp.asarray(u), jnp.asarray(v), jnp.asarray(w),
+               *[jnp.asarray(o) for o in ops])
+        )
+        want = np.array(
+            ref.fft_conv_gated_causal(
+                jnp.asarray(u), jnp.asarray(v), jnp.asarray(w), jnp.asarray(k)
+            )
+        )
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_tiled_sparse_complex_path(self):
+        b, h, n = 2, 4, 256
+        u, k = rand((b, h, n), 5), rand((h, n), 6)
+        cfg = m2.Monarch2Config(seq_len=n, input_len=n, r2c=False,
+                                keep_rows=16, keep_cols=16, b_tile=1, h_tile=4)
+        got = run_m2(cfg, u, k)
+        want = np.array(ref.fft_conv(jnp.asarray(u), jnp.asarray(k)))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+class TestOrder3Tiling:
+    @pytest.mark.parametrize("bt,ht", [(1, 2), (2, 1), (0, 0)])
+    def test_tile_invariance(self, bt, ht):
+        b, h, n = 2, 2, 1024
+        u, k = rand((b, h, n), 3), rand((h, n), 4)
+        cfg = m3.Monarch3Config(seq_len=n, input_len=n, b_tile=bt, h_tile=ht)
+        fn = m3.build_conv_fn(cfg)
+        ops = list(m3.kernel_operands(cfg, k).values()) + list(
+            m3.constant_operands(cfg).values()
+        )
+        got = np.array(fn(jnp.asarray(u), *[jnp.asarray(o) for o in ops]))
+        want = np.array(ref.fft_conv(jnp.asarray(u), jnp.asarray(k)))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,56 @@
+//! Figure 4: cost model of order-p Monarch decompositions (Eq. 2).
+//!
+//! Prints the cost series for p in {2,3,4} across N = 256..4M on the A100
+//! profile (Table 19 constants), marks the best order per length, and
+//! asserts the paper's qualitative features: p=2 wins short, higher p wins
+//! at multi-million lengths, and small-factor/SRAM bumps appear where the
+//! paper draws them.
+
+use flashfftconv::bench::Table;
+use flashfftconv::costmodel::{self, A100};
+
+fn main() {
+    println!("\n=== Figure 4: Eq. 2 cost of order-p decompositions (A100 profile) ===");
+    let mut t = Table::new(&["N", "p=2", "p=3", "p=4", "best"]);
+    let mut crossover_p3 = None;
+    for logn in 8..=22u32 {
+        let n = 1usize << logn;
+        let costs: Vec<Option<f64>> = (2..=4)
+            .map(|p| (p <= logn as usize).then(|| costmodel::conv_cost(n, p, 1, 1, &A100)))
+            .collect();
+        let best = costmodel::best_order(n, &A100);
+        if best >= 3 && crossover_p3.is_none() {
+            crossover_p3 = Some(n);
+        }
+        let fmt = |c: Option<f64>| c.map(|v| format!("{v:.3e}")).unwrap_or_else(|| "-".into());
+        t.row(vec![
+            n.to_string(),
+            fmt(costs[0]),
+            fmt(costs[1]),
+            fmt(costs[2]),
+            format!("p={best}"),
+        ]);
+    }
+    t.print();
+
+    // Qualitative assertions (the figure's shape).
+    assert_eq!(costmodel::best_order(1024, &A100), 2, "p=2 must win at short N");
+    assert!(costmodel::best_order(1 << 22, &A100) >= 3, "higher order must win at 4M");
+    // Early bump: p=4 at N=256 decomposes below the matrix unit.
+    assert!(
+        costmodel::conv_cost(256, 4, 1, 1, &A100) > costmodel::conv_cost(256, 2, 1, 1, &A100)
+    );
+    println!(
+        "\ncrossover to p>=3 at N = {} (paper: between 32K and 64K for p=3's SRAM bump, \
+         higher orders at millions)",
+        crossover_p3.map(|n| n.to_string()).unwrap_or_else(|| ">4M".into())
+    );
+
+    println!("\nmeasured-constant profiles (Table 19):");
+    for hw in [&A100, &costmodel::H100, &costmodel::CPU] {
+        println!(
+            "  {:>5}: hbm {:.2e} B/s  sram {:.2e} B/s  matmul {:.2e} F/s  general {:.2e} F/s",
+            hw.name, hw.hbm_bw, hw.sram_bw, hw.matmul_flops, hw.general_flops
+        );
+    }
+}

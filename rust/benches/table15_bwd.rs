@@ -1,0 +1,35 @@
+//! Table 15: backward-pass benchmarks (du, dk from dy).
+//!
+//! The Monarch backward recomputes spectra instead of loading stored
+//! intermediates (§3.1) and routes du through another fused kernel call.
+
+use flashfftconv::bench::{fmt_ms, fmt_x, workloads, BenchConfig, Table};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    workloads::print_header(
+        "Table 15: conv backward (B=2, H=16)",
+        "paper (H100, B=64, H=768): 3.2x @256 -> 1.3x @4M",
+    );
+    let runtime = workloads::bench_runtime().expect("artifacts present");
+
+    let paper = [(256usize, 3.24), (1024, 4.37), (4096, 4.05), (16384, 2.52)];
+    let mut table =
+        Table::new(&["N", "baseline_ms", "monarch_ms", "speedup", "paper_speedup"]);
+    for (n, p) in paper {
+        let base =
+            workloads::time_artifact(&runtime, &format!("conv_bwd_baseline_n{n}"), &cfg).unwrap();
+        let mon =
+            workloads::time_artifact(&runtime, &format!("conv_bwd_monarch_n{n}"), &cfg).unwrap();
+        if let (Some(b), Some(m)) = (base, mon) {
+            table.row(vec![
+                n.to_string(),
+                fmt_ms(b.median_ms()),
+                fmt_ms(m.median_ms()),
+                fmt_x(b.median_ns / m.median_ns),
+                format!("{p:.2}x"),
+            ]);
+        }
+    }
+    table.print();
+}

@@ -1,0 +1,68 @@
+//! Tables 16/17: memory footprint model, plain and gated convolutions.
+//!
+//! Reproduces the paper's memory-reduction columns from the component
+//! model in `coordinator::memory` (fusion keeps only the output resident;
+//! recomputation drops backward intermediates; past the fusion bound one
+//! packed intermediate spills). Scaled to the paper's B=64, H=768.
+
+use flashfftconv::bench::Table;
+use flashfftconv::coordinator::memory;
+use flashfftconv::costmodel::A100;
+
+fn gb(x: u64) -> String {
+    format!("{:.2}", x as f64 / 1e9)
+}
+
+fn main() {
+    println!("\n=== Table 16: conv memory (B=64, H=768, model on A100 profile) ===");
+    println!("paper reductions: 8.2x @256, 7.6x @4K, 6.6x @32K, 2.64x @64K+");
+    let paper16 = [
+        (256usize, 8.21),
+        (1024, 7.73),
+        (4096, 7.61),
+        (16384, 7.21),
+        (32768, 6.57),
+        (65536, 2.64),
+        (1 << 20, 2.64),
+        (1 << 22, 2.63),
+    ];
+    let mut t = Table::new(&["N", "baseline_GB", "flash_GB", "reduction", "paper"]);
+    for (n, p) in paper16 {
+        let b = memory::baseline_conv_bytes(64, 768, n, false);
+        let f = memory::flash_conv_bytes(64, 768, n, false, &A100);
+        t.row(vec![
+            n.to_string(),
+            gb(b),
+            gb(f),
+            format!("{:.2}x", b as f64 / f as f64),
+            format!("{p:.2}x"),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== Table 17: gated conv memory ===");
+    println!("paper reductions: 6.6x @256, 6.3x @4K, 2.82x @64K+");
+    let paper17 =
+        [(256usize, 6.65), (4096, 6.35), (32768, 5.87), (65536, 2.82), (1 << 22, 2.81)];
+    let mut t = Table::new(&["N", "baseline_GB", "flash_GB", "reduction", "paper"]);
+    for (n, p) in paper17 {
+        let b = memory::baseline_conv_bytes(64, 768, n, true);
+        let f = memory::flash_conv_bytes(64, 768, n, true, &A100);
+        t.row(vec![
+            n.to_string(),
+            gb(b),
+            gb(f),
+            format!("{:.2}x", b as f64 / f as f64),
+            format!("{p:.2}x"),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== Table 7 (memory column): partial-conv training footprint ===");
+    println!("paper (Hyena-s-8K): 32.5G @8K filter -> 5.8G @256 filter");
+    let mut t = Table::new(&["filter_len", "modeled_GB"]);
+    for fl in [8192usize, 4096, 2048, 1024, 512, 256] {
+        t.row(vec![fl.to_string(), gb(memory::partial_train_bytes(8, 864, 8192, fl))]);
+    }
+    t.print();
+}

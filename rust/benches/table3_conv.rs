@@ -1,0 +1,111 @@
+//! Table 3 / 11 / 13: forward-pass convolution benchmarks.
+//!
+//! For each sequence length: the fused Monarch kernel (FlashFFTConv) vs
+//! the jnp.fft baseline artifact ("PyTorch" analogue) vs the native-Rust
+//! fused FFT conv ("fusion-only / cuFFTdx" ablation row) vs the
+//! no-domain-opts complex-path kernel. Causal (input = FFT/2) rows cover
+//! Table 13. Paper reference ratios are printed alongside.
+
+use flashfftconv::bench::{bench, fmt_ms, fmt_x, workloads, BenchConfig, Table};
+use flashfftconv::fft;
+use flashfftconv::util::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    workloads::print_header(
+        "Table 3/11: conv forward (B=2, H=16)",
+        "paper (H100, B=64, H=768): speedups 6.5x @1K -> 1.3x @4M, monarch vs torch",
+    );
+    let runtime = workloads::bench_runtime().expect("artifacts present (make artifacts)");
+
+    let paper_speedup = [
+        (256usize, 4.69),
+        (1024, 6.61),
+        (4096, 4.87),
+        (16384, 3.09),
+        (65536, 2.08),
+    ];
+
+    let mut table = Table::new(&[
+        "N", "baseline_ms", "monarch_ms", "fusion_only_ms", "speedup", "paper_speedup",
+    ]);
+    for (n, paper) in paper_speedup {
+        let base = workloads::time_artifact(&runtime, &format!("conv_fwd_baseline_n{n}"), &cfg)
+            .unwrap();
+        let mon =
+            workloads::time_artifact(&runtime, &format!("conv_fwd_monarch_n{n}"), &cfg).unwrap();
+        // Fusion-only ablation: single-pass native FFT conv over the same
+        // B*H sequences (general arithmetic, no matrix decomposition).
+        let fusion_ms = if n <= 16384 {
+            let mut rng = Rng::new(n as u64);
+            let rows: Vec<(Vec<f64>, Vec<f64>)> = (0..32)
+                .map(|_| (fft::random_signal(n, &mut rng), fft::random_signal(n, &mut rng)))
+                .collect();
+            let r = bench("fusion", &cfg, || {
+                for (u, k) in &rows {
+                    std::hint::black_box(fft::fft_conv(u, k));
+                }
+            });
+            Some(r.median_ms())
+        } else {
+            None
+        };
+        if let (Some(b), Some(m)) = (base, mon) {
+            table.row(vec![
+                n.to_string(),
+                fmt_ms(b.median_ms()),
+                fmt_ms(m.median_ms()),
+                fusion_ms.map(fmt_ms).unwrap_or_else(|| "-".into()),
+                fmt_x(b.median_ns / m.median_ns),
+                format!("{paper:.2}x"),
+            ]);
+        }
+    }
+    table.print();
+
+    workloads::print_header(
+        "Table 13: causal conv (input = FFT size / 2)",
+        "paper: 4.6x @256 -> 1.4x @4M",
+    );
+    let mut t13 = Table::new(&["L", "baseline_ms", "monarch_ms", "speedup"]);
+    for l in [128usize, 512, 2048, 8192, 32768] {
+        let base =
+            workloads::time_artifact(&runtime, &format!("conv_causal_baseline_n{l}"), &cfg)
+                .unwrap();
+        let mon = workloads::time_artifact(&runtime, &format!("conv_causal_monarch_n{l}"), &cfg)
+            .unwrap();
+        if let (Some(b), Some(m)) = (base, mon) {
+            t13.row(vec![
+                l.to_string(),
+                fmt_ms(b.median_ms()),
+                fmt_ms(m.median_ms()),
+                fmt_x(b.median_ns / m.median_ns),
+            ]);
+        }
+    }
+    t13.print();
+
+    workloads::print_header(
+        "Table 3 ablations (N=1024/4096)",
+        "r2c packing halves the transform; karatsuba cuts matmuls 25%",
+    );
+    let mut abl = Table::new(&["variant", "N", "ms", "vs_full_monarch"]);
+    for n in [1024usize, 4096] {
+        let full = workloads::time_artifact(&runtime, &format!("conv_fwd_monarch_n{n}"), &cfg)
+            .unwrap()
+            .unwrap();
+        for tag in ["basic", "r2c4m"] {
+            if let Some(r) =
+                workloads::time_artifact(&runtime, &format!("conv_abl_{tag}_n{n}"), &cfg).unwrap()
+            {
+                abl.row(vec![
+                    tag.to_string(),
+                    n.to_string(),
+                    fmt_ms(r.median_ms()),
+                    fmt_x(r.median_ns / full.median_ns),
+                ]);
+            }
+        }
+    }
+    abl.print();
+}

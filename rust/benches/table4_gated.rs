@@ -1,0 +1,62 @@
+//! Table 4 / 12: gated convolution `y = v * ((u*w) conv k)` benchmarks.
+//!
+//! The fused kernel folds both gating multiplies into the convolution
+//! (no extra I/O); the baseline materializes them — the paper's largest
+//! speedups (up to 7.9x) come from this fusion.
+
+use flashfftconv::bench::{fmt_ms, fmt_x, workloads, BenchConfig, Table};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    workloads::print_header(
+        "Table 4/12: gated conv forward (B=2, H=16)",
+        "paper (H100, B=64, H=768): 5.6x @256, 7.9x @1K, 6.6x @4K, 1.3x @4M",
+    );
+    let runtime = workloads::bench_runtime().expect("artifacts present");
+
+    let paper = [(256usize, 5.76), (1024, 7.81), (4096, 6.65), (16384, 3.28), (65536, 2.34)];
+    let mut table =
+        Table::new(&["N", "baseline_ms", "monarch_ms", "speedup", "paper_speedup"]);
+    for (n, p) in paper {
+        let base = workloads::time_artifact(&runtime, &format!("conv_gated_baseline_n{n}"), &cfg)
+            .unwrap();
+        let mon =
+            workloads::time_artifact(&runtime, &format!("conv_gated_monarch_n{n}"), &cfg).unwrap();
+        if let (Some(b), Some(m)) = (base, mon) {
+            table.row(vec![
+                n.to_string(),
+                fmt_ms(b.median_ms()),
+                fmt_ms(m.median_ms()),
+                fmt_x(b.median_ns / m.median_ns),
+                format!("{p:.2}x"),
+            ]);
+        }
+    }
+    table.print();
+
+    // Fusion benefit: gated overhead of each implementation relative to its
+    // own plain conv — the baseline pays for gating, the fused kernel ~not.
+    workloads::print_header(
+        "Gating overhead (gated_ms / plain_ms per implementation)",
+        "fused gating should cost ~nothing; unfused gating adds pointwise I/O passes",
+    );
+    let mut t = Table::new(&["N", "baseline_overhead", "monarch_overhead"]);
+    for n in [1024usize, 4096, 16384] {
+        let gb = workloads::time_artifact(&runtime, &format!("conv_gated_baseline_n{n}"), &cfg)
+            .unwrap();
+        let pb =
+            workloads::time_artifact(&runtime, &format!("conv_fwd_baseline_n{n}"), &cfg).unwrap();
+        let gm =
+            workloads::time_artifact(&runtime, &format!("conv_gated_monarch_n{n}"), &cfg).unwrap();
+        let pm =
+            workloads::time_artifact(&runtime, &format!("conv_fwd_monarch_n{n}"), &cfg).unwrap();
+        if let (Some(gb), Some(pb), Some(gm), Some(pm)) = (gb, pb, gm, pm) {
+            t.row(vec![
+                n.to_string(),
+                fmt_x(gb.median_ns / pb.median_ns),
+                fmt_x(gm.median_ns / pm.median_ns),
+            ]);
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,49 @@
+//! Table 5: end-to-end model throughput, FlashFFTConv vs baseline conv.
+//!
+//! Each model of the zoo (M2-BERT-128 / Hyena-4K / SaShiMi-longconv /
+//! HyenaDNA-16K analogues) exists in two compiled variants differing only
+//! in the convolution implementation; throughput ratio per model is the
+//! paper's speedup column.
+
+use flashfftconv::bench::{fmt_x, workloads, BenchConfig, Table};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    workloads::print_header(
+        "Table 5: end-to-end model forward throughput",
+        "paper speedups: M2-BERT 1.9x, Hyena-4K 1.7x, Path-X longconv 2.4x, SaShiMi 1.3x, HyenaDNA 4.4x",
+    );
+    let runtime = workloads::bench_runtime().expect("artifacts present");
+
+    let zoo = [
+        ("m2bert", "M2-BERT-base (seq 128)", 1.9),
+        ("hyena4k", "Hyena-s-4K", 1.7),
+        ("sashimi", "SaShiMi longconv (seq 8K)", 1.3),
+        ("hyenadna", "HyenaDNA (seq 16K)", 4.4),
+    ];
+    let mut t = Table::new(&[
+        "model", "baseline_ms", "monarch_ms", "seqs_per_s", "speedup", "paper_speedup",
+    ]);
+    for (tag, label, paper) in zoo {
+        let base =
+            workloads::time_artifact(&runtime, &format!("e2e_{tag}_baseline"), &cfg).unwrap();
+        let mon = workloads::time_artifact(&runtime, &format!("e2e_{tag}_monarch"), &cfg).unwrap();
+        if let (Some(b), Some(m)) = (base, mon) {
+            let batch = runtime
+                .manifest()
+                .get(&format!("e2e_{tag}_monarch"))
+                .unwrap()
+                .meta_usize("batch")
+                .unwrap_or(1);
+            t.row(vec![
+                label.to_string(),
+                format!("{:.1}", b.median_ms()),
+                format!("{:.1}", m.median_ms()),
+                format!("{:.2}", batch as f64 / (m.median_ns / 1e9)),
+                fmt_x(b.median_ns / m.median_ns),
+                format!("{paper:.1}x"),
+            ]);
+        }
+    }
+    t.print();
+}

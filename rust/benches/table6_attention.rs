@@ -1,0 +1,53 @@
+//! Table 6: Hyena + FlashFFTConv vs GPT + attention across sequence lengths.
+//!
+//! Measures matched-dimension models' forward time and combines it with
+//! the cost model's FLOP accounting (§C.6: parametric FLOPs `2*T*P` plus
+//! non-parametric mixer FLOPs) to reproduce the paper's argument: the
+//! convolution model wins on *throughput* at long L despite lower
+//! utilization, because it incurs asymptotically fewer mixer FLOPs.
+
+use flashfftconv::bench::{fmt_x, workloads, BenchConfig, Table};
+use flashfftconv::costmodel;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    workloads::print_header(
+        "Table 6: Hyena(FlashFFTConv) vs GPT(attention), matched dims",
+        "paper: speedup 1.1x @2K -> 1.5x @16K (A100, 2.7B models)",
+    );
+    let runtime = workloads::bench_runtime().expect("artifacts present");
+
+    let dims = 64usize;
+    let mut t = Table::new(&[
+        "L",
+        "attn_ms",
+        "hyena_ms",
+        "speedup",
+        "attn_mixer_GF",
+        "conv_mixer_GF",
+        "flop_ratio",
+    ]);
+    for l in [256usize, 1024, 4096] {
+        let attn =
+            workloads::time_artifact(&runtime, &format!("t6_attention_n{l}"), &cfg).unwrap();
+        let hyena = workloads::time_artifact(&runtime, &format!("t6_hyena_n{l}"), &cfg).unwrap();
+        if let (Some(a), Some(h)) = (attn, hyena) {
+            let attn_f = costmodel::attention_flops(l, dims, 1) * 2.0; // 2 layers
+            let conv_f = costmodel::conv_flops(2 * l, 2, 1, dims) * 2.0;
+            t.row(vec![
+                l.to_string(),
+                format!("{:.1}", a.median_ms()),
+                format!("{:.1}", h.median_ms()),
+                fmt_x(a.median_ns / h.median_ns),
+                format!("{:.3}", attn_f / 1e9),
+                format!("{:.3}", conv_f / 1e9),
+                format!("{:.2}", attn_f / conv_f),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nshape check: the speedup column should grow with L (attention's mixer \
+         FLOPs are quadratic, the conv's are ~N^1.5 at order 2)."
+    );
+}

@@ -1,0 +1,78 @@
+//! Table 9/10: frequency-sparse convolutions — speedup and quality.
+//!
+//! Times the block-skipping sparse kernels against the dense (s0) kernel
+//! (Table 9's speedup row), prints the modeled FLOP fractions (Appendix
+//! A.4 / Table 10), and evaluates the sparsified LM artifacts (quality).
+
+use flashfftconv::bench::{fmt_ms, fmt_x, workloads, BenchConfig, Table};
+use flashfftconv::runtime::HostTensor;
+use flashfftconv::trainer::data::TokenGen;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    workloads::print_header(
+        "Table 9: frequency-sparse conv speedup (N=4096)",
+        "paper: 1.0x / 1.2x / 1.3x / 1.4x / 1.5x / 1.8x at S = 0/.50/.75/.79/.84/.91",
+    );
+    let runtime = workloads::bench_runtime().expect("artifacts present");
+
+    let paper = [("s0", 1.0), ("s50", 1.2), ("s75", 1.3), ("s84", 1.5), ("s91", 1.8), ("s94", f64::NAN)];
+    let mut t = Table::new(&[
+        "pattern", "sparsity", "flop_frac", "ms", "speedup", "paper_speedup",
+    ]);
+    let mut base = None;
+    for (tag, p) in paper {
+        let name = format!("conv_sparse_{tag}_n4096");
+        let Some(spec) = runtime.manifest().get(&name).ok().cloned() else { continue };
+        let Some(r) = workloads::time_artifact(&runtime, &name, &cfg).unwrap() else { continue };
+        let ms = r.median_ms();
+        let b = *base.get_or_insert(ms);
+        t.row(vec![
+            tag.to_string(),
+            spec.meta("sparsity").unwrap_or("-").to_string(),
+            spec.meta("flop_fraction").unwrap_or("-").to_string(),
+            fmt_ms(ms),
+            fmt_x(b / ms),
+            if p.is_nan() { "-".into() } else { format!("{p:.1}x") },
+        ]);
+    }
+    t.print();
+
+    workloads::print_header(
+        "Table 9 quality row: sparsified-model loss",
+        "paper: PPL 2.91 flat to 79% sparsity, 2.98 at 91%",
+    );
+    let mut q = Table::new(&["artifact", "sparsity", "loss", "ppl"]);
+    let mut names: Vec<String> = vec!["lm_eval_kmask".into()];
+    names.extend(
+        runtime.manifest().artifacts.keys().filter(|n| n.starts_with("lm_eval_sparse_")).cloned(),
+    );
+    for name in names {
+        let mut art = runtime.load(&name).unwrap();
+        let spec = art.spec().clone();
+        let (batch, seq, vocab) = (
+            spec.meta_usize("batch").unwrap(),
+            spec.meta_usize("seq_len").unwrap(),
+            spec.meta_usize("vocab").unwrap(),
+        );
+        let mut gen = TokenGen::new(vocab, 5);
+        let mut total = 0.0;
+        for _ in 0..4 {
+            let tokens = HostTensor::i32(gen.batch(batch, seq + 1), &[batch, seq + 1]);
+            let outs = if spec.inputs.iter().any(|i| i.spec.name == "kmask") {
+                art.call(&[tokens, HostTensor::f32(vec![1.0; seq], &[seq])]).unwrap()
+            } else {
+                art.call(&[tokens]).unwrap()
+            };
+            total += outs[0].item();
+        }
+        let loss = total / 4.0;
+        q.row(vec![
+            name,
+            spec.meta("sparsity").unwrap_or("0.0000").to_string(),
+            format!("{loss:.4}"),
+            format!("{:.2}", loss.exp()),
+        ]);
+    }
+    q.print();
+}

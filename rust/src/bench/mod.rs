@@ -1,0 +1,218 @@
+//! Micro-benchmark harness substrate (criterion is unavailable offline).
+//!
+//! Adaptive-iteration timing with warmup, summary statistics, and aligned
+//! table rendering — the shared engine behind every `cargo bench` target
+//! (`rust/benches/*`, one per paper table/figure).
+
+pub mod workloads;
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics for one benchmark case (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    /// Mean in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Median in milliseconds.
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup iterations (not recorded).
+    pub warmup: usize,
+    /// Measured iterations.
+    pub iters: usize,
+    /// Stop early once this much time was spent measuring.
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Sized so the full 9-target `cargo bench` sweep completes in
+        // ~10 minutes on the single-core testbed; raise FFC_BENCH_ITERS
+        // for tighter medians.
+        Self { warmup: 2, iters: 5, max_time: Duration::from_secs(12) }
+    }
+}
+
+impl BenchConfig {
+    /// Config from env (`FFC_BENCH_ITERS`, `FFC_BENCH_MAX_SECS`) — lets CI
+    /// shrink runs without touching code.
+    pub fn from_env() -> Self {
+        let mut c = Self::default();
+        if let Ok(v) = std::env::var("FFC_BENCH_ITERS") {
+            if let Ok(n) = v.parse() {
+                c.iters = n;
+            }
+        }
+        if let Ok(v) = std::env::var("FFC_BENCH_MAX_SECS") {
+            if let Ok(s) = v.parse() {
+                c.max_time = Duration::from_secs_f64(s);
+            }
+        }
+        c
+    }
+}
+
+/// Time `f` under `cfg`, returning summary stats.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    let start = Instant::now();
+    for _ in 0..cfg.iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if start.elapsed() > cfg.max_time && samples.len() >= 3 {
+            break;
+        }
+    }
+    summarize(name, samples)
+}
+
+fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let median = if n % 2 == 1 {
+        samples[n / 2]
+    } else {
+        0.5 * (samples[n / 2 - 1] + samples[n / 2])
+    };
+    let p95 = samples[((n as f64 * 0.95) as usize).min(n - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        median_ns: median,
+        min_ns: samples[0],
+        max_ns: samples[n - 1],
+        p95_ns: p95,
+    }
+}
+
+/// Render an aligned table (markdown-ish) to stdout.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push_str(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format milliseconds with adaptive precision.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms < 0.1 {
+        format!("{ms:.4}")
+    } else if ms < 10.0 {
+        format!("{ms:.3}")
+    } else {
+        format!("{ms:.1}")
+    }
+}
+
+/// Format a speedup ratio.
+pub fn fmt_x(r: f64) -> String {
+    format!("{r:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let cfg = BenchConfig { warmup: 1, iters: 5, max_time: Duration::from_secs(5) };
+        let r = bench("spin", &cfg, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+        assert!(r.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn median_of_even_samples() {
+        let r = summarize("x", vec![1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(r.median_ns, 2.5);
+        assert_eq!(r.min_ns, 1.0);
+        assert_eq!(r.max_ns, 4.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "ms"]);
+        t.row(vec!["short".into(), "1.0".into()]);
+        t.row(vec!["a-much-longer-name".into(), "22.5".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ms(0.01234), "0.0123");
+        assert_eq!(fmt_ms(1.234), "1.234");
+        assert_eq!(fmt_ms(123.4), "123.4");
+        assert_eq!(fmt_x(2.0), "2.00x");
+    }
+}

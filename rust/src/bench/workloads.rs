@@ -1,0 +1,75 @@
+//! Shared benchmark workloads: time compiled artifacts with random inputs.
+//!
+//! Used by every `cargo bench` target (one per paper table/figure). Inputs
+//! are generated once per artifact from its manifest signature and reused
+//! across iterations, so the timing loop measures the artifact call alone.
+
+use crate::bench::{bench, BenchConfig, BenchResult};
+use crate::runtime::{Artifact, HostTensor, Runtime};
+use crate::util::manifest::DType;
+use crate::util::Rng;
+
+/// Deterministic random runtime inputs matching an artifact's signature.
+pub fn random_inputs(art: &Artifact, seed: u64) -> Vec<HostTensor> {
+    let mut rng = Rng::new(seed);
+    let spec = art.spec();
+    spec.runtime_input_indices()
+        .into_iter()
+        .map(|idx| {
+            let t = &spec.inputs[idx].spec;
+            match t.dtype {
+                DType::F32 => {
+                    if t.name == "kmask" {
+                        HostTensor::f32(vec![1.0; t.numel()], &t.shape)
+                    } else {
+                        HostTensor::f32(rng.normal_vec(t.numel()), &t.shape)
+                    }
+                }
+                DType::I32 => {
+                    // Token inputs: stay within the model's vocabulary.
+                    let hi = spec.meta_usize("vocab").unwrap_or(2) as u64;
+                    HostTensor::i32(
+                        (0..t.numel()).map(|_| rng.below(hi.max(2)) as i32).collect(),
+                        &t.shape,
+                    )
+                }
+            }
+        })
+        .collect()
+}
+
+/// Load and time one artifact; returns `None` (with a notice) if absent.
+pub fn time_artifact(
+    runtime: &Runtime,
+    name: &str,
+    cfg: &BenchConfig,
+) -> crate::Result<Option<BenchResult>> {
+    if runtime.manifest().get(name).is_err() {
+        eprintln!("  (skipping {name}: not in manifest)");
+        return Ok(None);
+    }
+    let mut art = runtime.load(name)?;
+    let inputs = random_inputs(&art, 0xBEEF ^ name.len() as u64);
+    // One untimed call to surface errors before the timing loop.
+    art.call(&inputs)?;
+    let result = bench(name, cfg, || {
+        art.call(&inputs).expect("bench call");
+    });
+    Ok(Some(result))
+}
+
+/// Open the artifact runtime for benches (artifact dir from env or default).
+pub fn bench_runtime() -> crate::Result<Runtime> {
+    let dir = std::env::var("FFC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    Runtime::new(dir)
+}
+
+/// Standard bench header: prints context so logs are self-describing.
+pub fn print_header(table: &str, note: &str) {
+    println!("\n=== {table} ===");
+    println!("{note}");
+    println!(
+        "(testbed: single-core CPU PJRT, interpret-mode Pallas; compare *shape* — \
+         who wins and by roughly what factor — not absolute ms; see DESIGN.md §2/§3)"
+    );
+}

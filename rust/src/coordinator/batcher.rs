@@ -1,0 +1,212 @@
+//! Dynamic batching: pack variable-arrival requests into fixed-shape calls.
+//!
+//! Compiled artifacts have static (B, H, N) shapes; the batcher accumulates
+//! per-bucket queues and flushes when a batch fills or its deadline
+//! expires — the standard serving trade between latency and utilization
+//! (vLLM-style continuous batching, adapted to fixed shapes). Pure logic;
+//! the [`super::service`] owns the clock and the execution.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Flush policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Rows per compiled batch (the artifact's B dimension).
+    pub batch_size: usize,
+    /// Max time the oldest request may wait before a partial flush.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { batch_size: 2, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// One queued request (a single batch row).
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub id: u64,
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// A flushed batch: row payloads plus how many rows are real (the rest of
+/// the fixed-shape batch is padding).
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub rows: Vec<Pending<T>>,
+    pub capacity: usize,
+}
+
+impl<T> Batch<T> {
+    /// Real (non-padding) rows.
+    pub fn occupancy(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Fraction of the compiled batch doing useful work.
+    pub fn utilization(&self) -> f64 {
+        self.rows.len() as f64 / self.capacity as f64
+    }
+}
+
+/// Per-bucket dynamic batcher.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queue: VecDeque<Pending<T>>,
+    next_id: u64,
+    flushed_batches: u64,
+    flushed_rows: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.batch_size >= 1);
+        Self { policy, queue: VecDeque::new(), next_id: 0, flushed_batches: 0, flushed_rows: 0 }
+    }
+
+    /// Enqueue a request; returns its id.
+    pub fn push(&mut self, payload: T, now: Instant) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Pending { id, payload, enqueued: now });
+        id
+    }
+
+    /// Queue depth.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should we flush now? Full batch, or deadline hit on the oldest row.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.batch_size {
+            return true;
+        }
+        match self.queue.front() {
+            Some(p) => now.duration_since(p.enqueued) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the current queue must flush (for scheduler sleeps).
+    pub fn deadline_in(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|p| {
+            self.policy
+                .max_wait
+                .checked_sub(now.duration_since(p.enqueued))
+                .unwrap_or(Duration::ZERO)
+        })
+    }
+
+    /// Flush up to one batch if ready; `None` otherwise.
+    pub fn flush(&mut self, now: Instant) -> Option<Batch<T>> {
+        if !self.ready(now) {
+            return None;
+        }
+        let take = self.queue.len().min(self.policy.batch_size);
+        let rows: Vec<Pending<T>> = self.queue.drain(..take).collect();
+        self.flushed_batches += 1;
+        self.flushed_rows += rows.len() as u64;
+        Some(Batch { rows, capacity: self.policy.batch_size })
+    }
+
+    /// (batches, rows) flushed so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.flushed_batches, self.flushed_rows)
+    }
+
+    /// Mean rows per flushed batch (batching efficiency).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.flushed_batches == 0 {
+            return 0.0;
+        }
+        self.flushed_rows as f64 / self.flushed_batches as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(n: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy { batch_size: n, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(policy(2, 1000));
+        let t = Instant::now();
+        b.push(1, t);
+        assert!(!b.ready(t));
+        b.push(2, t);
+        assert!(b.ready(t));
+        let batch = b.flush(t).unwrap();
+        assert_eq!(batch.occupancy(), 2);
+        assert!((batch.utilization() - 1.0).abs() < 1e-12);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_partial_on_deadline() {
+        let mut b = Batcher::new(policy(4, 5));
+        let t0 = Instant::now();
+        b.push("x", t0);
+        assert!(b.flush(t0).is_none());
+        let later = t0 + Duration::from_millis(6);
+        let batch = b.flush(later).unwrap();
+        assert_eq!(batch.occupancy(), 1);
+        assert_eq!(batch.capacity, 4);
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let mut b = Batcher::new(policy(8, 1));
+        let t = Instant::now();
+        assert_eq!(b.push((), t), 0);
+        assert_eq!(b.push((), t), 1);
+        assert_eq!(b.push((), t), 2);
+    }
+
+    #[test]
+    fn overflow_leaves_remainder_queued() {
+        let mut b = Batcher::new(policy(2, 1000));
+        let t = Instant::now();
+        for i in 0..5 {
+            b.push(i, t);
+        }
+        let batch = b.flush(t).unwrap();
+        assert_eq!(batch.occupancy(), 2);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn deadline_countdown() {
+        let mut b = Batcher::new(policy(4, 10));
+        let t0 = Instant::now();
+        assert!(b.deadline_in(t0).is_none());
+        b.push((), t0);
+        let d = b.deadline_in(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut b = Batcher::new(policy(2, 0));
+        let t = Instant::now();
+        b.push(0, t);
+        b.push(1, t);
+        b.flush(t).unwrap();
+        b.push(2, t);
+        b.flush(t + Duration::from_millis(1)).unwrap();
+        assert_eq!(b.stats(), (2, 3));
+        assert!((b.mean_occupancy() - 1.5).abs() < 1e-12);
+    }
+}

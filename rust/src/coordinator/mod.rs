@@ -1,0 +1,24 @@
+//! L3 coordinator: the system the paper wraps around the kernel.
+//!
+//! FlashFFTConv's contribution is mostly at the kernel layer, so the paper
+//! prescribes a serving-shaped coordinator (DESIGN.md §4): route incoming
+//! convolution work to the right compiled artifact by sequence length,
+//! batch it dynamically, pick the Monarch order via the §3.2 cost model,
+//! account memory (Tables 16/17), and manage the two §3.3 extensions —
+//! partial convolutions (sliding-window length extension) and
+//! frequency-sparse convolutions (Table 10 block patterns).
+
+pub mod batcher;
+pub mod memory;
+pub mod partial;
+pub mod router;
+pub mod scheduler;
+pub mod service;
+pub mod sparse;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use memory::MemoryTracker;
+pub use router::Router;
+pub use scheduler::Scheduler;
+pub use service::ConvService;
+pub use sparse::SparsityPattern;

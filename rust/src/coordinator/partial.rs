@@ -1,0 +1,171 @@
+//! Partial convolutions: filter truncation + sliding-window extension.
+//!
+//! §3.3/§4.3 of the paper: a model trained with a (possibly truncated)
+//! filter of length `Lk` can be *extended* to sequences far longer than
+//! its training context by sliding its window — the mechanism behind the
+//! HyenaDNA 1M -> 4M extension (Table 8). This module owns the pure
+//! planning logic (window layout, which positions each window scores) and
+//! the filter-mask construction for the `kmask`-taking eval artifacts
+//! (Table 7's truncation sweep).
+
+use anyhow::bail;
+
+/// One evaluation window over a long sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Window {
+    /// Start offset into the long sequence.
+    pub start: usize,
+    /// Positions `[score_from, start + context)` are scored by this window
+    /// (earlier positions are context only — already scored by a
+    /// previous window).
+    pub score_from: usize,
+}
+
+/// Sliding-window extension plan.
+#[derive(Debug, Clone)]
+pub struct ExtensionPlan {
+    /// Model context length (the window size W).
+    pub context: usize,
+    /// Stride between window starts (W/2 by default: every scored position
+    /// sees at least W/2 tokens of history).
+    pub stride: usize,
+    pub windows: Vec<Window>,
+    pub total_len: usize,
+}
+
+impl ExtensionPlan {
+    /// Plan windows covering a sequence of `total_len` tokens.
+    pub fn new(total_len: usize, context: usize, stride: usize) -> crate::Result<Self> {
+        if context == 0 || stride == 0 || stride > context {
+            bail!("invalid window plan: context={context} stride={stride}");
+        }
+        if total_len < context {
+            bail!("sequence ({total_len}) shorter than the model context ({context})");
+        }
+        let mut windows = vec![Window { start: 0, score_from: 0 }];
+        let mut pos = 0usize;
+        while pos + context < total_len {
+            let next = (pos + stride).min(total_len - context);
+            windows.push(Window { start: next, score_from: pos + context });
+            pos = next;
+        }
+        Ok(Self { context, stride, windows, total_len })
+    }
+
+    /// Every position scored exactly once (invariant; property-tested).
+    pub fn scored_positions(&self) -> Vec<(usize, usize)> {
+        self.windows
+            .iter()
+            .map(|w| (w.score_from, (w.start + self.context).min(self.total_len)))
+            .collect()
+    }
+
+    /// Number of artifact calls the plan needs.
+    pub fn calls(&self) -> usize {
+        self.windows.len()
+    }
+
+    /// Combine per-window mean losses into a sequence-level mean,
+    /// weighting each window by the number of positions it scores.
+    pub fn combine_losses(&self, window_losses: &[f64]) -> f64 {
+        assert_eq!(window_losses.len(), self.windows.len());
+        let spans = self.scored_positions();
+        let mut total = 0.0;
+        let mut count = 0usize;
+        for (loss, (a, b)) in window_losses.iter().zip(spans) {
+            let n = b - a;
+            total += loss * n as f64;
+            count += n;
+        }
+        total / count as f64
+    }
+}
+
+/// Build a filter mask for the `kmask` eval artifacts: ones for the first
+/// `keep` taps, zeros after (Table 7's partial-convolution truncation).
+pub fn filter_mask(filter_len: usize, keep: usize) -> Vec<f32> {
+    (0..filter_len).map(|i| if i < keep { 1.0 } else { 0.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn single_window_when_exact() {
+        let p = ExtensionPlan::new(1024, 1024, 512).unwrap();
+        assert_eq!(p.calls(), 1);
+        assert_eq!(p.scored_positions(), vec![(0, 1024)]);
+    }
+
+    #[test]
+    fn windows_tile_the_sequence() {
+        let p = ExtensionPlan::new(4096, 1024, 512).unwrap();
+        let spans = p.scored_positions();
+        assert_eq!(spans.first().unwrap().0, 0);
+        assert_eq!(spans.last().unwrap().1, 4096);
+        for w in spans.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "gap/overlap between {:?} and {:?}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn coverage_property() {
+        prop::forall(
+            "extension plan covers every position exactly once",
+            11,
+            prop::default_cases(),
+            |rng| {
+                let context = prop::gen::pow2(rng, 4, 8);
+                let stride = context / 2;
+                let total = context + prop::gen::index(rng, 0, 4 * context);
+                (total, context, stride)
+            },
+            |&(total, context, stride)| {
+                let p = match ExtensionPlan::new(total, context, stride) {
+                    Ok(p) => p,
+                    Err(_) => return false,
+                };
+                let spans = p.scored_positions();
+                let mut covered = vec![0u8; total];
+                for (a, b) in spans {
+                    for c in covered.iter_mut().take(b).skip(a) {
+                        *c += 1;
+                    }
+                }
+                covered.iter().all(|&c| c == 1)
+            },
+        );
+    }
+
+    #[test]
+    fn windows_fit_in_sequence() {
+        let p = ExtensionPlan::new(10_000, 512, 256).unwrap();
+        for w in &p.windows {
+            assert!(w.start + p.context <= p.total_len);
+        }
+    }
+
+    #[test]
+    fn loss_combination_weighted() {
+        let p = ExtensionPlan::new(1536, 1024, 512).unwrap();
+        // Window 0 scores 1024 positions, window 1 scores 512.
+        assert_eq!(p.calls(), 2);
+        let combined = p.combine_losses(&[1.0, 4.0]);
+        assert!((combined - (1024.0 + 4.0 * 512.0) / 1536.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_plans() {
+        assert!(ExtensionPlan::new(100, 1024, 512).is_err());
+        assert!(ExtensionPlan::new(2048, 1024, 0).is_err());
+        assert!(ExtensionPlan::new(2048, 1024, 2048).is_err());
+    }
+
+    #[test]
+    fn filter_mask_shape() {
+        let m = filter_mask(8, 3);
+        assert_eq!(m, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+}

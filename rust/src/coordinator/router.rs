@@ -1,0 +1,205 @@
+//! Sequence-length routing: pick the compiled artifact for a request.
+//!
+//! Artifacts are compiled per (kind, variant, sequence-length bucket);
+//! FFT sizes must be powers of two, so a request of length `L` routes to
+//! the smallest bucket `>= L` and is zero-padded up. Causal semantics are
+//! preserved under padding (appended zeros never influence earlier
+//! outputs), which is why the serving path uses causal artifacts.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::util::manifest::Manifest;
+
+/// What kind of convolution a request wants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ConvKind {
+    /// Circular conv, FFT size == input size.
+    Forward,
+    /// Gated circular conv `v * ((u*w) conv k)`.
+    Gated,
+    /// Causal conv (input = half the FFT size).
+    Causal,
+}
+
+impl ConvKind {
+    fn meta_value(self) -> &'static str {
+        match self {
+            ConvKind::Forward => "conv_fwd",
+            ConvKind::Gated => "conv_gated",
+            ConvKind::Causal => "conv_causal",
+        }
+    }
+}
+
+/// Routing decision: which artifact, and how much padding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Route {
+    pub artifact: String,
+    /// The bucket's sequence length (input length of the artifact).
+    pub bucket: usize,
+    /// Zero elements appended to reach the bucket.
+    pub padding: usize,
+    /// Batch capacity of the compiled artifact.
+    pub batch: usize,
+    /// Head count of the compiled artifact.
+    pub heads: usize,
+}
+
+/// Sequence-length router over the artifact manifest.
+#[derive(Debug)]
+pub struct Router {
+    /// kind -> sorted (bucket_len -> (artifact, batch, heads)).
+    buckets: BTreeMap<ConvKind, BTreeMap<usize, (String, usize, usize)>>,
+    variant: String,
+}
+
+impl Router {
+    /// Index all conv artifacts of the given variant ("monarch"/"baseline").
+    pub fn from_manifest(manifest: &Manifest, variant: &str) -> crate::Result<Self> {
+        let mut buckets: BTreeMap<ConvKind, BTreeMap<usize, (String, usize, usize)>> =
+            BTreeMap::new();
+        for kind in [ConvKind::Forward, ConvKind::Gated, ConvKind::Causal] {
+            for spec in manifest.with_meta("kind", kind.meta_value()) {
+                if spec.meta("variant") != Some(variant) || spec.meta("group") != Some("conv") {
+                    continue;
+                }
+                let len = spec
+                    .meta_usize("seq_len")
+                    .ok_or_else(|| anyhow!("artifact {} missing seq_len", spec.name))?;
+                let batch = spec.meta_usize("batch").unwrap_or(1);
+                let heads = spec.meta_usize("heads").unwrap_or(1);
+                buckets
+                    .entry(kind)
+                    .or_default()
+                    .insert(len, (spec.name.clone(), batch, heads));
+            }
+        }
+        if buckets.values().all(BTreeMap::is_empty) {
+            bail!("no conv artifacts of variant {variant:?} in manifest");
+        }
+        Ok(Self { buckets, variant: variant.to_string() })
+    }
+
+    /// The artifact variant this router serves.
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    /// Available bucket lengths for a kind (sorted ascending).
+    pub fn bucket_lens(&self, kind: ConvKind) -> Vec<usize> {
+        self.buckets.get(&kind).map(|m| m.keys().copied().collect()).unwrap_or_default()
+    }
+
+    /// Route a request of length `len`: smallest bucket >= len.
+    pub fn route(&self, kind: ConvKind, len: usize) -> crate::Result<Route> {
+        let table = self
+            .buckets
+            .get(&kind)
+            .filter(|m| !m.is_empty())
+            .ok_or_else(|| anyhow!("no artifacts for {kind:?}"))?;
+        let (bucket, (artifact, batch, heads)) = table
+            .range(len..)
+            .next()
+            .ok_or_else(|| {
+                anyhow!(
+                    "request length {len} exceeds the largest {kind:?} bucket ({})",
+                    table.keys().last().unwrap()
+                )
+            })?;
+        Ok(Route {
+            artifact: artifact.clone(),
+            bucket: *bucket,
+            padding: bucket - len,
+            batch: *batch,
+            heads: *heads,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        let text = "\
+version 1
+artifact conv_fwd_monarch_n256
+hlo a.hlo.txt
+meta group conv
+meta kind conv_fwd
+meta variant monarch
+meta seq_len 256
+meta batch 2
+meta heads 16
+input u f32 2,16,256 runtime
+output y f32 2,16,256
+end
+artifact conv_fwd_monarch_n1024
+hlo b.hlo.txt
+meta group conv
+meta kind conv_fwd
+meta variant monarch
+meta seq_len 1024
+meta batch 2
+meta heads 16
+input u f32 2,16,1024 runtime
+output y f32 2,16,1024
+end
+artifact conv_fwd_baseline_n256
+hlo c.hlo.txt
+meta group conv
+meta kind conv_fwd
+meta variant baseline
+meta seq_len 256
+meta batch 2
+meta heads 16
+input u f32 2,16,256 runtime
+output y f32 2,16,256
+end
+";
+        Manifest::parse(text, PathBuf::new()).unwrap()
+    }
+
+    #[test]
+    fn exact_route() {
+        let r = Router::from_manifest(&manifest(), "monarch").unwrap();
+        let route = r.route(ConvKind::Forward, 256).unwrap();
+        assert_eq!(route.artifact, "conv_fwd_monarch_n256");
+        assert_eq!(route.padding, 0);
+        assert_eq!(route.batch, 2);
+    }
+
+    #[test]
+    fn pads_up_to_next_bucket() {
+        let r = Router::from_manifest(&manifest(), "monarch").unwrap();
+        let route = r.route(ConvKind::Forward, 300).unwrap();
+        assert_eq!(route.bucket, 1024);
+        assert_eq!(route.padding, 724);
+    }
+
+    #[test]
+    fn oversize_is_error() {
+        let r = Router::from_manifest(&manifest(), "monarch").unwrap();
+        assert!(r.route(ConvKind::Forward, 4096).is_err());
+    }
+
+    #[test]
+    fn variant_separation() {
+        let r = Router::from_manifest(&manifest(), "baseline").unwrap();
+        assert_eq!(r.bucket_lens(ConvKind::Forward), vec![256]);
+    }
+
+    #[test]
+    fn missing_kind_is_error() {
+        let r = Router::from_manifest(&manifest(), "monarch").unwrap();
+        assert!(r.route(ConvKind::Gated, 256).is_err());
+    }
+
+    #[test]
+    fn unknown_variant_is_error() {
+        assert!(Router::from_manifest(&manifest(), "nope").is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Variant scheduling: pick the right kernel configuration per request.
+//!
+//! Combines the §3.2 cost model (order-p selection), the router's bucket
+//! table, the memory model (fusion feasibility), and the sparsity ladder
+//! into one decision point, and keeps running utilization statistics.
+
+use crate::coordinator::router::{ConvKind, Route, Router};
+use crate::coordinator::sparse::{select_pattern, SparsityPattern};
+use crate::costmodel::{self, HwProfile};
+
+/// A scheduling decision for one request.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub route: Route,
+    /// Monarch order the cost model picks for this FFT size.
+    pub order: usize,
+    /// Whether the fused kernel keeps the sequence resident (§3.1 bound).
+    pub fused: bool,
+    /// Sparsity pattern, when the caller asked for approximate serving.
+    pub sparsity: Option<SparsityPattern>,
+    /// Modeled cost (seconds on the profile hardware) — used for
+    /// admission ordering and for the Table 6 FLOP accounting.
+    pub modeled_cost: f64,
+}
+
+/// Scheduler over a router + hardware profile.
+#[derive(Debug)]
+pub struct Scheduler {
+    router: Router,
+    hw: &'static HwProfile,
+    decisions: u64,
+}
+
+impl Scheduler {
+    pub fn new(router: Router, hw: &'static HwProfile) -> Self {
+        Self { router, hw, decisions: 0 }
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Schedule a request of length `len`; `target_sparsity` > 0 requests
+    /// an approximate (frequency-sparse) kernel.
+    pub fn schedule(
+        &mut self,
+        kind: ConvKind,
+        len: usize,
+        batch: usize,
+        heads: usize,
+        target_sparsity: f64,
+    ) -> crate::Result<Decision> {
+        let route = self.router.route(kind, len)?;
+        let fft_len = match kind {
+            ConvKind::Causal => 2 * route.bucket,
+            _ => route.bucket,
+        };
+        let order = costmodel::best_order(fft_len, self.hw);
+        let fused = crate::coordinator::memory::fits_fused(fft_len, self.hw);
+        let sparsity = if target_sparsity > 0.0 {
+            let f = costmodel::factors(fft_len, 2);
+            Some(select_pattern(f[0], f[1], target_sparsity))
+        } else {
+            None
+        };
+        let mut cost = costmodel::conv_cost(fft_len, order, batch, heads, self.hw);
+        if let Some(p) = &sparsity {
+            cost *= p.flop_fraction();
+        }
+        self.decisions += 1;
+        Ok(Decision { route, order, fused, sparsity, modeled_cost: cost })
+    }
+
+    pub fn decisions(&self) -> u64 {
+        self.decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::A100;
+    use crate::util::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn router() -> Router {
+        let mut text = String::from("version 1\n");
+        for n in [256usize, 1024, 4096, 16384, 65536] {
+            text.push_str(&format!(
+                "artifact conv_fwd_monarch_n{n}\nhlo x.hlo.txt\nmeta group conv\n\
+                 meta kind conv_fwd\nmeta variant monarch\nmeta seq_len {n}\n\
+                 meta batch 2\nmeta heads 16\ninput u f32 2,16,{n} runtime\n\
+                 output y f32 2,16,{n}\nend\n"
+            ));
+        }
+        let m = Manifest::parse(&text, PathBuf::new()).unwrap();
+        Router::from_manifest(&m, "monarch").unwrap()
+    }
+
+    #[test]
+    fn order_follows_cost_model() {
+        let mut s = Scheduler::new(router(), &A100);
+        let d_short = s.schedule(ConvKind::Forward, 1024, 2, 16, 0.0).unwrap();
+        assert_eq!(d_short.order, 2);
+        let d_long = s.schedule(ConvKind::Forward, 65536, 2, 16, 0.0).unwrap();
+        assert!(d_long.order >= 2);
+        assert!(d_long.modeled_cost > d_short.modeled_cost);
+    }
+
+    #[test]
+    fn fusion_flag_flips_with_length() {
+        let mut s = Scheduler::new(router(), &A100);
+        assert!(s.schedule(ConvKind::Forward, 4096, 2, 16, 0.0).unwrap().fused);
+        assert!(!s.schedule(ConvKind::Forward, 65536, 2, 16, 0.0).unwrap().fused);
+    }
+
+    #[test]
+    fn sparsity_reduces_modeled_cost() {
+        let mut s = Scheduler::new(router(), &A100);
+        let dense = s.schedule(ConvKind::Forward, 4096, 2, 16, 0.0).unwrap();
+        let sparse = s.schedule(ConvKind::Forward, 4096, 2, 16, 0.75).unwrap();
+        assert!(sparse.sparsity.is_some());
+        assert!(sparse.modeled_cost < dense.modeled_cost);
+        assert!(sparse.sparsity.unwrap().sparsity_fraction() <= 0.75 + 1e-9);
+    }
+
+    #[test]
+    fn decision_counter() {
+        let mut s = Scheduler::new(router(), &A100);
+        s.schedule(ConvKind::Forward, 256, 1, 1, 0.0).unwrap();
+        s.schedule(ConvKind::Forward, 512, 1, 1, 0.0).unwrap();
+        assert_eq!(s.decisions(), 2);
+    }
+}

@@ -1,0 +1,375 @@
+//! The convolution service: router + batcher + PJRT runtime on one thread.
+//!
+//! PJRT handles are thread-affine (raw pointers, `!Send`), so the service
+//! owns its `Runtime` on a dedicated thread and talks to clients over
+//! channels — requests are plain `Send` data, responses flow back through
+//! per-request reply channels. This is the request path the paper's
+//! serving numbers flow through: submit -> route by length -> batch ->
+//! single fused artifact call -> scatter replies.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::router::{ConvKind, Router};
+use crate::runtime::{Artifact, HostTensor, Runtime};
+use crate::util::Rng;
+
+/// One convolution request: a single batch row of `heads * len` samples
+/// per stream (1 stream for plain, 3 — u, v, w — for gated).
+#[derive(Debug)]
+pub struct ConvRequest {
+    pub kind: ConvKind,
+    /// Input length (must be <= the largest bucket).
+    pub len: usize,
+    /// Row data: `[u]` or `[u, v, w]`, each of `heads * len` f32s.
+    pub streams: Vec<Vec<f32>>,
+}
+
+/// The service's reply: the convolved row.
+pub type ConvReply = Result<Vec<f32>, String>;
+
+enum Msg {
+    Submit { req: ConvRequest, reply: Sender<ConvReply>, t_submit: Instant },
+    SetFilter { kind: ConvKind, bucket: usize, k: Vec<f32>, done: Sender<Result<(), String>> },
+    Shutdown,
+}
+
+/// Live service statistics (lock-free reads from any thread).
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub rows_executed: AtomicU64,
+    pub latency_ns_sum: AtomicU64,
+    pub latency_ns_max: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+impl ServiceStats {
+    /// Mean end-to-end latency in milliseconds.
+    pub fn mean_latency_ms(&self) -> f64 {
+        let n = self.requests.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_ns_sum.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
+    }
+
+    /// Mean rows per executed batch.
+    pub fn mean_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.rows_executed.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
+/// Handle to the running service.
+pub struct ConvService {
+    tx: Sender<Msg>,
+    stats: Arc<ServiceStats>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ConvService {
+    /// Start the service over an artifact directory.
+    ///
+    /// `variant` selects the kernel family ("monarch" or "baseline") —
+    /// benchmarks run one service of each to reproduce the speedup tables.
+    pub fn start(
+        artifact_dir: impl Into<std::path::PathBuf>,
+        variant: &str,
+        policy: BatchPolicy,
+    ) -> crate::Result<Self> {
+        let dir = artifact_dir.into();
+        let variant = variant.to_string();
+        let stats = Arc::new(ServiceStats::default());
+        let stats2 = Arc::clone(&stats);
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name(format!("conv-service-{variant}"))
+            .spawn(move || match ServiceWorker::new(&dir, &variant, policy, stats2) {
+                Ok(mut w) => {
+                    let _ = ready_tx.send(Ok(()));
+                    w.run(rx);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("service thread died during startup"))?
+            .map_err(|e| anyhow!("service startup failed: {e}"))?;
+        Ok(Self { tx, stats, handle: Some(handle) })
+    }
+
+    /// Submit a request; the returned receiver yields the reply.
+    pub fn submit(&self, req: ConvRequest) -> Receiver<ConvReply> {
+        let (reply, rx) = channel();
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let msg = Msg::Submit { req, reply, t_submit: Instant::now() };
+        if self.tx.send(msg).is_err() {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        rx
+    }
+
+    /// Submit and wait (convenience).
+    pub fn call(&self, req: ConvRequest) -> crate::Result<Vec<f32>> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| anyhow!("service dropped the request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Install a filter bank for a (kind, bucket); rows are `heads * len`.
+    pub fn set_filter(&self, kind: ConvKind, bucket: usize, k: Vec<f32>) -> crate::Result<()> {
+        let (done, rx) = channel();
+        self.tx
+            .send(Msg::SetFilter { kind, bucket, k, done })
+            .map_err(|_| anyhow!("service is down"))?;
+        rx.recv().map_err(|_| anyhow!("service died"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Live statistics.
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+}
+
+impl Drop for ConvService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct RowJob {
+    streams: Vec<Vec<f32>>,
+    len: usize,
+    reply: Sender<ConvReply>,
+    t_submit: Instant,
+}
+
+struct ServiceWorker {
+    runtime: Runtime,
+    router: Router,
+    artifacts: BTreeMap<String, Artifact>,
+    queues: BTreeMap<(ConvKind, usize), Batcher<RowJob>>,
+    filters: BTreeMap<(ConvKind, usize), Vec<f32>>,
+    policy: BatchPolicy,
+    stats: Arc<ServiceStats>,
+}
+
+impl ServiceWorker {
+    fn new(
+        dir: &std::path::Path,
+        variant: &str,
+        policy: BatchPolicy,
+        stats: Arc<ServiceStats>,
+    ) -> crate::Result<Self> {
+        let runtime = Runtime::new(dir)?;
+        let router = Router::from_manifest(runtime.manifest(), variant)?;
+        Ok(Self {
+            runtime,
+            router,
+            artifacts: BTreeMap::new(),
+            queues: BTreeMap::new(),
+            filters: BTreeMap::new(),
+            policy,
+            stats,
+        })
+    }
+
+    fn run(&mut self, rx: Receiver<Msg>) {
+        loop {
+            // Sleep until the next queue deadline (or a short idle tick).
+            let now = Instant::now();
+            let timeout = self
+                .queues
+                .values()
+                .filter_map(|q| q.deadline_in(now))
+                .min()
+                .unwrap_or(Duration::from_millis(50));
+            match rx.recv_timeout(timeout) {
+                Ok(Msg::Submit { req, reply, t_submit }) => {
+                    self.enqueue(req, reply, t_submit);
+                }
+                Ok(Msg::SetFilter { kind, bucket, k, done }) => {
+                    let r = self.check_filter(kind, bucket, &k);
+                    if r.is_ok() {
+                        self.filters.insert((kind, bucket), k);
+                    }
+                    let _ = done.send(r.map_err(|e| format!("{e:#}")));
+                }
+                Ok(Msg::Shutdown) => {
+                    self.drain_all(true);
+                    return;
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.drain_all(true);
+                    return;
+                }
+            }
+            self.drain_all(false);
+        }
+    }
+
+    fn check_filter(&mut self, kind: ConvKind, bucket: usize, k: &[f32]) -> crate::Result<()> {
+        let route = self.router.route(kind, bucket)?;
+        if route.bucket != bucket {
+            anyhow::bail!("no exact bucket {bucket} for {kind:?}");
+        }
+        let expect = route.heads * bucket;
+        if k.len() != expect {
+            anyhow::bail!("filter for bucket {bucket} needs {expect} f32s, got {}", k.len());
+        }
+        Ok(())
+    }
+
+    fn enqueue(&mut self, req: ConvRequest, reply: Sender<ConvReply>, t_submit: Instant) {
+        let route = match self.router.route(req.kind, req.len) {
+            Ok(r) => r,
+            Err(e) => {
+                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Err(format!("{e:#}")));
+                return;
+            }
+        };
+        let expect_streams = if req.kind == ConvKind::Gated { 3 } else { 1 };
+        if req.streams.len() != expect_streams
+            || req.streams.iter().any(|s| s.len() != route.heads * req.len)
+        {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Err(format!(
+                "request for {:?}/{} needs {} streams of {} f32s",
+                req.kind,
+                req.len,
+                expect_streams,
+                route.heads * req.len
+            )));
+            return;
+        }
+        let key = (req.kind, route.bucket);
+        let policy = self.policy.clone();
+        let q = self.queues.entry(key).or_insert_with(|| Batcher::new(policy));
+        q.push(RowJob { streams: req.streams, len: req.len, reply, t_submit }, Instant::now());
+    }
+
+    fn drain_all(&mut self, force: bool) {
+        let now = Instant::now();
+        let keys: Vec<(ConvKind, usize)> = self.queues.keys().copied().collect();
+        for key in keys {
+            loop {
+                let batch = {
+                    let q = self.queues.get_mut(&key).unwrap();
+                    if force && !q.is_empty() {
+                        // Force-flush on shutdown regardless of deadlines.
+                        q.flush(now + Duration::from_secs(3600))
+                    } else {
+                        q.flush(now)
+                    }
+                };
+                match batch {
+                    Some(b) => self.execute(key, b),
+                    None => break,
+                }
+            }
+        }
+    }
+
+    fn execute(&mut self, key: (ConvKind, usize), batch: crate::coordinator::batcher::Batch<RowJob>) {
+        let (kind, bucket) = key;
+        let route = self.router.route(kind, bucket).expect("bucket exists");
+        let result = self.execute_inner(kind, &route, &batch);
+        match result {
+            Ok(rows) => {
+                let t_done = Instant::now();
+                self.stats.batches.fetch_add(1, Ordering::Relaxed);
+                self.stats.rows_executed.fetch_add(batch.rows.len() as u64, Ordering::Relaxed);
+                for (job, row) in batch.rows.into_iter().zip(rows) {
+                    let lat = t_done.duration_since(job.payload.t_submit).as_nanos() as u64;
+                    self.stats.latency_ns_sum.fetch_add(lat, Ordering::Relaxed);
+                    self.stats.latency_ns_max.fetch_max(lat, Ordering::Relaxed);
+                    let _ = job.payload.reply.send(Ok(row));
+                }
+            }
+            Err(e) => {
+                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("{e:#}");
+                for job in batch.rows {
+                    let _ = job.payload.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+
+    fn execute_inner(
+        &mut self,
+        kind: ConvKind,
+        route: &crate::coordinator::router::Route,
+        batch: &crate::coordinator::batcher::Batch<RowJob>,
+    ) -> crate::Result<Vec<Vec<f32>>> {
+        let (b, h, n) = (route.batch, route.heads, route.bucket);
+        if !self.artifacts.contains_key(&route.artifact) {
+            let art = self.runtime.load(&route.artifact)?;
+            self.artifacts.insert(route.artifact.clone(), art);
+        }
+        // Assemble the fixed-shape batch: real rows first, zero padding after.
+        let n_streams = if kind == ConvKind::Gated { 3 } else { 1 };
+        let mut streams = vec![vec![0.0f32; b * h * n]; n_streams];
+        for (row_idx, job) in batch.rows.iter().enumerate() {
+            for (s, stream) in streams.iter_mut().enumerate() {
+                // Pad each head row from job.payload.len up to the bucket length.
+                for head in 0..h {
+                    let src = &job.payload.streams[s][head * job.payload.len..(head + 1) * job.payload.len];
+                    let dst_off = row_idx * h * n + head * n;
+                    stream[dst_off..dst_off + job.payload.len].copy_from_slice(src);
+                }
+            }
+        }
+        let filter = self
+            .filters
+            .entry((kind, n))
+            .or_insert_with(|| {
+                // Default smoke filter: deterministic random bank.
+                let mut rng = Rng::new(n as u64 ^ 0xF17E);
+                rng.normal_vec(h * n)
+            })
+            .clone();
+
+        let mut inputs: Vec<HostTensor> =
+            streams.into_iter().map(|s| HostTensor::f32(s, &[b, h, n])).collect();
+        inputs.push(HostTensor::f32(filter, &[h, n]));
+
+        let art = self.artifacts.get_mut(&route.artifact).unwrap();
+        let outs = art.call(&inputs)?;
+        let y = outs[0].as_f32();
+        // Scatter back per-row, truncating padding.
+        Ok(batch
+            .rows
+            .iter()
+            .enumerate()
+            .map(|(row_idx, job)| {
+                let mut row = Vec::with_capacity(h * job.payload.len);
+                for head in 0..h {
+                    let off = row_idx * h * n + head * n;
+                    row.extend_from_slice(&y[off..off + job.payload.len]);
+                }
+                row
+            })
+            .collect())
+    }
+}

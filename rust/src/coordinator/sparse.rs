@@ -1,0 +1,203 @@
+//! Frequency-sparse convolution management (§3.3, Appendix A.4, Table 10).
+//!
+//! The Rust mirror of `fftmats.SparsityPattern`: block patterns over the
+//! Monarch layout grid of `k_f`, their sparsity fractions, the matmul-FLOP
+//! fraction that survives block skipping (the Table 9 speedup model), and
+//! host-side spectrum sparsification for artifacts that take a dense
+//! spectrum. Pattern selection is by target sparsity with a quality
+//! guard-rail (the paper keeps >= the DC block).
+
+use anyhow::bail;
+
+/// Block-sparsity pattern over the (n1, n2) Monarch layout grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SparsityPattern {
+    pub n1: usize,
+    pub n2: usize,
+    pub keep_rows: usize,
+    pub keep_cols: usize,
+}
+
+impl SparsityPattern {
+    pub fn new(n1: usize, n2: usize, keep_rows: usize, keep_cols: usize) -> crate::Result<Self> {
+        if keep_rows == 0 || keep_rows > n1 || keep_cols == 0 || keep_cols > n2 {
+            bail!("kept block ({keep_rows},{keep_cols}) out of range for ({n1},{n2})");
+        }
+        Ok(Self { n1, n2, keep_rows, keep_cols })
+    }
+
+    /// Fraction of `k_f` entries zeroed (Table 10's S column).
+    pub fn sparsity_fraction(&self) -> f64 {
+        1.0 - (self.keep_rows * self.keep_cols) as f64 / (self.n1 * self.n2) as f64
+    }
+
+    /// Fraction of the dense Monarch matmul FLOPs still executed
+    /// (mirrors `fftmats.SparsityPattern.matmul_flop_fraction`).
+    pub fn flop_fraction(&self) -> f64 {
+        let (r, c) = (self.keep_rows as f64, self.keep_cols as f64);
+        let (n1, n2) = (self.n1 as f64, self.n2 as f64);
+        let dense = 2.0 * (n1 * n1 * n2 + n1 * n2 * n2);
+        let sparse = r * n1 * n2 + r * n2 * c + r * c * n2 + n1 * r * n2;
+        sparse / dense
+    }
+
+    /// Ideal kernel speedup from block skipping (Table 9's bottom row).
+    pub fn ideal_speedup(&self) -> f64 {
+        1.0 / self.flop_fraction()
+    }
+
+    /// Zero this pattern out of a row-major Monarch-layout spectrum
+    /// (interleaved re/im pairs, length 2*n1*n2).
+    pub fn apply_interleaved(&self, kf: &mut [f32]) {
+        assert_eq!(kf.len(), 2 * self.n1 * self.n2);
+        for r in 0..self.n1 {
+            for c in 0..self.n2 {
+                if r >= self.keep_rows || c >= self.keep_cols {
+                    let idx = 2 * (r * self.n2 + c);
+                    kf[idx] = 0.0;
+                    kf[idx + 1] = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Zero the pattern out of a *time-ordered* full spectrum, given the
+    /// Monarch order permutation (frequency kept iff its layout slot is).
+    pub fn apply_spectrum(&self, kf_re: &mut [f32], kf_im: &mut [f32]) {
+        let n = self.n1 * self.n2;
+        assert_eq!(kf_re.len(), n);
+        let order = crate::fft::monarch_order2(self.n1, self.n2);
+        for (slot, &freq) in order.iter().enumerate() {
+            let (r, c) = (slot / self.n2, slot % self.n2);
+            if r >= self.keep_rows || c >= self.keep_cols {
+                kf_re[freq] = 0.0;
+                kf_im[freq] = 0.0;
+            }
+        }
+    }
+}
+
+/// The Table 10 ladder rescaled to an (n1, n2) grid, sorted by sparsity.
+pub fn table10_ladder(n1: usize, n2: usize) -> Vec<(String, SparsityPattern)> {
+    let mk = |r: usize, c: usize| SparsityPattern::new(n1, n2, r.max(1), c.max(1)).unwrap();
+    let pats = vec![
+        ("s0".to_string(), mk(n1, n2)),
+        ("s50".to_string(), mk(n1 / 2, n2)),
+        ("s75".to_string(), mk(n1 / 2, n2 / 2)),
+        ("s84".to_string(), mk(n1 / 4, n2 * 5 / 8)),
+        ("s91".to_string(), mk(n1 / 4, n2 * 3 / 8)),
+        ("s94".to_string(), mk(n1 / 4, n2 / 4)),
+    ];
+    pats
+}
+
+/// Pick the sparsest ladder pattern not exceeding `target` sparsity.
+pub fn select_pattern(n1: usize, n2: usize, target: f64) -> SparsityPattern {
+    table10_ladder(n1, n2)
+        .into_iter()
+        .map(|(_, p)| p)
+        .filter(|p| p.sparsity_fraction() <= target + 1e-9)
+        .max_by(|a, b| a.sparsity_fraction().partial_cmp(&b.sparsity_fraction()).unwrap())
+        .unwrap_or_else(|| SparsityPattern::new(n1, n2, n1, n2).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_match_table10() {
+        let l = table10_ladder(32, 32);
+        let by_name: std::collections::BTreeMap<_, _> = l.into_iter().collect();
+        assert!((by_name["s0"].sparsity_fraction() - 0.0).abs() < 1e-9);
+        assert!((by_name["s50"].sparsity_fraction() - 0.5).abs() < 1e-9);
+        assert!((by_name["s75"].sparsity_fraction() - 0.75).abs() < 1e-9);
+        assert!(by_name["s91"].sparsity_fraction() > 0.9);
+    }
+
+    #[test]
+    fn speedup_monotone_in_sparsity() {
+        let l = table10_ladder(64, 64);
+        let mut prev = 0.0;
+        for (_, p) in &l {
+            let s = p.ideal_speedup();
+            assert!(s >= prev, "{l:?}");
+            prev = s;
+        }
+        // Dense pattern: no speedup.
+        assert!((l[0].1.ideal_speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn select_by_target() {
+        let p = select_pattern(32, 32, 0.8);
+        assert!(p.sparsity_fraction() <= 0.8 && p.sparsity_fraction() >= 0.74);
+        let dense = select_pattern(32, 32, 0.1);
+        assert!((dense.sparsity_fraction() - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn apply_interleaved_zeroes_block() {
+        let p = SparsityPattern::new(2, 2, 1, 1).unwrap();
+        let mut kf = vec![1.0f32; 8];
+        p.apply_interleaved(&mut kf);
+        assert_eq!(kf, vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn apply_spectrum_keeps_dc() {
+        let (n1, n2) = (4, 4);
+        let p = SparsityPattern::new(n1, n2, 2, 2).unwrap();
+        let mut re = vec![1.0f32; 16];
+        let mut im = vec![1.0f32; 16];
+        p.apply_spectrum(&mut re, &mut im);
+        assert_eq!(re[0], 1.0, "DC (layout slot 0) must survive");
+        let kept = re.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(kept, 4);
+    }
+
+    #[test]
+    fn sparsified_conv_matches_oracle() {
+        // End-to-end: sparsify spectrum, convolve via the rust FFT, and
+        // compare against Monarch-layout sparsification (oracle identity).
+        use crate::fft;
+        use crate::util::Rng;
+        let (n1, n2) = (8, 8);
+        let n = n1 * n2;
+        let mut rng = Rng::new(9);
+        let u = fft::random_signal(n, &mut rng);
+        let k = fft::random_signal(n, &mut rng);
+        let p = SparsityPattern::new(n1, n2, 4, 4).unwrap();
+
+        // Path A: sparsify in time-ordered spectrum.
+        let kf = fft::rfft_full(&k);
+        let mut re: Vec<f32> = kf.iter().map(|c| c.re as f32).collect();
+        let mut im: Vec<f32> = kf.iter().map(|c| c.im as f32).collect();
+        p.apply_spectrum(&mut re, &mut im);
+        let kf_sp: Vec<fft::Cpx> =
+            re.iter().zip(&im).map(|(&r, &i)| fft::Cpx::new(r as f64, i as f64)).collect();
+        let ya = fft::fft_conv_spectrum(&u, &kf_sp);
+
+        // Path B: sparsify in Monarch layout, convolve in layout space.
+        let uc: Vec<fft::Cpx> = u.iter().map(|&v| fft::Cpx::new(v, 0.0)).collect();
+        let kc: Vec<fft::Cpx> = k.iter().map(|&v| fft::Cpx::new(v, 0.0)).collect();
+        let um = fft::monarch_fft2(&uc, n1, n2);
+        let mut km = fft::monarch_fft2(&kc, n1, n2);
+        for r in 0..n1 {
+            for c in 0..n2 {
+                if r >= 4 || c >= 4 {
+                    km[r * n2 + c] = fft::Cpx::ZERO;
+                }
+            }
+        }
+        let prod: Vec<fft::Cpx> = um.iter().zip(&km).map(|(&a, &b)| a * b).collect();
+        let yb: Vec<f64> = fft::monarch_ifft2(&prod, n1, n2).iter().map(|c| c.re).collect();
+        assert!(fft::max_abs_diff(&ya, &yb) < 1e-4);
+    }
+
+    #[test]
+    fn invalid_patterns_rejected() {
+        assert!(SparsityPattern::new(4, 4, 0, 4).is_err());
+        assert!(SparsityPattern::new(4, 4, 5, 4).is_err());
+    }
+}

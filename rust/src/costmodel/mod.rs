@@ -1,0 +1,285 @@
+//! §3.2 cost model of the order-p Monarch decomposition (Equation 2).
+//!
+//! The coordinator's scheduler uses this to pick the decomposition order
+//! per sequence length; the `fig4_costmodel` bench regenerates Figure 4's
+//! curves (compute cost of p ∈ {2,3,4} across sequence lengths, with the
+//! tensor-core-size bumps and the SRAM-capacity bump between 32K and 64K).
+//!
+//! ```text
+//! C = B·H · Σ_{i=1..p} [ 16·N·N_i / γ(N_i)  +  4·N / ω(i) ]     (Eq. 2)
+//! ```
+//!
+//! where γ(N_i) is the matmul throughput if N_i fills the matrix unit and
+//! the general-arithmetic throughput otherwise, and ω(i) is the bandwidth
+//! of the memory level holding step i's intermediates.
+
+/// Empirical hardware constants (Table 19 for A100; H100 from §2.2).
+#[derive(Debug, Clone, Copy)]
+pub struct HwProfile {
+    pub name: &'static str,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// SRAM bandwidth, bytes/s.
+    pub sram_bw: f64,
+    /// Matrix-unit FLOPs/s (achievable, not peak).
+    pub matmul_flops: f64,
+    /// General arithmetic FLOPs/s.
+    pub general_flops: f64,
+    /// Matrix-unit native size μ (16 on A100/H100).
+    pub matrix_unit: usize,
+    /// Matrix dimension at which GEMMs reach peak matmul throughput
+    /// (small GEMMs are latency/issue-bound; utilization ~ N_i / this).
+    pub gemm_saturate: usize,
+    /// Register-file effective bandwidth (order-2's fully-fused steps).
+    pub reg_bw: f64,
+    /// SRAM capacity per SM-equivalent, bytes (fusion feasibility bound).
+    pub sram_bytes: usize,
+}
+
+/// A100-40GB, Table 19 of the paper.
+pub const A100: HwProfile = HwProfile {
+    name: "a100",
+    hbm_bw: 1.35e12,
+    sram_bw: 9.5e12,
+    matmul_flops: 234e12,
+    general_flops: 17.6e12,
+    matrix_unit: 16,
+    gemm_saturate: 128,
+    reg_bw: 40e12,
+    sram_bytes: 192 * 1024, // 192KB/SM shared-memory carve-out
+};
+
+/// H100-SXM (§2.2 constants, same ratios).
+pub const H100: HwProfile = HwProfile {
+    name: "h100",
+    hbm_bw: 3.0e12,
+    sram_bw: 19.0e12,
+    matmul_flops: 700e12,
+    general_flops: 48e12,
+    matrix_unit: 16,
+    gemm_saturate: 128,
+    reg_bw: 80e12,
+    sram_bytes: 228 * 1024,
+};
+
+/// This testbed: single CPU core driving the PJRT CPU client. Matmul and
+/// general throughput are the measured XLA-CPU numbers; "SRAM" is L2.
+/// Used to sanity-check measured bench shapes, not for Figure 4.
+pub const CPU: HwProfile = HwProfile {
+    name: "cpu",
+    hbm_bw: 12e9,
+    sram_bw: 80e9,
+    matmul_flops: 40e9,
+    general_flops: 8e9,
+    matrix_unit: 8,
+    gemm_saturate: 64,
+    reg_bw: 200e9,
+    sram_bytes: 1024 * 1024,
+};
+
+/// Balanced power-of-two factorization (mirrors `fftmats.monarch_factors`).
+pub fn factors(n: usize, p: usize) -> Vec<usize> {
+    crate::fft::monarch_factors(n, p)
+}
+
+/// γ(N_i): achievable FLOPs for an N_i-sized matmul factor.
+///
+/// Below the matrix unit μ the lanes are wasted quadratically (the "early
+/// bumps" of Figure 4); above it, small GEMMs are still issue-bound and
+/// only reach peak once the dimension hits `gemm_saturate` — this is what
+/// keeps p=2 ahead of p=3 through the paper's 4K–32K band.
+fn gamma(ni: usize, hw: &HwProfile) -> f64 {
+    if ni >= hw.matrix_unit {
+        hw.matmul_flops * (ni as f64 / hw.gemm_saturate as f64).min(1.0)
+    } else {
+        hw.general_flops.max(hw.matmul_flops * (ni as f64 / hw.gemm_saturate as f64).powi(2))
+    }
+}
+
+/// ω(p, i, N): bandwidth of the memory level holding step i's intermediates.
+///
+/// Order 2 fully fuses in registers while the sequence fits SRAM; order 3
+/// round-trips intermediates through SRAM (the extra permutations of §2.1);
+/// order 4's two outermost steps take an HBM round trip each (§A.3). Once
+/// the packed sequence outgrows SRAM everything spills to HBM — the
+/// Figure 4 bump between 32K and 64K.
+fn omega(p: usize, i: usize, n: usize, hw: &HwProfile) -> f64 {
+    let fits = crate::coordinator::memory::fits_fused(n, hw);
+    if !fits {
+        // Outer steps spill; p=4 confines the spill to its outermost pair,
+        // keeping the two inner steps SRAM-resident (the mediation effect).
+        if p >= 4 && i >= 2 {
+            return hw.sram_bw;
+        }
+        return hw.hbm_bw;
+    }
+    match p {
+        2 => hw.reg_bw,
+        3 => hw.sram_bw,
+        _ => {
+            if i < 2 {
+                hw.hbm_bw
+            } else {
+                hw.sram_bw
+            }
+        }
+    }
+}
+
+/// Equation 2: cost (seconds) of one order-p Monarch FFT convolution.
+///
+/// `b`/`h` are batch and hidden dims; the per-sequence inner sum follows
+/// the paper exactly: 16·N·N_i matmul FLOPs per step (complex, fwd+inv)
+/// and 4·N bytes of intermediate traffic per step.
+pub fn conv_cost(n: usize, p: usize, b: usize, h: usize, hw: &HwProfile) -> f64 {
+    let fs = factors(n, p);
+    let per_seq: f64 = fs
+        .iter()
+        .enumerate()
+        .map(|(i, &ni)| {
+            16.0 * (n as f64) * (ni as f64) / gamma(ni, hw) + 4.0 * n as f64 / omega(p, i, n, hw)
+        })
+        .sum();
+    (b * h) as f64 * per_seq
+}
+
+/// Raw FLOP count of the order-p decomposition (no hardware scaling) —
+/// used for the Table 6 end-to-end FLOP-utilization accounting.
+pub fn conv_flops(n: usize, p: usize, b: usize, h: usize) -> f64 {
+    let fs = factors(n, p);
+    (b * h) as f64 * fs.iter().map(|&ni| 16.0 * n as f64 * ni as f64).sum::<f64>()
+}
+
+/// Pick the cheapest order p ∈ {2, 3, 4} for a sequence length.
+pub fn best_order(n: usize, hw: &HwProfile) -> usize {
+    let logn = n.trailing_zeros() as usize;
+    (2..=4usize)
+        .filter(|&p| p <= logn)
+        .min_by(|&a, &b| {
+            conv_cost(n, a, 1, 1, hw).partial_cmp(&conv_cost(n, b, 1, 1, hw)).unwrap()
+        })
+        .unwrap_or(2)
+}
+
+/// One Figure 4 data point.
+#[derive(Debug, Clone)]
+pub struct CostPoint {
+    pub n: usize,
+    pub p: usize,
+    pub cost: f64,
+}
+
+/// Figure 4 series: cost vs sequence length for each order p.
+pub fn figure4_series(hw: &HwProfile, log_lo: u32, log_hi: u32) -> Vec<CostPoint> {
+    let mut out = vec![];
+    for logn in log_lo..=log_hi {
+        let n = 1usize << logn;
+        for p in 2..=4usize {
+            if p <= logn as usize {
+                out.push(CostPoint { n, p, cost: conv_cost(n, p, 1, 1, hw) });
+            }
+        }
+    }
+    out
+}
+
+/// Attention FLOPs for one forward pass (Table 6 comparator accounting):
+/// `2·(2·B·H·L²·d)` for QK^T and AV, plus projections `8·B·L·d²`.
+pub fn attention_flops(l: usize, d: usize, b: usize) -> f64 {
+    let (l, d, b) = (l as f64, d as f64, b as f64);
+    4.0 * b * l * l * d + 8.0 * b * l * d * d
+}
+
+/// Parametric transformer-style FLOPs: `2 * tokens * params` (§C.6).
+pub fn parametric_flops(tokens: usize, params: usize) -> f64 {
+    2.0 * tokens as f64 * params as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_positive_and_scales_with_bh() {
+        let c1 = conv_cost(4096, 2, 1, 1, &A100);
+        let c2 = conv_cost(4096, 2, 4, 8, &A100);
+        assert!(c1 > 0.0);
+        assert!((c2 / c1 - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn higher_order_wins_at_long_sequences() {
+        // Figure 4: p=2 is best at short N; p>=3 at multi-million N.
+        assert_eq!(best_order(1024, &A100), 2);
+        assert!(best_order(1 << 22, &A100) >= 3);
+    }
+
+    #[test]
+    fn order2_cost_grows_superlinearly() {
+        // O(N^{3/2}) for p=2: quadrupling N should ~8x the cost.
+        let a = conv_cost(1 << 14, 2, 1, 1, &A100);
+        let b = conv_cost(1 << 16, 2, 1, 1, &A100);
+        assert!(b / a > 5.0 && b / a < 12.0, "ratio {}", b / a);
+    }
+
+    #[test]
+    fn small_factor_penalty() {
+        // Splitting 256 four ways gives 4-sized factors below the matrix
+        // unit: p=4 must cost more than p=2 at N=256 (Figure 4's early bumps).
+        assert!(conv_cost(256, 4, 1, 1, &A100) > conv_cost(256, 2, 1, 1, &A100));
+    }
+
+    #[test]
+    fn sram_spill_bump() {
+        // ω switches to HBM once the packed sequence exceeds SRAM: the
+        // per-step I/O term must jump across the boundary (Figure 4 bump).
+        let hw = A100;
+        let fit = hw.sram_bytes / 6;
+        let spill = fit * 4;
+        let io_fit = 4.0 * fit as f64 / omega(3, 0, fit, &hw);
+        let io_spill = 4.0 * spill as f64 / omega(3, 0, spill, &hw);
+        assert!(io_spill > 2.0 * io_fit * 1.5);
+    }
+
+    #[test]
+    fn p2_wins_through_the_paper_band() {
+        // Figure 4: p=2 is the best order from 256 up to ~16K-32K.
+        for logn in 8..=14 {
+            assert_eq!(best_order(1 << logn, &A100), 2, "N=2^{logn}");
+        }
+    }
+
+    #[test]
+    fn p4_mediates_past_sram_spill() {
+        // Past the SRAM bound, p=4 (inner steps still SRAM-resident) must
+        // beat p=3 at multi-million lengths — the Figure 4 mediation.
+        let n = 1 << 22;
+        assert!(conv_cost(n, 4, 1, 1, &A100) < conv_cost(n, 3, 1, 1, &A100));
+    }
+
+    #[test]
+    fn figure4_has_all_orders() {
+        let pts = figure4_series(&A100, 8, 22);
+        assert!(pts.iter().any(|p| p.p == 2));
+        assert!(pts.iter().any(|p| p.p == 3));
+        assert!(pts.iter().any(|p| p.p == 4));
+        for p in &pts {
+            assert!(p.cost.is_finite() && p.cost > 0.0);
+        }
+    }
+
+    #[test]
+    fn attention_flops_quadratic() {
+        let a = attention_flops(1024, 64, 1);
+        let b = attention_flops(2048, 64, 1);
+        assert!(b / a > 3.0, "attention should be ~quadratic in L");
+    }
+
+    #[test]
+    fn conv_flops_subquadratic() {
+        let a = conv_flops(1024, 2, 1, 1);
+        let b = conv_flops(4096, 2, 1, 1);
+        assert!(b / a < 16.0, "conv FLOPs must grow slower than N^2");
+        assert!(b / a > 4.0);
+    }
+}

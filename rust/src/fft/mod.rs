@@ -1,0 +1,403 @@
+//! Native Rust FFT / convolution substrate.
+//!
+//! Three roles (DESIGN.md §4):
+//!
+//! 1. **Oracle** for property tests — an independent implementation of the
+//!    same math the Pallas kernels compute (radix-2 FFT, Monarch
+//!    decomposition, r2c packing), checked against the O(N²) definition.
+//! 2. **"Fusion-only" ablation baseline** (Table 3's cuFFTdx row): a fused
+//!    single-pass FFT convolution that does *not* use the matrix
+//!    decomposition — the thing FlashFFTConv beats once matmul units enter.
+//! 3. **Coordinator utilities** — host-side spectrum manipulation for the
+//!    partial/frequency-sparse workflows (truncating or masking kernels
+//!    without re-entering Python).
+
+use crate::util::Rng;
+
+/// Complex number over f64 (oracle precision).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Cpx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cpx {
+    pub const ZERO: Cpx = Cpx { re: 0.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    pub fn conj(self) -> Self {
+        Self { re: self.re, im: -self.im }
+    }
+
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    /// `e^{i theta}`.
+    pub fn cis(theta: f64) -> Self {
+        Self { re: theta.cos(), im: theta.sin() }
+    }
+
+    pub fn scale(self, s: f64) -> Self {
+        Self { re: self.re * s, im: self.im * s }
+    }
+}
+
+impl std::ops::Add for Cpx {
+    type Output = Cpx;
+    fn add(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl std::ops::Sub for Cpx {
+    type Output = Cpx;
+    fn sub(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl std::ops::Mul for Cpx {
+    type Output = Cpx;
+    fn mul(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+}
+
+/// True iff `n` is a positive power of two.
+pub fn is_pow2(n: usize) -> bool {
+    n > 0 && n & (n - 1) == 0
+}
+
+// ---------------------------------------------------------------------------
+// Radix-2 iterative FFT
+// ---------------------------------------------------------------------------
+
+/// In-place iterative radix-2 Cooley–Tukey FFT (decimation in time).
+///
+/// `inverse=true` computes the unitary-up-to-1/N inverse (normalization
+/// included), matching `fftmats.dft_matrix(n, inverse=True)`.
+pub fn fft_inplace(x: &mut [Cpx], inverse: bool) {
+    let n = x.len();
+    assert!(is_pow2(n), "fft length must be a power of two, got {n}");
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = Cpx::cis(ang);
+        let mut i = 0;
+        while i < n {
+            let mut w = Cpx::new(1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = x[i + k];
+                let v = x[i + k + len / 2] * w;
+                x[i + k] = u + v;
+                x[i + k + len / 2] = u - v;
+                w = w * wlen;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let s = 1.0 / n as f64;
+        for v in x.iter_mut() {
+            *v = v.scale(s);
+        }
+    }
+}
+
+/// Out-of-place FFT of a complex slice.
+pub fn fft(x: &[Cpx], inverse: bool) -> Vec<Cpx> {
+    let mut v = x.to_vec();
+    fft_inplace(&mut v, inverse);
+    v
+}
+
+/// FFT of a real signal (full complex spectrum).
+pub fn rfft_full(x: &[f64]) -> Vec<Cpx> {
+    fft(&x.iter().map(|&v| Cpx::new(v, 0.0)).collect::<Vec<_>>(), false)
+}
+
+// ---------------------------------------------------------------------------
+// Convolutions
+// ---------------------------------------------------------------------------
+
+/// Circular convolution by the O(N²) definition (the ground-truth oracle).
+pub fn direct_conv(u: &[f64], k: &[f64]) -> Vec<f64> {
+    let n = u.len();
+    assert_eq!(n, k.len());
+    (0..n)
+        .map(|i| (0..n).map(|j| u[j] * k[(n + i - j) % n]).sum())
+        .collect()
+}
+
+/// Circular FFT convolution (the fused "fusion-only" baseline).
+pub fn fft_conv(u: &[f64], k: &[f64]) -> Vec<f64> {
+    let n = u.len();
+    assert_eq!(n, k.len());
+    let uf = rfft_full(u);
+    let kf = rfft_full(k);
+    let prod: Vec<Cpx> = uf.iter().zip(&kf).map(|(&a, &b)| a * b).collect();
+    fft(&prod, true).iter().map(|c| c.re).collect()
+}
+
+/// Causal convolution: zero-pad to 2N, convolve, truncate (Section 2.1).
+pub fn causal_conv(u: &[f64], k: &[f64]) -> Vec<f64> {
+    let n = u.len();
+    let mut up = u.to_vec();
+    up.resize(2 * n, 0.0);
+    let mut kp = k.to_vec();
+    kp.resize(2 * n, 0.0);
+    fft_conv(&up, &kp)[..n].to_vec()
+}
+
+/// Circular convolution against an explicit (possibly sparsified) spectrum.
+pub fn fft_conv_spectrum(u: &[f64], kf: &[Cpx]) -> Vec<f64> {
+    let uf = rfft_full(u);
+    let prod: Vec<Cpx> = uf.iter().zip(kf).map(|(&a, &b)| a * b).collect();
+    fft(&prod, true).iter().map(|c| c.re).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Monarch decomposition (mirror of the Pallas kernel math)
+// ---------------------------------------------------------------------------
+
+/// Balanced power-of-two factor split (mirrors `fftmats.monarch_factors`).
+pub fn monarch_factors(n: usize, order: usize) -> Vec<usize> {
+    assert!(is_pow2(n) && order >= 1);
+    let logn = n.trailing_zeros() as usize;
+    assert!(order <= logn.max(1), "cannot split {n} into {order} factors");
+    let base = logn / order;
+    let extra = logn % order;
+    (0..order).map(|i| 1usize << (base + usize::from(i < extra))).collect()
+}
+
+/// Forward order-2 Monarch FFT: returns the digit-permuted spectrum
+/// `B[k1, k2] = FFT(x)[k1 + N1*k2]` flattened row-major (layout identical
+/// to the Pallas kernels / `fftmats.monarch_fft_ref`).
+pub fn monarch_fft2(x: &[Cpx], n1: usize, n2: usize) -> Vec<Cpx> {
+    let n = n1 * n2;
+    assert_eq!(x.len(), n);
+    // Stage 1: DFT down the columns of the (n1, n2) row-major matrix.
+    let mut a = vec![Cpx::ZERO; n];
+    for k1 in 0..n1 {
+        for j2 in 0..n2 {
+            let mut acc = Cpx::ZERO;
+            for m1 in 0..n1 {
+                let w = Cpx::cis(-2.0 * std::f64::consts::PI * (k1 * m1) as f64 / n1 as f64);
+                acc = acc + x[m1 * n2 + j2] * w;
+            }
+            // Twiddle T[k1, j2].
+            let t = Cpx::cis(-2.0 * std::f64::consts::PI * (k1 * j2) as f64 / n as f64);
+            a[k1 * n2 + j2] = acc * t;
+        }
+    }
+    // Stage 2: DFT along the rows.
+    let mut b = vec![Cpx::ZERO; n];
+    for k1 in 0..n1 {
+        for k2 in 0..n2 {
+            let mut acc = Cpx::ZERO;
+            for j2 in 0..n2 {
+                let w = Cpx::cis(-2.0 * std::f64::consts::PI * (k2 * j2) as f64 / n2 as f64);
+                acc = acc + a[k1 * n2 + j2] * w;
+            }
+            b[k1 * n2 + k2] = acc;
+        }
+    }
+    b
+}
+
+/// Inverse of [`monarch_fft2`].
+pub fn monarch_ifft2(y: &[Cpx], n1: usize, n2: usize) -> Vec<Cpx> {
+    let n = n1 * n2;
+    assert_eq!(y.len(), n);
+    let mut a = vec![Cpx::ZERO; n];
+    for k1 in 0..n1 {
+        for j2 in 0..n2 {
+            let mut acc = Cpx::ZERO;
+            for k2 in 0..n2 {
+                let w = Cpx::cis(2.0 * std::f64::consts::PI * (k2 * j2) as f64 / n2 as f64);
+                acc = acc + y[k1 * n2 + k2] * w;
+            }
+            let t = Cpx::cis(2.0 * std::f64::consts::PI * (k1 * j2) as f64 / n as f64);
+            a[k1 * n2 + j2] = (acc * t).scale(1.0 / n2 as f64);
+        }
+    }
+    let mut x = vec![Cpx::ZERO; n];
+    for m1 in 0..n1 {
+        for j2 in 0..n2 {
+            let mut acc = Cpx::ZERO;
+            for k1 in 0..n1 {
+                let w = Cpx::cis(2.0 * std::f64::consts::PI * (k1 * m1) as f64 / n1 as f64);
+                acc = acc + a[k1 * n2 + j2] * w;
+            }
+            x[m1 * n2 + j2] = acc.scale(1.0 / n1 as f64);
+        }
+    }
+    x
+}
+
+/// `order[j]` = true DFT frequency at Monarch slot `j` (order-2 layout).
+pub fn monarch_order2(n1: usize, n2: usize) -> Vec<usize> {
+    let mut out = vec![0usize; n1 * n2];
+    for k1 in 0..n1 {
+        for k2 in 0..n2 {
+            out[k1 * n2 + k2] = k1 + n1 * k2;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Helpers used by tests and the coordinator
+// ---------------------------------------------------------------------------
+
+/// Random real signal (oracle tests / synthetic workloads).
+pub fn random_signal(n: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Max absolute difference between two real vectors.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_dft(x: &[Cpx]) -> Vec<Cpx> {
+        let n = x.len();
+        (0..n)
+            .map(|k| {
+                let mut acc = Cpx::ZERO;
+                for (j, &v) in x.iter().enumerate() {
+                    acc = acc + v * Cpx::cis(-2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        let mut rng = Rng::new(1);
+        for &n in &[2usize, 8, 32, 128] {
+            let x: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+            let got = fft(&x, false);
+            let want = naive_dft(&x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((*g - *w).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fft_roundtrip() {
+        let mut rng = Rng::new(2);
+        let x: Vec<Cpx> = (0..256).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+        let back = fft(&fft(&x, false), true);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((*a - *b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fft_conv_matches_direct() {
+        let mut rng = Rng::new(3);
+        for &n in &[4usize, 16, 64, 256] {
+            let u = random_signal(n, &mut rng);
+            let k = random_signal(n, &mut rng);
+            assert!(max_abs_diff(&fft_conv(&u, &k), &direct_conv(&u, &k)) < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn causal_conv_is_causal() {
+        let mut rng = Rng::new(4);
+        let n = 64;
+        let k = random_signal(n, &mut rng);
+        let mut u1 = random_signal(n, &mut rng);
+        let y1 = causal_conv(&u1, &k);
+        for t in u1.iter_mut().skip(n / 2) {
+            *t += 100.0;
+        }
+        let y2 = causal_conv(&u1, &k);
+        assert!(max_abs_diff(&y1[..n / 2], &y2[..n / 2]) < 1e-8);
+    }
+
+    #[test]
+    fn monarch_matches_fft_permuted() {
+        let mut rng = Rng::new(5);
+        for &(n1, n2) in &[(4usize, 8usize), (8, 8), (16, 8)] {
+            let n = n1 * n2;
+            let x: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+            let got = monarch_fft2(&x, n1, n2);
+            let full = fft(&x, false);
+            let order = monarch_order2(n1, n2);
+            for (j, &f) in order.iter().enumerate() {
+                assert!((got[j] - full[f]).abs() < 1e-8, "({n1},{n2}) slot {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn monarch_roundtrip() {
+        let mut rng = Rng::new(6);
+        let (n1, n2) = (8, 16);
+        let x: Vec<Cpx> = (0..n1 * n2).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+        let back = monarch_ifft2(&monarch_fft2(&x, n1, n2), n1, n2);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((*a - *b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn monarch_conv_via_layout() {
+        // Convolution entirely in Monarch layout == direct convolution.
+        let mut rng = Rng::new(7);
+        let (n1, n2) = (8, 8);
+        let n = n1 * n2;
+        let u = random_signal(n, &mut rng);
+        let k = random_signal(n, &mut rng);
+        let uc: Vec<Cpx> = u.iter().map(|&v| Cpx::new(v, 0.0)).collect();
+        let kc: Vec<Cpx> = k.iter().map(|&v| Cpx::new(v, 0.0)).collect();
+        let um = monarch_fft2(&uc, n1, n2);
+        let km = monarch_fft2(&kc, n1, n2);
+        let prod: Vec<Cpx> = um.iter().zip(&km).map(|(&a, &b)| a * b).collect();
+        let y: Vec<f64> = monarch_ifft2(&prod, n1, n2).iter().map(|c| c.re).collect();
+        assert!(max_abs_diff(&y, &direct_conv(&u, &k)) < 1e-8);
+    }
+
+    #[test]
+    fn factors_balanced() {
+        assert_eq!(monarch_factors(4096, 2), vec![64, 64]);
+        assert_eq!(monarch_factors(8192, 2), vec![128, 64]);
+        assert_eq!(monarch_factors(32768, 3), vec![32, 32, 32]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fft_rejects_non_pow2() {
+        let mut x = vec![Cpx::ZERO; 12];
+        fft_inplace(&mut x, false);
+    }
+}

@@ -1,0 +1,32 @@
+//! FlashFFTConv (ICLR 2024) reproduction — Layer-3 Rust coordinator.
+//!
+//! This crate is the runtime half of a three-layer stack:
+//!
+//! * **L1/L2 (build time, Python)** — Pallas Monarch-FFT convolution
+//!   kernels and JAX models, AOT-lowered once to HLO text by
+//!   `python/compile/aot.py` (`make artifacts`).
+//! * **L3 (this crate)** — loads the HLO artifacts through PJRT (the
+//!   [`xla`] crate) and owns everything the paper's system does around the
+//!   kernel: sequence-length routing, dynamic batching, order-`p` selection
+//!   via the §3.2 cost model, memory accounting, partial-convolution
+//!   length extension, frequency-sparse kernel management, training and
+//!   serving loops. Python never runs on the request path.
+//!
+//! The build environment is fully offline, so the crate also carries its
+//! own substrates (DESIGN.md §3/§4): a line-based artifact manifest parser,
+//! a CLI parser, a worker pool, a deterministic RNG, a micro-benchmark
+//! harness, a property-testing mini-framework, and a native FFT/convolution
+//! library used as an oracle and as the "fusion-only" ablation baseline.
+
+pub mod bench;
+pub mod coordinator;
+pub mod costmodel;
+pub mod fft;
+pub mod prop;
+pub mod runtime;
+pub mod server;
+pub mod trainer;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based; errors carry context chains).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,432 @@
+//! `flashfftconv` — CLI for the FlashFFTConv reproduction.
+//!
+//! Subcommands map onto the paper's experiments (DESIGN.md §5):
+//!
+//! ```text
+//! flashfftconv check                         # load + verify golden artifacts
+//! flashfftconv train        [--artifact lm_train_monarch] [--steps N]
+//! flashfftconv train-budget [--seconds S]    # Table 1 protocol
+//! flashfftconv eval-partial [--keeps 256,128,64]   # Table 7
+//! flashfftconv eval-sparse                   # Table 9 quality column
+//! flashfftconv extend       [--total-len N]  # Table 8 sliding-window
+//! flashfftconv serve        [--requests N]   # serving-path smoke + stats
+//! flashfftconv costmodel    [--hw a100]      # Figure 4 series (CSV)
+//! ```
+
+use std::time::Duration;
+
+use flashfftconv::coordinator::partial::{filter_mask, ExtensionPlan};
+use flashfftconv::coordinator::router::ConvKind;
+use flashfftconv::coordinator::service::{ConvRequest, ConvService};
+use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::runtime::{golden, HostTensor, Runtime};
+use flashfftconv::trainer::data::DnaGen;
+use flashfftconv::trainer::run::Budget;
+use flashfftconv::trainer::{TrainConfig, Trainer};
+use flashfftconv::util::{logging, Args, Rng};
+use flashfftconv::{costmodel, log_info};
+
+fn main() {
+    logging::init_from_env();
+    let args = match Args::parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> flashfftconv::Result<()> {
+    if let Some(level) = args.opt("log-level").and_then(|v| logging::parse_level(&v)) {
+        logging::set_level(level);
+    }
+    let dir = args.get("artifacts", "artifacts");
+    match args.command.as_deref() {
+        Some("check") => cmd_check(&dir, args),
+        Some("train") => cmd_train(&dir, args),
+        Some("train-budget") => cmd_train_budget(&dir, args),
+        Some("eval-partial") => cmd_eval_partial(&dir, args),
+        Some("eval-sparse") => cmd_eval_sparse(&dir, args),
+        Some("extend") => cmd_extend(&dir, args),
+        Some("serve") => cmd_serve(&dir, args),
+        Some("pathfinder") => cmd_pathfinder(&dir, args),
+        Some("costmodel") => cmd_costmodel(args),
+        Some(other) => anyhow::bail!("unknown subcommand {other:?}\n{HELP}"),
+        None => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "flashfftconv <check|train|train-budget|eval-partial|eval-sparse|extend|serve|costmodel> [--artifacts DIR] [flags]";
+
+/// Verify every golden artifact end to end (python -> HLO -> rust).
+fn cmd_check(dir: &str, args: &Args) -> flashfftconv::Result<()> {
+    let tol = args.get_f64("tol", 2e-3)?;
+    let only = args.opt("only");
+    let keep_going = args.flag("keep-going");
+    args.finish()?;
+    let runtime = Runtime::new(dir)?;
+    let names: Vec<String> = runtime
+        .manifest()
+        .artifacts
+        .values()
+        .filter(|a| a.golden_file.is_some())
+        .filter(|a| only.as_deref().map_or(true, |f| a.name.contains(f)))
+        .map(|a| a.name.clone())
+        .collect();
+    let mut checked = 0;
+    let mut failed = 0;
+    for name in names {
+        let spec = runtime.manifest().get(&name)?.clone();
+        let g = golden::load(runtime.manifest(), &spec)?.expect("golden present");
+        let mut art = runtime.load(&name)?;
+        let outs = art.call(&g.inputs)?;
+        // Relative tolerance: golden outputs were produced by a *newer*
+        // XLA (jaxlib) with different fusion/rounding, so errors scale
+        // with output magnitude.
+        let mut worst = 0.0f64;
+        for (got, want) in outs.iter().zip(&g.outputs) {
+            let scale = want
+                .as_f32()
+                .iter()
+                .map(|v| v.abs() as f64)
+                .fold(1.0f64, f64::max);
+            worst = worst.max(got.max_abs_diff(want) / scale);
+        }
+        if worst > tol {
+            failed += 1;
+            let msg = format!("{name}: max|err| = {worst:.3e} > {tol:.1e}");
+            if keep_going {
+                println!("  FAIL {msg}");
+            } else {
+                anyhow::bail!(msg);
+            }
+        } else {
+            checked += 1;
+            println!("  ok {name}  (max|err| {worst:.1e})");
+        }
+    }
+    println!("check: {checked} verified, {failed} failed (tol {tol:.0e})");
+    anyhow::ensure!(failed == 0, "{failed} golden artifacts failed");
+    Ok(())
+}
+
+fn cmd_train(dir: &str, args: &Args) -> flashfftconv::Result<()> {
+    let artifact = args.get("artifact", "lm_train_monarch");
+    let steps = args.get_usize("steps", 200)? as u64;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let log_every = args.get_usize("log-every", 20)? as u64;
+    let ckpt = args.opt("checkpoint").map(std::path::PathBuf::from);
+    let curve = args.opt("loss-csv");
+    args.finish()?;
+
+    let runtime = Runtime::new(dir)?;
+    let mut trainer = Trainer::new(
+        &runtime,
+        TrainConfig { artifact, budget: Budget::Steps(steps), log_every, seed, checkpoint: ckpt },
+    )?;
+    let outcome = trainer.run()?;
+    println!(
+        "trained {} steps in {:.1}s  loss {:.4} -> {:.4}  ({:.0} tok/s)\n{}",
+        outcome.steps,
+        outcome.elapsed.as_secs_f64(),
+        outcome.first_loss,
+        outcome.final_loss,
+        outcome.log.tokens_per_sec(),
+        outcome.log.sparkline(60),
+    );
+    if let Some(path) = curve {
+        outcome.log.write_csv(&path)?;
+        println!("loss curve -> {path}");
+    }
+    Ok(())
+}
+
+/// Table 1 protocol: same wall-clock budget, monarch vs baseline conv.
+fn cmd_train_budget(dir: &str, args: &Args) -> flashfftconv::Result<()> {
+    let seconds = args.get_f64("seconds", 60.0)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    args.finish()?;
+    let runtime = Runtime::new(dir)?;
+    let mut rows = vec![];
+    for variant in ["monarch", "baseline"] {
+        let mut trainer = Trainer::new(
+            &runtime,
+            TrainConfig {
+                artifact: format!("lm_train_{variant}"),
+                budget: Budget::WallClock(Duration::from_secs_f64(seconds)),
+                log_every: 50,
+                seed,
+                checkpoint: None,
+            },
+        )?;
+        let o = trainer.run()?;
+        println!(
+            "{variant:>9}: {} steps, final loss {:.4} (ppl {:.2})",
+            o.steps,
+            o.final_loss,
+            o.final_loss.exp()
+        );
+        rows.push((variant, o.steps, o.final_loss));
+    }
+    let (mv, bv) = (&rows[0], &rows[1]);
+    println!(
+        "\nTable-1 shape: same {seconds:.0}s budget -> monarch {} steps vs baseline {} steps, \
+         loss {:.4} vs {:.4} (lower is better)",
+        mv.1, bv.1, mv.2, bv.2
+    );
+    Ok(())
+}
+
+/// Table 7: filter truncation sweep on the kmask eval artifact.
+fn cmd_eval_partial(dir: &str, args: &Args) -> flashfftconv::Result<()> {
+    let artifact = args.get("artifact", "lm_eval_kmask");
+    let keeps = args.get_usize_list("keeps", &[256, 192, 128, 64, 32, 16])?;
+    let batches = args.get_usize("batches", 4)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    args.finish()?;
+
+    let runtime = Runtime::new(dir)?;
+    let mut art = runtime.load(&artifact)?;
+    let spec = art.spec().clone();
+    let seq = spec.meta_usize("seq_len").unwrap();
+    let vocab = spec.meta_usize("vocab").unwrap();
+    let batch = spec.meta_usize("batch").unwrap();
+    let mut gen = flashfftconv::trainer::data::TokenGen::new(vocab, seed);
+    println!("keep_len  mean_loss    ppl  modeled_train_mem_MB");
+    for keep in keeps {
+        let keep = keep.min(seq);
+        let mask = filter_mask(seq, keep);
+        let mut total = 0.0;
+        for _ in 0..batches {
+            let tokens = gen.batch(batch, seq + 1);
+            let outs = art.call(&[
+                HostTensor::i32(tokens, &[batch, seq + 1]),
+                HostTensor::f32(mask.clone(), &[seq]),
+            ])?;
+            total += outs[0].item();
+        }
+        let loss = total / batches as f64;
+        let mem =
+            flashfftconv::coordinator::memory::partial_train_bytes(8, 864, seq, keep) as f64 / 1e6;
+        println!("{keep:>8}  {loss:>9.4}  {:>5.2}  {mem:>8.1}", loss.exp());
+    }
+    Ok(())
+}
+
+/// Table 9 quality column: frequency-sparse eval artifacts.
+fn cmd_eval_sparse(dir: &str, args: &Args) -> flashfftconv::Result<()> {
+    let batches = args.get_usize("batches", 4)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    args.finish()?;
+    let runtime = Runtime::new(dir)?;
+    let mut names: Vec<String> = vec!["lm_eval_kmask".into()];
+    names.extend(
+        runtime
+            .manifest()
+            .artifacts
+            .keys()
+            .filter(|n| n.starts_with("lm_eval_sparse_"))
+            .cloned(),
+    );
+    println!("artifact             sparsity  mean_loss    ppl");
+    for name in names {
+        let mut art = runtime.load(&name)?;
+        let spec = art.spec().clone();
+        let seq = spec.meta_usize("seq_len").unwrap();
+        let vocab = spec.meta_usize("vocab").unwrap();
+        let batch = spec.meta_usize("batch").unwrap();
+        let sparsity = spec.meta("sparsity").unwrap_or("0.0000").to_string();
+        let kmask = spec.inputs.iter().any(|i| i.spec.name == "kmask");
+        let mut gen = flashfftconv::trainer::data::TokenGen::new(vocab, seed);
+        let mut total = 0.0;
+        for _ in 0..batches {
+            let tokens = HostTensor::i32(gen.batch(batch, seq + 1), &[batch, seq + 1]);
+            let outs = if kmask {
+                art.call(&[tokens, HostTensor::f32(vec![1.0; seq], &[seq])])?
+            } else {
+                art.call(&[tokens])?
+            };
+            total += outs[0].item();
+        }
+        let loss = total / batches as f64;
+        println!("{name:<20} {sparsity:>8}  {loss:>9.4}  {:>5.2}", loss.exp());
+    }
+    Ok(())
+}
+
+/// Table 8: sliding-window extension of the DNA model to longer sequences.
+fn cmd_extend(dir: &str, args: &Args) -> flashfftconv::Result<()> {
+    let total_len = args.get_usize("total-len", 16384)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    args.finish()?;
+    let runtime = Runtime::new(dir)?;
+    let mut art = runtime.load("dna_eval")?;
+    let spec = art.spec().clone();
+    let context = spec.meta_usize("seq_len").unwrap();
+    let batch = spec.meta_usize("batch").unwrap();
+    anyhow::ensure!(batch == 1, "extension path expects a batch-1 eval artifact");
+
+    let mut gen = DnaGen::new(64, seed);
+    let long_seq = gen.sequence(total_len + 1);
+    let plan = ExtensionPlan::new(total_len, context, context / 2)?;
+    println!(
+        "extending context {} -> {} tokens with {} windows (stride {})",
+        context,
+        total_len,
+        plan.calls(),
+        plan.stride
+    );
+    let kmask_len = spec
+        .inputs
+        .iter()
+        .find(|i| i.spec.name == "kmask")
+        .map(|i| i.spec.numel())
+        .unwrap_or(context);
+    let mask = vec![1.0f32; kmask_len];
+    let mut losses = vec![];
+    for w in &plan.windows {
+        let window: Vec<i32> = long_seq[w.start..w.start + context + 1].to_vec();
+        let outs = art.call(&[
+            HostTensor::i32(window, &[1, context + 1]),
+            HostTensor::f32(mask.clone(), &[kmask_len]),
+        ])?;
+        losses.push(outs[0].item());
+    }
+    let combined = plan.combine_losses(&losses);
+    println!(
+        "sequence-level loss {:.4} (ppl {:.3}) over {} tokens",
+        combined,
+        combined.exp(),
+        total_len
+    );
+    Ok(())
+}
+
+/// Serving-path smoke: submit random conv requests, print service stats.
+fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
+    let requests = args.get_usize("requests", 32)?;
+    let len = args.get_usize("len", 1024)?;
+    let variant = args.get("variant", "monarch");
+    let wait_ms = args.get_usize("max-wait-ms", 5)?;
+    args.finish()?;
+    let policy = BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(wait_ms as u64) };
+    let service = ConvService::start(dir, &variant, policy)?;
+    let mut rng = Rng::new(1);
+    let heads = 16usize;
+    let mut pending = vec![];
+    for _ in 0..requests {
+        let u = rng.normal_vec(heads * len);
+        pending.push(service.submit(ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] }));
+    }
+    let mut ok = 0;
+    for rx in pending {
+        if rx.recv().map_err(|_| anyhow::anyhow!("dropped"))?.is_ok() {
+            ok += 1;
+        }
+    }
+    let s = service.stats();
+    println!(
+        "served {ok}/{requests} rows  batches {}  occupancy {:.2}  mean latency {:.2}ms",
+        s.batches.load(std::sync::atomic::Ordering::Relaxed),
+        s.mean_occupancy(),
+        s.mean_latency_ms()
+    );
+    Ok(())
+}
+
+/// Table 2 analogue: train the long-conv classifier on synthetic
+/// Pathfinder, then measure held-out accuracy (paper: 96.9% Path-X /
+/// 96.1% Path-512; random = 50%).
+fn cmd_pathfinder(dir: &str, args: &Args) -> flashfftconv::Result<()> {
+    let steps = args.get_usize("steps", 300)? as u64;
+    let eval_batches = args.get_usize("eval-batches", 16)?;
+    let seed = args.get_usize("seed", 1)? as u64;
+    args.finish()?;
+    let runtime = Runtime::new(dir)?;
+    let mut trainer = Trainer::new(
+        &runtime,
+        TrainConfig {
+            artifact: "pf_train".into(),
+            budget: Budget::Steps(steps),
+            log_every: 25,
+            seed,
+            checkpoint: None,
+        },
+    )?;
+    let o = trainer.run()?;
+    println!("pathfinder train: loss {:.4} -> {:.4} over {} steps", o.first_loss, o.final_loss, o.steps);
+
+    // Copy trained params into the eval artifact and measure accuracy.
+    let mut eval = runtime.load("pf_eval")?;
+    let names: Vec<String> = eval
+        .spec()
+        .inputs
+        .iter()
+        .filter(|i| i.spec.name.starts_with("param."))
+        .map(|i| i.spec.name.clone())
+        .collect();
+    for name in &names {
+        eval.set_operand(name, &trainer.artifact().state(name)?)?;
+    }
+    let spec = eval.spec().clone();
+    let batch = spec.meta_usize("batch").unwrap();
+    let seq = spec.meta_usize("seq_len").unwrap();
+    let side = (seq as f64).sqrt() as usize;
+    let mut gen = flashfftconv::trainer::data::PathfinderGen::new(side, seed + 1000);
+    let (mut correct, mut total) = (0usize, 0usize);
+    for _ in 0..eval_batches {
+        let (pix, labels) = gen.batch(batch);
+        let outs = eval.call(&[HostTensor::f32(pix, &[batch, seq])])?;
+        let logits = outs[0].as_f32();
+        for (i, &label) in labels.iter().enumerate() {
+            let pred = (logits[2 * i + 1] > logits[2 * i]) as i32;
+            correct += (pred == label) as usize;
+            total += 1;
+        }
+    }
+    let acc = 100.0 * correct as f64 / total as f64;
+    println!(
+        "pathfinder held-out accuracy: {acc:.1}% over {total} examples \
+         (random = 50%; paper Path-X/512: 96.9/96.1)"
+    );
+    Ok(())
+}
+
+/// Figure 4: cost-model series as CSV.
+fn cmd_costmodel(args: &Args) -> flashfftconv::Result<()> {
+    let hw_name = args.get("hw", "a100");
+    let constants = args.flag("constants");
+    args.finish()?;
+    let hw = match hw_name.as_str() {
+        "a100" => &costmodel::A100,
+        "h100" => &costmodel::H100,
+        "cpu" => &costmodel::CPU,
+        other => anyhow::bail!("unknown hw profile {other:?}"),
+    };
+    if constants {
+        println!(
+            "profile {}: hbm {:.2e} B/s, sram {:.2e} B/s, matmul {:.2e} F/s, general {:.2e} F/s, unit {}",
+            hw.name, hw.hbm_bw, hw.sram_bw, hw.matmul_flops, hw.general_flops, hw.matrix_unit
+        );
+        return Ok(());
+    }
+    println!("n,p,cost_seconds,best");
+    for pt in costmodel::figure4_series(hw, 8, 22) {
+        let best = costmodel::best_order(pt.n, hw) == pt.p;
+        println!("{},{},{:.6e},{}", pt.n, pt.p, pt.cost, best);
+    }
+    log_info!("figure-4 series for {} written to stdout", hw.name);
+    Ok(())
+}

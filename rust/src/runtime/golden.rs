@@ -1,0 +1,54 @@
+//! Golden-transcript loading: the cross-language correctness check.
+//!
+//! For selected artifacts, `aot.py` records the example runtime inputs and
+//! the outputs JAX produced (`<name>.golden.bin`: inputs then outputs, raw
+//! little-endian, in manifest order). Integration tests replay the inputs
+//! through the Rust runtime and compare — proving the full
+//! python-AOT -> HLO-text -> PJRT-compile -> execute chain is numerically
+//! faithful.
+
+use anyhow::{bail, Context};
+
+use crate::runtime::tensor::HostTensor;
+use crate::util::manifest::{ArtifactSpec, InputKind, Manifest};
+
+/// A replayable golden transcript.
+#[derive(Debug)]
+pub struct Golden {
+    pub inputs: Vec<HostTensor>,
+    pub outputs: Vec<HostTensor>,
+}
+
+/// Load the golden transcript for `spec`, if it has one.
+pub fn load(manifest: &Manifest, spec: &ArtifactSpec) -> crate::Result<Option<Golden>> {
+    let Some(file) = &spec.golden_file else {
+        return Ok(None);
+    };
+    let bytes = std::fs::read(manifest.path(file))
+        .with_context(|| format!("reading golden file {file}"))?;
+    let mut off = 0usize;
+    let mut take = |byte_len: usize| -> crate::Result<&[u8]> {
+        if off + byte_len > bytes.len() {
+            bail!("golden file {file} truncated at offset {off}");
+        }
+        let s = &bytes[off..off + byte_len];
+        off += byte_len;
+        Ok(s)
+    };
+    let mut inputs = vec![];
+    for input in &spec.inputs {
+        if matches!(input.kind, InputKind::Runtime) {
+            let s = take(input.spec.byte_len())?;
+            inputs.push(HostTensor::from_bytes(input.spec.dtype, &input.spec.shape, s)?);
+        }
+    }
+    let mut outputs = vec![];
+    for out in &spec.outputs {
+        let s = take(out.byte_len())?;
+        outputs.push(HostTensor::from_bytes(out.dtype, &out.shape, s)?);
+    }
+    if off != bytes.len() {
+        bail!("golden file {file} has {} trailing bytes", bytes.len() - off);
+    }
+    Ok(Some(Golden { inputs, outputs }))
+}

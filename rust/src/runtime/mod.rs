@@ -1,0 +1,266 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from Rust.
+//!
+//! This is the bridge between the Python compile path and the Rust
+//! coordinator. An [`Artifact`] owns one compiled executable plus its
+//! fixture-backed operands (FFT matrices, initial model state) held as
+//! host literals; [`Artifact::call`] assembles the full operand list from
+//! the caller's runtime inputs, and [`Artifact::step`] additionally
+//! round-trips training state (outputs feed the next call's state inputs).
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 serializes protos with
+//! 64-bit instruction ids which this XLA build rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod golden;
+pub mod tensor;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::manifest::{ArtifactSpec, InputKind, Manifest};
+pub use tensor::HostTensor;
+
+/// Shared PJRT client + artifact loader/cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    fixture_cache: std::sync::Mutex<BTreeMap<String, Arc<Vec<u8>>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over the given artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::log_debug!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self { client, manifest, fixture_cache: Default::default() })
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn fixture_bytes(&self, file: &str) -> crate::Result<Arc<Vec<u8>>> {
+        let mut cache = self.fixture_cache.lock().unwrap();
+        if let Some(b) = cache.get(file) {
+            return Ok(Arc::clone(b));
+        }
+        let path = self.manifest.path(file);
+        let bytes = Arc::new(
+            std::fs::read(&path).with_context(|| format!("reading fixture {}", path.display()))?,
+        );
+        cache.insert(file.to_string(), Arc::clone(&bytes));
+        Ok(bytes)
+    }
+
+    /// Load and compile one artifact by name.
+    pub fn load(&self, name: &str) -> crate::Result<Artifact> {
+        let spec = self.manifest.get(name)?.clone();
+        let t0 = Instant::now();
+        let hlo_path = self.manifest.path(&spec.hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let parse_compile = t0.elapsed();
+
+        // Materialize const + state operands from fixtures as literals.
+        let mut fixed: Vec<Option<xla::Literal>> = Vec::with_capacity(spec.inputs.len());
+        let mut state_positions = vec![];
+        for (idx, input) in spec.inputs.iter().enumerate() {
+            match &input.kind {
+                InputKind::Runtime => fixed.push(None),
+                InputKind::Const { file, offset } | InputKind::State { file, offset } => {
+                    let bytes = self.fixture_bytes(file)?;
+                    let len = input.spec.byte_len();
+                    let slice = bytes
+                        .get(*offset..*offset + len)
+                        .ok_or_else(|| anyhow!("fixture {file} too short for {}", input.spec.name))?;
+                    let lit = tensor::literal_from_bytes(input.spec.dtype, &input.spec.shape, slice)?;
+                    if matches!(input.kind, InputKind::State { .. }) {
+                        state_positions.push(idx);
+                    }
+                    fixed.push(Some(lit));
+                }
+            }
+        }
+        crate::log_info!(
+            "loaded {name}: {} inputs ({} runtime, {} state), compile {:.0}ms",
+            spec.inputs.len(),
+            spec.runtime_input_indices().len(),
+            state_positions.len(),
+            parse_compile.as_secs_f64() * 1e3
+        );
+        Ok(Artifact { spec, exe, fixed, state_positions, calls: 0 })
+    }
+}
+
+/// One compiled artifact with resident fixture/state operands.
+pub struct Artifact {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Per input position: `None` for runtime inputs, `Some(literal)` for
+    /// const/state operands (state literals are replaced by [`Artifact::step`]).
+    fixed: Vec<Option<xla::Literal>>,
+    state_positions: Vec<usize>,
+    calls: u64,
+}
+
+impl Artifact {
+    /// The manifest entry this artifact was loaded from.
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Total executions so far.
+    pub fn call_count(&self) -> u64 {
+        self.calls
+    }
+
+    fn assemble<'a>(
+        &'a self,
+        runtime_inputs: &'a [xla::Literal],
+    ) -> crate::Result<Vec<&'a xla::Literal>> {
+        let need = self.spec.runtime_input_indices().len();
+        if runtime_inputs.len() != need {
+            bail!(
+                "artifact {} expects {need} runtime inputs, got {}",
+                self.spec.name,
+                runtime_inputs.len()
+            );
+        }
+        let mut rt = runtime_inputs.iter();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.fixed.len());
+        for slot in &self.fixed {
+            match slot {
+                Some(lit) => args.push(lit),
+                None => args.push(rt.next().unwrap()),
+            }
+        }
+        Ok(args)
+    }
+
+    /// Execute with raw literals; returns the decomposed output tuple.
+    pub fn call_literals(
+        &mut self,
+        runtime_inputs: &[xla::Literal],
+    ) -> crate::Result<Vec<xla::Literal>> {
+        let args = self.assemble(runtime_inputs)?;
+        let bufs = self.exe.execute::<&xla::Literal>(&args).context("execute")?;
+        self.calls += 1;
+        let lit = bufs[0][0].to_literal_sync().context("device->host transfer")?;
+        // aot.py lowers with return_tuple=True: always a (possibly 1-ary) tuple.
+        lit.to_tuple().context("decompose output tuple")
+    }
+
+    /// Execute with host tensors (validated against the manifest signature).
+    pub fn call(&mut self, runtime_inputs: &[HostTensor]) -> crate::Result<Vec<HostTensor>> {
+        let rt_idx = self.spec.runtime_input_indices();
+        if runtime_inputs.len() != rt_idx.len() {
+            bail!(
+                "artifact {} expects {} runtime inputs, got {}",
+                self.spec.name,
+                rt_idx.len(),
+                runtime_inputs.len()
+            );
+        }
+        for (t, &idx) in runtime_inputs.iter().zip(&rt_idx) {
+            let want = &self.spec.inputs[idx].spec;
+            if t.shape != want.shape || t.dtype() != want.dtype {
+                bail!(
+                    "artifact {} input {:?}: expected {:?} {:?}, got {:?} {:?}",
+                    self.spec.name,
+                    want.name,
+                    want.dtype,
+                    want.shape,
+                    t.dtype(),
+                    t.shape
+                );
+            }
+        }
+        let lits: Vec<xla::Literal> = runtime_inputs
+            .iter()
+            .map(tensor::literal_from_tensor)
+            .collect::<crate::Result<_>>()?;
+        let outs = self.call_literals(&lits)?;
+        outs.iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, spec)| tensor::tensor_from_literal(l, spec))
+            .collect()
+    }
+
+    /// Execute and round-trip training state: the first `n_state` outputs
+    /// replace the state operands for the next call (aot.py contract).
+    /// Returns only the non-state outputs (e.g. the loss).
+    pub fn step(&mut self, runtime_inputs: &[HostTensor]) -> crate::Result<Vec<HostTensor>> {
+        let lits: Vec<xla::Literal> = runtime_inputs
+            .iter()
+            .map(tensor::literal_from_tensor)
+            .collect::<crate::Result<_>>()?;
+        let mut outs = self.call_literals(&lits)?;
+        let ns = self.state_positions.len();
+        if outs.len() < ns {
+            bail!("artifact {} returned {} outputs < {ns} state slots", self.spec.name, outs.len());
+        }
+        let rest = outs.split_off(ns);
+        for (pos, lit) in self.state_positions.clone().into_iter().zip(outs) {
+            self.fixed[pos] = Some(lit);
+        }
+        rest.iter()
+            .zip(&self.spec.outputs[ns..])
+            .map(|(l, spec)| tensor::tensor_from_literal(l, spec))
+            .collect()
+    }
+
+    /// Read back a state operand by input name (e.g. a trained parameter).
+    pub fn state(&self, name: &str) -> crate::Result<HostTensor> {
+        let (idx, input) = self
+            .spec
+            .inputs
+            .iter()
+            .enumerate()
+            .find(|(_, i)| i.spec.name == name)
+            .ok_or_else(|| anyhow!("no input named {name:?}"))?;
+        let lit = self.fixed[idx]
+            .as_ref()
+            .ok_or_else(|| anyhow!("input {name:?} is a runtime input, not state"))?;
+        tensor::tensor_from_literal(lit, &input.spec)
+    }
+
+    /// Overwrite a const/state operand (partial-conv & sparsity workflows:
+    /// the coordinator swaps filter banks without recompiling).
+    pub fn set_operand(&mut self, name: &str, value: &HostTensor) -> crate::Result<()> {
+        let (idx, input) = self
+            .spec
+            .inputs
+            .iter()
+            .enumerate()
+            .find(|(_, i)| i.spec.name == name)
+            .ok_or_else(|| anyhow!("no input named {name:?}"))?;
+        if matches!(input.kind, InputKind::Runtime) {
+            bail!("input {name:?} is a runtime input; pass it to call() instead");
+        }
+        if value.shape != input.spec.shape || value.dtype() != input.spec.dtype {
+            bail!(
+                "operand {name:?} expects {:?} {:?}, got {:?} {:?}",
+                input.spec.dtype,
+                input.spec.shape,
+                value.dtype(),
+                value.shape
+            );
+        }
+        self.fixed[idx] = Some(tensor::literal_from_tensor(value)?);
+        Ok(())
+    }
+}

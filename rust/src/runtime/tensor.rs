@@ -1,0 +1,248 @@
+//! Host-side tensors and conversion to/from XLA literals.
+
+use anyhow::{bail, Context};
+
+use crate::util::manifest::{DType, TensorSpec};
+
+/// Typed host storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor: shape + typed data. The lingua franca between the
+/// coordinator, trainer, server, and the PJRT runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: HostData,
+}
+
+impl HostTensor {
+    /// Float tensor from data + shape (checked).
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data: HostData::F32(data) }
+    }
+
+    /// Int tensor from data + shape (checked).
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data: HostData::I32(data) }
+    }
+
+    /// Scalar f32.
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: HostData::F32(vec![v]) }
+    }
+
+    /// All-zero f32 tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self::f32(vec![0.0; shape.iter().product()], shape)
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            HostData::F32(_) => DType::F32,
+            HostData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Borrow as f32 slice (panics on dtype mismatch).
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            HostData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    /// Borrow as i32 slice (panics on dtype mismatch).
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            HostData::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    /// First element as f64 (scalar readout).
+    pub fn item(&self) -> f64 {
+        match &self.data {
+            HostData::F32(v) => v[0] as f64,
+            HostData::I32(v) => v[0] as f64,
+        }
+    }
+
+    /// Raw little-endian bytes (fixture/golden/checkpoint format).
+    ///
+    /// Hot path (every artifact call serializes its runtime inputs): on
+    /// little-endian targets this is a single memcpy; the portable
+    /// per-element path is kept for exotic targets.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        #[cfg(target_endian = "little")]
+        {
+            let (ptr, len) = match &self.data {
+                HostData::F32(v) => (v.as_ptr() as *const u8, v.len() * 4),
+                HostData::I32(v) => (v.as_ptr() as *const u8, v.len() * 4),
+            };
+            // SAFETY: f32/i32 have no padding; we read len initialized bytes.
+            return unsafe { std::slice::from_raw_parts(ptr, len) }.to_vec();
+        }
+        #[cfg(not(target_endian = "little"))]
+        match &self.data {
+            HostData::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            HostData::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        }
+    }
+
+    /// Parse from raw little-endian bytes.
+    pub fn from_bytes(dtype: DType, shape: &[usize], bytes: &[u8]) -> crate::Result<Self> {
+        let numel: usize = shape.iter().product();
+        if bytes.len() != numel * dtype.size() {
+            bail!("byte length {} != {} elements of {dtype}", bytes.len(), numel);
+        }
+        #[cfg(target_endian = "little")]
+        {
+            // Single allocation + memcpy (unaligned-safe via read_unaligned).
+            return Ok(match dtype {
+                DType::F32 => {
+                    let mut v = vec![0.0f32; numel];
+                    // SAFETY: dst has exactly bytes.len() writable bytes.
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            bytes.as_ptr(),
+                            v.as_mut_ptr() as *mut u8,
+                            bytes.len(),
+                        );
+                    }
+                    Self { shape: shape.to_vec(), data: HostData::F32(v) }
+                }
+                DType::I32 => {
+                    let mut v = vec![0i32; numel];
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            bytes.as_ptr(),
+                            v.as_mut_ptr() as *mut u8,
+                            bytes.len(),
+                        );
+                    }
+                    Self { shape: shape.to_vec(), data: HostData::I32(v) }
+                }
+            });
+        }
+        #[cfg(not(target_endian = "little"))]
+        Ok(match dtype {
+            DType::F32 => Self::f32(
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                shape,
+            ),
+            DType::I32 => Self::i32(
+                bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                shape,
+            ),
+        })
+    }
+
+    /// Max |a - b| against another f32 tensor. Any non-finite element on
+    /// either side yields +inf (NaN must never compare as "equal").
+    pub fn max_abs_diff(&self, other: &HostTensor) -> f64 {
+        self.as_f32()
+            .iter()
+            .zip(other.as_f32())
+            .map(|(a, b)| {
+                if a.is_finite() && b.is_finite() {
+                    (a - b).abs() as f64
+                } else if a == b || (a.is_nan() && b.is_nan()) {
+                    0.0
+                } else {
+                    f64::INFINITY
+                }
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Build an XLA literal from raw fixture bytes.
+pub fn literal_from_bytes(dtype: DType, shape: &[usize], bytes: &[u8]) -> crate::Result<xla::Literal> {
+    let ty = match dtype {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
+        .context("literal from fixture bytes")
+}
+
+/// Convert a host tensor into an XLA literal.
+pub fn literal_from_tensor(t: &HostTensor) -> crate::Result<xla::Literal> {
+    literal_from_bytes(t.dtype(), &t.shape, &t.to_bytes())
+}
+
+/// Convert an XLA literal back into a host tensor matching `spec`.
+pub fn tensor_from_literal(lit: &xla::Literal, spec: &TensorSpec) -> crate::Result<HostTensor> {
+    match spec.dtype {
+        DType::F32 => {
+            let v: Vec<f32> = lit.to_vec().context("literal to f32 vec")?;
+            if v.len() != spec.numel() {
+                bail!("output {}: got {} elements, expected {}", spec.name, v.len(), spec.numel());
+            }
+            Ok(HostTensor::f32(v, &spec.shape))
+        }
+        DType::I32 => {
+            let v: Vec<i32> = lit.to_vec().context("literal to i32 vec")?;
+            if v.len() != spec.numel() {
+                bail!("output {}: got {} elements, expected {}", spec.name, v.len(), spec.numel());
+            }
+            Ok(HostTensor::i32(v, &spec.shape))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip_f32() {
+        let t = HostTensor::f32(vec![1.0, -2.5, 3.25, 0.0, 5.5, -6.125], &[2, 3]);
+        let b = t.to_bytes();
+        let back = HostTensor::from_bytes(DType::F32, &[2, 3], &b).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn byte_roundtrip_i32() {
+        let t = HostTensor::i32(vec![1, -2, 3, i32::MAX], &[4]);
+        let back = HostTensor::from_bytes(DType::I32, &[4], &t.to_bytes()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let t = HostTensor::scalar(4.5);
+        assert_eq!(t.shape, Vec::<usize>::new());
+        assert_eq!(t.numel(), 1);
+        assert_eq!(t.item(), 4.5);
+    }
+
+    #[test]
+    fn bad_byte_length_rejected() {
+        assert!(HostTensor::from_bytes(DType::F32, &[4], &[0u8; 7]).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![1.0], &[2]);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = HostTensor::f32(vec![1.0, 2.0], &[2]);
+        let b = HostTensor::f32(vec![1.5, 1.0], &[2]);
+        assert!((a.max_abs_diff(&b) - 1.0).abs() < 1e-12);
+    }
+}

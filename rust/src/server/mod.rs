@@ -1,0 +1,222 @@
+//! Batched model-inference server (the Table 5 serving path).
+//!
+//! Serves a forward-pass artifact (`lm_fwd_logits` / `e2e_*`) behind a
+//! dynamic batcher on a dedicated thread (PJRT handles are thread-affine),
+//! reporting latency and throughput. The offline environment has no
+//! tokio; the threaded design mirrors a vLLM-style router: accept ->
+//! queue -> fixed-shape batch -> execute -> scatter.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail};
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::service::ServiceStats;
+use crate::runtime::{Artifact, HostTensor, Runtime};
+
+/// A model inference request: one row of token ids.
+#[derive(Debug)]
+pub struct InferRequest {
+    pub tokens: Vec<i32>,
+}
+
+/// Reply: logits for the last position (greedy-decode ready), or error.
+pub type InferReply = Result<Vec<f32>, String>;
+
+enum Msg {
+    Submit { req: InferRequest, reply: Sender<InferReply>, t: Instant },
+    Shutdown,
+}
+
+/// Handle to a running model server.
+pub struct ModelServer {
+    tx: Sender<Msg>,
+    stats: Arc<ServiceStats>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl ModelServer {
+    /// Start serving the named forward artifact.
+    pub fn start(
+        artifact_dir: impl Into<std::path::PathBuf>,
+        artifact: &str,
+        policy: BatchPolicy,
+    ) -> crate::Result<Self> {
+        let dir = artifact_dir.into();
+        let name = artifact.to_string();
+        let stats = Arc::new(ServiceStats::default());
+        let stats2 = Arc::clone(&stats);
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<(usize, usize, usize), String>>();
+        let handle = std::thread::Builder::new().name("model-server".into()).spawn(move || {
+            match Worker::new(&dir, &name, policy, stats2) {
+                Ok(mut w) => {
+                    let _ = ready_tx.send(Ok((w.batch, w.seq_len, w.vocab)));
+                    w.run(rx);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                }
+            }
+        })?;
+        let (_, seq_len, vocab) = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("server thread died during startup"))?
+            .map_err(|e| anyhow!("server startup failed: {e}"))?;
+        Ok(Self { tx, stats, handle: Some(handle), seq_len, vocab })
+    }
+
+    /// Submit a request (tokens must be exactly `seq_len` long).
+    pub fn submit(&self, req: InferRequest) -> Receiver<InferReply> {
+        let (reply, rx) = channel();
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let _ = self.tx.send(Msg::Submit { req, reply, t: Instant::now() });
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn call(&self, req: InferRequest) -> crate::Result<Vec<f32>> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| anyhow!("server dropped the request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+}
+
+impl Drop for ModelServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Job {
+    tokens: Vec<i32>,
+    reply: Sender<InferReply>,
+    t: Instant,
+}
+
+struct Worker {
+    artifact: Artifact,
+    queue: Batcher<Job>,
+    stats: Arc<ServiceStats>,
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    logits_len: usize,
+}
+
+impl Worker {
+    fn new(
+        dir: &std::path::Path,
+        name: &str,
+        policy: BatchPolicy,
+        stats: Arc<ServiceStats>,
+    ) -> crate::Result<Self> {
+        let runtime = Runtime::new(dir)?;
+        let artifact = runtime.load(name)?;
+        let spec = artifact.spec();
+        if spec.meta("kind") != Some("lm_logits") {
+            bail!("artifact {name} is not an lm_logits artifact");
+        }
+        let batch = spec.meta_usize("batch").ok_or_else(|| anyhow!("missing batch"))?;
+        let seq_len = spec.meta_usize("seq_len").ok_or_else(|| anyhow!("missing seq_len"))?;
+        let vocab = spec.meta_usize("vocab").ok_or_else(|| anyhow!("missing vocab"))?;
+        let mut policy = policy;
+        policy.batch_size = batch; // the compiled shape wins
+        Ok(Self {
+            artifact,
+            queue: Batcher::new(policy),
+            stats,
+            batch,
+            seq_len,
+            vocab,
+            logits_len: vocab,
+        })
+    }
+
+    fn run(&mut self, rx: Receiver<Msg>) {
+        loop {
+            let now = Instant::now();
+            let timeout = self.queue.deadline_in(now).unwrap_or(Duration::from_millis(50));
+            match rx.recv_timeout(timeout) {
+                Ok(Msg::Submit { req, reply, t }) => {
+                    if req.tokens.len() != self.seq_len {
+                        self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply.send(Err(format!(
+                            "expected {} tokens, got {}",
+                            self.seq_len,
+                            req.tokens.len()
+                        )));
+                    } else {
+                        self.queue.push(Job { tokens: req.tokens, reply, t }, Instant::now());
+                    }
+                }
+                Ok(Msg::Shutdown) => {
+                    self.drain(true);
+                    return;
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.drain(true);
+                    return;
+                }
+            }
+            self.drain(false);
+        }
+    }
+
+    fn drain(&mut self, force: bool) {
+        let now = Instant::now();
+        loop {
+            let batch = if force && !self.queue.is_empty() {
+                self.queue.flush(now + Duration::from_secs(3600))
+            } else {
+                self.queue.flush(now)
+            };
+            let Some(batch) = batch else { break };
+            let mut tokens = vec![0i32; self.batch * self.seq_len];
+            for (i, job) in batch.rows.iter().enumerate() {
+                tokens[i * self.seq_len..(i + 1) * self.seq_len].copy_from_slice(&job.payload.tokens);
+            }
+            let result = self
+                .artifact
+                .call(&[HostTensor::i32(tokens, &[self.batch, self.seq_len])]);
+            match result {
+                Ok(outs) => {
+                    let logits = outs[0].as_f32();
+                    let t_done = Instant::now();
+                    self.stats.batches.fetch_add(1, Ordering::Relaxed);
+                    self.stats.rows_executed.fetch_add(batch.rows.len() as u64, Ordering::Relaxed);
+                    for (i, job) in batch.rows.into_iter().enumerate() {
+                        // Last-position logits for row i.
+                        let off = (i * self.seq_len + (self.seq_len - 1)) * self.vocab;
+                        let out = logits[off..off + self.logits_len].to_vec();
+                        let lat = t_done.duration_since(job.payload.t).as_nanos() as u64;
+                        self.stats.latency_ns_sum.fetch_add(lat, Ordering::Relaxed);
+                        self.stats.latency_ns_max.fetch_max(lat, Ordering::Relaxed);
+                        let _ = job.payload.reply.send(Ok(out));
+                    }
+                }
+                Err(e) => {
+                    self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    let msg = format!("{e:#}");
+                    for job in batch.rows {
+                        let _ = job.payload.reply.send(Err(msg.clone()));
+                    }
+                }
+            }
+        }
+    }
+}

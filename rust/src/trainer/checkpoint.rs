@@ -1,0 +1,119 @@
+//! Checkpointing: persist an artifact's opaque state tensors to disk.
+//!
+//! Format: a manifest-style text header followed by raw little-endian
+//! tensor payloads in one `.ckpt` file — same conventions as the fixture
+//! files, so a checkpoint can seed a fresh run or the evaluation CLI.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context};
+
+use crate::runtime::tensor::HostTensor;
+use crate::util::manifest::DType;
+
+const MAGIC: &[u8; 8] = b"FFCCKPT1";
+
+/// Save named tensors as a checkpoint file.
+pub fn save(
+    path: impl AsRef<std::path::Path>,
+    entries: &[(String, HostTensor)],
+) -> crate::Result<()> {
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    f.write_all(MAGIC)?;
+    let mut header = String::new();
+    for (name, t) in entries {
+        let shape = if t.shape.is_empty() {
+            "-".to_string()
+        } else {
+            t.shape.iter().map(ToString::to_string).collect::<Vec<_>>().join(",")
+        };
+        header.push_str(&format!("{} {} {}\n", name, t.dtype(), shape));
+    }
+    header.push_str("---\n");
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for (_, t) in entries {
+        f.write_all(&t.to_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a checkpoint file.
+pub fn load(path: impl AsRef<std::path::Path>) -> crate::Result<Vec<(String, HostTensor)>> {
+    let mut f = std::fs::File::open(&path)
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a flashfftconv checkpoint");
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut header = vec![0u8; hlen];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8(header).context("checkpoint header utf8")?;
+
+    let mut specs = vec![];
+    for line in header.lines() {
+        if line == "---" {
+            break;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 3 {
+            bail!("bad checkpoint header line: {line:?}");
+        }
+        let dtype = match parts[1] {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("bad dtype {other:?}"),
+        };
+        let shape: Vec<usize> = if parts[2] == "-" {
+            vec![]
+        } else {
+            parts[2].split(',').map(|d| d.parse()).collect::<Result<_, _>>()?
+        };
+        specs.push((parts[0].to_string(), dtype, shape));
+    }
+
+    let mut out = vec![];
+    for (name, dtype, shape) in specs {
+        let numel: usize = shape.iter().product();
+        let mut buf = vec![0u8; numel * dtype.size()];
+        f.read_exact(&mut buf).with_context(|| format!("payload of {name}"))?;
+        out.push((name, HostTensor::from_bytes(dtype, &shape, &buf)?));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let entries = vec![
+            ("param.embed".to_string(), HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2])),
+            ("step".to_string(), HostTensor::scalar(17.0)),
+            ("tokens".to_string(), HostTensor::i32(vec![1, 2, 3], &[3])),
+        ];
+        let path = std::env::temp_dir().join("ffc_ckpt_test.ckpt");
+        save(&path, &entries).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        for ((n1, t1), (n2, t2)) in entries.iter().zip(&back) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("ffc_ckpt_garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,235 @@
+//! Synthetic data generators (offline substitutes for the paper's corpora;
+//! DESIGN.md §3).
+//!
+//! * [`TokenGen`] — Zipf-weighted order-2 Markov token stream: gives an LM
+//!   both a unigram prior and local structure to learn, so loss curves
+//!   behave qualitatively like natural-text training (the PILE / C4
+//!   substitute for Tables 1/5/7/9).
+//! * [`DnaGen`] — 4-letter alphabet with long-range motif repetition
+//!   (a motif planted at a large, fixed lag), so *longer context measurably
+//!   helps* — the property the HyenaDNA extension experiment needs
+//!   (Table 8 substitute).
+//! * [`PathfinderGen`] — 2-D mazes flattened to pixel rows where the label
+//!   is path connectivity between two endpoints (the Path-X/Path-512
+//!   substitute for Table 2).
+
+use crate::util::Rng;
+
+/// Zipf + order-2 Markov synthetic corpus.
+#[derive(Debug)]
+pub struct TokenGen {
+    vocab: usize,
+    rng: Rng,
+    /// Per-(prev token) preferred successor (the Markov structure).
+    succ: Vec<usize>,
+}
+
+impl TokenGen {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let succ = (0..vocab).map(|_| rng.below(vocab as u64) as usize).collect();
+        Self { vocab, rng, succ }
+    }
+
+    /// Next batch of token rows, shape (batch, len), values in [0, vocab).
+    pub fn batch(&mut self, batch: usize, len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * len);
+        for _ in 0..batch {
+            let mut prev = self.rng.below(self.vocab as u64) as usize;
+            for _ in 0..len {
+                // 70%: follow the Markov edge; 30%: Zipf resample.
+                let tok = if self.rng.chance(0.7) {
+                    self.succ[prev]
+                } else {
+                    self.rng.zipf(self.vocab as u64, 1.2) as usize
+                };
+                out.push(tok as i32);
+                prev = tok;
+            }
+        }
+        out
+    }
+}
+
+/// Synthetic DNA with long-range motif structure.
+#[derive(Debug)]
+pub struct DnaGen {
+    rng: Rng,
+    /// Lag at which the sequence repeats earlier content (long-range
+    /// dependency a long-context model can exploit).
+    pub motif_lag: usize,
+}
+
+impl DnaGen {
+    pub fn new(motif_lag: usize, seed: u64) -> Self {
+        Self { rng: Rng::new(seed), motif_lag }
+    }
+
+    /// One sequence of `len` bases in [0, 4) (+4 offset reserved for
+    /// special tokens in the model's vocab of 8).
+    pub fn sequence(&mut self, len: usize) -> Vec<i32> {
+        let mut out: Vec<i32> = Vec::with_capacity(len);
+        for i in 0..len {
+            let tok = if i >= self.motif_lag && self.rng.chance(0.6) {
+                out[i - self.motif_lag] // long-range copy
+            } else {
+                self.rng.below(4) as i32
+            };
+            out.push(tok);
+        }
+        out
+    }
+
+    /// Batch of sequences, shape (batch, len).
+    pub fn batch(&mut self, batch: usize, len: usize) -> Vec<i32> {
+        (0..batch).flat_map(|_| self.sequence(len)).collect()
+    }
+}
+
+/// Synthetic Pathfinder: connectivity classification on flattened mazes.
+///
+/// An image of `side x side` pixels contains a random-walk path; positive
+/// examples connect the two marked endpoints, negatives break the path in
+/// the middle. Flattened row-major to a length `side*side` pixel sequence.
+#[derive(Debug)]
+pub struct PathfinderGen {
+    pub side: usize,
+    rng: Rng,
+}
+
+impl PathfinderGen {
+    pub fn new(side: usize, seed: u64) -> Self {
+        assert!(side >= 8);
+        Self { side, rng: Rng::new(seed) }
+    }
+
+    /// Generate one example: (pixels, label).
+    pub fn example(&mut self) -> (Vec<f32>, i32) {
+        let s = self.side;
+        let mut img = vec![0.0f32; s * s];
+        let label = self.rng.chance(0.5) as i32;
+        // Random monotone lattice path from left edge to right edge.
+        let mut r = self.rng.below(s as u64) as usize;
+        let mut path = Vec::with_capacity(2 * s);
+        for c in 0..s {
+            path.push((r, c));
+            if self.rng.chance(0.5) {
+                if self.rng.chance(0.5) && r + 1 < s {
+                    r += 1;
+                } else if r > 0 {
+                    r -= 1;
+                }
+                path.push((r, c));
+            }
+        }
+        for &(r, c) in &path {
+            img[r * s + c] = 1.0;
+        }
+        // Distractor speckle (before the cut so negatives stay clean cuts).
+        for _ in 0..s {
+            let idx = self.rng.below((s * s) as u64) as usize;
+            if img[idx] == 0.0 {
+                img[idx] = 0.5;
+            }
+        }
+        if label == 0 {
+            // Break the path: erase a column span in the middle.
+            let cut = s / 2;
+            for r in 0..s {
+                img[r * s + cut] = 0.0;
+                if cut + 1 < s {
+                    img[r * s + cut + 1] = 0.0;
+                }
+            }
+        }
+        // Endpoints marked brighter (never in the cut columns).
+        let (r0, c0) = path[0];
+        let (r1, c1) = *path.last().unwrap();
+        img[r0 * s + c0] = 2.0;
+        img[r1 * s + c1] = 2.0;
+        (img, label)
+    }
+
+    /// Batch: (pixels flat (batch, side*side), labels (batch,)).
+    pub fn batch(&mut self, batch: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut pix = Vec::with_capacity(batch * self.side * self.side);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (img, l) = self.example();
+            pix.extend(img);
+            labels.push(l);
+        }
+        (pix, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_gen_in_vocab() {
+        let mut g = TokenGen::new(64, 1);
+        let b = g.batch(4, 100);
+        assert_eq!(b.len(), 400);
+        assert!(b.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn token_gen_has_markov_structure() {
+        // Successor-following 70% of the time => bigram (t, succ[t])
+        // dominates random bigrams.
+        let mut g = TokenGen::new(16, 2);
+        let b = g.batch(1, 8000);
+        let succ = g.succ.clone();
+        let mut hits = 0usize;
+        for w in b.windows(2) {
+            if succ[w[0] as usize] as i32 == w[1] {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / (b.len() - 1) as f64;
+        assert!(rate > 0.5, "successor rate {rate}");
+    }
+
+    #[test]
+    fn dna_long_range_copy() {
+        let mut g = DnaGen::new(64, 3);
+        let s = g.sequence(4096);
+        let mut hits = 0usize;
+        for i in 64..s.len() {
+            if s[i] == s[i - 64] {
+                hits += 1;
+            }
+        }
+        // 60% copy + 25% random agreement ~ 0.7; far above the 0.25 base.
+        let rate = hits as f64 / (s.len() - 64) as f64;
+        assert!(rate > 0.5, "copy rate {rate}");
+        assert!(s.iter().all(|&t| (0..4).contains(&t)));
+    }
+
+    #[test]
+    fn pathfinder_labels_balanced_and_distinct() {
+        let mut g = PathfinderGen::new(16, 4);
+        let (pix, labels) = g.batch(64);
+        assert_eq!(pix.len(), 64 * 256);
+        let pos = labels.iter().filter(|&&l| l == 1).count();
+        assert!(pos > 10 && pos < 54, "positives {pos}");
+        // Negative examples have the middle column erased.
+        for (i, &l) in labels.iter().enumerate() {
+            if l == 0 {
+                let img = &pix[i * 256..(i + 1) * 256];
+                let cut = 8;
+                let col_sum: f32 = (0..16).map(|r| img[r * 16 + cut]).sum();
+                assert_eq!(col_sum, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = TokenGen::new(32, 7).batch(2, 50);
+        let b = TokenGen::new(32, 7).batch(2, 50);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,133 @@
+//! Loss-curve logging and summary statistics for training runs.
+
+use std::io::Write;
+use std::time::Instant;
+
+/// One recorded training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f64,
+    pub elapsed_s: f64,
+}
+
+/// Accumulates (step, loss, time) and writes CSV loss curves.
+#[derive(Debug)]
+pub struct LossLog {
+    start: Instant,
+    pub records: Vec<StepRecord>,
+    tokens_per_step: u64,
+}
+
+impl LossLog {
+    pub fn new(tokens_per_step: u64) -> Self {
+        Self { start: Instant::now(), records: vec![], tokens_per_step }
+    }
+
+    pub fn record(&mut self, step: u64, loss: f64) {
+        self.records.push(StepRecord { step, loss, elapsed_s: self.start.elapsed().as_secs_f64() });
+    }
+
+    /// Mean loss over the last `n` records.
+    pub fn tail_mean(&self, n: usize) -> f64 {
+        let take = n.min(self.records.len()).max(1);
+        let s: f64 = self.records.iter().rev().take(take).map(|r| r.loss).sum();
+        s / take as f64
+    }
+
+    /// First recorded loss.
+    pub fn first(&self) -> Option<f64> {
+        self.records.first().map(|r| r.loss)
+    }
+
+    /// Perplexity of the tail mean (LM runs).
+    pub fn tail_ppl(&self, n: usize) -> f64 {
+        self.tail_mean(n).exp()
+    }
+
+    /// Training throughput in tokens/second over the whole run.
+    pub fn tokens_per_sec(&self) -> f64 {
+        match self.records.last() {
+            Some(last) if last.elapsed_s > 0.0 => {
+                (self.records.len() as u64 * self.tokens_per_step) as f64 / last.elapsed_s
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Write the curve as CSV (`step,loss,elapsed_s`).
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,elapsed_s")?;
+        for r in &self.records {
+            writeln!(f, "{},{:.6},{:.3}", r.step, r.loss, r.elapsed_s)?;
+        }
+        Ok(())
+    }
+
+    /// Render a coarse ASCII sparkline of the loss curve (for run logs).
+    pub fn sparkline(&self, width: usize) -> String {
+        if self.records.is_empty() {
+            return String::new();
+        }
+        let glyphs = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let lo = self.records.iter().map(|r| r.loss).fold(f64::INFINITY, f64::min);
+        let hi = self.records.iter().map(|r| r.loss).fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-9);
+        let n = self.records.len();
+        (0..width.min(n))
+            .map(|i| {
+                let idx = i * n / width.min(n);
+                let v = (self.records[idx].loss - lo) / span;
+                glyphs[((v * 7.0).round() as usize).min(7)]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_mean_and_ppl() {
+        let mut log = LossLog::new(100);
+        for (i, l) in [5.0, 4.0, 3.0, 2.0].iter().enumerate() {
+            log.record(i as u64, *l);
+        }
+        assert!((log.tail_mean(2) - 2.5).abs() < 1e-12);
+        assert!((log.tail_ppl(1) - 2.0f64.exp()).abs() < 1e-9);
+        assert_eq!(log.first(), Some(5.0));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut log = LossLog::new(10);
+        log.record(0, 1.5);
+        log.record(1, 1.25);
+        let path = std::env::temp_dir().join("ffc_losslog_test.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,loss,elapsed_s"));
+        assert_eq!(text.lines().count(), 3);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn sparkline_monotone_curve() {
+        let mut log = LossLog::new(1);
+        for i in 0..16 {
+            log.record(i, 16.0 - i as f64);
+        }
+        let s = log.sparkline(8);
+        assert_eq!(s.chars().count(), 8);
+        assert!(s.starts_with('█') && s.ends_with('▁'));
+    }
+
+    #[test]
+    fn empty_log_safe() {
+        let log = LossLog::new(1);
+        assert_eq!(log.sparkline(8), "");
+        assert_eq!(log.tokens_per_sec(), 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Training loop driver: synthetic data + `train_step` artifacts.
+//!
+//! The trainer never touches model math — forward, backward, and the Adam
+//! update live inside the AOT-compiled `train_step` HLO. Rust owns the
+//! data pipeline (synthetic corpora), the loop, wall-clock budgets
+//! (Table 1's fixed-compute-budget protocol), loss logging, and
+//! checkpointing of the opaque state tensors.
+
+pub mod checkpoint;
+pub mod data;
+pub mod metrics;
+pub mod run;
+
+pub use data::{DnaGen, PathfinderGen, TokenGen};
+pub use metrics::LossLog;
+pub use run::{TrainConfig, TrainOutcome, Trainer};

@@ -1,0 +1,155 @@
+//! The training loop: drive a `train_step` artifact to a step or
+//! wall-clock budget.
+//!
+//! Wall-clock budgets implement the paper's Table 1 protocol: two
+//! implementations of the same model get the *same time budget*; the
+//! faster kernel sees more data and ends at a better loss.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail};
+
+use crate::runtime::{Artifact, HostTensor, Runtime};
+use crate::trainer::data::{DnaGen, PathfinderGen, TokenGen};
+use crate::trainer::metrics::LossLog;
+
+/// What ends the run: a step count or a wall-clock budget.
+#[derive(Debug, Clone, Copy)]
+pub enum Budget {
+    Steps(u64),
+    WallClock(Duration),
+}
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifact: String,
+    pub budget: Budget,
+    pub log_every: u64,
+    pub seed: u64,
+    pub checkpoint: Option<std::path::PathBuf>,
+}
+
+/// Result summary of a run.
+#[derive(Debug)]
+pub struct TrainOutcome {
+    pub steps: u64,
+    pub log: LossLog,
+    pub first_loss: f64,
+    pub final_loss: f64,
+    pub elapsed: Duration,
+}
+
+/// Drives one `train_step` artifact.
+pub struct Trainer {
+    artifact: Artifact,
+    cfg: TrainConfig,
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    task: String,
+}
+
+impl Trainer {
+    /// Load the configured train artifact from the runtime.
+    pub fn new(runtime: &Runtime, cfg: TrainConfig) -> crate::Result<Self> {
+        let artifact = runtime.load(&cfg.artifact)?;
+        let spec = artifact.spec();
+        if spec.meta("kind") != Some("train_step") {
+            bail!("artifact {} is not a train_step artifact", cfg.artifact);
+        }
+        let batch = spec.meta_usize("batch").ok_or_else(|| anyhow!("missing batch meta"))?;
+        let seq_len = spec.meta_usize("seq_len").ok_or_else(|| anyhow!("missing seq_len meta"))?;
+        let vocab = spec.meta_usize("vocab").unwrap_or(4);
+        let task = spec.meta("task").unwrap_or("lm").to_string();
+        Ok(Self { artifact, cfg, batch, seq_len, vocab, task })
+    }
+
+    /// Tokens consumed per optimizer step.
+    pub fn tokens_per_step(&self) -> u64 {
+        (self.batch * self.seq_len) as u64
+    }
+
+    /// Run to the configured budget.
+    pub fn run(&mut self) -> crate::Result<TrainOutcome> {
+        let start = Instant::now();
+        let mut log = LossLog::new(self.tokens_per_step());
+        let mut tokens = TokenGen::new(self.vocab, self.cfg.seed);
+        let mut dna = DnaGen::new(64, self.cfg.seed);
+        let mut path = PathfinderGen::new(((self.seq_len as f64).sqrt() as usize).max(8), self.cfg.seed);
+
+        let mut step = 0u64;
+        loop {
+            match self.cfg.budget {
+                Budget::Steps(n) if step >= n => break,
+                Budget::WallClock(d) if start.elapsed() >= d && step > 0 => break,
+                _ => {}
+            }
+            let outs = match self.task.as_str() {
+                "pathfinder" => {
+                    let (pix, labels) = path.batch(self.batch);
+                    self.artifact.step(&[
+                        HostTensor::f32(pix, &[self.batch, self.seq_len]),
+                        HostTensor::i32(labels, &[self.batch]),
+                    ])?
+                }
+                "dna" => {
+                    let b = dna.batch(self.batch, self.seq_len + 1);
+                    self.artifact.step(&[HostTensor::i32(b, &[self.batch, self.seq_len + 1])])?
+                }
+                _ => {
+                    let b = tokens.batch(self.batch, self.seq_len + 1);
+                    self.artifact.step(&[HostTensor::i32(b, &[self.batch, self.seq_len + 1])])?
+                }
+            };
+            let loss = outs
+                .last()
+                .ok_or_else(|| anyhow!("train_step returned no outputs"))?
+                .item();
+            if !loss.is_finite() {
+                bail!("loss diverged (non-finite) at step {step}");
+            }
+            if step % self.cfg.log_every == 0 {
+                crate::log_info!(
+                    "step {:>5}  loss {:.4}  ({:.1} tok/s)",
+                    step,
+                    loss,
+                    log.tokens_per_sec()
+                );
+            }
+            log.record(step, loss);
+            step += 1;
+        }
+
+        if let Some(path) = &self.cfg.checkpoint {
+            self.save_checkpoint(path)?;
+        }
+        let first_loss = log.first().unwrap_or(f64::NAN);
+        let final_loss = log.tail_mean(10);
+        Ok(TrainOutcome { steps: step, log, first_loss, final_loss, elapsed: start.elapsed() })
+    }
+
+    /// Persist all `param.*` state tensors.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> crate::Result<()> {
+        let spec = self.artifact.spec().clone();
+        let mut entries = vec![];
+        for input in &spec.inputs {
+            if input.spec.name.starts_with("param.") || input.spec.name == "step" {
+                entries.push((input.spec.name.clone(), self.artifact.state(&input.spec.name)?));
+            }
+        }
+        crate::trainer::checkpoint::save(path, &entries)?;
+        crate::log_info!("checkpoint ({} tensors) -> {}", entries.len(), path.display());
+        Ok(())
+    }
+
+    /// Access the underlying artifact (e.g. to copy trained params).
+    pub fn artifact(&self) -> &Artifact {
+        &self.artifact
+    }
+
+    /// Mutable access (evaluation flows that swap operands).
+    pub fn artifact_mut(&mut self) -> &mut Artifact {
+        &mut self.artifact
+    }
+}

@@ -1,0 +1,168 @@
+//! Minimal CLI argument parser substrate (clap is unavailable offline).
+//!
+//! Grammar: `binary <subcommand> [--key value]... [--flag]...`.
+//! Typed accessors with defaults; unknown-flag detection via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+/// Parsed command line: one optional subcommand plus `--key [value]` pairs.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token, if any (the subcommand).
+    pub command: Option<String>,
+    kv: BTreeMap<String, String>,
+    /// Flags that were present (with or without a value).
+    seen: BTreeMap<String, bool>,
+    accessed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (unit-testable).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> crate::Result<Self> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let key = key.to_string();
+                // A value follows unless the next token is another flag.
+                let has_val = it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                if has_val {
+                    out.kv.insert(key.clone(), it.next().unwrap());
+                } else {
+                    out.kv.insert(key.clone(), String::from("true"));
+                }
+                out.seen.insert(key, true);
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                bail!("unexpected positional argument: {tok}");
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process arguments (skipping argv[0]).
+    pub fn parse() -> crate::Result<Self> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    fn note(&self, key: &str) {
+        self.accessed.borrow_mut().push(key.to_string());
+    }
+
+    /// String option with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.note(key);
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string (no default).
+    pub fn opt(&self, key: &str) -> Option<String> {
+        self.note(key);
+        self.kv.get(key).cloned()
+    }
+
+    /// Integer option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> crate::Result<usize> {
+        self.note(key);
+        match self.kv.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Float option with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> crate::Result<f64> {
+        self.note(key);
+        match self.kv.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a float, got {v:?}")),
+        }
+    }
+
+    /// Boolean flag (present => true unless explicitly `--key false`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.note(key);
+        match self.kv.get(key).map(String::as_str) {
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => true,
+            None => false,
+        }
+    }
+
+    /// Comma-separated list of integers.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> crate::Result<Vec<usize>> {
+        self.note(key);
+        match self.kv.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().with_context(|| format!("--{key}: bad entry {s:?}")))
+                .collect(),
+        }
+    }
+
+    /// Error on any flag that was provided but never read (typo guard).
+    pub fn finish(&self) -> crate::Result<()> {
+        let accessed = self.accessed.borrow();
+        let unknown: Vec<&String> =
+            self.seen.keys().filter(|k| !accessed.iter().any(|a| a == *k)).collect();
+        if !unknown.is_empty() {
+            bail!("unknown flags: {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = parse("train --steps 100 --lr 0.001 --verbose");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert!((a.get_f64("lr", 0.0).unwrap() - 0.001).abs() < 1e-12);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("absent"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("serve");
+        assert_eq!(a.get("addr", "127.0.0.1:7000"), "127.0.0.1:7000");
+        assert_eq!(a.get_usize("batch", 8).unwrap(), 8);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("bench --seqlens 256,1024,4096");
+        assert_eq!(a.get_usize_list("seqlens", &[]).unwrap(), vec![256, 1024, 4096]);
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("train --steps 5 --typo-flag 3");
+        let _ = a.get_usize("steps", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse("x --steps abc");
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn double_positional_is_error() {
+        assert!(Args::parse_from(["a".into(), "b".into()]).is_err());
+    }
+}

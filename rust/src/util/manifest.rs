@@ -1,0 +1,406 @@
+//! Parser for the artifact manifest emitted by `python/compile/aot.py`.
+//!
+//! The manifest is a line-based text format (serde/serde_json are
+//! unavailable offline, and the format is deliberately trivial to parse
+//! and to diff). Grammar, one directive per line:
+//!
+//! ```text
+//! version 1
+//! artifact <name>
+//! hlo <relpath>
+//! meta <key> <value>
+//! input <name> <dtype> <shape|-> <kind> [<fixture-file> <byte-offset>]
+//! output <name> <dtype> <shape|->
+//! golden <relpath>
+//! end
+//! ```
+//!
+//! `dtype` is `f32` or `i32`; `shape` is comma-separated dims, `-` for a
+//! scalar; `kind` is `runtime` (caller-provided), `const` (loaded once from
+//! the fixture file) or `state` (fixture-initialized, then fed back from
+//! the previous call's outputs — training state).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+/// Element type of a tensor operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size(self) -> usize {
+        4
+    }
+
+    fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype {s:?}"),
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        })
+    }
+}
+
+/// Name + dtype + shape of one tensor operand.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total number of elements.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Total size in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.numel() * self.dtype.size()
+    }
+}
+
+/// Where an input's value comes from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InputKind {
+    /// Supplied by the caller on every execution.
+    Runtime,
+    /// Loaded once from the fixture file (FFT matrices, twiddles, ...).
+    Const { file: String, offset: usize },
+    /// Fixture-initialized, then round-tripped from outputs (train state).
+    State { file: String, offset: usize },
+}
+
+/// One artifact input.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub spec: TensorSpec,
+    pub kind: InputKind,
+}
+
+/// One compiled artifact: HLO file plus its full call signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_file: String,
+    pub meta: BTreeMap<String, String>,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub golden_file: Option<String>,
+}
+
+impl ArtifactSpec {
+    /// Metadata value, if present.
+    pub fn meta(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).map(String::as_str)
+    }
+
+    /// Metadata value parsed as usize.
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Metadata value parsed as f64.
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Indices of runtime inputs, in call order.
+    pub fn runtime_input_indices(&self) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| matches!(i.kind, InputKind::Runtime))
+            .map(|(idx, _)| idx)
+            .collect()
+    }
+
+    /// Number of state inputs (the leading outputs round-trip into these).
+    pub fn n_state(&self) -> usize {
+        self.inputs.iter().filter(|i| matches!(i.kind, InputKind::State { .. })).count()
+    }
+
+    /// Sum of input + output bytes (the artifact's HBM I/O footprint).
+    pub fn io_bytes(&self) -> usize {
+        self.inputs.iter().map(|i| i.spec.byte_len()).sum::<usize>()
+            + self.outputs.iter().map(TensorSpec::byte_len).sum::<usize>()
+    }
+}
+
+/// The parsed manifest: all artifacts plus the directory they live in.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub version: u32,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_shape(s: &str) -> crate::Result<Vec<usize>> {
+    if s == "-" {
+        return Ok(vec![]);
+    }
+    s.split(',')
+        .map(|d| d.parse::<usize>().with_context(|| format!("bad dim {d:?}")))
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (unit-testable without a filesystem).
+    pub fn parse(text: &str, dir: PathBuf) -> crate::Result<Self> {
+        let mut version = 0u32;
+        let mut artifacts = BTreeMap::new();
+        let mut cur: Option<ArtifactSpec> = None;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut tok = line.split_whitespace();
+            let directive = tok.next().unwrap();
+            let rest: Vec<&str> = tok.collect();
+            let ctx = || format!("manifest line {}: {raw:?}", lineno + 1);
+
+            match directive {
+                "version" => {
+                    version = rest.first().ok_or_else(|| anyhow!(ctx()))?.parse()?;
+                }
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("{}: nested artifact (missing `end`)", ctx());
+                    }
+                    cur = Some(ArtifactSpec {
+                        name: rest.first().ok_or_else(|| anyhow!(ctx()))?.to_string(),
+                        hlo_file: String::new(),
+                        meta: BTreeMap::new(),
+                        inputs: vec![],
+                        outputs: vec![],
+                        golden_file: None,
+                    });
+                }
+                "hlo" => {
+                    cur.as_mut()
+                        .ok_or_else(|| anyhow!("{}: hlo outside artifact", ctx()))?
+                        .hlo_file = rest.first().ok_or_else(|| anyhow!(ctx()))?.to_string();
+                }
+                "meta" => {
+                    let a = cur.as_mut().ok_or_else(|| anyhow!("{}: meta outside artifact", ctx()))?;
+                    if rest.len() < 2 {
+                        bail!("{}: meta needs key + value", ctx());
+                    }
+                    a.meta.insert(rest[0].to_string(), rest[1..].join(" "));
+                }
+                "input" => {
+                    let a = cur.as_mut().ok_or_else(|| anyhow!("{}: input outside artifact", ctx()))?;
+                    if rest.len() < 4 {
+                        bail!("{}: input needs name dtype shape kind", ctx());
+                    }
+                    let spec = TensorSpec {
+                        name: rest[0].to_string(),
+                        dtype: DType::parse(rest[1]).with_context(ctx)?,
+                        shape: parse_shape(rest[2]).with_context(ctx)?,
+                    };
+                    let kind = match rest[3] {
+                        "runtime" => InputKind::Runtime,
+                        k @ ("const" | "state") => {
+                            if rest.len() < 6 {
+                                bail!("{}: {k} input needs fixture file + offset", ctx());
+                            }
+                            let file = rest[4].to_string();
+                            let offset = rest[5].parse().with_context(ctx)?;
+                            if k == "const" {
+                                InputKind::Const { file, offset }
+                            } else {
+                                InputKind::State { file, offset }
+                            }
+                        }
+                        other => bail!("{}: unknown input kind {other:?}", ctx()),
+                    };
+                    a.inputs.push(InputSpec { spec, kind });
+                }
+                "output" => {
+                    let a = cur.as_mut().ok_or_else(|| anyhow!("{}: output outside artifact", ctx()))?;
+                    if rest.len() < 3 {
+                        bail!("{}: output needs name dtype shape", ctx());
+                    }
+                    a.outputs.push(TensorSpec {
+                        name: rest[0].to_string(),
+                        dtype: DType::parse(rest[1]).with_context(ctx)?,
+                        shape: parse_shape(rest[2]).with_context(ctx)?,
+                    });
+                }
+                "golden" => {
+                    cur.as_mut()
+                        .ok_or_else(|| anyhow!("{}: golden outside artifact", ctx()))?
+                        .golden_file = Some(rest.first().ok_or_else(|| anyhow!(ctx()))?.to_string());
+                }
+                "end" => {
+                    let a = cur.take().ok_or_else(|| anyhow!("{}: end without artifact", ctx()))?;
+                    if a.hlo_file.is_empty() {
+                        bail!("artifact {} has no hlo file", a.name);
+                    }
+                    if artifacts.insert(a.name.clone(), a).is_some() {
+                        bail!("{}: duplicate artifact", ctx());
+                    }
+                }
+                other => bail!("{}: unknown directive {other:?}", ctx()),
+            }
+        }
+        if let Some(a) = cur {
+            bail!("artifact {} not terminated with `end`", a.name);
+        }
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        Ok(Manifest { dir, version, artifacts })
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> crate::Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest ({} known)", self.artifacts.len()))
+    }
+
+    /// All artifacts whose metadata key equals the given value.
+    pub fn with_meta(&self, key: &str, value: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.values().filter(|a| a.meta(key) == Some(value)).collect()
+    }
+
+    /// Absolute path of a file referenced by the manifest.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+version 1
+artifact conv_a
+hlo conv_a.hlo.txt
+meta group conv
+meta seq_len 1024
+input u f32 2,16,1024 runtime
+input f1_re f32 32,32 const conv_a.fix.bin 0
+input step f32 - state conv_a.fix.bin 4096
+output y f32 2,16,1024
+golden conv_a.golden.bin
+end
+artifact tiny
+hlo tiny.hlo.txt
+input x i32 4 runtime
+output o f32 -
+end
+";
+
+    fn sample() -> Manifest {
+        Manifest::parse(SAMPLE, PathBuf::from("/tmp/x")).unwrap()
+    }
+
+    #[test]
+    fn parses_counts() {
+        let m = sample();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("conv_a").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.outputs.len(), 1);
+        assert_eq!(a.meta_usize("seq_len"), Some(1024));
+        assert_eq!(a.golden_file.as_deref(), Some("conv_a.golden.bin"));
+    }
+
+    #[test]
+    fn input_kinds() {
+        let m = sample();
+        let a = m.get("conv_a").unwrap();
+        assert_eq!(a.inputs[0].kind, InputKind::Runtime);
+        assert!(matches!(a.inputs[1].kind, InputKind::Const { offset: 0, .. }));
+        assert!(matches!(a.inputs[2].kind, InputKind::State { offset: 4096, .. }));
+        assert_eq!(a.n_state(), 1);
+        assert_eq!(a.runtime_input_indices(), vec![0]);
+    }
+
+    #[test]
+    fn shapes_and_scalars() {
+        let m = sample();
+        let a = m.get("conv_a").unwrap();
+        assert_eq!(a.inputs[0].spec.shape, vec![2, 16, 1024]);
+        assert_eq!(a.inputs[0].spec.byte_len(), 2 * 16 * 1024 * 4);
+        assert_eq!(a.inputs[2].spec.shape, Vec::<usize>::new());
+        assert_eq!(a.inputs[2].spec.numel(), 1);
+        let t = m.get("tiny").unwrap();
+        assert_eq!(t.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(t.inputs[0].spec.dtype, DType::I32);
+    }
+
+    #[test]
+    fn with_meta_filter() {
+        let m = sample();
+        assert_eq!(m.with_meta("group", "conv").len(), 1);
+        assert_eq!(m.with_meta("group", "nope").len(), 0);
+    }
+
+    #[test]
+    fn missing_artifact_error() {
+        assert!(sample().get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated() {
+        let bad = "version 1\nartifact a\nhlo a.hlo.txt\n";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = "version 9\n";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate() {
+        let bad = "version 1\nartifact a\nhlo h\nend\nartifact a\nhlo h\nend\n";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_directive() {
+        let bad = "version 1\nartifact a\nhlo h\nbogus x\nend\n";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn io_bytes_accounting() {
+        let m = sample();
+        let a = m.get("conv_a").unwrap();
+        let want = (2 * 16 * 1024 + 32 * 32 + 1 + 2 * 16 * 1024) * 4;
+        assert_eq!(a.io_bytes(), want);
+    }
+}

@@ -1,0 +1,17 @@
+//! Offline substrates: manifest parsing, CLI, RNG, logging, worker pool.
+//!
+//! The build environment vendors only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (serde/clap/tokio/criterion/
+//! proptest) are unavailable — these modules are small, fully-tested
+//! replacements scoped to what this project needs.
+
+pub mod cli;
+pub mod logging;
+pub mod manifest;
+pub mod pool;
+pub mod rng;
+
+pub use cli::Args;
+pub use manifest::{ArtifactSpec, DType, InputKind, InputSpec, Manifest, TensorSpec};
+pub use pool::WorkerPool;
+pub use rng::Rng;

@@ -1,0 +1,151 @@
+//! Worker thread pool substrate (tokio is unavailable offline).
+//!
+//! The coordinator's concurrency needs are simple and CPU-bound: a fixed
+//! set of workers pulling closures off a channel, plus scoped fan-out with
+//! result collection. `std::thread` + `mpsc` cover both.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool executing boxed closures.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("ffc-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // all senders dropped
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().expect("pool shut down").send(Box::new(f)).expect("pool receiver alive");
+    }
+
+    /// Run a job returning a value; block on the result handle when needed.
+    pub fn submit_with_result<T, F>(&self, f: F) -> Receiver<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.submit(move || {
+            let _ = tx.send(f());
+        });
+        rx
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Map `f` over `items` using up to `threads` scoped threads, preserving
+/// order. Used for fan-out work that borrows from the caller's stack.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let threads = threads.max(1);
+    let n = items.len();
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Mutex<std::vec::IntoIter<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>().into_iter());
+    let results = Mutex::new(&mut out);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n.max(1)) {
+            s.spawn(|| loop {
+                let next = { work.lock().unwrap().next() };
+                match next {
+                    Some((i, item)) => {
+                        let r = f(item);
+                        results.lock().unwrap()[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("all slots filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let rxs: Vec<_> = (0..16)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                pool.submit_with_result(move || c.fetch_add(1, Ordering::SeqCst))
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn pool_drop_joins() {
+        let pool = WorkerPool::new(1);
+        let flag = Arc::new(AtomicUsize::new(0));
+        let f2 = Arc::clone(&flag);
+        pool.submit(move || {
+            f2.store(7, Ordering::SeqCst);
+        });
+        drop(pool); // must block until the job ran
+        assert_eq!(flag.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map((0..100).collect(), 4, |x: i32| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,197 @@
+//! Failure-injection tests: the runtime must fail loudly and precisely on
+//! malformed artifacts, wrong shapes, truncated fixtures/goldens, and
+//! abusive service requests — never silently compute garbage.
+
+use std::path::PathBuf;
+
+use flashfftconv::coordinator::router::{ConvKind, Router};
+use flashfftconv::runtime::{HostTensor, Runtime};
+use flashfftconv::util::manifest::Manifest;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn wrong_input_shape_is_an_error_not_garbage() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let mut art = runtime.load("conv_fwd_monarch_n256").unwrap();
+    // Wrong N.
+    let err = art
+        .call(&[
+            HostTensor::zeros(&[2, 16, 128]),
+            HostTensor::zeros(&[16, 128]),
+        ])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("expected"), "{err:#}");
+    // Wrong dtype.
+    let err = art
+        .call(&[
+            HostTensor::i32(vec![0; 2 * 16 * 256], &[2, 16, 256]),
+            HostTensor::zeros(&[16, 256]),
+        ])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("expected"), "{err:#}");
+    // Wrong arity.
+    let err = art.call(&[HostTensor::zeros(&[2, 16, 256])]).unwrap_err();
+    assert!(format!("{err:#}").contains("runtime inputs"), "{err:#}");
+}
+
+#[test]
+fn set_operand_validates() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let mut art = runtime.load("conv_fwd_monarch_n256").unwrap();
+    // Unknown operand.
+    assert!(art.set_operand("nope", &HostTensor::zeros(&[1])).is_err());
+    // Runtime inputs cannot be pinned.
+    assert!(art.set_operand("u", &HostTensor::zeros(&[2, 16, 256])).is_err());
+    // Shape mismatch on a const operand.
+    assert!(art.set_operand("tw_re", &HostTensor::zeros(&[1, 1])).is_err());
+    // Reading a runtime input as state fails.
+    assert!(art.state("u").is_err());
+}
+
+#[test]
+fn truncated_fixture_detected_at_load() {
+    let dir = require_artifacts!();
+    // Copy one artifact's files into a temp dir with a truncated fixture.
+    let tmp = std::env::temp_dir().join(format!("ffc_trunc_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.get("conv_fwd_monarch_n256").unwrap();
+    let mut text = String::from("version 1\n");
+    text.push_str(&std::fs::read_to_string(dir.join("manifest.txt")).unwrap()
+        [manifest_slice(&dir, "conv_fwd_monarch_n256")]);
+    std::fs::write(tmp.join("manifest.txt"), &text).unwrap();
+    std::fs::copy(dir.join(&spec.hlo_file), tmp.join(&spec.hlo_file)).unwrap();
+    // Truncate the fixture to 8 bytes.
+    std::fs::write(tmp.join("conv_fwd_monarch_n256.fix.bin"), [0u8; 8]).unwrap();
+    if let Some(g) = &spec.golden_file {
+        std::fs::copy(dir.join(g), tmp.join(g)).unwrap();
+    }
+    let runtime = Runtime::new(&tmp).unwrap();
+    let err = match runtime.load("conv_fwd_monarch_n256") {
+        Err(e) => e,
+        Ok(_) => panic!("truncated fixture must not load"),
+    };
+    assert!(format!("{err:#}").contains("too short"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+/// Extract one artifact's manifest block (helper for the truncation test).
+fn manifest_slice(dir: &std::path::Path, name: &str) -> std::ops::Range<usize> {
+    let text = std::fs::read_to_string(dir.join("manifest.txt")).unwrap();
+    let start = text.find(&format!("artifact {name}\n")).unwrap();
+    let end = text[start..].find("\nend\n").unwrap() + start + "\nend\n".len();
+    start..end
+}
+
+#[test]
+fn truncated_golden_detected() {
+    let dir = require_artifacts!();
+    let tmp = std::env::temp_dir().join(format!("ffc_gold_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.get("conv_fwd_monarch_n256").unwrap().clone();
+    let mut text = String::from("version 1\n");
+    text.push_str(
+        &std::fs::read_to_string(dir.join("manifest.txt")).unwrap()
+            [manifest_slice(&dir, "conv_fwd_monarch_n256")],
+    );
+    std::fs::write(tmp.join("manifest.txt"), &text).unwrap();
+    std::fs::copy(dir.join(&spec.hlo_file), tmp.join(&spec.hlo_file)).unwrap();
+    std::fs::copy(
+        dir.join("conv_fwd_monarch_n256.fix.bin"),
+        tmp.join("conv_fwd_monarch_n256.fix.bin"),
+    )
+    .unwrap();
+    std::fs::write(tmp.join(spec.golden_file.as_ref().unwrap()), [0u8; 16]).unwrap();
+    let m2 = Manifest::load(&tmp).unwrap();
+    let spec2 = m2.get("conv_fwd_monarch_n256").unwrap();
+    let err = flashfftconv::runtime::golden::load(&m2, spec2).unwrap_err();
+    assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn router_rejects_oversize_and_service_reports_bad_streams() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let router = Router::from_manifest(runtime.manifest(), "monarch").unwrap();
+    assert!(router.route(ConvKind::Forward, 1 << 24).is_err());
+
+    use flashfftconv::coordinator::service::{ConvRequest, ConvService};
+    use flashfftconv::coordinator::BatchPolicy;
+    let service = ConvService::start(
+        &dir,
+        "monarch",
+        BatchPolicy { batch_size: 2, max_wait: std::time::Duration::from_millis(1) },
+    )
+    .unwrap();
+    // Wrong stream count for a gated request.
+    let reply = service
+        .submit(ConvRequest { kind: ConvKind::Gated, len: 256, streams: vec![vec![0.0; 16 * 256]] })
+        .recv()
+        .unwrap();
+    assert!(reply.is_err());
+    // Wrong stream size.
+    let reply = service
+        .submit(ConvRequest { kind: ConvKind::Forward, len: 256, streams: vec![vec![0.0; 7]] })
+        .recv()
+        .unwrap();
+    assert!(reply.is_err());
+    // Oversize request routes to an error, not a crash.
+    let reply = service
+        .submit(ConvRequest { kind: ConvKind::Forward, len: 1 << 24, streams: vec![vec![]] })
+        .recv()
+        .unwrap();
+    assert!(reply.is_err());
+    assert!(service.stats().errors.load(std::sync::atomic::Ordering::Relaxed) >= 3);
+}
+
+#[test]
+fn trainer_rejects_non_train_artifacts() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let err = flashfftconv::trainer::Trainer::new(
+        &runtime,
+        flashfftconv::trainer::TrainConfig {
+            artifact: "conv_fwd_monarch_n256".into(),
+            budget: flashfftconv::trainer::run::Budget::Steps(1),
+            log_every: 1,
+            seed: 0,
+            checkpoint: None,
+        },
+    );
+    let err = match err {
+        Err(e) => e,
+        Ok(_) => panic!("conv artifact must not act as a trainer"),
+    };
+    assert!(format!("{err:#}").contains("not a train_step"), "{err:#}");
+}
+
+#[test]
+fn unknown_artifact_name_is_clean_error() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let err = match runtime.load("does_not_exist") {
+        Err(e) => e,
+        Ok(_) => panic!("unknown artifact must not load"),
+    };
+    assert!(format!("{err:#}").contains("not in manifest"), "{err:#}");
+}

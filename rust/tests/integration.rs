@@ -1,0 +1,237 @@
+//! Integration tests over real artifacts (require `make artifacts`).
+//!
+//! Each test loads compiled HLO through the PJRT runtime and checks
+//! cross-language behaviour: golden replay, training-state round-trips,
+//! loss descent, serving, partial/sparse evaluation. Tests skip (pass
+//! trivially with a notice) when the artifact directory is missing so
+//! `cargo test` works pre-`make artifacts`.
+
+use flashfftconv::coordinator::partial::{filter_mask, ExtensionPlan};
+use flashfftconv::coordinator::router::{ConvKind, Router};
+use flashfftconv::coordinator::service::{ConvRequest, ConvService};
+use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::runtime::{golden, HostTensor, Runtime};
+use flashfftconv::trainer::data::TokenGen;
+use flashfftconv::util::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn golden_replay_small_conv() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    for name in ["conv_fwd_monarch_n256", "conv_gated_monarch_n1024", "conv_causal_monarch_n512"] {
+        let spec = runtime.manifest().get(name).unwrap().clone();
+        let g = golden::load(runtime.manifest(), &spec).unwrap().unwrap();
+        let mut art = runtime.load(name).unwrap();
+        let outs = art.call(&g.inputs).unwrap();
+        for (got, want) in outs.iter().zip(&g.outputs) {
+            assert!(got.max_abs_diff(want) < 2e-3, "{name}");
+        }
+    }
+}
+
+#[test]
+fn monarch_artifact_matches_native_fft_oracle() {
+    // Cross-implementation: the compiled kernel vs the pure-Rust FFT conv.
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let mut art = runtime.load("conv_fwd_monarch_n256").unwrap();
+    let (b, h, n) = (2usize, 16usize, 256usize);
+    let mut rng = Rng::new(77);
+    let u: Vec<f32> = rng.normal_vec(b * h * n);
+    let k: Vec<f32> = rng.normal_vec(h * n);
+    let outs = art
+        .call(&[HostTensor::f32(u.clone(), &[b, h, n]), HostTensor::f32(k.clone(), &[h, n])])
+        .unwrap();
+    let y = outs[0].as_f32();
+    for bi in 0..b {
+        for hi in 0..h {
+            let urow: Vec<f64> =
+                u[(bi * h + hi) * n..(bi * h + hi + 1) * n].iter().map(|&x| x as f64).collect();
+            let krow: Vec<f64> = k[hi * n..(hi + 1) * n].iter().map(|&x| x as f64).collect();
+            let want = flashfftconv::fft::fft_conv(&urow, &krow);
+            let got = &y[(bi * h + hi) * n..(bi * h + hi + 1) * n];
+            for (g, w) in got.iter().zip(&want) {
+                assert!((*g as f64 - w).abs() < 1e-2, "b={bi} h={hi}");
+            }
+        }
+    }
+}
+
+#[test]
+fn train_step_state_roundtrip_descends() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let mut art = runtime.load("lm_tiny_train").unwrap();
+    let spec = art.spec().clone();
+    let batch = spec.meta_usize("batch").unwrap();
+    let seq = spec.meta_usize("seq_len").unwrap();
+    let vocab = spec.meta_usize("vocab").unwrap();
+    let mut gen = TokenGen::new(vocab, 3);
+    let mut losses = vec![];
+    for _ in 0..12 {
+        let tokens = gen.batch(batch, seq + 1);
+        let outs = art.step(&[HostTensor::i32(tokens, &[batch, seq + 1])]).unwrap();
+        let loss = outs.last().unwrap().item();
+        assert!(loss.is_finite(), "loss must stay finite, got {loss}");
+        losses.push(loss);
+    }
+    let head: f64 = losses[..3].iter().sum::<f64>() / 3.0;
+    let tail: f64 = losses[losses.len() - 3..].iter().sum::<f64>() / 3.0;
+    assert!(tail < head, "loss should descend: {losses:?}");
+    // Trained parameters must differ from their initialization.
+    let embed = art.state("param.embed").unwrap();
+    assert!(embed.as_f32().iter().any(|v| v.abs() > 0.0));
+}
+
+#[test]
+fn eval_kmask_full_mask_matches_tight_band() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let mut art = runtime.load("lm_eval_kmask").unwrap();
+    let spec = art.spec().clone();
+    let batch = spec.meta_usize("batch").unwrap();
+    let seq = spec.meta_usize("seq_len").unwrap();
+    let vocab = spec.meta_usize("vocab").unwrap();
+    let mut gen = TokenGen::new(vocab, 4);
+    let tokens = HostTensor::i32(gen.batch(batch, seq + 1), &[batch, seq + 1]);
+    let full = art
+        .call(&[tokens.clone(), HostTensor::f32(filter_mask(seq, seq), &[seq])])
+        .unwrap()[0]
+        .item();
+    // Untrained model: loss near ln(vocab).
+    assert!((full - (vocab as f64).ln()).abs() < 0.7, "loss {full}");
+    // Truncating the filter changes the loss but keeps it finite/sane.
+    let half = art
+        .call(&[tokens, HostTensor::f32(filter_mask(seq, seq / 8), &[seq])])
+        .unwrap()[0]
+        .item();
+    assert!(half.is_finite() && (half - full).abs() < 2.0);
+}
+
+#[test]
+fn service_conv_matches_direct_artifact_call() {
+    let dir = require_artifacts!();
+    let policy = BatchPolicy { batch_size: 2, max_wait: std::time::Duration::from_millis(2) };
+    let service = ConvService::start(&dir, "monarch", policy).unwrap();
+    let (h, len) = (16usize, 256usize);
+    let mut rng = Rng::new(5);
+    let k: Vec<f32> = rng.normal_vec(h * len);
+    service.set_filter(ConvKind::Forward, len, k.clone()).unwrap();
+    let u: Vec<f32> = rng.normal_vec(h * len);
+    let y = service
+        .call(ConvRequest { kind: ConvKind::Forward, len, streams: vec![u.clone()] })
+        .unwrap();
+    assert_eq!(y.len(), h * len);
+    // Oracle: native FFT conv per head.
+    for hi in 0..h {
+        let urow: Vec<f64> = u[hi * len..(hi + 1) * len].iter().map(|&x| x as f64).collect();
+        let krow: Vec<f64> = k[hi * len..(hi + 1) * len].iter().map(|&x| x as f64).collect();
+        let want = flashfftconv::fft::fft_conv(&urow, &krow);
+        for (g, w) in y[hi * len..(hi + 1) * len].iter().zip(&want) {
+            assert!((*g as f64 - w).abs() < 1e-2, "head {hi}");
+        }
+    }
+    let s = service.stats();
+    assert_eq!(s.requests.load(std::sync::atomic::Ordering::Relaxed), 1);
+}
+
+#[test]
+fn service_pads_shorter_requests() {
+    let dir = require_artifacts!();
+    let policy = BatchPolicy { batch_size: 2, max_wait: std::time::Duration::from_millis(1) };
+    let service = ConvService::start(&dir, "monarch", policy).unwrap();
+    let (h, len) = (16usize, 200usize); // pads to the 256 bucket
+    let mut rng = Rng::new(6);
+    let u: Vec<f32> = rng.normal_vec(h * len);
+    let y = service
+        .call(ConvRequest { kind: ConvKind::Causal, len, streams: vec![u.clone()] })
+        .unwrap();
+    assert_eq!(y.len(), h * len);
+    assert!(y.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn router_buckets_match_manifest() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let router = Router::from_manifest(runtime.manifest(), "monarch").unwrap();
+    let lens = router.bucket_lens(ConvKind::Forward);
+    assert!(lens.contains(&256) && lens.contains(&1024) && lens.contains(&4096));
+    let lens_c = router.bucket_lens(ConvKind::Causal);
+    assert!(lens_c.contains(&128) && lens_c.contains(&512));
+}
+
+#[test]
+fn extension_plan_against_dna_eval() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let mut art = runtime.load("dna_eval").unwrap();
+    let spec = art.spec().clone();
+    let context = spec.meta_usize("seq_len").unwrap();
+    let kmask_len = spec
+        .inputs
+        .iter()
+        .find(|i| i.spec.name == "kmask")
+        .map(|i| i.spec.numel())
+        .unwrap();
+    let total = 2 * context;
+    let plan = ExtensionPlan::new(total, context, context / 2).unwrap();
+    let mut gen = flashfftconv::trainer::data::DnaGen::new(64, 9);
+    let seq = gen.sequence(total + 1);
+    let mask = vec![1.0f32; kmask_len];
+    let mut losses = vec![];
+    for w in &plan.windows {
+        let window: Vec<i32> = seq[w.start..w.start + context + 1].to_vec();
+        let outs = art
+            .call(&[
+                HostTensor::i32(window, &[1, context + 1]),
+                HostTensor::f32(mask.clone(), &[kmask_len]),
+            ])
+            .unwrap();
+        losses.push(outs[0].item());
+    }
+    let combined = plan.combine_losses(&losses);
+    assert!(combined.is_finite() && combined > 0.0 && combined < 3.0);
+}
+
+#[test]
+fn sparse_eval_artifacts_stay_sane() {
+    let dir = require_artifacts!();
+    let runtime = Runtime::new(&dir).unwrap();
+    let mut base = runtime.load("lm_eval_kmask").unwrap();
+    let spec = base.spec().clone();
+    let (batch, seq, vocab) = (
+        spec.meta_usize("batch").unwrap(),
+        spec.meta_usize("seq_len").unwrap(),
+        spec.meta_usize("vocab").unwrap(),
+    );
+    let mut gen = TokenGen::new(vocab, 10);
+    let tokens = HostTensor::i32(gen.batch(batch, seq + 1), &[batch, seq + 1]);
+    let dense =
+        base.call(&[tokens.clone(), HostTensor::f32(vec![1.0; seq], &[seq])]).unwrap()[0].item();
+    for name in ["lm_eval_sparse_s50", "lm_eval_sparse_s75"] {
+        let mut art = runtime.load(name).unwrap();
+        let loss = art.call(&[tokens.clone()]).unwrap()[0].item();
+        // Untrained model + moderate sparsity: loss stays in the same band.
+        assert!((loss - dense).abs() < 1.0, "{name}: {loss} vs dense {dense}");
+    }
+}

@@ -1,0 +1,251 @@
+//! Property-based tests over the Rust substrates (no artifacts needed).
+//!
+//! Uses the in-crate property-testing framework (`flashfftconv::prop`) to
+//! hammer the FFT/Monarch math, routing, batching, memory accounting, and
+//! cost-model invariants with randomized cases.
+
+use std::time::{Duration, Instant};
+
+use flashfftconv::coordinator::batcher::{BatchPolicy, Batcher};
+use flashfftconv::coordinator::memory;
+use flashfftconv::coordinator::sparse::SparsityPattern;
+use flashfftconv::costmodel::{self, A100};
+use flashfftconv::fft;
+use flashfftconv::prop::{self, gen};
+use flashfftconv::util::Rng;
+
+#[test]
+fn prop_fft_conv_equals_direct() {
+    prop::forall_ok(
+        "fft conv == O(N^2) conv",
+        1,
+        prop::default_cases(),
+        |rng| {
+            let n = gen::pow2(rng, 2, 9);
+            (gen::signal(rng, n), gen::signal(rng, n))
+        },
+        |(u, k)| {
+            let err = fft::max_abs_diff(&fft::fft_conv(u, k), &fft::direct_conv(u, k));
+            if err < 1e-7 {
+                Ok(())
+            } else {
+                Err(format!("err {err}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_monarch_layout_conv_equals_direct() {
+    prop::forall_ok(
+        "monarch-layout conv == direct conv",
+        2,
+        prop::default_cases(),
+        |rng| {
+            let n1 = gen::pow2(rng, 1, 4);
+            let n2 = gen::pow2(rng, 1, 4);
+            (n1, n2, gen::signal(rng, n1 * n2), gen::signal(rng, n1 * n2))
+        },
+        |&(n1, n2, ref u, ref k)| {
+            let uc: Vec<fft::Cpx> = u.iter().map(|&v| fft::Cpx::new(v, 0.0)).collect();
+            let kc: Vec<fft::Cpx> = k.iter().map(|&v| fft::Cpx::new(v, 0.0)).collect();
+            let prod: Vec<fft::Cpx> = fft::monarch_fft2(&uc, n1, n2)
+                .iter()
+                .zip(fft::monarch_fft2(&kc, n1, n2))
+                .map(|(&a, b)| a * b)
+                .collect();
+            let y: Vec<f64> = fft::monarch_ifft2(&prod, n1, n2).iter().map(|c| c.re).collect();
+            let err = fft::max_abs_diff(&y, &fft::direct_conv(u, k));
+            if err < 1e-7 {
+                Ok(())
+            } else {
+                Err(format!("({n1},{n2}) err {err}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_fft_parseval() {
+    // Energy preservation: ||FFT(x)||^2 == N * ||x||^2.
+    prop::forall_ok(
+        "parseval",
+        3,
+        prop::default_cases(),
+        |rng| {
+            let n = gen::pow2(rng, 2, 10);
+            gen::signal(rng, n)
+        },
+        |x| {
+            let n = x.len() as f64;
+            let t: f64 = x.iter().map(|v| v * v).sum();
+            let f: f64 = fft::rfft_full(x).iter().map(|c| c.abs() * c.abs()).sum();
+            if (f - n * t).abs() < 1e-6 * n * t.max(1.0) {
+                Ok(())
+            } else {
+                Err(format!("time {t} freq {f}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_causal_conv_prefix_stability() {
+    // Changing the suffix of the input never changes the causal prefix.
+    prop::forall(
+        "causality",
+        4,
+        prop::default_cases(),
+        |rng| {
+            let n = gen::pow2(rng, 3, 8);
+            let cut = gen::index(rng, 1, n);
+            (gen::signal(rng, n), gen::signal(rng, n), cut)
+        },
+        |(u, k, cut)| {
+            let y1 = fft::causal_conv(u, k);
+            let mut u2 = u.clone();
+            for v in u2.iter_mut().skip(*cut) {
+                *v += 42.0;
+            }
+            let y2 = fft::causal_conv(&u2, k);
+            fft::max_abs_diff(&y1[..*cut], &y2[..*cut]) < 1e-7
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_conservation() {
+    // Every pushed request is flushed exactly once, ids preserved.
+    prop::forall(
+        "batcher conserves requests",
+        5,
+        prop::default_cases(),
+        |rng| {
+            let batch = gen::index(rng, 1, 8);
+            let pushes = gen::index(rng, 0, 40);
+            (batch, pushes)
+        },
+        |&(batch, pushes)| {
+            let mut b = Batcher::new(BatchPolicy {
+                batch_size: batch,
+                max_wait: Duration::from_millis(0),
+            });
+            let t = Instant::now();
+            let ids: Vec<u64> = (0..pushes).map(|i| b.push(i, t)).collect();
+            let mut seen = vec![];
+            while let Some(batch) = b.flush(t + Duration::from_millis(1)) {
+                assert!(batch.occupancy() <= batch.capacity);
+                for p in batch.rows {
+                    seen.push(p.id);
+                }
+            }
+            seen == ids && b.is_empty()
+        },
+    );
+}
+
+#[test]
+fn prop_memory_tracker_never_exceeds_budget() {
+    prop::forall(
+        "memory budget",
+        6,
+        prop::default_cases(),
+        |rng| {
+            let budget = 1 + rng.below(10_000);
+            let ops: Vec<u64> = (0..50).map(|_| 1 + rng.below(500)).collect();
+            (budget, ops)
+        },
+        |&(budget, ref ops)| {
+            let t = memory::MemoryTracker::new(budget);
+            let mut held = vec![];
+            for (i, &sz) in ops.iter().enumerate() {
+                if i % 3 == 2 {
+                    if let Some(s) = held.pop() {
+                        t.release(s);
+                    }
+                } else if t.reserve(sz) {
+                    held.push(sz);
+                }
+                if t.used() > budget {
+                    return false;
+                }
+            }
+            t.peak() <= budget
+        },
+    );
+}
+
+#[test]
+fn prop_cost_model_monotone_in_length() {
+    // For a fixed order, cost never decreases with sequence length.
+    prop::forall(
+        "cost monotone",
+        7,
+        prop::default_cases(),
+        |rng| {
+            let logn = gen::index(rng, 8, 20);
+            let p = gen::index(rng, 2, 4);
+            (logn, p)
+        },
+        |&(logn, p)| {
+            let a = costmodel::conv_cost(1 << logn, p, 1, 1, &A100);
+            let b = costmodel::conv_cost(1 << (logn + 1), p, 1, 1, &A100);
+            b > a
+        },
+    );
+}
+
+#[test]
+fn prop_sparsity_fraction_and_flops_consistent() {
+    prop::forall(
+        "sparsity invariants",
+        8,
+        prop::default_cases(),
+        |rng| {
+            let n1 = gen::pow2(rng, 2, 6);
+            let n2 = gen::pow2(rng, 2, 6);
+            let kr = 1 + gen::index(rng, 0, n1);
+            let kc = 1 + gen::index(rng, 0, n2);
+            (n1, n2, kr, kc)
+        },
+        |&(n1, n2, kr, kc)| {
+            let p = SparsityPattern::new(n1, n2, kr, kc).unwrap();
+            let s = p.sparsity_fraction();
+            let f = p.flop_fraction();
+            (0.0..=1.0).contains(&s)
+                && f > 0.0
+                && f <= 1.0 + 1e-12
+                && p.ideal_speedup() >= 1.0 - 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_rust_and_kernel_factorizations_agree() {
+    // monarch_factors mirror: product and balance invariants.
+    prop::forall(
+        "factorization invariants",
+        9,
+        prop::default_cases(),
+        |rng| {
+            let logn = gen::index(rng, 4, 22);
+            let order = gen::index(rng, 2, 4.min(logn));
+            (1usize << logn, order)
+        },
+        |&(n, order)| {
+            let f = fft::monarch_factors(n, order);
+            f.iter().product::<usize>() == n
+                && f.len() == order
+                && *f.iter().max().unwrap() <= 2 * f.iter().min().unwrap()
+        },
+    );
+}
+
+#[test]
+fn prop_rng_uniform_bounds() {
+    let mut rng = Rng::new(123);
+    for _ in 0..10_000 {
+        let v = rng.uniform();
+        assert!((0.0..1.0).contains(&v));
+    }
+}
