@@ -1,7 +1,8 @@
 //! Quickstart: load a FlashFFTConv artifact, run a convolution, verify it.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart          # native CPU backend
+//! make artifacts && cargo run --release --example quickstart  # pjrt build
 //! ```
 //!
 //! Demonstrates the full public API surface in ~60 lines: open the
@@ -28,8 +29,9 @@ fn main() -> flashfftconv::Result<()> {
         spec.meta("order").unwrap_or("2")
     );
 
-    // 1. Replay the recorded golden transcript (python JAX -> rust PJRT).
-    let g = golden::load(runtime.manifest(), &spec)?.expect("golden transcript");
+    // 1. Replay the recorded golden transcript (reference path vs this
+    //    engine: the radix-2 oracle natively, python JAX under pjrt).
+    let g = golden::load(&runtime, &spec)?.expect("golden transcript");
     let outs = conv.call(&g.inputs)?;
     let err = outs[0].max_abs_diff(&g.outputs[0]);
     println!("golden replay: max|err| = {err:.2e}");

@@ -15,6 +15,7 @@ use std::time::{Duration, Instant};
 use flashfftconv::coordinator::router::ConvKind;
 use flashfftconv::coordinator::service::{ConvRequest, ConvService};
 use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::runtime::BackendConfig;
 use flashfftconv::util::{Args, Rng};
 
 fn main() -> flashfftconv::Result<()> {
@@ -25,7 +26,7 @@ fn main() -> flashfftconv::Result<()> {
     args.finish()?;
 
     let policy = BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(4) };
-    let service = ConvService::start("artifacts", &variant, policy)?;
+    let service = ConvService::start(BackendConfig::Auto("artifacts".into()), &variant, policy)?;
     let heads = 16usize;
 
     // Pretend-pretrained filter banks for two buckets.

@@ -58,10 +58,14 @@ pub fn time_artifact(
     Ok(Some(result))
 }
 
-/// Open the artifact runtime for benches (artifact dir from env or default).
+/// Open the runtime for benches: the PJRT artifact directory when built
+/// with the `pjrt` feature and `FFC_ARTIFACTS`/`artifacts` holds a
+/// manifest, the self-contained native backend otherwise.
 pub fn bench_runtime() -> crate::Result<Runtime> {
     let dir = std::env::var("FFC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
-    Runtime::new(dir)
+    let runtime = Runtime::new(dir)?;
+    eprintln!("(bench backend: {})", runtime.backend_name());
+    Ok(runtime)
 }
 
 /// Standard bench header: prints context so logs are self-describing.
@@ -69,7 +73,8 @@ pub fn print_header(table: &str, note: &str) {
     println!("\n=== {table} ===");
     println!("{note}");
     println!(
-        "(testbed: single-core CPU PJRT, interpret-mode Pallas; compare *shape* — \
-         who wins and by roughly what factor — not absolute ms; see DESIGN.md §2/§3)"
+        "(testbed: single-core CPU backend — native engines or CPU PJRT; compare \
+         *shape* — who wins and by roughly what factor — not absolute ms; see \
+         DESIGN.md §2/§3)"
     );
 }

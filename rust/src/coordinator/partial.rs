@@ -8,7 +8,7 @@
 //! the filter-mask construction for the `kmask`-taking eval artifacts
 //! (Table 7's truncation sweep).
 
-use anyhow::bail;
+use crate::bail;
 
 /// One evaluation window over a long sequence.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

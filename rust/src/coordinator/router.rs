@@ -8,7 +8,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail};
+use crate::{bail, format_err};
 
 use crate::util::manifest::Manifest;
 
@@ -67,7 +67,7 @@ impl Router {
                 }
                 let len = spec
                     .meta_usize("seq_len")
-                    .ok_or_else(|| anyhow!("artifact {} missing seq_len", spec.name))?;
+                    .ok_or_else(|| format_err!("artifact {} missing seq_len", spec.name))?;
                 let batch = spec.meta_usize("batch").unwrap_or(1);
                 let heads = spec.meta_usize("heads").unwrap_or(1);
                 buckets
@@ -98,12 +98,12 @@ impl Router {
             .buckets
             .get(&kind)
             .filter(|m| !m.is_empty())
-            .ok_or_else(|| anyhow!("no artifacts for {kind:?}"))?;
+            .ok_or_else(|| format_err!("no artifacts for {kind:?}"))?;
         let (bucket, (artifact, batch, heads)) = table
             .range(len..)
             .next()
             .ok_or_else(|| {
-                anyhow!(
+                format_err!(
                     "request length {len} exceeds the largest {kind:?} bucket ({})",
                     table.keys().last().unwrap()
                 )

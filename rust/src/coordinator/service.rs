@@ -1,7 +1,9 @@
-//! The convolution service: router + batcher + PJRT runtime on one thread.
+//! The convolution service: router + batcher + execution runtime on one
+//! thread.
 //!
-//! PJRT handles are thread-affine (raw pointers, `!Send`), so the service
-//! owns its `Runtime` on a dedicated thread and talks to clients over
+//! Backends may be thread-affine (PJRT handles are raw pointers,
+//! `!Send`), so the service ships a [`BackendConfig`] into a dedicated
+//! thread, builds the `Runtime` there, and talks to clients over
 //! channels — requests are plain `Send` data, responses flow back through
 //! per-request reply channels. This is the request path the paper's
 //! serving numbers flow through: submit -> route by length -> batch ->
@@ -13,11 +15,11 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::anyhow;
+use crate::format_err;
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::router::{ConvKind, Router};
-use crate::runtime::{Artifact, HostTensor, Runtime};
+use crate::runtime::{Artifact, BackendConfig, HostTensor};
 use crate::util::Rng;
 
 /// One convolution request: a single batch row of `heads * len` samples
@@ -79,16 +81,15 @@ pub struct ConvService {
 }
 
 impl ConvService {
-    /// Start the service over an artifact directory.
+    /// Start the service over an execution backend.
     ///
     /// `variant` selects the kernel family ("monarch" or "baseline") —
     /// benchmarks run one service of each to reproduce the speedup tables.
     pub fn start(
-        artifact_dir: impl Into<std::path::PathBuf>,
+        backend: BackendConfig,
         variant: &str,
         policy: BatchPolicy,
     ) -> crate::Result<Self> {
-        let dir = artifact_dir.into();
         let variant = variant.to_string();
         let stats = Arc::new(ServiceStats::default());
         let stats2 = Arc::clone(&stats);
@@ -96,7 +97,7 @@ impl ConvService {
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let handle = std::thread::Builder::new()
             .name(format!("conv-service-{variant}"))
-            .spawn(move || match ServiceWorker::new(&dir, &variant, policy, stats2) {
+            .spawn(move || match ServiceWorker::new(&backend, &variant, policy, stats2) {
                 Ok(mut w) => {
                     let _ = ready_tx.send(Ok(()));
                     w.run(rx);
@@ -107,8 +108,8 @@ impl ConvService {
             })?;
         ready_rx
             .recv()
-            .map_err(|_| anyhow!("service thread died during startup"))?
-            .map_err(|e| anyhow!("service startup failed: {e}"))?;
+            .map_err(|_| format_err!("service thread died during startup"))?
+            .map_err(|e| format_err!("service startup failed: {e}"))?;
         Ok(Self { tx, stats, handle: Some(handle) })
     }
 
@@ -127,8 +128,8 @@ impl ConvService {
     pub fn call(&self, req: ConvRequest) -> crate::Result<Vec<f32>> {
         self.submit(req)
             .recv()
-            .map_err(|_| anyhow!("service dropped the request"))?
-            .map_err(|e| anyhow!(e))
+            .map_err(|_| format_err!("service dropped the request"))?
+            .map_err(|e| format_err!(e))
     }
 
     /// Install a filter bank for a (kind, bucket); rows are `heads * len`.
@@ -136,8 +137,8 @@ impl ConvService {
         let (done, rx) = channel();
         self.tx
             .send(Msg::SetFilter { kind, bucket, k, done })
-            .map_err(|_| anyhow!("service is down"))?;
-        rx.recv().map_err(|_| anyhow!("service died"))?.map_err(|e| anyhow!(e))
+            .map_err(|_| format_err!("service is down"))?;
+        rx.recv().map_err(|_| format_err!("service died"))?.map_err(|e| format_err!(e))
     }
 
     /// Live statistics.
@@ -163,7 +164,7 @@ struct RowJob {
 }
 
 struct ServiceWorker {
-    runtime: Runtime,
+    runtime: crate::runtime::Runtime,
     router: Router,
     artifacts: BTreeMap<String, Artifact>,
     queues: BTreeMap<(ConvKind, usize), Batcher<RowJob>>,
@@ -174,12 +175,13 @@ struct ServiceWorker {
 
 impl ServiceWorker {
     fn new(
-        dir: &std::path::Path,
+        backend: &BackendConfig,
         variant: &str,
         policy: BatchPolicy,
         stats: Arc<ServiceStats>,
     ) -> crate::Result<Self> {
-        let runtime = Runtime::new(dir)?;
+        let runtime = backend.connect()?;
+        crate::log_info!("conv service worker up on the {} backend", runtime.backend_name());
         let router = Router::from_manifest(runtime.manifest(), variant)?;
         Ok(Self {
             runtime,
@@ -230,11 +232,11 @@ impl ServiceWorker {
     fn check_filter(&mut self, kind: ConvKind, bucket: usize, k: &[f32]) -> crate::Result<()> {
         let route = self.router.route(kind, bucket)?;
         if route.bucket != bucket {
-            anyhow::bail!("no exact bucket {bucket} for {kind:?}");
+            crate::bail!("no exact bucket {bucket} for {kind:?}");
         }
         let expect = route.heads * bucket;
         if k.len() != expect {
-            anyhow::bail!("filter for bucket {bucket} needs {expect} f32s, got {}", k.len());
+            crate::bail!("filter for bucket {bucket} needs {expect} f32s, got {}", k.len());
         }
         Ok(())
     }
@@ -263,7 +265,9 @@ impl ServiceWorker {
             return;
         }
         let key = (req.kind, route.bucket);
-        let policy = self.policy.clone();
+        // Never flush more rows than the compiled batch dimension holds.
+        let mut policy = self.policy.clone();
+        policy.batch_size = policy.batch_size.min(route.batch.max(1));
         let q = self.queues.entry(key).or_insert_with(|| Batcher::new(policy));
         q.push(RowJob { streams: req.streams, len: req.len, reply, t_submit }, Instant::now());
     }

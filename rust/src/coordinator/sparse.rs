@@ -7,7 +7,7 @@
 //! spectrum. Pattern selection is by target sparsity with a quality
 //! guard-rail (the paper keeps >= the DC block).
 
-use anyhow::bail;
+use crate::bail;
 
 /// Block-sparsity pattern over the (n1, n2) Monarch layout grid.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -12,6 +12,7 @@
 //!    partial/frequency-sparse workflows (truncating or masking kernels
 //!    without re-entering Python).
 
+use crate::bail;
 use crate::util::Rng;
 
 /// Complex number over f64 (oracle precision).
@@ -159,13 +160,20 @@ pub fn fft_conv(u: &[f64], k: &[f64]) -> Vec<f64> {
     fft(&prod, true).iter().map(|c| c.re).collect()
 }
 
-/// Causal convolution: zero-pad to 2N, convolve, truncate (Section 2.1).
+/// Causal convolution: zero-pad to the next power of two >= 2N, convolve,
+/// truncate (Section 2.1). Unlike the circular paths, this accepts
+/// arbitrary (non-power-of-two) lengths — the padding absorbs them.
 pub fn causal_conv(u: &[f64], k: &[f64]) -> Vec<f64> {
     let n = u.len();
+    assert_eq!(n, k.len());
+    if n == 0 {
+        return vec![];
+    }
+    let m = (2 * n).next_power_of_two();
     let mut up = u.to_vec();
-    up.resize(2 * n, 0.0);
+    up.resize(m, 0.0);
     let mut kp = k.to_vec();
-    kp.resize(2 * n, 0.0);
+    kp.resize(m, 0.0);
     fft_conv(&up, &kp)[..n].to_vec()
 }
 
@@ -180,14 +188,33 @@ pub fn fft_conv_spectrum(u: &[f64], kf: &[Cpx]) -> Vec<f64> {
 // Monarch decomposition (mirror of the Pallas kernel math)
 // ---------------------------------------------------------------------------
 
-/// Balanced power-of-two factor split (mirrors `fftmats.monarch_factors`).
-pub fn monarch_factors(n: usize, order: usize) -> Vec<usize> {
-    assert!(is_pow2(n) && order >= 1);
+/// Balanced power-of-two factor split (mirrors `fftmats.monarch_factors`),
+/// with a precise error instead of a bare assert: `n` must be a positive
+/// power of two and `order` must satisfy `1 <= order <= max(log2(n), 1)`.
+pub fn try_monarch_factors(n: usize, order: usize) -> crate::Result<Vec<usize>> {
+    if !is_pow2(n) {
+        bail!("monarch_factors: n must be a positive power of two, got {n}");
+    }
+    if order == 0 {
+        bail!("monarch_factors: order must be >= 1, got 0");
+    }
     let logn = n.trailing_zeros() as usize;
-    assert!(order <= logn.max(1), "cannot split {n} into {order} factors");
+    if order > logn.max(1) {
+        bail!(
+            "monarch_factors: cannot split n = {n} (log2 = {logn}) into {order} \
+             power-of-two factors"
+        );
+    }
     let base = logn / order;
     let extra = logn % order;
-    (0..order).map(|i| 1usize << (base + usize::from(i < extra))).collect()
+    Ok((0..order).map(|i| 1usize << (base + usize::from(i < extra))).collect())
+}
+
+/// Panicking wrapper over [`try_monarch_factors`] for infallible call
+/// sites (cost model, fleet generation); the panic message carries the
+/// same diagnostic as the error path.
+pub fn monarch_factors(n: usize, order: usize) -> Vec<usize> {
+    try_monarch_factors(n, order).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Forward order-2 Monarch FFT: returns the digit-permuted spectrum
@@ -261,6 +288,52 @@ pub fn monarch_order2(n1: usize, n2: usize) -> Vec<usize> {
     for k1 in 0..n1 {
         for k2 in 0..n2 {
             out[k1 * n2 + k2] = k1 + n1 * k2;
+        }
+    }
+    out
+}
+
+/// Forward order-3 Monarch FFT over an `n1 * n2 * n3`-point signal.
+///
+/// Built as one explicit first-digit DFT stage (with the full-length
+/// twiddle) followed by an order-2 Monarch FFT along each row — exactly
+/// how the order-p kernels recurse (§3.1). The output layout permutation
+/// is [`monarch_order3`]: slot `k1 * (n2*n3) + j` holds true frequency
+/// `k1 + n1 * order2(n2, n3)[j]`.
+pub fn monarch_fft3(x: &[Cpx], n1: usize, n2: usize, n3: usize) -> Vec<Cpx> {
+    let m = n2 * n3;
+    let n = n1 * m;
+    assert_eq!(x.len(), n);
+    // Stage 1: DFT over the leading digit, twiddled across the full N.
+    let mut a = vec![Cpx::ZERO; n];
+    for k1 in 0..n1 {
+        for j in 0..m {
+            let mut acc = Cpx::ZERO;
+            for m1 in 0..n1 {
+                let w = Cpx::cis(-2.0 * std::f64::consts::PI * (k1 * m1) as f64 / n1 as f64);
+                acc = acc + x[m1 * m + j] * w;
+            }
+            let t = Cpx::cis(-2.0 * std::f64::consts::PI * (k1 * j) as f64 / n as f64);
+            a[k1 * m + j] = acc * t;
+        }
+    }
+    // Stages 2+3: order-2 Monarch transform of each length-m row.
+    let mut out = vec![Cpx::ZERO; n];
+    for k1 in 0..n1 {
+        let row = monarch_fft2(&a[k1 * m..(k1 + 1) * m], n2, n3);
+        out[k1 * m..(k1 + 1) * m].copy_from_slice(&row);
+    }
+    out
+}
+
+/// `order[j]` = true DFT frequency at Monarch slot `j` (order-3 layout).
+pub fn monarch_order3(n1: usize, n2: usize, n3: usize) -> Vec<usize> {
+    let m = n2 * n3;
+    let inner = monarch_order2(n2, n3);
+    let mut out = vec![0usize; n1 * m];
+    for k1 in 0..n1 {
+        for (j, &f2) in inner.iter().enumerate() {
+            out[k1 * m + j] = k1 + n1 * f2;
         }
     }
     out
@@ -392,6 +465,66 @@ mod tests {
         assert_eq!(monarch_factors(4096, 2), vec![64, 64]);
         assert_eq!(monarch_factors(8192, 2), vec![128, 64]);
         assert_eq!(monarch_factors(32768, 3), vec![32, 32, 32]);
+    }
+
+    #[test]
+    fn try_factors_reports_precise_errors() {
+        let e = try_monarch_factors(2, 2).unwrap_err();
+        assert!(format!("{e:#}").contains("cannot split n = 2"), "{e:#}");
+        let e = try_monarch_factors(12, 2).unwrap_err();
+        assert!(format!("{e:#}").contains("power of two"), "{e:#}");
+        let e = try_monarch_factors(8, 0).unwrap_err();
+        assert!(format!("{e:#}").contains("order must be >= 1"), "{e:#}");
+        // The degenerate but valid cases still work.
+        assert_eq!(try_monarch_factors(2, 1).unwrap(), vec![2]);
+        assert_eq!(try_monarch_factors(1, 1).unwrap(), vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot split n = 2")]
+    fn factors_panic_carries_diagnostic() {
+        monarch_factors(2, 2);
+    }
+
+    #[test]
+    fn causal_conv_handles_non_pow2_lengths() {
+        let mut rng = Rng::new(11);
+        for n in [1usize, 3, 7, 12, 100, 129] {
+            let u = random_signal(n, &mut rng);
+            let k = random_signal(n, &mut rng);
+            let got = causal_conv(&u, &k);
+            // O(N^2) causal reference.
+            let want: Vec<f64> = (0..n)
+                .map(|t| (0..=t).map(|d| u[t - d] * k[d]).sum())
+                .collect();
+            assert!(max_abs_diff(&got, &want) < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn monarch3_matches_fft_permuted() {
+        let mut rng = Rng::new(12);
+        for &(n1, n2, n3) in &[(2usize, 4usize, 4usize), (4, 4, 8), (2, 8, 8)] {
+            let n = n1 * n2 * n3;
+            let x: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+            let got = monarch_fft3(&x, n1, n2, n3);
+            let full = fft(&x, false);
+            let order = monarch_order3(n1, n2, n3);
+            for (j, &f) in order.iter().enumerate() {
+                assert!((got[j] - full[f]).abs() < 1e-8, "({n1},{n2},{n3}) slot {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn monarch_order3_is_a_permutation() {
+        let (n1, n2, n3) = (4, 8, 4);
+        let mut seen = vec![false; n1 * n2 * n3];
+        for f in monarch_order3(n1, n2, n3) {
+            assert!(!seen[f], "duplicate frequency {f}");
+            seen[f] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
     }
 
     #[test]

@@ -5,17 +5,32 @@
 //! * **L1/L2 (build time, Python)** — Pallas Monarch-FFT convolution
 //!   kernels and JAX models, AOT-lowered once to HLO text by
 //!   `python/compile/aot.py` (`make artifacts`).
-//! * **L3 (this crate)** — loads the HLO artifacts through PJRT (the
-//!   [`xla`] crate) and owns everything the paper's system does around the
-//!   kernel: sequence-length routing, dynamic batching, order-`p` selection
-//!   via the §3.2 cost model, memory accounting, partial-convolution
-//!   length extension, frequency-sparse kernel management, training and
-//!   serving loops. Python never runs on the request path.
+//! * **L3 (this crate)** — owns everything the paper's system does around
+//!   the kernel: sequence-length routing, dynamic batching, order-`p`
+//!   selection via the §3.2 cost model, memory accounting,
+//!   partial-convolution length extension, frequency-sparse kernel
+//!   management, training and serving loops.
+//!
+//! Execution is pluggable through the [`runtime::Backend`] trait, with two
+//! engines behind the same artifact signatures:
+//!
+//! * [`runtime::native::NativeBackend`] (default) — a pure-Rust CPU engine
+//!   backed by the in-crate [`fft`] library. It self-generates an
+//!   in-memory manifest, fixtures, and golden transcripts, so the full
+//!   submit → route → batch → execute → reply path (and the training-step
+//!   contract) runs from a clean checkout with no Python step and no
+//!   pre-built artifacts. This is also the reference implementation the
+//!   tests hold every other engine to.
+//! * `runtime::pjrt::PjrtBackend` (cargo feature `pjrt`) — loads the
+//!   AOT-compiled HLO artifacts through PJRT. The offline build links a
+//!   vendored API stub (`rust/vendor/xla-stub`); patch in the real `xla`
+//!   crate to execute compiled artifacts.
 //!
 //! The build environment is fully offline, so the crate also carries its
-//! own substrates (DESIGN.md §3/§4): a line-based artifact manifest parser,
-//! a CLI parser, a worker pool, a deterministic RNG, a micro-benchmark
-//! harness, a property-testing mini-framework, and a native FFT/convolution
+//! own substrates (DESIGN.md §3/§4): a line-based artifact manifest
+//! parser, an error type with context chaining ([`util::error`]), a CLI
+//! parser, a worker pool, a deterministic RNG, a micro-benchmark harness,
+//! a property-testing mini-framework, and the native FFT/convolution
 //! library used as an oracle and as the "fusion-only" ablation baseline.
 
 pub mod bench;
@@ -28,5 +43,5 @@ pub mod server;
 pub mod trainer;
 pub mod util;
 
-/// Crate-wide result type (anyhow-based; errors carry context chains).
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result type; errors carry context chains (see [`util::error`]).
+pub type Result<T, E = util::error::Error> = std::result::Result<T, E>;

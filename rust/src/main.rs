@@ -19,7 +19,7 @@ use flashfftconv::coordinator::partial::{filter_mask, ExtensionPlan};
 use flashfftconv::coordinator::router::ConvKind;
 use flashfftconv::coordinator::service::{ConvRequest, ConvService};
 use flashfftconv::coordinator::BatchPolicy;
-use flashfftconv::runtime::{golden, HostTensor, Runtime};
+use flashfftconv::runtime::{golden, BackendConfig, HostTensor, Runtime};
 use flashfftconv::trainer::data::DnaGen;
 use flashfftconv::trainer::run::Budget;
 use flashfftconv::trainer::{TrainConfig, Trainer};
@@ -60,7 +60,7 @@ fn run(args: &Args) -> flashfftconv::Result<()> {
         Some("serve") => cmd_serve(&dir, args),
         Some("pathfinder") => cmd_pathfinder(&dir, args),
         Some("costmodel") => cmd_costmodel(args),
-        Some(other) => anyhow::bail!("unknown subcommand {other:?}\n{HELP}"),
+        Some(other) => flashfftconv::bail!("unknown subcommand {other:?}\n{HELP}"),
         None => {
             println!("{HELP}");
             Ok(())
@@ -77,6 +77,7 @@ fn cmd_check(dir: &str, args: &Args) -> flashfftconv::Result<()> {
     let keep_going = args.flag("keep-going");
     args.finish()?;
     let runtime = Runtime::new(dir)?;
+    println!("backend: {}", runtime.backend_name());
     let names: Vec<String> = runtime
         .manifest()
         .artifacts
@@ -89,7 +90,7 @@ fn cmd_check(dir: &str, args: &Args) -> flashfftconv::Result<()> {
     let mut failed = 0;
     for name in names {
         let spec = runtime.manifest().get(&name)?.clone();
-        let g = golden::load(runtime.manifest(), &spec)?.expect("golden present");
+        let g = golden::load(&runtime, &spec)?.expect("golden present");
         let mut art = runtime.load(&name)?;
         let outs = art.call(&g.inputs)?;
         // Relative tolerance: golden outputs were produced by a *newer*
@@ -110,7 +111,7 @@ fn cmd_check(dir: &str, args: &Args) -> flashfftconv::Result<()> {
             if keep_going {
                 println!("  FAIL {msg}");
             } else {
-                anyhow::bail!(msg);
+                flashfftconv::bail!(msg);
             }
         } else {
             checked += 1;
@@ -118,7 +119,7 @@ fn cmd_check(dir: &str, args: &Args) -> flashfftconv::Result<()> {
         }
     }
     println!("check: {checked} verified, {failed} failed (tol {tol:.0e})");
-    anyhow::ensure!(failed == 0, "{failed} golden artifacts failed");
+    flashfftconv::ensure!(failed == 0, "{failed} golden artifacts failed");
     Ok(())
 }
 
@@ -276,7 +277,7 @@ fn cmd_extend(dir: &str, args: &Args) -> flashfftconv::Result<()> {
     let spec = art.spec().clone();
     let context = spec.meta_usize("seq_len").unwrap();
     let batch = spec.meta_usize("batch").unwrap();
-    anyhow::ensure!(batch == 1, "extension path expects a batch-1 eval artifact");
+    flashfftconv::ensure!(batch == 1, "extension path expects a batch-1 eval artifact");
 
     let mut gen = DnaGen::new(64, seed);
     let long_seq = gen.sequence(total_len + 1);
@@ -322,7 +323,7 @@ fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
     let wait_ms = args.get_usize("max-wait-ms", 5)?;
     args.finish()?;
     let policy = BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(wait_ms as u64) };
-    let service = ConvService::start(dir, &variant, policy)?;
+    let service = ConvService::start(BackendConfig::Auto(dir.into()), &variant, policy)?;
     let mut rng = Rng::new(1);
     let heads = 16usize;
     let mut pending = vec![];
@@ -332,7 +333,7 @@ fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
     }
     let mut ok = 0;
     for rx in pending {
-        if rx.recv().map_err(|_| anyhow::anyhow!("dropped"))?.is_ok() {
+        if rx.recv().map_err(|_| flashfftconv::format_err!("dropped"))?.is_ok() {
             ok += 1;
         }
     }
@@ -413,7 +414,7 @@ fn cmd_costmodel(args: &Args) -> flashfftconv::Result<()> {
         "a100" => &costmodel::A100,
         "h100" => &costmodel::H100,
         "cpu" => &costmodel::CPU,
-        other => anyhow::bail!("unknown hw profile {other:?}"),
+        other => flashfftconv::bail!("unknown hw profile {other:?}"),
     };
     if constants {
         println!(

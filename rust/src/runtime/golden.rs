@@ -1,16 +1,19 @@
-//! Golden-transcript loading: the cross-language correctness check.
+//! Golden-transcript loading: the cross-implementation correctness check.
 //!
-//! For selected artifacts, `aot.py` records the example runtime inputs and
-//! the outputs JAX produced (`<name>.golden.bin`: inputs then outputs, raw
-//! little-endian, in manifest order). Integration tests replay the inputs
-//! through the Rust runtime and compare — proving the full
-//! python-AOT -> HLO-text -> PJRT-compile -> execute chain is numerically
-//! faithful.
+//! For selected artifacts the backend records example runtime inputs and
+//! the outputs a *reference* implementation produced (`<name>.golden`:
+//! inputs then outputs, raw little-endian, in manifest order). For the
+//! PJRT backend the reference is JAX (recorded by `aot.py`); for the
+//! native backend the reference is the radix-2 FFT oracle, replayed
+//! through the Monarch-decomposition engines. Either way, replaying the
+//! inputs and comparing outputs proves two independent implementations of
+//! the paper's math agree.
 
-use anyhow::{bail, Context};
-
+use crate::bail;
 use crate::runtime::tensor::HostTensor;
-use crate::util::manifest::{ArtifactSpec, InputKind, Manifest};
+use crate::runtime::Runtime;
+use crate::util::error::Context;
+use crate::util::manifest::{ArtifactSpec, InputKind};
 
 /// A replayable golden transcript.
 #[derive(Debug)]
@@ -19,32 +22,41 @@ pub struct Golden {
     pub outputs: Vec<HostTensor>,
 }
 
+/// Consume `byte_len` bytes from `bytes` at `*off`, advancing the cursor.
+fn take<'a>(
+    bytes: &'a [u8],
+    off: &mut usize,
+    byte_len: usize,
+    file: &str,
+) -> crate::Result<&'a [u8]> {
+    if *off + byte_len > bytes.len() {
+        bail!("golden file {file} truncated at offset {}", *off);
+    }
+    let s = &bytes[*off..*off + byte_len];
+    *off += byte_len;
+    Ok(s)
+}
+
 /// Load the golden transcript for `spec`, if it has one.
-pub fn load(manifest: &Manifest, spec: &ArtifactSpec) -> crate::Result<Option<Golden>> {
+pub fn load(runtime: &Runtime, spec: &ArtifactSpec) -> crate::Result<Option<Golden>> {
     let Some(file) = &spec.golden_file else {
         return Ok(None);
     };
-    let bytes = std::fs::read(manifest.path(file))
+    let arc = runtime
+        .file_bytes(file)
         .with_context(|| format!("reading golden file {file}"))?;
+    let bytes: &[u8] = &arc;
     let mut off = 0usize;
-    let mut take = |byte_len: usize| -> crate::Result<&[u8]> {
-        if off + byte_len > bytes.len() {
-            bail!("golden file {file} truncated at offset {off}");
-        }
-        let s = &bytes[off..off + byte_len];
-        off += byte_len;
-        Ok(s)
-    };
     let mut inputs = vec![];
     for input in &spec.inputs {
         if matches!(input.kind, InputKind::Runtime) {
-            let s = take(input.spec.byte_len())?;
+            let s = take(bytes, &mut off, input.spec.byte_len(), file)?;
             inputs.push(HostTensor::from_bytes(input.spec.dtype, &input.spec.shape, s)?);
         }
     }
     let mut outputs = vec![];
     for out in &spec.outputs {
-        let s = take(out.byte_len())?;
+        let s = take(bytes, &mut off, out.byte_len(), file)?;
         outputs.push(HostTensor::from_bytes(out.dtype, &out.shape, s)?);
     }
     if off != bytes.len() {

@@ -1,118 +1,203 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them from Rust.
+//! Pluggable execution runtime: artifact signatures over swappable engines.
 //!
-//! This is the bridge between the Python compile path and the Rust
-//! coordinator. An [`Artifact`] owns one compiled executable plus its
-//! fixture-backed operands (FFT matrices, initial model state) held as
-//! host literals; [`Artifact::call`] assembles the full operand list from
-//! the caller's runtime inputs, and [`Artifact::step`] additionally
-//! round-trips training state (outputs feed the next call's state inputs).
+//! The coordinator, trainer, server, benches, and CLI all talk to one
+//! [`Runtime`], which owns a [`Backend`]. A backend supplies three things:
+//! a parsed artifact [`Manifest`] (what callables exist and their tensor
+//! signatures), raw fixture/golden bytes by file name, and an [`Engine`]
+//! per artifact that executes the full operand list. Two backends exist:
 //!
-//! HLO *text* is the interchange format: jax >= 0.5 serializes protos with
-//! 64-bit instruction ids which this XLA build rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
+//! * [`native::NativeBackend`] — pure-Rust CPU engines over the in-crate
+//!   [`crate::fft`] library. It self-generates an in-memory manifest,
+//!   fixtures, and golden transcripts, so everything above it runs from a
+//!   clean checkout: no Python step, no `make artifacts`, no network.
+//! * [`pjrt::PjrtBackend`] (cargo feature `pjrt`) — loads AOT-compiled
+//!   HLO text through PJRT, the original compiled-artifact path. HLO
+//!   *text* is the interchange format: jax >= 0.5 serializes protos with
+//!   64-bit instruction ids which the pinned XLA build rejects.
+//!
+//! An [`Artifact`] owns one engine plus its fixture-backed operands
+//! (FFT twiddles, model state) held as [`HostTensor`]s; [`Artifact::call`]
+//! assembles the full operand list from the caller's runtime inputs, and
+//! [`Artifact::step`] additionally round-trips training state (leading
+//! outputs feed the next call's state inputs — the training-step
+//! contract shared by both backends).
 
 pub mod golden;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod tensor;
 
-use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context};
-
 use crate::util::manifest::{ArtifactSpec, InputKind, Manifest};
+use crate::{bail, format_err};
+
 pub use tensor::HostTensor;
 
-/// Shared PJRT client + artifact loader/cache.
+/// Executes one artifact: full operand list in, output list out.
+///
+/// `args` follow the artifact's manifest input order (fixture-backed and
+/// runtime operands interleaved as declared); outputs must match the
+/// manifest output list in order, shape, and dtype.
+pub trait Engine {
+    fn execute(&mut self, args: &[&HostTensor]) -> crate::Result<Vec<HostTensor>>;
+}
+
+/// An execution backend: manifest + fixture bytes + per-artifact engines.
+pub trait Backend {
+    /// Short name for logs ("native" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// The artifact manifest this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Raw bytes of a fixture/golden file referenced by the manifest.
+    fn file_bytes(&self, rel: &str) -> crate::Result<Arc<Vec<u8>>>;
+
+    /// Build the engine for one artifact.
+    fn engine(&self, spec: &ArtifactSpec) -> crate::Result<Box<dyn Engine>>;
+}
+
+/// How to construct a [`Runtime`] — `Send + Clone`, so services can ship
+/// it into their worker threads and build the backend there (PJRT handles
+/// are thread-affine).
+#[derive(Debug, Clone, Default)]
+pub enum BackendConfig {
+    /// The self-contained native CPU backend.
+    #[default]
+    Native,
+    /// Artifact directory when present (with the `pjrt` feature), the
+    /// native backend otherwise.
+    Auto(PathBuf),
+    /// The PJRT backend over an artifact directory.
+    #[cfg(feature = "pjrt")]
+    Pjrt(PathBuf),
+}
+
+impl BackendConfig {
+    /// Construct the runtime this config describes.
+    pub fn connect(&self) -> crate::Result<Runtime> {
+        match self {
+            BackendConfig::Native => Runtime::native(),
+            BackendConfig::Auto(dir) => Runtime::new(dir),
+            #[cfg(feature = "pjrt")]
+            BackendConfig::Pjrt(dir) => Runtime::pjrt(dir),
+        }
+    }
+}
+
+/// Shared artifact loader over a pluggable [`Backend`].
 pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    fixture_cache: std::sync::Mutex<BTreeMap<String, Arc<Vec<u8>>>>,
+    backend: Box<dyn Backend>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client over the given artifact directory.
-    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> crate::Result<Self> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        crate::log_debug!(
-            "PJRT client: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Self { client, manifest, fixture_cache: Default::default() })
+    /// The self-contained native CPU runtime (no artifacts needed).
+    pub fn native() -> crate::Result<Self> {
+        Ok(Self { backend: Box::new(native::NativeBackend::with_default_fleet()?) })
+    }
+
+    /// Native runtime over an explicit manifest + fixture set (tests and
+    /// failure injection).
+    pub fn native_from(
+        manifest_text: &str,
+        files: std::collections::BTreeMap<String, Vec<u8>>,
+    ) -> crate::Result<Self> {
+        Ok(Self { backend: Box::new(native::NativeBackend::from_parts(manifest_text, files)?) })
+    }
+
+    /// PJRT runtime over a compiled artifact directory.
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(artifact_dir: impl AsRef<Path>) -> crate::Result<Self> {
+        Ok(Self { backend: Box::new(pjrt::PjrtBackend::new(artifact_dir)?) })
+    }
+
+    /// Auto-select: the PJRT backend when the directory holds a manifest
+    /// and the `pjrt` feature is compiled in; the native backend otherwise.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = artifact_dir.as_ref();
+        #[cfg(feature = "pjrt")]
+        if dir.join("manifest.txt").exists() {
+            return Self::pjrt(dir);
+        }
+        if dir.join("manifest.txt").exists() {
+            crate::log_warn!(
+                "artifact dir {} present but this build has no `pjrt` feature; \
+                 using the native backend",
+                dir.display()
+            );
+        } else {
+            crate::log_debug!(
+                "no artifact manifest under {}; using the native backend",
+                dir.display()
+            );
+        }
+        Self::native()
+    }
+
+    /// Which backend this runtime runs on ("native" / "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// The parsed manifest.
     pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+        self.backend.manifest()
     }
 
-    fn fixture_bytes(&self, file: &str) -> crate::Result<Arc<Vec<u8>>> {
-        let mut cache = self.fixture_cache.lock().unwrap();
-        if let Some(b) = cache.get(file) {
-            return Ok(Arc::clone(b));
-        }
-        let path = self.manifest.path(file);
-        let bytes = Arc::new(
-            std::fs::read(&path).with_context(|| format!("reading fixture {}", path.display()))?,
-        );
-        cache.insert(file.to_string(), Arc::clone(&bytes));
-        Ok(bytes)
+    /// Raw bytes of a manifest-referenced file (fixtures, goldens).
+    pub fn file_bytes(&self, rel: &str) -> crate::Result<Arc<Vec<u8>>> {
+        self.backend.file_bytes(rel)
     }
 
-    /// Load and compile one artifact by name.
+    /// Load one artifact by name: build its engine and materialize its
+    /// const/state operands from fixture bytes.
     pub fn load(&self, name: &str) -> crate::Result<Artifact> {
-        let spec = self.manifest.get(name)?.clone();
+        let spec = self.manifest().get(name)?.clone();
         let t0 = Instant::now();
-        let hlo_path = self.manifest.path(&spec.hlo_file);
-        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
-            .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        let parse_compile = t0.elapsed();
-
-        // Materialize const + state operands from fixtures as literals.
-        let mut fixed: Vec<Option<xla::Literal>> = Vec::with_capacity(spec.inputs.len());
+        let engine = self.backend.engine(&spec)?;
+        let mut fixed: Vec<Option<HostTensor>> = Vec::with_capacity(spec.inputs.len());
         let mut state_positions = vec![];
         for (idx, input) in spec.inputs.iter().enumerate() {
             match &input.kind {
                 InputKind::Runtime => fixed.push(None),
                 InputKind::Const { file, offset } | InputKind::State { file, offset } => {
-                    let bytes = self.fixture_bytes(file)?;
+                    let bytes = self.backend.file_bytes(file)?;
                     let len = input.spec.byte_len();
-                    let slice = bytes
-                        .get(*offset..*offset + len)
-                        .ok_or_else(|| anyhow!("fixture {file} too short for {}", input.spec.name))?;
-                    let lit = tensor::literal_from_bytes(input.spec.dtype, &input.spec.shape, slice)?;
+                    let slice = bytes.get(*offset..*offset + len).ok_or_else(|| {
+                        format_err!("fixture {file} too short for {}", input.spec.name)
+                    })?;
+                    let t =
+                        HostTensor::from_bytes(input.spec.dtype, &input.spec.shape, slice)?;
                     if matches!(input.kind, InputKind::State { .. }) {
                         state_positions.push(idx);
                     }
-                    fixed.push(Some(lit));
+                    fixed.push(Some(t));
                 }
             }
         }
         crate::log_info!(
-            "loaded {name}: {} inputs ({} runtime, {} state), compile {:.0}ms",
+            "loaded {name} on {}: {} inputs ({} runtime, {} state), setup {:.1}ms",
+            self.backend.name(),
             spec.inputs.len(),
             spec.runtime_input_indices().len(),
             state_positions.len(),
-            parse_compile.as_secs_f64() * 1e3
+            t0.elapsed().as_secs_f64() * 1e3
         );
-        Ok(Artifact { spec, exe, fixed, state_positions, calls: 0 })
+        Ok(Artifact { spec, engine, fixed, state_positions, calls: 0 })
     }
 }
 
-/// One compiled artifact with resident fixture/state operands.
+/// One loaded artifact with resident fixture/state operands.
 pub struct Artifact {
     spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-    /// Per input position: `None` for runtime inputs, `Some(literal)` for
-    /// const/state operands (state literals are replaced by [`Artifact::step`]).
-    fixed: Vec<Option<xla::Literal>>,
+    engine: Box<dyn Engine>,
+    /// Per input position: `None` for runtime inputs, `Some(tensor)` for
+    /// const/state operands (state tensors are replaced by [`Artifact::step`]).
+    fixed: Vec<Option<HostTensor>>,
     state_positions: Vec<usize>,
     calls: u64,
 }
@@ -128,44 +213,8 @@ impl Artifact {
         self.calls
     }
 
-    fn assemble<'a>(
-        &'a self,
-        runtime_inputs: &'a [xla::Literal],
-    ) -> crate::Result<Vec<&'a xla::Literal>> {
-        let need = self.spec.runtime_input_indices().len();
-        if runtime_inputs.len() != need {
-            bail!(
-                "artifact {} expects {need} runtime inputs, got {}",
-                self.spec.name,
-                runtime_inputs.len()
-            );
-        }
-        let mut rt = runtime_inputs.iter();
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.fixed.len());
-        for slot in &self.fixed {
-            match slot {
-                Some(lit) => args.push(lit),
-                None => args.push(rt.next().unwrap()),
-            }
-        }
-        Ok(args)
-    }
-
-    /// Execute with raw literals; returns the decomposed output tuple.
-    pub fn call_literals(
-        &mut self,
-        runtime_inputs: &[xla::Literal],
-    ) -> crate::Result<Vec<xla::Literal>> {
-        let args = self.assemble(runtime_inputs)?;
-        let bufs = self.exe.execute::<&xla::Literal>(&args).context("execute")?;
-        self.calls += 1;
-        let lit = bufs[0][0].to_literal_sync().context("device->host transfer")?;
-        // aot.py lowers with return_tuple=True: always a (possibly 1-ary) tuple.
-        lit.to_tuple().context("decompose output tuple")
-    }
-
-    /// Execute with host tensors (validated against the manifest signature).
-    pub fn call(&mut self, runtime_inputs: &[HostTensor]) -> crate::Result<Vec<HostTensor>> {
+    /// Validate runtime inputs against the manifest signature.
+    fn validate(&self, runtime_inputs: &[HostTensor]) -> crate::Result<()> {
         let rt_idx = self.spec.runtime_input_indices();
         if runtime_inputs.len() != rt_idx.len() {
             bail!(
@@ -189,57 +238,84 @@ impl Artifact {
                 );
             }
         }
-        let lits: Vec<xla::Literal> = runtime_inputs
-            .iter()
-            .map(tensor::literal_from_tensor)
-            .collect::<crate::Result<_>>()?;
-        let outs = self.call_literals(&lits)?;
-        outs.iter()
-            .zip(&self.spec.outputs)
-            .map(|(l, spec)| tensor::tensor_from_literal(l, spec))
-            .collect()
+        Ok(())
+    }
+
+    /// Assemble the full operand list and run the engine.
+    fn execute(&mut self, runtime_inputs: &[HostTensor]) -> crate::Result<Vec<HostTensor>> {
+        self.validate(runtime_inputs)?;
+        let mut rt = runtime_inputs.iter();
+        let mut args: Vec<&HostTensor> = Vec::with_capacity(self.fixed.len());
+        for slot in &self.fixed {
+            match slot {
+                Some(t) => args.push(t),
+                None => args.push(rt.next().expect("validated arity")),
+            }
+        }
+        let outs = self.engine.execute(&args)?;
+        self.calls += 1;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {} returned {} outputs, manifest declares {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        for (o, want) in outs.iter().zip(&self.spec.outputs) {
+            if o.shape != want.shape || o.dtype() != want.dtype {
+                bail!(
+                    "artifact {} output {:?}: engine produced {:?} {:?}, manifest says {:?} {:?}",
+                    self.spec.name,
+                    want.name,
+                    o.dtype(),
+                    o.shape,
+                    want.dtype,
+                    want.shape
+                );
+            }
+        }
+        Ok(outs)
+    }
+
+    /// Execute with host tensors (validated against the manifest signature).
+    pub fn call(&mut self, runtime_inputs: &[HostTensor]) -> crate::Result<Vec<HostTensor>> {
+        self.execute(runtime_inputs)
     }
 
     /// Execute and round-trip training state: the first `n_state` outputs
-    /// replace the state operands for the next call (aot.py contract).
-    /// Returns only the non-state outputs (e.g. the loss).
+    /// replace the state operands for the next call (the training-step
+    /// contract). Returns only the non-state outputs (e.g. the loss).
     pub fn step(&mut self, runtime_inputs: &[HostTensor]) -> crate::Result<Vec<HostTensor>> {
-        let lits: Vec<xla::Literal> = runtime_inputs
-            .iter()
-            .map(tensor::literal_from_tensor)
-            .collect::<crate::Result<_>>()?;
-        let mut outs = self.call_literals(&lits)?;
+        let mut outs = self.execute(runtime_inputs)?;
         let ns = self.state_positions.len();
         if outs.len() < ns {
             bail!("artifact {} returned {} outputs < {ns} state slots", self.spec.name, outs.len());
         }
         let rest = outs.split_off(ns);
-        for (pos, lit) in self.state_positions.clone().into_iter().zip(outs) {
-            self.fixed[pos] = Some(lit);
+        for (pos, t) in self.state_positions.clone().into_iter().zip(outs) {
+            self.fixed[pos] = Some(t);
         }
-        rest.iter()
-            .zip(&self.spec.outputs[ns..])
-            .map(|(l, spec)| tensor::tensor_from_literal(l, spec))
-            .collect()
+        Ok(rest)
     }
 
-    /// Read back a state operand by input name (e.g. a trained parameter).
+    /// Read back a state/const operand by input name (e.g. a trained
+    /// parameter).
     pub fn state(&self, name: &str) -> crate::Result<HostTensor> {
-        let (idx, input) = self
+        let (idx, _) = self
             .spec
             .inputs
             .iter()
             .enumerate()
             .find(|(_, i)| i.spec.name == name)
-            .ok_or_else(|| anyhow!("no input named {name:?}"))?;
-        let lit = self.fixed[idx]
-            .as_ref()
-            .ok_or_else(|| anyhow!("input {name:?} is a runtime input, not state"))?;
-        tensor::tensor_from_literal(lit, &input.spec)
+            .ok_or_else(|| format_err!("no input named {name:?}"))?;
+        self.fixed[idx]
+            .clone()
+            .ok_or_else(|| format_err!("input {name:?} is a runtime input, not state"))
     }
 
     /// Overwrite a const/state operand (partial-conv & sparsity workflows:
-    /// the coordinator swaps filter banks without recompiling).
+    /// the coordinator swaps filter banks without reloading).
     pub fn set_operand(&mut self, name: &str, value: &HostTensor) -> crate::Result<()> {
         let (idx, input) = self
             .spec
@@ -247,7 +323,7 @@ impl Artifact {
             .iter()
             .enumerate()
             .find(|(_, i)| i.spec.name == name)
-            .ok_or_else(|| anyhow!("no input named {name:?}"))?;
+            .ok_or_else(|| format_err!("no input named {name:?}"))?;
         if matches!(input.kind, InputKind::Runtime) {
             bail!("input {name:?} is a runtime input; pass it to call() instead");
         }
@@ -260,7 +336,7 @@ impl Artifact {
                 value.shape
             );
         }
-        self.fixed[idx] = Some(tensor::literal_from_tensor(value)?);
+        self.fixed[idx] = Some(value.clone());
         Ok(())
     }
 }

@@ -1,0 +1,1100 @@
+//! Native CPU backend: pure-Rust engines behind the artifact signatures.
+//!
+//! This backend makes the whole stack self-contained: it *generates* an
+//! in-memory manifest, fixture blobs, and golden transcripts at
+//! construction time, then executes every artifact with the in-crate
+//! [`crate::fft`] library — no Python step, no compiled HLO, no files on
+//! disk. Three engine families cover the fleet:
+//!
+//! * **Convolutions** (`conv_fwd` / `conv_gated` / `conv_causal`): the
+//!   `monarch` variant computes through the order-2 Monarch decomposition
+//!   ([`crate::fft::monarch_fft2`]), the `baseline` variant through the
+//!   plain radix-2 FFT — two independent implementations of the same
+//!   math, which is exactly the cross-implementation equivalence the
+//!   paper's correctness story rests on (Monarch == FFT == O(N²) direct).
+//! * **Training steps** (`train_step`): a tiny conv LM (embedding →
+//!   depthwise causal convolution → projection, cross-entropy, SGD) run
+//!   forward *and* backward on the CPU, honoring the state round-trip
+//!   contract (leading outputs feed the next call's state inputs).
+//! * **Evaluations** (`lm_eval`): the same model forward-only, with the
+//!   partial-convolution `kmask` input (filter-tap truncation, Table 7)
+//!   or a frequency-sparse spectrum mask (Table 9/10) applied to the
+//!   filter bank.
+//!
+//! Golden transcripts are generated with the *baseline/oracle* path and
+//! replayed through whichever engine the artifact names, so golden replay
+//! is a real cross-check rather than an identity test.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::coordinator::sparse::{select_pattern, SparsityPattern};
+use crate::fft::{self, Cpx};
+use crate::runtime::{Backend, Engine, HostTensor};
+use crate::util::manifest::{ArtifactSpec, Manifest};
+use crate::util::Rng;
+use crate::{bail, format_err};
+
+/// The self-contained CPU backend.
+pub struct NativeBackend {
+    manifest: Manifest,
+    files: BTreeMap<String, Arc<Vec<u8>>>,
+}
+
+impl NativeBackend {
+    /// Backend over the default generated fleet (convs at several
+    /// buckets in two variants, train steps, eval artifacts).
+    pub fn with_default_fleet() -> crate::Result<Self> {
+        let (text, files) = default_fleet_parts();
+        Self::from_parts(&text, files)
+    }
+
+    /// Backend over an explicit manifest + fixture set (tests, failure
+    /// injection).
+    pub fn from_parts(
+        manifest_text: &str,
+        files: BTreeMap<String, Vec<u8>>,
+    ) -> crate::Result<Self> {
+        let manifest = Manifest::parse(manifest_text, PathBuf::from("<native>"))?;
+        Ok(Self {
+            manifest,
+            files: files.into_iter().map(|(k, v)| (k, Arc::new(v))).collect(),
+        })
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn file_bytes(&self, rel: &str) -> crate::Result<Arc<Vec<u8>>> {
+        self.files
+            .get(rel)
+            .map(Arc::clone)
+            .ok_or_else(|| format_err!("file {rel:?} not present in the native backend"))
+    }
+
+    fn engine(&self, spec: &ArtifactSpec) -> crate::Result<Box<dyn Engine>> {
+        match spec.meta("kind") {
+            Some("conv_fwd") | Some("conv_gated") | Some("conv_causal") => {
+                Ok(Box::new(NativeConvEngine::from_spec(spec)?))
+            }
+            Some("train_step") => Ok(Box::new(NativeTrainEngine::from_spec(spec)?)),
+            Some("lm_eval") => Ok(Box::new(NativeEvalEngine::from_spec(spec)?)),
+            Some(other) => bail!("no native engine for artifact kind {other:?} ({})", spec.name),
+            None => bail!("artifact {} has no `kind` metadata", spec.name),
+        }
+    }
+}
+
+fn need_meta(spec: &ArtifactSpec, key: &str) -> crate::Result<usize> {
+    spec.meta_usize(key)
+        .ok_or_else(|| format_err!("artifact {} missing usize meta {key:?}", spec.name))
+}
+
+/// Position of a named input, if declared.
+fn input_index(spec: &ArtifactSpec, name: &str) -> Option<usize> {
+    spec.inputs.iter().position(|i| i.spec.name == name)
+}
+
+/// Position of a named input, validated against the expected signature.
+/// Engines resolve every operand by name up front so a parsable-but-
+/// inconsistent manifest fails at load time instead of panicking (or
+/// silently mis-reading operands) at execute time.
+fn require_input(
+    spec: &ArtifactSpec,
+    name: &str,
+    dtype: crate::util::manifest::DType,
+    shape: &[usize],
+) -> crate::Result<usize> {
+    let idx = input_index(spec, name)
+        .ok_or_else(|| format_err!("artifact {} declares no input {name:?}", spec.name))?;
+    let t = &spec.inputs[idx].spec;
+    if t.dtype != dtype || t.shape != shape {
+        bail!(
+            "artifact {} input {name:?}: manifest says {:?} {:?}, engine needs {:?} {:?}",
+            spec.name,
+            t.dtype,
+            t.shape,
+            dtype,
+            shape
+        );
+    }
+    Ok(idx)
+}
+
+// ---------------------------------------------------------------------------
+// Convolution engines
+// ---------------------------------------------------------------------------
+
+/// DFT twiddle grid `T[i, j] = e^{-2πi·ij/fft_len}` as (re, im) pairs.
+fn twiddle_grid(n1: usize, n2: usize, fft_len: usize) -> Vec<(f32, f32)> {
+    let mut out = Vec::with_capacity(n1 * n2);
+    for i in 0..n1 {
+        for j in 0..n2 {
+            let ang = -2.0 * std::f64::consts::PI * (i * j) as f64 / fft_len as f64;
+            out.push((ang.cos() as f32, ang.sin() as f32));
+        }
+    }
+    out
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ConvOp {
+    Forward,
+    Gated,
+    Causal,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ConvPath {
+    /// Order-2 Monarch decomposition (the paper's kernel math).
+    Monarch,
+    /// Plain radix-2 FFT (the fusion-only / PyTorch-analogue baseline).
+    Baseline,
+}
+
+/// Batched multi-head convolution on the CPU.
+struct NativeConvEngine {
+    op: ConvOp,
+    path: ConvPath,
+    b: usize,
+    h: usize,
+    n: usize,
+    /// Balanced factors of the FFT length (2n for causal, n otherwise).
+    n1: usize,
+    n2: usize,
+    /// Operand positions, resolved by name and shape-checked at load.
+    idx_u: usize,
+    idx_v: usize,
+    idx_w: usize,
+    idx_k: usize,
+    idx_tw: Option<(usize, usize)>,
+    /// Expected twiddle grid for the declared const operands. The engine
+    /// recomputes twiddles internally, but it *verifies* the operands it
+    /// was handed so a `set_operand` of a wrong grid fails loudly instead
+    /// of being silently ignored (backend-independent semantics).
+    tw_expect: Vec<(f32, f32)>,
+    /// Per-head filter spectra cached across calls (serving installs one
+    /// filter bank and reuses it for every batch).
+    cached_k: Vec<f32>,
+    cached_specs: Vec<Vec<Cpx>>,
+}
+
+impl NativeConvEngine {
+    fn from_spec(spec: &ArtifactSpec) -> crate::Result<Self> {
+        use crate::util::manifest::DType::F32;
+        let op = match spec.meta("kind") {
+            Some("conv_fwd") => ConvOp::Forward,
+            Some("conv_gated") => ConvOp::Gated,
+            Some("conv_causal") => ConvOp::Causal,
+            other => bail!("not a conv artifact kind: {other:?}"),
+        };
+        let path = match spec.meta("variant") {
+            Some("monarch") => ConvPath::Monarch,
+            Some("baseline") => ConvPath::Baseline,
+            other => bail!("unknown conv variant {other:?} for {}", spec.name),
+        };
+        let n = need_meta(spec, "seq_len")?;
+        if !fft::is_pow2(n) {
+            bail!("conv artifact {}: seq_len {n} must be a power of two", spec.name);
+        }
+        let b = need_meta(spec, "batch")?;
+        let h = need_meta(spec, "heads")?;
+        let fft_len = if op == ConvOp::Causal { 2 * n } else { n };
+        let fs = fft::try_monarch_factors(fft_len, 2)?;
+        let (n1, n2) = (fs[0], fs[1]);
+
+        let idx_u = require_input(spec, "u", F32, &[b, h, n])?;
+        let (idx_v, idx_w) = if op == ConvOp::Gated {
+            (
+                require_input(spec, "v", F32, &[b, h, n])?,
+                require_input(spec, "w", F32, &[b, h, n])?,
+            )
+        } else {
+            (0, 0)
+        };
+        let idx_k = require_input(spec, "k", F32, &[h, n])?;
+        let idx_tw = match (input_index(spec, "tw_re"), input_index(spec, "tw_im")) {
+            (Some(_), Some(_)) => Some((
+                require_input(spec, "tw_re", F32, &[n1, n2])?,
+                require_input(spec, "tw_im", F32, &[n1, n2])?,
+            )),
+            _ => None,
+        };
+        let tw_expect = if idx_tw.is_some() {
+            twiddle_grid(n1, n2, fft_len)
+        } else {
+            vec![]
+        };
+        Ok(Self {
+            op,
+            path,
+            b,
+            h,
+            n,
+            n1,
+            n2,
+            idx_u,
+            idx_v,
+            idx_w,
+            idx_k,
+            idx_tw,
+            tw_expect,
+            cached_k: vec![],
+            cached_specs: vec![],
+        })
+    }
+
+    /// Circular convolution of one f64 row against a precomputed filter
+    /// spectrum in the engine's layout.
+    fn conv_row(&self, u: &[f64], k_spec: &[Cpx]) -> Vec<f64> {
+        match (self.path, self.op) {
+            (ConvPath::Monarch, ConvOp::Causal) => {
+                let m = 2 * self.n;
+                let mut up = u.to_vec();
+                up.resize(m, 0.0);
+                let uc: Vec<Cpx> = up.iter().map(|&v| Cpx::new(v, 0.0)).collect();
+                let um = fft::monarch_fft2(&uc, self.n1, self.n2);
+                let prod: Vec<Cpx> = um.iter().zip(k_spec).map(|(&a, &b)| a * b).collect();
+                let y = fft::monarch_ifft2(&prod, self.n1, self.n2);
+                y[..self.n].iter().map(|c| c.re).collect()
+            }
+            (ConvPath::Monarch, _) => {
+                let uc: Vec<Cpx> = u.iter().map(|&v| Cpx::new(v, 0.0)).collect();
+                let um = fft::monarch_fft2(&uc, self.n1, self.n2);
+                let prod: Vec<Cpx> = um.iter().zip(k_spec).map(|(&a, &b)| a * b).collect();
+                fft::monarch_ifft2(&prod, self.n1, self.n2).iter().map(|c| c.re).collect()
+            }
+            (ConvPath::Baseline, ConvOp::Causal) => {
+                let m = 2 * self.n;
+                let mut up = u.to_vec();
+                up.resize(m, 0.0);
+                let uf = fft::rfft_full(&up);
+                let prod: Vec<Cpx> = uf.iter().zip(k_spec).map(|(&a, &b)| a * b).collect();
+                let y = fft::fft(&prod, true);
+                y[..self.n].iter().map(|c| c.re).collect()
+            }
+            (ConvPath::Baseline, _) => {
+                let uf = fft::rfft_full(u);
+                let prod: Vec<Cpx> = uf.iter().zip(k_spec).map(|(&a, &b)| a * b).collect();
+                fft::fft(&prod, true).iter().map(|c| c.re).collect()
+            }
+        }
+    }
+
+    /// Precompute one head's filter spectrum in the engine's layout.
+    fn filter_spectrum(&self, k: &[f64]) -> Vec<Cpx> {
+        let m = if self.op == ConvOp::Causal { 2 * self.n } else { self.n };
+        let mut kp = k.to_vec();
+        kp.resize(m, 0.0);
+        match self.path {
+            ConvPath::Monarch => {
+                let kc: Vec<Cpx> = kp.iter().map(|&v| Cpx::new(v, 0.0)).collect();
+                fft::monarch_fft2(&kc, self.n1, self.n2)
+            }
+            ConvPath::Baseline => fft::rfft_full(&kp),
+        }
+    }
+}
+
+impl Engine for NativeConvEngine {
+    fn execute(&mut self, args: &[&HostTensor]) -> crate::Result<Vec<HostTensor>> {
+        let (b, h, n) = (self.b, self.h, self.n);
+        let (u, gates, k) = match self.op {
+            ConvOp::Gated => (
+                args[self.idx_u].as_f32(),
+                Some((args[self.idx_v].as_f32(), args[self.idx_w].as_f32())),
+                args[self.idx_k].as_f32(),
+            ),
+            _ => (args[self.idx_u].as_f32(), None, args[self.idx_k].as_f32()),
+        };
+        // Verify the declared twiddle operands: a swapped-in grid the
+        // engine would not actually use must fail, not silently no-op.
+        if let Some((ir, ii)) = self.idx_tw {
+            let (re, im) = (args[ir].as_f32(), args[ii].as_f32());
+            for (j, &(er, ei)) in self.tw_expect.iter().enumerate() {
+                if (re[j] - er).abs() > 1e-5 || (im[j] - ei).abs() > 1e-5 {
+                    bail!(
+                        "conv twiddle operand entry {j} does not match the DFT grid \
+                         (got ({}, {}), expected ({er}, {ei})); the native engine \
+                         computes twiddles analytically and rejects divergent operands",
+                        re[j],
+                        im[j]
+                    );
+                }
+            }
+        }
+        // Per-head filter spectra, cached across calls for a static bank.
+        if self.cached_k.as_slice() != k {
+            let specs: Vec<Vec<Cpx>> = (0..h)
+                .map(|hi| {
+                    let krow: Vec<f64> =
+                        k[hi * n..(hi + 1) * n].iter().map(|&v| v as f64).collect();
+                    self.filter_spectrum(&krow)
+                })
+                .collect();
+            self.cached_specs = specs;
+            self.cached_k = k.to_vec();
+        }
+        let k_specs = &self.cached_specs;
+        let mut y = vec![0.0f32; b * h * n];
+        for bi in 0..b {
+            for hi in 0..h {
+                let off = (bi * h + hi) * n;
+                let row: Vec<f64> = match gates {
+                    Some((v, w)) => u[off..off + n]
+                        .iter()
+                        .zip(&w[off..off + n])
+                        .map(|(&a, &c)| a as f64 * c as f64)
+                        .collect(),
+                    None => u[off..off + n].iter().map(|&v| v as f64).collect(),
+                };
+                let conv = self.conv_row(&row, &k_specs[hi]);
+                match gates {
+                    Some((v, _)) => {
+                        for (t, &cv) in conv.iter().enumerate() {
+                            y[off + t] = (v[off + t] as f64 * cv) as f32;
+                        }
+                    }
+                    None => {
+                        for (t, &cv) in conv.iter().enumerate() {
+                            y[off + t] = cv as f32;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(vec![HostTensor::f32(y, &[b, h, n])])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tiny conv-LM shared by the train/eval engines
+// ---------------------------------------------------------------------------
+
+/// Model dimensions (from artifact metadata).
+#[derive(Debug, Clone, Copy)]
+struct LmDims {
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    dim: usize,
+    /// Causal filter length (<= seq; the partial-convolution length).
+    filter_len: usize,
+}
+
+impl LmDims {
+    fn from_spec(spec: &ArtifactSpec) -> crate::Result<Self> {
+        Ok(Self {
+            batch: need_meta(spec, "batch")?,
+            seq: need_meta(spec, "seq_len")?,
+            vocab: need_meta(spec, "vocab")?,
+            dim: need_meta(spec, "dim")?,
+            filter_len: need_meta(spec, "filter_len")?,
+        })
+    }
+}
+
+/// Forward pass: tokens + params -> (h0, h1, per-position probabilities,
+/// targets, mean loss). `k_eff` is the effective (masked) filter bank.
+struct LmForward {
+    h0: Vec<f64>,
+    h1: Vec<f64>,
+    /// Softmax probabilities, flattened (batch, seq, vocab).
+    probs: Vec<f64>,
+    x: Vec<usize>,
+    targets: Vec<usize>,
+    loss: f64,
+}
+
+fn lm_forward(
+    d: &LmDims,
+    tokens: &[i32],
+    embed: &[f64],
+    k_eff: &[f64],
+    proj: &[f64],
+) -> crate::Result<LmForward> {
+    let (b, seq, vocab, dim, lk) = (d.batch, d.seq, d.vocab, d.dim, d.filter_len);
+    let mut x = vec![0usize; b * seq];
+    let mut targets = vec![0usize; b * seq];
+    for bi in 0..b {
+        for t in 0..seq {
+            let cur = tokens[bi * (seq + 1) + t];
+            let nxt = tokens[bi * (seq + 1) + t + 1];
+            if cur < 0 || cur as usize >= vocab || nxt < 0 || nxt as usize >= vocab {
+                bail!("token out of range for vocab {vocab}: {cur} / {nxt}");
+            }
+            x[bi * seq + t] = cur as usize;
+            targets[bi * seq + t] = nxt as usize;
+        }
+    }
+    // h0[bi, c, t] = embed[x[bi, t], c]
+    let mut h0 = vec![0.0f64; b * dim * seq];
+    for bi in 0..b {
+        for t in 0..seq {
+            let tok = x[bi * seq + t];
+            for c in 0..dim {
+                h0[(bi * dim + c) * seq + t] = embed[tok * dim + c];
+            }
+        }
+    }
+    // Depthwise causal conv with filter taps 0..lk.
+    let mut h1 = vec![0.0f64; b * dim * seq];
+    for bi in 0..b {
+        for c in 0..dim {
+            let base = (bi * dim + c) * seq;
+            for t in 0..seq {
+                let mut acc = 0.0;
+                let dmax = t.min(lk - 1);
+                for tap in 0..=dmax {
+                    acc += h0[base + t - tap] * k_eff[c * lk + tap];
+                }
+                h1[base + t] = acc;
+            }
+        }
+    }
+    // logits -> softmax -> mean cross-entropy.
+    let mut probs = vec![0.0f64; b * seq * vocab];
+    let mut total_nll = 0.0f64;
+    let mut logits = vec![0.0f64; vocab];
+    for bi in 0..b {
+        for t in 0..seq {
+            for (v, l) in logits.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                for c in 0..dim {
+                    acc += h1[(bi * dim + c) * seq + t] * proj[c * vocab + v];
+                }
+                *l = acc;
+            }
+            let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut z = 0.0;
+            for &l in &logits {
+                z += (l - m).exp();
+            }
+            let lse = m + z.ln();
+            let tgt = targets[bi * seq + t];
+            total_nll += lse - logits[tgt];
+            let po = (bi * seq + t) * vocab;
+            for v in 0..vocab {
+                probs[po + v] = (logits[v] - lse).exp();
+            }
+        }
+    }
+    let loss = total_nll / (b * seq) as f64;
+    Ok(LmForward { h0, h1, probs, x, targets, loss })
+}
+
+fn f32_to_f64(v: &[f32]) -> Vec<f64> {
+    v.iter().map(|&x| x as f64).collect()
+}
+
+fn f64_to_f32(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+/// Operand positions shared by the train/eval engines, resolved by name
+/// and shape-checked against the model dims at load time.
+struct LmOperands {
+    idx_tokens: usize,
+    idx_embed: usize,
+    idx_filter: usize,
+    idx_proj: usize,
+}
+
+impl LmOperands {
+    fn resolve(spec: &ArtifactSpec, d: &LmDims) -> crate::Result<Self> {
+        use crate::util::manifest::DType::{F32, I32};
+        Ok(Self {
+            idx_tokens: require_input(spec, "tokens", I32, &[d.batch, d.seq + 1])?,
+            idx_embed: require_input(spec, "param.embed", F32, &[d.vocab, d.dim])?,
+            idx_filter: require_input(spec, "param.filter", F32, &[d.dim, d.filter_len])?,
+            idx_proj: require_input(spec, "param.proj", F32, &[d.dim, d.vocab])?,
+        })
+    }
+}
+
+/// Train-step engine: forward, backward, SGD update — state round-trip.
+struct NativeTrainEngine {
+    d: LmDims,
+    lr: f64,
+    ops: LmOperands,
+    idx_step: usize,
+}
+
+impl NativeTrainEngine {
+    fn from_spec(spec: &ArtifactSpec) -> crate::Result<Self> {
+        let d = LmDims::from_spec(spec)?;
+        let lr = spec
+            .meta_f64("lr")
+            .ok_or_else(|| format_err!("artifact {} missing f64 meta \"lr\"", spec.name))?;
+        if d.filter_len == 0 || d.filter_len > d.seq {
+            bail!("artifact {}: filter_len {} out of range for seq {}", spec.name, d.filter_len, d.seq);
+        }
+        let ops = LmOperands::resolve(spec, &d)?;
+        let idx_step =
+            require_input(spec, "step", crate::util::manifest::DType::F32, &[])?;
+        Ok(Self { d, lr, ops, idx_step })
+    }
+}
+
+impl Engine for NativeTrainEngine {
+    fn execute(&mut self, args: &[&HostTensor]) -> crate::Result<Vec<HostTensor>> {
+        let d = self.d;
+        let (b, seq, vocab, dim, lk) = (d.batch, d.seq, d.vocab, d.dim, d.filter_len);
+        let tokens = args[self.ops.idx_tokens].as_i32();
+        let mut embed = f32_to_f64(args[self.ops.idx_embed].as_f32());
+        let mut filt = f32_to_f64(args[self.ops.idx_filter].as_f32());
+        let mut proj = f32_to_f64(args[self.ops.idx_proj].as_f32());
+        let step = args[self.idx_step].as_f32()[0];
+
+        let fwd = lm_forward(&d, tokens, &embed, &filt, &proj)?;
+
+        // dlogits = (softmax - onehot) / (B * seq), folded into the chain.
+        let scale = 1.0 / (b * seq) as f64;
+        let mut dproj = vec![0.0f64; dim * vocab];
+        let mut dh1 = vec![0.0f64; b * dim * seq];
+        for bi in 0..b {
+            for t in 0..seq {
+                let po = (bi * seq + t) * vocab;
+                let tgt = fwd.targets[bi * seq + t];
+                for v in 0..vocab {
+                    let g = (fwd.probs[po + v] - if v == tgt { 1.0 } else { 0.0 }) * scale;
+                    if g == 0.0 {
+                        continue;
+                    }
+                    for c in 0..dim {
+                        dproj[c * vocab + v] += fwd.h1[(bi * dim + c) * seq + t] * g;
+                        dh1[(bi * dim + c) * seq + t] += g * proj[c * vocab + v];
+                    }
+                }
+            }
+        }
+        let mut dk = vec![0.0f64; dim * lk];
+        let mut dh0 = vec![0.0f64; b * dim * seq];
+        for bi in 0..b {
+            for c in 0..dim {
+                let base = (bi * dim + c) * seq;
+                for t in 0..seq {
+                    let g = dh1[base + t];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    let dmax = t.min(lk - 1);
+                    for tap in 0..=dmax {
+                        dk[c * lk + tap] += g * fwd.h0[base + t - tap];
+                        dh0[base + t - tap] += g * filt[c * lk + tap];
+                    }
+                }
+            }
+        }
+        let mut dembed = vec![0.0f64; vocab * dim];
+        for bi in 0..b {
+            for t in 0..seq {
+                let tok = fwd.x[bi * seq + t];
+                for c in 0..dim {
+                    dembed[tok * dim + c] += dh0[(bi * dim + c) * seq + t];
+                }
+            }
+        }
+        for (p, g) in embed.iter_mut().zip(&dembed) {
+            *p -= self.lr * g;
+        }
+        for (p, g) in filt.iter_mut().zip(&dk) {
+            *p -= self.lr * g;
+        }
+        for (p, g) in proj.iter_mut().zip(&dproj) {
+            *p -= self.lr * g;
+        }
+
+        Ok(vec![
+            HostTensor::f32(f64_to_f32(&embed), &[vocab, dim]),
+            HostTensor::f32(f64_to_f32(&filt), &[dim, lk]),
+            HostTensor::f32(f64_to_f32(&proj), &[dim, vocab]),
+            HostTensor::scalar(step + 1.0),
+            HostTensor::scalar(fwd.loss as f32),
+        ])
+    }
+}
+
+/// Eval engine: the conv LM forward-only, with optional filter-tap mask
+/// (`kmask` runtime input) or frequency-sparse spectrum masking.
+struct NativeEvalEngine {
+    d: LmDims,
+    ops: LmOperands,
+    idx_kmask: Option<usize>,
+    sparsity: Option<SparsityPattern>,
+}
+
+impl NativeEvalEngine {
+    fn from_spec(spec: &ArtifactSpec) -> crate::Result<Self> {
+        let d = LmDims::from_spec(spec)?;
+        if d.filter_len == 0 || d.filter_len > d.seq {
+            bail!("artifact {}: filter_len {} out of range for seq {}", spec.name, d.filter_len, d.seq);
+        }
+        let ops = LmOperands::resolve(spec, &d)?;
+        let idx_kmask = match input_index(spec, "kmask") {
+            Some(_) => Some(require_input(
+                spec,
+                "kmask",
+                crate::util::manifest::DType::F32,
+                &[d.filter_len],
+            )?),
+            None => None,
+        };
+        let sparsity = match (spec.meta_usize("sparse_n1"), spec.meta_usize("sparse_n2")) {
+            (Some(n1), Some(n2)) => Some(SparsityPattern::new(
+                n1,
+                n2,
+                need_meta(spec, "keep_rows")?,
+                need_meta(spec, "keep_cols")?,
+            )?),
+            _ => None,
+        };
+        Ok(Self { d, ops, idx_kmask, sparsity })
+    }
+
+    /// Apply the frequency-sparsity pattern to the filter bank: pad each
+    /// channel's taps to the pattern's FFT grid, sparsify the spectrum,
+    /// and return the (now dense-in-time) equivalent filter, cropped back
+    /// to the padded length for circular-causal application.
+    fn sparsify(&self, k_eff: &[f64], p: &SparsityPattern) -> crate::Result<Vec<Vec<Cpx>>> {
+        let (dim, lk) = (self.d.dim, self.d.filter_len);
+        let m = p.n1 * p.n2;
+        if m < 2 * self.d.seq {
+            bail!("sparsity grid {m} smaller than 2*seq {}", 2 * self.d.seq);
+        }
+        let mut spectra = Vec::with_capacity(dim);
+        for c in 0..dim {
+            let mut kp = vec![0.0f64; m];
+            kp[..lk].copy_from_slice(&k_eff[c * lk..(c + 1) * lk]);
+            let kf = fft::rfft_full(&kp);
+            let mut re: Vec<f32> = kf.iter().map(|z| z.re as f32).collect();
+            let mut im: Vec<f32> = kf.iter().map(|z| z.im as f32).collect();
+            p.apply_spectrum(&mut re, &mut im);
+            spectra.push(
+                re.iter().zip(&im).map(|(&r, &i)| Cpx::new(r as f64, i as f64)).collect(),
+            );
+        }
+        Ok(spectra)
+    }
+}
+
+impl Engine for NativeEvalEngine {
+    fn execute(&mut self, args: &[&HostTensor]) -> crate::Result<Vec<HostTensor>> {
+        let d = self.d;
+        let (dim, lk) = (d.dim, d.filter_len);
+        let tokens = args[self.ops.idx_tokens].as_i32();
+        let kmask = self.idx_kmask.map(|i| args[i].as_f32());
+        let embed = f32_to_f64(args[self.ops.idx_embed].as_f32());
+        let filt = f32_to_f64(args[self.ops.idx_filter].as_f32());
+        let proj = f32_to_f64(args[self.ops.idx_proj].as_f32());
+
+        // Effective filter: taps masked by kmask when present.
+        let mut k_eff = filt;
+        if let Some(mask) = kmask {
+            for c in 0..dim {
+                for tap in 0..lk {
+                    k_eff[c * lk + tap] *= mask[tap] as f64;
+                }
+            }
+        }
+
+        let loss = match &self.sparsity {
+            None => lm_forward(&d, tokens, &embed, &k_eff, &proj)?.loss,
+            Some(p) => {
+                // Frequency-sparse path: causal conv through the masked
+                // spectrum, then the shared logits/CE tail via a
+                // tap-domain equivalent is unavailable — compute h1
+                // directly and reuse the projection math.
+                let spectra = self.sparsify(&k_eff, p)?;
+                lm_forward_spectral(&d, tokens, &embed, &spectra, &proj, p.n1 * p.n2)?
+            }
+        };
+        Ok(vec![HostTensor::scalar(loss as f32)])
+    }
+}
+
+/// Forward pass with per-channel filter *spectra* over an `m`-point grid
+/// (frequency-sparse evaluation): causal conv via zero-padding to `m`.
+fn lm_forward_spectral(
+    d: &LmDims,
+    tokens: &[i32],
+    embed: &[f64],
+    spectra: &[Vec<Cpx>],
+    proj: &[f64],
+    m: usize,
+) -> crate::Result<f64> {
+    let (b, seq, vocab, dim) = (d.batch, d.seq, d.vocab, d.dim);
+    let mut total_nll = 0.0f64;
+    let mut logits = vec![0.0f64; vocab];
+    let mut h1 = vec![0.0f64; dim * seq];
+    for bi in 0..b {
+        // Channel-major causal conv of the embedded row via the spectrum.
+        for c in 0..dim {
+            let mut xrow = vec![0.0f64; m];
+            for t in 0..seq {
+                let tok = tokens[bi * (seq + 1) + t];
+                if tok < 0 || tok as usize >= vocab {
+                    bail!("token out of range for vocab {vocab}: {tok}");
+                }
+                xrow[t] = embed[tok as usize * dim + c];
+            }
+            let y = fft::fft_conv_spectrum(&xrow, &spectra[c]);
+            h1[c * seq..(c + 1) * seq].copy_from_slice(&y[..seq]);
+        }
+        for t in 0..seq {
+            for (v, l) in logits.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                for c in 0..dim {
+                    acc += h1[c * seq + t] * proj[c * vocab + v];
+                }
+                *l = acc;
+            }
+            let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut z = 0.0;
+            for &l in &logits {
+                z += (l - mx).exp();
+            }
+            let lse = mx + z.ln();
+            let tgt = tokens[bi * (seq + 1) + t + 1];
+            if tgt < 0 || tgt as usize >= vocab {
+                bail!("token out of range for vocab {vocab}: {tgt}");
+            }
+            total_nll += lse - logits[tgt as usize];
+        }
+    }
+    Ok(total_nll / (b * seq) as f64)
+}
+
+// ---------------------------------------------------------------------------
+// Fleet generation: manifest text + fixture/golden bytes
+// ---------------------------------------------------------------------------
+
+fn push_f32(bytes: &mut Vec<u8>, vals: &[f32]) {
+    for v in vals {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn name_seed(name: &str) -> u64 {
+    name.bytes().fold(0xFFC0u64, |acc, b| acc.wrapping_mul(131).wrapping_add(b as u64))
+}
+
+struct FleetBuilder {
+    text: String,
+    files: BTreeMap<String, Vec<u8>>,
+}
+
+impl FleetBuilder {
+    fn new() -> Self {
+        Self { text: String::from("version 1\n"), files: BTreeMap::new() }
+    }
+
+    /// One conv artifact; optionally with an oracle-computed golden.
+    fn conv(&mut self, kind: &str, variant: &str, n: usize, golden: bool) {
+        let name = format!("{kind}_{variant}_n{n}");
+        let (b, h) = (2usize, 16usize);
+        let causal = kind == "conv_causal";
+        let gated = kind == "conv_gated";
+        let fft_len = if causal { 2 * n } else { n };
+        let fs = fft::monarch_factors(fft_len, 2);
+        let (n1, n2) = (fs[0], fs[1]);
+
+        // Fixture: the DFT twiddle grid (the const operands the compiled
+        // kernels consume; the native engines recompute twiddles
+        // analytically and *verify* these operands at execute time, so
+        // the set_operand/fixture workflows stay honest).
+        let grid = twiddle_grid(n1, n2, fft_len);
+        let tw_re: Vec<f32> = grid.iter().map(|&(re, _)| re).collect();
+        let tw_im: Vec<f32> = grid.iter().map(|&(_, im)| im).collect();
+        let fix_name = format!("{name}.fix");
+        let mut fix = Vec::with_capacity(2 * 4 * n1 * n2);
+        push_f32(&mut fix, &tw_re);
+        let im_off = fix.len();
+        push_f32(&mut fix, &tw_im);
+        self.files.insert(fix_name.clone(), fix);
+
+        self.text.push_str(&format!(
+            "artifact {name}\nhlo {name}.hlo.txt\nmeta group conv\nmeta kind {kind}\n\
+             meta variant {variant}\nmeta seq_len {n}\nmeta batch {b}\nmeta heads {h}\n\
+             meta order 2\nmeta n1 {n1}\nmeta n2 {n2}\n"
+        ));
+        self.text.push_str(&format!("input u f32 {b},{h},{n} runtime\n"));
+        if gated {
+            self.text.push_str(&format!("input v f32 {b},{h},{n} runtime\n"));
+            self.text.push_str(&format!("input w f32 {b},{h},{n} runtime\n"));
+        }
+        self.text.push_str(&format!("input k f32 {h},{n} runtime\n"));
+        self.text.push_str(&format!("input tw_re f32 {n1},{n2} const {fix_name} 0\n"));
+        self.text.push_str(&format!("input tw_im f32 {n1},{n2} const {fix_name} {im_off}\n"));
+        self.text.push_str(&format!("output y f32 {b},{h},{n}\n"));
+
+        if golden {
+            let mut rng = Rng::new(name_seed(&name));
+            let u = rng.normal_vec(b * h * n);
+            let (v, w) = if gated {
+                (rng.normal_vec(b * h * n), rng.normal_vec(b * h * n))
+            } else {
+                (vec![], vec![])
+            };
+            let k = rng.normal_vec(h * n);
+            let mut y = vec![0.0f32; b * h * n];
+            for bi in 0..b {
+                for hi in 0..h {
+                    let off = (bi * h + hi) * n;
+                    let krow: Vec<f64> =
+                        k[hi * n..(hi + 1) * n].iter().map(|&x| x as f64).collect();
+                    let urow: Vec<f64> = if gated {
+                        u[off..off + n]
+                            .iter()
+                            .zip(&w[off..off + n])
+                            .map(|(&a, &c)| a as f64 * c as f64)
+                            .collect()
+                    } else {
+                        u[off..off + n].iter().map(|&x| x as f64).collect()
+                    };
+                    // Oracle path: plain radix-2 FFT convolution.
+                    let conv = if causal {
+                        fft::causal_conv(&urow, &krow)
+                    } else {
+                        fft::fft_conv(&urow, &krow)
+                    };
+                    for (t, &cv) in conv.iter().enumerate() {
+                        y[off + t] =
+                            if gated { (v[off + t] as f64 * cv) as f32 } else { cv as f32 };
+                    }
+                }
+            }
+            let golden_name = format!("{name}.golden");
+            let mut gbytes = vec![];
+            push_f32(&mut gbytes, &u);
+            if gated {
+                push_f32(&mut gbytes, &v);
+                push_f32(&mut gbytes, &w);
+            }
+            push_f32(&mut gbytes, &k);
+            push_f32(&mut gbytes, &y);
+            self.files.insert(golden_name.clone(), gbytes);
+            self.text.push_str(&format!("golden {golden_name}\n"));
+        }
+        self.text.push_str("end\n");
+    }
+
+    /// Shared param-fixture writer for train/eval artifacts. Returns the
+    /// manifest `input` lines for the four param/state operands.
+    fn lm_fixture(
+        &mut self,
+        name: &str,
+        vocab: usize,
+        dim: usize,
+        lk: usize,
+        scale: f32,
+        state: bool,
+    ) -> String {
+        let mut rng = Rng::new(name_seed(name));
+        let embed: Vec<f32> = rng.normal_vec(vocab * dim).iter().map(|v| v * scale).collect();
+        let fscale = scale / (lk as f32).sqrt();
+        let filt: Vec<f32> = rng.normal_vec(dim * lk).iter().map(|v| v * fscale).collect();
+        let proj: Vec<f32> = rng.normal_vec(dim * vocab).iter().map(|v| v * scale).collect();
+        let fix_name = format!("{name}.fix");
+        let mut fix = vec![];
+        push_f32(&mut fix, &embed);
+        let off_filter = fix.len();
+        push_f32(&mut fix, &filt);
+        let off_proj = fix.len();
+        push_f32(&mut fix, &proj);
+        let off_step = fix.len();
+        push_f32(&mut fix, &[0.0f32]);
+        self.files.insert(fix_name.clone(), fix);
+        let kind = if state { "state" } else { "const" };
+        let mut lines = String::new();
+        lines.push_str(&format!("input param.embed f32 {vocab},{dim} {kind} {fix_name} 0\n"));
+        lines.push_str(&format!(
+            "input param.filter f32 {dim},{lk} {kind} {fix_name} {off_filter}\n"
+        ));
+        lines.push_str(&format!(
+            "input param.proj f32 {dim},{vocab} {kind} {fix_name} {off_proj}\n"
+        ));
+        if state {
+            lines.push_str(&format!("input step f32 - state {fix_name} {off_step}\n"));
+        }
+        lines
+    }
+
+    /// One train-step artifact.
+    #[allow(clippy::too_many_arguments)]
+    fn train(
+        &mut self,
+        name: &str,
+        variant: &str,
+        task: &str,
+        batch: usize,
+        seq: usize,
+        vocab: usize,
+        dim: usize,
+        lk: usize,
+        lr: f64,
+    ) {
+        let n_params = vocab * dim + dim * lk + dim * vocab + 1;
+        self.text.push_str(&format!(
+            "artifact {name}\nhlo {name}.hlo.txt\nmeta group train\nmeta kind train_step\n\
+             meta variant {variant}\nmeta task {task}\nmeta batch {batch}\nmeta seq_len {seq}\n\
+             meta vocab {vocab}\nmeta dim {dim}\nmeta filter_len {lk}\nmeta lr {lr}\n\
+             meta n_params {n_params}\n"
+        ));
+        self.text.push_str(&format!("input tokens i32 {batch},{} runtime\n", seq + 1));
+        let lines = self.lm_fixture(name, vocab, dim, lk, 0.3, true);
+        self.text.push_str(&lines);
+        self.text.push_str(&format!("output param.embed f32 {vocab},{dim}\n"));
+        self.text.push_str(&format!("output param.filter f32 {dim},{lk}\n"));
+        self.text.push_str(&format!("output param.proj f32 {dim},{vocab}\n"));
+        self.text.push_str("output step f32 -\n");
+        self.text.push_str("output loss f32 -\n");
+        self.text.push_str("end\n");
+    }
+
+    /// One eval artifact (forward-only loss), optionally with the `kmask`
+    /// partial-convolution input or a frequency-sparsity pattern.
+    #[allow(clippy::too_many_arguments)]
+    fn eval(
+        &mut self,
+        name: &str,
+        task: &str,
+        batch: usize,
+        seq: usize,
+        vocab: usize,
+        dim: usize,
+        lk: usize,
+        kmask: bool,
+        target_sparsity: Option<f64>,
+    ) {
+        self.text.push_str(&format!(
+            "artifact {name}\nhlo {name}.hlo.txt\nmeta group eval\nmeta kind lm_eval\n\
+             meta task {task}\nmeta batch {batch}\nmeta seq_len {seq}\nmeta vocab {vocab}\n\
+             meta dim {dim}\nmeta filter_len {lk}\n"
+        ));
+        if let Some(target) = target_sparsity {
+            let m = (2 * seq).next_power_of_two();
+            let fs = fft::monarch_factors(m, 2);
+            let p = select_pattern(fs[0], fs[1], target);
+            self.text.push_str(&format!(
+                "meta sparse_n1 {}\nmeta sparse_n2 {}\nmeta keep_rows {}\nmeta keep_cols {}\n\
+                 meta sparsity {:.4}\n",
+                p.n1,
+                p.n2,
+                p.keep_rows,
+                p.keep_cols,
+                p.sparsity_fraction()
+            ));
+        }
+        self.text.push_str(&format!("input tokens i32 {batch},{} runtime\n", seq + 1));
+        if kmask {
+            self.text.push_str(&format!("input kmask f32 {lk} runtime\n"));
+        }
+        let lines = self.lm_fixture(name, vocab, dim, lk, 0.05, false);
+        self.text.push_str(&lines);
+        self.text.push_str("output loss f32 -\n");
+        self.text.push_str("end\n");
+    }
+}
+
+/// Manifest text + fixture/golden files of the default native fleet.
+pub fn default_fleet_parts() -> (String, BTreeMap<String, Vec<u8>>) {
+    let mut fb = FleetBuilder::new();
+    for variant in ["monarch", "baseline"] {
+        for n in [256usize, 1024, 4096] {
+            let golden = n <= 1024 && !(variant == "baseline" && n == 1024);
+            fb.conv("conv_fwd", variant, n, golden);
+        }
+        for n in [256usize, 1024] {
+            fb.conv("conv_gated", variant, n, variant == "monarch" && n == 256);
+        }
+        for n in [128usize, 512] {
+            fb.conv("conv_causal", variant, n, variant == "monarch" && n == 128);
+        }
+    }
+    fb.train("lm_tiny_train", "monarch", "lm", 4, 32, 16, 16, 32, 1.0);
+    fb.train("lm_train_monarch", "monarch", "lm", 4, 32, 16, 16, 32, 1.0);
+    fb.train("lm_train_baseline", "baseline", "lm", 4, 32, 16, 16, 32, 1.0);
+    fb.train("dna_train", "monarch", "dna", 2, 128, 8, 8, 64, 1.0);
+    fb.eval("lm_eval_kmask", "lm", 2, 64, 16, 16, 64, true, None);
+    fb.eval("lm_eval_sparse_s50", "lm", 2, 64, 16, 16, 64, false, Some(0.5));
+    fb.eval("lm_eval_sparse_s75", "lm", 2, 64, 16, 16, 64, false, Some(0.75));
+    fb.eval("dna_eval", "dna", 1, 512, 8, 8, 64, true, None);
+    (fb.text, fb.files)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_fleet_parses_and_loads() {
+        let backend = NativeBackend::with_default_fleet().unwrap();
+        let m = backend.manifest();
+        assert!(m.artifacts.len() >= 20, "{} artifacts", m.artifacts.len());
+        for name in [
+            "conv_fwd_monarch_n256",
+            "conv_fwd_baseline_n4096",
+            "conv_gated_monarch_n1024",
+            "conv_causal_baseline_n512",
+            "lm_tiny_train",
+            "lm_eval_kmask",
+            "lm_eval_sparse_s75",
+            "dna_eval",
+            "dna_train",
+        ] {
+            let spec = m.get(name).unwrap();
+            backend.engine(spec).unwrap();
+        }
+    }
+
+    #[test]
+    fn goldens_present_where_declared() {
+        let backend = NativeBackend::with_default_fleet().unwrap();
+        let m = backend.manifest();
+        let with_golden: Vec<_> =
+            m.artifacts.values().filter(|a| a.golden_file.is_some()).collect();
+        assert!(with_golden.len() >= 4, "{}", with_golden.len());
+        for spec in with_golden {
+            let bytes = backend.file_bytes(spec.golden_file.as_ref().unwrap()).unwrap();
+            let want: usize = spec
+                .inputs
+                .iter()
+                .filter(|i| matches!(i.kind, crate::util::manifest::InputKind::Runtime))
+                .map(|i| i.spec.byte_len())
+                .sum::<usize>()
+                + spec.outputs.iter().map(|o| o.byte_len()).sum::<usize>();
+            assert_eq!(bytes.len(), want, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn unknown_fixture_is_clean_error() {
+        let backend = NativeBackend::with_default_fleet().unwrap();
+        let err = backend.file_bytes("nope.fix").unwrap_err();
+        assert!(format!("{err:#}").contains("not present"));
+    }
+
+    #[test]
+    fn dna_train_and_eval_params_are_exchangeable() {
+        // The extension workflow copies trained dna_train params into
+        // dna_eval; their param shapes must agree.
+        let backend = NativeBackend::with_default_fleet().unwrap();
+        let m = backend.manifest();
+        let t = m.get("dna_train").unwrap();
+        let e = m.get("dna_eval").unwrap();
+        for pname in ["param.embed", "param.filter", "param.proj"] {
+            let ti = t.inputs.iter().find(|i| i.spec.name == pname).unwrap();
+            let ei = e.inputs.iter().find(|i| i.spec.name == pname).unwrap();
+            assert_eq!(ti.spec.shape, ei.spec.shape, "{pname}");
+        }
+    }
+}

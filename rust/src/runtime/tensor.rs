@@ -1,8 +1,8 @@
-//! Host-side tensors and conversion to/from XLA literals.
+//! Host-side tensors: the lingua franca between the coordinator, trainer,
+//! server, and every execution backend.
 
-use anyhow::{bail, Context};
-
-use crate::util::manifest::{DType, TensorSpec};
+use crate::bail;
+use crate::util::manifest::DType;
 
 /// Typed host storage.
 #[derive(Debug, Clone, PartialEq)]
@@ -163,41 +163,6 @@ impl HostTensor {
                 }
             })
             .fold(0.0, f64::max)
-    }
-}
-
-/// Build an XLA literal from raw fixture bytes.
-pub fn literal_from_bytes(dtype: DType, shape: &[usize], bytes: &[u8]) -> crate::Result<xla::Literal> {
-    let ty = match dtype {
-        DType::F32 => xla::ElementType::F32,
-        DType::I32 => xla::ElementType::S32,
-    };
-    xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
-        .context("literal from fixture bytes")
-}
-
-/// Convert a host tensor into an XLA literal.
-pub fn literal_from_tensor(t: &HostTensor) -> crate::Result<xla::Literal> {
-    literal_from_bytes(t.dtype(), &t.shape, &t.to_bytes())
-}
-
-/// Convert an XLA literal back into a host tensor matching `spec`.
-pub fn tensor_from_literal(lit: &xla::Literal, spec: &TensorSpec) -> crate::Result<HostTensor> {
-    match spec.dtype {
-        DType::F32 => {
-            let v: Vec<f32> = lit.to_vec().context("literal to f32 vec")?;
-            if v.len() != spec.numel() {
-                bail!("output {}: got {} elements, expected {}", spec.name, v.len(), spec.numel());
-            }
-            Ok(HostTensor::f32(v, &spec.shape))
-        }
-        DType::I32 => {
-            let v: Vec<i32> = lit.to_vec().context("literal to i32 vec")?;
-            if v.len() != spec.numel() {
-                bail!("output {}: got {} elements, expected {}", spec.name, v.len(), spec.numel());
-            }
-            Ok(HostTensor::i32(v, &spec.shape))
-        }
     }
 }
 

@@ -11,11 +11,11 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail};
+use crate::{bail, format_err};
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::service::ServiceStats;
-use crate::runtime::{Artifact, HostTensor, Runtime};
+use crate::runtime::{Artifact, BackendConfig, HostTensor};
 
 /// A model inference request: one row of token ids.
 #[derive(Debug)]
@@ -43,18 +43,17 @@ pub struct ModelServer {
 impl ModelServer {
     /// Start serving the named forward artifact.
     pub fn start(
-        artifact_dir: impl Into<std::path::PathBuf>,
+        backend: BackendConfig,
         artifact: &str,
         policy: BatchPolicy,
     ) -> crate::Result<Self> {
-        let dir = artifact_dir.into();
         let name = artifact.to_string();
         let stats = Arc::new(ServiceStats::default());
         let stats2 = Arc::clone(&stats);
         let (tx, rx) = channel::<Msg>();
         let (ready_tx, ready_rx) = channel::<Result<(usize, usize, usize), String>>();
         let handle = std::thread::Builder::new().name("model-server".into()).spawn(move || {
-            match Worker::new(&dir, &name, policy, stats2) {
+            match Worker::new(&backend, &name, policy, stats2) {
                 Ok(mut w) => {
                     let _ = ready_tx.send(Ok((w.batch, w.seq_len, w.vocab)));
                     w.run(rx);
@@ -66,8 +65,8 @@ impl ModelServer {
         })?;
         let (_, seq_len, vocab) = ready_rx
             .recv()
-            .map_err(|_| anyhow!("server thread died during startup"))?
-            .map_err(|e| anyhow!("server startup failed: {e}"))?;
+            .map_err(|_| format_err!("server thread died during startup"))?
+            .map_err(|e| format_err!("server startup failed: {e}"))?;
         Ok(Self { tx, stats, handle: Some(handle), seq_len, vocab })
     }
 
@@ -83,8 +82,8 @@ impl ModelServer {
     pub fn call(&self, req: InferRequest) -> crate::Result<Vec<f32>> {
         self.submit(req)
             .recv()
-            .map_err(|_| anyhow!("server dropped the request"))?
-            .map_err(|e| anyhow!(e))
+            .map_err(|_| format_err!("server dropped the request"))?
+            .map_err(|e| format_err!(e))
     }
 
     pub fn stats(&self) -> &ServiceStats {
@@ -119,20 +118,20 @@ struct Worker {
 
 impl Worker {
     fn new(
-        dir: &std::path::Path,
+        backend: &BackendConfig,
         name: &str,
         policy: BatchPolicy,
         stats: Arc<ServiceStats>,
     ) -> crate::Result<Self> {
-        let runtime = Runtime::new(dir)?;
+        let runtime = backend.connect()?;
         let artifact = runtime.load(name)?;
         let spec = artifact.spec();
         if spec.meta("kind") != Some("lm_logits") {
             bail!("artifact {name} is not an lm_logits artifact");
         }
-        let batch = spec.meta_usize("batch").ok_or_else(|| anyhow!("missing batch"))?;
-        let seq_len = spec.meta_usize("seq_len").ok_or_else(|| anyhow!("missing seq_len"))?;
-        let vocab = spec.meta_usize("vocab").ok_or_else(|| anyhow!("missing vocab"))?;
+        let batch = spec.meta_usize("batch").ok_or_else(|| format_err!("missing batch"))?;
+        let seq_len = spec.meta_usize("seq_len").ok_or_else(|| format_err!("missing seq_len"))?;
+        let vocab = spec.meta_usize("vocab").ok_or_else(|| format_err!("missing vocab"))?;
         let mut policy = policy;
         policy.batch_size = batch; // the compiled shape wins
         Ok(Self {

@@ -6,7 +6,8 @@
 
 use std::io::{Read, Write};
 
-use anyhow::{bail, Context};
+use crate::bail;
+use crate::util::error::Context;
 
 use crate::runtime::tensor::HostTensor;
 use crate::util::manifest::DType;

@@ -7,7 +7,7 @@
 
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail};
+use crate::{bail, format_err};
 
 use crate::runtime::{Artifact, HostTensor, Runtime};
 use crate::trainer::data::{DnaGen, PathfinderGen, TokenGen};
@@ -58,8 +58,8 @@ impl Trainer {
         if spec.meta("kind") != Some("train_step") {
             bail!("artifact {} is not a train_step artifact", cfg.artifact);
         }
-        let batch = spec.meta_usize("batch").ok_or_else(|| anyhow!("missing batch meta"))?;
-        let seq_len = spec.meta_usize("seq_len").ok_or_else(|| anyhow!("missing seq_len meta"))?;
+        let batch = spec.meta_usize("batch").ok_or_else(|| format_err!("missing batch meta"))?;
+        let seq_len = spec.meta_usize("seq_len").ok_or_else(|| format_err!("missing seq_len meta"))?;
         let vocab = spec.meta_usize("vocab").unwrap_or(4);
         let task = spec.meta("task").unwrap_or("lm").to_string();
         Ok(Self { artifact, cfg, batch, seq_len, vocab, task })
@@ -104,7 +104,7 @@ impl Trainer {
             };
             let loss = outs
                 .last()
-                .ok_or_else(|| anyhow!("train_step returned no outputs"))?
+                .ok_or_else(|| format_err!("train_step returned no outputs"))?
                 .item();
             if !loss.is_finite() {
                 bail!("loss diverged (non-finite) at step {step}");

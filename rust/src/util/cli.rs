@@ -5,7 +5,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context};
+use crate::bail;
+use crate::util::error::Context;
 
 /// Parsed command line: one optional subcommand plus `--key [value]` pairs.
 #[derive(Debug, Clone, Default)]

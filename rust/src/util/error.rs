@@ -1,0 +1,241 @@
+//! Internal error type with context chaining (anyhow replacement).
+//!
+//! The offline build vendors no external crates, so the crate carries its
+//! own minimal error substrate: an [`Error`] holding a message chain, a
+//! [`Context`] extension trait for `Result`/`Option`, and the
+//! [`bail!`](crate::bail)/[`ensure!`](crate::ensure)/
+//! [`format_err!`](crate::format_err) macros. `Display` renders the full
+//! chain outermost-first (`"reading manifest: No such file"`), both for
+//! `{}` and `{:#}`, so existing `format!("{e:#}")` call sites keep their
+//! meaning.
+
+use std::fmt;
+
+/// Crate-wide error: a message plus an optional chain of causes.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Error from a plain message.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into(), source: None }
+    }
+
+    /// Wrap `cause` with an outer context message.
+    pub fn wrap(msg: impl Into<String>, cause: Error) -> Self {
+        Self { msg: msg.into(), source: Some(Box::new(cause)) }
+    }
+
+    /// The outermost message (no cause chain).
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cur = &self.source;
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = &e.source;
+        }
+        out.into_iter()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = &self.source;
+        while let Some(e) = cur {
+            write!(f, ": {}", e.msg)?;
+            cur = &e.source;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_ref().map(|e| e.as_ref() as &(dyn std::error::Error + 'static))
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::string::FromUtf8Error> for Error {
+    fn from(e: std::string::FromUtf8Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Context-chaining extension for `Result` and `Option` (anyhow-style).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::wrap(ctx.to_string(), Error::msg(e.to_string())))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::wrap(f().to_string(), Error::msg(e.to_string())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string (or any `Display` expression).
+#[macro_export]
+macro_rules! format_err {
+    ($msg:literal $(, $arg:expr)* $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg $(, $arg)*))
+    };
+    ($e:expr) => {
+        $crate::util::error::Error::msg(($e).to_string())
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::format_err!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fail_io() -> crate::Result<String> {
+        std::fs::read_to_string("/definitely/not/a/real/path/ffc")
+            .context("reading the nonexistent file")
+    }
+
+    #[test]
+    fn display_renders_chain() {
+        let e = fail_io().unwrap_err();
+        let s = format!("{e:#}");
+        assert!(s.starts_with("reading the nonexistent file: "), "{s}");
+        assert!(s.len() > "reading the nonexistent file: ".len());
+        // `{}` and `{:#}` agree (the whole chain is always shown).
+        assert_eq!(s, format!("{e}"));
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, String> = Ok(7);
+        let mut called = false;
+        let v = ok
+            .with_context(|| {
+                called = true;
+                "never"
+            })
+            .unwrap();
+        assert_eq!(v, 7);
+        assert!(!called, "context closure must not run on Ok");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing value").unwrap_err();
+        assert_eq!(e.message(), "missing value");
+        assert_eq!(Some(5).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn macros_format_and_passthrough() {
+        let e = format_err!("bad length {} for {:?}", 3, "x");
+        assert_eq!(e.message(), "bad length 3 for \"x\"");
+        // Expression branch: any Display value.
+        let msg = String::from("prebuilt message");
+        let e = format_err!(msg);
+        assert_eq!(e.message(), "prebuilt message");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> crate::Result<i32> {
+            crate::ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                crate::bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(format!("{:#}", f(-1).unwrap_err()).contains("negative input"));
+        assert!(format!("{:#}", f(200).unwrap_err()).contains("too big"));
+    }
+
+    #[test]
+    fn question_mark_conversions() {
+        fn parse(s: &str) -> crate::Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn chain_iteration() {
+        let e = Error::wrap("outer", Error::wrap("middle", Error::msg("root")));
+        let parts: Vec<&str> = e.chain().collect();
+        assert_eq!(parts, vec!["outer", "middle", "root"]);
+    }
+}

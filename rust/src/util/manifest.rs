@@ -23,7 +23,8 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context};
+use crate::util::error::Context;
+use crate::{bail, format_err};
 
 /// Element type of a tensor operand.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -188,14 +189,14 @@ impl Manifest {
 
             match directive {
                 "version" => {
-                    version = rest.first().ok_or_else(|| anyhow!(ctx()))?.parse()?;
+                    version = rest.first().ok_or_else(|| format_err!(ctx()))?.parse()?;
                 }
                 "artifact" => {
                     if cur.is_some() {
                         bail!("{}: nested artifact (missing `end`)", ctx());
                     }
                     cur = Some(ArtifactSpec {
-                        name: rest.first().ok_or_else(|| anyhow!(ctx()))?.to_string(),
+                        name: rest.first().ok_or_else(|| format_err!(ctx()))?.to_string(),
                         hlo_file: String::new(),
                         meta: BTreeMap::new(),
                         inputs: vec![],
@@ -205,18 +206,18 @@ impl Manifest {
                 }
                 "hlo" => {
                     cur.as_mut()
-                        .ok_or_else(|| anyhow!("{}: hlo outside artifact", ctx()))?
-                        .hlo_file = rest.first().ok_or_else(|| anyhow!(ctx()))?.to_string();
+                        .ok_or_else(|| format_err!("{}: hlo outside artifact", ctx()))?
+                        .hlo_file = rest.first().ok_or_else(|| format_err!(ctx()))?.to_string();
                 }
                 "meta" => {
-                    let a = cur.as_mut().ok_or_else(|| anyhow!("{}: meta outside artifact", ctx()))?;
+                    let a = cur.as_mut().ok_or_else(|| format_err!("{}: meta outside artifact", ctx()))?;
                     if rest.len() < 2 {
                         bail!("{}: meta needs key + value", ctx());
                     }
                     a.meta.insert(rest[0].to_string(), rest[1..].join(" "));
                 }
                 "input" => {
-                    let a = cur.as_mut().ok_or_else(|| anyhow!("{}: input outside artifact", ctx()))?;
+                    let a = cur.as_mut().ok_or_else(|| format_err!("{}: input outside artifact", ctx()))?;
                     if rest.len() < 4 {
                         bail!("{}: input needs name dtype shape kind", ctx());
                     }
@@ -244,7 +245,7 @@ impl Manifest {
                     a.inputs.push(InputSpec { spec, kind });
                 }
                 "output" => {
-                    let a = cur.as_mut().ok_or_else(|| anyhow!("{}: output outside artifact", ctx()))?;
+                    let a = cur.as_mut().ok_or_else(|| format_err!("{}: output outside artifact", ctx()))?;
                     if rest.len() < 3 {
                         bail!("{}: output needs name dtype shape", ctx());
                     }
@@ -256,11 +257,11 @@ impl Manifest {
                 }
                 "golden" => {
                     cur.as_mut()
-                        .ok_or_else(|| anyhow!("{}: golden outside artifact", ctx()))?
-                        .golden_file = Some(rest.first().ok_or_else(|| anyhow!(ctx()))?.to_string());
+                        .ok_or_else(|| format_err!("{}: golden outside artifact", ctx()))?
+                        .golden_file = Some(rest.first().ok_or_else(|| format_err!(ctx()))?.to_string());
                 }
                 "end" => {
-                    let a = cur.take().ok_or_else(|| anyhow!("{}: end without artifact", ctx()))?;
+                    let a = cur.take().ok_or_else(|| format_err!("{}: end without artifact", ctx()))?;
                     if a.hlo_file.is_empty() {
                         bail!("artifact {} has no hlo file", a.name);
                     }
@@ -284,7 +285,7 @@ impl Manifest {
     pub fn get(&self, name: &str) -> crate::Result<&ArtifactSpec> {
         self.artifacts
             .get(name)
-            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest ({} known)", self.artifacts.len()))
+            .ok_or_else(|| format_err!("artifact {name:?} not in manifest ({} known)", self.artifacts.len()))
     }
 
     /// All artifacts whose metadata key equals the given value.

@@ -6,12 +6,14 @@
 //! replacements scoped to what this project needs.
 
 pub mod cli;
+pub mod error;
 pub mod logging;
 pub mod manifest;
 pub mod pool;
 pub mod rng;
 
 pub use cli::Args;
+pub use error::{Context, Error};
 pub use manifest::{ArtifactSpec, DType, InputKind, InputSpec, Manifest, TensorSpec};
 pub use pool::WorkerPool;
 pub use rng::Rng;

@@ -1,34 +1,21 @@
 //! Failure-injection tests: the runtime must fail loudly and precisely on
-//! malformed artifacts, wrong shapes, truncated fixtures/goldens, and
-//! abusive service requests — never silently compute garbage.
+//! malformed manifests, wrong shapes, truncated fixtures/goldens, and
+//! abusive service requests — never silently compute garbage. All tests
+//! run against the native backend (no artifacts needed, no skips).
 
-use std::path::PathBuf;
+use std::collections::BTreeMap;
 
 use flashfftconv::coordinator::router::{ConvKind, Router};
-use flashfftconv::runtime::{HostTensor, Runtime};
-use flashfftconv::util::manifest::Manifest;
+use flashfftconv::runtime::native::default_fleet_parts;
+use flashfftconv::runtime::{BackendConfig, HostTensor, Runtime};
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.txt").exists().then_some(dir)
-}
-
-macro_rules! require_artifacts {
-    () => {
-        match artifacts_dir() {
-            Some(d) => d,
-            None => {
-                eprintln!("skipping: run `make artifacts` first");
-                return;
-            }
-        }
-    };
+fn native() -> Runtime {
+    Runtime::native().expect("native backend constructs")
 }
 
 #[test]
 fn wrong_input_shape_is_an_error_not_garbage() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
+    let runtime = native();
     let mut art = runtime.load("conv_fwd_monarch_n256").unwrap();
     // Wrong N.
     let err = art
@@ -53,8 +40,7 @@ fn wrong_input_shape_is_an_error_not_garbage() {
 
 #[test]
 fn set_operand_validates() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
+    let runtime = native();
     let mut art = runtime.load("conv_fwd_monarch_n256").unwrap();
     // Unknown operand.
     assert!(art.set_operand("nope", &HostTensor::zeros(&[1])).is_err());
@@ -67,78 +53,118 @@ fn set_operand_validates() {
 }
 
 #[test]
+fn swapped_twiddle_operand_fails_at_execute() {
+    let runtime = native();
+    let mut art = runtime.load("conv_fwd_monarch_n256").unwrap();
+    // Correct shape but wrong values: accepted by set_operand (it only
+    // checks the signature), then rejected loudly at the next execute —
+    // the native engine verifies const operands instead of silently
+    // ignoring them.
+    art.set_operand("tw_re", &HostTensor::zeros(&[16, 16])).unwrap();
+    let err = art
+        .call(&[HostTensor::zeros(&[2, 16, 256]), HostTensor::zeros(&[16, 256])])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("twiddle"), "{err:#}");
+}
+
+#[test]
+fn inconsistent_manifest_dims_rejected_at_load() {
+    // A parsable manifest whose meta dims disagree with its declared
+    // tensor shapes must fail at load, not panic at execute.
+    let text = "version 1\nartifact bad_conv\nhlo bad_conv.hlo.txt\nmeta group conv\n\
+                meta kind conv_fwd\nmeta variant monarch\nmeta seq_len 512\n\
+                meta batch 2\nmeta heads 16\n\
+                input u f32 2,16,256 runtime\ninput k f32 16,256 runtime\n\
+                output y f32 2,16,256\nend\n";
+    let runtime = Runtime::native_from(text, BTreeMap::new()).unwrap();
+    let err = runtime.load("bad_conv").unwrap_err();
+    assert!(format!("{err:#}").contains("engine needs"), "{err:#}");
+
+    // A gated artifact missing its gate inputs is equally rejected.
+    let text = "version 1\nartifact bad_gated\nhlo bad_gated.hlo.txt\nmeta group conv\n\
+                meta kind conv_gated\nmeta variant monarch\nmeta seq_len 256\n\
+                meta batch 2\nmeta heads 16\n\
+                input u f32 2,16,256 runtime\ninput k f32 16,256 runtime\n\
+                output y f32 2,16,256\nend\n";
+    let runtime = Runtime::native_from(text, BTreeMap::new()).unwrap();
+    let err = runtime.load("bad_gated").unwrap_err();
+    assert!(format!("{err:#}").contains("declares no input"), "{err:#}");
+}
+
+#[test]
 fn truncated_fixture_detected_at_load() {
-    let dir = require_artifacts!();
-    // Copy one artifact's files into a temp dir with a truncated fixture.
-    let tmp = std::env::temp_dir().join(format!("ffc_trunc_{}", std::process::id()));
-    std::fs::create_dir_all(&tmp).unwrap();
-    let manifest = Manifest::load(&dir).unwrap();
-    let spec = manifest.get("conv_fwd_monarch_n256").unwrap();
-    let mut text = String::from("version 1\n");
-    text.push_str(&std::fs::read_to_string(dir.join("manifest.txt")).unwrap()
-        [manifest_slice(&dir, "conv_fwd_monarch_n256")]);
-    std::fs::write(tmp.join("manifest.txt"), &text).unwrap();
-    std::fs::copy(dir.join(&spec.hlo_file), tmp.join(&spec.hlo_file)).unwrap();
-    // Truncate the fixture to 8 bytes.
-    std::fs::write(tmp.join("conv_fwd_monarch_n256.fix.bin"), [0u8; 8]).unwrap();
-    if let Some(g) = &spec.golden_file {
-        std::fs::copy(dir.join(g), tmp.join(g)).unwrap();
-    }
-    let runtime = Runtime::new(&tmp).unwrap();
+    // Take the generated fleet and truncate one artifact's fixture blob.
+    let (text, mut files) = default_fleet_parts();
+    let fix = files.get_mut("conv_fwd_monarch_n256.fix").expect("fixture exists");
+    fix.truncate(8);
+    let runtime = Runtime::native_from(&text, files).unwrap();
     let err = match runtime.load("conv_fwd_monarch_n256") {
         Err(e) => e,
         Ok(_) => panic!("truncated fixture must not load"),
     };
     assert!(format!("{err:#}").contains("too short"), "{err:#}");
-    let _ = std::fs::remove_dir_all(&tmp);
-}
-
-/// Extract one artifact's manifest block (helper for the truncation test).
-fn manifest_slice(dir: &std::path::Path, name: &str) -> std::ops::Range<usize> {
-    let text = std::fs::read_to_string(dir.join("manifest.txt")).unwrap();
-    let start = text.find(&format!("artifact {name}\n")).unwrap();
-    let end = text[start..].find("\nend\n").unwrap() + start + "\nend\n".len();
-    start..end
+    // Other artifacts with intact fixtures still load.
+    runtime.load("conv_fwd_baseline_n256").unwrap();
 }
 
 #[test]
 fn truncated_golden_detected() {
-    let dir = require_artifacts!();
-    let tmp = std::env::temp_dir().join(format!("ffc_gold_{}", std::process::id()));
-    std::fs::create_dir_all(&tmp).unwrap();
-    let manifest = Manifest::load(&dir).unwrap();
-    let spec = manifest.get("conv_fwd_monarch_n256").unwrap().clone();
-    let mut text = String::from("version 1\n");
-    text.push_str(
-        &std::fs::read_to_string(dir.join("manifest.txt")).unwrap()
-            [manifest_slice(&dir, "conv_fwd_monarch_n256")],
-    );
-    std::fs::write(tmp.join("manifest.txt"), &text).unwrap();
-    std::fs::copy(dir.join(&spec.hlo_file), tmp.join(&spec.hlo_file)).unwrap();
-    std::fs::copy(
-        dir.join("conv_fwd_monarch_n256.fix.bin"),
-        tmp.join("conv_fwd_monarch_n256.fix.bin"),
-    )
-    .unwrap();
-    std::fs::write(tmp.join(spec.golden_file.as_ref().unwrap()), [0u8; 16]).unwrap();
-    let m2 = Manifest::load(&tmp).unwrap();
-    let spec2 = m2.get("conv_fwd_monarch_n256").unwrap();
-    let err = flashfftconv::runtime::golden::load(&m2, spec2).unwrap_err();
+    let (text, mut files) = default_fleet_parts();
+    let g = files.get_mut("conv_fwd_monarch_n256.golden").expect("golden exists");
+    g.truncate(16);
+    let runtime = Runtime::native_from(&text, files).unwrap();
+    let spec = runtime.manifest().get("conv_fwd_monarch_n256").unwrap().clone();
+    let err = flashfftconv::runtime::golden::load(&runtime, &spec).unwrap_err();
     assert!(format!("{err:#}").contains("truncated"), "{err:#}");
-    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn oversized_golden_detected() {
+    let (text, mut files) = default_fleet_parts();
+    let g = files.get_mut("conv_fwd_monarch_n256.golden").expect("golden exists");
+    g.extend_from_slice(&[0u8; 5]);
+    let runtime = Runtime::native_from(&text, files).unwrap();
+    let spec = runtime.manifest().get("conv_fwd_monarch_n256").unwrap().clone();
+    let err = flashfftconv::runtime::golden::load(&runtime, &spec).unwrap_err();
+    assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+}
+
+#[test]
+fn missing_fixture_file_is_clean_error() {
+    let (text, mut files) = default_fleet_parts();
+    files.remove("conv_gated_monarch_n256.fix");
+    let runtime = Runtime::native_from(&text, files).unwrap();
+    let err = runtime.load("conv_gated_monarch_n256").unwrap_err();
+    assert!(format!("{err:#}").contains("not present"), "{err:#}");
+}
+
+#[test]
+fn malformed_manifest_rejected() {
+    let bad = "version 1\nartifact a\nhlo a.hlo.txt\n"; // no `end`
+    assert!(Runtime::native_from(bad, BTreeMap::new()).is_err());
+    let bad = "version 7\n";
+    assert!(Runtime::native_from(bad, BTreeMap::new()).is_err());
+}
+
+#[test]
+fn artifact_without_native_engine_rejected_at_load() {
+    let text = "version 1\nartifact mystery\nhlo mystery.hlo.txt\nmeta kind warp_drive\n\
+                input x f32 4 runtime\noutput y f32 4\nend\n";
+    let runtime = Runtime::native_from(text, BTreeMap::new()).unwrap();
+    let err = runtime.load("mystery").unwrap_err();
+    assert!(format!("{err:#}").contains("no native engine"), "{err:#}");
 }
 
 #[test]
 fn router_rejects_oversize_and_service_reports_bad_streams() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
+    let runtime = native();
     let router = Router::from_manifest(runtime.manifest(), "monarch").unwrap();
     assert!(router.route(ConvKind::Forward, 1 << 24).is_err());
 
     use flashfftconv::coordinator::service::{ConvRequest, ConvService};
     use flashfftconv::coordinator::BatchPolicy;
     let service = ConvService::start(
-        &dir,
+        BackendConfig::Native,
         "monarch",
         BatchPolicy { batch_size: 2, max_wait: std::time::Duration::from_millis(1) },
     )
@@ -166,8 +192,7 @@ fn router_rejects_oversize_and_service_reports_bad_streams() {
 
 #[test]
 fn trainer_rejects_non_train_artifacts() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
+    let runtime = native();
     let err = flashfftconv::trainer::Trainer::new(
         &runtime,
         flashfftconv::trainer::TrainConfig {
@@ -187,11 +212,22 @@ fn trainer_rejects_non_train_artifacts() {
 
 #[test]
 fn unknown_artifact_name_is_clean_error() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
+    let runtime = native();
     let err = match runtime.load("does_not_exist") {
         Err(e) => e,
         Ok(_) => panic!("unknown artifact must not load"),
     };
     assert!(format!("{err:#}").contains("not in manifest"), "{err:#}");
+}
+
+#[test]
+fn out_of_vocab_tokens_are_an_error() {
+    let runtime = native();
+    let mut art = runtime.load("lm_tiny_train").unwrap();
+    let spec = art.spec().clone();
+    let batch = spec.meta_usize("batch").unwrap();
+    let seq = spec.meta_usize("seq_len").unwrap();
+    let tokens = vec![9999i32; batch * (seq + 1)];
+    let err = art.step(&[HostTensor::i32(tokens, &[batch, seq + 1])]).unwrap_err();
+    assert!(format!("{err:#}").contains("out of range"), "{err:#}");
 }

@@ -1,90 +1,146 @@
-//! Integration tests over real artifacts (require `make artifacts`).
+//! Integration tests over the native backend — no `make artifacts`, no
+//! Python step, no skips.
 //!
-//! Each test loads compiled HLO through the PJRT runtime and checks
-//! cross-language behaviour: golden replay, training-state round-trips,
-//! loss descent, serving, partial/sparse evaluation. Tests skip (pass
-//! trivially with a notice) when the artifact directory is missing so
-//! `cargo test` works pre-`make artifacts`.
+//! Each test exercises the full artifact path (manifest → engine →
+//! fixture operands → execute) and checks cross-implementation behaviour:
+//! golden replay (Monarch engines vs the radix-2 oracle transcripts),
+//! conv outputs vs the O(N²) `direct_conv` oracle on every routed bucket,
+//! training-state round-trips with descending loss, partial/sparse
+//! evaluation, and the serving path.
 
 use flashfftconv::coordinator::partial::{filter_mask, ExtensionPlan};
 use flashfftconv::coordinator::router::{ConvKind, Router};
 use flashfftconv::coordinator::service::{ConvRequest, ConvService};
 use flashfftconv::coordinator::BatchPolicy;
-use flashfftconv::runtime::{golden, HostTensor, Runtime};
+use flashfftconv::runtime::{golden, BackendConfig, HostTensor, Runtime};
 use flashfftconv::trainer::data::TokenGen;
 use flashfftconv::util::Rng;
 
-fn artifacts_dir() -> Option<std::path::PathBuf> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.txt").exists() {
-        Some(dir)
-    } else {
-        eprintln!("skipping: run `make artifacts` first");
-        None
-    }
-}
-
-macro_rules! require_artifacts {
-    () => {
-        match artifacts_dir() {
-            Some(d) => d,
-            None => return,
-        }
-    };
+fn native() -> Runtime {
+    Runtime::native().expect("native backend constructs")
 }
 
 #[test]
-fn golden_replay_small_conv() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
-    for name in ["conv_fwd_monarch_n256", "conv_gated_monarch_n1024", "conv_causal_monarch_n512"] {
-        let spec = runtime.manifest().get(name).unwrap().clone();
-        let g = golden::load(runtime.manifest(), &spec).unwrap().unwrap();
-        let mut art = runtime.load(name).unwrap();
+fn golden_replay_all_declared_transcripts() {
+    let runtime = native();
+    let names: Vec<String> = runtime
+        .manifest()
+        .artifacts
+        .values()
+        .filter(|a| a.golden_file.is_some())
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(names.len() >= 4, "expected several goldens, got {names:?}");
+    for name in names {
+        let spec = runtime.manifest().get(&name).unwrap().clone();
+        let g = golden::load(&runtime, &spec).unwrap().unwrap();
+        let mut art = runtime.load(&name).unwrap();
         let outs = art.call(&g.inputs).unwrap();
         for (got, want) in outs.iter().zip(&g.outputs) {
-            assert!(got.max_abs_diff(want) < 2e-3, "{name}");
+            let err = got.max_abs_diff(want);
+            assert!(err < 1e-4, "{name}: golden replay err {err:.3e}");
         }
     }
 }
 
+/// Acceptance bar: native conv output matches the `direct_conv` oracle to
+/// 1e-4 on every bucket the router serves, for every kind and variant.
+/// The O(N²) oracle is used up to 1024 points; beyond that the (already
+/// direct-conv-verified) radix-2 FFT oracle stands in to keep the test
+/// fast in debug builds.
 #[test]
-fn monarch_artifact_matches_native_fft_oracle() {
-    // Cross-implementation: the compiled kernel vs the pure-Rust FFT conv.
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
-    let mut art = runtime.load("conv_fwd_monarch_n256").unwrap();
-    let (b, h, n) = (2usize, 16usize, 256usize);
-    let mut rng = Rng::new(77);
-    let u: Vec<f32> = rng.normal_vec(b * h * n);
-    let k: Vec<f32> = rng.normal_vec(h * n);
-    let outs = art
-        .call(&[HostTensor::f32(u.clone(), &[b, h, n]), HostTensor::f32(k.clone(), &[h, n])])
-        .unwrap();
-    let y = outs[0].as_f32();
-    for bi in 0..b {
-        for hi in 0..h {
-            let urow: Vec<f64> =
-                u[(bi * h + hi) * n..(bi * h + hi + 1) * n].iter().map(|&x| x as f64).collect();
-            let krow: Vec<f64> = k[hi * n..(hi + 1) * n].iter().map(|&x| x as f64).collect();
-            let want = flashfftconv::fft::fft_conv(&urow, &krow);
-            let got = &y[(bi * h + hi) * n..(bi * h + hi + 1) * n];
-            for (g, w) in got.iter().zip(&want) {
-                assert!((*g as f64 - w).abs() < 1e-2, "b={bi} h={hi}");
+fn every_routed_bucket_matches_direct_conv_oracle() {
+    let runtime = native();
+    for variant in ["monarch", "baseline"] {
+        let router = Router::from_manifest(runtime.manifest(), variant).unwrap();
+        for kind in [ConvKind::Forward, ConvKind::Causal, ConvKind::Gated] {
+            for bucket in router.bucket_lens(kind) {
+                let route = router.route(kind, bucket).unwrap();
+                assert_eq!(route.padding, 0);
+                let (b, h, n) = (route.batch, route.heads, bucket);
+                let mut art = runtime.load(&route.artifact).unwrap();
+                let mut rng = Rng::new(0xB0C5 ^ n as u64);
+                let u = rng.normal_vec(b * h * n);
+                let k = rng.normal_vec(h * n);
+                let mut inputs = vec![HostTensor::f32(u.clone(), &[b, h, n])];
+                let (v, w) = if kind == ConvKind::Gated {
+                    let v = rng.normal_vec(b * h * n);
+                    let w = rng.normal_vec(b * h * n);
+                    inputs.push(HostTensor::f32(v.clone(), &[b, h, n]));
+                    inputs.push(HostTensor::f32(w.clone(), &[b, h, n]));
+                    (v, w)
+                } else {
+                    (vec![], vec![])
+                };
+                inputs.push(HostTensor::f32(k.clone(), &[h, n]));
+                let y = art.call(&inputs).unwrap();
+                let y = y[0].as_f32();
+                // Check the first and last rows against the oracle.
+                for &(bi, hi) in &[(0usize, 0usize), (b - 1, h - 1)] {
+                    let off = (bi * h + hi) * n;
+                    let krow: Vec<f64> =
+                        k[hi * n..(hi + 1) * n].iter().map(|&x| x as f64).collect();
+                    let urow: Vec<f64> = if kind == ConvKind::Gated {
+                        u[off..off + n]
+                            .iter()
+                            .zip(&w[off..off + n])
+                            .map(|(&a, &c)| a as f64 * c as f64)
+                            .collect()
+                    } else {
+                        u[off..off + n].iter().map(|&x| x as f64).collect()
+                    };
+                    let conv = match (kind, n <= 1024) {
+                        (ConvKind::Causal, true) => (0..n)
+                            .map(|t| (0..=t).map(|d| urow[t - d] * krow[d]).sum())
+                            .collect::<Vec<f64>>(),
+                        (ConvKind::Causal, false) => flashfftconv::fft::causal_conv(&urow, &krow),
+                        (_, true) => flashfftconv::fft::direct_conv(&urow, &krow),
+                        (_, false) => flashfftconv::fft::fft_conv(&urow, &krow),
+                    };
+                    for (t, &want) in conv.iter().enumerate() {
+                        let got = y[off + t] as f64;
+                        let want = if kind == ConvKind::Gated {
+                            v[off + t] as f64 * want
+                        } else {
+                            want
+                        };
+                        assert!(
+                            (got - want).abs() < 1e-4,
+                            "{variant}/{kind:?}/n{n} row ({bi},{hi}) t={t}: {got} vs {want}"
+                        );
+                    }
+                }
             }
         }
     }
 }
 
 #[test]
+fn monarch_and_baseline_variants_agree() {
+    // Two independent engine implementations of the same artifact
+    // signature must produce the same convolution.
+    let runtime = native();
+    let (b, h, n) = (2usize, 16usize, 256usize);
+    let mut rng = Rng::new(77);
+    let inputs = vec![
+        HostTensor::f32(rng.normal_vec(b * h * n), &[b, h, n]),
+        HostTensor::f32(rng.normal_vec(h * n), &[h, n]),
+    ];
+    let ym = runtime.load("conv_fwd_monarch_n256").unwrap().call(&inputs).unwrap();
+    let yb = runtime.load("conv_fwd_baseline_n256").unwrap().call(&inputs).unwrap();
+    let err = ym[0].max_abs_diff(&yb[0]);
+    assert!(err < 1e-4, "variant divergence {err:.3e}");
+}
+
+#[test]
 fn train_step_state_roundtrip_descends() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
+    let runtime = native();
     let mut art = runtime.load("lm_tiny_train").unwrap();
     let spec = art.spec().clone();
     let batch = spec.meta_usize("batch").unwrap();
     let seq = spec.meta_usize("seq_len").unwrap();
     let vocab = spec.meta_usize("vocab").unwrap();
+    let embed_before = art.state("param.embed").unwrap();
     let mut gen = TokenGen::new(vocab, 3);
     let mut losses = vec![];
     for _ in 0..12 {
@@ -97,15 +153,16 @@ fn train_step_state_roundtrip_descends() {
     let head: f64 = losses[..3].iter().sum::<f64>() / 3.0;
     let tail: f64 = losses[losses.len() - 3..].iter().sum::<f64>() / 3.0;
     assert!(tail < head, "loss should descend: {losses:?}");
-    // Trained parameters must differ from their initialization.
-    let embed = art.state("param.embed").unwrap();
-    assert!(embed.as_f32().iter().any(|v| v.abs() > 0.0));
+    // The state round-trip must actually move the parameters.
+    let embed_after = art.state("param.embed").unwrap();
+    assert!(embed_after.max_abs_diff(&embed_before) > 0.0);
+    // And the step counter counts calls.
+    assert!((art.state("step").unwrap().item() - 12.0).abs() < 1e-6);
 }
 
 #[test]
 fn eval_kmask_full_mask_matches_tight_band() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
+    let runtime = native();
     let mut art = runtime.load("lm_eval_kmask").unwrap();
     let spec = art.spec().clone();
     let batch = spec.meta_usize("batch").unwrap();
@@ -128,10 +185,9 @@ fn eval_kmask_full_mask_matches_tight_band() {
 }
 
 #[test]
-fn service_conv_matches_direct_artifact_call() {
-    let dir = require_artifacts!();
+fn service_conv_matches_native_fft_oracle() {
     let policy = BatchPolicy { batch_size: 2, max_wait: std::time::Duration::from_millis(2) };
-    let service = ConvService::start(&dir, "monarch", policy).unwrap();
+    let service = ConvService::start(BackendConfig::Native, "monarch", policy).unwrap();
     let (h, len) = (16usize, 256usize);
     let mut rng = Rng::new(5);
     let k: Vec<f32> = rng.normal_vec(h * len);
@@ -141,13 +197,12 @@ fn service_conv_matches_direct_artifact_call() {
         .call(ConvRequest { kind: ConvKind::Forward, len, streams: vec![u.clone()] })
         .unwrap();
     assert_eq!(y.len(), h * len);
-    // Oracle: native FFT conv per head.
     for hi in 0..h {
         let urow: Vec<f64> = u[hi * len..(hi + 1) * len].iter().map(|&x| x as f64).collect();
         let krow: Vec<f64> = k[hi * len..(hi + 1) * len].iter().map(|&x| x as f64).collect();
         let want = flashfftconv::fft::fft_conv(&urow, &krow);
         for (g, w) in y[hi * len..(hi + 1) * len].iter().zip(&want) {
-            assert!((*g as f64 - w).abs() < 1e-2, "head {hi}");
+            assert!((*g as f64 - w).abs() < 1e-4, "head {hi}");
         }
     }
     let s = service.stats();
@@ -156,10 +211,9 @@ fn service_conv_matches_direct_artifact_call() {
 
 #[test]
 fn service_pads_shorter_requests() {
-    let dir = require_artifacts!();
     let policy = BatchPolicy { batch_size: 2, max_wait: std::time::Duration::from_millis(1) };
-    let service = ConvService::start(&dir, "monarch", policy).unwrap();
-    let (h, len) = (16usize, 200usize); // pads to the 256 bucket
+    let service = ConvService::start(BackendConfig::Native, "monarch", policy).unwrap();
+    let (h, len) = (16usize, 200usize); // pads up to the 512 causal bucket
     let mut rng = Rng::new(6);
     let u: Vec<f32> = rng.normal_vec(h * len);
     let y = service
@@ -170,20 +224,20 @@ fn service_pads_shorter_requests() {
 }
 
 #[test]
-fn router_buckets_match_manifest() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
+fn router_buckets_match_native_manifest() {
+    let runtime = native();
     let router = Router::from_manifest(runtime.manifest(), "monarch").unwrap();
     let lens = router.bucket_lens(ConvKind::Forward);
     assert!(lens.contains(&256) && lens.contains(&1024) && lens.contains(&4096));
     let lens_c = router.bucket_lens(ConvKind::Causal);
     assert!(lens_c.contains(&128) && lens_c.contains(&512));
+    let lens_g = router.bucket_lens(ConvKind::Gated);
+    assert!(lens_g.contains(&256) && lens_g.contains(&1024));
 }
 
 #[test]
 fn extension_plan_against_dna_eval() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
+    let runtime = native();
     let mut art = runtime.load("dna_eval").unwrap();
     let spec = art.spec().clone();
     let context = spec.meta_usize("seq_len").unwrap();
@@ -210,13 +264,12 @@ fn extension_plan_against_dna_eval() {
         losses.push(outs[0].item());
     }
     let combined = plan.combine_losses(&losses);
-    assert!(combined.is_finite() && combined > 0.0 && combined < 3.0);
+    assert!(combined.is_finite() && combined > 0.0 && combined < 3.0, "loss {combined}");
 }
 
 #[test]
 fn sparse_eval_artifacts_stay_sane() {
-    let dir = require_artifacts!();
-    let runtime = Runtime::new(&dir).unwrap();
+    let runtime = native();
     let mut base = runtime.load("lm_eval_kmask").unwrap();
     let spec = base.spec().clone();
     let (batch, seq, vocab) = (
@@ -234,4 +287,45 @@ fn sparse_eval_artifacts_stay_sane() {
         // Untrained model + moderate sparsity: loss stays in the same band.
         assert!((loss - dense).abs() < 1.0, "{name}: {loss} vs dense {dense}");
     }
+}
+
+#[test]
+fn trained_params_transfer_between_artifacts() {
+    // The partial-conv extension workflow: train dna_train briefly, copy
+    // params into dna_eval, and the eval loss must drop vs untrained.
+    let runtime = native();
+    let mut train = runtime.load("dna_train").unwrap();
+    let tspec = train.spec().clone();
+    let (batch, seq) = (
+        tspec.meta_usize("batch").unwrap(),
+        tspec.meta_usize("seq_len").unwrap(),
+    );
+    let mut gen = flashfftconv::trainer::data::DnaGen::new(64, 21);
+    for _ in 0..30 {
+        let tokens = gen.batch(batch, seq + 1);
+        train.step(&[HostTensor::i32(tokens, &[batch, seq + 1])]).unwrap();
+    }
+    let mut eval = runtime.load("dna_eval").unwrap();
+    let espec = eval.spec().clone();
+    let (eb, eseq) = (
+        espec.meta_usize("batch").unwrap(),
+        espec.meta_usize("seq_len").unwrap(),
+    );
+    let kmask_len = espec
+        .inputs
+        .iter()
+        .find(|i| i.spec.name == "kmask")
+        .map(|i| i.spec.numel())
+        .unwrap();
+    let mask = HostTensor::f32(vec![1.0; kmask_len], &[kmask_len]);
+    let tokens = HostTensor::i32(gen.batch(eb, eseq + 1), &[eb, eseq + 1]);
+    let untrained = eval.call(&[tokens.clone(), mask.clone()]).unwrap()[0].item();
+    for pname in ["param.embed", "param.filter", "param.proj"] {
+        eval.set_operand(pname, &train.state(pname).unwrap()).unwrap();
+    }
+    let trained = eval.call(&[tokens, mask]).unwrap()[0].item();
+    assert!(
+        trained < untrained,
+        "trained eval loss {trained} should beat untrained {untrained}"
+    );
 }

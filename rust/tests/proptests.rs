@@ -242,6 +242,111 @@ fn prop_rust_and_kernel_factorizations_agree() {
 }
 
 #[test]
+fn prop_monarch3_layout_matches_radix2_fft() {
+    // Order-3 decomposition == radix-2 FFT under the order-3 permutation
+    // (the `monarch_order2`-style digit map, one level deeper).
+    prop::forall_ok(
+        "order-3 monarch == permuted FFT",
+        10,
+        prop::default_cases(),
+        |rng| {
+            let n1 = gen::pow2(rng, 1, 3);
+            let n2 = gen::pow2(rng, 1, 3);
+            let n3 = gen::pow2(rng, 1, 3);
+            let x = gen::signal(rng, n1 * n2 * n3);
+            (n1, n2, n3, x)
+        },
+        |&(n1, n2, n3, ref x)| {
+            let xc: Vec<fft::Cpx> = x.iter().map(|&v| fft::Cpx::new(v, 0.0)).collect();
+            let got = fft::monarch_fft3(&xc, n1, n2, n3);
+            let full = fft::fft(&xc, false);
+            let order = fft::monarch_order3(n1, n2, n3);
+            for (j, &f) in order.iter().enumerate() {
+                let err = (got[j] - full[f]).abs();
+                if err > 1e-7 {
+                    return Err(format!("({n1},{n2},{n3}) slot {j}: err {err}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_causal_conv_prefix_invariance_at_random_lengths() {
+    // Causality must hold at arbitrary (non-power-of-two) lengths: the
+    // suffix of the input never influences the causal prefix.
+    prop::forall(
+        "causality at random lengths",
+        11,
+        prop::default_cases(),
+        |rng| {
+            let n = 2 + gen::index(rng, 0, 300); // any length in [2, 302)
+            let cut = gen::index(rng, 1, n);
+            (gen::signal(rng, n), gen::signal(rng, n), cut)
+        },
+        |(u, k, cut)| {
+            let y1 = fft::causal_conv(u, k);
+            let mut u2 = u.clone();
+            for v in u2.iter_mut().skip(*cut) {
+                *v += 42.0;
+            }
+            let y2 = fft::causal_conv(&u2, k);
+            fft::max_abs_diff(&y1[..*cut], &y2[..*cut]) < 1e-7
+        },
+    );
+}
+
+#[test]
+fn prop_full_mask_spectrum_equals_dense_conv() {
+    // Frequency-sparse conv with an all-ones mask is exactly dense conv.
+    prop::forall_ok(
+        "full-mask sparse spectrum == dense conv",
+        12,
+        prop::default_cases(),
+        |rng| {
+            let n = gen::pow2(rng, 2, 9);
+            (gen::signal(rng, n), gen::signal(rng, n))
+        },
+        |(u, k)| {
+            let kf = fft::rfft_full(k);
+            let sparse = fft::fft_conv_spectrum(u, &kf);
+            let dense = fft::fft_conv(u, k);
+            let err = fft::max_abs_diff(&sparse, &dense);
+            if err < 1e-7 {
+                Ok(())
+            } else {
+                Err(format!("err {err}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_masked_spectrum_differs_from_dense_when_bins_dropped() {
+    // Complement check: zeroing occupied bins must change the output
+    // (guards against the mask being silently ignored).
+    prop::forall(
+        "masked bins change the conv",
+        13,
+        prop::default_cases(),
+        |rng| {
+            let n = gen::pow2(rng, 3, 8);
+            (gen::signal(rng, n), gen::signal(rng, n))
+        },
+        |(u, k)| {
+            let mut kf = fft::rfft_full(k);
+            for z in kf.iter_mut().skip(kf.len() / 2) {
+                *z = fft::Cpx::ZERO;
+            }
+            let sparse = fft::fft_conv_spectrum(u, &kf);
+            let dense = fft::fft_conv(u, k);
+            fft::max_abs_diff(&sparse, &dense) > 1e-9
+        },
+    );
+}
+
+#[test]
 fn prop_rng_uniform_bounds() {
     let mut rng = Rng::new(123);
     for _ in 0..10_000 {

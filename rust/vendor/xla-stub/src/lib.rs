@@ -1,0 +1,121 @@
+//! Offline stub of the `xla` (PJRT) crate.
+//!
+//! The build environment does not vendor the real XLA runtime, so this
+//! crate provides just enough API surface for `flashfftconv`'s `pjrt`
+//! feature to *compile*. Every entry point that would touch PJRT returns
+//! an error at runtime. On a machine with the real `xla` crate vendored,
+//! point the workspace at it with a `[patch]` section and the `pjrt`
+//! backend becomes functional without source changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real crate's (stringly, `Display`-able).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub_err<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what}: this build links the offline xla stub; vendor the real \
+         `xla` crate (see rust/vendor/xla-stub) to use the pjrt backend"
+    )))
+}
+
+/// Element types used by the runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host literal (opaque in the stub).
+#[derive(Debug)]
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _shape: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal, Error> {
+        stub_err("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        stub_err("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        stub_err("Literal::to_tuple")
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        stub_err("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation handle (opaque in the stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (opaque in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        stub_err("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (opaque in the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        stub_err("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle (opaque in the stub).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        stub_err("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        stub_err("PjRtClient::compile")
+    }
+}
