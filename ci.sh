@@ -17,6 +17,16 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# The pjrt feature compiles against the vendored xla API stub offline;
+# keep it building so backend-trait changes never strand the HLO path.
+echo "==> cargo check --features pjrt"
+cargo check --features pjrt
+
+# Quickstart doubles as the public-API smoke test: golden replay + oracle
+# check over the native backend from a clean checkout.
+echo "==> cargo run --release --example quickstart"
+cargo run --release --example quickstart
+
 lint_mode="${FFC_CI_LINT:-advisory}"
 
 if cargo fmt --version >/dev/null 2>&1; then

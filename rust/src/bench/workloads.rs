@@ -21,13 +21,35 @@ pub fn random_inputs(art: &Artifact, seed: u64) -> Vec<HostTensor> {
                 DType::F32 => {
                     if t.name == "kmask" {
                         HostTensor::f32(vec![1.0; t.numel()], &t.shape)
+                    } else if t.name == "pixels" {
+                        // Classifier inputs: real synthetic Pathfinder
+                        // images, not white noise, so the timed forward
+                        // sees representative activation sparsity. Falls
+                        // back to noise when the declared shape is not a
+                        // generator-compatible (batch, side²) image.
+                        let batch = spec.meta_usize("batch").unwrap_or(1).max(1);
+                        let side = spec
+                            .meta_usize("side")
+                            .unwrap_or_else(|| ((t.numel() / batch) as f64).sqrt() as usize);
+                        if side >= 8 && side * side * batch == t.numel() {
+                            let mut gen = crate::trainer::data::PathfinderGen::new(side, seed);
+                            let (pix, _) = gen.batch(batch);
+                            HostTensor::f32(pix, &t.shape)
+                        } else {
+                            HostTensor::f32(rng.normal_vec(t.numel()), &t.shape)
+                        }
                     } else {
                         HostTensor::f32(rng.normal_vec(t.numel()), &t.shape)
                     }
                 }
                 DType::I32 => {
-                    // Token inputs: stay within the model's vocabulary.
-                    let hi = spec.meta_usize("vocab").unwrap_or(2) as u64;
+                    // Tokens stay within the vocabulary; classifier
+                    // labels stay within the two Pathfinder classes.
+                    let hi = if t.name == "labels" {
+                        2
+                    } else {
+                        spec.meta_usize("vocab").unwrap_or(2) as u64
+                    };
                     HostTensor::i32(
                         (0..t.numel()).map(|_| rng.below(hi.max(2)) as i32).collect(),
                         &t.shape,

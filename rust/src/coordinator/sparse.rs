@@ -46,13 +46,20 @@ impl SparsityPattern {
         1.0 / self.flop_fraction()
     }
 
+    /// Whether layout cell (r, c) survives this pattern — the single
+    /// definition of the kept set every masking path shares (interleaved,
+    /// split, and complex spectra, plus the engine's block skipping).
+    pub fn is_kept(&self, r: usize, c: usize) -> bool {
+        r < self.keep_rows && c < self.keep_cols
+    }
+
     /// Zero this pattern out of a row-major Monarch-layout spectrum
     /// (interleaved re/im pairs, length 2*n1*n2).
     pub fn apply_interleaved(&self, kf: &mut [f32]) {
         assert_eq!(kf.len(), 2 * self.n1 * self.n2);
         for r in 0..self.n1 {
             for c in 0..self.n2 {
-                if r >= self.keep_rows || c >= self.keep_cols {
+                if !self.is_kept(r, c) {
                     let idx = 2 * (r * self.n2 + c);
                     kf[idx] = 0.0;
                     kf[idx + 1] = 0.0;
@@ -69,7 +76,7 @@ impl SparsityPattern {
         let order = crate::fft::monarch_order2(self.n1, self.n2);
         for (slot, &freq) in order.iter().enumerate() {
             let (r, c) = (slot / self.n2, slot % self.n2);
-            if r >= self.keep_rows || c >= self.keep_cols {
+            if !self.is_kept(r, c) {
                 kf_re[freq] = 0.0;
                 kf_im[freq] = 0.0;
             }

@@ -150,15 +150,22 @@ pub fn conv_flops(n: usize, p: usize, b: usize, h: usize) -> f64 {
     (b * h) as f64 * fs.iter().map(|&ni| 16.0 * n as f64 * ni as f64).sum::<f64>()
 }
 
-/// Pick the cheapest order p ∈ {2, 3, 4} for a sequence length.
-pub fn best_order(n: usize, hw: &HwProfile) -> usize {
+/// Pick the cheapest order p ∈ {2..=max_order} for a sequence length.
+/// Backends pass the largest order they implement (the native engines
+/// execute orders 2 and 3).
+pub fn best_order_upto(n: usize, hw: &HwProfile, max_order: usize) -> usize {
     let logn = n.trailing_zeros() as usize;
-    (2..=4usize)
+    (2..=max_order)
         .filter(|&p| p <= logn)
         .min_by(|&a, &b| {
             conv_cost(n, a, 1, 1, hw).partial_cmp(&conv_cost(n, b, 1, 1, hw)).unwrap()
         })
         .unwrap_or(2)
+}
+
+/// Pick the cheapest order p ∈ {2, 3, 4} for a sequence length.
+pub fn best_order(n: usize, hw: &HwProfile) -> usize {
+    best_order_upto(n, hw, 4)
 }
 
 /// One Figure 4 data point.

@@ -326,6 +326,74 @@ pub fn monarch_fft3(x: &[Cpx], n1: usize, n2: usize, n3: usize) -> Vec<Cpx> {
     out
 }
 
+/// Inverse of [`monarch_fft3`]: undo the inner order-2 transform of each
+/// row, then the twiddled first-digit DFT stage.
+pub fn monarch_ifft3(y: &[Cpx], n1: usize, n2: usize, n3: usize) -> Vec<Cpx> {
+    let m = n2 * n3;
+    let n = n1 * m;
+    assert_eq!(y.len(), n);
+    let mut a = vec![Cpx::ZERO; n];
+    for k1 in 0..n1 {
+        let row = monarch_ifft2(&y[k1 * m..(k1 + 1) * m], n2, n3);
+        a[k1 * m..(k1 + 1) * m].copy_from_slice(&row);
+    }
+    let mut x = vec![Cpx::ZERO; n];
+    for m1 in 0..n1 {
+        for j in 0..m {
+            let mut acc = Cpx::ZERO;
+            for k1 in 0..n1 {
+                let t = Cpx::cis(2.0 * std::f64::consts::PI * (k1 * j) as f64 / n as f64);
+                let w = Cpx::cis(2.0 * std::f64::consts::PI * (k1 * m1) as f64 / n1 as f64);
+                acc = acc + a[k1 * m + j] * t * w;
+            }
+            x[m1 * m + j] = acc.scale(1.0 / n1 as f64);
+        }
+    }
+    x
+}
+
+/// Inverse order-2 Monarch FFT of a *block-sparse* spectrum: every entry
+/// with layout row `>= keep_rows` or column `>= keep_cols` is known to be
+/// zero, so both inverse stages skip the work those entries would feed
+/// (the §3.3 / Table 9 block-skipping speedup, exactly as the sparse
+/// kernels elide the corresponding matmul tiles). Entries outside the
+/// kept block are never read.
+pub fn monarch_ifft2_block(
+    y: &[Cpx],
+    n1: usize,
+    n2: usize,
+    keep_rows: usize,
+    keep_cols: usize,
+) -> Vec<Cpx> {
+    let n = n1 * n2;
+    assert_eq!(y.len(), n);
+    assert!(keep_rows <= n1 && keep_cols <= n2);
+    let mut a = vec![Cpx::ZERO; n];
+    for k1 in 0..keep_rows {
+        for j2 in 0..n2 {
+            let mut acc = Cpx::ZERO;
+            for k2 in 0..keep_cols {
+                let w = Cpx::cis(2.0 * std::f64::consts::PI * (k2 * j2) as f64 / n2 as f64);
+                acc = acc + y[k1 * n2 + k2] * w;
+            }
+            let t = Cpx::cis(2.0 * std::f64::consts::PI * (k1 * j2) as f64 / n as f64);
+            a[k1 * n2 + j2] = (acc * t).scale(1.0 / n2 as f64);
+        }
+    }
+    let mut x = vec![Cpx::ZERO; n];
+    for m1 in 0..n1 {
+        for j2 in 0..n2 {
+            let mut acc = Cpx::ZERO;
+            for k1 in 0..keep_rows {
+                let w = Cpx::cis(2.0 * std::f64::consts::PI * (k1 * m1) as f64 / n1 as f64);
+                acc = acc + a[k1 * n2 + j2] * w;
+            }
+            x[m1 * n2 + j2] = acc.scale(1.0 / n1 as f64);
+        }
+    }
+    x
+}
+
 /// `order[j]` = true DFT frequency at Monarch slot `j` (order-3 layout).
 pub fn monarch_order3(n1: usize, n2: usize, n3: usize) -> Vec<usize> {
     let m = n2 * n3;
@@ -513,6 +581,84 @@ mod tests {
             for (j, &f) in order.iter().enumerate() {
                 assert!((got[j] - full[f]).abs() < 1e-8, "({n1},{n2},{n3}) slot {j}");
             }
+        }
+    }
+
+    #[test]
+    fn monarch3_roundtrip() {
+        let mut rng = Rng::new(13);
+        for &(n1, n2, n3) in &[(2usize, 4usize, 4usize), (4, 4, 8), (2, 8, 8)] {
+            let n = n1 * n2 * n3;
+            let x: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+            let back = monarch_ifft3(&monarch_fft3(&x, n1, n2, n3), n1, n2, n3);
+            for (a, b) in x.iter().zip(&back) {
+                assert!((*a - *b).abs() < 1e-9, "({n1},{n2},{n3})");
+            }
+        }
+    }
+
+    #[test]
+    fn monarch3_causal_conv_matches_direct() {
+        // Causal convolution entirely through the order-3 layout (the
+        // path the cost model dispatches at small and very large FFTs).
+        let mut rng = Rng::new(14);
+        let l = 64usize;
+        let (n1, n2, n3) = (2usize, 8usize, 8usize); // 128 = 2*L
+        let u = random_signal(l, &mut rng);
+        let k = random_signal(l, &mut rng);
+        let pad = |v: &[f64]| {
+            let mut p: Vec<Cpx> = v.iter().map(|&x| Cpx::new(x, 0.0)).collect();
+            p.resize(2 * l, Cpx::ZERO);
+            p
+        };
+        let um = monarch_fft3(&pad(&u), n1, n2, n3);
+        let km = monarch_fft3(&pad(&k), n1, n2, n3);
+        let prod: Vec<Cpx> = um.iter().zip(&km).map(|(&a, &b)| a * b).collect();
+        let y: Vec<f64> =
+            monarch_ifft3(&prod, n1, n2, n3)[..l].iter().map(|c| c.re).collect();
+        let want: Vec<f64> =
+            (0..l).map(|t| (0..=t).map(|d| u[t - d] * k[d]).sum()).collect();
+        assert!(max_abs_diff(&y, &want) < 1e-8);
+    }
+
+    #[test]
+    fn block_sparse_ifft2_matches_dense_on_zeroed_spectrum() {
+        let mut rng = Rng::new(15);
+        let (n1, n2, kr, kc) = (8usize, 8usize, 4usize, 2usize);
+        let mut spec: Vec<Cpx> =
+            (0..n1 * n2).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+        for r in 0..n1 {
+            for c in 0..n2 {
+                if r >= kr || c >= kc {
+                    spec[r * n2 + c] = Cpx::ZERO;
+                }
+            }
+        }
+        let dense = monarch_ifft2(&spec, n1, n2);
+        let sparse = monarch_ifft2_block(&spec, n1, n2, kr, kc);
+        for (a, b) in dense.iter().zip(&sparse) {
+            assert!((*a - *b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn block_sparse_ifft2_never_reads_outside_the_kept_block() {
+        // Garbage outside the kept block must not influence the output.
+        let mut rng = Rng::new(16);
+        let (n1, n2, kr, kc) = (4usize, 8usize, 2usize, 3usize);
+        let mut spec: Vec<Cpx> =
+            (0..n1 * n2).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+        let clean = monarch_ifft2_block(&spec, n1, n2, kr, kc);
+        for r in 0..n1 {
+            for c in 0..n2 {
+                if r >= kr || c >= kc {
+                    spec[r * n2 + c] = Cpx::new(1e9, -1e9);
+                }
+            }
+        }
+        let dirty = monarch_ifft2_block(&spec, n1, n2, kr, kc);
+        for (a, b) in clean.iter().zip(&dirty) {
+            assert!((*a - *b).abs() == 0.0);
         }
     }
 

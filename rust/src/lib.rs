@@ -20,7 +20,11 @@
 //!   submit → route → batch → execute → reply path (and the training-step
 //!   contract) runs from a clean checkout with no Python step and no
 //!   pre-built artifacts. This is also the reference implementation the
-//!   tests hold every other engine to.
+//!   tests hold every other engine to. The [`zoo`] module supplies the
+//!   end-to-end model families on this path — the Hyena gated long-conv
+//!   LM behind `lm_fwd_logits`/`e2e_*` serving and the Pathfinder 2-D
+//!   conv classifier behind `pf_train`/`pf_eval` — so [`server`] and the
+//!   pathfinder CLI need no feature flags.
 //! * `runtime::pjrt::PjrtBackend` (cargo feature `pjrt`) — loads the
 //!   AOT-compiled HLO artifacts through PJRT. The offline build links a
 //!   vendored API stub (`rust/vendor/xla-stub`); patch in the real `xla`
@@ -42,6 +46,7 @@ pub mod runtime;
 pub mod server;
 pub mod trainer;
 pub mod util;
+pub mod zoo;
 
 /// Crate-wide result type; errors carry context chains (see [`util::error`]).
 pub type Result<T, E = util::error::Error> = std::result::Result<T, E>;

@@ -10,8 +10,15 @@
 //! flashfftconv eval-sparse                   # Table 9 quality column
 //! flashfftconv extend       [--total-len N]  # Table 8 sliding-window
 //! flashfftconv serve        [--requests N]   # serving-path smoke + stats
+//! flashfftconv pathfinder   [--steps N]      # Table 2 train + accuracy
 //! flashfftconv costmodel    [--hw a100]      # Figure 4 series (CSV)
 //! ```
+//!
+//! Every subcommand runs on the default native backend from a clean
+//! checkout — including `pathfinder` and `serve`, whose model-zoo
+//! artifact families are served by the pure-Rust `zoo` engines; pass
+//! `--artifacts DIR` with a compiled manifest (and the `pjrt` feature)
+//! to execute the AOT path instead.
 
 use std::time::Duration;
 
@@ -68,7 +75,7 @@ fn run(args: &Args) -> flashfftconv::Result<()> {
     }
 }
 
-const HELP: &str = "flashfftconv <check|train|train-budget|eval-partial|eval-sparse|extend|serve|costmodel> [--artifacts DIR] [flags]";
+const HELP: &str = "flashfftconv <check|train|train-budget|eval-partial|eval-sparse|extend|serve|pathfinder|costmodel> [--artifacts DIR] [flags]";
 
 /// Verify every golden artifact end to end (python -> HLO -> rust).
 fn cmd_check(dir: &str, args: &Args) -> flashfftconv::Result<()> {
@@ -390,12 +397,8 @@ fn cmd_pathfinder(dir: &str, args: &Args) -> flashfftconv::Result<()> {
     for _ in 0..eval_batches {
         let (pix, labels) = gen.batch(batch);
         let outs = eval.call(&[HostTensor::f32(pix, &[batch, seq])])?;
-        let logits = outs[0].as_f32();
-        for (i, &label) in labels.iter().enumerate() {
-            let pred = (logits[2 * i + 1] > logits[2 * i]) as i32;
-            correct += (pred == label) as usize;
-            total += 1;
-        }
+        correct += flashfftconv::zoo::pathfinder::correct_predictions(outs[0].as_f32(), &labels);
+        total += labels.len();
     }
     let acc = 100.0 * correct as f64 / total as f64;
     println!(

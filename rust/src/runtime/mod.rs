@@ -10,6 +10,11 @@
 //!   [`crate::fft`] library. It self-generates an in-memory manifest,
 //!   fixtures, and golden transcripts, so everything above it runs from a
 //!   clean checkout: no Python step, no `make artifacts`, no network.
+//!   Covers every artifact family: conv kernels (Monarch order 2/3 by the
+//!   §3.2 cost model, block-sparse variants), train steps, evals, and the
+//!   [`crate::zoo`] model families (`lm_logits`, `clf_logits`,
+//!   pathfinder training), so serving and the pathfinder CLI run with no
+//!   feature flags.
 //! * [`pjrt::PjrtBackend`] (cargo feature `pjrt`) — loads AOT-compiled
 //!   HLO text through PJRT, the original compiled-artifact path. HLO
 //!   *text* is the interchange format: jax >= 0.5 serializes protos with

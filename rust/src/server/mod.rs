@@ -1,10 +1,17 @@
 //! Batched model-inference server (the Table 5 serving path).
 //!
 //! Serves a forward-pass artifact (`lm_fwd_logits` / `e2e_*`) behind a
-//! dynamic batcher on a dedicated thread (PJRT handles are thread-affine),
-//! reporting latency and throughput. The offline environment has no
-//! tokio; the threaded design mirrors a vLLM-style router: accept ->
-//! queue -> fixed-shape batch -> execute -> scatter.
+//! dynamic batcher on a dedicated thread (PJRT handles are thread-affine,
+//! and the native zoo engines keep per-artifact spectrum caches that
+//! benefit from the same affinity), reporting latency and throughput.
+//! On the default [`crate::runtime::native`] backend the served model is
+//! the [`crate::zoo::hyena`] gated long-conv LM, so
+//! `ModelServer::start(BackendConfig::Native, "lm_fwd_logits", ..)` works
+//! from a clean checkout with no feature flags; with the `pjrt` feature
+//! the same signatures execute compiled HLO. The offline environment has
+//! no tokio; the threaded design mirrors a vLLM-style router: accept ->
+//! queue -> fixed-shape batch -> execute -> scatter. Greedy decoding over
+//! a running server lives in [`crate::zoo::sample`].
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};

@@ -1,0 +1,461 @@
+//! Hyena-style gated long-convolution LM (forward pass).
+//!
+//! One block computes `y = v ⊙ ((shortconv(u) ⊙ w) ∗ k)` where `u, v, w`
+//! come from a shared input projection, the short depthwise causal conv
+//! supplies local context (the Hyena "short filter"), and the long causal
+//! conv runs through the order-2 Monarch decomposition — the exact kernel
+//! math the conv artifacts execute, lifted into a model. Residuals wrap
+//! the mixer, RMSNorm precedes it, and the LM head ties the embedding.
+//!
+//! The model is forward-only: it backs the `lm_fwd_logits` serving
+//! artifact and the Table 5 `e2e_*` zoo, where each model exists in a
+//! `monarch` and a `baseline` (radix-2 FFT) variant so the two
+//! implementations can be benchmarked and cross-checked against each
+//! other on identical parameters.
+
+use crate::fft::{self, Cpx};
+use crate::util::pool::parallel_map;
+use crate::util::Rng;
+use crate::{bail, ensure};
+
+/// Static architecture of one Hyena LM.
+#[derive(Debug, Clone, Copy)]
+pub struct HyenaConfig {
+    pub vocab: usize,
+    pub dim: usize,
+    pub layers: usize,
+    /// Sequence length (power of two; the causal FFT runs at `2 * seq`).
+    pub seq: usize,
+    /// Short depthwise filter length (small, e.g. 4).
+    pub short_len: usize,
+    /// `true` = radix-2 FFT long conv (the PyTorch-analogue baseline),
+    /// `false` = Monarch decomposition (the paper's kernel).
+    pub baseline: bool,
+}
+
+impl HyenaConfig {
+    /// Named parameter tensors in declaration order (shared by fixture
+    /// generation, engine operand resolution, and transfer workflows).
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let d = self.dim;
+        let mut out = vec![
+            ("param.embed".to_string(), vec![self.vocab, d]),
+            ("param.norm_f".to_string(), vec![d]),
+        ];
+        for i in 0..self.layers {
+            let p = format!("param.layer{i}");
+            out.push((format!("{p}.norm1"), vec![d]));
+            out.push((format!("{p}.win"), vec![d, 3 * d]));
+            out.push((format!("{p}.wout"), vec![d, d]));
+            out.push((format!("{p}.short"), vec![d, self.short_len]));
+            out.push((format!("{p}.k"), vec![d, self.seq]));
+        }
+        out
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.param_specs().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// Borrowed per-layer parameters (engine operand slices).
+pub struct LayerParams<'a> {
+    pub norm1: &'a [f32],
+    pub win: &'a [f32],
+    pub wout: &'a [f32],
+    pub short: &'a [f32],
+    pub k: &'a [f32],
+}
+
+/// Borrowed full parameter set in [`HyenaConfig::param_specs`] order.
+pub struct HyenaParams<'a> {
+    pub embed: &'a [f32],
+    pub norm_f: &'a [f32],
+    pub layers: Vec<LayerParams<'a>>,
+}
+
+/// Deterministic parameter initialization from an artifact-name seed.
+///
+/// Scales keep untrained activations O(1) at any sequence length: the
+/// long-conv filter bank is white noise under a per-channel exponential
+/// decay window (the Hyena filter shape) scaled by `1/sqrt(seq)`, and the
+/// projections use `1/sqrt(fan_in)`.
+pub fn init_params(cfg: &HyenaConfig, seed: u64) -> Vec<(String, Vec<usize>, Vec<f32>)> {
+    let mut rng = Rng::new(seed);
+    let d = cfg.dim;
+    let mut out: Vec<(String, Vec<usize>, Vec<f32>)> = vec![];
+    let scaled = |rng: &mut Rng, n: usize, s: f32| -> Vec<f32> {
+        rng.normal_vec(n).iter().map(|v| v * s).collect()
+    };
+    out.push(("param.embed".into(), vec![cfg.vocab, d], scaled(&mut rng, cfg.vocab * d, 0.1)));
+    out.push(("param.norm_f".into(), vec![d], vec![1.0; d]));
+    let proj_scale = 1.0 / (d as f32).sqrt();
+    let short_scale = 1.0 / (cfg.short_len as f32).sqrt();
+    let k_scale = 1.0 / (cfg.seq as f32).sqrt();
+    for i in 0..cfg.layers {
+        let p = format!("param.layer{i}");
+        out.push((format!("{p}.norm1"), vec![d], vec![1.0; d]));
+        out.push((format!("{p}.win"), vec![d, 3 * d], scaled(&mut rng, d * 3 * d, proj_scale)));
+        out.push((format!("{p}.wout"), vec![d, d], scaled(&mut rng, d * d, proj_scale)));
+        out.push((
+            format!("{p}.short"),
+            vec![d, cfg.short_len],
+            scaled(&mut rng, d * cfg.short_len, short_scale),
+        ));
+        // Filter bank: noise * decay window (rates geometric 1e-3..0.3).
+        let mut k = scaled(&mut rng, d * cfg.seq, k_scale);
+        for c in 0..d {
+            let rate = if d > 1 {
+                1e-3 * (0.3f64 / 1e-3).powf(c as f64 / (d - 1) as f64)
+            } else {
+                1e-3
+            };
+            for t in 0..cfg.seq {
+                k[c * cfg.seq + t] *= (-rate * t as f64).exp() as f32;
+            }
+        }
+        out.push((format!("{p}.k"), vec![d, cfg.seq], k));
+    }
+    debug_assert_eq!(
+        out.iter().map(|(n, s, _)| (n.clone(), s.clone())).collect::<Vec<_>>(),
+        cfg.param_specs()
+    );
+    out
+}
+
+/// The model: config plus a filter-spectrum cache (serving installs one
+/// parameter set and reuses it for every batch, so the per-channel long
+/// filter FFTs are paid once, exactly like the conv engine's cached
+/// `k_f`).
+pub struct HyenaLm {
+    cfg: HyenaConfig,
+    n1: usize,
+    n2: usize,
+    cached_k: Vec<f32>,
+    spectra: Vec<Vec<Vec<Cpx>>>,
+}
+
+impl HyenaLm {
+    pub fn new(cfg: HyenaConfig) -> crate::Result<Self> {
+        ensure!(fft::is_pow2(cfg.seq), "hyena seq {} must be a power of two", cfg.seq);
+        ensure!(
+            cfg.short_len >= 1 && cfg.short_len <= cfg.seq,
+            "short_len {} out of range for seq {}",
+            cfg.short_len,
+            cfg.seq
+        );
+        ensure!(cfg.dim >= 1 && cfg.vocab >= 2, "degenerate hyena config {cfg:?}");
+        let fs = fft::try_monarch_factors(2 * cfg.seq, 2)?;
+        Ok(Self { cfg, n1: fs[0], n2: fs[1], cached_k: vec![], spectra: vec![] })
+    }
+
+    pub fn config(&self) -> &HyenaConfig {
+        &self.cfg
+    }
+
+    /// Spectrum of one padded filter row in this variant's layout.
+    fn filter_spectrum(&self, krow: &[f64]) -> Vec<Cpx> {
+        let m = 2 * self.cfg.seq;
+        let mut kp = krow.to_vec();
+        kp.resize(m, 0.0);
+        if self.cfg.baseline {
+            fft::rfft_full(&kp)
+        } else {
+            let kc: Vec<Cpx> = kp.iter().map(|&v| Cpx::new(v, 0.0)).collect();
+            fft::monarch_fft2(&kc, self.n1, self.n2)
+        }
+    }
+
+    /// Causal convolution of one gated row against a cached spectrum.
+    fn conv_row(&self, g: &[f64], k_spec: &[Cpx]) -> Vec<f64> {
+        let l = self.cfg.seq;
+        let m = 2 * l;
+        let mut gp: Vec<Cpx> = g.iter().map(|&v| Cpx::new(v, 0.0)).collect();
+        gp.resize(m, Cpx::ZERO);
+        let y = if self.cfg.baseline {
+            let gf = fft::fft(&gp, false);
+            let prod: Vec<Cpx> = gf.iter().zip(k_spec).map(|(&a, &b)| a * b).collect();
+            fft::fft(&prod, true)
+        } else {
+            let gm = fft::monarch_fft2(&gp, self.n1, self.n2);
+            let prod: Vec<Cpx> = gm.iter().zip(k_spec).map(|(&a, &b)| a * b).collect();
+            fft::monarch_ifft2(&prod, self.n1, self.n2)
+        };
+        y[..l].iter().map(|c| c.re).collect()
+    }
+
+    /// Recompute the per-layer filter spectra when the banks changed.
+    /// The hit check compares the incoming banks against the cached
+    /// chunks in place — no allocation on the hot serving path.
+    fn refresh_spectra(&mut self, p: &HyenaParams) {
+        let (d, l) = (self.cfg.dim, self.cfg.seq);
+        let bank = d * l;
+        let hit = self.cached_k.len() == self.cfg.layers * bank
+            && p.layers.iter().zip(self.cached_k.chunks(bank)).all(|(lp, ck)| lp.k == ck);
+        if hit {
+            return;
+        }
+        let mut key = Vec::with_capacity(self.cfg.layers * bank);
+        for lp in &p.layers {
+            key.extend_from_slice(lp.k);
+        }
+        self.spectra = p
+            .layers
+            .iter()
+            .map(|lp| {
+                (0..d)
+                    .map(|c| {
+                        let krow: Vec<f64> =
+                            lp.k[c * l..(c + 1) * l].iter().map(|&v| v as f64).collect();
+                        self.filter_spectrum(&krow)
+                    })
+                    .collect()
+            })
+            .collect();
+        self.cached_k = key;
+    }
+
+    /// Forward pass: `tokens` (batch, seq) row-major -> logits
+    /// (batch, seq, vocab) as f32.
+    pub fn forward(
+        &mut self,
+        tokens: &[i32],
+        batch: usize,
+        p: &HyenaParams,
+    ) -> crate::Result<Vec<f32>> {
+        let (l, d, v) = (self.cfg.seq, self.cfg.dim, self.cfg.vocab);
+        ensure!(tokens.len() == batch * l, "token buffer mismatch");
+        ensure!(p.layers.len() == self.cfg.layers, "layer param count mismatch");
+        self.refresh_spectra(p);
+
+        // Embedding, (batch, seq, dim) row-major.
+        let mut x = vec![0.0f64; batch * l * d];
+        for b in 0..batch {
+            for t in 0..l {
+                let tok = tokens[b * l + t];
+                if tok < 0 || tok as usize >= v {
+                    bail!("token {tok} out of range for vocab {v}");
+                }
+                let off = (b * l + t) * d;
+                for c in 0..d {
+                    x[off + c] = p.embed[tok as usize * d + c] as f64;
+                }
+            }
+        }
+
+        let sl = self.cfg.short_len;
+        let threads =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        for (li, lp) in p.layers.iter().enumerate() {
+            // RMSNorm + input projection to (u, v, w).
+            let mut pu = vec![0.0f64; batch * l * d];
+            let mut pv = vec![0.0f64; batch * l * d];
+            let mut pw = vec![0.0f64; batch * l * d];
+            let mut h = vec![0.0f64; d];
+            for bt in 0..batch * l {
+                let off = bt * d;
+                let ms: f64 =
+                    x[off..off + d].iter().map(|&a| a * a).sum::<f64>() / d as f64;
+                let scale = 1.0 / (ms + 1e-6).sqrt();
+                for c in 0..d {
+                    h[c] = x[off + c] * scale * lp.norm1[c] as f64;
+                }
+                for j in 0..d {
+                    let (mut au, mut av, mut aw) = (0.0f64, 0.0, 0.0);
+                    for (c, &hc) in h.iter().enumerate() {
+                        let row = c * 3 * d;
+                        au += hc * lp.win[row + j] as f64;
+                        av += hc * lp.win[row + d + j] as f64;
+                        aw += hc * lp.win[row + 2 * d + j] as f64;
+                    }
+                    pu[off + j] = au;
+                    pv[off + j] = av;
+                    pw[off + j] = aw;
+                }
+            }
+
+            // Mixer rows: short conv, gate, long conv, output gate.
+            let spectra = &self.spectra[li];
+            let rows: Vec<(usize, usize)> =
+                (0..batch).flat_map(|b| (0..d).map(move |c| (b, c))).collect();
+            let this = &*self;
+            let pu_ref = &pu;
+            let pv_ref = &pv;
+            let pw_ref = &pw;
+            let row_out = |(b, c): (usize, usize)| -> Vec<f64> {
+                let mut g = vec![0.0f64; l];
+                for t in 0..l {
+                    let mut acc = 0.0f64;
+                    for s in 0..sl.min(t + 1) {
+                        acc += pu_ref[(b * l + t - s) * d + c]
+                            * lp.short[c * sl + s] as f64;
+                    }
+                    g[t] = acc * pw_ref[(b * l + t) * d + c];
+                }
+                let conv = this.conv_row(&g, &spectra[c]);
+                (0..l).map(|t| pv_ref[(b * l + t) * d + c] * conv[t]).collect()
+            };
+            // Fan the (batch, channel) rows across the pool when each row
+            // carries real FFT work; tiny models stay sequential.
+            let yrows: Vec<Vec<f64>> = if rows.len() > 1 && l >= 512 && threads > 1 {
+                parallel_map(rows.clone(), threads.min(rows.len()), row_out)
+            } else {
+                rows.iter().copied().map(row_out).collect()
+            };
+            let mut y = vec![0.0f64; batch * l * d];
+            for (&(b, c), row) in rows.iter().zip(&yrows) {
+                for (t, &val) in row.iter().enumerate() {
+                    y[(b * l + t) * d + c] = val;
+                }
+            }
+            // Residual through the output projection.
+            for bt in 0..batch * l {
+                let off = bt * d;
+                for j in 0..d {
+                    let mut acc = 0.0f64;
+                    for c in 0..d {
+                        acc += y[off + c] * lp.wout[c * d + j] as f64;
+                    }
+                    x[off + j] += acc;
+                }
+            }
+        }
+
+        // Final norm + tied-embedding head.
+        let mut logits = vec![0.0f32; batch * l * v];
+        let mut xn = vec![0.0f64; d];
+        for bt in 0..batch * l {
+            let off = bt * d;
+            let ms: f64 = x[off..off + d].iter().map(|&a| a * a).sum::<f64>() / d as f64;
+            let scale = 1.0 / (ms + 1e-6).sqrt();
+            for c in 0..d {
+                xn[c] = x[off + c] * scale * p.norm_f[c] as f64;
+            }
+            let lo = bt * v;
+            for tok in 0..v {
+                let mut acc = 0.0f64;
+                for (c, &xc) in xn.iter().enumerate() {
+                    acc += xc * p.embed[tok * d + c] as f64;
+                }
+                logits[lo + tok] = acc as f32;
+            }
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(baseline: bool) -> HyenaConfig {
+        HyenaConfig { vocab: 16, dim: 8, layers: 2, seq: 32, short_len: 4, baseline }
+    }
+
+    fn get<'a>(init: &'a [(String, Vec<usize>, Vec<f32>)], name: &str) -> &'a [f32] {
+        &init.iter().find(|(n, _, _)| n == name).unwrap().2
+    }
+
+    fn params_of<'a>(
+        init: &'a [(String, Vec<usize>, Vec<f32>)],
+        cfg: &HyenaConfig,
+    ) -> HyenaParams<'a> {
+        HyenaParams {
+            embed: get(init, "param.embed"),
+            norm_f: get(init, "param.norm_f"),
+            layers: (0..cfg.layers)
+                .map(|i| LayerParams {
+                    norm1: get(init, &format!("param.layer{i}.norm1")),
+                    win: get(init, &format!("param.layer{i}.win")),
+                    wout: get(init, &format!("param.layer{i}.wout")),
+                    short: get(init, &format!("param.layer{i}.short")),
+                    k: get(init, &format!("param.layer{i}.k")),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn init_matches_specs_and_is_deterministic() {
+        let c = cfg(false);
+        let a = init_params(&c, 7);
+        let b = init_params(&c, 7);
+        assert_eq!(a.len(), c.param_specs().len());
+        for ((n1, s1, v1), (n2, s2, v2)) in a.iter().zip(&b) {
+            assert_eq!(n1, n2);
+            assert_eq!(s1, s2);
+            assert_eq!(v1, v2);
+            assert_eq!(v1.len(), s1.iter().product::<usize>());
+        }
+        assert_ne!(init_params(&c, 8)[0].2, a[0].2);
+        assert_eq!(c.param_count(), a.iter().map(|(_, _, v)| v.len()).sum::<usize>());
+    }
+
+    #[test]
+    fn monarch_and_baseline_forward_agree() {
+        let init = init_params(&cfg(false), 42);
+        let mut rng = Rng::new(5);
+        let batch = 2usize;
+        let tokens: Vec<i32> =
+            (0..batch * 32).map(|_| rng.below(16) as i32).collect();
+        let cm = cfg(false);
+        let cb = cfg(true);
+        let lm_m = HyenaLm::new(cm).unwrap().forward(&tokens, batch, &params_of(&init, &cm));
+        let lm_b = HyenaLm::new(cb).unwrap().forward(&tokens, batch, &params_of(&init, &cb));
+        let (a, b) = (lm_m.unwrap(), lm_b.unwrap());
+        let worst = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(worst < 1e-4, "variant divergence {worst}");
+    }
+
+    #[test]
+    fn forward_is_causal() {
+        // Perturbing a late token must not change earlier logits.
+        let c = cfg(false);
+        let init = init_params(&c, 9);
+        let mut lm = HyenaLm::new(c).unwrap();
+        let p = params_of(&init, &c);
+        let mut tokens: Vec<i32> = (0..32).map(|t| (t % 16) as i32).collect();
+        let a = lm.forward(&tokens, 1, &p).unwrap();
+        tokens[30] = 3;
+        let b = lm.forward(&tokens, 1, &p).unwrap();
+        for t in 0..30 {
+            for v in 0..16 {
+                assert!(
+                    (a[t * 16 + v] - b[t * 16 + v]).abs() < 1e-5,
+                    "position {t} changed"
+                );
+            }
+        }
+        assert!(
+            (0..16).any(|v| (a[31 * 16 + v] - b[31 * 16 + v]).abs() > 1e-6),
+            "late positions should change"
+        );
+    }
+
+    #[test]
+    fn forward_rejects_out_of_range_tokens() {
+        let c = cfg(false);
+        let init = init_params(&c, 1);
+        let mut lm = HyenaLm::new(c).unwrap();
+        let mut tokens = vec![0i32; 32];
+        tokens[5] = 99;
+        assert!(lm.forward(&tokens, 1, &params_of(&init, &c)).is_err());
+    }
+
+    #[test]
+    fn logits_are_sane_at_init() {
+        let c = cfg(false);
+        let init = init_params(&c, 3);
+        let mut lm = HyenaLm::new(c).unwrap();
+        let tokens: Vec<i32> = (0..32).map(|t| (t % 16) as i32).collect();
+        let logits = lm.forward(&tokens, 1, &params_of(&init, &c)).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        let max = logits.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!(max < 20.0, "untrained logits should be O(1), got {max}");
+    }
+}

@@ -1,0 +1,39 @@
+//! Native model zoo: the end-to-end models the paper serves and trains,
+//! in pure Rust on top of the in-crate [`crate::fft`] library.
+//!
+//! This is the model layer that turns the Monarch-FFT convolution kernels
+//! into servable artifacts on the default [`crate::runtime::native`]
+//! backend — previously the `pathfinder`, `e2e_*`, and `lm_logits`
+//! families existed only as AOT-compiled HLO behind the optional `pjrt`
+//! feature. Two model families cover them:
+//!
+//! * [`hyena`] — a Hyena-style gated long-convolution LM (the Tables 1/5/6
+//!   architecture): token embedding → stacked blocks of
+//!   `y = v ⊙ ((shortconv(u) ⊙ w) ∗ k)` — an input projection, a short
+//!   depthwise causal conv, an FFT long conv through the Monarch
+//!   decomposition ([`crate::fft::monarch_fft2`]), and elementwise
+//!   gating — with residuals, RMSNorm, and a tied-embedding LM head.
+//!   Forward-only: it backs the `lm_fwd_logits` serving artifact
+//!   ([`crate::server::ModelServer`]) and the `e2e_*` model-zoo pairs
+//!   (each model in a `monarch` and a `baseline` radix-2 FFT variant —
+//!   the Table 5 speedup comparison).
+//! * [`pathfinder`] — a small 2-D convolution classifier for the
+//!   synthetic Pathfinder connectivity task (the Table 2 analogue):
+//!   3×3 depth-1 conv → ReLU → per-column mean pooling → linear head,
+//!   with a hand-derived backward pass and an SGD update, backing the
+//!   `pf_train` / `pf_eval` artifacts that `flashfftconv pathfinder`
+//!   drives end to end on the native backend.
+//!
+//! Parameters are deterministic functions of an artifact-name seed
+//! ([`crate::util::Rng`]), flattened to named `param.*` tensors in a
+//! stable declaration order so the manifest fixture bytes, the engine's
+//! operand resolution, and checkpoint/transfer workflows
+//! (`Artifact::state` / `set_operand`) all agree. [`sample`] holds the
+//! greedy-decoding helpers used by the serving example and tests.
+
+pub mod hyena;
+pub mod pathfinder;
+pub mod sample;
+
+pub use hyena::{HyenaConfig, HyenaLm};
+pub use pathfinder::PathfinderConfig;

@@ -1,0 +1,65 @@
+//! Greedy decoding over a running [`crate::server::ModelServer`].
+//!
+//! The server returns last-position logits for a fixed-length token
+//! window; generation slides that window one token at a time. Decoding is
+//! deterministic (argmax, first-winner tie-break), which is what the
+//! serving determinism tests pin down.
+
+use crate::server::{InferRequest, ModelServer};
+use crate::{ensure, format_err};
+
+/// Index of the largest element (first winner on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Greedily extend `prompt` by `new_tokens` tokens through the server.
+///
+/// The prompt must be exactly the server's context length; each step
+/// feeds the trailing context window and appends the argmax token.
+/// Returns prompt + generated tokens.
+pub fn greedy_extend(
+    server: &ModelServer,
+    prompt: &[i32],
+    new_tokens: usize,
+) -> crate::Result<Vec<i32>> {
+    ensure!(
+        prompt.len() == server.seq_len,
+        "prompt length {} != server context {}",
+        prompt.len(),
+        server.seq_len
+    );
+    let mut seq = prompt.to_vec();
+    for _ in 0..new_tokens {
+        let window = seq[seq.len() - server.seq_len..].to_vec();
+        let logits = server.call(InferRequest { tokens: window })?;
+        if logits.len() != server.vocab {
+            return Err(format_err!(
+                "server returned {} logits, expected vocab {}",
+                logits.len(),
+                server.vocab
+            ));
+        }
+        ensure!(logits.iter().all(|v| v.is_finite()), "non-finite logits from server");
+        seq.push(argmax(&logits) as i32);
+    }
+    Ok(seq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_winner() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+        assert_eq!(argmax(&[1.0, 2.0, 5.0, 4.0]), 2);
+    }
+}

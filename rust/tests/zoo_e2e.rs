@@ -1,0 +1,217 @@
+//! End-to-end model-zoo tests on the default native backend: ModelServer
+//! generation determinism, the pathfinder train-then-eval round trip
+//! (loss decreasing from init, held-out accuracy improving), parity
+//! between parallel and sequential conv-engine execution, and the e2e
+//! monarch/baseline pairs agreeing on shared parameters.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::runtime::{Artifact, BackendConfig, HostTensor, Runtime};
+use flashfftconv::server::{InferRequest, ModelServer};
+use flashfftconv::trainer::data::{PathfinderGen, TokenGen};
+use flashfftconv::trainer::run::Budget;
+use flashfftconv::trainer::{TrainConfig, Trainer};
+use flashfftconv::util::Rng;
+use flashfftconv::zoo::sample::greedy_extend;
+
+fn start_server() -> ModelServer {
+    ModelServer::start(
+        BackendConfig::Native,
+        "lm_fwd_logits",
+        BatchPolicy { batch_size: 4, max_wait: Duration::from_millis(1) },
+    )
+    .expect("model server starts on the native backend")
+}
+
+#[test]
+fn model_server_generation_is_deterministic_on_native() {
+    let s1 = start_server();
+    let s2 = start_server();
+    let mut gen = TokenGen::new(s1.vocab, 7);
+    let prompt = gen.batch(1, s1.seq_len);
+
+    let a = greedy_extend(&s1, &prompt, 8).unwrap();
+    let b = greedy_extend(&s2, &prompt, 8).unwrap();
+    assert_eq!(a, b, "two fresh servers must generate identically");
+    let c = greedy_extend(&s1, &prompt, 8).unwrap();
+    assert_eq!(a, c, "the same server must be deterministic across calls");
+
+    assert_eq!(a.len(), s1.seq_len + 8);
+    assert!(a[s1.seq_len..].iter().all(|&t| t >= 0 && (t as usize) < s1.vocab));
+
+    // Error paths stay clean: wrong prompt length, wrong request length.
+    assert!(greedy_extend(&s1, &prompt[..10], 1).is_err());
+    assert!(s1.call(InferRequest { tokens: vec![0; 3] }).is_err());
+}
+
+#[test]
+fn model_server_batches_concurrent_generation_requests() {
+    let server = start_server();
+    let mut gen = TokenGen::new(server.vocab, 3);
+    // Submit a burst of identical full-context requests; every reply is
+    // the same last-position logits vector.
+    let prompt = gen.batch(1, server.seq_len);
+    let pending: Vec<_> = (0..6)
+        .map(|_| server.submit(InferRequest { tokens: prompt.clone() }))
+        .collect();
+    let mut replies = vec![];
+    for rx in pending {
+        replies.push(rx.recv().expect("server alive").expect("inference ok"));
+    }
+    for r in &replies[1..] {
+        assert_eq!(r, &replies[0], "identical requests must get identical logits");
+    }
+    assert_eq!(replies[0].len(), server.vocab);
+}
+
+fn eval_accuracy(eval: &mut Artifact, side: usize, batch: usize, seq: usize, seed: u64) -> f64 {
+    let mut gen = PathfinderGen::new(side, seed);
+    let (mut correct, mut total) = (0usize, 0usize);
+    for _ in 0..16 {
+        let (pix, labels) = gen.batch(batch);
+        let outs = eval.call(&[HostTensor::f32(pix, &[batch, seq])]).unwrap();
+        correct += flashfftconv::zoo::pathfinder::correct_predictions(outs[0].as_f32(), &labels);
+        total += labels.len();
+    }
+    correct as f64 / total as f64
+}
+
+#[test]
+fn pathfinder_train_then_eval_improves_over_init() {
+    let runtime = Runtime::native().unwrap();
+    let seed = 3u64;
+
+    let mut eval = runtime.load("pf_eval").unwrap();
+    let spec = eval.spec().clone();
+    let batch = spec.meta_usize("batch").unwrap();
+    let seq = spec.meta_usize("seq_len").unwrap();
+    let side = (seq as f64).sqrt() as usize;
+    assert_eq!(side * side, seq);
+    let before = eval_accuracy(&mut eval, side, batch, seq, seed + 1000);
+
+    let mut trainer = Trainer::new(
+        &runtime,
+        TrainConfig {
+            artifact: "pf_train".into(),
+            budget: Budget::Steps(200),
+            log_every: 1000,
+            seed,
+            checkpoint: None,
+        },
+    )
+    .unwrap();
+    let o = trainer.run().unwrap();
+    assert_eq!(o.steps, 200);
+    assert!(
+        o.final_loss < o.first_loss - 0.02,
+        "training loss must decrease from init: {} -> {}",
+        o.first_loss,
+        o.final_loss
+    );
+
+    // Copy the trained parameters into the eval artifact (the
+    // cmd_pathfinder workflow) and re-measure held-out accuracy.
+    let names: Vec<String> = eval
+        .spec()
+        .inputs
+        .iter()
+        .filter(|i| i.spec.name.starts_with("param."))
+        .map(|i| i.spec.name.clone())
+        .collect();
+    assert_eq!(names.len(), 4, "pathfinder has 4 parameter tensors");
+    for name in &names {
+        eval.set_operand(name, &trainer.artifact().state(name).unwrap()).unwrap();
+    }
+    let after = eval_accuracy(&mut eval, side, batch, seq, seed + 1000);
+    assert!(
+        after >= 0.75,
+        "trained pathfinder accuracy should clear 75%, got {after:.3} (before {before:.3})"
+    );
+    assert!(
+        after > before + 0.1,
+        "accuracy must improve over init: {before:.3} -> {after:.3}"
+    );
+}
+
+fn gated_conv_manifest(threads: usize) -> String {
+    format!(
+        "version 1\n\
+         artifact cpar\n\
+         hlo cpar.hlo.txt\n\
+         meta group conv\n\
+         meta kind conv_gated\n\
+         meta variant monarch\n\
+         meta seq_len 256\n\
+         meta batch 2\n\
+         meta heads 8\n\
+         meta order 2\n\
+         meta conv_threads {threads}\n\
+         input u f32 2,8,256 runtime\n\
+         input v f32 2,8,256 runtime\n\
+         input w f32 2,8,256 runtime\n\
+         input k f32 8,256 runtime\n\
+         output y f32 2,8,256\n\
+         end\n"
+    )
+}
+
+#[test]
+fn parallel_and_sequential_conv_engines_agree_bitwise() {
+    let seq_rt = Runtime::native_from(&gated_conv_manifest(1), BTreeMap::new()).unwrap();
+    let par_rt = Runtime::native_from(&gated_conv_manifest(4), BTreeMap::new()).unwrap();
+    let (b, h, n) = (2usize, 8usize, 256usize);
+    let mut rng = Rng::new(123);
+    let inputs = vec![
+        HostTensor::f32(rng.normal_vec(b * h * n), &[b, h, n]),
+        HostTensor::f32(rng.normal_vec(b * h * n), &[b, h, n]),
+        HostTensor::f32(rng.normal_vec(b * h * n), &[b, h, n]),
+        HostTensor::f32(rng.normal_vec(h * n), &[h, n]),
+    ];
+    let ys = seq_rt.load("cpar").unwrap().call(&inputs).unwrap();
+    let yp = par_rt.load("cpar").unwrap().call(&inputs).unwrap();
+    assert_eq!(
+        ys[0].as_f32(),
+        yp[0].as_f32(),
+        "row fan-out must not change results (bitwise)"
+    );
+}
+
+#[test]
+fn e2e_zoo_variants_agree_on_shared_params() {
+    // The Table 5 monarch/baseline pair of one model shares its
+    // parameters, so the two long-conv implementations must produce the
+    // same logits — the model-level cross-implementation check.
+    let runtime = Runtime::native().unwrap();
+    let mut mon = runtime.load("e2e_m2bert_monarch").unwrap();
+    let mut base = runtime.load("e2e_m2bert_baseline").unwrap();
+    let spec = mon.spec().clone();
+    let batch = spec.meta_usize("batch").unwrap();
+    let seq = spec.meta_usize("seq_len").unwrap();
+    let vocab = spec.meta_usize("vocab").unwrap();
+    assert_eq!(spec.meta("model"), Some("m2bert"));
+    let mut gen = TokenGen::new(vocab, 11);
+    let tokens = HostTensor::i32(gen.batch(batch, seq), &[batch, seq]);
+    let ym = mon.call(&[tokens.clone()]).unwrap();
+    let yb = base.call(&[tokens]).unwrap();
+    assert_eq!(ym[0].shape, vec![batch, seq, vocab]);
+    let err = ym[0].max_abs_diff(&yb[0]);
+    assert!(err < 1e-3, "monarch/baseline model divergence {err:.3e}");
+}
+
+#[test]
+fn sparse_kernel_ladder_is_served_natively() {
+    // The Table 9 bench looks these up by name; the fleet must carry the
+    // whole ladder plus the golden-checked small instance.
+    let runtime = Runtime::native().unwrap();
+    for tag in ["s0", "s50", "s75", "s84", "s91", "s94"] {
+        let name = format!("conv_sparse_{tag}_n4096");
+        let spec = runtime.manifest().get(&name).unwrap();
+        assert_eq!(spec.meta("kind"), Some("conv_fwd"), "{name}");
+        assert!(spec.meta("sparsity").is_some(), "{name}");
+        assert!(spec.meta("flop_fraction").is_some(), "{name}");
+    }
+    let small = runtime.manifest().get("conv_sparse_s75_n1024").unwrap();
+    assert!(small.golden_file.is_some(), "small sparse instance carries a golden");
+}
