@@ -27,6 +27,28 @@ cargo check --features pjrt
 echo "==> cargo run --release --example quickstart"
 cargo run --release --example quickstart
 
+# Perf smoke: a one-iteration bench run must produce the machine-readable
+# perf artifact (BENCH_table3.json is how the perf trajectory accumulates
+# across PRs), and the artifact must be well-formed.
+echo "==> perf smoke: FFC_BENCH_ITERS=1 cargo bench --bench table3_conv"
+rm -f BENCH_table3.json
+FFC_BENCH_ITERS=1 FFC_BENCH_MAX_SECS=3 cargo bench --bench table3_conv >/dev/null
+test -s BENCH_table3.json || { echo "FAIL: BENCH_table3.json missing or empty"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PY'
+import json
+recs = json.load(open("BENCH_table3.json"))
+assert isinstance(recs, list) and recs, "no records"
+for r in recs:
+    missing = {"name", "n", "mean_ns", "median_ns", "p95_ns"} - set(r)
+    assert not missing, f"record missing {missing}: {r}"
+print(f"BENCH_table3.json OK ({len(recs)} records)")
+PY
+else
+    grep -q '"mean_ns"' BENCH_table3.json && grep -q '"name"' BENCH_table3.json \
+        && echo "BENCH_table3.json OK (grep check; python3 unavailable)"
+fi
+
 lint_mode="${FFC_CI_LINT:-advisory}"
 
 if cargo fmt --version >/dev/null 2>&1; then

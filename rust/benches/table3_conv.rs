@@ -1,14 +1,54 @@
 //! Table 3 / 11 / 13: forward-pass convolution benchmarks.
 //!
-//! For each sequence length: the fused Monarch kernel (FlashFFTConv) vs
-//! the jnp.fft baseline artifact ("PyTorch" analogue) vs the native-Rust
-//! fused FFT conv ("fusion-only / cuFFTdx" ablation row) vs the
-//! no-domain-opts complex-path kernel. Causal (input = FFT/2) rows cover
-//! Table 13. Paper reference ratios are printed alongside.
+//! For each sequence length: the planned Monarch kernel (FlashFFTConv,
+//! plan-based GEMM execution) vs the jnp.fft baseline artifact ("PyTorch"
+//! analogue) vs the native-Rust fused FFT conv ("fusion-only / cuFFTdx"
+//! ablation row) vs the *retained naive oracle* — the pre-plan per-row
+//! `monarch_fft2` DFT loops with `Cpx::cis` in the innermost MAC, which
+//! is exactly what the monarch engine executed before the plan layer and
+//! is the denominator of the acceptance speedup. Causal (input = FFT/2)
+//! rows cover Table 13. Paper reference ratios are printed alongside.
+//!
+//! Emits `BENCH_table3.json` (name, n, mean_ns, median_ns, p95_ns —
+//! the speedup gates are defined on median_ns) so the perf trajectory
+//! accumulates across PRs.
 
-use flashfftconv::bench::{bench, fmt_ms, fmt_x, workloads, BenchConfig, Table};
+use flashfftconv::bench::{bench, fmt_ms, fmt_x, workloads, BenchConfig, BenchRecord, Table};
 use flashfftconv::fft;
 use flashfftconv::util::Rng;
+
+/// Time the pre-plan naive Monarch conv path: per-row order-2 DFT loops
+/// (trig in the inner MAC), filter spectra precomputed outside the loop
+/// exactly as the old engine cached them. Same `(b, h, n)` workload as
+/// the artifact rows so the planned/naive ratio is apples-to-apples.
+fn time_naive_monarch(
+    n: usize,
+    b: usize,
+    h: usize,
+    cfg: &BenchConfig,
+) -> flashfftconv::bench::BenchResult {
+    let fs = fft::monarch_factors(n, 2);
+    let (n1, n2) = (fs[0], fs[1]);
+    let mut rng = Rng::new(0xD00D ^ n as u64);
+    let rows: Vec<Vec<f64>> = (0..b * h).map(|_| fft::random_signal(n, &mut rng)).collect();
+    let kspecs: Vec<Vec<fft::Cpx>> = (0..h)
+        .map(|_| {
+            let k = fft::random_signal(n, &mut rng);
+            let kc: Vec<fft::Cpx> = k.iter().map(|&v| fft::Cpx::new(v, 0.0)).collect();
+            fft::monarch_fft2(&kc, n1, n2)
+        })
+        .collect();
+    bench(&format!("conv_fwd_naive_n{n}"), cfg, || {
+        for (row, u) in rows.iter().enumerate() {
+            let uc: Vec<fft::Cpx> = u.iter().map(|&v| fft::Cpx::new(v, 0.0)).collect();
+            let um = fft::monarch_fft2(&uc, n1, n2);
+            let prod: Vec<fft::Cpx> =
+                um.iter().zip(&kspecs[row % h]).map(|(&a, &b)| a * b).collect();
+            let y: Vec<f64> = fft::monarch_ifft2(&prod, n1, n2).iter().map(|c| c.re).collect();
+            std::hint::black_box(y);
+        }
+    })
+}
 
 fn main() {
     let cfg = BenchConfig::from_env();
@@ -17,6 +57,7 @@ fn main() {
         "paper (H100, B=64, H=768): speedups 6.5x @1K -> 1.3x @4M, monarch vs torch",
     );
     let runtime = workloads::bench_runtime().expect("artifacts present (make artifacts)");
+    let mut records: Vec<BenchRecord> = vec![];
 
     let paper_speedup = [
         (256usize, 4.69),
@@ -27,13 +68,24 @@ fn main() {
     ];
 
     let mut table = Table::new(&[
-        "N", "baseline_ms", "monarch_ms", "fusion_only_ms", "speedup", "paper_speedup",
+        "N", "baseline_ms", "monarch_ms", "naive_ms", "fusion_only_ms", "speedup",
+        "vs_naive", "paper_speedup",
     ]);
     for (n, paper) in paper_speedup {
         let base = workloads::time_artifact(&runtime, &format!("conv_fwd_baseline_n{n}"), &cfg)
             .unwrap();
         let mon =
             workloads::time_artifact(&runtime, &format!("conv_fwd_monarch_n{n}"), &cfg).unwrap();
+        // Retained naive oracle over the artifact's own (b, h) workload —
+        // the pre-plan engine hot path the acceptance gate compares to.
+        let naive = match runtime.manifest().get(&format!("conv_fwd_monarch_n{n}")) {
+            Ok(spec) if n <= 4096 => {
+                let b = spec.meta_usize("batch").unwrap_or(2);
+                let h = spec.meta_usize("heads").unwrap_or(16);
+                Some(time_naive_monarch(n, b, h, &cfg))
+            }
+            _ => None,
+        };
         // Fusion-only ablation: single-pass native FFT conv over the same
         // B*H sequences (general arithmetic, no matrix decomposition).
         let fusion_ms = if n <= 16384 {
@@ -55,10 +107,20 @@ fn main() {
                 n.to_string(),
                 fmt_ms(b.median_ms()),
                 fmt_ms(m.median_ms()),
+                naive.as_ref().map(|r| fmt_ms(r.median_ms())).unwrap_or_else(|| "-".into()),
                 fusion_ms.map(fmt_ms).unwrap_or_else(|| "-".into()),
                 fmt_x(b.median_ns / m.median_ns),
+                naive
+                    .as_ref()
+                    .map(|r| fmt_x(r.median_ns / m.median_ns))
+                    .unwrap_or_else(|| "-".into()),
                 format!("{paper:.2}x"),
             ]);
+            records.push(BenchRecord::of(&b, n));
+            records.push(BenchRecord::of(&m, n));
+            if let Some(r) = &naive {
+                records.push(BenchRecord::of(r, n));
+            }
         }
     }
     table.print();
@@ -81,6 +143,8 @@ fn main() {
                 fmt_ms(m.median_ms()),
                 fmt_x(b.median_ns / m.median_ns),
             ]);
+            records.push(BenchRecord::of(&b, l));
+            records.push(BenchRecord::of(&m, l));
         }
     }
     t13.print();
@@ -104,8 +168,15 @@ fn main() {
                     fmt_ms(r.median_ms()),
                     fmt_x(r.median_ns / full.median_ns),
                 ]);
+                records.push(BenchRecord::of(&r, n));
             }
         }
     }
     abl.print();
+
+    // Anchor to the workspace root: cargo runs bench executables with
+    // the *package* directory (rust/) as CWD, not the invocation dir.
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_table3.json");
+    flashfftconv::bench::write_json(out, &records).expect("write BENCH_table3.json");
+    eprintln!("(wrote {out}: {} records)", records.len());
 }

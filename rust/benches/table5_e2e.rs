@@ -5,7 +5,7 @@
 //! in the convolution implementation; throughput ratio per model is the
 //! paper's speedup column.
 
-use flashfftconv::bench::{fmt_x, workloads, BenchConfig, Table};
+use flashfftconv::bench::{fmt_x, workloads, BenchConfig, BenchRecord, Table};
 
 fn main() {
     let cfg = BenchConfig::from_env();
@@ -14,6 +14,7 @@ fn main() {
         "paper speedups: M2-BERT 1.9x, Hyena-4K 1.7x, Path-X longconv 2.4x, SaShiMi 1.3x, HyenaDNA 4.4x",
     );
     let runtime = workloads::bench_runtime().expect("artifacts present");
+    let mut records: Vec<BenchRecord> = vec![];
 
     let zoo = [
         ("m2bert", "M2-BERT-base (seq 128)", 1.9),
@@ -29,12 +30,9 @@ fn main() {
             workloads::time_artifact(&runtime, &format!("e2e_{tag}_baseline"), &cfg).unwrap();
         let mon = workloads::time_artifact(&runtime, &format!("e2e_{tag}_monarch"), &cfg).unwrap();
         if let (Some(b), Some(m)) = (base, mon) {
-            let batch = runtime
-                .manifest()
-                .get(&format!("e2e_{tag}_monarch"))
-                .unwrap()
-                .meta_usize("batch")
-                .unwrap_or(1);
+            let spec = runtime.manifest().get(&format!("e2e_{tag}_monarch")).unwrap();
+            let batch = spec.meta_usize("batch").unwrap_or(1);
+            let seq = spec.meta_usize("seq_len").unwrap_or(0);
             t.row(vec![
                 label.to_string(),
                 format!("{:.1}", b.median_ms()),
@@ -43,7 +41,15 @@ fn main() {
                 fmt_x(b.median_ns / m.median_ns),
                 format!("{paper:.1}x"),
             ]);
+            records.push(BenchRecord::of(&b, seq));
+            records.push(BenchRecord::of(&m, seq));
         }
     }
     t.print();
+
+    // Anchor to the workspace root: cargo runs bench executables with
+    // the *package* directory (rust/) as CWD, not the invocation dir.
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_table5.json");
+    flashfftconv::bench::write_json(out, &records).expect("write BENCH_table5.json");
+    eprintln!("(wrote {out}: {} records)", records.len());
 }

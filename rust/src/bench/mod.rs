@@ -158,6 +158,79 @@ impl Table {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Machine-readable results (perf trajectory)
+// ---------------------------------------------------------------------------
+
+/// One timing record for the JSON perf artifacts (`BENCH_table3.json`
+/// etc.) that benches emit so the perf trajectory accumulates across
+/// PRs and CI can diff regressions mechanically.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    /// Problem size (sequence length / FFT length) of the case.
+    pub n: usize,
+    pub mean_ns: f64,
+    /// The robust statistic the printed tables and the speedup gates are
+    /// defined on.
+    pub median_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchRecord {
+    /// Record from a bench result plus its problem size.
+    pub fn of(r: &BenchResult, n: usize) -> Self {
+        Self {
+            name: r.name.clone(),
+            n,
+            mean_ns: r.mean_ns,
+            median_ns: r.median_ns,
+            p95_ns: r.p95_ns,
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render records as a JSON array (offline substrate — no serde). Timings
+/// are emitted in fixed-point ns so the output is always valid JSON.
+pub fn records_json(recs: &[BenchRecord]) -> String {
+    let rows: Vec<String> = recs
+        .iter()
+        .map(|r| {
+            format!(
+                "  {{\"name\": \"{}\", \"n\": {}, \"mean_ns\": {:.1}, \
+                 \"median_ns\": {:.1}, \"p95_ns\": {:.1}}}",
+                json_escape(&r.name),
+                r.n,
+                r.mean_ns,
+                r.median_ns,
+                r.p95_ns
+            )
+        })
+        .collect();
+    format!("[\n{}\n]\n", rows.join(",\n"))
+}
+
+/// Write the JSON perf artifact. Note cargo runs bench/test executables
+/// with the *package* root as CWD, so callers that want the artifact at
+/// the workspace root should anchor the path (the bench targets use
+/// `concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_*.json")`).
+pub fn write_json(path: &str, recs: &[BenchRecord]) -> std::io::Result<()> {
+    std::fs::write(path, records_json(recs))
+}
+
 /// Format milliseconds with adaptive precision.
 pub fn fmt_ms(ms: f64) -> String {
     if ms < 0.1 {
@@ -206,6 +279,38 @@ mod tests {
         let lines: Vec<&str> = s.lines().collect();
         assert_eq!(lines.len(), 4);
         assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn records_json_is_well_formed() {
+        let recs = vec![
+            BenchRecord {
+                name: "conv\"x\"".into(),
+                n: 4096,
+                mean_ns: 1234.56,
+                median_ns: 1200.0,
+                p95_ns: 2000.0,
+            },
+            BenchRecord {
+                name: "plain".into(),
+                n: 64,
+                mean_ns: 10.0,
+                median_ns: 9.0,
+                p95_ns: 11.0,
+            },
+        ];
+        let s = records_json(&recs);
+        assert!(s.starts_with("[\n") && s.ends_with("]\n"), "{s}");
+        assert_eq!(s.matches("\"name\"").count(), 2);
+        assert_eq!(s.matches("\"mean_ns\"").count(), 2);
+        assert_eq!(s.matches("\"median_ns\"").count(), 2);
+        assert!(s.contains("conv\\\"x\\\""), "quotes must be escaped: {s}");
+        assert!(s.contains("\"n\": 4096"));
+        assert!(s.contains("\"mean_ns\": 1234.6"));
+        assert!(s.contains("\"median_ns\": 1200.0"));
+        // Balanced braces: one pair per record.
+        assert_eq!(s.matches('{').count(), 2);
+        assert_eq!(s.matches('}').count(), 2);
     }
 
     #[test]

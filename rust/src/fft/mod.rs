@@ -1,16 +1,28 @@
 //! Native Rust FFT / convolution substrate.
 //!
-//! Three roles (DESIGN.md §4):
+//! Four roles (DESIGN.md §4):
 //!
 //! 1. **Oracle** for property tests — an independent implementation of the
 //!    same math the Pallas kernels compute (radix-2 FFT, Monarch
 //!    decomposition, r2c packing), checked against the O(N²) definition.
+//!    The naive `monarch_*` functions in this file re-derive every twiddle
+//!    with [`Cpx::cis`] inside the inner loop; they are deliberately kept
+//!    that way — simple, obviously-correct reference math.
 //! 2. **"Fusion-only" ablation baseline** (Table 3's cuFFTdx row): a fused
 //!    single-pass FFT convolution that does *not* use the matrix
 //!    decomposition — the thing FlashFFTConv beats once matmul units enter.
 //! 3. **Coordinator utilities** — host-side spectrum manipulation for the
 //!    partial/frequency-sparse workflows (truncating or masking kernels
 //!    without re-entering Python).
+//! 4. **Planned hot path** ([`plan`] / [`gemm`]) — the §3.1 recasting of
+//!    the Monarch FFT as GEMMs against precomputed per-stage factor
+//!    matrices and twiddle vectors, batched over many rows, with r2c
+//!    half-spectrum packing for real signals. This is what the native
+//!    engines and the model zoo actually execute; every planned path is
+//!    property-tested against the role-1 oracles.
+
+pub mod gemm;
+pub mod plan;
 
 use crate::bail;
 use crate::util::Rng;

@@ -1,0 +1,723 @@
+//! Plan-based GEMM execution layer for the Monarch FFT (§3.1) — the
+//! module's *planned hot path* role.
+//!
+//! The naive `monarch_fft2/3` oracles re-derive every twiddle factor with
+//! `Cpx::cis` (a sin+cos pair) inside the innermost multiply-accumulate
+//! and transform one row at a time. An [`FftPlan`] instead precomputes,
+//! once per `(length, factor list)`, the per-stage DFT factor matrices
+//! `F_{N_i}` and twiddle vectors, then executes each Monarch stage as a
+//! split-complex GEMM ([`super::gemm`]) over **many rows at once** — no
+//! trig on the hot path, and every stage matrix is amortized across the
+//! whole `(batch, head)` row fan-out, exactly the batched-matmul framing
+//! the paper's kernels use on tensor cores.
+//!
+//! [`RealConvPlan`] adds r2c/c2r half-spectrum packing: a real length-N
+//! transform rides a length-N/2 *complex* plan (two real samples packed
+//! per complex lane) plus a trig-free unpack against precomputed
+//! split-radix twiddles, halving the stage work for every real conv
+//! path. Plans are cached in process-wide registries ([`plan`] /
+//! [`real_plan`]), so engines, the model zoo, and the benches share one
+//! set of precomputed matrices per shape.
+//!
+//! Correctness story: every public entry point here is property-tested
+//! against the naive oracles in `fft::` (see `tests/plan_layer.rs` and
+//! `tests/proptests.rs`) — layout, values, round trips, and the
+//! block-sparse inverse all match to well under 1e-8.
+
+use std::collections::HashMap;
+use std::f64::consts::PI;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::gemm::{fmadd, matmul_sc};
+use super::{is_pow2, try_monarch_factors};
+use crate::bail;
+
+/// One Monarch stage: the DFT factor matrix over one digit, its inverse
+/// (with the 1/N_i normalization folded in), and the twiddle vector
+/// connecting this digit to the digits below it (empty for the innermost
+/// stage, whose twiddle is identically one).
+struct Stage {
+    /// Factor size N_i.
+    n1: usize,
+    /// Product of the remaining (inner) factors.
+    m: usize,
+    f_re: Vec<f64>,
+    f_im: Vec<f64>,
+    fi_re: Vec<f64>,
+    fi_im: Vec<f64>,
+    tw_re: Vec<f64>,
+    tw_im: Vec<f64>,
+}
+
+impl Stage {
+    fn new(n1: usize, m: usize) -> Self {
+        let mut f_re = vec![0.0; n1 * n1];
+        let mut f_im = vec![0.0; n1 * n1];
+        let mut fi_re = vec![0.0; n1 * n1];
+        let mut fi_im = vec![0.0; n1 * n1];
+        let scale = 1.0 / n1 as f64;
+        for k in 0..n1 {
+            for j in 0..n1 {
+                // (k*j) mod n1 keeps the trig argument small — same
+                // value, less floating-point error at large factors.
+                let ang = 2.0 * PI * ((k * j) % n1) as f64 / n1 as f64;
+                f_re[k * n1 + j] = ang.cos();
+                f_im[k * n1 + j] = -ang.sin();
+                fi_re[k * n1 + j] = ang.cos() * scale;
+                fi_im[k * n1 + j] = ang.sin() * scale;
+            }
+        }
+        let (mut tw_re, mut tw_im) = (vec![], vec![]);
+        if m > 1 {
+            let len = n1 * m;
+            tw_re.reserve(len);
+            tw_im.reserve(len);
+            for k1 in 0..n1 {
+                for j in 0..m {
+                    let ang = 2.0 * PI * ((k1 * j) % len) as f64 / len as f64;
+                    tw_re.push(ang.cos());
+                    tw_im.push(-ang.sin());
+                }
+            }
+        }
+        Self { n1, m, f_re, f_im, fi_re, fi_im, tw_re, tw_im }
+    }
+}
+
+/// A precomputed Monarch FFT plan over an explicit factor list: one
+/// [`Stage`] per factor, executed as batched GEMMs in both directions.
+/// The per-row output layout is the same digit permutation as
+/// `monarch_fft2`/`monarch_fft3` (see [`FftPlan::layout_order`]), for
+/// any order.
+pub struct FftPlan {
+    n: usize,
+    factors: Vec<usize>,
+    stages: Vec<Stage>,
+}
+
+/// `order[slot]` = true DFT frequency at layout slot `slot`, for an
+/// arbitrary factor list (generalizes `monarch_order2`/`monarch_order3`).
+fn layout_order_of(factors: &[usize]) -> Vec<usize> {
+    if factors.len() <= 1 {
+        return (0..factors.first().copied().unwrap_or(1)).collect();
+    }
+    let n1 = factors[0];
+    let inner = layout_order_of(&factors[1..]);
+    let m = inner.len();
+    let mut out = vec![0usize; n1 * m];
+    for k1 in 0..n1 {
+        for (j, &f2) in inner.iter().enumerate() {
+            out[k1 * m + j] = k1 + n1 * f2;
+        }
+    }
+    out
+}
+
+impl FftPlan {
+    /// Plan for an `n`-point transform over explicit power-of-two
+    /// factors (prefer [`plan`], which caches by `(n, order)` and picks
+    /// the balanced factorization).
+    pub fn new(n: usize, factors: Vec<usize>) -> crate::Result<Self> {
+        if factors.is_empty() || factors.iter().product::<usize>() != n {
+            bail!("fft plan: factors {factors:?} do not multiply to n = {n}");
+        }
+        if !factors.iter().all(|&f| is_pow2(f)) {
+            bail!("fft plan: factors {factors:?} must all be powers of two");
+        }
+        // A factor of 1 mid-list would alias the innermost-stage layout;
+        // only the degenerate n = 1 plan carries one.
+        if factors.len() > 1 && factors.iter().any(|&f| f == 1) {
+            bail!("fft plan: factors {factors:?} must be > 1 (except the n = 1 plan)");
+        }
+        let mut stages = Vec::with_capacity(factors.len());
+        let mut m = n;
+        for &f in &factors {
+            m /= f;
+            stages.push(Stage::new(f, m));
+        }
+        Ok(Self { n, factors, stages })
+    }
+
+    /// Transform length.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The planned factorization `[N_1, ..., N_p]`.
+    pub fn factors(&self) -> &[usize] {
+        &self.factors
+    }
+
+    /// `order[slot]` = true DFT frequency at layout slot `slot` of one
+    /// transformed row (matches `monarch_order2/3` on their factor
+    /// lists).
+    pub fn layout_order(&self) -> Vec<usize> {
+        layout_order_of(&self.factors)
+    }
+
+    /// Forward Monarch transform of `rows` stacked length-`n` rows held
+    /// as split-complex planes, in place. Per-row output layout is
+    /// [`Self::layout_order`] — identical to `monarch_fft2/3`.
+    pub fn forward(&self, re: &mut [f64], im: &mut [f64], rows: usize) {
+        self.run_forward(re, im, rows);
+    }
+
+    /// Inverse of [`Self::forward`] (1/N normalization included).
+    pub fn inverse(&self, re: &mut [f64], im: &mut [f64], rows: usize) {
+        self.run_inverse(re, im, rows);
+    }
+
+    fn check_planes(&self, re: &[f64], im: &[f64], rows: usize) {
+        assert_eq!(re.len(), rows * self.n, "re plane size");
+        assert_eq!(im.len(), rows * self.n, "im plane size");
+    }
+
+    fn run_forward(&self, re: &mut [f64], im: &mut [f64], rows: usize) {
+        self.check_planes(re, im, rows);
+        if rows == 0 {
+            return;
+        }
+        let total = rows * self.n;
+        let mut scr_re = vec![0.0f64; total];
+        let mut scr_im = vec![0.0f64; total];
+        let mut nsub = rows;
+        for st in &self.stages {
+            let len = st.n1 * st.m;
+            if st.m == 1 {
+                // Innermost stage: every sub-row through one stacked
+                // GEMM (the DFT matrix is symmetric, so the row
+                // transform is a right-multiplication).
+                matmul_sc(
+                    nsub, st.n1, st.n1, re, im, st.n1, &st.f_re, &st.f_im, st.n1,
+                    &mut scr_re, &mut scr_im, st.n1,
+                );
+                re.copy_from_slice(&scr_re);
+                im.copy_from_slice(&scr_im);
+            } else {
+                for r in 0..nsub {
+                    let o = r * len;
+                    // A = F · X over this sub-row's (n1, m) matrix.
+                    matmul_sc(
+                        st.n1, st.n1, st.m,
+                        &st.f_re, &st.f_im, st.n1,
+                        &re[o..o + len], &im[o..o + len], st.m,
+                        &mut scr_re[o..o + len], &mut scr_im[o..o + len], st.m,
+                    );
+                    // Twiddle back into the data planes.
+                    for idx in 0..len {
+                        let (xr, xi) = (scr_re[o + idx], scr_im[o + idx]);
+                        let (tr, ti) = (st.tw_re[idx], st.tw_im[idx]);
+                        re[o + idx] = fmadd(xr, tr, -(xi * ti));
+                        im[o + idx] = fmadd(xr, ti, xi * tr);
+                    }
+                }
+                nsub *= st.n1;
+            }
+        }
+    }
+
+    fn run_inverse(&self, re: &mut [f64], im: &mut [f64], rows: usize) {
+        self.check_planes(re, im, rows);
+        if rows == 0 {
+            return;
+        }
+        let total = rows * self.n;
+        let mut scr_re = vec![0.0f64; total];
+        let mut scr_im = vec![0.0f64; total];
+        // Sub-row count entering each stage on the forward pass.
+        let mut nsub_at = Vec::with_capacity(self.stages.len());
+        let mut nsub = rows;
+        for st in &self.stages {
+            nsub_at.push(nsub);
+            if st.m > 1 {
+                nsub *= st.n1;
+            }
+        }
+        for (s, st) in self.stages.iter().enumerate().rev() {
+            let len = st.n1 * st.m;
+            if st.m == 1 {
+                matmul_sc(
+                    nsub_at[s], st.n1, st.n1, re, im, st.n1, &st.fi_re, &st.fi_im,
+                    st.n1, &mut scr_re, &mut scr_im, st.n1,
+                );
+                re.copy_from_slice(&scr_re);
+                im.copy_from_slice(&scr_im);
+            } else {
+                for r in 0..nsub_at[s] {
+                    let o = r * len;
+                    // Undo the stage twiddle (conjugate) in place...
+                    for idx in 0..len {
+                        let (xr, xi) = (re[o + idx], im[o + idx]);
+                        let (tr, ti) = (st.tw_re[idx], st.tw_im[idx]);
+                        re[o + idx] = fmadd(xr, tr, xi * ti);
+                        im[o + idx] = fmadd(xi, tr, -(xr * ti));
+                    }
+                    // ...then the inverse factor matrix.
+                    matmul_sc(
+                        st.n1, st.n1, st.m,
+                        &st.fi_re, &st.fi_im, st.n1,
+                        &re[o..o + len], &im[o..o + len], st.m,
+                        &mut scr_re[o..o + len], &mut scr_im[o..o + len], st.m,
+                    );
+                    re[o..o + len].copy_from_slice(&scr_re[o..o + len]);
+                    im[o..o + len].copy_from_slice(&scr_im[o..o + len]);
+                }
+            }
+        }
+    }
+
+    /// Inverse of an order-2 planned transform on a *block-sparse*
+    /// spectrum: entries at layout row `>= keep_rows` or column
+    /// `>= keep_cols` are known zero and are never read, and both
+    /// inverse stages run only the kept block's share of the GEMM work —
+    /// the planned counterpart of `monarch_ifft2_block` (§3.3 / Table 9
+    /// block skipping), realized by multiplying against *slices* of the
+    /// precomputed stage matrices.
+    pub fn inverse2_block(
+        &self,
+        re: &mut [f64],
+        im: &mut [f64],
+        rows: usize,
+        keep_rows: usize,
+        keep_cols: usize,
+    ) {
+        assert_eq!(self.stages.len(), 2, "block inverse requires an order-2 plan");
+        self.check_planes(re, im, rows);
+        let (s0, s1) = (&self.stages[0], &self.stages[1]);
+        let (n1, n2) = (s0.n1, s0.m);
+        assert!(keep_rows <= n1 && keep_cols <= n2, "kept block out of range");
+        if keep_rows == 0 || keep_cols == 0 {
+            re.fill(0.0);
+            im.fill(0.0);
+            return;
+        }
+        let mut a_re = vec![0.0f64; keep_rows * n2];
+        let mut a_im = vec![0.0f64; keep_rows * n2];
+        for r in 0..rows {
+            let o = r * self.n;
+            // Inner-stage inverse restricted to the kept block:
+            // A = Y[:kr, :kc] · FI2[:kc, :] (strided reads confine the
+            // GEMM to the block).
+            matmul_sc(
+                keep_rows, keep_cols, n2,
+                &re[o..o + self.n], &im[o..o + self.n], n2,
+                &s1.fi_re, &s1.fi_im, n2,
+                &mut a_re, &mut a_im, n2,
+            );
+            // Undo the outer-stage twiddle on the kept rows only.
+            for idx in 0..keep_rows * n2 {
+                let (xr, xi) = (a_re[idx], a_im[idx]);
+                let (tr, ti) = (s0.tw_re[idx], s0.tw_im[idx]);
+                a_re[idx] = fmadd(xr, tr, xi * ti);
+                a_im[idx] = fmadd(xi, tr, -(xr * ti));
+            }
+            // Outer-stage inverse over the kept rows: X = FI1[:, :kr] · A.
+            matmul_sc(
+                n1, keep_rows, n2,
+                &s0.fi_re, &s0.fi_im, n1,
+                &a_re, &a_im, n2,
+                &mut re[o..o + self.n], &mut im[o..o + self.n], n2,
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// r2c / c2r half-spectrum packing
+// ---------------------------------------------------------------------------
+
+/// r2c/c2r convolution plan for real signals of `fft_len` points: packs
+/// consecutive real sample pairs into one complex lane, runs the
+/// length-N/2 complex Monarch plan, and unpacks to the `N/2 + 1`-bin
+/// half spectrum with precomputed twiddles — real signals do half the
+/// stage work and the spectrum product touches half the bins.
+pub struct RealConvPlan {
+    fft_len: usize,
+    nh: usize,
+    bins: usize,
+    inner: Arc<FftPlan>,
+    /// Natural frequency `k` (0..N/2) → inner-plan layout slot.
+    slot_of: Vec<usize>,
+    /// Unpack twiddles `e^{-2πik/N}`, `k = 0..=N/2`.
+    w_re: Vec<f64>,
+    w_im: Vec<f64>,
+}
+
+impl RealConvPlan {
+    fn new(fft_len: usize, order: usize) -> crate::Result<Self> {
+        if !is_pow2(fft_len) || fft_len < 2 {
+            bail!("real plan: fft length {fft_len} must be an even power of two");
+        }
+        let nh = fft_len / 2;
+        let inner = plan(nh, order)?;
+        let mut slot_of = vec![0usize; nh];
+        for (slot, &freq) in inner.layout_order().iter().enumerate() {
+            slot_of[freq] = slot;
+        }
+        let bins = nh + 1;
+        let mut w_re = Vec::with_capacity(bins);
+        let mut w_im = Vec::with_capacity(bins);
+        for k in 0..bins {
+            let ang = 2.0 * PI * k as f64 / fft_len as f64;
+            w_re.push(ang.cos());
+            w_im.push(-ang.sin());
+        }
+        Ok(Self { fft_len, nh, bins, inner, slot_of, w_re, w_im })
+    }
+
+    /// FFT length `N` this plan transforms.
+    pub fn fft_len(&self) -> usize {
+        self.fft_len
+    }
+
+    /// Half-spectrum bin count (`N/2 + 1`).
+    pub fn bins(&self) -> usize {
+        self.bins
+    }
+
+    /// The inner complex plan (length `N/2`).
+    pub fn inner(&self) -> &FftPlan {
+        &self.inner
+    }
+
+    /// Half spectra of `rows` stacked real length-`N` rows: returns
+    /// `(re, im)` planes of shape `(rows, bins)` in natural frequency
+    /// order `k = 0..=N/2` (matching the leading bins of `rfft_full`).
+    pub fn rfft_rows(&self, x: &[f64], rows: usize) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(x.len(), rows * self.fft_len, "input rows size");
+        let nh = self.nh;
+        // Pack: z[j] = x[2j] + i·x[2j+1].
+        let mut zre = vec![0.0f64; rows * nh];
+        let mut zim = vec![0.0f64; rows * nh];
+        for r in 0..rows {
+            let xo = r * self.fft_len;
+            let zo = r * nh;
+            for j in 0..nh {
+                zre[zo + j] = x[xo + 2 * j];
+                zim[zo + j] = x[xo + 2 * j + 1];
+            }
+        }
+        self.inner.forward(&mut zre, &mut zim, rows);
+        // Unpack: X[k] = Xe[k] + w^k · Xo[k] over the even/odd split.
+        let mut sre = vec![0.0f64; rows * self.bins];
+        let mut sim = vec![0.0f64; rows * self.bins];
+        for r in 0..rows {
+            let zo = r * nh;
+            let so = r * self.bins;
+            for k in 0..self.bins {
+                let a = self.slot_of[k % nh];
+                let b = self.slot_of[(nh - k) % nh];
+                let (zkr, zki) = (zre[zo + a], zim[zo + a]);
+                let (znr, zni) = (zre[zo + b], zim[zo + b]);
+                let xe_r = 0.5 * (zkr + znr);
+                let xe_i = 0.5 * (zki - zni);
+                let xo_r = 0.5 * (zki + zni);
+                let xo_i = 0.5 * (znr - zkr);
+                let (wr, wi) = (self.w_re[k], self.w_im[k]);
+                sre[so + k] = xe_r + wr * xo_r - wi * xo_i;
+                sim[so + k] = xe_i + wr * xo_i + wi * xo_r;
+            }
+        }
+        (sre, sim)
+    }
+
+    /// Real rows from half spectra — the inverse of [`Self::rfft_rows`].
+    pub fn irfft_rows(&self, sre: &[f64], sim: &[f64], rows: usize) -> Vec<f64> {
+        assert_eq!(sre.len(), rows * self.bins, "re spectrum size");
+        assert_eq!(sim.len(), rows * self.bins, "im spectrum size");
+        let nh = self.nh;
+        let mut zre = vec![0.0f64; rows * nh];
+        let mut zim = vec![0.0f64; rows * nh];
+        for r in 0..rows {
+            let so = r * self.bins;
+            let zo = r * nh;
+            for k in 0..nh {
+                let (ar, ai) = (sre[so + k], sim[so + k]);
+                let (br, bi) = (sre[so + nh - k], sim[so + nh - k]);
+                let xe_r = 0.5 * (ar + br);
+                let xe_i = 0.5 * (ai - bi);
+                let dr = ar - br;
+                let di = ai + bi;
+                let (wr, wi) = (self.w_re[k], self.w_im[k]);
+                // Xo = (X[k] - conj(X[N/2-k])) · conj(w^k) / 2.
+                let xo_r = 0.5 * (dr * wr + di * wi);
+                let xo_i = 0.5 * (di * wr - dr * wi);
+                let slot = self.slot_of[k];
+                zre[zo + slot] = xe_r - xo_i;
+                zim[zo + slot] = xe_i + xo_r;
+            }
+        }
+        self.inner.inverse(&mut zre, &mut zim, rows);
+        let mut y = vec![0.0f64; rows * self.fft_len];
+        for r in 0..rows {
+            let zo = r * nh;
+            let yo = r * self.fft_len;
+            for j in 0..nh {
+                y[yo + 2 * j] = zre[zo + j];
+                y[yo + 2 * j + 1] = zim[zo + j];
+            }
+        }
+        y
+    }
+
+    /// Circular convolution of `rows` stacked real rows against per-head
+    /// filter half spectra: batched r2c, pointwise half-spectrum
+    /// product, batched c2r. `head_of` maps a row index to its filter
+    /// row inside `(k_re, k_im)` (planes of shape `(heads, bins)`,
+    /// typically from [`Self::rfft_rows`] over the padded filter bank).
+    /// Per-row results are independent of how callers block the rows, so
+    /// parallel and sequential fan-out agree bitwise.
+    pub fn conv_rows(
+        &self,
+        x: &[f64],
+        rows: usize,
+        k_re: &[f64],
+        k_im: &[f64],
+        head_of: impl Fn(usize) -> usize,
+    ) -> Vec<f64> {
+        let (mut sre, mut sim) = self.rfft_rows(x, rows);
+        for r in 0..rows {
+            let so = r * self.bins;
+            let ko = head_of(r) * self.bins;
+            for k in 0..self.bins {
+                let (ar, ai) = (sre[so + k], sim[so + k]);
+                let (br, bi) = (k_re[ko + k], k_im[ko + k]);
+                sre[so + k] = ar * br - ai * bi;
+                sim[so + k] = ar * bi + ai * br;
+            }
+        }
+        self.irfft_rows(&sre, &sim, rows)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-wide plan registries
+// ---------------------------------------------------------------------------
+
+fn plan_registry() -> &'static Mutex<HashMap<(usize, usize), Arc<FftPlan>>> {
+    static R: OnceLock<Mutex<HashMap<(usize, usize), Arc<FftPlan>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn real_registry() -> &'static Mutex<HashMap<(usize, usize), Arc<RealConvPlan>>> {
+    static R: OnceLock<Mutex<HashMap<(usize, usize), Arc<RealConvPlan>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Largest Monarch order `n` supports, used to clamp cost-model choices
+/// (callers pass the order for the *conv* FFT length; the inner complex
+/// length of an r2c plan is half that and may not split as deep).
+fn clamp_order(n: usize, order: usize) -> usize {
+    let logn = (n.max(2).trailing_zeros() as usize).max(1);
+    order.clamp(1, logn)
+}
+
+/// Process-wide cached plan for an `n`-point complex transform at a
+/// Monarch `order` (clamped to what `n` supports), with the balanced
+/// factorization. Built once per shape; every later call is a map hit.
+pub fn plan(n: usize, order: usize) -> crate::Result<Arc<FftPlan>> {
+    if !is_pow2(n) {
+        bail!("fft plan: length {n} must be a positive power of two");
+    }
+    let order = clamp_order(n, order);
+    let key = (n, order);
+    let mut reg = plan_registry().lock().unwrap();
+    if let Some(p) = reg.get(&key) {
+        return Ok(Arc::clone(p));
+    }
+    let p = Arc::new(FftPlan::new(n, try_monarch_factors(n, order)?)?);
+    reg.insert(key, Arc::clone(&p));
+    Ok(p)
+}
+
+/// Process-wide cached r2c/c2r plan for real signals of `fft_len`
+/// points, with the inner complex plan at the given Monarch order.
+pub fn real_plan(fft_len: usize, order: usize) -> crate::Result<Arc<RealConvPlan>> {
+    if !is_pow2(fft_len) || fft_len < 2 {
+        bail!("real plan: fft length {fft_len} must be an even power of two");
+    }
+    let order = clamp_order(fft_len / 2, order);
+    let key = (fft_len, order);
+    let mut reg = real_registry().lock().unwrap();
+    if let Some(p) = reg.get(&key) {
+        return Ok(Arc::clone(p));
+    }
+    let p = Arc::new(RealConvPlan::new(fft_len, order)?);
+    reg.insert(key, Arc::clone(&p));
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{self, Cpx};
+    use crate::util::Rng;
+
+    fn planes(x: &[Cpx]) -> (Vec<f64>, Vec<f64>) {
+        (x.iter().map(|c| c.re).collect(), x.iter().map(|c| c.im).collect())
+    }
+
+    #[test]
+    fn layout_order_matches_monarch_orders() {
+        assert_eq!(layout_order_of(&[4, 8]), fft::monarch_order2(4, 8));
+        assert_eq!(layout_order_of(&[2, 4, 8]), fft::monarch_order3(2, 4, 8));
+        assert_eq!(layout_order_of(&[8]), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn planned_forward_matches_naive_monarch2() {
+        let mut rng = Rng::new(21);
+        let (n1, n2) = (8usize, 16usize);
+        let n = n1 * n2;
+        let rows = 3usize;
+        let x: Vec<Cpx> =
+            (0..rows * n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+        let (mut re, mut im) = planes(&x);
+        let p = FftPlan::new(n, vec![n1, n2]).unwrap();
+        p.forward(&mut re, &mut im, rows);
+        for r in 0..rows {
+            let want = fft::monarch_fft2(&x[r * n..(r + 1) * n], n1, n2);
+            for (j, w) in want.iter().enumerate() {
+                let d = (re[r * n + j] - w.re).abs().max((im[r * n + j] - w.im).abs());
+                assert!(d < 1e-9, "row {r} slot {j}: {d}");
+            }
+        }
+        p.inverse(&mut re, &mut im, rows);
+        for (i, c) in x.iter().enumerate() {
+            assert!((re[i] - c.re).abs() < 1e-10 && (im[i] - c.im).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn planned_forward_matches_naive_monarch3() {
+        let mut rng = Rng::new(22);
+        let (n1, n2, n3) = (2usize, 8usize, 8usize);
+        let n = n1 * n2 * n3;
+        let x: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+        let (mut re, mut im) = planes(&x);
+        let p = FftPlan::new(n, vec![n1, n2, n3]).unwrap();
+        p.forward(&mut re, &mut im, 1);
+        let want = fft::monarch_fft3(&x, n1, n2, n3);
+        for (j, w) in want.iter().enumerate() {
+            let d = (re[j] - w.re).abs().max((im[j] - w.im).abs());
+            assert!(d < 1e-9, "slot {j}: {d}");
+        }
+        p.inverse(&mut re, &mut im, 1);
+        for (i, c) in x.iter().enumerate() {
+            assert!((re[i] - c.re).abs() < 1e-10 && (im[i] - c.im).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn r2c_matches_rfft_full_and_round_trips() {
+        let mut rng = Rng::new(23);
+        for &(n, order) in &[(64usize, 1usize), (128, 2), (256, 3), (1024, 2)] {
+            let rp = real_plan(n, order).unwrap();
+            let rows = 2usize;
+            let x: Vec<f64> = (0..rows * n).map(|_| rng.normal()).collect();
+            let (sre, sim) = rp.rfft_rows(&x, rows);
+            for r in 0..rows {
+                let full = fft::rfft_full(&x[r * n..(r + 1) * n]);
+                for k in 0..rp.bins() {
+                    let d = (sre[r * rp.bins() + k] - full[k].re)
+                        .abs()
+                        .max((sim[r * rp.bins() + k] - full[k].im).abs());
+                    assert!(d < 1e-9, "n={n} order={order} row={r} bin={k}: {d}");
+                }
+            }
+            let y = rp.irfft_rows(&sre, &sim, rows);
+            for (a, b) in y.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-10, "n={n} order={order}");
+            }
+        }
+    }
+
+    #[test]
+    fn planned_conv_matches_direct() {
+        let mut rng = Rng::new(24);
+        let n = 256usize;
+        let rp = real_plan(n, 2).unwrap();
+        let (rows, heads) = (4usize, 2usize);
+        let u: Vec<f64> = (0..rows * n).map(|_| rng.normal()).collect();
+        let kbank: Vec<f64> = (0..heads * n).map(|_| rng.normal()).collect();
+        let (kre, kim) = rp.rfft_rows(&kbank, heads);
+        let y = rp.conv_rows(&u, rows, &kre, &kim, |r| r % heads);
+        for r in 0..rows {
+            let want = fft::direct_conv(
+                &u[r * n..(r + 1) * n],
+                &kbank[(r % heads) * n..(r % heads + 1) * n],
+            );
+            let err = fft::max_abs_diff(&y[r * n..(r + 1) * n], &want);
+            assert!(err < 1e-8, "row {r}: {err}");
+        }
+    }
+
+    #[test]
+    fn block_inverse_matches_naive_block_oracle() {
+        let mut rng = Rng::new(25);
+        for &(n1, n2, kr, kc) in &[(8usize, 8usize, 4usize, 2usize), (8, 4, 2, 3), (4, 4, 4, 4)]
+        {
+            let n = n1 * n2;
+            let p = FftPlan::new(n, vec![n1, n2]).unwrap();
+            let mut spec: Vec<Cpx> =
+                (0..n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+            for r in 0..n1 {
+                for c in 0..n2 {
+                    if r >= kr || c >= kc {
+                        spec[r * n2 + c] = Cpx::ZERO;
+                    }
+                }
+            }
+            let (mut re, mut im) = planes(&spec);
+            p.inverse2_block(&mut re, &mut im, 1, kr, kc);
+            let want = fft::monarch_ifft2_block(&spec, n1, n2, kr, kc);
+            for (j, w) in want.iter().enumerate() {
+                let d = (re[j] - w.re).abs().max((im[j] - w.im).abs());
+                assert!(d < 1e-10, "({n1},{n2},{kr},{kc}) slot {j}: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_inverse_never_reads_outside_the_kept_block() {
+        let mut rng = Rng::new(26);
+        let (n1, n2, kr, kc) = (4usize, 8usize, 2usize, 3usize);
+        let n = n1 * n2;
+        let p = FftPlan::new(n, vec![n1, n2]).unwrap();
+        let spec: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+        let (mut re1, mut im1) = planes(&spec);
+        p.inverse2_block(&mut re1, &mut im1, 1, kr, kc);
+        let (mut re2, mut im2) = planes(&spec);
+        for r in 0..n1 {
+            for c in 0..n2 {
+                if r >= kr || c >= kc {
+                    re2[r * n2 + c] = 1e9;
+                    im2[r * n2 + c] = -1e9;
+                }
+            }
+        }
+        p.inverse2_block(&mut re2, &mut im2, 1, kr, kc);
+        assert_eq!(re1, re2);
+        assert_eq!(im1, im2);
+    }
+
+    #[test]
+    fn registries_cache_by_shape() {
+        let a = plan(512, 2).unwrap();
+        let b = plan(512, 2).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = real_plan(512, 2).unwrap();
+        let d = real_plan(512, 2).unwrap();
+        assert!(Arc::ptr_eq(&c, &d));
+        // Deep orders clamp to what the inner length supports.
+        let tiny = real_plan(8, 3).unwrap();
+        assert_eq!(tiny.inner().factors().to_vec(), vec![2, 2]);
+    }
+
+    #[test]
+    fn plan_rejects_bad_shapes() {
+        assert!(plan(12, 2).is_err());
+        assert!(FftPlan::new(16, vec![4, 8]).is_err());
+        assert!(real_plan(1, 2).is_err());
+    }
+}

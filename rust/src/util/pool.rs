@@ -104,6 +104,24 @@ where
     out.into_iter().map(|r| r.expect("all slots filled")).collect()
 }
 
+/// Contiguous row ranges for block fan-out: up to `nblocks` chunks of
+/// `ceil(rows / nblocks)` rows (the last may be short). Batched engines
+/// split work this way — blocks, not single rows — so every worker
+/// amortizes per-call setup across a whole block; per-row math is
+/// independent of the blocking, so any block count produces bitwise
+/// identical results.
+pub fn row_blocks(rows: usize, nblocks: usize) -> Vec<std::ops::Range<usize>> {
+    if rows == 0 {
+        return vec![];
+    }
+    let nblocks = nblocks.clamp(1, rows);
+    let chunk = (rows + nblocks - 1) / nblocks;
+    (0..nblocks)
+        .map(|i| (i * chunk)..((i + 1) * chunk).min(rows))
+        .filter(|r| !r.is_empty())
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +165,18 @@ mod tests {
     fn parallel_map_empty() {
         let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn row_blocks_cover_exactly_once_in_order() {
+        for rows in [0usize, 1, 2, 7, 8, 32, 33] {
+            for nblocks in [1usize, 2, 3, 8, 100] {
+                let blocks = row_blocks(rows, nblocks);
+                let flat: Vec<usize> = blocks.iter().cloned().flatten().collect();
+                assert_eq!(flat, (0..rows).collect::<Vec<_>>(), "rows={rows} nb={nblocks}");
+                assert!(blocks.len() <= nblocks.max(1));
+            }
+        }
+        assert_eq!(row_blocks(8, 2), vec![0..4, 4..8]);
     }
 }

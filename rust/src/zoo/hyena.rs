@@ -13,8 +13,10 @@
 //! implementations can be benchmarked and cross-checked against each
 //! other on identical parameters.
 
-use crate::fft::{self, Cpx};
-use crate::util::pool::parallel_map;
+use std::sync::Arc;
+
+use crate::fft::{self, plan::RealConvPlan, Cpx};
+use crate::util::pool::{parallel_map, row_blocks};
 use crate::util::Rng;
 use crate::{bail, ensure};
 
@@ -127,13 +129,20 @@ pub fn init_params(cfg: &HyenaConfig, seed: u64) -> Vec<(String, Vec<usize>, Vec
 /// The model: config plus a filter-spectrum cache (serving installs one
 /// parameter set and reuses it for every batch, so the per-channel long
 /// filter FFTs are paid once, exactly like the conv engine's cached
-/// `k_f`).
+/// `k_f`). The monarch variant executes its long convs through the
+/// plan-based GEMM layer ([`crate::fft::plan`]): one batched r2c conv
+/// per layer over all `(batch, channel)` rows, split into row blocks for
+/// the worker pool; the baseline keeps the per-row radix-2 path.
 pub struct HyenaLm {
     cfg: HyenaConfig,
-    n1: usize,
-    n2: usize,
+    /// Planned r2c executor (monarch variant; `None` for the baseline).
+    plan: Option<Arc<RealConvPlan>>,
     cached_k: Vec<f32>,
+    /// Baseline per-layer, per-channel radix-2 spectra.
     spectra: Vec<Vec<Vec<Cpx>>>,
+    /// Planned per-layer filter half-spectrum planes, `(dim, bins)` each.
+    spec_re: Vec<Vec<f64>>,
+    spec_im: Vec<Vec<f64>>,
 }
 
 impl HyenaLm {
@@ -146,42 +155,47 @@ impl HyenaLm {
             cfg.seq
         );
         ensure!(cfg.dim >= 1 && cfg.vocab >= 2, "degenerate hyena config {cfg:?}");
-        let fs = fft::try_monarch_factors(2 * cfg.seq, 2)?;
-        Ok(Self { cfg, n1: fs[0], n2: fs[1], cached_k: vec![], spectra: vec![] })
+        let plan = if cfg.baseline {
+            None
+        } else {
+            // The §3.2 cost model picks the Monarch order for the causal
+            // FFT length, same dispatch as the conv engines.
+            let order =
+                crate::costmodel::best_order_upto(2 * cfg.seq, &crate::costmodel::CPU, 3);
+            Some(fft::plan::real_plan(2 * cfg.seq, order)?)
+        };
+        Ok(Self {
+            cfg,
+            plan,
+            cached_k: vec![],
+            spectra: vec![],
+            spec_re: vec![],
+            spec_im: vec![],
+        })
     }
 
     pub fn config(&self) -> &HyenaConfig {
         &self.cfg
     }
 
-    /// Spectrum of one padded filter row in this variant's layout.
+    /// Spectrum of one padded filter row (baseline radix-2 path).
     fn filter_spectrum(&self, krow: &[f64]) -> Vec<Cpx> {
         let m = 2 * self.cfg.seq;
         let mut kp = krow.to_vec();
         kp.resize(m, 0.0);
-        if self.cfg.baseline {
-            fft::rfft_full(&kp)
-        } else {
-            let kc: Vec<Cpx> = kp.iter().map(|&v| Cpx::new(v, 0.0)).collect();
-            fft::monarch_fft2(&kc, self.n1, self.n2)
-        }
+        fft::rfft_full(&kp)
     }
 
-    /// Causal convolution of one gated row against a cached spectrum.
+    /// Causal convolution of one gated row against a cached spectrum
+    /// (baseline radix-2 path).
     fn conv_row(&self, g: &[f64], k_spec: &[Cpx]) -> Vec<f64> {
         let l = self.cfg.seq;
         let m = 2 * l;
         let mut gp: Vec<Cpx> = g.iter().map(|&v| Cpx::new(v, 0.0)).collect();
         gp.resize(m, Cpx::ZERO);
-        let y = if self.cfg.baseline {
-            let gf = fft::fft(&gp, false);
-            let prod: Vec<Cpx> = gf.iter().zip(k_spec).map(|(&a, &b)| a * b).collect();
-            fft::fft(&prod, true)
-        } else {
-            let gm = fft::monarch_fft2(&gp, self.n1, self.n2);
-            let prod: Vec<Cpx> = gm.iter().zip(k_spec).map(|(&a, &b)| a * b).collect();
-            fft::monarch_ifft2(&prod, self.n1, self.n2)
-        };
+        let gf = fft::fft(&gp, false);
+        let prod: Vec<Cpx> = gf.iter().zip(k_spec).map(|(&a, &b)| a * b).collect();
+        let y = fft::fft(&prod, true);
         y[..l].iter().map(|c| c.re).collect()
     }
 
@@ -200,19 +214,40 @@ impl HyenaLm {
         for lp in &p.layers {
             key.extend_from_slice(lp.k);
         }
-        self.spectra = p
-            .layers
-            .iter()
-            .map(|lp| {
-                (0..d)
-                    .map(|c| {
-                        let krow: Vec<f64> =
-                            lp.k[c * l..(c + 1) * l].iter().map(|&v| v as f64).collect();
-                        self.filter_spectrum(&krow)
-                    })
-                    .collect()
-            })
-            .collect();
+        if let Some(rp) = self.plan.clone() {
+            // Planned path: one batched r2c per layer over the padded
+            // bank (channels as rows).
+            let m = 2 * l;
+            self.spec_re.clear();
+            self.spec_im.clear();
+            for lp in &p.layers {
+                let mut kp = vec![0.0f64; d * m];
+                for c in 0..d {
+                    for t in 0..l {
+                        kp[c * m + t] = lp.k[c * l + t] as f64;
+                    }
+                }
+                let (re, im) = rp.rfft_rows(&kp, d);
+                self.spec_re.push(re);
+                self.spec_im.push(im);
+            }
+        } else {
+            self.spectra = p
+                .layers
+                .iter()
+                .map(|lp| {
+                    (0..d)
+                        .map(|c| {
+                            let krow: Vec<f64> = lp.k[c * l..(c + 1) * l]
+                                .iter()
+                                .map(|&v| v as f64)
+                                .collect();
+                            self.filter_spectrum(&krow)
+                        })
+                        .collect()
+                })
+                .collect();
+        }
         self.cached_k = key;
     }
 
@@ -275,38 +310,76 @@ impl HyenaLm {
                 }
             }
 
-            // Mixer rows: short conv, gate, long conv, output gate.
-            let spectra = &self.spectra[li];
-            let rows: Vec<(usize, usize)> =
-                (0..batch).flat_map(|b| (0..d).map(move |c| (b, c))).collect();
+            // Mixer: per `(batch, channel)` row, short conv + pre-gate
+            // then the long causal conv — batched planned GEMMs over row
+            // blocks for the monarch variant, per-row radix-2 for the
+            // baseline — then the output gate. The packing runs inside
+            // the workers so no serial pre-pass caps the fan-out. Fan
+            // rows across the pool when each one carries real FFT work;
+            // tiny models stay sequential. Blocking never changes
+            // per-row results. `conv` is the (rows, 2L) result grid.
+            let rows_n = batch * d;
+            let m = 2 * l;
+            let use_par = rows_n > 1 && l >= 512 && threads > 1;
             let this = &*self;
             let pu_ref = &pu;
-            let pv_ref = &pv;
             let pw_ref = &pw;
-            let row_out = |(b, c): (usize, usize)| -> Vec<f64> {
-                let mut g = vec![0.0f64; l];
+            let short_gate_row = |grow: &mut [f64], row: usize| {
+                let (b, c) = (row / d, row % d);
                 for t in 0..l {
                     let mut acc = 0.0f64;
                     for s in 0..sl.min(t + 1) {
                         acc += pu_ref[(b * l + t - s) * d + c]
                             * lp.short[c * sl + s] as f64;
                     }
-                    g[t] = acc * pw_ref[(b * l + t) * d + c];
+                    grow[t] = acc * pw_ref[(b * l + t) * d + c];
                 }
-                let conv = this.conv_row(&g, &spectra[c]);
-                (0..l).map(|t| pv_ref[(b * l + t) * d + c] * conv[t]).collect()
             };
-            // Fan the (batch, channel) rows across the pool when each row
-            // carries real FFT work; tiny models stay sequential.
-            let yrows: Vec<Vec<f64>> = if rows.len() > 1 && l >= 512 && threads > 1 {
-                parallel_map(rows.clone(), threads.min(rows.len()), row_out)
+            let conv: Vec<f64> = if let Some(rp) = &self.plan {
+                let kre = &self.spec_re[li];
+                let kim = &self.spec_im[li];
+                let blocks =
+                    row_blocks(rows_n, if use_par { threads.min(rows_n) } else { 1 });
+                let run = |blk: std::ops::Range<usize>| -> Vec<f64> {
+                    let mut gblk = vec![0.0f64; blk.len() * m];
+                    for (i, row) in blk.clone().enumerate() {
+                        short_gate_row(&mut gblk[i * m..i * m + l], row);
+                    }
+                    rp.conv_rows(&gblk, blk.len(), kre, kim, |i| (blk.start + i) % d)
+                };
+                let out: Vec<Vec<f64>> = if blocks.len() > 1 {
+                    parallel_map(blocks, threads.min(rows_n), run)
+                } else {
+                    blocks.into_iter().map(run).collect()
+                };
+                out.concat()
             } else {
-                rows.iter().copied().map(row_out).collect()
+                let spectra = &self.spectra[li];
+                let run = |row: usize| -> Vec<f64> {
+                    let mut grow = vec![0.0f64; l];
+                    short_gate_row(&mut grow, row);
+                    this.conv_row(&grow, &spectra[row % d])
+                };
+                let out: Vec<Vec<f64>> = if use_par {
+                    parallel_map((0..rows_n).collect(), threads.min(rows_n), run)
+                } else {
+                    (0..rows_n).map(run).collect()
+                };
+                // Re-pad the per-row results to the shared (rows, m) grid.
+                let mut full = vec![0.0f64; rows_n * m];
+                for (row, cr) in out.iter().enumerate() {
+                    full[row * m..row * m + l].copy_from_slice(cr);
+                }
+                full
             };
             let mut y = vec![0.0f64; batch * l * d];
-            for (&(b, c), row) in rows.iter().zip(&yrows) {
-                for (t, &val) in row.iter().enumerate() {
-                    y[(b * l + t) * d + c] = val;
+            for b in 0..batch {
+                for c in 0..d {
+                    let co = (b * d + c) * m;
+                    for t in 0..l {
+                        y[(b * l + t) * d + c] =
+                            pv[(b * l + t) * d + c] * conv[co + t];
+                    }
                 }
             }
             // Residual through the output projection.

@@ -347,6 +347,174 @@ fn prop_masked_spectrum_differs_from_dense_when_bins_dropped() {
 }
 
 #[test]
+fn prop_planned_order2_matches_naive_monarch() {
+    // Planned GEMM execution == the naive trig-in-the-loop oracle, both
+    // directions, at random factor shapes and batched rows.
+    prop::forall_ok(
+        "planned order-2 == naive monarch_fft2/ifft2",
+        14,
+        prop::default_cases(),
+        |rng| {
+            let n1 = gen::pow2(rng, 1, 4);
+            let n2 = gen::pow2(rng, 1, 4);
+            let n = n1 * n2;
+            (n1, n2, gen::signal(rng, 2 * n), gen::signal(rng, 2 * n))
+        },
+        |&(n1, n2, ref sre, ref sim)| {
+            let n = n1 * n2;
+            let p = fft::plan::FftPlan::new(n, vec![n1, n2]).map_err(|e| format!("{e:#}"))?;
+            let rows = 2usize;
+            let mut re = sre.clone();
+            let mut im = sim.clone();
+            p.forward(&mut re, &mut im, rows);
+            for r in 0..rows {
+                let x: Vec<fft::Cpx> = (0..n)
+                    .map(|i| fft::Cpx::new(sre[r * n + i], sim[r * n + i]))
+                    .collect();
+                let want = fft::monarch_fft2(&x, n1, n2);
+                for (j, w) in want.iter().enumerate() {
+                    let d = (re[r * n + j] - w.re).abs().max((im[r * n + j] - w.im).abs());
+                    if d > 1e-8 {
+                        return Err(format!("fwd ({n1},{n2}) row {r} slot {j}: err {d}"));
+                    }
+                }
+            }
+            // Inverse against the naive inverse, per batched row.
+            let wants: Vec<Vec<fft::Cpx>> = (0..rows)
+                .map(|r| {
+                    let spec: Vec<fft::Cpx> = (0..n)
+                        .map(|i| fft::Cpx::new(re[r * n + i], im[r * n + i]))
+                        .collect();
+                    fft::monarch_ifft2(&spec, n1, n2)
+                })
+                .collect();
+            p.inverse(&mut re, &mut im, rows);
+            for (r, want) in wants.iter().enumerate() {
+                for (j, w) in want.iter().enumerate() {
+                    let d =
+                        (re[r * n + j] - w.re).abs().max((im[r * n + j] - w.im).abs());
+                    if d > 1e-8 {
+                        return Err(format!("inv ({n1},{n2}) row {r} slot {j}: err {d}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_planned_order3_matches_naive_monarch() {
+    prop::forall_ok(
+        "planned order-3 == naive monarch_fft3/ifft3",
+        15,
+        prop::default_cases(),
+        |rng| {
+            let n1 = gen::pow2(rng, 1, 3);
+            let n2 = gen::pow2(rng, 1, 3);
+            let n3 = gen::pow2(rng, 1, 3);
+            let n = n1 * n2 * n3;
+            (n1, n2, n3, gen::signal(rng, n), gen::signal(rng, n))
+        },
+        |&(n1, n2, n3, ref sre, ref sim)| {
+            let n = n1 * n2 * n3;
+            let p = fft::plan::FftPlan::new(n, vec![n1, n2, n3])
+                .map_err(|e| format!("{e:#}"))?;
+            let x: Vec<fft::Cpx> =
+                (0..n).map(|i| fft::Cpx::new(sre[i], sim[i])).collect();
+            let mut re = sre.clone();
+            let mut im = sim.clone();
+            p.forward(&mut re, &mut im, 1);
+            let want = fft::monarch_fft3(&x, n1, n2, n3);
+            for (j, w) in want.iter().enumerate() {
+                let d = (re[j] - w.re).abs().max((im[j] - w.im).abs());
+                if d > 1e-8 {
+                    return Err(format!("fwd ({n1},{n2},{n3}) slot {j}: err {d}"));
+                }
+            }
+            let spec: Vec<fft::Cpx> =
+                (0..n).map(|i| fft::Cpx::new(re[i], im[i])).collect();
+            let want = fft::monarch_ifft3(&spec, n1, n2, n3);
+            p.inverse(&mut re, &mut im, 1);
+            for (j, w) in want.iter().enumerate() {
+                let d = (re[j] - w.re).abs().max((im[j] - w.im).abs());
+                if d > 1e-8 {
+                    return Err(format!("inv ({n1},{n2},{n3}) slot {j}: err {d}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_planned_r2c_conv_matches_naive_conv() {
+    // The full planned real path (r2c -> half-spectrum product -> c2r)
+    // == the naive fused-FFT convolution, at random lengths and orders.
+    prop::forall_ok(
+        "planned r2c conv == naive fft_conv",
+        16,
+        prop::default_cases(),
+        |rng| {
+            let n = gen::pow2(rng, 3, 10);
+            let order = 1 + gen::index(rng, 0, 3);
+            (n, order, gen::signal(rng, n), gen::signal(rng, n))
+        },
+        |&(n, order, ref u, ref k)| {
+            let rp = fft::plan::real_plan(n, order).map_err(|e| format!("{e:#}"))?;
+            let (kre, kim) = rp.rfft_rows(k, 1);
+            let y = rp.conv_rows(u, 1, &kre, &kim, |_| 0);
+            let err = fft::max_abs_diff(&y, &fft::fft_conv(u, k));
+            if err < 1e-8 {
+                Ok(())
+            } else {
+                Err(format!("n={n} order={order}: err {err}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_planned_block_inverse_matches_naive() {
+    prop::forall_ok(
+        "planned block inverse == monarch_ifft2_block",
+        17,
+        prop::default_cases(),
+        |rng| {
+            let n1 = gen::pow2(rng, 1, 4);
+            let n2 = gen::pow2(rng, 1, 4);
+            let kr = 1 + gen::index(rng, 0, n1);
+            let kc = 1 + gen::index(rng, 0, n2);
+            (n1, n2, kr, kc, gen::signal(rng, n1 * n2), gen::signal(rng, n1 * n2))
+        },
+        |&(n1, n2, kr, kc, ref sre, ref sim)| {
+            let n = n1 * n2;
+            let p = fft::plan::FftPlan::new(n, vec![n1, n2]).map_err(|e| format!("{e:#}"))?;
+            let mut spec: Vec<fft::Cpx> =
+                (0..n).map(|i| fft::Cpx::new(sre[i], sim[i])).collect();
+            for r in 0..n1 {
+                for c in 0..n2 {
+                    if r >= kr || c >= kc {
+                        spec[r * n2 + c] = fft::Cpx::ZERO;
+                    }
+                }
+            }
+            let mut re: Vec<f64> = spec.iter().map(|z| z.re).collect();
+            let mut im: Vec<f64> = spec.iter().map(|z| z.im).collect();
+            p.inverse2_block(&mut re, &mut im, 1, kr, kc);
+            let want = fft::monarch_ifft2_block(&spec, n1, n2, kr, kc);
+            for (j, w) in want.iter().enumerate() {
+                let d = (re[j] - w.re).abs().max((im[j] - w.im).abs());
+                if d > 1e-9 {
+                    return Err(format!("({n1},{n2},{kr},{kc}) slot {j}: err {d}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_rng_uniform_bounds() {
     let mut rng = Rng::new(123);
     for _ in 0..10_000 {
