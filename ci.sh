@@ -27,6 +27,46 @@ cargo check --features pjrt
 echo "==> cargo run --release --example quickstart"
 cargo run --release --example quickstart
 
+# Fleet soak under an explicit wall-clock bound: the sharded-dispatcher
+# test suite (concurrent clients, backpressure, shard-death respawn) must
+# converge — a hang here is a supervision bug, not a slow box.
+echo "==> fleet soak: cargo test --test fleet_e2e (bounded)"
+if command -v timeout >/dev/null 2>&1; then
+    timeout 900 cargo test -q --test fleet_e2e
+else
+    cargo test -q --test fleet_e2e
+fi
+
+# Fleet perf artifact: a small soak through the bench must emit
+# BENCH_fleet.json with both the single-worker and the sharded records so
+# the fleet-vs-single trajectory accumulates across PRs.
+echo "==> fleet perf smoke: cargo bench --bench table5_fleet"
+rm -f BENCH_fleet.json
+FFC_FLEET_REQUESTS=160 FFC_FLEET_CLIENTS=4 cargo bench --bench table5_fleet >/dev/null
+test -s BENCH_fleet.json || { echo "FAIL: BENCH_fleet.json missing or empty"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PY'
+import json
+recs = json.load(open("BENCH_fleet.json"))
+by_name = {r["name"]: r for r in recs}
+single = by_name.get("serve_conv_single")
+fleet = by_name.get("serve_conv_fleet")
+assert single and fleet, f"missing fleet records: {sorted(by_name)}"
+for r in (single, fleet):
+    missing = {"name", "n", "mean_ns", "median_ns", "p95_ns"} - set(r)
+    assert not missing, f"record missing {missing}: {r}"
+    assert r["n"] > 0 and r["median_ns"] > 0, f"degenerate record: {r}"
+speedup = single["median_ns"] / fleet["median_ns"]
+print(f"BENCH_fleet.json OK (fleet vs single-worker rows/sec: {speedup:.2f}x)")
+if speedup <= 1.0:
+    print(f"WARN: fleet did not beat the single worker this run ({speedup:.2f}x)")
+PY
+else
+    grep -q '"serve_conv_fleet"' BENCH_fleet.json \
+        && grep -q '"serve_conv_single"' BENCH_fleet.json \
+        && echo "BENCH_fleet.json OK (grep check; python3 unavailable)"
+fi
+
 # Perf smoke: a one-iteration bench run must produce the machine-readable
 # perf artifact (BENCH_table3.json is how the perf trajectory accumulates
 # across PRs), and the artifact must be well-formed.

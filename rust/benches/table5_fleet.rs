@@ -1,0 +1,182 @@
+//! Fleet serving throughput: one `ConvService` worker vs an N-shard
+//! `FleetDispatcher` on the same concurrent-client soak workload.
+//!
+//! The paper's end-to-end speedups (Table 5) only reach production if the
+//! serving layer keeps many workers saturated; this bench records the
+//! aggregate rows/sec of the single-worker service (stock native backend,
+//! engine-internal row fan-out) against a sharded fleet whose workers are
+//! each single-threaded (`NativeRowThreads(1)`) — shard-level parallelism
+//! instead of per-engine thread pools. Emits `BENCH_fleet.json` so the
+//! fleet-vs-single trajectory accumulates across PRs.
+//!
+//! Env knobs: `FFC_FLEET_SHARDS` (default 4), `FFC_FLEET_REQUESTS` (total,
+//! default 384), `FFC_FLEET_CLIENTS` (default 8).
+
+use std::time::{Duration, Instant};
+
+use flashfftconv::bench::{fmt_x, BenchRecord, Table};
+use flashfftconv::coordinator::fleet::{FleetConfig, FleetDispatcher, LatencyHistogram};
+use flashfftconv::coordinator::router::ConvKind;
+use flashfftconv::coordinator::service::{ConvProfile, ConvRequest};
+use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::runtime::BackendConfig;
+use flashfftconv::util::Rng;
+
+const HEADS: usize = 16;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn request(rng: &mut Rng, slot: usize) -> ConvRequest {
+    // Mixed lengths: mostly the 256 bucket (some padded), every 4th
+    // request the 1024 bucket — same mix as the fleet soak test.
+    let len = match slot % 4 {
+        0 => 1024,
+        1 => 200, // pads into 256
+        _ => 256,
+    };
+    ConvRequest { kind: ConvKind::Forward, len, streams: vec![rng.normal_vec(HEADS * len)] }
+}
+
+/// Drive `total` requests from `clients` closed-loop client threads
+/// (window of 8 outstanding each); returns (rows served, wall clock).
+fn drive(fleet: &FleetDispatcher<ConvProfile>, clients: usize, total: usize) -> (u64, Duration) {
+    let before = fleet.stats().rows_executed;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            s.spawn(move || {
+                let mut rng = Rng::new(7_000 + c as u64);
+                let per_client = total / clients.max(1);
+                let mut pending = std::collections::VecDeque::new();
+                for i in 0..per_client {
+                    let mut req = request(&mut rng, i + c);
+                    loop {
+                        match fleet.try_submit(req) {
+                            Ok(rx) => {
+                                pending.push_back(rx);
+                                break;
+                            }
+                            Err((r, e)) if e.retryable() => {
+                                req = r;
+                                match pending.pop_front() {
+                                    // Backpressure: drain one of ours, retry.
+                                    Some(rx) => {
+                                        rx.recv().expect("fleet alive").expect("conv ok");
+                                    }
+                                    None => std::thread::sleep(Duration::from_micros(200)),
+                                }
+                            }
+                            Err((_, e)) => panic!("submit failed: {e}"),
+                        }
+                    }
+                    while pending.len() >= 8 {
+                        let rx = pending.pop_front().unwrap();
+                        rx.recv().expect("fleet alive").expect("conv ok");
+                    }
+                }
+                for rx in pending {
+                    rx.recv().expect("fleet alive").expect("conv ok");
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    (fleet.stats().rows_executed - before, wall)
+}
+
+fn warmup(fleet: &FleetDispatcher<ConvProfile>, n_shards: usize) {
+    // Touch every bucket on every shard so artifact loads (and plan
+    // construction) stay out of the measured window. A *concurrent* burst
+    // per bucket is what spreads the work: sequential blocking calls at
+    // zero outstanding would always land on the bucket's affinity shard
+    // and leave the other shards cold.
+    let mut rng = Rng::new(1);
+    for len in [256usize, 1024, 200] {
+        let pending: Vec<_> = (0..2 * n_shards)
+            .map(|_| {
+                let u = rng.normal_vec(HEADS * len);
+                fleet
+                    .submit_blocking(ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] })
+                    .expect("warmup burst admitted")
+            })
+            .collect();
+        for rx in pending {
+            rx.recv().expect("fleet alive").expect("warmup conv ok");
+        }
+    }
+}
+
+fn main() {
+    let shards = env_usize("FFC_FLEET_SHARDS", 4).max(1);
+    let total = env_usize("FFC_FLEET_REQUESTS", 384).max(16);
+    let clients = env_usize("FFC_FLEET_CLIENTS", 8).max(1);
+    let policy = BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(2) };
+
+    println!("== Fleet serving throughput: 1 worker vs {shards} shards ==");
+    println!("   {total} requests from {clients} clients, mixed 256/1024 buckets\n");
+
+    let mut records: Vec<BenchRecord> = vec![];
+    let mut t = Table::new(&["config", "rows", "secs", "rows_per_s", "p50_ms", "p99_ms", "busy"]);
+    let mut rates = vec![];
+
+    let cases = [
+        ("serve_conv_single", BackendConfig::Native, 1usize, usize::MAX),
+        ("serve_conv_fleet", BackendConfig::NativeRowThreads(1), shards, 8 * shards.max(2)),
+    ];
+    for (name, backend, n_shards, max_inflight) in cases {
+        let fleet = FleetDispatcher::conv(
+            backend,
+            "monarch",
+            FleetConfig { shards: n_shards, max_inflight, policy: policy.clone() },
+        )
+        .expect("fleet starts");
+        warmup(&fleet, n_shards);
+        // Interval quantiles: diff the histogram around the drive window
+        // so warmup compile/load spikes never contaminate the latencies.
+        let base = fleet.latency_counts();
+        let (rows, wall) = drive(&fleet, clients, total);
+        let mut window = fleet.latency_counts();
+        for (w, b) in window.iter_mut().zip(base.iter()) {
+            *w -= b;
+        }
+        let p50 = LatencyHistogram::quantile_ms(&window, 0.50);
+        let p95 = LatencyHistogram::quantile_ms(&window, 0.95);
+        let p99 = LatencyHistogram::quantile_ms(&window, 0.99);
+        let stats = fleet.stats();
+        assert_eq!(stats.errors, 0, "soak workload must be error-free");
+        let rate = rows as f64 / wall.as_secs_f64();
+        rates.push(rate);
+        t.row(vec![
+            format!("{name} (x{n_shards})"),
+            rows.to_string(),
+            format!("{:.2}", wall.as_secs_f64()),
+            format!("{rate:.1}"),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
+            stats.busy_rejections.to_string(),
+        ]);
+        // Encode throughput in the shared record schema: mean_ns = wall,
+        // median_ns = per-row wall (rows/sec = 1e9 / median_ns), p95_ns
+        // from the drive-window latency histogram.
+        records.push(BenchRecord {
+            name: name.to_string(),
+            n: rows as usize,
+            mean_ns: wall.as_nanos() as f64,
+            median_ns: wall.as_nanos() as f64 / rows.max(1) as f64,
+            p95_ns: p95 * 1e6,
+        });
+    }
+    t.print();
+    let speedup = rates[1] / rates[0].max(1e-9);
+    println!(
+        "\nfleet aggregate speedup over single worker: {} (must be > 1.00x for the \
+         sharding to pay for itself)",
+        fmt_x(speedup)
+    );
+
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
+    flashfftconv::bench::write_json(out, &records).expect("write BENCH_fleet.json");
+    eprintln!("(wrote {out}: {} records)", records.len());
+}

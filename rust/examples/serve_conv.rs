@@ -1,17 +1,18 @@
-//! Serving example: the coordinator's batched convolution service.
+//! Serving example: the sharded convolution fleet.
 //!
-//! Spins up the [`ConvService`] (router -> dynamic batcher -> fused
-//! artifact on a dedicated PJRT thread), installs a filter bank, submits a
-//! stream of mixed-length requests from several client threads, and
-//! reports latency / throughput / batching statistics.
+//! Spins up a [`ConvService`] over N shard workers (router -> dynamic
+//! batcher -> fused artifact per worker thread, one dispatcher with
+//! bounded admission in front), installs a filter bank, submits a stream
+//! of mixed-length requests from several client threads, and reports
+//! latency / throughput / batching / backpressure statistics.
 //!
 //! ```bash
-//! cargo run --release --example serve_conv -- --requests 64
+//! cargo run --release --example serve_conv -- --requests 64 --shards 2
 //! ```
 
-use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
+use flashfftconv::coordinator::fleet::LatencyHistogram;
 use flashfftconv::coordinator::router::ConvKind;
 use flashfftconv::coordinator::service::{ConvRequest, ConvService};
 use flashfftconv::coordinator::BatchPolicy;
@@ -22,76 +23,118 @@ fn main() -> flashfftconv::Result<()> {
     let args = Args::parse_from(std::env::args().skip(1))?;
     let requests = args.get_usize("requests", 64)?;
     let clients = args.get_usize("clients", 4)?;
+    let shards = args.get_usize("shards", 2)?;
+    let max_inflight = args.get_usize("max-inflight", 128)?;
     let variant = args.get("variant", "monarch");
     args.finish()?;
 
     let policy = BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(4) };
-    let service = ConvService::start(BackendConfig::Auto("artifacts".into()), &variant, policy)?;
+    let service = ConvService::start_sharded(
+        BackendConfig::Auto("artifacts".into()),
+        &variant,
+        policy,
+        shards,
+        max_inflight,
+    )?;
     let heads = 16usize;
 
-    // Pretend-pretrained filter banks for two buckets.
+    // Pretend-pretrained filter banks for two buckets, broadcast to every
+    // shard (and replayed onto any shard the supervisor respawns).
     let mut rng = Rng::new(9);
     for bucket in [256usize, 1024] {
         service.set_filter(ConvKind::Forward, bucket, rng.normal_vec(heads * bucket))?;
     }
 
-    // Warm up: first request per bucket pays artifact compile; exclude it
-    // from the serving statistics (steady-state is what Table 5 reports).
+    // Warm up: the first request per (shard, bucket) pays artifact
+    // compile; exclude it from the serving statistics (steady-state is
+    // what Table 5 reports). A concurrent burst per bucket is what
+    // reaches every shard — sequential calls at zero outstanding would
+    // always pick the bucket's affinity shard.
     for bucket in [256usize, 1000] {
-        let u = rng.normal_vec(heads * bucket);
-        service
-            .call(ConvRequest { kind: ConvKind::Forward, len: bucket, streams: vec![u] })?;
+        let pending: Vec<_> = (0..2 * shards.max(1))
+            .map(|_| {
+                let u = rng.normal_vec(heads * bucket);
+                service
+                    .fleet()
+                    .submit_blocking(ConvRequest {
+                        kind: ConvKind::Forward,
+                        len: bucket,
+                        streams: vec![u],
+                    })
+                    .expect("warmup admitted")
+            })
+            .collect();
+        for rx in pending {
+            rx.recv().expect("fleet alive").expect("warmup conv ok");
+        }
     }
-    let warm_reqs = service.stats().requests.load(Ordering::Relaxed);
-    let warm_lat = service.stats().latency_ns_sum.load(Ordering::Relaxed);
-    println!("(warmup: {warm_reqs} requests, compile included)");
+    let warm = service.fleet().stats();
+    let warm_counts = service.fleet().latency_counts();
+    println!("(warmup: {} requests, compile included)", warm.requests);
 
-    println!("serving {requests} requests from {clients} clients ({variant} kernels)...");
+    println!(
+        "serving {requests} requests from {clients} clients across {shards} shards \
+         ({variant} kernels, max_inflight {max_inflight})..."
+    );
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for c in 0..clients {
             let service = &service;
             s.spawn(move || {
                 let mut rng = Rng::new(100 + c as u64);
-                let per_client = requests / clients;
+                let per_client = requests / clients.max(1);
                 let mut pending = Vec::with_capacity(per_client);
                 for i in 0..per_client {
                     // Mixed lengths: exercise routing + padding.
                     let len = if (i + c) % 3 == 0 { 1000 } else { 256 };
                     let u = rng.normal_vec(heads * len);
-                    pending.push(service.submit(ConvRequest {
-                        kind: ConvKind::Forward,
-                        len,
-                        streams: vec![u],
-                    }));
+                    let req =
+                        ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] };
+                    // Bounded admission: block until the fleet admits
+                    // (backpressure without a spin loop).
+                    let rx = service
+                        .fleet()
+                        .submit_blocking(req)
+                        .expect("fleet admits");
+                    pending.push(rx);
                 }
                 for rx in pending {
-                    rx.recv().expect("service alive").expect("conv ok");
+                    rx.recv().expect("fleet alive").expect("conv ok");
                 }
             });
         }
     });
     let wall = t0.elapsed();
 
-    let s = service.stats();
-    let served = s.rows_executed.load(Ordering::Relaxed) - warm_reqs;
-    let steady_reqs = s.requests.load(Ordering::Relaxed) - warm_reqs;
-    let steady_lat =
-        (s.latency_ns_sum.load(Ordering::Relaxed) - warm_lat) as f64 / steady_reqs as f64 / 1e6;
+    let f = service.fleet().stats();
+    let served = f.rows_executed - warm.rows_executed;
+    // Steady-state quantiles: diff the latency histogram around the
+    // serving window so warmup compile spikes are excluded.
+    let mut window = service.fleet().latency_counts();
+    for (w, b) in window.iter_mut().zip(warm_counts.iter()) {
+        *w -= b;
+    }
     println!(
         "\nserved {served} rows in {:.2}s  ({:.1} rows/s)\n\
          batches          : {}\n\
          mean occupancy   : {:.2} rows/batch\n\
-         mean latency     : {:.2} ms (steady state)\n\
-         max latency      : {:.2} ms (includes queueing)\n\
+         latency p50/p99  : {:.2} / {:.2} ms (steady state)\n\
+         busy rejections  : {}\n\
+         deaths/restarts  : {} / {}\n\
          errors           : {}",
         wall.as_secs_f64(),
         served as f64 / wall.as_secs_f64(),
-        s.batches.load(Ordering::Relaxed),
-        s.mean_occupancy(),
-        steady_lat,
-        s.latency_ns_max.load(Ordering::Relaxed) as f64 / 1e6,
-        s.errors.load(Ordering::Relaxed),
+        f.batches,
+        f.mean_occupancy,
+        LatencyHistogram::quantile_ms(&window, 0.50),
+        LatencyHistogram::quantile_ms(&window, 0.99),
+        f.busy_rejections,
+        f.shard_deaths,
+        f.restarts,
+        f.errors,
     );
+    for s in &f.shards {
+        println!("  {}", s.summary());
+    }
     Ok(())
 }

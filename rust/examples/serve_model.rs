@@ -3,8 +3,9 @@
 //! Starts the [`ModelServer`] over the `lm_fwd_logits` artifact — served
 //! by the pure-Rust Hyena zoo engine on the default native backend — then
 //! greedy-decodes a continuation of a synthetic prompt and reports the
-//! serving statistics. Run it twice and the generated token ids match:
-//! the whole stack is deterministic.
+//! serving statistics. `--shards N` runs N workers behind the fleet
+//! dispatcher (`--max-inflight` bounds admission). Run it twice and the
+//! generated token ids match: the whole stack is deterministic.
 //!
 //! ```bash
 //! cargo run --release --example serve_model -- --new-tokens 32
@@ -24,12 +25,21 @@ fn main() -> flashfftconv::Result<()> {
     let artifact = args.get("artifact", "lm_fwd_logits");
     let new_tokens = args.get_usize("new-tokens", 32)?;
     let seed = args.get_usize("seed", 1)? as u64;
+    let shards = args.get_usize("shards", 1)?;
+    let max_inflight = args.get_usize("max-inflight", 64)?;
     args.finish()?;
 
     let policy = BatchPolicy { batch_size: 4, max_wait: Duration::from_millis(2) };
-    let server = ModelServer::start(BackendConfig::Auto("artifacts".into()), &artifact, policy)?;
+    let server = ModelServer::start_sharded(
+        BackendConfig::Auto("artifacts".into()),
+        &artifact,
+        policy,
+        shards,
+        max_inflight,
+    )?;
     println!(
-        "serving {artifact}: context {} tokens, vocab {}",
+        "serving {artifact}: context {} tokens, vocab {} ({shards} shard(s), \
+         max_inflight {max_inflight})",
         server.seq_len, server.vocab
     );
 
@@ -45,13 +55,16 @@ fn main() -> flashfftconv::Result<()> {
         &seq[server.seq_len.saturating_sub(8)..server.seq_len]
     );
     println!("generated   : {generated:?}");
-    let s = server.stats();
+    let f = server.fleet().stats();
     println!(
-        "{new_tokens} tokens in {:.2}s ({:.1} tok/s)  batches {}  mean latency {:.2} ms",
+        "{new_tokens} tokens in {:.2}s ({:.1} tok/s)  batches {}  mean latency {:.2} ms  \
+         p50 {:.2} ms  p99 {:.2} ms",
         wall.as_secs_f64(),
         new_tokens as f64 / wall.as_secs_f64(),
-        s.batches.load(std::sync::atomic::Ordering::Relaxed),
-        s.mean_latency_ms()
+        f.batches,
+        f.mean_latency_ms,
+        f.p50_ms,
+        f.p99_ms,
     );
     assert_eq!(generated.len(), new_tokens);
     Ok(())

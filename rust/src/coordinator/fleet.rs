@@ -1,0 +1,1037 @@
+//! The serving fleet: N shard workers behind one dispatcher.
+//!
+//! [`super::service::ConvService`] and [`crate::server::ModelServer`] each
+//! run one worker loop on one thread. This module generalizes that loop
+//! into a *shard* and puts a [`FleetDispatcher`] in front of N of them:
+//!
+//! * **Routing** — every request is planned into a `(kind, bucket)` route
+//!   key ([`ShardProfile::plan`]); the dispatcher picks the shard with the
+//!   least outstanding rows (ties prefer the key's affinity shard so
+//!   same-bucket requests keep batching together).
+//! * **Backpressure** — admission is bounded by `max_inflight`:
+//!   [`FleetDispatcher::submit`] returns [`FleetError::Busy`] exactly when
+//!   the fleet-wide in-flight count has reached the bound, and
+//!   [`FleetDispatcher::call`] blocks until a slot frees.
+//! * **Supervision** — a worker that panics (or whose channel drops) is
+//!   respawned from its [`BackendConfig`]; the dead worker's in-flight
+//!   requests are failed fast back to their clients with the *retryable*
+//!   [`FleetError::ShardDied`] (never silently dropped), successful
+//!   control ops (filter installs) are replayed onto the fresh worker,
+//!   and [`FleetStats::restarts`] counts the respawns.
+//! * **Statistics** — per-shard [`ServiceStats`] (now including a
+//!   fixed-bucket latency histogram for p50/p99) plus a fleet rollup:
+//!   admission rejections, worker deaths, restarts, occupancy.
+//!
+//! The shard payload is pluggable through [`ShardProfile`]; the two
+//! implementations are the convolution worker
+//! ([`super::service::ConvProfile`]) and the LM inference worker
+//! ([`crate::server::ModelProfile`]). The single-worker services are thin
+//! facades over a 1-shard fleet, so every request in the crate flows
+//! through the same admission path.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::service::ServiceStats;
+use crate::runtime::BackendConfig;
+
+// ---------------------------------------------------------------------------
+// Latency histogram (p50/p99 without per-request storage)
+// ---------------------------------------------------------------------------
+
+/// Number of fixed log2 buckets in [`LatencyHistogram`].
+pub const HIST_BUCKETS: usize = 40;
+
+/// Lock-free fixed-bucket latency histogram: bucket `i` counts latencies
+/// in `[2^(i-1), 2^i)` microseconds (bucket 0 is `< 1us`). Forty buckets
+/// reach ~6 days, far past any serving latency.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket_of(ns: u64) -> usize {
+        let us = ns / 1_000;
+        ((u64::BITS - us.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Record one latency sample (nanoseconds).
+    pub fn record(&self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the raw bucket counts.
+    pub fn counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Quantile (`0 < q <= 1`) in milliseconds from a counts snapshot,
+    /// reported as the matched bucket's upper bound; 0.0 when empty.
+    /// Snapshots from several shards can be summed before calling this —
+    /// that is how the fleet rollup merges per-shard histograms.
+    pub fn quantile_ms(counts: &[u64; HIST_BUCKETS], q: f64) -> f64 {
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                // Upper bound of bucket i is 2^i microseconds.
+                return (1u64 << i.min(52)) as f64 / 1_000.0;
+            }
+        }
+        (1u64 << (HIST_BUCKETS - 1)) as f64 / 1_000.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Errors and replies
+// ---------------------------------------------------------------------------
+
+/// Why the fleet could not (or did not) answer a request with data.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FleetError {
+    /// Admission rejected: `max_inflight` requests are already in flight.
+    /// Retryable — back off and resubmit (or use the blocking `call`).
+    Busy,
+    /// The owning shard worker died before answering; the request was
+    /// failed fast rather than silently dropped. Retryable — the
+    /// supervisor respawns the shard.
+    ShardDied,
+    /// The worker rejected or failed the request (bad shape, routing,
+    /// engine error). Not retryable: the same request fails again.
+    Failed(String),
+    /// The fleet is shutting down.
+    Shutdown,
+}
+
+impl FleetError {
+    /// Whether a client may expect the same request to succeed later.
+    pub fn retryable(&self) -> bool {
+        matches!(self, FleetError::Busy | FleetError::ShardDied)
+    }
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::Busy => write!(f, "fleet busy: max_inflight reached (retryable)"),
+            FleetError::ShardDied => write!(f, "shard worker died in flight (retryable)"),
+            FleetError::Failed(msg) => write!(f, "{msg}"),
+            FleetError::Shutdown => write!(f, "fleet is shutting down"),
+        }
+    }
+}
+
+/// Every fleet reply: a result row or a typed failure.
+pub type FleetReply = Result<Vec<f32>, FleetError>;
+
+// ---------------------------------------------------------------------------
+// Shared dispatcher state
+// ---------------------------------------------------------------------------
+
+struct FleetShared {
+    max_inflight: usize,
+    /// Admitted-but-unanswered request count (the backpressure gauge).
+    inflight: Mutex<usize>,
+    /// Signalled on every completion (admission waiters) and shutdown.
+    cv: Condvar,
+    /// Outstanding *rows* per shard (the load-balancing signal).
+    outstanding: Vec<AtomicU64>,
+    alive: Vec<AtomicBool>,
+    /// Permanently-dead shards (worker start failed; never respawned).
+    defunct: Vec<AtomicBool>,
+    shutting_down: AtomicBool,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    busy_rejections: AtomicU64,
+    shard_deaths: AtomicU64,
+    restarts: AtomicU64,
+}
+
+impl FleetShared {
+    fn new(shards: usize, max_inflight: usize) -> Self {
+        Self {
+            max_inflight: max_inflight.max(1),
+            inflight: Mutex::new(0),
+            cv: Condvar::new(),
+            outstanding: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            alive: (0..shards).map(|_| AtomicBool::new(true)).collect(),
+            defunct: (0..shards).map(|_| AtomicBool::new(false)).collect(),
+            shutting_down: AtomicBool::new(false),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            busy_rejections: AtomicU64::new(0),
+            shard_deaths: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+        }
+    }
+
+    /// Non-blocking admission: true iff a slot was taken. `Busy` is
+    /// returned by the caller exactly when this observes
+    /// `inflight >= max_inflight` — the count only moves under the lock,
+    /// so rejections are never spurious.
+    fn try_admit(&self) -> bool {
+        let mut g = self.inflight.lock().unwrap();
+        if *g >= self.max_inflight {
+            false
+        } else {
+            *g += 1;
+            true
+        }
+    }
+
+    /// Blocking admission: waits for a slot (or shutdown).
+    fn admit_blocking(&self) -> Result<(), FleetError> {
+        let mut g = self.inflight.lock().unwrap();
+        loop {
+            if self.shutting_down.load(Ordering::Acquire) {
+                return Err(FleetError::Shutdown);
+            }
+            if *g < self.max_inflight {
+                *g += 1;
+                return Ok(());
+            }
+            // Timed wait so a lost wakeup can never wedge a client.
+            let (g2, _) = self.cv.wait_timeout(g, Duration::from_millis(50)).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Give back one admission slot and wake a waiter.
+    fn release(&self) {
+        {
+            let mut g = self.inflight.lock().unwrap();
+            *g = g.saturating_sub(1);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Finish one dispatched request on `shard`.
+    fn complete(&self, shard: usize, rows: u64) {
+        self.outstanding[shard].fetch_sub(rows, Ordering::Relaxed);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.release();
+    }
+
+    fn inflight_now(&self) -> usize {
+        *self.inflight.lock().unwrap()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reply slot: the guaranteed-delivery reply path
+// ---------------------------------------------------------------------------
+
+/// One request's reply obligation. The owning worker answers it with
+/// [`ReplySlot::fulfill`]; if the slot is instead *dropped* — the worker
+/// panicked, or its channel was torn down with the request still queued —
+/// the client receives the retryable [`FleetError::ShardDied`] and every
+/// admission/outstanding counter is settled. A reply can therefore never
+/// be silently lost.
+pub struct ReplySlot {
+    client: Option<Sender<FleetReply>>,
+    shared: Arc<FleetShared>,
+    stats: Arc<ServiceStats>,
+    shard: usize,
+    rows: u64,
+}
+
+impl ReplySlot {
+    fn new(
+        client: Sender<FleetReply>,
+        shared: Arc<FleetShared>,
+        stats: Arc<ServiceStats>,
+        shard: usize,
+        rows: u64,
+    ) -> Self {
+        Self { client: Some(client), shared, stats, shard, rows }
+    }
+
+    /// Deliver the worker's answer (errors become [`FleetError::Failed`]).
+    pub fn fulfill(mut self, r: Result<Vec<f32>, String>) {
+        self.finish(r.map_err(FleetError::Failed));
+    }
+
+    fn finish(&mut self, r: FleetReply) {
+        if let Some(tx) = self.client.take() {
+            if r.is_err() {
+                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            }
+            // Release the admission slot *before* the reply becomes
+            // observable: a client that sees its reply and immediately
+            // resubmits must never hit a stale-occupancy `Busy`.
+            self.shared.complete(self.shard, self.rows);
+            let _ = tx.send(r);
+        }
+    }
+
+    /// Detach without side effects (dispatcher-internal: a send that
+    /// failed hands the slot back for a retry on another shard).
+    fn disarm(mut self) -> Option<Sender<FleetReply>> {
+        self.client.take()
+    }
+}
+
+impl Drop for ReplySlot {
+    fn drop(&mut self) {
+        if self.client.is_some() {
+            self.shared.shard_deaths.fetch_add(1, Ordering::Relaxed);
+            self.finish(Err(FleetError::ShardDied));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard profile: what kind of worker the fleet runs
+// ---------------------------------------------------------------------------
+
+/// Admission-time routing decision for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoutePlan {
+    /// `(kind tag, bucket)` batching key; `None` when the request does not
+    /// route (the worker still owns producing the rejection reply, so the
+    /// per-shard error statistics stay on the worker's stats like the
+    /// single-service path always did).
+    pub key: Option<(u8, usize)>,
+    /// Batch rows this request will occupy (the load-balancing weight).
+    pub rows: u64,
+}
+
+/// Messages a shard worker consumes. Generic over the [`ShardProfile`] so
+/// conv and model shards share one dispatcher implementation.
+pub enum ShardMsg<P: ShardProfile> {
+    /// One admitted request plus its reply obligation.
+    Job { req: P::Request, reply: ReplySlot, t_submit: Instant },
+    /// A broadcast control operation (e.g. a filter install).
+    Control { op: P::Control, done: Sender<Result<(), String>> },
+    /// Failure-injection hook: the worker panics on receipt. Used by the
+    /// supervision tests to kill a shard mid-stream; never sent by the
+    /// normal request path.
+    Poison,
+    /// Drain queued work and exit the worker loop.
+    Shutdown,
+}
+
+/// One kind of shard worker: how to route its requests at admission and
+/// how to run its worker loop. Implementations build their runtime
+/// *inside* [`ShardProfile::run_shard`] (backends may be thread-affine),
+/// and the profile itself must stay cheap to clone — every (re)spawn
+/// carries one clone into the new worker thread.
+pub trait ShardProfile: Clone + Send + Sync + 'static {
+    /// The request payload clients submit.
+    type Request: Send + 'static;
+    /// Broadcast control operations (use an uninhabited enum when the
+    /// profile has none). Successful ops are logged by the dispatcher and
+    /// replayed onto respawned workers so shards never diverge.
+    type Control: Clone + Send + 'static;
+
+    /// Route a request: batching key + row weight. Must not block.
+    fn plan(&self, req: &Self::Request) -> RoutePlan;
+
+    /// Build and run one shard worker until `Shutdown`/disconnect. A
+    /// panic in here is caught by the supervisor, which fails the
+    /// worker's in-flight slots fast and respawns from the same
+    /// `BackendConfig`.
+    fn run_shard(
+        &self,
+        backend: &BackendConfig,
+        policy: &BatchPolicy,
+        stats: &Arc<ServiceStats>,
+        rx: Receiver<ShardMsg<Self>>,
+    ) -> crate::Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// Statistics snapshots
+// ---------------------------------------------------------------------------
+
+/// Point-in-time statistics for one shard.
+#[derive(Debug, Clone)]
+pub struct ShardStatsSnapshot {
+    pub shard: usize,
+    pub alive: bool,
+    pub requests: u64,
+    pub batches: u64,
+    pub rows_executed: u64,
+    pub errors: u64,
+    pub outstanding_rows: u64,
+    pub mean_occupancy: f64,
+    pub mean_latency_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl ShardStatsSnapshot {
+    /// One-line per-shard ops summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "shard {}: reqs {}  rows {}  occ {:.2}  p50 {:.2}ms  p99 {:.2}ms{}",
+            self.shard,
+            self.requests,
+            self.rows_executed,
+            self.mean_occupancy,
+            self.p50_ms,
+            self.p99_ms,
+            if self.alive { "" } else { "  (down)" }
+        )
+    }
+}
+
+/// Point-in-time aggregate fleet statistics: per-shard snapshots plus the
+/// rollup the serving benches and ops surfaces report.
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    pub shards: Vec<ShardStatsSnapshot>,
+    /// submit/call attempts (including rejected ones).
+    pub submitted: u64,
+    /// Requests whose reply slot was settled (answered or failed fast).
+    pub completed: u64,
+    /// Admitted-but-unanswered requests right now.
+    pub inflight: u64,
+    /// `Busy` admission rejections.
+    pub busy_rejections: u64,
+    /// Replies failed fast because their worker died.
+    pub shard_deaths: u64,
+    /// Worker respawns performed by the supervisor.
+    pub restarts: u64,
+    /// Rollups over the per-shard stats.
+    pub requests: u64,
+    pub batches: u64,
+    pub rows_executed: u64,
+    pub errors: u64,
+    pub mean_occupancy: f64,
+    pub mean_latency_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl FleetStats {
+    /// One-line ops summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "shards {} (alive {})  reqs {}  rows {}  occ {:.2}  lat p50 {:.2}ms p99 {:.2}ms  \
+             busy {}  deaths {}  restarts {}  errors {}",
+            self.shards.len(),
+            self.shards.iter().filter(|s| s.alive).count(),
+            self.requests,
+            self.rows_executed,
+            self.mean_occupancy,
+            self.p50_ms,
+            self.p99_ms,
+            self.busy_rejections,
+            self.shard_deaths,
+            self.restarts,
+            self.errors,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Supervision plumbing
+// ---------------------------------------------------------------------------
+
+const SENTINEL: usize = usize::MAX;
+
+enum ExitKind {
+    /// Worker returned normally (shutdown or channel teardown).
+    Clean,
+    /// Worker loop panicked (or poison): respawn.
+    Panicked,
+    /// Worker could not start (backend/connect failure): stays dead.
+    StartFailed(String),
+}
+
+struct ShardExit {
+    shard: usize,
+    kind: ExitKind,
+}
+
+/// Fleet configuration: shard count, admission bound, batch policy.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Worker count (>= 1).
+    pub shards: usize,
+    /// Fleet-wide bound on admitted-but-unanswered requests.
+    pub max_inflight: usize,
+    /// Per-shard dynamic batching policy.
+    pub policy: BatchPolicy,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self { shards: 1, max_inflight: usize::MAX, policy: BatchPolicy::default() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The dispatcher
+// ---------------------------------------------------------------------------
+
+/// Handle to a running fleet of shard workers (see the module docs).
+pub struct FleetDispatcher<P: ShardProfile> {
+    profile: P,
+    shared: Arc<FleetShared>,
+    stats: Vec<Arc<ServiceStats>>,
+    senders: Arc<Mutex<Vec<Sender<ShardMsg<P>>>>>,
+    /// Applied control ops (tagged with a sequence id), replayed onto
+    /// respawned workers. Entries for rejected ops are removed.
+    controls: Arc<Mutex<Vec<(u64, P::Control)>>>,
+    control_seq: AtomicU64,
+    monitor_tx: Sender<ShardExit>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
+}
+
+fn spawn_worker<P: ShardProfile>(
+    shard: usize,
+    generation: u64,
+    profile: P,
+    backend: BackendConfig,
+    policy: BatchPolicy,
+    stats: Arc<ServiceStats>,
+    monitor: Sender<ShardExit>,
+) -> crate::Result<(Sender<ShardMsg<P>>, std::thread::JoinHandle<()>)> {
+    let (tx, rx) = channel::<ShardMsg<P>>();
+    let handle = std::thread::Builder::new()
+        .name(format!("fleet-shard-{shard}.{generation}"))
+        .spawn(move || {
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                profile.run_shard(&backend, &policy, &stats, rx)
+            }));
+            // On panic, `rx` and the worker's queues unwound: every queued
+            // ReplySlot already failed its client fast via Drop.
+            let kind = match outcome {
+                Ok(Ok(())) => ExitKind::Clean,
+                Ok(Err(e)) => ExitKind::StartFailed(format!("{e:#}")),
+                Err(_) => ExitKind::Panicked,
+            };
+            let _ = monitor.send(ShardExit { shard, kind });
+        })?;
+    Ok((tx, handle))
+}
+
+impl<P: ShardProfile> FleetDispatcher<P> {
+    /// Spawn `cfg.shards` workers over `backend` and start supervising.
+    pub fn start(backend: BackendConfig, profile: P, cfg: FleetConfig) -> crate::Result<Self> {
+        let shards = cfg.shards.max(1);
+        let shared = Arc::new(FleetShared::new(shards, cfg.max_inflight));
+        let stats: Vec<Arc<ServiceStats>> =
+            (0..shards).map(|_| Arc::new(ServiceStats::default())).collect();
+        let (monitor_tx, monitor_rx) = channel::<ShardExit>();
+
+        let mut txs = Vec::with_capacity(shards);
+        // One JoinHandle slot per shard (replaced on respawn, dead
+        // generations joined eagerly) so supervision stays O(shards).
+        let mut handles: Vec<Option<std::thread::JoinHandle<()>>> = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let (tx, handle) = spawn_worker(
+                i,
+                0,
+                profile.clone(),
+                backend.clone(),
+                cfg.policy.clone(),
+                Arc::clone(&stats[i]),
+                monitor_tx.clone(),
+            )?;
+            txs.push(tx);
+            handles.push(Some(handle));
+        }
+        let senders = Arc::new(Mutex::new(txs));
+
+        // Supervisor: respawn panicked workers, replay control state,
+        // account restarts; exits once shutdown has collected every live
+        // worker.
+        let controls: Arc<Mutex<Vec<(u64, P::Control)>>> = Arc::new(Mutex::new(Vec::new()));
+        let supervisor = {
+            let shared = Arc::clone(&shared);
+            let senders = Arc::clone(&senders);
+            let stats = stats.clone();
+            let controls = Arc::clone(&controls);
+            let profile = profile.clone();
+            let backend = backend.clone();
+            let policy = cfg.policy.clone();
+            let monitor_tx = monitor_tx.clone();
+            std::thread::Builder::new().name("fleet-supervisor".into()).spawn(move || {
+                let mut live = shards;
+                let mut generation = 0u64;
+                while let Ok(exit) = monitor_rx.recv() {
+                    let mut txs = senders.lock().unwrap();
+                    if exit.shard != SENTINEL {
+                        live -= 1;
+                        shared.alive[exit.shard].store(false, Ordering::Release);
+                        // The exiting thread sent this event as its last
+                        // act; reap its handle now so the vec stays
+                        // bounded across respawns.
+                        if let Some(h) = handles[exit.shard].take() {
+                            let _ = h.join();
+                        }
+                    }
+                    if shared.shutting_down.load(Ordering::Acquire) {
+                        if live == 0 {
+                            break;
+                        }
+                        continue;
+                    }
+                    if exit.shard == SENTINEL {
+                        continue;
+                    }
+                    match exit.kind {
+                        ExitKind::Clean => {
+                            // Channel teardown without shutdown: dispatcher
+                            // gone; nothing to do.
+                        }
+                        ExitKind::StartFailed(e) => {
+                            shared.defunct[exit.shard].store(true, Ordering::Release);
+                            crate::log_warn!(
+                                "fleet shard {} failed to start: {e}; shard stays down",
+                                exit.shard
+                            );
+                        }
+                        ExitKind::Panicked => {
+                            generation += 1;
+                            shared.restarts.fetch_add(1, Ordering::Relaxed);
+                            crate::log_warn!(
+                                "fleet shard {} died; respawning (restart #{})",
+                                exit.shard,
+                                shared.restarts.load(Ordering::Relaxed)
+                            );
+                            match spawn_worker(
+                                exit.shard,
+                                generation,
+                                profile.clone(),
+                                backend.clone(),
+                                policy.clone(),
+                                Arc::clone(&stats[exit.shard]),
+                                monitor_tx.clone(),
+                            ) {
+                                Ok((tx, handle)) => {
+                                    // Replay installed control state so the
+                                    // fresh worker converges with its peers
+                                    // before it is marked alive. (Holding the
+                                    // senders lock here pairs with control()
+                                    // logging under the same lock: an op is
+                                    // either in the log already or will be
+                                    // sent to this sender — never neither.)
+                                    for (_, op) in controls.lock().unwrap().iter() {
+                                        let (done, _done_rx) = channel();
+                                        let _ = tx.send(ShardMsg::Control {
+                                            op: op.clone(),
+                                            done,
+                                        });
+                                    }
+                                    txs[exit.shard] = tx;
+                                    handles[exit.shard] = Some(handle);
+                                    live += 1;
+                                    shared.alive[exit.shard].store(true, Ordering::Release);
+                                }
+                                Err(e) => {
+                                    shared.defunct[exit.shard].store(true, Ordering::Release);
+                                    crate::log_warn!(
+                                        "fleet shard {} respawn failed: {e:#}",
+                                        exit.shard
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+                drop(senders);
+                for h in handles.into_iter().flatten() {
+                    let _ = h.join();
+                }
+            })?
+        };
+
+        Ok(Self {
+            profile,
+            shared,
+            stats,
+            senders,
+            controls,
+            control_seq: AtomicU64::new(0),
+            monitor_tx,
+            supervisor: Some(supervisor),
+        })
+    }
+
+    /// The profile this fleet was started with.
+    pub fn profile(&self) -> &P {
+        &self.profile
+    }
+
+    /// Pick the live shard with the least outstanding rows; ties prefer
+    /// the route key's affinity shard so one bucket keeps batching on one
+    /// worker. `None` when no shard is currently alive (the dispatch loop
+    /// then waits for the supervisor).
+    fn pick_shard(&self, key: Option<(u8, usize)>) -> Option<usize> {
+        let n = self.stats.len();
+        let mut best: Option<(usize, u64)> = None;
+        for i in 0..n {
+            if !self.shared.alive[i].load(Ordering::Acquire) {
+                continue;
+            }
+            let load = self.shared.outstanding[i].load(Ordering::Relaxed);
+            match best {
+                Some((_, b)) if b <= load => {}
+                _ => best = Some((i, load)),
+            }
+        }
+        let (mut pick, min_load) = best?;
+        if let Some((kind, bucket)) = key {
+            // FNV-ish affinity hash over the route key.
+            let h = (kind as u64 ^ (bucket as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                .wrapping_mul(0x100_0000_01B3);
+            let affinity = (h % n as u64) as usize;
+            if self.shared.alive[affinity].load(Ordering::Acquire)
+                && self.shared.outstanding[affinity].load(Ordering::Relaxed) == min_load
+            {
+                pick = affinity;
+            }
+        }
+        Some(pick)
+    }
+
+    /// Dispatch an already-admitted request to a shard. Retries across
+    /// shards when a send races a worker death; gives the admission slot
+    /// (and the request) back on terminal failure.
+    fn dispatch(&self, req: P::Request) -> Result<Receiver<FleetReply>, (P::Request, FleetError)> {
+        let plan = self.profile.plan(&req);
+        let (client_tx, client_rx) = channel::<FleetReply>();
+        let mut req = req;
+        let mut stalls = 0usize;
+        loop {
+            if self.shared.shutting_down.load(Ordering::Acquire) {
+                self.shared.release();
+                return Err((req, FleetError::Shutdown));
+            }
+            let Some(shard) = self.pick_shard(plan.key) else {
+                if self.shared.defunct.iter().all(|d| d.load(Ordering::Acquire)) {
+                    // Nothing will ever come back: fail non-retryably so
+                    // retry-on-retryable clients terminate.
+                    self.shared.release();
+                    return Err((
+                        req,
+                        FleetError::Failed(
+                            "every shard worker failed to start; fleet is defunct".into(),
+                        ),
+                    ));
+                }
+                // Every shard is down; the supervisor is respawning.
+                stalls += 1;
+                if stalls > 500 {
+                    self.shared.release();
+                    return Err((req, FleetError::ShardDied));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            };
+            self.stats[shard].requests.fetch_add(1, Ordering::Relaxed);
+            self.shared.outstanding[shard].fetch_add(plan.rows, Ordering::Relaxed);
+            let slot = ReplySlot::new(
+                client_tx.clone(),
+                Arc::clone(&self.shared),
+                Arc::clone(&self.stats[shard]),
+                shard,
+                plan.rows,
+            );
+            let msg = ShardMsg::Job { req, reply: slot, t_submit: Instant::now() };
+            let tx = self.senders.lock().unwrap()[shard].clone();
+            match tx.send(msg) {
+                Ok(()) => return Ok(client_rx),
+                Err(std::sync::mpsc::SendError(m)) => {
+                    // The worker died between pick and send: undo this
+                    // attempt's accounting and retry elsewhere.
+                    self.shared.alive[shard].store(false, Ordering::Release);
+                    self.stats[shard].requests.fetch_sub(1, Ordering::Relaxed);
+                    self.shared.outstanding[shard].fetch_sub(plan.rows, Ordering::Relaxed);
+                    let ShardMsg::Job { req: r, reply, .. } = m else { unreachable!() };
+                    let _ = reply.disarm();
+                    req = r;
+                }
+            }
+        }
+    }
+
+    /// Submit with backpressure, handing the request back on rejection so
+    /// retry loops never need to clone the payload: `Err((req, Busy))`
+    /// exactly when `max_inflight` requests are in flight; otherwise the
+    /// receiver yields the reply (data, a worker failure, or a retryable
+    /// fail-fast).
+    pub fn try_submit(
+        &self,
+        req: P::Request,
+    ) -> Result<Receiver<FleetReply>, (P::Request, FleetError)> {
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        if self.shared.shutting_down.load(Ordering::Acquire) {
+            return Err((req, FleetError::Shutdown));
+        }
+        if !self.shared.try_admit() {
+            self.shared.busy_rejections.fetch_add(1, Ordering::Relaxed);
+            return Err((req, FleetError::Busy));
+        }
+        self.dispatch(req)
+    }
+
+    /// [`FleetDispatcher::try_submit`] without the request hand-back.
+    pub fn submit(&self, req: P::Request) -> Result<Receiver<FleetReply>, FleetError> {
+        self.try_submit(req).map_err(|(_, e)| e)
+    }
+
+    /// Facade submit: a synchronous rejection becomes a pre-failed reply
+    /// channel, so callers of the single-worker service APIs always get a
+    /// receiver. Non-backpressure rejections (a failed hand-off, never
+    /// the expected `Busy` pushback) are counted on shard 0's error
+    /// statistics — the old single-thread path dropped them silently.
+    pub fn submit_or_reply(&self, req: P::Request) -> Receiver<FleetReply> {
+        match self.submit(req) {
+            Ok(rx) => rx,
+            Err(e) => {
+                if !matches!(e, FleetError::Busy) {
+                    self.stats[0].errors.fetch_add(1, Ordering::Relaxed);
+                }
+                let (tx, rx) = channel();
+                let _ = tx.send(Err(e));
+                rx
+            }
+        }
+    }
+
+    /// Blocking submit: waits for an admission slot (never `Busy`), then
+    /// returns the reply receiver — the condvar-backed alternative to
+    /// spinning on [`FleetDispatcher::try_submit`].
+    pub fn submit_blocking(&self, req: P::Request) -> Result<Receiver<FleetReply>, FleetError> {
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.admit_blocking()?;
+        self.dispatch(req).map_err(|(_, e)| e)
+    }
+
+    /// Blocking submit-and-wait: waits for an admission slot instead of
+    /// returning `Busy`, then waits for the reply.
+    pub fn call(&self, req: P::Request) -> Result<Vec<f32>, FleetError> {
+        let rx = self.submit_blocking(req)?;
+        match rx.recv() {
+            Ok(r) => r,
+            // The slot guarantees a reply before channel teardown; treat a
+            // torn channel as a (retryable) worker death all the same.
+            Err(_) => Err(FleetError::ShardDied),
+        }
+    }
+
+    /// Broadcast a control operation to every shard and wait for each to
+    /// acknowledge. Ops must be idempotent: the op is logged *before* it
+    /// is sent (both under the senders lock, the same lock the supervisor
+    /// holds while replaying the log onto a respawned worker), so a shard
+    /// death concurrent with a control op can never lose the op — at
+    /// worst a fresh worker receives it twice. Rejected ops are removed
+    /// from the log.
+    pub fn control(&self, op: P::Control) -> crate::Result<()> {
+        let id = self.control_seq.fetch_add(1, Ordering::Relaxed);
+        let mut waits = Vec::new();
+        {
+            let txs = self.senders.lock().unwrap();
+            self.controls.lock().unwrap().push((id, op.clone()));
+            for tx in txs.iter() {
+                let (done, done_rx) = channel();
+                if tx.send(ShardMsg::Control { op: op.clone(), done }).is_ok() {
+                    waits.push(done_rx);
+                }
+                // A dead shard is fine: the respawn replays the logged op.
+            }
+            if waits.is_empty() {
+                // Nothing accepted the op and nothing will ack it: un-log
+                // it *while still holding the senders lock* so a racing
+                // respawn can never replay an op we report as failed.
+                self.controls.lock().unwrap().retain(|(i, _)| *i != id);
+            }
+        }
+        if waits.is_empty() {
+            crate::bail!("no live shard accepted the control op");
+        }
+        let mut rejection = None;
+        for rx in waits {
+            match rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => rejection = Some(e),
+                Err(_) => {} // shard died mid-op; the logged op replays
+            }
+        }
+        if let Some(e) = rejection {
+            // A rejected op must not replay onto future respawns.
+            self.controls.lock().unwrap().retain(|(i, _)| *i != id);
+            crate::bail!("control op rejected: {e}");
+        }
+        Ok(())
+    }
+
+    /// Merged per-shard latency histogram counts (for interval quantiles:
+    /// snapshot before and after a window, diff, then
+    /// [`LatencyHistogram::quantile_ms`]).
+    pub fn latency_counts(&self) -> [u64; HIST_BUCKETS] {
+        let mut hist = [0u64; HIST_BUCKETS];
+        for s in &self.stats {
+            for (acc, c) in hist.iter_mut().zip(s.latency_hist.counts().iter()) {
+                *acc += c;
+            }
+        }
+        hist
+    }
+
+    /// Failure-injection hook (tests, chaos drills): make shard `i` panic
+    /// on its next message. The supervisor will fail its in-flight work
+    /// fast and respawn it.
+    pub fn poison_shard(&self, shard: usize) {
+        let txs = self.senders.lock().unwrap();
+        if let Some(tx) = txs.get(shard) {
+            let _ = tx.send(ShardMsg::Poison);
+        }
+    }
+
+    /// Number of shard slots (dead or alive).
+    pub fn shards(&self) -> usize {
+        self.stats.len()
+    }
+
+    /// Live per-shard statistics handle (stable across respawns).
+    pub fn shard_stats(&self, shard: usize) -> &Arc<ServiceStats> {
+        &self.stats[shard]
+    }
+
+    /// Point-in-time aggregate statistics.
+    pub fn stats(&self) -> FleetStats {
+        let mut shards = Vec::with_capacity(self.stats.len());
+        let mut hist = [0u64; HIST_BUCKETS];
+        let (mut requests, mut batches, mut rows, mut errors) = (0u64, 0u64, 0u64, 0u64);
+        let mut lat_sum = 0u64;
+        for (i, s) in self.stats.iter().enumerate() {
+            let counts = s.latency_hist.counts();
+            for (acc, c) in hist.iter_mut().zip(counts.iter()) {
+                *acc += c;
+            }
+            let sr = s.requests.load(Ordering::Relaxed);
+            let sb = s.batches.load(Ordering::Relaxed);
+            let sx = s.rows_executed.load(Ordering::Relaxed);
+            let se = s.errors.load(Ordering::Relaxed);
+            requests += sr;
+            batches += sb;
+            rows += sx;
+            errors += se;
+            lat_sum += s.latency_ns_sum.load(Ordering::Relaxed);
+            shards.push(ShardStatsSnapshot {
+                shard: i,
+                alive: self.shared.alive[i].load(Ordering::Acquire),
+                requests: sr,
+                batches: sb,
+                rows_executed: sx,
+                errors: se,
+                outstanding_rows: self.shared.outstanding[i].load(Ordering::Relaxed),
+                mean_occupancy: s.mean_occupancy(),
+                mean_latency_ms: s.mean_latency_ms(),
+                p50_ms: LatencyHistogram::quantile_ms(&counts, 0.50),
+                p99_ms: LatencyHistogram::quantile_ms(&counts, 0.99),
+            });
+        }
+        FleetStats {
+            shards,
+            submitted: self.shared.submitted.load(Ordering::Relaxed),
+            completed: self.shared.completed.load(Ordering::Relaxed),
+            inflight: self.shared.inflight_now() as u64,
+            busy_rejections: self.shared.busy_rejections.load(Ordering::Relaxed),
+            shard_deaths: self.shared.shard_deaths.load(Ordering::Relaxed),
+            restarts: self.shared.restarts.load(Ordering::Relaxed),
+            requests,
+            batches,
+            rows_executed: rows,
+            errors,
+            mean_occupancy: if batches == 0 { 0.0 } else { rows as f64 / batches as f64 },
+            mean_latency_ms: if requests == 0 {
+                0.0
+            } else {
+                lat_sum as f64 / requests as f64 / 1e6
+            },
+            p50_ms: LatencyHistogram::quantile_ms(&hist, 0.50),
+            p99_ms: LatencyHistogram::quantile_ms(&hist, 0.99),
+        }
+    }
+}
+
+impl<P: ShardProfile> Drop for FleetDispatcher<P> {
+    fn drop(&mut self) {
+        {
+            // Flag + Shutdown under the senders lock so the supervisor can
+            // never respawn a worker that would miss the Shutdown message.
+            let txs = self.senders.lock().unwrap();
+            self.shared.shutting_down.store(true, Ordering::Release);
+            for tx in txs.iter() {
+                let _ = tx.send(ShardMsg::Shutdown);
+            }
+        }
+        // Wake any admission waiters (they observe Shutdown) and the
+        // supervisor (in case every worker already exited).
+        self.shared.cv.notify_all();
+        let _ = self.monitor_tx.send(ShardExit { shard: SENTINEL, kind: ExitKind::Clean });
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatencyHistogram::default();
+        assert_eq!(LatencyHistogram::quantile_ms(&h.counts(), 0.5), 0.0);
+        // 100us, 1ms, 10ms, 100ms samples.
+        for &us in &[100u64, 1_000, 10_000, 100_000] {
+            h.record(us * 1_000);
+        }
+        let c = h.counts();
+        assert_eq!(c.iter().sum::<u64>(), 4);
+        let p50 = LatencyHistogram::quantile_ms(&c, 0.50);
+        let p99 = LatencyHistogram::quantile_ms(&c, 0.99);
+        assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        // p50 lands in the 1ms sample's bucket (upper bound ~1ms or ~2ms).
+        assert!(p50 >= 0.5 && p50 <= 4.0, "p50 {p50}");
+        // p99 covers the 100ms sample (upper bound 128ms bucket).
+        assert!(p99 >= 100.0 && p99 <= 300.0, "p99 {p99}");
+        // Sub-microsecond samples land in bucket 0.
+        assert_eq!(LatencyHistogram::bucket_of(500), 0);
+        assert_eq!(LatencyHistogram::bucket_of(1_500), 1);
+        assert_eq!(LatencyHistogram::bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn fleet_error_retryability() {
+        assert!(FleetError::Busy.retryable());
+        assert!(FleetError::ShardDied.retryable());
+        assert!(!FleetError::Failed("x".into()).retryable());
+        assert!(!FleetError::Shutdown.retryable());
+        assert!(format!("{}", FleetError::Busy).contains("retryable"));
+        assert_eq!(format!("{}", FleetError::Failed("boom".into())), "boom");
+    }
+
+    #[test]
+    fn shared_admission_is_exact() {
+        let s = FleetShared::new(2, 3);
+        assert!(s.try_admit() && s.try_admit() && s.try_admit());
+        assert!(!s.try_admit(), "4th admission must be rejected at max_inflight=3");
+        s.release();
+        assert!(s.try_admit(), "a released slot admits again");
+        assert!(!s.try_admit());
+    }
+}

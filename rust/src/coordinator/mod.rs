@@ -7,8 +7,17 @@
 //! account memory (Tables 16/17), and manage the two §3.3 extensions —
 //! partial convolutions (sliding-window length extension) and
 //! frequency-sparse convolutions (Table 10 block patterns).
+//!
+//! Serving topology: clients -> [`fleet::FleetDispatcher`] (admission
+//! bound + `(kind, bucket)` routing + least-outstanding-rows shard
+//! selection + supervised respawn) -> N shard workers, each running the
+//! [`service`] router/batcher/runtime loop on its own thread. The
+//! single-worker [`ConvService`] (and [`crate::server::ModelServer`]) are
+//! 1-shard facades over the same dispatcher, so every request in the
+//! crate takes the same admission path.
 
 pub mod batcher;
+pub mod fleet;
 pub mod memory;
 pub mod partial;
 pub mod router;
@@ -17,6 +26,7 @@ pub mod service;
 pub mod sparse;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use fleet::{FleetConfig, FleetDispatcher, FleetError, FleetStats};
 pub use memory::MemoryTracker;
 pub use router::Router;
 pub use scheduler::Scheduler;

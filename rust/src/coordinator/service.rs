@@ -1,30 +1,41 @@
-//! The convolution service: router + batcher + execution runtime on one
-//! thread.
+//! The convolution service: router + batcher + execution runtime behind
+//! the fleet admission path.
 //!
 //! Backends may be thread-affine (PJRT handles are raw pointers,
-//! `!Send`), so the service ships a [`BackendConfig`] into a dedicated
-//! thread, builds the `Runtime` there, and talks to clients over
-//! channels — requests are plain `Send` data, responses flow back through
-//! per-request reply channels. This is the request path the paper's
-//! serving numbers flow through: submit -> route by length -> batch ->
-//! single fused artifact call -> scatter replies.
+//! `!Send`), so each shard worker ships a [`BackendConfig`] into a
+//! dedicated thread, builds the `Runtime` there, and talks to clients
+//! over channels — requests are plain `Send` data, responses flow back
+//! through per-request [`ReplySlot`]s. This is the request path the
+//! paper's serving numbers flow through: submit -> route by length ->
+//! batch -> single fused artifact call -> scatter.
+//!
+//! [`ConvService`] is the single-worker facade: a 1-shard
+//! [`FleetDispatcher`] with unbounded admission, preserving the original
+//! service API. [`ConvService::start_sharded`] (and
+//! [`FleetDispatcher::conv`]) scale the same worker loop to N shards with
+//! `max_inflight` backpressure; [`ConvProfile`] is the
+//! [`ShardProfile`] gluing the worker loop into the fleet.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::format_err;
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::fleet::{
+    FleetConfig, FleetDispatcher, FleetReply, LatencyHistogram, ReplySlot, RoutePlan, ShardMsg,
+    ShardProfile,
+};
 use crate::coordinator::router::{ConvKind, Router};
 use crate::runtime::{Artifact, BackendConfig, HostTensor};
 use crate::util::Rng;
 
 /// One convolution request: a single batch row of `heads * len` samples
 /// per stream (1 stream for plain, 3 — u, v, w — for gated).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct ConvRequest {
     pub kind: ConvKind,
     /// Input length (must be <= the largest bucket).
@@ -33,16 +44,12 @@ pub struct ConvRequest {
     pub streams: Vec<Vec<f32>>,
 }
 
-/// The service's reply: the convolved row.
-pub type ConvReply = Result<Vec<f32>, String>;
+/// The service's reply: the convolved row, or a typed fleet error
+/// (worker failures arrive as [`crate::coordinator::fleet::FleetError::Failed`]).
+pub type ConvReply = FleetReply;
 
-enum Msg {
-    Submit { req: ConvRequest, reply: Sender<ConvReply>, t_submit: Instant },
-    SetFilter { kind: ConvKind, bucket: usize, k: Vec<f32>, done: Sender<Result<(), String>> },
-    Shutdown,
-}
-
-/// Live service statistics (lock-free reads from any thread).
+/// Live service statistics (lock-free reads from any thread). One
+/// instance per shard worker; instances survive worker respawns.
 #[derive(Debug, Default)]
 pub struct ServiceStats {
     pub requests: AtomicU64,
@@ -51,9 +58,23 @@ pub struct ServiceStats {
     pub latency_ns_sum: AtomicU64,
     pub latency_ns_max: AtomicU64,
     pub errors: AtomicU64,
+    /// Fixed-bucket latency histogram (p50/p99 without sample storage).
+    pub latency_hist: LatencyHistogram,
 }
 
 impl ServiceStats {
+    /// Record one successful end-to-end request latency.
+    pub fn record_latency(&self, ns: u64) {
+        self.latency_ns_sum.fetch_add(ns, Ordering::Relaxed);
+        self.latency_ns_max.fetch_max(ns, Ordering::Relaxed);
+        self.latency_hist.record(ns);
+    }
+
+    /// Latency quantile in milliseconds (histogram upper bound).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        LatencyHistogram::quantile_ms(&self.latency_hist.counts(), q)
+    }
+
     /// Mean end-to-end latency in milliseconds.
     pub fn mean_latency_ms(&self) -> f64 {
         let n = self.requests.load(Ordering::Relaxed);
@@ -73,11 +94,94 @@ impl ServiceStats {
     }
 }
 
-/// Handle to the running service.
+/// Control operations broadcast to every conv shard.
+#[derive(Debug, Clone)]
+pub enum ConvControl {
+    /// Install a filter bank for a `(kind, bucket)`; rows are `heads * len`.
+    SetFilter { kind: ConvKind, bucket: usize, k: Vec<f32> },
+}
+
+/// The convolution [`ShardProfile`]: routes requests by `(kind, bucket)`
+/// at admission and runs the router+batcher+runtime worker loop per
+/// shard.
+#[derive(Clone)]
+pub struct ConvProfile {
+    variant: String,
+    /// Sorted bucket lengths per kind, derived from the manifest once at
+    /// fleet start (plan-time routing must not touch the runtime).
+    buckets: Arc<BTreeMap<ConvKind, Vec<usize>>>,
+}
+
+impl ConvProfile {
+    /// Build the profile by indexing the backend's conv artifacts.
+    pub fn new(backend: &BackendConfig, variant: &str) -> crate::Result<Self> {
+        let runtime = backend.connect()?;
+        let router = Router::from_manifest(runtime.manifest(), variant)?;
+        let mut buckets = BTreeMap::new();
+        for kind in [ConvKind::Forward, ConvKind::Gated, ConvKind::Causal] {
+            let lens = router.bucket_lens(kind);
+            if !lens.is_empty() {
+                buckets.insert(kind, lens);
+            }
+        }
+        Ok(Self { variant: variant.to_string(), buckets: Arc::new(buckets) })
+    }
+
+    /// The kernel variant this profile serves ("monarch" / "baseline").
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    fn kind_tag(kind: ConvKind) -> u8 {
+        match kind {
+            ConvKind::Forward => 0,
+            ConvKind::Gated => 1,
+            ConvKind::Causal => 2,
+        }
+    }
+}
+
+impl ShardProfile for ConvProfile {
+    type Request = ConvRequest;
+    type Control = ConvControl;
+
+    fn plan(&self, req: &Self::Request) -> RoutePlan {
+        // Smallest bucket >= len; unroutable requests carry no key (the
+        // worker owns the rejection reply and its error accounting).
+        let key = self
+            .buckets
+            .get(&req.kind)
+            .and_then(|lens| lens.iter().find(|&&b| b >= req.len))
+            .map(|&b| (Self::kind_tag(req.kind), b));
+        RoutePlan { key, rows: 1 }
+    }
+
+    fn run_shard(
+        &self,
+        backend: &BackendConfig,
+        policy: &BatchPolicy,
+        stats: &Arc<ServiceStats>,
+        rx: Receiver<ShardMsg<Self>>,
+    ) -> crate::Result<()> {
+        let mut w = ServiceWorker::new(backend, &self.variant, policy.clone(), Arc::clone(stats))?;
+        w.run(rx);
+        Ok(())
+    }
+}
+
+impl FleetDispatcher<ConvProfile> {
+    /// Start a conv fleet: N router+batcher+runtime workers of the given
+    /// kernel variant behind one dispatcher.
+    pub fn conv(backend: BackendConfig, variant: &str, cfg: FleetConfig) -> crate::Result<Self> {
+        let profile = ConvProfile::new(&backend, variant)?;
+        FleetDispatcher::start(backend, profile, cfg)
+    }
+}
+
+/// Handle to the running single-worker service (a 1-shard fleet with
+/// unbounded admission — the original `ConvService` contract).
 pub struct ConvService {
-    tx: Sender<Msg>,
-    stats: Arc<ServiceStats>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    fleet: FleetDispatcher<ConvProfile>,
 }
 
 impl ConvService {
@@ -90,76 +194,59 @@ impl ConvService {
         variant: &str,
         policy: BatchPolicy,
     ) -> crate::Result<Self> {
-        let variant = variant.to_string();
-        let stats = Arc::new(ServiceStats::default());
-        let stats2 = Arc::clone(&stats);
-        let (tx, rx) = channel::<Msg>();
-        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-        let handle = std::thread::Builder::new()
-            .name(format!("conv-service-{variant}"))
-            .spawn(move || match ServiceWorker::new(&backend, &variant, policy, stats2) {
-                Ok(mut w) => {
-                    let _ = ready_tx.send(Ok(()));
-                    w.run(rx);
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(format!("{e:#}")));
-                }
-            })?;
-        ready_rx
-            .recv()
-            .map_err(|_| format_err!("service thread died during startup"))?
-            .map_err(|e| format_err!("service startup failed: {e}"))?;
-        Ok(Self { tx, stats, handle: Some(handle) })
+        Self::start_sharded(backend, variant, policy, 1, usize::MAX)
     }
 
-    /// Submit a request; the returned receiver yields the reply.
+    /// Start with `shards` workers and a fleet-wide `max_inflight`
+    /// admission bound (see [`FleetDispatcher`]). With bounded admission,
+    /// `submit` replies can carry the retryable
+    /// [`crate::coordinator::fleet::FleetError::Busy`].
+    pub fn start_sharded(
+        backend: BackendConfig,
+        variant: &str,
+        policy: BatchPolicy,
+        shards: usize,
+        max_inflight: usize,
+    ) -> crate::Result<Self> {
+        let fleet =
+            FleetDispatcher::conv(backend, variant, FleetConfig { shards, max_inflight, policy })?;
+        Ok(Self { fleet })
+    }
+
+    /// Submit a request; the returned receiver yields the reply. Never
+    /// blocks: admission failures arrive through the receiver as typed
+    /// errors (and, unlike the old single-thread path, are counted).
     pub fn submit(&self, req: ConvRequest) -> Receiver<ConvReply> {
-        let (reply, rx) = channel();
-        self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        let msg = Msg::Submit { req, reply, t_submit: Instant::now() };
-        if self.tx.send(msg).is_err() {
-            self.stats.errors.fetch_add(1, Ordering::Relaxed);
-        }
-        rx
+        self.fleet.submit_or_reply(req)
     }
 
-    /// Submit and wait (convenience).
+    /// Submit and wait (blocks for an admission slot, then the reply).
     pub fn call(&self, req: ConvRequest) -> crate::Result<Vec<f32>> {
-        self.submit(req)
-            .recv()
-            .map_err(|_| format_err!("service dropped the request"))?
-            .map_err(|e| format_err!(e))
+        self.fleet.call(req).map_err(|e| format_err!(e))
     }
 
-    /// Install a filter bank for a (kind, bucket); rows are `heads * len`.
+    /// Install a filter bank for a (kind, bucket) on every shard; rows
+    /// are `heads * len`.
     pub fn set_filter(&self, kind: ConvKind, bucket: usize, k: Vec<f32>) -> crate::Result<()> {
-        let (done, rx) = channel();
-        self.tx
-            .send(Msg::SetFilter { kind, bucket, k, done })
-            .map_err(|_| format_err!("service is down"))?;
-        rx.recv().map_err(|_| format_err!("service died"))?.map_err(|e| format_err!(e))
+        self.fleet.control(ConvControl::SetFilter { kind, bucket, k })
     }
 
-    /// Live statistics.
+    /// Live statistics of shard 0 (the only shard for `start`); use
+    /// [`ConvService::fleet`] for per-shard and rollup statistics.
     pub fn stats(&self) -> &ServiceStats {
-        &self.stats
+        self.fleet.shard_stats(0)
     }
-}
 
-impl Drop for ConvService {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+    /// The underlying dispatcher (fleet statistics, poison hook).
+    pub fn fleet(&self) -> &FleetDispatcher<ConvProfile> {
+        &self.fleet
     }
 }
 
 struct RowJob {
     streams: Vec<Vec<f32>>,
     len: usize,
-    reply: Sender<ConvReply>,
+    reply: ReplySlot,
     t_submit: Instant,
 }
 
@@ -194,7 +281,7 @@ impl ServiceWorker {
         })
     }
 
-    fn run(&mut self, rx: Receiver<Msg>) {
+    fn run(&mut self, rx: Receiver<ShardMsg<ConvProfile>>) {
         loop {
             // Sleep until the next queue deadline (or a short idle tick).
             let now = Instant::now();
@@ -205,17 +292,23 @@ impl ServiceWorker {
                 .min()
                 .unwrap_or(Duration::from_millis(50));
             match rx.recv_timeout(timeout) {
-                Ok(Msg::Submit { req, reply, t_submit }) => {
+                Ok(ShardMsg::Job { req, reply, t_submit }) => {
                     self.enqueue(req, reply, t_submit);
                 }
-                Ok(Msg::SetFilter { kind, bucket, k, done }) => {
+                Ok(ShardMsg::Control { op, done }) => {
+                    let ConvControl::SetFilter { kind, bucket, k } = op;
                     let r = self.check_filter(kind, bucket, &k);
                     if r.is_ok() {
                         self.filters.insert((kind, bucket), k);
                     }
                     let _ = done.send(r.map_err(|e| format!("{e:#}")));
                 }
-                Ok(Msg::Shutdown) => {
+                Ok(ShardMsg::Poison) => {
+                    // Failure-injection hook: die mid-stream. Queued jobs
+                    // unwind with the worker; their reply slots fail fast.
+                    panic!("conv shard worker poisoned (failure-injection hook)");
+                }
+                Ok(ShardMsg::Shutdown) => {
                     self.drain_all(true);
                     return;
                 }
@@ -241,12 +334,11 @@ impl ServiceWorker {
         Ok(())
     }
 
-    fn enqueue(&mut self, req: ConvRequest, reply: Sender<ConvReply>, t_submit: Instant) {
+    fn enqueue(&mut self, req: ConvRequest, reply: ReplySlot, t_submit: Instant) {
         let route = match self.router.route(req.kind, req.len) {
             Ok(r) => r,
             Err(e) => {
-                self.stats.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = reply.send(Err(format!("{e:#}")));
+                reply.fulfill(Err(format!("{e:#}")));
                 return;
             }
         };
@@ -254,8 +346,7 @@ impl ServiceWorker {
         if req.streams.len() != expect_streams
             || req.streams.iter().any(|s| s.len() != route.heads * req.len)
         {
-            self.stats.errors.fetch_add(1, Ordering::Relaxed);
-            let _ = reply.send(Err(format!(
+            reply.fulfill(Err(format!(
                 "request for {:?}/{} needs {} streams of {} f32s",
                 req.kind,
                 req.len,
@@ -305,16 +396,14 @@ impl ServiceWorker {
                 self.stats.rows_executed.fetch_add(batch.rows.len() as u64, Ordering::Relaxed);
                 for (job, row) in batch.rows.into_iter().zip(rows) {
                     let lat = t_done.duration_since(job.payload.t_submit).as_nanos() as u64;
-                    self.stats.latency_ns_sum.fetch_add(lat, Ordering::Relaxed);
-                    self.stats.latency_ns_max.fetch_max(lat, Ordering::Relaxed);
-                    let _ = job.payload.reply.send(Ok(row));
+                    self.stats.record_latency(lat);
+                    job.payload.reply.fulfill(Ok(row));
                 }
             }
             Err(e) => {
-                self.stats.errors.fetch_add(1, Ordering::Relaxed);
                 let msg = format!("{e:#}");
                 for job in batch.rows {
-                    let _ = job.payload.reply.send(Err(msg.clone()));
+                    job.payload.reply.fulfill(Err(msg.clone()));
                 }
             }
         }

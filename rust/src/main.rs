@@ -9,7 +9,8 @@
 //! flashfftconv eval-partial [--keeps 256,128,64]   # Table 7
 //! flashfftconv eval-sparse                   # Table 9 quality column
 //! flashfftconv extend       [--total-len N]  # Table 8 sliding-window
-//! flashfftconv serve        [--requests N]   # serving-path smoke + stats
+//! flashfftconv serve        [--requests N] [--shards S] [--max-inflight M]
+//!                                            # serving-fleet smoke + stats
 //! flashfftconv pathfinder   [--steps N]      # Table 2 train + accuracy
 //! flashfftconv costmodel    [--hw a100]      # Figure 4 series (CSV)
 //! ```
@@ -322,21 +323,35 @@ fn cmd_extend(dir: &str, args: &Args) -> flashfftconv::Result<()> {
     Ok(())
 }
 
-/// Serving-path smoke: submit random conv requests, print service stats.
+/// Serving-path smoke: submit random conv requests through the fleet
+/// dispatcher (1 shard by default), print the fleet statistics.
 fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
     let requests = args.get_usize("requests", 32)?;
     let len = args.get_usize("len", 1024)?;
     let variant = args.get("variant", "monarch");
     let wait_ms = args.get_usize("max-wait-ms", 5)?;
+    let shards = args.get_usize("shards", 1)?;
+    let max_inflight = args.get_usize("max-inflight", 256)?;
     args.finish()?;
     let policy = BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(wait_ms as u64) };
-    let service = ConvService::start(BackendConfig::Auto(dir.into()), &variant, policy)?;
+    let service = ConvService::start_sharded(
+        BackendConfig::Auto(dir.into()),
+        &variant,
+        policy,
+        shards,
+        max_inflight,
+    )?;
     let mut rng = Rng::new(1);
     let heads = 16usize;
     let mut pending = vec![];
     for _ in 0..requests {
         let u = rng.normal_vec(heads * len);
-        pending.push(service.submit(ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] }));
+        let req = ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] };
+        // Bounded admission can push back; block until the fleet admits.
+        match service.fleet().submit_blocking(req) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => flashfftconv::bail!("submit failed: {e}"),
+        }
     }
     let mut ok = 0;
     for rx in pending {
@@ -344,13 +359,16 @@ fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
             ok += 1;
         }
     }
-    let s = service.stats();
+    let f = service.fleet().stats();
     println!(
-        "served {ok}/{requests} rows  batches {}  occupancy {:.2}  mean latency {:.2}ms",
-        s.batches.load(std::sync::atomic::Ordering::Relaxed),
-        s.mean_occupancy(),
-        s.mean_latency_ms()
+        "served {ok}/{requests} rows  batches {}  occupancy {:.2}  mean latency {:.2}ms  \
+         p50 {:.2}ms  p99 {:.2}ms",
+        f.batches, f.mean_occupancy, f.mean_latency_ms, f.p50_ms, f.p99_ms
     );
+    println!("fleet: {}", f.summary());
+    for s in &f.shards {
+        println!("  {}", s.summary());
+    }
     Ok(())
 }
 

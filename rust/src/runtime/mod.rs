@@ -74,6 +74,11 @@ pub enum BackendConfig {
     /// The self-contained native CPU backend.
     #[default]
     Native,
+    /// The native backend with the conv engines' internal `(batch, head)`
+    /// row fan-out capped at this many threads. Shard fleets use
+    /// `NativeRowThreads(1)` so parallelism comes from the shard workers
+    /// instead of oversubscribing cores with per-engine thread pools.
+    NativeRowThreads(usize),
     /// Artifact directory when present (with the `pjrt` feature), the
     /// native backend otherwise.
     Auto(PathBuf),
@@ -87,6 +92,7 @@ impl BackendConfig {
     pub fn connect(&self) -> crate::Result<Runtime> {
         match self {
             BackendConfig::Native => Runtime::native(),
+            BackendConfig::NativeRowThreads(t) => Runtime::native_row_threads(*t),
             BackendConfig::Auto(dir) => Runtime::new(dir),
             #[cfg(feature = "pjrt")]
             BackendConfig::Pjrt(dir) => Runtime::pjrt(dir),
@@ -103,6 +109,26 @@ impl Runtime {
     /// The self-contained native CPU runtime (no artifacts needed).
     pub fn native() -> crate::Result<Self> {
         Ok(Self { backend: Box::new(native::NativeBackend::with_default_fleet()?) })
+    }
+
+    /// The native runtime with every conv artifact's internal row fan-out
+    /// capped at `threads` worker threads (`meta conv_threads`). Blocking
+    /// never changes per-row math, so results are bitwise identical to
+    /// [`Runtime::native`] at any thread count.
+    pub fn native_row_threads(threads: usize) -> crate::Result<Self> {
+        let (text, files) = native::default_fleet_parts();
+        let needle = "meta group conv\n";
+        // Fail loudly if the generated manifest shape drifts — a silent
+        // no-op here would quietly un-cap every conv engine's fan-out.
+        crate::ensure!(
+            text.contains(needle),
+            "native manifest has no {needle:?} lines to attach conv_threads to"
+        );
+        let text = text.replace(
+            needle,
+            &format!("meta group conv\nmeta conv_threads {}\n", threads.max(1)),
+        );
+        Self::native_from(&text, files)
     }
 
     /// Native runtime over an explicit manifest + fixture set (tests and

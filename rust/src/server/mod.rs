@@ -1,115 +1,191 @@
-//! Batched model-inference server (the Table 5 serving path).
+//! Batched model-inference serving (the Table 5 serving path).
 //!
 //! Serves a forward-pass artifact (`lm_fwd_logits` / `e2e_*`) behind a
-//! dynamic batcher on a dedicated thread (PJRT handles are thread-affine,
-//! and the native zoo engines keep per-artifact spectrum caches that
-//! benefit from the same affinity), reporting latency and throughput.
-//! On the default [`crate::runtime::native`] backend the served model is
-//! the [`crate::zoo::hyena`] gated long-conv LM, so
+//! dynamic batcher on dedicated worker threads (PJRT handles are
+//! thread-affine, and the native zoo engines keep per-artifact spectrum
+//! caches that benefit from the same affinity). On the default
+//! [`crate::runtime::native`] backend the served model is the
+//! [`crate::zoo::hyena`] gated long-conv LM, so
 //! `ModelServer::start(BackendConfig::Native, "lm_fwd_logits", ..)` works
 //! from a clean checkout with no feature flags; with the `pjrt` feature
-//! the same signatures execute compiled HLO. The offline environment has
-//! no tokio; the threaded design mirrors a vLLM-style router: accept ->
-//! queue -> fixed-shape batch -> execute -> scatter. Greedy decoding over
-//! a running server lives in [`crate::zoo::sample`].
+//! the same signatures execute compiled HLO.
+//!
+//! Requests flow through the shared [`crate::coordinator::fleet`]
+//! admission path: [`ModelServer`] is a 1-shard
+//! [`FleetDispatcher<ModelProfile>`] facade (accept -> admission ->
+//! queue -> fixed-shape batch -> execute -> scatter), and
+//! [`ModelServer::start_sharded`] runs N model workers behind the same
+//! dispatcher with `max_inflight` backpressure and supervised respawn.
+//! A failed hand-off can therefore never be silently dropped: every
+//! admitted request owns a reply slot that either answers or fails fast
+//! with a retryable error, counted in the statistics. The offline
+//! environment has no tokio; the threaded design mirrors a vLLM-style
+//! router. Greedy decoding over a running server lives in
+//! [`crate::zoo::sample`].
 
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::{bail, format_err};
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::fleet::{
+    FleetConfig, FleetDispatcher, FleetReply, ReplySlot, RoutePlan, ShardMsg, ShardProfile,
+};
 use crate::coordinator::service::ServiceStats;
 use crate::runtime::{Artifact, BackendConfig, HostTensor};
 
 /// A model inference request: one row of token ids.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct InferRequest {
     pub tokens: Vec<i32>,
 }
 
-/// Reply: logits for the last position (greedy-decode ready), or error.
-pub type InferReply = Result<Vec<f32>, String>;
+/// Reply: logits for the last position (greedy-decode ready), or a typed
+/// fleet error.
+pub type InferReply = FleetReply;
 
-enum Msg {
-    Submit { req: InferRequest, reply: Sender<InferReply>, t: Instant },
-    Shutdown,
+/// Model servers have no broadcast control operations (uninhabited).
+#[derive(Debug, Clone)]
+pub enum NoControl {}
+
+/// The LM-inference [`ShardProfile`]: one artifact, one bucket; each
+/// shard loads the artifact on its own thread.
+#[derive(Clone)]
+pub struct ModelProfile {
+    artifact: String,
+    seq_len: usize,
+    vocab: usize,
 }
 
-/// Handle to a running model server.
+impl ModelProfile {
+    /// Validate the artifact against the backend's manifest and capture
+    /// its serving shape.
+    pub fn new(backend: &BackendConfig, artifact: &str) -> crate::Result<Self> {
+        let runtime = backend.connect()?;
+        let spec = runtime.manifest().get(artifact)?;
+        if spec.meta("kind") != Some("lm_logits") {
+            bail!("artifact {artifact} is not an lm_logits artifact");
+        }
+        let seq_len = spec.meta_usize("seq_len").ok_or_else(|| format_err!("missing seq_len"))?;
+        let vocab = spec.meta_usize("vocab").ok_or_else(|| format_err!("missing vocab"))?;
+        spec.meta_usize("batch").ok_or_else(|| format_err!("missing batch"))?;
+        // Probe-load the artifact so a listed-but-unloadable entry (bad
+        // fixture, missing engine) fails server startup synchronously —
+        // matching the old ready-channel contract — instead of leaving a
+        // permanently dead shard behind an Ok handle.
+        runtime.load(artifact)?;
+        Ok(Self { artifact: artifact.to_string(), seq_len, vocab })
+    }
+
+    /// Context length of the served artifact.
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// Vocabulary size of the served artifact.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+}
+
+impl ShardProfile for ModelProfile {
+    type Request = InferRequest;
+    type Control = NoControl;
+
+    fn plan(&self, _req: &Self::Request) -> RoutePlan {
+        // One artifact, one bucket: the key is the context length.
+        RoutePlan { key: Some((0, self.seq_len)), rows: 1 }
+    }
+
+    fn run_shard(
+        &self,
+        backend: &BackendConfig,
+        policy: &BatchPolicy,
+        stats: &Arc<ServiceStats>,
+        rx: Receiver<ShardMsg<Self>>,
+    ) -> crate::Result<()> {
+        let mut w = Worker::new(backend, &self.artifact, policy.clone(), Arc::clone(stats))?;
+        w.run(rx);
+        Ok(())
+    }
+}
+
+impl FleetDispatcher<ModelProfile> {
+    /// Start a model-serving fleet over the named forward artifact.
+    pub fn model(backend: BackendConfig, artifact: &str, cfg: FleetConfig) -> crate::Result<Self> {
+        let profile = ModelProfile::new(&backend, artifact)?;
+        FleetDispatcher::start(backend, profile, cfg)
+    }
+}
+
+/// Handle to a running model server (a fleet facade; `start` keeps the
+/// original single-worker contract).
 pub struct ModelServer {
-    tx: Sender<Msg>,
-    stats: Arc<ServiceStats>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    fleet: FleetDispatcher<ModelProfile>,
     pub seq_len: usize,
     pub vocab: usize,
 }
 
 impl ModelServer {
-    /// Start serving the named forward artifact.
+    /// Start serving the named forward artifact on one worker with
+    /// unbounded admission.
     pub fn start(
         backend: BackendConfig,
         artifact: &str,
         policy: BatchPolicy,
     ) -> crate::Result<Self> {
-        let name = artifact.to_string();
-        let stats = Arc::new(ServiceStats::default());
-        let stats2 = Arc::clone(&stats);
-        let (tx, rx) = channel::<Msg>();
-        let (ready_tx, ready_rx) = channel::<Result<(usize, usize, usize), String>>();
-        let handle = std::thread::Builder::new().name("model-server".into()).spawn(move || {
-            match Worker::new(&backend, &name, policy, stats2) {
-                Ok(mut w) => {
-                    let _ = ready_tx.send(Ok((w.batch, w.seq_len, w.vocab)));
-                    w.run(rx);
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(format!("{e:#}")));
-                }
-            }
-        })?;
-        let (_, seq_len, vocab) = ready_rx
-            .recv()
-            .map_err(|_| format_err!("server thread died during startup"))?
-            .map_err(|e| format_err!("server startup failed: {e}"))?;
-        Ok(Self { tx, stats, handle: Some(handle), seq_len, vocab })
+        Self::start_sharded(backend, artifact, policy, 1, usize::MAX)
     }
 
-    /// Submit a request (tokens must be exactly `seq_len` long).
+    /// Start `shards` workers behind the fleet dispatcher with a
+    /// fleet-wide `max_inflight` admission bound.
+    pub fn start_sharded(
+        backend: BackendConfig,
+        artifact: &str,
+        policy: BatchPolicy,
+        shards: usize,
+        max_inflight: usize,
+    ) -> crate::Result<Self> {
+        let fleet = FleetDispatcher::model(
+            backend,
+            artifact,
+            FleetConfig { shards, max_inflight, policy },
+        )?;
+        let (seq_len, vocab) = (fleet.profile().seq_len(), fleet.profile().vocab());
+        Ok(Self { fleet, seq_len, vocab })
+    }
+
+    /// Submit a request (tokens must be exactly `seq_len` long). Never
+    /// blocks; admission failures arrive through the receiver as typed
+    /// errors and are counted — a failed hand-off is no longer silently
+    /// ignored.
     pub fn submit(&self, req: InferRequest) -> Receiver<InferReply> {
-        let (reply, rx) = channel();
-        self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        let _ = self.tx.send(Msg::Submit { req, reply, t: Instant::now() });
-        rx
+        self.fleet.submit_or_reply(req)
     }
 
-    /// Submit and wait.
+    /// Submit and wait (blocks for an admission slot, then the reply).
     pub fn call(&self, req: InferRequest) -> crate::Result<Vec<f32>> {
-        self.submit(req)
-            .recv()
-            .map_err(|_| format_err!("server dropped the request"))?
-            .map_err(|e| format_err!(e))
+        self.fleet.call(req).map_err(|e| format_err!(e))
     }
 
+    /// Live statistics of shard 0 (the only shard for `start`); use
+    /// [`ModelServer::fleet`] for per-shard and rollup statistics.
     pub fn stats(&self) -> &ServiceStats {
-        &self.stats
+        self.fleet.shard_stats(0)
     }
-}
 
-impl Drop for ModelServer {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+    /// The underlying dispatcher (fleet statistics, poison hook).
+    pub fn fleet(&self) -> &FleetDispatcher<ModelProfile> {
+        &self.fleet
     }
 }
 
 struct Job {
     tokens: Vec<i32>,
-    reply: Sender<InferReply>,
+    reply: ReplySlot,
     t: Instant,
 }
 
@@ -152,24 +228,30 @@ impl Worker {
         })
     }
 
-    fn run(&mut self, rx: Receiver<Msg>) {
+    fn run(&mut self, rx: Receiver<ShardMsg<ModelProfile>>) {
         loop {
             let now = Instant::now();
             let timeout = self.queue.deadline_in(now).unwrap_or(Duration::from_millis(50));
             match rx.recv_timeout(timeout) {
-                Ok(Msg::Submit { req, reply, t }) => {
+                Ok(ShardMsg::Job { req, reply, t_submit }) => {
                     if req.tokens.len() != self.seq_len {
-                        self.stats.errors.fetch_add(1, Ordering::Relaxed);
-                        let _ = reply.send(Err(format!(
+                        reply.fulfill(Err(format!(
                             "expected {} tokens, got {}",
                             self.seq_len,
                             req.tokens.len()
                         )));
                     } else {
-                        self.queue.push(Job { tokens: req.tokens, reply, t }, Instant::now());
+                        self.queue.push(
+                            Job { tokens: req.tokens, reply, t: t_submit },
+                            Instant::now(),
+                        );
                     }
                 }
-                Ok(Msg::Shutdown) => {
+                Ok(ShardMsg::Control { op, .. }) => match op {},
+                Ok(ShardMsg::Poison) => {
+                    panic!("model shard worker poisoned (failure-injection hook)");
+                }
+                Ok(ShardMsg::Shutdown) => {
                     self.drain(true);
                     return;
                 }
@@ -210,16 +292,14 @@ impl Worker {
                         let off = (i * self.seq_len + (self.seq_len - 1)) * self.vocab;
                         let out = logits[off..off + self.logits_len].to_vec();
                         let lat = t_done.duration_since(job.payload.t).as_nanos() as u64;
-                        self.stats.latency_ns_sum.fetch_add(lat, Ordering::Relaxed);
-                        self.stats.latency_ns_max.fetch_max(lat, Ordering::Relaxed);
-                        let _ = job.payload.reply.send(Ok(out));
+                        self.stats.record_latency(lat);
+                        job.payload.reply.fulfill(Ok(out));
                     }
                 }
                 Err(e) => {
-                    self.stats.errors.fetch_add(1, Ordering::Relaxed);
                     let msg = format!("{e:#}");
                     for job in batch.rows {
-                        let _ = job.payload.reply.send(Err(msg.clone()));
+                        job.payload.reply.fulfill(Err(msg.clone()));
                     }
                 }
             }

@@ -231,3 +231,97 @@ fn out_of_vocab_tokens_are_an_error() {
     let err = art.step(&[HostTensor::i32(tokens, &[batch, seq + 1])]).unwrap_err();
     assert!(format!("{err:#}").contains("out of range"), "{err:#}");
 }
+
+#[test]
+fn shard_death_respawns_and_fails_fast() {
+    // Kill a shard worker mid-stream (poison hook) while requests sit in
+    // its batcher: the dispatcher must fail that shard's in-flight work
+    // fast with a retryable error (no hung clients), the surviving shard
+    // must complete its requests, the supervisor must respawn the dead
+    // worker (restart counter), and subsequent requests must succeed.
+    use flashfftconv::coordinator::fleet::{FleetConfig, FleetDispatcher, FleetError};
+    use flashfftconv::coordinator::service::ConvRequest;
+    use flashfftconv::coordinator::BatchPolicy;
+    use flashfftconv::util::Rng;
+    use std::time::{Duration, Instant};
+
+    const HEADS: usize = 16;
+    let fleet = FleetDispatcher::conv(
+        BackendConfig::NativeRowThreads(1),
+        "monarch",
+        FleetConfig {
+            shards: 2,
+            max_inflight: 1024,
+            // Batch capacity is clamped to the artifact's batch dim (2),
+            // so keep one request per bucket per shard in flight: the
+            // four Forward buckets 256/1024/4096 + Causal 512 spread one
+            // job into each shard's queues under least-outstanding
+            // balancing, none flushing before the long deadline.
+            policy: BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(800) },
+        },
+    )
+    .expect("fleet starts");
+
+    let mut rng = Rng::new(77);
+    let mut pending = vec![];
+    for &len in &[256usize, 1024, 4096] {
+        for _ in 0..2 {
+            let u = rng.normal_vec(HEADS * len);
+            let req =
+                ConvRequest { kind: flashfftconv::coordinator::router::ConvKind::Forward, len, streams: vec![u] };
+            pending.push(fleet.submit(req).expect("admitted"));
+        }
+    }
+    fleet.poison_shard(0);
+
+    let (mut ok, mut died) = (0usize, 0usize);
+    for rx in pending {
+        match rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("no hung clients: every in-flight request must get a reply")
+        {
+            Ok(row) => {
+                assert!(!row.is_empty() && row.iter().all(|v| v.is_finite()));
+                ok += 1;
+            }
+            Err(FleetError::ShardDied) => died += 1,
+            Err(e) => panic!("unexpected reply error: {e}"),
+        }
+    }
+    assert!(died >= 1, "the poisoned shard must fail its in-flight requests fast");
+    assert!(ok >= 1, "the surviving shard must complete its requests (ok={ok} died={died})");
+
+    // The supervisor records the respawn.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while fleet.stats().restarts == 0 {
+        assert!(Instant::now() < deadline, "supervisor never respawned the shard");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let stats = fleet.stats();
+    assert!(stats.restarts >= 1);
+    assert!(stats.shard_deaths >= died as u64);
+    assert_eq!(stats.inflight, 0, "failed-fast slots must be released");
+
+    // Subsequent requests succeed once the respawned worker is back (a
+    // submit can race the dead window, so retry on retryable errors).
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let u = rng.normal_vec(HEADS * 256);
+        let req = ConvRequest {
+            kind: flashfftconv::coordinator::router::ConvKind::Forward,
+            len: 256,
+            streams: vec![u],
+        };
+        match fleet.call(req) {
+            Ok(row) => {
+                assert_eq!(row.len(), HEADS * 256);
+                break;
+            }
+            Err(e) if e.retryable() => {
+                assert!(Instant::now() < deadline, "fleet never recovered after the respawn");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => panic!("unexpected error after respawn: {e}"),
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Fleet end-to-end tests: concurrent-client soak over a 4-shard
+//! dispatcher (zero lost replies, outputs bitwise-equal to a direct
+//! single-worker `ConvService`, statistics that reconcile with the
+//! client-side counts), backpressure exactness, blocking admission, and
+//! the ModelServer silent-drop regression.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use flashfftconv::coordinator::fleet::{FleetConfig, FleetDispatcher, FleetError, FleetReply};
+use flashfftconv::coordinator::router::ConvKind;
+use flashfftconv::coordinator::service::{ConvProfile, ConvRequest, ConvService};
+use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::runtime::BackendConfig;
+use flashfftconv::server::{InferRequest, ModelServer};
+use flashfftconv::util::Rng;
+
+const HEADS: usize = 16;
+
+fn conv_fleet(
+    shards: usize,
+    max_inflight: usize,
+    batch_size: usize,
+    wait_ms: u64,
+) -> FleetDispatcher<ConvProfile> {
+    FleetDispatcher::conv(
+        BackendConfig::NativeRowThreads(1),
+        "monarch",
+        FleetConfig {
+            shards,
+            max_inflight,
+            policy: BatchPolicy {
+                batch_size,
+                max_wait: Duration::from_millis(wait_ms),
+            },
+        },
+    )
+    .expect("fleet starts")
+}
+
+fn forward(len: usize, u: Vec<f32>) -> ConvRequest {
+    ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] }
+}
+
+/// The soak workload's request length for client `c`, request `i`:
+/// mostly the 256 bucket (some padded), every 4th in the 1024 bucket.
+fn soak_len(c: usize, i: usize) -> usize {
+    match (c + i) % 4 {
+        0 => 1024,
+        1 => 200, // pads into 256
+        _ => 256,
+    }
+}
+
+#[test]
+fn soak_concurrent_clients_bitwise_parity_and_reconciled_stats() {
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 64;
+
+    let fleet = conv_fleet(4, 64, 2, 2);
+    let single = ConvService::start(
+        BackendConfig::Native,
+        "monarch",
+        BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(1) },
+    )
+    .expect("reference service starts");
+
+    // Identical filter banks on both sides (broadcast to all 4 shards).
+    let mut rng = Rng::new(4242);
+    for bucket in [256usize, 1024] {
+        let k = rng.normal_vec(HEADS * bucket);
+        fleet
+            .control(flashfftconv::coordinator::service::ConvControl::SetFilter {
+                kind: ConvKind::Forward,
+                bucket,
+                k: k.clone(),
+            })
+            .expect("fleet filter installs");
+        single.set_filter(ConvKind::Forward, bucket, k).expect("single filter installs");
+    }
+
+    let busy_total = AtomicU64::new(0);
+    let replies_total = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let fleet = &fleet;
+            let single = &single;
+            let busy_total = &busy_total;
+            let replies_total = &replies_total;
+            s.spawn(move || {
+                let mut rng = Rng::new(9_000 + c as u64);
+                let mut pending: Vec<(usize, Vec<f32>, Receiver<FleetReply>)> = vec![];
+                let mut done: Vec<(usize, Vec<f32>, Vec<f32>)> = vec![];
+                for i in 0..PER_CLIENT {
+                    let len = soak_len(c, i);
+                    let u = rng.normal_vec(HEADS * len);
+                    let mut req = forward(len, u.clone());
+                    loop {
+                        match fleet.try_submit(req) {
+                            Ok(rx) => {
+                                pending.push((len, u.clone(), rx));
+                                break;
+                            }
+                            Err((r, FleetError::Busy)) => {
+                                req = r;
+                                busy_total.fetch_add(1, Ordering::Relaxed);
+                                // Drain one of our own to free a slot.
+                                match pending.pop() {
+                                    Some((len, u, rx)) => {
+                                        let y = rx
+                                            .recv()
+                                            .expect("no lost replies")
+                                            .expect("conv ok");
+                                        done.push((len, u, y));
+                                    }
+                                    None => std::thread::sleep(Duration::from_micros(200)),
+                                }
+                            }
+                            Err((_, e)) => panic!("unexpected submit error: {e}"),
+                        }
+                    }
+                }
+                for (len, u, rx) in pending {
+                    let y = rx.recv().expect("no lost replies").expect("conv ok");
+                    done.push((len, u, y));
+                }
+                assert_eq!(done.len(), PER_CLIENT, "client {c} lost replies");
+                replies_total.fetch_add(done.len() as u64, Ordering::Relaxed);
+                // Bitwise parity vs the direct single-worker service.
+                for (len, u, y) in done {
+                    assert_eq!(y.len(), HEADS * len);
+                    let want = single.call(forward(len, u)).expect("single-worker conv ok");
+                    assert_eq!(y, want, "client {c}: fleet output diverged from single worker");
+                }
+            });
+        }
+    });
+
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(replies_total.load(Ordering::Relaxed), total, "zero lost replies");
+
+    // Fleet statistics reconcile with the client-side counts.
+    let stats = fleet.stats();
+    assert_eq!(stats.completed, total, "every admitted request settled");
+    assert_eq!(stats.requests, total, "dispatched == admitted");
+    assert_eq!(stats.rows_executed, total);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.shard_deaths, 0);
+    assert_eq!(stats.restarts, 0);
+    assert_eq!(stats.inflight, 0, "quiescent fleet holds no slots");
+    assert_eq!(stats.busy_rejections, busy_total.load(Ordering::Relaxed));
+    assert_eq!(stats.submitted, total + stats.busy_rejections);
+    let per_shard_sum: u64 = stats.shards.iter().map(|s| s.requests).sum();
+    assert_eq!(per_shard_sum, total);
+    let used = stats.shards.iter().filter(|s| s.requests > 0).count();
+    assert!(used >= 2, "load balancing must spread 512 requests past one shard (used {used})");
+    assert!(stats.p50_ms > 0.0 && stats.p50_ms <= stats.p99_ms);
+    assert!(stats.mean_occupancy >= 1.0);
+}
+
+#[test]
+fn busy_exactly_at_max_inflight_never_spurious() {
+    // One request per bucket (each below the per-bucket batch capacity)
+    // plus a long deadline: admitted requests deterministically stay in
+    // flight until the deadline flush, so the inflight gauge is exact.
+    // Buckets used: Forward 256/1024/4096 + Causal 512 — one request in
+    // each of four distinct batcher queues.
+    let fleet = conv_fleet(1, 4, 2, 250);
+    let mut rng = Rng::new(7);
+    for round in 0..3 {
+        let mut pending = vec![];
+        // Exactly max_inflight admissions succeed, with no spurious Busy.
+        for (i, &len) in [256usize, 1024, 4096].iter().enumerate() {
+            let u = rng.normal_vec(HEADS * len);
+            match fleet.submit(forward(len, u)) {
+                Ok(rx) => pending.push(rx),
+                Err(e) => panic!("round {round}: admission {i} spuriously rejected: {e}"),
+            }
+        }
+        {
+            let u = rng.normal_vec(HEADS * 512);
+            let req = ConvRequest { kind: ConvKind::Causal, len: 512, streams: vec![u] };
+            match fleet.submit(req) {
+                Ok(rx) => pending.push(rx),
+                Err(e) => panic!("round {round}: causal admission spuriously rejected: {e}"),
+            }
+        }
+        // The next submits are rejected exactly at the bound.
+        for _ in 0..2 {
+            let u = rng.normal_vec(HEADS * 256);
+            match fleet.submit(forward(256, u)) {
+                Err(FleetError::Busy) => {}
+                other => panic!("round {round}: expected Busy at the bound, got {other:?}"),
+            }
+        }
+        assert_eq!(fleet.stats().inflight, 4);
+        for rx in pending {
+            rx.recv().expect("fleet alive").expect("conv ok");
+        }
+        // Slots are released before replies are observable: the next
+        // round's admissions must not see stale occupancy.
+    }
+    let stats = fleet.stats();
+    assert_eq!(stats.busy_rejections, 6);
+    assert_eq!(stats.completed, 12);
+    assert_eq!(stats.submitted, 18);
+}
+
+#[test]
+fn blocking_call_waits_out_backpressure() {
+    let fleet = conv_fleet(1, 1, 4, 120);
+    let mut rng = Rng::new(11);
+    let u = rng.normal_vec(HEADS * 256);
+    let rx = fleet.submit(forward(256, u)).expect("first request admits");
+    // The bound is reached: non-blocking submit pushes back...
+    let u2 = rng.normal_vec(HEADS * 256);
+    assert_eq!(fleet.submit(forward(256, u2.clone())).err(), Some(FleetError::Busy));
+    // ...but the blocking call waits for the slot and completes.
+    std::thread::scope(|s| {
+        let fleet = &fleet;
+        let req = forward(256, u2);
+        let caller = s.spawn(move || fleet.call(req));
+        let y1 = rx.recv().expect("fleet alive").expect("conv ok");
+        assert_eq!(y1.len(), HEADS * 256);
+        let y2 =
+            caller.join().expect("caller thread").expect("blocking call admits and succeeds");
+        assert_eq!(y2.len(), HEADS * 256);
+    });
+    let stats = fleet.stats();
+    assert_eq!(stats.busy_rejections, 1, "the blocking call never counts as Busy");
+    assert_eq!(stats.completed, 2);
+}
+
+#[test]
+fn model_server_counts_failed_handoffs_instead_of_silent_drop() {
+    // Regression: ModelServer::submit used to ignore a failed hand-off to
+    // a dead worker without bumping stats.errors, leaving the client with
+    // a disconnected channel and no accounting. On the fleet admission
+    // path the reply slot fails fast (typed, retryable) and is counted.
+    let server = ModelServer::start(
+        BackendConfig::Native,
+        "lm_fwd_logits",
+        BatchPolicy { batch_size: 4, max_wait: Duration::from_millis(400) },
+    )
+    .expect("server starts");
+    let tokens = vec![1i32; server.seq_len];
+
+    let rx = server.submit(InferRequest { tokens: tokens.clone() });
+    server.fleet().poison_shard(0);
+    let reply = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("the in-flight request must receive an explicit reply, not a silent drop");
+    assert_eq!(reply, Err(FleetError::ShardDied), "fail-fast must be typed and retryable");
+    assert!(reply.unwrap_err().retryable());
+    assert!(
+        server.stats().errors.load(Ordering::Relaxed) >= 1,
+        "the failed hand-off must be counted"
+    );
+
+    // The supervisor respawns the worker; subsequent requests succeed.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        match server.fleet().call(InferRequest { tokens: tokens.clone() }) {
+            Ok(logits) => {
+                assert_eq!(logits.len(), server.vocab);
+                break;
+            }
+            Err(e) if e.retryable() => {
+                assert!(Instant::now() < deadline, "respawned worker never came back");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => panic!("unexpected error after respawn: {e}"),
+        }
+    }
+    let stats = server.fleet().stats();
+    assert!(stats.restarts >= 1, "the supervisor must record the respawn");
+    assert!(stats.shard_deaths >= 1);
+}

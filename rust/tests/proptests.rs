@@ -522,3 +522,118 @@ fn prop_rng_uniform_bounds() {
         assert!((0.0..1.0).contains(&v));
     }
 }
+
+#[test]
+fn prop_fleet_reply_pairing_across_shards() {
+    // Any interleaving of submits/flushes across shards must preserve
+    // per-request reply pairing (no cross-wired replies). Convolution is
+    // linear, so a constant-valued input row c*ones must come back as
+    // c * y1 where y1 is the fleet's response to all-ones — a reply wired
+    // to the wrong request has a wildly wrong scale.
+    use flashfftconv::coordinator::fleet::{FleetConfig, FleetDispatcher, FleetError};
+    use flashfftconv::coordinator::router::ConvKind;
+    use flashfftconv::coordinator::service::ConvRequest;
+    use flashfftconv::runtime::BackendConfig;
+
+    const HEADS: usize = 16;
+    let fleet = FleetDispatcher::conv(
+        BackendConfig::NativeRowThreads(1),
+        "monarch",
+        FleetConfig {
+            shards: 3,
+            max_inflight: 16,
+            policy: BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(1) },
+        },
+    )
+    .expect("fleet starts");
+
+    let lens = [256usize, 200, 1024];
+    let ones: Vec<Vec<f32>> = lens
+        .iter()
+        .map(|&len| {
+            fleet
+                .call(ConvRequest {
+                    kind: ConvKind::Forward,
+                    len,
+                    streams: vec![vec![1.0; HEADS * len]],
+                })
+                .expect("baseline all-ones conv")
+        })
+        .collect();
+
+    prop::forall_ok(
+        "fleet preserves reply pairing",
+        31,
+        prop::default_cases(),
+        |rng| {
+            let burst = 1 + gen::index(rng, 0, 20);
+            let picks: Vec<(usize, f64)> = (0..burst)
+                .map(|_| (gen::index(rng, 0, lens.len()), 1.0 + gen::index(rng, 0, 97) as f64))
+                .collect();
+            picks
+        },
+        |picks| {
+            let mut pending = vec![];
+            for &(li, c) in picks {
+                let len = lens[li];
+                let mut req = ConvRequest {
+                    kind: ConvKind::Forward,
+                    len,
+                    streams: vec![vec![c as f32; HEADS * len]],
+                };
+                loop {
+                    match fleet.try_submit(req) {
+                        Ok(rx) => {
+                            pending.push((li, c, rx));
+                            break;
+                        }
+                        Err((r, FleetError::Busy)) => {
+                            req = r;
+                            // Flush pressure: consume the oldest pending.
+                            if pending.is_empty() {
+                                std::thread::sleep(Duration::from_micros(100));
+                            } else {
+                                let (li, c, rx) = pending.remove(0);
+                                check_reply(&ones, &lens, li, c, rx)?;
+                            }
+                        }
+                        Err((_, e)) => return Err(format!("submit failed: {e}")),
+                    }
+                }
+            }
+            // Consume in reverse order to stress out-of-order clients.
+            while let Some((li, c, rx)) = pending.pop() {
+                check_reply(&ones, &lens, li, c, rx)?;
+            }
+            Ok(())
+        },
+    );
+
+    fn check_reply(
+        ones: &[Vec<f32>],
+        lens: &[usize],
+        li: usize,
+        c: f64,
+        rx: std::sync::mpsc::Receiver<Result<Vec<f32>, FleetError>>,
+    ) -> Result<(), String> {
+        let y = rx
+            .recv()
+            .map_err(|_| "lost reply".to_string())?
+            .map_err(|e| format!("conv failed: {e}"))?;
+        let base = &ones[li];
+        if y.len() != base.len() {
+            return Err(format!("reply length {} != expected {}", y.len(), base.len()));
+        }
+        let scale = base.iter().map(|v| v.abs() as f64).fold(1.0f64, f64::max) * c;
+        for (j, (&got, &b)) in y.iter().zip(base.iter()).enumerate() {
+            let want = c * b as f64;
+            if (got as f64 - want).abs() > 1e-3 * scale.max(1.0) {
+                return Err(format!(
+                    "len {} slot {j}: got {got}, want {want:.4} (c={c}) — cross-wired reply?",
+                    lens[li]
+                ));
+            }
+        }
+        Ok(())
+    }
+}
