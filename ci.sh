@@ -89,6 +89,40 @@ else
         && echo "BENCH_table3.json OK (grep check; python3 unavailable)"
 fi
 
+# Memory artifact: the table16 bench measures steady-state allocations
+# per request (fresh-alloc plan wrappers vs the workspace hot path) and
+# workspace peak bytes; the workspace refactor's allocation drop must be
+# visible in BENCH_memory.json.
+echo "==> memory smoke: cargo bench --bench table16_memory"
+rm -f BENCH_memory.json
+cargo bench --bench table16_memory >/dev/null
+test -s BENCH_memory.json || { echo "FAIL: BENCH_memory.json missing or empty"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PY'
+import json
+recs = json.load(open("BENCH_memory.json"))
+by = {r["name"]: r for r in recs}
+for r in recs:
+    missing = {"name", "n", "allocs_per_request", "bytes_per_request",
+               "workspace_peak_bytes"} - set(r)
+    assert not missing, f"record missing {missing}: {r}"
+fresh = by.get("plan_conv_fresh")
+ws = by.get("plan_conv_ws")
+assert fresh and ws, f"missing memory records: {sorted(by)}"
+assert ws["allocs_per_request"] < 1.0, \
+    f"workspace path must be allocation-free at steady state: {ws}"
+assert fresh["allocs_per_request"] > ws["allocs_per_request"], \
+    f"no allocation drop: fresh={fresh} ws={ws}"
+assert ws["workspace_peak_bytes"] > 0, f"workspace peak missing: {ws}"
+print(f"BENCH_memory.json OK (allocs/request {fresh['allocs_per_request']:.0f} -> "
+      f"{ws['allocs_per_request']:.0f}, ws peak {ws['workspace_peak_bytes']} B)")
+PY
+else
+    grep -q '"plan_conv_ws"' BENCH_memory.json \
+        && grep -q '"plan_conv_fresh"' BENCH_memory.json \
+        && echo "BENCH_memory.json OK (grep check; python3 unavailable)"
+fi
+
 lint_mode="${FFC_CI_LINT:-advisory}"
 
 if cargo fmt --version >/dev/null 2>&1; then

@@ -1,13 +1,101 @@
-//! Tables 16/17: memory footprint model, plain and gated convolutions.
+//! Tables 16/17: memory footprint model, plain and gated convolutions —
+//! plus *measured* steady-state allocation behavior of the serving hot
+//! path (`BENCH_memory.json`).
 //!
-//! Reproduces the paper's memory-reduction columns from the component
-//! model in `coordinator::memory` (fusion keeps only the output resident;
-//! recomputation drops backward intermediates; past the fusion bound one
-//! packed intermediate spills). Scaled to the paper's B=64, H=768.
+//! The first half reproduces the paper's memory-reduction columns from
+//! the component model in `coordinator::memory` (fusion keeps only the
+//! output resident; recomputation drops backward intermediates; past the
+//! fusion bound one packed intermediate spills). Scaled to the paper's
+//! B=64, H=768.
+//!
+//! The second half measures this crate's own allocation discipline with
+//! a counting global allocator: steady-state heap allocations per
+//! request through (a) the allocate-internally plan wrappers (the
+//! pre-workspace behavior), (b) the workspace-threaded zero-alloc path,
+//! and (c) a full engine call, together with the workspace peak bytes.
+//! ci.sh validates the emitted artifact and the before/after drop.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use flashfftconv::bench::Table;
 use flashfftconv::coordinator::memory;
 use flashfftconv::costmodel::A100;
+use flashfftconv::fft::plan;
+use flashfftconv::fft::workspace::ConvWorkspace;
+use flashfftconv::runtime::{HostTensor, Runtime};
+use flashfftconv::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Counting allocator: every heap allocation on any thread is tallied.
+// ---------------------------------------------------------------------------
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn counters() -> (u64, u64) {
+    (ALLOCS.load(Ordering::SeqCst), ALLOC_BYTES.load(Ordering::SeqCst))
+}
+
+/// One measured record for the JSON artifact.
+struct MemRecord {
+    name: String,
+    n: usize,
+    allocs_per_request: f64,
+    bytes_per_request: f64,
+    workspace_peak_bytes: u64,
+}
+
+fn records_json(recs: &[MemRecord]) -> String {
+    let rows: Vec<String> = recs
+        .iter()
+        .map(|r| {
+            format!(
+                "  {{\"name\": \"{}\", \"n\": {}, \"allocs_per_request\": {:.1}, \
+                 \"bytes_per_request\": {:.1}, \"workspace_peak_bytes\": {}}}",
+                r.name, r.n, r.allocs_per_request, r.bytes_per_request, r.workspace_peak_bytes
+            )
+        })
+        .collect();
+    format!("[\n{}\n]\n", rows.join(",\n"))
+}
+
+/// Measure steady-state allocations per request of `f` over `reqs`
+/// repetitions (caller warms up first).
+fn measure<F: FnMut()>(reqs: u64, mut f: F) -> (f64, f64) {
+    let (a0, b0) = counters();
+    for _ in 0..reqs {
+        f();
+    }
+    let (a1, b1) = counters();
+    ((a1 - a0) as f64 / reqs as f64, (b1 - b0) as f64 / reqs as f64)
+}
 
 fn gb(x: u64) -> String {
     format!("{:.2}", x as f64 / 1e9)
@@ -65,4 +153,95 @@ fn main() {
         t.row(vec![fl.to_string(), gb(memory::partial_train_bytes(8, 864, 8192, fl))]);
     }
     t.print();
+
+    // -----------------------------------------------------------------------
+    // Measured: steady-state allocations per request, fresh-alloc wrappers
+    // vs the workspace-threaded hot path, plus a full engine call.
+    // -----------------------------------------------------------------------
+    let reqs = 16u64;
+    let mut recs: Vec<MemRecord> = vec![];
+
+    {
+        let (n, rows) = (4096usize, 8usize);
+        let rp = plan::real_plan(n, 2).expect("plan");
+        let mut rng = Rng::new(0x16A);
+        let u: Vec<f64> = (0..rows * n).map(|_| rng.normal()).collect();
+        let kb: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (kre, kim) = rp.rfft_rows(&kb, 1);
+
+        // (a) The allocate-internally wrappers — the pre-workspace
+        // behavior every request used to pay.
+        let _ = rp.conv_rows(&u, rows, &kre, &kim, |_| 0); // warm the registries
+        let (apr, bpr) = measure(reqs, || {
+            std::hint::black_box(rp.conv_rows(&u, rows, &kre, &kim, |_| 0));
+        });
+        recs.push(MemRecord {
+            name: "plan_conv_fresh".into(),
+            n,
+            allocs_per_request: apr,
+            bytes_per_request: bpr,
+            workspace_peak_bytes: 0,
+        });
+
+        // (b) The workspace path: warm once, then steady state.
+        let mut ws = ConvWorkspace::new();
+        let mut y = vec![0.0f64; rows * n];
+        rp.conv_rows_into(&u, rows, &kre, &kim, |_| 0, &mut y, &mut ws);
+        ws.reset();
+        let (apr, bpr) = measure(reqs, || {
+            rp.conv_rows_into(&u, rows, &kre, &kim, |_| 0, &mut y, &mut ws);
+        });
+        let s = ws.stats();
+        recs.push(MemRecord {
+            name: "plan_conv_ws".into(),
+            n,
+            allocs_per_request: apr,
+            bytes_per_request: bpr,
+            workspace_peak_bytes: s.peak_bytes,
+        });
+        println!(
+            "\nplan-layer steady state at n={n}, rows={rows}: fresh {:.1} allocs/req -> \
+             workspace {apr:.1} allocs/req (ws peak {}KB, cold misses {})",
+            recs[0].allocs_per_request,
+            s.peak_bytes / 1024,
+            s.allocs
+        );
+    }
+
+    {
+        // (c) Full engine call (single row-block worker, the fleet's
+        // shard configuration): request-path allocations around a
+        // zero-alloc plan core.
+        let n = 1024usize;
+        let rt = Runtime::native_row_threads(1).expect("native runtime");
+        let mut art = rt.load("conv_fwd_monarch_n1024").expect("artifact");
+        let (b, h) = (2usize, 16usize);
+        let mut rng = Rng::new(0x16B);
+        let u = HostTensor::f32(rng.normal_vec(b * h * n), &[b, h, n]);
+        let k = HostTensor::f32(rng.normal_vec(h * n), &[h, n]);
+        art.call(&[u.clone(), k.clone()]).expect("warm call");
+        let (apr, bpr) = measure(reqs, || {
+            art.call(&[u.clone(), k.clone()]).expect("steady call");
+        });
+        let ws = art.workspace_stats().unwrap_or_default();
+        recs.push(MemRecord {
+            name: "conv_engine_call".into(),
+            n,
+            allocs_per_request: apr,
+            bytes_per_request: bpr,
+            workspace_peak_bytes: ws.peak_bytes,
+        });
+        println!(
+            "engine steady state at n={n}: {apr:.1} allocs/call, {:.0} bytes/call, \
+             ws peak {}KB",
+            bpr,
+            ws.peak_bytes / 1024
+        );
+    }
+
+    // Anchor to the workspace root: cargo runs bench executables with
+    // the package root as CWD.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_memory.json");
+    std::fs::write(path, records_json(&recs)).expect("write BENCH_memory.json");
+    println!("wrote {path}");
 }

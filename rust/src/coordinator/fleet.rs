@@ -6,8 +6,12 @@
 //!
 //! * **Routing** — every request is planned into a `(kind, bucket)` route
 //!   key ([`ShardProfile::plan`]); the dispatcher picks the shard with the
-//!   least outstanding rows (ties prefer the key's affinity shard so
-//!   same-bucket requests keep batching together).
+//!   least outstanding *modeled work* — each request carries a §3.2
+//!   cost-model weight for its bucket ([`RoutePlan::cost`]), so a shard
+//!   holding a few long-sequence rows is correctly seen as busier than
+//!   one holding many short rows (raw row counts misroute mixed-bucket
+//!   traffic). Ties prefer the key's affinity shard so same-bucket
+//!   requests keep batching together.
 //! * **Backpressure** — admission is bounded by `max_inflight`:
 //!   [`FleetDispatcher::submit`] returns [`FleetError::Busy`] exactly when
 //!   the fleet-wide in-flight count has reached the bound, and
@@ -149,7 +153,9 @@ struct FleetShared {
     inflight: Mutex<usize>,
     /// Signalled on every completion (admission waiters) and shutdown.
     cv: Condvar,
-    /// Outstanding *rows* per shard (the load-balancing signal).
+    /// Outstanding modeled *cost* per shard (the load-balancing signal):
+    /// the sum of [`RoutePlan::cost`] over dispatched-but-unanswered
+    /// requests.
     outstanding: Vec<AtomicU64>,
     alive: Vec<AtomicBool>,
     /// Permanently-dead shards (worker start failed; never respawned).
@@ -220,9 +226,10 @@ impl FleetShared {
         self.cv.notify_all();
     }
 
-    /// Finish one dispatched request on `shard`.
-    fn complete(&self, shard: usize, rows: u64) {
-        self.outstanding[shard].fetch_sub(rows, Ordering::Relaxed);
+    /// Finish one dispatched request on `shard`, returning its modeled
+    /// cost to the balancer.
+    fn complete(&self, shard: usize, cost: u64) {
+        self.outstanding[shard].fetch_sub(cost, Ordering::Relaxed);
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.release();
     }
@@ -247,7 +254,7 @@ pub struct ReplySlot {
     shared: Arc<FleetShared>,
     stats: Arc<ServiceStats>,
     shard: usize,
-    rows: u64,
+    cost: u64,
 }
 
 impl ReplySlot {
@@ -256,9 +263,9 @@ impl ReplySlot {
         shared: Arc<FleetShared>,
         stats: Arc<ServiceStats>,
         shard: usize,
-        rows: u64,
+        cost: u64,
     ) -> Self {
-        Self { client: Some(client), shared, stats, shard, rows }
+        Self { client: Some(client), shared, stats, shard, cost }
     }
 
     /// Deliver the worker's answer (errors become [`FleetError::Failed`]).
@@ -274,7 +281,7 @@ impl ReplySlot {
             // Release the admission slot *before* the reply becomes
             // observable: a client that sees its reply and immediately
             // resubmits must never hit a stale-occupancy `Busy`.
-            self.shared.complete(self.shard, self.rows);
+            self.shared.complete(self.shard, self.cost);
             let _ = tx.send(r);
         }
     }
@@ -307,8 +314,13 @@ pub struct RoutePlan {
     /// per-shard error statistics stay on the worker's stats like the
     /// single-service path always did).
     pub key: Option<(u8, usize)>,
-    /// Batch rows this request will occupy (the load-balancing weight).
-    pub rows: u64,
+    /// Modeled execution cost of this request (the load-balancing
+    /// weight): profiles derive it from the §3.2 cost model for the
+    /// request's bucket — `costmodel::conv_cost` at the bucket's FFT
+    /// length, order, and head count, in integer nanosecond-scale units
+    /// (>= 1) — so outstanding work compares correctly across buckets of
+    /// very different lengths.
+    pub cost: u64,
 }
 
 /// Messages a shard worker consumes. Generic over the [`ShardProfile`] so
@@ -368,7 +380,12 @@ pub struct ShardStatsSnapshot {
     pub batches: u64,
     pub rows_executed: u64,
     pub errors: u64,
-    pub outstanding_rows: u64,
+    /// Modeled cost of dispatched-but-unanswered requests (the weighted
+    /// load-balancing signal; cost-model units, not rows).
+    pub outstanding_cost: u64,
+    /// Peak bytes of reusable plan scratch checked out at once inside
+    /// this shard's engines (0 until the worker reports).
+    pub workspace_peak_bytes: u64,
     pub mean_occupancy: f64,
     pub mean_latency_ms: f64,
     pub p50_ms: f64,
@@ -413,6 +430,10 @@ pub struct FleetStats {
     pub batches: u64,
     pub rows_executed: u64,
     pub errors: u64,
+    /// Largest per-shard workspace peak (bytes of reusable plan scratch
+    /// checked out at once) — the steady-state scratch footprint of the
+    /// busiest shard.
+    pub workspace_peak_bytes: u64,
     pub mean_occupancy: f64,
     pub mean_latency_ms: f64,
     pub p50_ms: f64,
@@ -424,7 +445,7 @@ impl FleetStats {
     pub fn summary(&self) -> String {
         format!(
             "shards {} (alive {})  reqs {}  rows {}  occ {:.2}  lat p50 {:.2}ms p99 {:.2}ms  \
-             busy {}  deaths {}  restarts {}  errors {}",
+             busy {}  deaths {}  restarts {}  errors {}  ws-peak {}KB",
             self.shards.len(),
             self.shards.iter().filter(|s| s.alive).count(),
             self.requests,
@@ -436,6 +457,7 @@ impl FleetStats {
             self.shard_deaths,
             self.restarts,
             self.errors,
+            self.workspace_peak_bytes / 1024,
         )
     }
 }
@@ -672,10 +694,11 @@ impl<P: ShardProfile> FleetDispatcher<P> {
         &self.profile
     }
 
-    /// Pick the live shard with the least outstanding rows; ties prefer
-    /// the route key's affinity shard so one bucket keeps batching on one
-    /// worker. `None` when no shard is currently alive (the dispatch loop
-    /// then waits for the supervisor).
+    /// Pick the live shard with the least outstanding *modeled cost*
+    /// (cost-weighted work, not raw rows); ties prefer the route key's
+    /// affinity shard so one bucket keeps batching on one worker. `None`
+    /// when no shard is currently alive (the dispatch loop then waits for
+    /// the supervisor).
     fn pick_shard(&self, key: Option<(u8, usize)>) -> Option<usize> {
         let n = self.stats.len();
         let mut best: Option<(usize, u64)> = None;
@@ -739,13 +762,13 @@ impl<P: ShardProfile> FleetDispatcher<P> {
                 continue;
             };
             self.stats[shard].requests.fetch_add(1, Ordering::Relaxed);
-            self.shared.outstanding[shard].fetch_add(plan.rows, Ordering::Relaxed);
+            self.shared.outstanding[shard].fetch_add(plan.cost, Ordering::Relaxed);
             let slot = ReplySlot::new(
                 client_tx.clone(),
                 Arc::clone(&self.shared),
                 Arc::clone(&self.stats[shard]),
                 shard,
-                plan.rows,
+                plan.cost,
             );
             let msg = ShardMsg::Job { req, reply: slot, t_submit: Instant::now() };
             let tx = self.senders.lock().unwrap()[shard].clone();
@@ -756,7 +779,7 @@ impl<P: ShardProfile> FleetDispatcher<P> {
                     // attempt's accounting and retry elsewhere.
                     self.shared.alive[shard].store(false, Ordering::Release);
                     self.stats[shard].requests.fetch_sub(1, Ordering::Relaxed);
-                    self.shared.outstanding[shard].fetch_sub(plan.rows, Ordering::Relaxed);
+                    self.shared.outstanding[shard].fetch_sub(plan.cost, Ordering::Relaxed);
                     let ShardMsg::Job { req: r, reply, .. } = m else { unreachable!() };
                     let _ = reply.disarm();
                     req = r;
@@ -915,6 +938,7 @@ impl<P: ShardProfile> FleetDispatcher<P> {
         let mut hist = [0u64; HIST_BUCKETS];
         let (mut requests, mut batches, mut rows, mut errors) = (0u64, 0u64, 0u64, 0u64);
         let mut lat_sum = 0u64;
+        let mut ws_peak = 0u64;
         for (i, s) in self.stats.iter().enumerate() {
             let counts = s.latency_hist.counts();
             for (acc, c) in hist.iter_mut().zip(counts.iter()) {
@@ -924,10 +948,12 @@ impl<P: ShardProfile> FleetDispatcher<P> {
             let sb = s.batches.load(Ordering::Relaxed);
             let sx = s.rows_executed.load(Ordering::Relaxed);
             let se = s.errors.load(Ordering::Relaxed);
+            let sw = s.workspace_peak_bytes.load(Ordering::Relaxed);
             requests += sr;
             batches += sb;
             rows += sx;
             errors += se;
+            ws_peak = ws_peak.max(sw);
             lat_sum += s.latency_ns_sum.load(Ordering::Relaxed);
             shards.push(ShardStatsSnapshot {
                 shard: i,
@@ -936,7 +962,8 @@ impl<P: ShardProfile> FleetDispatcher<P> {
                 batches: sb,
                 rows_executed: sx,
                 errors: se,
-                outstanding_rows: self.shared.outstanding[i].load(Ordering::Relaxed),
+                outstanding_cost: self.shared.outstanding[i].load(Ordering::Relaxed),
+                workspace_peak_bytes: sw,
                 mean_occupancy: s.mean_occupancy(),
                 mean_latency_ms: s.mean_latency_ms(),
                 p50_ms: LatencyHistogram::quantile_ms(&counts, 0.50),
@@ -955,6 +982,7 @@ impl<P: ShardProfile> FleetDispatcher<P> {
             batches,
             rows_executed: rows,
             errors,
+            workspace_peak_bytes: ws_peak,
             mean_occupancy: if batches == 0 { 0.0 } else { rows as f64 / batches as f64 },
             mean_latency_ms: if requests == 0 {
                 0.0

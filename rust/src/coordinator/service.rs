@@ -58,6 +58,10 @@ pub struct ServiceStats {
     pub latency_ns_sum: AtomicU64,
     pub latency_ns_max: AtomicU64,
     pub errors: AtomicU64,
+    /// Peak bytes of reusable plan scratch (`fft::workspace`) checked out
+    /// at once by this worker's engines — the steady-state scratch
+    /// footprint, updated after every executed batch.
+    pub workspace_peak_bytes: AtomicU64,
     /// Fixed-bucket latency histogram (p50/p99 without sample storage).
     pub latency_hist: LatencyHistogram,
 }
@@ -110,26 +114,71 @@ pub struct ConvProfile {
     /// Sorted bucket lengths per kind, derived from the manifest once at
     /// fleet start (plan-time routing must not touch the runtime).
     buckets: Arc<BTreeMap<ConvKind, Vec<usize>>>,
+    /// §3.2 modeled per-row cost per `(kind tag, bucket)` in integer
+    /// nanosecond-scale units — the weighted load-balancing signal
+    /// (raw row counts misroute when buckets mix short and long
+    /// sequences; a 4096-row must weigh far more than a 64-row).
+    weights: Arc<BTreeMap<(u8, usize), u64>>,
+}
+
+/// Modeled cost of one request row in a `(kind, bucket)`: Equation 2 at
+/// the bucket's FFT length and *executed* order (the artifact's `order`
+/// metadata when declared — manifests may pin an order — falling back to
+/// the cost-model dispatch), over the artifact's head rows, scaled to
+/// integer nanoseconds (floor 1 so admission arithmetic never sees a
+/// zero weight).
+fn bucket_cost(kind: ConvKind, bucket: usize, heads: usize, order: Option<usize>) -> u64 {
+    let fft_len = if kind == ConvKind::Causal { 2 * bucket } else { bucket };
+    let order = order.unwrap_or_else(|| crate::costmodel::best_native_order(fft_len));
+    let secs = crate::costmodel::conv_cost(fft_len, order, 1, heads.max(1), &crate::costmodel::CPU);
+    ((secs * 1e9) as u64).max(1)
 }
 
 impl ConvProfile {
-    /// Build the profile by indexing the backend's conv artifacts.
+    /// Build the profile by indexing the backend's conv artifacts (bucket
+    /// lengths + per-bucket cost-model weights).
     pub fn new(backend: &BackendConfig, variant: &str) -> crate::Result<Self> {
         let runtime = backend.connect()?;
         let router = Router::from_manifest(runtime.manifest(), variant)?;
         let mut buckets = BTreeMap::new();
+        let mut weights = BTreeMap::new();
         for kind in [ConvKind::Forward, ConvKind::Gated, ConvKind::Causal] {
             let lens = router.bucket_lens(kind);
-            if !lens.is_empty() {
-                buckets.insert(kind, lens);
+            if lens.is_empty() {
+                continue;
             }
+            for &len in &lens {
+                let route = router.route(kind, len)?;
+                // Weigh by the order the artifact will actually execute
+                // (pins included), not a recomputed dispatch.
+                let order = runtime
+                    .manifest()
+                    .get(&route.artifact)
+                    .ok()
+                    .and_then(|spec| spec.meta_usize("order"));
+                weights.insert(
+                    (Self::kind_tag(kind), len),
+                    bucket_cost(kind, len, route.heads, order),
+                );
+            }
+            buckets.insert(kind, lens);
         }
-        Ok(Self { variant: variant.to_string(), buckets: Arc::new(buckets) })
+        Ok(Self {
+            variant: variant.to_string(),
+            buckets: Arc::new(buckets),
+            weights: Arc::new(weights),
+        })
     }
 
     /// The kernel variant this profile serves ("monarch" / "baseline").
     pub fn variant(&self) -> &str {
         &self.variant
+    }
+
+    /// The modeled load-balancing weight of a `(kind, bucket)` (tests and
+    /// ops surfaces; `None` for unknown buckets).
+    pub fn bucket_weight(&self, kind: ConvKind, bucket: usize) -> Option<u64> {
+        self.weights.get(&(Self::kind_tag(kind), bucket)).copied()
     }
 
     fn kind_tag(kind: ConvKind) -> u8 {
@@ -147,13 +196,15 @@ impl ShardProfile for ConvProfile {
 
     fn plan(&self, req: &Self::Request) -> RoutePlan {
         // Smallest bucket >= len; unroutable requests carry no key (the
-        // worker owns the rejection reply and its error accounting).
+        // worker owns the rejection reply and its error accounting) and
+        // a nominal unit cost.
         let key = self
             .buckets
             .get(&req.kind)
             .and_then(|lens| lens.iter().find(|&&b| b >= req.len))
             .map(|&b| (Self::kind_tag(req.kind), b));
-        RoutePlan { key, rows: 1 }
+        let cost = key.and_then(|k| self.weights.get(&k).copied()).unwrap_or(1);
+        RoutePlan { key, cost }
     }
 
     fn run_shard(
@@ -389,6 +440,11 @@ impl ServiceWorker {
         let (kind, bucket) = key;
         let route = self.router.route(kind, bucket).expect("bucket exists");
         let result = self.execute_inner(kind, &route, &batch);
+        // Surface the engines' reusable-scratch peak on this worker's
+        // stats (the zero-alloc serving contract's observable).
+        if let Some(ws) = self.artifacts.get(&route.artifact).and_then(|a| a.workspace_stats()) {
+            self.stats.workspace_peak_bytes.fetch_max(ws.peak_bytes, Ordering::Relaxed);
+        }
         match result {
             Ok(rows) => {
                 let t_done = Instant::now();
@@ -464,5 +520,42 @@ impl ServiceWorker {
                 row
             })
             .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_weights_scale_with_length_and_ride_the_route_plan() {
+        let profile = ConvProfile::new(&BackendConfig::Native, "monarch").unwrap();
+        let w256 = profile.bucket_weight(ConvKind::Forward, 256).unwrap();
+        let w4096 = profile.bucket_weight(ConvKind::Forward, 4096).unwrap();
+        assert!(
+            w4096 > 4 * w256,
+            "a 4096 bucket must weigh far more than a 256 bucket: {w256} vs {w4096}"
+        );
+        // Causal buckets pay the doubled FFT length.
+        let wc256 = profile.bucket_weight(ConvKind::Causal, 512).unwrap();
+        assert!(wc256 > w256, "causal 512 (fft 1024) must outweigh circular 256");
+
+        // plan() routes to the smallest bucket >= len and carries that
+        // bucket's modeled cost as the balancing weight.
+        let req = ConvRequest {
+            kind: ConvKind::Forward,
+            len: 2000,
+            streams: vec![vec![0.0; 16 * 2000]],
+        };
+        let plan = profile.plan(&req);
+        assert_eq!(plan.key, Some((0, 4096)));
+        assert_eq!(plan.cost, w4096);
+
+        // Unroutable requests: no key, nominal unit cost (the worker owns
+        // the rejection reply).
+        let req = ConvRequest { kind: ConvKind::Forward, len: 1 << 22, streams: vec![] };
+        let plan = profile.plan(&req);
+        assert_eq!(plan.key, None);
+        assert_eq!(plan.cost, 1);
     }
 }

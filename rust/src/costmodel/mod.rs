@@ -62,15 +62,30 @@ pub const H100: HwProfile = HwProfile {
     sram_bytes: 228 * 1024,
 };
 
-/// This testbed: single CPU core driving the PJRT CPU client. Matmul and
-/// general throughput are the measured XLA-CPU numbers; "SRAM" is L2.
-/// Used to sanity-check measured bench shapes, not for Figure 4.
+/// This testbed: one core running the in-crate planned GEMM executor
+/// (`fft::gemm`), which is what the native engines actually dispatch on.
+/// "SRAM" is L2; `matmul_flops` is the blocked split-complex FMA kernel
+/// at saturated stage widths.
+///
+/// Calibrated against the measured order-crossover probe
+/// (`tests/plan_layer.rs::measured_order_crossover_matches_cost_model_within_one_bucket`)
+/// and the accumulated `BENCH_table3.json` planned-vs-naive timings. The
+/// calibration changed one constant from the old XLA-CPU profile:
+/// `general_flops` drops 8e9 → 2e9, because sub-matrix-unit stage factors
+/// execute as short strided per-sub-row loops that the blocked FMA kernel
+/// cannot vectorize — nowhere near the wide-GEMM path. This also makes
+/// γ(N_i) *monotone* in the factor size (the old profile rated a 4-wide
+/// factor above an 8-wide one, which no measurement supports), moving the
+/// modeled dispatch to: order 2 through the fused band, order 3 past the
+/// saturation/L2 boundary (fft_len >= 16K), and order 4 from fft_len
+/// >= 512K where confining the spill to the outer stage pair pays for
+/// the narrower factors.
 pub const CPU: HwProfile = HwProfile {
     name: "cpu",
     hbm_bw: 12e9,
     sram_bw: 80e9,
     matmul_flops: 40e9,
-    general_flops: 8e9,
+    general_flops: 2e9,
     matrix_unit: 8,
     gemm_saturate: 64,
     reg_bw: 200e9,
@@ -166,6 +181,21 @@ pub fn best_order_upto(n: usize, hw: &HwProfile, max_order: usize) -> usize {
 /// Pick the cheapest order p ∈ {2, 3, 4} for a sequence length.
 pub fn best_order(n: usize, hw: &HwProfile) -> usize {
     best_order_upto(n, hw, 4)
+}
+
+/// Largest Monarch order the native plan layer dispatches (the plan
+/// executor runs *any* factor list; this caps what the calibrated CPU
+/// model is trusted to rank). Raised from 3 to 4 once the calibrated
+/// [`CPU`] profile located the order-4 win past the SRAM spill point.
+pub const MAX_NATIVE_ORDER: usize = 4;
+
+/// Cheapest natively-dispatched Monarch order for one FFT length under
+/// the calibrated [`CPU`] profile — the single dispatch decision shared
+/// by the conv engines, the model zoo, and the fleet's cost-weighted
+/// load balancing. On the calibrated profile: order 2 through the fused
+/// band (fft_len <= 8K), order 3 from 16K, order 4 from 512K.
+pub fn best_native_order(fft_len: usize) -> usize {
+    best_order_upto(fft_len, &CPU, MAX_NATIVE_ORDER)
 }
 
 /// One Figure 4 data point.
@@ -273,6 +303,36 @@ mod tests {
         for p in &pts {
             assert!(p.cost.is_finite() && p.cost > 0.0);
         }
+    }
+
+    #[test]
+    fn calibrated_cpu_gamma_is_monotone() {
+        // The calibration's structural fix: achievable GEMM throughput
+        // never *decreases* as the factor widens.
+        let mut prev = 0.0;
+        for lg in 1..=8 {
+            let g = gamma(1 << lg, &CPU);
+            assert!(g >= prev, "gamma({}) = {g} < gamma({}) = {prev}", 1 << lg, 1 << (lg - 1));
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn calibrated_cpu_dispatch_table() {
+        // The dispatch ladder the calibrated profile encodes (matches the
+        // measured crossover probe within one bucket): order 2 through
+        // the fused band, order 3 from 16K, order 4 from 512K.
+        for lg in 6..=13 {
+            assert_eq!(best_native_order(1 << lg), 2, "fft_len 2^{lg}");
+        }
+        for lg in 14..=18 {
+            assert_eq!(best_native_order(1 << lg), 3, "fft_len 2^{lg}");
+        }
+        for lg in 19..=22 {
+            assert_eq!(best_native_order(1 << lg), 4, "fft_len 2^{lg}");
+        }
+        // Degenerate lengths clamp to what the length supports.
+        assert_eq!(best_native_order(4), 2);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Split-complex GEMM kernels for the planned Monarch stages.
+//! Split-complex GEMM + twiddle kernels for the planned Monarch stages.
 //!
 //! The plan executor ([`super::plan`]) reduces every FFT stage to a dense
 //! matrix multiply against a precomputed DFT factor matrix — the §3.1
@@ -6,7 +6,10 @@
 //! arithmetic over separate re/im planes (split-complex, so every lane of
 //! a SIMD register does useful work), [`fmadd`]-based inner loops, and a
 //! column tile that keeps the streamed operand cache-resident. No trig,
-//! no allocation, no branching in the inner loop.
+//! no branching in the inner loop, and **no allocation**: every kernel
+//! here writes into caller-provided planes, so the plan layer can run
+//! steady-state traffic entirely out of a warm
+//! [`super::workspace::ConvWorkspace`].
 
 /// Column-tile width: bounds the C/B working set the inner loops sweep
 /// (a tile of f64 re+im planes is `2 * 8 * J_TILE` bytes per row, well
@@ -75,6 +78,36 @@ pub fn matmul_sc(
             }
         }
         j0 += jw;
+    }
+}
+
+/// `dst = src ⊙ tw` elementwise over split-complex planes — the forward
+/// Monarch stage twiddle applied on the way out of a stage GEMM. All six
+/// slices must have equal length.
+pub fn twiddle_mul(
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    src_re: &[f64],
+    src_im: &[f64],
+    tw_re: &[f64],
+    tw_im: &[f64],
+) {
+    for j in 0..dst_re.len() {
+        let (xr, xi) = (src_re[j], src_im[j]);
+        let (tr, ti) = (tw_re[j], tw_im[j]);
+        dst_re[j] = fmadd(xr, tr, -(xi * ti));
+        dst_im[j] = fmadd(xr, ti, xi * tr);
+    }
+}
+
+/// `x = x ⊙ conj(tw)` elementwise, in place — the inverse stage undoing
+/// its forward twiddle before the inverse factor GEMM.
+pub fn twiddle_mul_conj(re: &mut [f64], im: &mut [f64], tw_re: &[f64], tw_im: &[f64]) {
+    for j in 0..re.len() {
+        let (xr, xi) = (re[j], im[j]);
+        let (tr, ti) = (tw_re[j], tw_im[j]);
+        re[j] = fmadd(xr, tr, xi * ti);
+        im[j] = fmadd(xi, tr, -(xr * ti));
     }
 }
 
@@ -156,6 +189,30 @@ mod tests {
         let want = naive(m, k, n, &asub, &bsub);
         for (i, w) in want.iter().enumerate() {
             assert!((c_re[i] - w.re).abs() < 1e-12 && (c_im[i] - w.im).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn twiddle_kernels_invert_each_other() {
+        let mut rng = Rng::new(3);
+        let n = 37usize;
+        let x = rand_cpx(&mut rng, n);
+        let tw: Vec<Cpx> =
+            (0..n).map(|j| Cpx::cis(-2.0 * std::f64::consts::PI * j as f64 / n as f64)).collect();
+        let (x_re, x_im) = planes(&x);
+        let (tw_re, tw_im) = planes(&tw);
+        let mut re = vec![0.0; n];
+        let mut im = vec![0.0; n];
+        twiddle_mul(&mut re, &mut im, &x_re, &x_im, &tw_re, &tw_im);
+        // Against the complex product.
+        for j in 0..n {
+            let w = x[j] * tw[j];
+            assert!((re[j] - w.re).abs() < 1e-12 && (im[j] - w.im).abs() < 1e-12);
+        }
+        // Conjugate twiddle undoes it (|tw| == 1).
+        twiddle_mul_conj(&mut re, &mut im, &tw_re, &tw_im);
+        for j in 0..n {
+            assert!((re[j] - x[j].re).abs() < 1e-12 && (im[j] - x[j].im).abs() < 1e-12);
         }
     }
 

@@ -14,15 +14,39 @@
 //! 3. **Coordinator utilities** — host-side spectrum manipulation for the
 //!    partial/frequency-sparse workflows (truncating or masking kernels
 //!    without re-entering Python).
-//! 4. **Planned hot path** ([`plan`] / [`gemm`]) — the §3.1 recasting of
-//!    the Monarch FFT as GEMMs against precomputed per-stage factor
-//!    matrices and twiddle vectors, batched over many rows, with r2c
-//!    half-spectrum packing for real signals. This is what the native
-//!    engines and the model zoo actually execute; every planned path is
-//!    property-tested against the role-1 oracles.
+//! 4. **Planned hot path** ([`plan`] / [`gemm`] / [`workspace`]) — the
+//!    §3.1 recasting of the Monarch FFT as GEMMs against precomputed
+//!    per-stage factor matrices and twiddle vectors, batched over many
+//!    rows, with r2c half-spectrum packing for real signals. This is what
+//!    the native engines and the model zoo actually execute; every
+//!    planned path is property-tested against the role-1 oracles.
+//!
+//! # Workspace lifecycle (the zero-alloc serving contract)
+//!
+//! Steady-state serving performs **zero heap allocations inside plan
+//! execution**: every `*_ws` / `*_into` executor in [`plan`] borrows its
+//! scratch from a caller-owned [`workspace::ConvWorkspace`] instead of
+//! allocating. The contract, in full in the [`workspace`] module docs:
+//!
+//! * **Who owns** — one workspace per worker *thread*: engines and the
+//!   model zoo hold one workspace per row-block worker (fanned out via
+//!   `util::pool::parallel_map_ctx`), and each fleet shard worker owns
+//!   its engines' workspaces transitively — reused across requests.
+//! * **When reset** — never freed mid-service; [`workspace::ConvWorkspace::reset`]
+//!   only opens a fresh accounting window (buffers stay resident).
+//!   Memory is released when the worker is torn down.
+//! * **Thread safety** — every workspace API takes `&mut self`, so a
+//!   workspace is never shared between threads; parallel fan-out uses
+//!   per-worker sub-workspaces, which keeps parallel and sequential
+//!   execution bitwise identical.
+//!
+//! The allocate-internally convenience wrappers (`forward`, `conv_rows`,
+//! …) remain for oracles, examples, and property tests; they are bitwise
+//! identical to the workspace path.
 
 pub mod gemm;
 pub mod plan;
+pub mod workspace;
 
 use crate::bail;
 use crate::util::Rng;

@@ -19,6 +19,14 @@
 //! [`real_plan`]), so engines, the model zoo, and the benches share one
 //! set of precomputed matrices per shape.
 //!
+//! Every executor comes in two forms: a `*_ws` / `*_into` variant that
+//! borrows scratch from a caller-owned
+//! [`ConvWorkspace`](super::workspace::ConvWorkspace) — **zero heap
+//! allocations once the workspace is warm**, the serving hot path — and
+//! an allocate-internally convenience wrapper with the original
+//! signature (oracle tests, examples, one-shot callers). The two are
+//! bitwise identical; see `fft::workspace` for the lifecycle contract.
+//!
 //! Correctness story: every public entry point here is property-tested
 //! against the naive oracles in `fft::` (see `tests/plan_layer.rs` and
 //! `tests/proptests.rs`) — layout, values, round trips, and the
@@ -28,7 +36,8 @@ use std::collections::HashMap;
 use std::f64::consts::PI;
 use std::sync::{Arc, Mutex, OnceLock};
 
-use super::gemm::{fmadd, matmul_sc};
+use super::gemm::{matmul_sc, twiddle_mul, twiddle_mul_conj};
+use super::workspace::ConvWorkspace;
 use super::{is_pow2, try_monarch_factors};
 use crate::bail;
 
@@ -158,13 +167,16 @@ impl FftPlan {
     /// Forward Monarch transform of `rows` stacked length-`n` rows held
     /// as split-complex planes, in place. Per-row output layout is
     /// [`Self::layout_order`] — identical to `monarch_fft2/3`.
+    /// Convenience wrapper over [`Self::forward_ws`] that allocates its
+    /// own scratch.
     pub fn forward(&self, re: &mut [f64], im: &mut [f64], rows: usize) {
-        self.run_forward(re, im, rows);
+        self.forward_ws(re, im, rows, &mut ConvWorkspace::new());
     }
 
-    /// Inverse of [`Self::forward`] (1/N normalization included).
+    /// Inverse of [`Self::forward`] (1/N normalization included);
+    /// allocate-internally wrapper over [`Self::inverse_ws`].
     pub fn inverse(&self, re: &mut [f64], im: &mut [f64], rows: usize) {
-        self.run_inverse(re, im, rows);
+        self.inverse_ws(re, im, rows, &mut ConvWorkspace::new());
     }
 
     fn check_planes(&self, re: &[f64], im: &[f64], rows: usize) {
@@ -172,14 +184,22 @@ impl FftPlan {
         assert_eq!(im.len(), rows * self.n, "im plane size");
     }
 
-    fn run_forward(&self, re: &mut [f64], im: &mut [f64], rows: usize) {
+    /// [`Self::forward`] with scratch borrowed from `ws` — zero heap
+    /// allocations once the workspace is warm, bitwise identical output.
+    pub fn forward_ws(
+        &self,
+        re: &mut [f64],
+        im: &mut [f64],
+        rows: usize,
+        ws: &mut ConvWorkspace,
+    ) {
         self.check_planes(re, im, rows);
         if rows == 0 {
             return;
         }
         let total = rows * self.n;
-        let mut scr_re = vec![0.0f64; total];
-        let mut scr_im = vec![0.0f64; total];
+        let mut scr_re = ws.take(total);
+        let mut scr_im = ws.take(total);
         let mut nsub = rows;
         for st in &self.stages {
             let len = st.n1 * st.m;
@@ -196,63 +216,72 @@ impl FftPlan {
             } else {
                 for r in 0..nsub {
                     let o = r * len;
-                    // A = F · X over this sub-row's (n1, m) matrix.
+                    // A = F · X over this sub-row's (n1, m) matrix, then
+                    // the stage twiddle back into the data planes.
                     matmul_sc(
                         st.n1, st.n1, st.m,
                         &st.f_re, &st.f_im, st.n1,
                         &re[o..o + len], &im[o..o + len], st.m,
                         &mut scr_re[o..o + len], &mut scr_im[o..o + len], st.m,
                     );
-                    // Twiddle back into the data planes.
-                    for idx in 0..len {
-                        let (xr, xi) = (scr_re[o + idx], scr_im[o + idx]);
-                        let (tr, ti) = (st.tw_re[idx], st.tw_im[idx]);
-                        re[o + idx] = fmadd(xr, tr, -(xi * ti));
-                        im[o + idx] = fmadd(xr, ti, xi * tr);
-                    }
+                    twiddle_mul(
+                        &mut re[o..o + len],
+                        &mut im[o..o + len],
+                        &scr_re[o..o + len],
+                        &scr_im[o..o + len],
+                        &st.tw_re,
+                        &st.tw_im,
+                    );
                 }
                 nsub *= st.n1;
             }
         }
+        ws.give(scr_re);
+        ws.give(scr_im);
     }
 
-    fn run_inverse(&self, re: &mut [f64], im: &mut [f64], rows: usize) {
+    /// [`Self::inverse`] with scratch borrowed from `ws`.
+    pub fn inverse_ws(
+        &self,
+        re: &mut [f64],
+        im: &mut [f64],
+        rows: usize,
+        ws: &mut ConvWorkspace,
+    ) {
         self.check_planes(re, im, rows);
         if rows == 0 {
             return;
         }
         let total = rows * self.n;
-        let mut scr_re = vec![0.0f64; total];
-        let mut scr_im = vec![0.0f64; total];
-        // Sub-row count entering each stage on the forward pass.
-        let mut nsub_at = Vec::with_capacity(self.stages.len());
-        let mut nsub = rows;
-        for st in &self.stages {
-            nsub_at.push(nsub);
-            if st.m > 1 {
-                nsub *= st.n1;
-            }
-        }
+        let mut scr_re = ws.take(total);
+        let mut scr_im = ws.take(total);
+        // Sub-row count entering stage `s` on the forward pass is
+        // `rows · Π_{j<s} N_j` (every stage but the innermost multiplies
+        // the sub-row count): start at the innermost and divide back
+        // down instead of materializing a side table.
+        let p = self.stages.len();
+        let mut nsub: usize =
+            rows * self.stages[..p - 1].iter().map(|st| st.n1).product::<usize>();
         for (s, st) in self.stages.iter().enumerate().rev() {
             let len = st.n1 * st.m;
             if st.m == 1 {
                 matmul_sc(
-                    nsub_at[s], st.n1, st.n1, re, im, st.n1, &st.fi_re, &st.fi_im,
+                    nsub, st.n1, st.n1, re, im, st.n1, &st.fi_re, &st.fi_im,
                     st.n1, &mut scr_re, &mut scr_im, st.n1,
                 );
                 re.copy_from_slice(&scr_re);
                 im.copy_from_slice(&scr_im);
             } else {
-                for r in 0..nsub_at[s] {
+                for r in 0..nsub {
                     let o = r * len;
-                    // Undo the stage twiddle (conjugate) in place...
-                    for idx in 0..len {
-                        let (xr, xi) = (re[o + idx], im[o + idx]);
-                        let (tr, ti) = (st.tw_re[idx], st.tw_im[idx]);
-                        re[o + idx] = fmadd(xr, tr, xi * ti);
-                        im[o + idx] = fmadd(xi, tr, -(xr * ti));
-                    }
-                    // ...then the inverse factor matrix.
+                    // Undo the stage twiddle (conjugate) in place, then
+                    // the inverse factor matrix.
+                    twiddle_mul_conj(
+                        &mut re[o..o + len],
+                        &mut im[o..o + len],
+                        &st.tw_re,
+                        &st.tw_im,
+                    );
                     matmul_sc(
                         st.n1, st.n1, st.m,
                         &st.fi_re, &st.fi_im, st.n1,
@@ -263,7 +292,12 @@ impl FftPlan {
                     im[o..o + len].copy_from_slice(&scr_im[o..o + len]);
                 }
             }
+            if s > 0 {
+                nsub /= self.stages[s - 1].n1;
+            }
         }
+        ws.give(scr_re);
+        ws.give(scr_im);
     }
 
     /// Inverse of an order-2 planned transform on a *block-sparse*
@@ -281,6 +315,19 @@ impl FftPlan {
         keep_rows: usize,
         keep_cols: usize,
     ) {
+        self.inverse2_block_ws(re, im, rows, keep_rows, keep_cols, &mut ConvWorkspace::new());
+    }
+
+    /// [`Self::inverse2_block`] with scratch borrowed from `ws`.
+    pub fn inverse2_block_ws(
+        &self,
+        re: &mut [f64],
+        im: &mut [f64],
+        rows: usize,
+        keep_rows: usize,
+        keep_cols: usize,
+        ws: &mut ConvWorkspace,
+    ) {
         assert_eq!(self.stages.len(), 2, "block inverse requires an order-2 plan");
         self.check_planes(re, im, rows);
         let (s0, s1) = (&self.stages[0], &self.stages[1]);
@@ -291,8 +338,8 @@ impl FftPlan {
             im.fill(0.0);
             return;
         }
-        let mut a_re = vec![0.0f64; keep_rows * n2];
-        let mut a_im = vec![0.0f64; keep_rows * n2];
+        let mut a_re = ws.take(keep_rows * n2);
+        let mut a_im = ws.take(keep_rows * n2);
         for r in 0..rows {
             let o = r * self.n;
             // Inner-stage inverse restricted to the kept block:
@@ -305,12 +352,12 @@ impl FftPlan {
                 &mut a_re, &mut a_im, n2,
             );
             // Undo the outer-stage twiddle on the kept rows only.
-            for idx in 0..keep_rows * n2 {
-                let (xr, xi) = (a_re[idx], a_im[idx]);
-                let (tr, ti) = (s0.tw_re[idx], s0.tw_im[idx]);
-                a_re[idx] = fmadd(xr, tr, xi * ti);
-                a_im[idx] = fmadd(xi, tr, -(xr * ti));
-            }
+            twiddle_mul_conj(
+                &mut a_re,
+                &mut a_im,
+                &s0.tw_re[..keep_rows * n2],
+                &s0.tw_im[..keep_rows * n2],
+            );
             // Outer-stage inverse over the kept rows: X = FI1[:, :kr] · A.
             matmul_sc(
                 n1, keep_rows, n2,
@@ -319,6 +366,8 @@ impl FftPlan {
                 &mut re[o..o + self.n], &mut im[o..o + self.n], n2,
             );
         }
+        ws.give(a_re);
+        ws.give(a_im);
     }
 }
 
@@ -383,12 +432,32 @@ impl RealConvPlan {
     /// Half spectra of `rows` stacked real length-`N` rows: returns
     /// `(re, im)` planes of shape `(rows, bins)` in natural frequency
     /// order `k = 0..=N/2` (matching the leading bins of `rfft_full`).
+    /// Allocate-internally wrapper over [`Self::rfft_rows_into`].
     pub fn rfft_rows(&self, x: &[f64], rows: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut sre = vec![0.0f64; rows * self.bins];
+        let mut sim = vec![0.0f64; rows * self.bins];
+        self.rfft_rows_into(x, rows, &mut sre, &mut sim, &mut ConvWorkspace::new());
+        (sre, sim)
+    }
+
+    /// [`Self::rfft_rows`] writing into caller-provided `(rows, bins)`
+    /// planes, with packing scratch borrowed from `ws` — zero heap
+    /// allocations once the workspace is warm.
+    pub fn rfft_rows_into(
+        &self,
+        x: &[f64],
+        rows: usize,
+        sre: &mut [f64],
+        sim: &mut [f64],
+        ws: &mut ConvWorkspace,
+    ) {
         assert_eq!(x.len(), rows * self.fft_len, "input rows size");
+        assert_eq!(sre.len(), rows * self.bins, "re spectrum size");
+        assert_eq!(sim.len(), rows * self.bins, "im spectrum size");
         let nh = self.nh;
         // Pack: z[j] = x[2j] + i·x[2j+1].
-        let mut zre = vec![0.0f64; rows * nh];
-        let mut zim = vec![0.0f64; rows * nh];
+        let mut zre = ws.take(rows * nh);
+        let mut zim = ws.take(rows * nh);
         for r in 0..rows {
             let xo = r * self.fft_len;
             let zo = r * nh;
@@ -397,10 +466,8 @@ impl RealConvPlan {
                 zim[zo + j] = x[xo + 2 * j + 1];
             }
         }
-        self.inner.forward(&mut zre, &mut zim, rows);
+        self.inner.forward_ws(&mut zre, &mut zim, rows, ws);
         // Unpack: X[k] = Xe[k] + w^k · Xo[k] over the even/odd split.
-        let mut sre = vec![0.0f64; rows * self.bins];
-        let mut sim = vec![0.0f64; rows * self.bins];
         for r in 0..rows {
             let zo = r * nh;
             let so = r * self.bins;
@@ -418,16 +485,34 @@ impl RealConvPlan {
                 sim[so + k] = xe_i + wr * xo_i + wi * xo_r;
             }
         }
-        (sre, sim)
+        ws.give(zre);
+        ws.give(zim);
     }
 
     /// Real rows from half spectra — the inverse of [`Self::rfft_rows`].
+    /// Allocate-internally wrapper over [`Self::irfft_rows_into`].
     pub fn irfft_rows(&self, sre: &[f64], sim: &[f64], rows: usize) -> Vec<f64> {
+        let mut y = vec![0.0f64; rows * self.fft_len];
+        self.irfft_rows_into(sre, sim, rows, &mut y, &mut ConvWorkspace::new());
+        y
+    }
+
+    /// [`Self::irfft_rows`] writing into a caller-provided `(rows, N)`
+    /// buffer, with packing scratch borrowed from `ws`.
+    pub fn irfft_rows_into(
+        &self,
+        sre: &[f64],
+        sim: &[f64],
+        rows: usize,
+        y: &mut [f64],
+        ws: &mut ConvWorkspace,
+    ) {
         assert_eq!(sre.len(), rows * self.bins, "re spectrum size");
         assert_eq!(sim.len(), rows * self.bins, "im spectrum size");
+        assert_eq!(y.len(), rows * self.fft_len, "output rows size");
         let nh = self.nh;
-        let mut zre = vec![0.0f64; rows * nh];
-        let mut zim = vec![0.0f64; rows * nh];
+        let mut zre = ws.take(rows * nh);
+        let mut zim = ws.take(rows * nh);
         for r in 0..rows {
             let so = r * self.bins;
             let zo = r * nh;
@@ -447,8 +532,7 @@ impl RealConvPlan {
                 zim[zo + slot] = xe_i + xo_r;
             }
         }
-        self.inner.inverse(&mut zre, &mut zim, rows);
-        let mut y = vec![0.0f64; rows * self.fft_len];
+        self.inner.inverse_ws(&mut zre, &mut zim, rows, ws);
         for r in 0..rows {
             let zo = r * nh;
             let yo = r * self.fft_len;
@@ -457,7 +541,8 @@ impl RealConvPlan {
                 y[yo + 2 * j + 1] = zim[zo + j];
             }
         }
-        y
+        ws.give(zre);
+        ws.give(zim);
     }
 
     /// Circular convolution of `rows` stacked real rows against per-head
@@ -467,6 +552,7 @@ impl RealConvPlan {
     /// typically from [`Self::rfft_rows`] over the padded filter bank).
     /// Per-row results are independent of how callers block the rows, so
     /// parallel and sequential fan-out agree bitwise.
+    /// Allocate-internally wrapper over [`Self::conv_rows_into`].
     pub fn conv_rows(
         &self,
         x: &[f64],
@@ -475,7 +561,28 @@ impl RealConvPlan {
         k_im: &[f64],
         head_of: impl Fn(usize) -> usize,
     ) -> Vec<f64> {
-        let (mut sre, mut sim) = self.rfft_rows(x, rows);
+        let mut y = vec![0.0f64; rows * self.fft_len];
+        self.conv_rows_into(x, rows, k_re, k_im, head_of, &mut y, &mut ConvWorkspace::new());
+        y
+    }
+
+    /// [`Self::conv_rows`] writing into a caller-provided `(rows, N)`
+    /// buffer, with every intermediate (spectra and packing planes)
+    /// borrowed from `ws` — the zero-alloc serving hot path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_rows_into(
+        &self,
+        x: &[f64],
+        rows: usize,
+        k_re: &[f64],
+        k_im: &[f64],
+        head_of: impl Fn(usize) -> usize,
+        y: &mut [f64],
+        ws: &mut ConvWorkspace,
+    ) {
+        let mut sre = ws.take(rows * self.bins);
+        let mut sim = ws.take(rows * self.bins);
+        self.rfft_rows_into(x, rows, &mut sre, &mut sim, ws);
         for r in 0..rows {
             let so = r * self.bins;
             let ko = head_of(r) * self.bins;
@@ -486,7 +593,9 @@ impl RealConvPlan {
                 sim[so + k] = ar * bi + ai * br;
             }
         }
-        self.irfft_rows(&sre, &sim, rows)
+        self.irfft_rows_into(&sre, &sim, rows, y, ws);
+        ws.give(sre);
+        ws.give(sim);
     }
 }
 
@@ -712,6 +821,56 @@ mod tests {
         // Deep orders clamp to what the inner length supports.
         let tiny = real_plan(8, 3).unwrap();
         assert_eq!(tiny.inner().factors().to_vec(), vec![2, 2]);
+    }
+
+    #[test]
+    fn workspace_path_is_bitwise_identical_to_wrappers() {
+        // One shared workspace across mixed shapes/directions must not
+        // change a single bit vs the allocate-internally wrappers.
+        let mut rng = Rng::new(27);
+        let mut ws = ConvWorkspace::new();
+        for &(n, order, rows) in &[(64usize, 2usize, 3usize), (128, 3, 1), (256, 2, 4)] {
+            let p = plan(n, order).unwrap();
+            let x: Vec<Cpx> =
+                (0..rows * n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+            let (mut re_a, mut im_a) = planes(&x);
+            let (mut re_b, mut im_b) = planes(&x);
+            p.forward(&mut re_a, &mut im_a, rows);
+            p.forward_ws(&mut re_b, &mut im_b, rows, &mut ws);
+            assert!(
+                re_a.iter().zip(&re_b).all(|(a, b)| a.to_bits() == b.to_bits())
+                    && im_a.iter().zip(&im_b).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "forward n={n} order={order}"
+            );
+            p.inverse(&mut re_a, &mut im_a, rows);
+            p.inverse_ws(&mut re_b, &mut im_b, rows, &mut ws);
+            assert!(
+                re_a.iter().zip(&re_b).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "inverse n={n} order={order}"
+            );
+
+            let rp = real_plan(n, order).unwrap();
+            let u: Vec<f64> = (0..rows * n).map(|_| rng.normal()).collect();
+            let kb: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let (kre, kim) = rp.rfft_rows(&kb, 1);
+            let want = rp.conv_rows(&u, rows, &kre, &kim, |_| 0);
+            let mut got = vec![0.0f64; rows * n];
+            rp.conv_rows_into(&u, rows, &kre, &kim, |_| 0, &mut got, &mut ws);
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "conv n={n} order={order}"
+            );
+        }
+        // Steady state: a second pass over the same shapes is free of
+        // cold-miss allocations inside the workspace.
+        ws.reset();
+        let rp = real_plan(256, 2).unwrap();
+        let u: Vec<f64> = (0..4 * 256).map(|_| rng.normal()).collect();
+        let ones = vec![1.0f64; 256];
+        let (kre, kim) = rp.rfft_rows(&ones, 1);
+        let mut y = vec![0.0f64; 4 * 256];
+        rp.conv_rows_into(&u, 4, &kre, &kim, |_| 0, &mut y, &mut ws);
+        assert_eq!(ws.stats().allocs, 0, "warm workspace must not allocate");
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Reusable scratch arena for the planned FFT hot path.
+//!
+//! The PR-3 plan executors allocated fresh `O(rows·n)` scratch on every
+//! call, so every serving request churned the allocator and re-faulted
+//! pages — the CPU analog of the HBM round-trips the paper's fused
+//! kernels eliminate (§3.1). A [`ConvWorkspace`] is a size-bucketed
+//! free list of `f64` buffers: execution paths *borrow* scratch with
+//! [`ConvWorkspace::take`] and hand it back with [`ConvWorkspace::give`],
+//! so a warm workspace serves steady-state traffic with **zero** heap
+//! allocations inside `FftPlan` / `RealConvPlan` execution (proved by
+//! the counting-allocator test in `tests/workspace_alloc.rs`).
+//!
+//! # Lifecycle contract
+//!
+//! * **Ownership** — one workspace per worker *thread*, owned by the
+//!   engine or model that executes on that thread (the fleet's shard
+//!   workers each build their own runtime, so every shard owns its
+//!   workspaces transitively). Every API takes `&mut self`, so a
+//!   workspace is never shared: parallel row-block fan-out gives each
+//!   worker its own sub-workspace (see `util::pool::parallel_map_ctx`)
+//!   instead of locking one.
+//! * **Reuse, reset, never free** — buffers returned by `give` are kept
+//!   for the next `take` of the same size class; [`ConvWorkspace::reset`]
+//!   clears the *accounting* for a fresh measurement window but keeps
+//!   the buffers resident. Memory is only released when the workspace is
+//!   dropped (worker teardown).
+//! * **Determinism** — `take` hands out zero-filled buffers, bitwise
+//!   identical to a fresh `vec![0.0; len]`, so workspace-threaded
+//!   execution matches the allocate-internally convenience wrappers bit
+//!   for bit (property-tested in `tests/proptests.rs`).
+
+/// Number of power-of-two size classes (2^0 ..= 2^47 elements — far past
+/// any transform this crate plans).
+const CLASSES: usize = 48;
+
+/// Point-in-time accounting snapshot of one or more workspaces.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// High-water mark of bytes checked out at once.
+    pub peak_bytes: u64,
+    /// Bytes currently held by the workspace (free lists + checked out).
+    pub resident_bytes: u64,
+    /// Total `take` calls.
+    pub takes: u64,
+    /// `take` calls that had to allocate (cold misses). Zero growth here
+    /// across a window means the window ran allocation-free.
+    pub allocs: u64,
+}
+
+impl WorkspaceStats {
+    /// Merge another snapshot into this one (per-worker workspaces roll
+    /// up into one engine-level figure; peaks are summed because the
+    /// workers run concurrently).
+    pub fn merge(&mut self, o: &WorkspaceStats) {
+        self.peak_bytes += o.peak_bytes;
+        self.resident_bytes += o.resident_bytes;
+        self.takes += o.takes;
+        self.allocs += o.allocs;
+    }
+}
+
+/// Size-bucketed free list of reusable `f64` scratch buffers (see the
+/// module docs for the lifecycle contract).
+#[derive(Debug, Default)]
+pub struct ConvWorkspace {
+    /// `free[c]` holds buffers of capacity `>= 2^c` (and `< 2^(c+1)`
+    /// for buffers this workspace allocated itself).
+    free: Vec<Vec<Vec<f64>>>,
+    /// Bytes currently checked out via `take`.
+    live_bytes: u64,
+    peak_bytes: u64,
+    resident_bytes: u64,
+    takes: u64,
+    allocs: u64,
+}
+
+/// Size class that can satisfy a request of `len` elements.
+fn class_of_len(len: usize) -> usize {
+    (len.max(1).next_power_of_two().trailing_zeros() as usize).min(CLASSES - 1)
+}
+
+/// Size class a returned buffer of capacity `cap` files under (floor, so
+/// every buffer in `free[c]` really has capacity `>= 2^c`).
+fn class_of_cap(cap: usize) -> usize {
+    ((usize::BITS - 1 - cap.max(1).leading_zeros()) as usize).min(CLASSES - 1)
+}
+
+impl ConvWorkspace {
+    /// Empty workspace; the first requests of each size class allocate,
+    /// everything after reuses.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Borrow a zero-filled buffer of exactly `len` elements. Reuses the
+    /// smallest free buffer whose size class can hold the request (no
+    /// heap allocation on a hit — larger cached buffers serve smaller
+    /// requests, which keeps mixed-length serving allocation-free);
+    /// contents are bitwise identical to `vec![0.0; len]`. Pair with
+    /// [`ConvWorkspace::give`] when done.
+    pub fn take(&mut self, len: usize) -> Vec<f64> {
+        self.takes += 1;
+        let class = class_of_len(len);
+        let hit = (class..self.free.len().min(CLASSES))
+            .find_map(|c| self.free.get_mut(c).and_then(Vec::pop));
+        let mut buf = match hit {
+            Some(b) => b,
+            None => {
+                self.allocs += 1;
+                let b = Vec::with_capacity(1usize << class);
+                self.resident_bytes += (b.capacity() * 8) as u64;
+                b
+            }
+        };
+        buf.clear();
+        buf.resize(len, 0.0);
+        self.live_bytes += (buf.capacity() * 8) as u64;
+        self.peak_bytes = self.peak_bytes.max(self.live_bytes);
+        buf
+    }
+
+    /// Return a buffer previously obtained from [`ConvWorkspace::take`]
+    /// for reuse (capacity is re-bucketed). A buffer this workspace never
+    /// handed out is *adopted*: its capacity joins the resident pool
+    /// without disturbing the checked-out accounting of genuine takes —
+    /// a taken buffer's capacity is always `<=` the live total while it
+    /// is out, so a larger one is provably foreign (smaller foreign
+    /// buffers are indistinguishable and fold into the take accounting;
+    /// the counters are observability, not correctness).
+    pub fn give(&mut self, buf: Vec<f64>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let bytes = (buf.capacity() * 8) as u64;
+        if bytes <= self.live_bytes {
+            self.live_bytes -= bytes;
+        } else {
+            // Provably foreign: adopt into the resident pool, leave the
+            // checked-out accounting of genuine takes untouched.
+            self.resident_bytes += bytes;
+        }
+        let class = class_of_cap(buf.capacity());
+        if self.free.len() <= class {
+            self.free.resize_with(class + 1, Vec::new);
+        }
+        self.free[class].push(buf);
+    }
+
+    /// Start a fresh accounting window: zero the peak/take/alloc counters
+    /// while keeping every cached buffer resident (reset, not freed).
+    pub fn reset(&mut self) {
+        self.peak_bytes = self.live_bytes;
+        self.takes = 0;
+        self.allocs = 0;
+    }
+
+    /// Accounting snapshot.
+    pub fn stats(&self) -> WorkspaceStats {
+        WorkspaceStats {
+            peak_bytes: self.peak_bytes,
+            resident_bytes: self.resident_bytes,
+            takes: self.takes,
+            allocs: self.allocs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_reused() {
+        let mut ws = ConvWorkspace::new();
+        let mut a = ws.take(100);
+        assert_eq!(a.len(), 100);
+        assert!(a.iter().all(|&v| v == 0.0));
+        a.iter_mut().for_each(|v| *v = 7.0);
+        let cap = a.capacity();
+        ws.give(a);
+        // Same class, dirty buffer must come back zeroed, same storage.
+        let b = ws.take(90);
+        assert_eq!(b.len(), 90);
+        assert!(b.iter().all(|&v| v == 0.0));
+        assert_eq!(b.capacity(), cap, "must reuse the cached buffer");
+        let s = ws.stats();
+        assert_eq!(s.takes, 2);
+        assert_eq!(s.allocs, 1, "second take must be a cache hit");
+        ws.give(b);
+    }
+
+    #[test]
+    fn distinct_classes_do_not_alias() {
+        let mut ws = ConvWorkspace::new();
+        let a = ws.take(64); // class 6
+        let b = ws.take(65); // class 7
+        assert!(b.capacity() >= 128);
+        ws.give(a);
+        ws.give(b);
+        assert_eq!(ws.take(64).capacity(), 64);
+        assert_eq!(ws.stats().allocs, 2);
+    }
+
+    #[test]
+    fn peak_tracks_concurrent_checkout_and_reset_keeps_buffers() {
+        let mut ws = ConvWorkspace::new();
+        let a = ws.take(128);
+        let b = ws.take(128);
+        let peak = ws.stats().peak_bytes;
+        assert_eq!(peak, 2 * 128 * 8);
+        ws.give(a);
+        ws.give(b);
+        ws.reset();
+        let s = ws.stats();
+        assert_eq!((s.takes, s.allocs, s.peak_bytes), (0, 0, 0));
+        assert_eq!(s.resident_bytes, 2 * 128 * 8, "reset must not free buffers");
+        // Post-reset takes are cache hits.
+        let c = ws.take(128);
+        let d = ws.take(128);
+        assert_eq!(ws.stats().allocs, 0);
+        ws.give(c);
+        ws.give(d);
+    }
+
+    #[test]
+    fn adopting_a_foreign_buffer_keeps_take_accounting_intact() {
+        let mut ws = ConvWorkspace::new();
+        let a = ws.take(64); // live = 512 B
+        // A buffer this workspace never handed out: adopted into the
+        // resident pool; the checked-out accounting must not move.
+        ws.give(Vec::with_capacity(1024));
+        let s = ws.stats();
+        assert_eq!(s.peak_bytes, 512, "foreign give must not disturb live accounting");
+        assert_eq!(s.resident_bytes, 512 + 1024 * 8);
+        ws.give(a);
+        assert_eq!(ws.stats().peak_bytes, 512);
+        // The adopted buffer serves later takes without allocating, and
+        // only then counts toward the checked-out peak.
+        let b = ws.take(1000);
+        let s = ws.stats();
+        assert_eq!(s.allocs, 1, "adopted buffer must serve the take");
+        assert_eq!(s.peak_bytes, 1024 * 8);
+        ws.give(b);
+    }
+
+    #[test]
+    fn zero_len_take_is_legal() {
+        let mut ws = ConvWorkspace::new();
+        let b = ws.take(0);
+        assert!(b.is_empty());
+        ws.give(b);
+        ws.give(Vec::new()); // capacity-0 give is a no-op
+    }
+
+    #[test]
+    fn stats_merge_sums() {
+        let mut a = WorkspaceStats { peak_bytes: 1, resident_bytes: 2, takes: 3, allocs: 4 };
+        a.merge(&WorkspaceStats { peak_bytes: 10, resident_bytes: 20, takes: 30, allocs: 40 });
+        assert_eq!(a, WorkspaceStats { peak_bytes: 11, resident_bytes: 22, takes: 33, allocs: 44 });
+    }
+}

@@ -49,6 +49,13 @@ pub use tensor::HostTensor;
 /// manifest output list in order, shape, and dtype.
 pub trait Engine {
     fn execute(&mut self, args: &[&HostTensor]) -> crate::Result<Vec<HostTensor>>;
+
+    /// Merged scratch-workspace accounting for engines that execute the
+    /// zero-alloc planned hot path (`fft::workspace`); `None` for engines
+    /// without reusable scratch. Serving workers surface this per shard.
+    fn workspace_stats(&self) -> Option<crate::fft::workspace::WorkspaceStats> {
+        None
+    }
 }
 
 /// An execution backend: manifest + fixture bytes + per-artifact engines.
@@ -242,6 +249,13 @@ impl Artifact {
     /// Total executions so far.
     pub fn call_count(&self) -> u64 {
         self.calls
+    }
+
+    /// Scratch-workspace accounting of the underlying engine (see
+    /// [`Engine::workspace_stats`]): peak bytes and cold-miss allocation
+    /// counts of the reusable per-worker scratch arenas.
+    pub fn workspace_stats(&self) -> Option<crate::fft::workspace::WorkspaceStats> {
+        self.engine.workspace_stats()
     }
 
     /// Validate runtime inputs against the manifest signature.

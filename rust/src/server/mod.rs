@@ -58,6 +58,10 @@ pub struct ModelProfile {
     artifact: String,
     seq_len: usize,
     vocab: usize,
+    /// §3.2 modeled per-row forward cost (integer ns units) — the
+    /// weighted load-balancing signal, so model fleets mixed with other
+    /// profiles in ops rollups compare on the same scale as conv shards.
+    row_cost: u64,
 }
 
 impl ModelProfile {
@@ -72,12 +76,27 @@ impl ModelProfile {
         let seq_len = spec.meta_usize("seq_len").ok_or_else(|| format_err!("missing seq_len"))?;
         let vocab = spec.meta_usize("vocab").ok_or_else(|| format_err!("missing vocab"))?;
         spec.meta_usize("batch").ok_or_else(|| format_err!("missing batch"))?;
+        // Modeled cost of one forward row: every layer runs one causal
+        // long conv over `dim` channel rows at FFT length 2·seq (the
+        // dominant term the cost model ranks). Non-power-of-two lengths
+        // never reach a plan; weigh them nominally.
+        let dim = spec.meta_usize("dim").unwrap_or(1);
+        let layers = spec.meta_usize("layers").unwrap_or(1);
+        let row_cost = if seq_len.is_power_of_two() {
+            let fft_len = 2 * seq_len;
+            let order = crate::costmodel::best_native_order(fft_len);
+            let secs = layers.max(1) as f64
+                * crate::costmodel::conv_cost(fft_len, order, 1, dim.max(1), &crate::costmodel::CPU);
+            ((secs * 1e9) as u64).max(1)
+        } else {
+            1
+        };
         // Probe-load the artifact so a listed-but-unloadable entry (bad
         // fixture, missing engine) fails server startup synchronously —
         // matching the old ready-channel contract — instead of leaving a
         // permanently dead shard behind an Ok handle.
         runtime.load(artifact)?;
-        Ok(Self { artifact: artifact.to_string(), seq_len, vocab })
+        Ok(Self { artifact: artifact.to_string(), seq_len, vocab, row_cost })
     }
 
     /// Context length of the served artifact.
@@ -96,8 +115,9 @@ impl ShardProfile for ModelProfile {
     type Control = NoControl;
 
     fn plan(&self, _req: &Self::Request) -> RoutePlan {
-        // One artifact, one bucket: the key is the context length.
-        RoutePlan { key: Some((0, self.seq_len)), rows: 1 }
+        // One artifact, one bucket: the key is the context length, the
+        // weight the modeled per-row forward cost.
+        RoutePlan { key: Some((0, self.seq_len)), cost: self.row_cost }
     }
 
     fn run_shard(
@@ -281,6 +301,11 @@ impl Worker {
             let result = self
                 .artifact
                 .call(&[HostTensor::i32(tokens, &[self.batch, self.seq_len])]);
+            // Surface the zoo engine's reusable-scratch peak (the
+            // zero-alloc serving contract's observable).
+            if let Some(ws) = self.artifact.workspace_stats() {
+                self.stats.workspace_peak_bytes.fetch_max(ws.peak_bytes, Ordering::Relaxed);
+            }
             match result {
                 Ok(outs) => {
                     let logits = outs[0].as_f32();

@@ -75,25 +75,56 @@ impl Drop for WorkerPool {
 
 /// Map `f` over `items` using up to `threads` scoped threads, preserving
 /// order. Used for fan-out work that borrows from the caller's stack.
+/// Delegates to [`parallel_map_ctx`] with unit contexts, so there is one
+/// work-stealing implementation to maintain.
 pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
 {
-    let threads = threads.max(1);
+    let mut ctxs = vec![(); threads.max(1)];
+    parallel_map_ctx(items, &mut ctxs, |item, _| f(item))
+}
+
+/// [`parallel_map`] with a caller-owned mutable *context* per worker
+/// thread — the fan-out shape the zero-alloc hot path needs: each worker
+/// carries one reusable `fft::workspace::ConvWorkspace` (or any other
+/// scratch state) across every item it pulls, so steady-state fan-out
+/// performs no per-item allocation. At most `ctxs.len()` workers run;
+/// worker `i` has exclusive use of `ctxs[i]`. Contexts must not affect
+/// results (scratch only), which keeps the output independent of the
+/// worker count and the work-stealing schedule; order is preserved.
+pub fn parallel_map_ctx<T, R, C, F>(items: Vec<T>, ctxs: &mut [C], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    C: Send,
+    F: Fn(T, &mut C) -> R + Sync,
+{
+    assert!(!ctxs.is_empty(), "parallel_map_ctx needs at least one context");
     let n = items.len();
+    if n == 0 {
+        return vec![];
+    }
+    if ctxs.len() == 1 || n == 1 {
+        // Sequential fast path: no threads, same results by the
+        // context-independence contract.
+        let ctx = &mut ctxs[0];
+        return items.into_iter().map(|item| f(item, &mut *ctx)).collect();
+    }
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let work: Mutex<std::vec::IntoIter<(usize, T)>> =
         Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>().into_iter());
     let results = Mutex::new(&mut out);
     std::thread::scope(|s| {
-        for _ in 0..threads.min(n.max(1)) {
-            s.spawn(|| loop {
+        for ctx in ctxs.iter_mut().take(n) {
+            let (work, results, f) = (&work, &results, &f);
+            s.spawn(move || loop {
                 let next = { work.lock().unwrap().next() };
                 match next {
                     Some((i, item)) => {
-                        let r = f(item);
+                        let r = f(item, &mut *ctx);
                         results.lock().unwrap()[i] = Some(r);
                     }
                     None => break,
@@ -165,6 +196,30 @@ mod tests {
     fn parallel_map_empty() {
         let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_map_ctx_preserves_order_and_reuses_contexts() {
+        // Every worker counts the items it handled in its own context;
+        // results must be ordered and the counts must cover all items.
+        let mut ctxs = vec![0usize; 4];
+        let out = parallel_map_ctx((0..100).collect(), &mut ctxs, |x: i32, c: &mut usize| {
+            *c += 1;
+            x * x
+        });
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+        assert_eq!(ctxs.iter().sum::<usize>(), 100);
+        // Sequential fast path (single context) touches only ctxs[0].
+        let mut one = vec![0usize; 1];
+        let out = parallel_map_ctx(vec![1, 2, 3], &mut one, |x: i32, c: &mut usize| {
+            *c += 1;
+            x + 1
+        });
+        assert_eq!(out, vec![2, 3, 4]);
+        assert_eq!(one[0], 3);
+        // Empty input is fine and touches nothing.
+        let empty: Vec<i32> = parallel_map_ctx(Vec::new(), &mut ctxs, |x: i32, _: &mut usize| x);
+        assert!(empty.is_empty());
     }
 
     #[test]

@@ -15,8 +15,9 @@
 
 use std::sync::Arc;
 
+use crate::fft::workspace::{ConvWorkspace, WorkspaceStats};
 use crate::fft::{self, plan::RealConvPlan, Cpx};
-use crate::util::pool::{parallel_map, row_blocks};
+use crate::util::pool::{parallel_map, parallel_map_ctx, row_blocks};
 use crate::util::Rng;
 use crate::{bail, ensure};
 
@@ -143,6 +144,10 @@ pub struct HyenaLm {
     /// Planned per-layer filter half-spectrum planes, `(dim, bins)` each.
     spec_re: Vec<Vec<f64>>,
     spec_im: Vec<Vec<f64>>,
+    /// One reusable scratch workspace per row-block worker (monarch
+    /// variant), shared by every layer of every forward call — reset,
+    /// never freed, so steady-state serving allocates no plan scratch.
+    workspaces: Vec<ConvWorkspace>,
 }
 
 impl HyenaLm {
@@ -158,10 +163,10 @@ impl HyenaLm {
         let plan = if cfg.baseline {
             None
         } else {
-            // The §3.2 cost model picks the Monarch order for the causal
-            // FFT length, same dispatch as the conv engines.
-            let order =
-                crate::costmodel::best_order_upto(2 * cfg.seq, &crate::costmodel::CPU, 3);
+            // The calibrated §3.2 cost model picks the Monarch order for
+            // the causal FFT length, same dispatch as the conv engines
+            // (orders 2..=4 since the order-4 cap raise).
+            let order = crate::costmodel::best_native_order(2 * cfg.seq);
             Some(fft::plan::real_plan(2 * cfg.seq, order)?)
         };
         Ok(Self {
@@ -171,11 +176,22 @@ impl HyenaLm {
             spectra: vec![],
             spec_re: vec![],
             spec_im: vec![],
+            workspaces: vec![],
         })
     }
 
     pub fn config(&self) -> &HyenaConfig {
         &self.cfg
+    }
+
+    /// Merged scratch-workspace accounting across the row-block workers
+    /// (zeros for the baseline variant, which has no planned scratch).
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        let mut s = WorkspaceStats::default();
+        for ws in &self.workspaces {
+            s.merge(&ws.stats());
+        }
+        s
     }
 
     /// Spectrum of one padded filter row (baseline radix-2 path).
@@ -282,6 +298,12 @@ impl HyenaLm {
         let sl = self.cfg.short_len;
         let threads =
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        // Per-worker scratch workspaces, owned by the model across calls
+        // (taken out locally so the plan/spectra borrows stay shared).
+        if self.plan.is_some() && self.workspaces.len() < threads {
+            self.workspaces.resize_with(threads, ConvWorkspace::new);
+        }
+        let mut wss = std::mem::take(&mut self.workspaces);
         for (li, lp) in p.layers.iter().enumerate() {
             // RMSNorm + input projection to (u, v, w).
             let mut pu = vec![0.0f64; batch * l * d];
@@ -338,20 +360,30 @@ impl HyenaLm {
             let conv: Vec<f64> = if let Some(rp) = &self.plan {
                 let kre = &self.spec_re[li];
                 let kim = &self.spec_im[li];
-                let blocks =
-                    row_blocks(rows_n, if use_par { threads.min(rows_n) } else { 1 });
-                let run = |blk: std::ops::Range<usize>| -> Vec<f64> {
-                    let mut gblk = vec![0.0f64; blk.len() * m];
+                let nblocks = if use_par { threads.min(rows_n) } else { 1 };
+                let blocks = row_blocks(rows_n, nblocks);
+                // Each worker packs and convolves out of its own
+                // persistent workspace; only the per-block result grid is
+                // freshly allocated (it is the returned value).
+                let run = |blk: std::ops::Range<usize>, ws: &mut ConvWorkspace| -> Vec<f64> {
+                    let mut gblk = ws.take(blk.len() * m);
                     for (i, row) in blk.clone().enumerate() {
                         short_gate_row(&mut gblk[i * m..i * m + l], row);
                     }
-                    rp.conv_rows(&gblk, blk.len(), kre, kim, |i| (blk.start + i) % d)
+                    let mut yblk = vec![0.0f64; blk.len() * m];
+                    rp.conv_rows_into(
+                        &gblk,
+                        blk.len(),
+                        kre,
+                        kim,
+                        |i| (blk.start + i) % d,
+                        &mut yblk,
+                        ws,
+                    );
+                    ws.give(gblk);
+                    yblk
                 };
-                let out: Vec<Vec<f64>> = if blocks.len() > 1 {
-                    parallel_map(blocks, threads.min(rows_n), run)
-                } else {
-                    blocks.into_iter().map(run).collect()
-                };
+                let out: Vec<Vec<f64>> = parallel_map_ctx(blocks, &mut wss[..nblocks], run);
                 out.concat()
             } else {
                 let spectra = &self.spectra[li];
@@ -394,6 +426,7 @@ impl HyenaLm {
                 }
             }
         }
+        self.workspaces = wss;
 
         // Final norm + tied-embedding head.
         let mut logits = vec![0.0f32; batch * l * v];

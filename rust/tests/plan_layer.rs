@@ -273,41 +273,47 @@ fn planned_sparse_engine_matches_block_oracle() {
     }
 }
 
-/// Measured-vs-modeled sanity: the §3.2 cost model's order-2/3 choice on
-/// the CPU profile should match the *measured* crossover of the planned
-/// engine within one bucket of the length ladder. Timing-sensitive, so
-/// ignored by default — run with
+/// Measured-vs-modeled sanity: the calibrated §3.2 cost model's order
+/// choice (2..=4 since the order-4 cap raise) should match the *measured*
+/// crossover of the planned engine within one bucket of the length
+/// ladder — this probe is the calibration input for `costmodel::CPU`.
+/// Timing-sensitive, so ignored by default — run with
 /// `cargo test --release --test plan_layer -- --ignored`.
 #[test]
 #[ignore = "timing-sensitive perf probe; run explicitly with -- --ignored"]
 fn measured_order_crossover_matches_cost_model_within_one_bucket() {
-    let ladder: Vec<usize> = (7..=15).map(|lg| 1usize << lg).collect(); // 128..32768
+    let ladder: Vec<usize> = (7..=16).map(|lg| 1usize << lg).collect(); // 128..65536
     let cfg = BenchConfig {
         warmup: 1,
         iters: 5,
         max_time: std::time::Duration::from_secs(4),
     };
+    let orders = [2usize, 3, 4];
     let rows = 8usize;
     let mut rng = Rng::new(0xC0);
     let mut modeled = vec![];
     let mut measured = vec![];
+    let mut ws = fft::workspace::ConvWorkspace::new();
     for &fft_len in &ladder {
-        modeled.push(costmodel::best_order_upto(fft_len, &costmodel::CPU, 3));
+        modeled.push(costmodel::best_native_order(fft_len));
         let n = fft_len / 2; // conv seq_len whose causal FFT is fft_len
         let x: Vec<f64> = (0..rows * fft_len)
             .map(|i| if i % fft_len < n { rng.normal() } else { 0.0 })
             .collect();
         let kb: Vec<f64> = (0..fft_len).map(|i| if i < n { rng.normal() } else { 0.0 }).collect();
+        let mut y = vec![0.0f64; rows * fft_len];
         let mut times = vec![];
-        for order in [2usize, 3] {
+        for &order in &orders {
             let rp = plan::real_plan(fft_len, order).unwrap();
             let (kre, kim) = rp.rfft_rows(&kb, 1);
             let r = bench(&format!("planned_o{order}_m{fft_len}"), &cfg, || {
-                std::hint::black_box(rp.conv_rows(&x, rows, &kre, &kim, |_| 0));
+                rp.conv_rows_into(&x, rows, &kre, &kim, |_| 0, &mut y, &mut ws);
+                std::hint::black_box(&y);
             });
             times.push(r.median_ns);
         }
-        measured.push(if times[1] < times[0] { 3 } else { 2 });
+        let best = (0..orders.len()).min_by(|&a, &b| times[a].total_cmp(&times[b])).unwrap();
+        measured.push(orders[best]);
     }
     eprintln!("fft_len: modeled vs measured");
     for (i, &m) in ladder.iter().enumerate() {

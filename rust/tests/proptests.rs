@@ -515,6 +515,54 @@ fn prop_planned_block_inverse_matches_naive() {
 }
 
 #[test]
+fn prop_workspace_interleaving_is_bitwise_identical() {
+    // One shared ConvWorkspace carried across every generated case:
+    // mixed lengths, orders, and batch sizes interleave through it (the
+    // serving shape — one workspace per shard worker, many buckets), and
+    // every result must match the fresh-alloc convenience wrappers BIT
+    // FOR BIT, in both the conv path and the raw complex transforms.
+    let mut ws = fft::workspace::ConvWorkspace::new();
+    prop::forall_ok(
+        "shared-workspace execution == fresh-alloc wrappers (bitwise)",
+        31,
+        prop::default_cases(),
+        |rng| {
+            let n = gen::pow2(rng, 4, 9);
+            let order = 1 + gen::index(rng, 0, 3);
+            let rows = 1 + gen::index(rng, 0, 4);
+            (n, order, rows, gen::signal(rng, rows * n), gen::signal(rng, n))
+        },
+        move |&(n, order, rows, ref u, ref k)| {
+            // Real conv path.
+            let rp = fft::plan::real_plan(n, order).map_err(|e| format!("{e:#}"))?;
+            let (kre, kim) = rp.rfft_rows(k, 1);
+            let want = rp.conv_rows(u, rows, &kre, &kim, |_| 0);
+            let mut got = vec![0.0f64; rows * n];
+            rp.conv_rows_into(u, rows, &kre, &kim, |_| 0, &mut got, &mut ws);
+            if !want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()) {
+                return Err(format!("n={n} order={order} rows={rows}: conv diverged bitwise"));
+            }
+            // Complex forward/inverse through the same shared workspace.
+            let p = fft::plan::plan(n, order.min(2)).map_err(|e| format!("{e:#}"))?;
+            let mut re_a: Vec<f64> = u[..rows * n].to_vec();
+            let mut im_a: Vec<f64> = vec![0.25; rows * n];
+            let mut re_b = re_a.clone();
+            let mut im_b = im_a.clone();
+            p.forward(&mut re_a, &mut im_a, rows);
+            p.forward_ws(&mut re_b, &mut im_b, rows, &mut ws);
+            p.inverse(&mut re_a, &mut im_a, rows);
+            p.inverse_ws(&mut re_b, &mut im_b, rows, &mut ws);
+            if !re_a.iter().zip(&re_b).all(|(a, b)| a.to_bits() == b.to_bits())
+                || !im_a.iter().zip(&im_b).all(|(a, b)| a.to_bits() == b.to_bits())
+            {
+                return Err(format!("n={n} rows={rows}: transform diverged bitwise"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_rng_uniform_bounds() {
     let mut rng = Rng::new(123);
     for _ in 0..10_000 {
