@@ -67,6 +67,56 @@ else
         && echo "BENCH_fleet.json OK (grep check; python3 unavailable)"
 fi
 
+# Decode artifact: a one-iteration smoke through the decode bench must
+# emit BENCH_decode.json with paired cached/full records per context
+# length so the sessions-vs-recompute trajectory accumulates across PRs.
+# The speedup itself is only asserted as a warning at this scale (1
+# iteration, 8 tokens is noise-dominated); the full-scale run is manual.
+echo "==> decode smoke: FFC_BENCH_ITERS=1 cargo bench --bench table_decode"
+rm -f BENCH_decode.json
+FFC_BENCH_ITERS=1 FFC_BENCH_MAX_SECS=60 FFC_DECODE_TOKENS=8 \
+    cargo bench --bench table_decode >/dev/null
+test -s BENCH_decode.json || { echo "FAIL: BENCH_decode.json missing or empty"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PY'
+import json
+recs = json.load(open("BENCH_decode.json"))
+by = {r["name"]: r for r in recs}
+pairs = []
+for name in by:
+    if name.startswith("decode_cached_n"):
+        n = name[len("decode_cached_n"):]
+        full = by.get(f"decode_full_n{n}")
+        assert full, f"missing full-recompute record for context {n}: {sorted(by)}"
+        pairs.append((int(n), by[name], full))
+assert len(pairs) >= 2, f"need >=2 context lengths, got {sorted(by)}"
+for n, cached, full in sorted(pairs):
+    for r in (cached, full):
+        missing = {"name", "n", "mean_ns", "median_ns", "p95_ns"} - set(r)
+        assert not missing, f"record missing {missing}: {r}"
+        assert r["n"] == n and r["median_ns"] > 0, f"degenerate record: {r}"
+largest = max(pairs)
+speedup = largest[2]["median_ns"] / largest[1]["median_ns"]
+print(f"BENCH_decode.json OK ({len(pairs)} contexts; cached vs full at "
+      f"n={largest[0]}: {speedup:.2f}x)")
+if speedup <= 1.0:
+    print(f"WARN: cached decode did not beat full recompute this run ({speedup:.2f}x)")
+PY
+else
+    grep -q '"decode_cached_n' BENCH_decode.json \
+        && grep -q '"decode_full_n' BENCH_decode.json \
+        && echo "BENCH_decode.json OK (grep check; python3 unavailable)"
+fi
+
+# The incremental path is only trustworthy if the parity tests actually
+# ran: the session chain must match the time-domain oracle token-for-token.
+echo "==> decode parity: cargo test decode_parity"
+parity_out=$(cargo test --release -q decode_parity 2>&1) || {
+    echo "$parity_out"; echo "FAIL: decode parity tests failed"; exit 1; }
+echo "$parity_out" | grep -Eq '[1-9][0-9]* passed' \
+    || { echo "$parity_out"; echo "FAIL: no decode_parity test ran"; exit 1; }
+echo "decode parity OK"
+
 # Perf smoke: a one-iteration bench run must produce the machine-readable
 # perf artifact (BENCH_table3.json is how the perf trajectory accumulates
 # across PRs), and the artifact must be well-formed.

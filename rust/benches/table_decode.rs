@@ -1,0 +1,119 @@
+//! Incremental decode throughput: spectral-prefix-cache sessions vs
+//! full-window recompute, at several context lengths.
+//!
+//! For each context length the bench starts a single-shard `ModelServer`
+//! over an LM-logits artifact, generates `FFC_DECODE_TOKENS` tokens per
+//! iteration twice — once through `greedy_extend` (incremental session:
+//! prompt processed once, then amortized near-constant work per token)
+//! and once through `greedy_extend_full` (re-submits the trailing
+//! context window every step, O(context) per token) — and records both
+//! as tokens/sec. Emits `BENCH_decode.json`; record `median_ns` is the
+//! per-token median so tokens/sec = 1e9 / median_ns and the cached/full
+//! speedup is the ratio of paired `median_ns` values.
+//!
+//! Env knobs: `FFC_DECODE_TOKENS` (tokens per iteration, default 32)
+//! plus the usual `FFC_BENCH_ITERS` / `FFC_BENCH_MAX_SECS`.
+
+use std::time::Duration;
+
+use flashfftconv::bench::{self, fmt_ms, fmt_x, BenchConfig, BenchRecord, Table};
+use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::runtime::BackendConfig;
+use flashfftconv::server::ModelServer;
+use flashfftconv::trainer::data::TokenGen;
+use flashfftconv::zoo::sample::{greedy_extend, greedy_extend_full};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let tokens = env_usize("FFC_DECODE_TOKENS", 32).max(1);
+    // (artifact, context length) — spans 64..2048 so the per-token cost
+    // trend over context is visible, not just one speedup point.
+    let contexts =
+        [("lm_fwd_logits", 64usize), ("e2e_m2bert_monarch", 128), ("e2e_sashimi_monarch", 2048)];
+
+    println!("== Incremental decode vs full-window recompute ==");
+    println!("   {tokens} generated tokens per iteration\n");
+
+    let mut records: Vec<BenchRecord> = vec![];
+    let mut t = Table::new(&[
+        "context",
+        "cached_tok_ms",
+        "full_tok_ms",
+        "cached_tok_s",
+        "full_tok_s",
+        "speedup",
+    ]);
+    let mut cached_per_tok = vec![];
+
+    for (artifact, seq) in contexts {
+        let server = ModelServer::start(
+            BackendConfig::NativeRowThreads(1),
+            artifact,
+            BatchPolicy { batch_size: 1, max_wait: Duration::from_micros(50) },
+        )
+        .expect("model server starts");
+        assert_eq!(server.seq_len, seq, "artifact {artifact} context length");
+        let prompt = TokenGen::new(server.vocab, 7).batch(1, seq);
+
+        // Warm up both paths (artifact load, plan construction, session
+        // machinery) and pin down that they agree on the first generated
+        // token: for the very first step the full path's window IS the
+        // prompt, so the two argmax chains must coincide there.
+        let a = greedy_extend(&server, &prompt, 2).expect("session decode");
+        let b = greedy_extend_full(&server, &prompt, 1).expect("full decode");
+        assert_eq!(a[seq], b[seq], "first generated token must agree (n={seq})");
+
+        let cached = bench::bench(&format!("decode_cached_n{seq}"), &cfg, || {
+            greedy_extend(&server, &prompt, tokens).expect("session decode");
+        });
+        let full = bench::bench(&format!("decode_full_n{seq}"), &cfg, || {
+            greedy_extend_full(&server, &prompt, tokens).expect("full decode");
+        });
+
+        // Per-token medians; tokens/sec = 1e9 / median_ns.
+        let c_tok = cached.median_ns / tokens as f64;
+        let f_tok = full.median_ns / tokens as f64;
+        cached_per_tok.push((seq, c_tok));
+        t.row(vec![
+            format!("n={seq}"),
+            fmt_ms(c_tok / 1e6),
+            fmt_ms(f_tok / 1e6),
+            format!("{:.1}", 1e9 / c_tok),
+            format!("{:.1}", 1e9 / f_tok),
+            fmt_x(f_tok / c_tok),
+        ]);
+        for (r, per_tok) in [(&cached, c_tok), (&full, f_tok)] {
+            records.push(BenchRecord {
+                name: r.name.clone(),
+                n: seq,
+                mean_ns: r.mean_ns,
+                median_ns: per_tok,
+                p95_ns: r.p95_ns,
+            });
+        }
+    }
+    t.print();
+
+    // The cache pays off when per-token cost grows sublinearly in the
+    // context length (full recompute is ~linear: each step replays the
+    // whole window).
+    if let (Some(&(n0, c0)), Some(&(n1, c1))) = (cached_per_tok.first(), cached_per_tok.last()) {
+        let cost_ratio = c1 / c0.max(1e-9);
+        let ctx_ratio = n1 as f64 / n0 as f64;
+        println!(
+            "\ncached per-token cost {}ms -> {}ms over context {}x (ratio {} — sublinear when < context ratio)",
+            fmt_ms(c0 / 1e6),
+            fmt_ms(c1 / 1e6),
+            ctx_ratio,
+            fmt_x(cost_ratio)
+        );
+    }
+
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json");
+    bench::write_json(out, &records).expect("write BENCH_decode.json");
+    eprintln!("(wrote {out}: {} records)", records.len());
+}

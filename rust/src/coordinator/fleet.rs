@@ -12,6 +12,14 @@
 //!   one holding many short rows (raw row counts misroute mixed-bucket
 //!   traffic). Ties prefer the key's affinity shard so same-bucket
 //!   requests keep batching together.
+//! * **Sticky sessions** — a request whose [`RoutePlan::pin`] names a
+//!   shard bypasses balancing: incremental-decode sessions keep their
+//!   per-layer state resident in one worker's engine, so every step must
+//!   land on that worker. Session state does *not* survive a respawn: a
+//!   pinned request racing a worker death fails fast with the retryable
+//!   [`FleetError::ShardDied`], and a step that reaches the respawned
+//!   (state-empty) worker is answered with the non-retryable
+//!   [`FleetError::SessionLost`] — the client re-opens its session.
 //! * **Backpressure** — admission is bounded by `max_inflight`:
 //!   [`FleetDispatcher::submit`] returns [`FleetError::Busy`] exactly when
 //!   the fleet-wide in-flight count has reached the bound, and
@@ -79,8 +87,18 @@ impl LatencyHistogram {
         std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
     }
 
+    /// Finite upper bound (milliseconds) reported for samples in the
+    /// last (overflow) bucket: `2^(HIST_BUCKETS-1)` microseconds, ~6.4
+    /// days. Quantiles never exceed this value, however large the
+    /// recorded latencies were.
+    pub fn overflow_bound_ms() -> f64 {
+        (1u64 << (HIST_BUCKETS - 1)) as f64 / 1_000.0
+    }
+
     /// Quantile (`0 < q <= 1`) in milliseconds from a counts snapshot,
     /// reported as the matched bucket's upper bound; 0.0 when empty.
+    /// Samples past the histogram's range land in the overflow bucket
+    /// and report the finite [`LatencyHistogram::overflow_bound_ms`].
     /// Snapshots from several shards can be summed before calling this —
     /// that is how the fleet rollup merges per-shard histograms.
     pub fn quantile_ms(counts: &[u64; HIST_BUCKETS], q: f64) -> f64 {
@@ -118,6 +136,11 @@ pub enum FleetError {
     /// The worker rejected or failed the request (bad shape, routing,
     /// engine error). Not retryable: the same request fails again.
     Failed(String),
+    /// A pinned decode-session request reached its shard, but the shard
+    /// no longer holds the session's state (the worker was respawned, or
+    /// the session was closed). Not retryable as-is: the client must
+    /// open a fresh session.
+    SessionLost,
     /// The fleet is shutting down.
     Shutdown,
 }
@@ -135,6 +158,9 @@ impl std::fmt::Display for FleetError {
             FleetError::Busy => write!(f, "fleet busy: max_inflight reached (retryable)"),
             FleetError::ShardDied => write!(f, "shard worker died in flight (retryable)"),
             FleetError::Failed(msg) => write!(f, "{msg}"),
+            FleetError::SessionLost => {
+                write!(f, "decode session state lost (shard respawned or session closed); re-open")
+            }
             FleetError::Shutdown => write!(f, "fleet is shutting down"),
         }
     }
@@ -217,11 +243,20 @@ impl FleetShared {
         }
     }
 
-    /// Give back one admission slot and wake a waiter.
+    /// Give back one admission slot and wake a waiter. Exactly one
+    /// release per admission: an underflow here means some path settled
+    /// a slot twice (e.g. a reply fulfilled *and* drop-settled), which
+    /// would silently widen the effective `max_inflight` — fail the
+    /// debug build and refuse to corrupt the gauge in release builds.
     fn release(&self) {
         {
             let mut g = self.inflight.lock().unwrap();
-            *g = g.saturating_sub(1);
+            debug_assert!(*g > 0, "admission slot released more often than admitted");
+            if *g == 0 {
+                crate::log_warn!("fleet admission underflow: release without matching admit");
+            } else {
+                *g -= 1;
+            }
         }
         self.cv.notify_all();
     }
@@ -273,6 +308,12 @@ impl ReplySlot {
         self.finish(r.map_err(FleetError::Failed));
     }
 
+    /// Deliver a typed failure (e.g. [`FleetError::SessionLost`] when a
+    /// respawned worker receives a step for state it no longer holds).
+    pub fn fail(mut self, e: FleetError) {
+        self.finish(Err(e));
+    }
+
     fn finish(&mut self, r: FleetReply) {
         if let Some(tx) = self.client.take() {
             if r.is_err() {
@@ -321,6 +362,12 @@ pub struct RoutePlan {
     /// (>= 1) — so outstanding work compares correctly across buckets of
     /// very different lengths.
     pub cost: u64,
+    /// Sticky routing: dispatch to exactly this shard, bypassing the
+    /// balancer (decode-session traffic, whose state lives in one
+    /// worker's engine). A pinned request never fails over to another
+    /// shard; if the pinned shard is down it fails fast instead
+    /// (see the module docs on session respawn semantics).
+    pub pin: Option<usize>,
 }
 
 /// Messages a shard worker consumes. Generic over the [`ShardProfile`] so
@@ -727,9 +774,21 @@ impl<P: ShardProfile> FleetDispatcher<P> {
         Some(pick)
     }
 
+    /// The shard the balancer would currently route an un-keyed request
+    /// to: the live shard with the least outstanding modeled cost.
+    /// Session facades use this to place new decode sessions before
+    /// pinning their traffic ([`RoutePlan::pin`]); `None` when no shard
+    /// is alive right now.
+    pub fn least_loaded_live_shard(&self) -> Option<usize> {
+        self.pick_shard(None)
+    }
+
     /// Dispatch an already-admitted request to a shard. Retries across
     /// shards when a send races a worker death; gives the admission slot
-    /// (and the request) back on terminal failure.
+    /// (and the request) back on terminal failure. Pinned requests never
+    /// retry elsewhere: a dead pinned shard fails fast (retryable
+    /// `ShardDied` — but the session state is gone, so the respawned
+    /// worker will answer retried steps with `SessionLost`).
     fn dispatch(&self, req: P::Request) -> Result<Receiver<FleetReply>, (P::Request, FleetError)> {
         let plan = self.profile.plan(&req);
         let (client_tx, client_rx) = channel::<FleetReply>();
@@ -740,7 +799,30 @@ impl<P: ShardProfile> FleetDispatcher<P> {
                 self.shared.release();
                 return Err((req, FleetError::Shutdown));
             }
-            let Some(shard) = self.pick_shard(plan.key) else {
+            if let Some(pin) = plan.pin {
+                if pin >= self.stats.len() {
+                    self.shared.release();
+                    return Err((
+                        req,
+                        FleetError::Failed(format!(
+                            "session pinned to shard {pin}, but the fleet has {} shards",
+                            self.stats.len()
+                        )),
+                    ));
+                }
+                if self.shared.defunct[pin].load(Ordering::Acquire) {
+                    self.shared.release();
+                    return Err((
+                        req,
+                        FleetError::Failed(format!("session shard {pin} is defunct")),
+                    ));
+                }
+                if !self.shared.alive[pin].load(Ordering::Acquire) {
+                    self.shared.release();
+                    return Err((req, FleetError::ShardDied));
+                }
+            }
+            let Some(shard) = plan.pin.or_else(|| self.pick_shard(plan.key)) else {
                 if self.shared.defunct.iter().all(|d| d.load(Ordering::Acquire)) {
                     // Nothing will ever come back: fail non-retryably so
                     // retry-on-retryable clients terminate.
@@ -1048,9 +1130,51 @@ mod tests {
         assert!(FleetError::Busy.retryable());
         assert!(FleetError::ShardDied.retryable());
         assert!(!FleetError::Failed("x".into()).retryable());
+        assert!(!FleetError::SessionLost.retryable());
         assert!(!FleetError::Shutdown.retryable());
         assert!(format!("{}", FleetError::Busy).contains("retryable"));
+        assert!(format!("{}", FleetError::SessionLost).contains("re-open"));
         assert_eq!(format!("{}", FleetError::Failed("boom".into())), "boom");
+    }
+
+    #[test]
+    fn reply_slot_settles_exactly_once() {
+        // A fulfilled slot must settle its admission slot and outstanding
+        // cost exactly once; the subsequent Drop must be a no-op (the
+        // double-release the saturating_sub used to paper over).
+        let shared = Arc::new(FleetShared::new(1, 4));
+        let stats = Arc::new(ServiceStats::default());
+        assert!(shared.try_admit());
+        shared.outstanding[0].fetch_add(7, Ordering::Relaxed);
+        let (tx, rx) = channel::<FleetReply>();
+        let slot = ReplySlot::new(tx, Arc::clone(&shared), Arc::clone(&stats), 0, 7);
+        slot.fulfill(Ok(vec![1.0])); // consumes the slot; Drop runs here too
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![1.0]);
+        assert!(rx.recv().is_err(), "exactly one reply is delivered");
+        assert_eq!(shared.inflight_now(), 0, "admission settled exactly once");
+        assert_eq!(shared.outstanding[0].load(Ordering::Relaxed), 0);
+        assert_eq!(shared.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(shared.shard_deaths.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.errors.load(Ordering::Relaxed), 0);
+
+        // A dropped (never-fulfilled) slot settles once too, as ShardDied.
+        assert!(shared.try_admit());
+        shared.outstanding[0].fetch_add(3, Ordering::Relaxed);
+        let (tx, rx) = channel::<FleetReply>();
+        drop(ReplySlot::new(tx, Arc::clone(&shared), Arc::clone(&stats), 0, 3));
+        assert_eq!(rx.recv().unwrap(), Err(FleetError::ShardDied));
+        assert_eq!(shared.inflight_now(), 0);
+        assert_eq!(shared.outstanding[0].load(Ordering::Relaxed), 0);
+        assert_eq!(shared.shard_deaths.load(Ordering::Relaxed), 1);
+
+        // A typed failure path (fail()) also settles exactly once.
+        assert!(shared.try_admit());
+        let (tx, rx) = channel::<FleetReply>();
+        ReplySlot::new(tx, Arc::clone(&shared), Arc::clone(&stats), 0, 0)
+            .fail(FleetError::SessionLost);
+        assert_eq!(rx.recv().unwrap(), Err(FleetError::SessionLost));
+        assert_eq!(shared.inflight_now(), 0);
+        assert_eq!(shared.shard_deaths.load(Ordering::Relaxed), 1, "fail() is not a death");
     }
 
     #[test]

@@ -127,10 +127,16 @@ impl MemoryTracker {
         self.budget
     }
 
-    /// Largest batch size whose modeled footprint fits the remaining budget.
+    /// Largest batch size whose modeled footprint fits the remaining
+    /// budget. A degenerate zero-byte row footprint admits nothing: the
+    /// old `per_row_bytes.max(1)` clamp turned a modeling bug upstream
+    /// into an effectively unbounded batch.
     pub fn max_batch(&self, per_row_bytes: u64) -> usize {
+        if per_row_bytes == 0 {
+            return 0;
+        }
         let free = self.budget.saturating_sub(self.used());
-        (free / per_row_bytes.max(1)) as usize
+        (free / per_row_bytes) as usize
     }
 }
 
@@ -206,6 +212,9 @@ mod tests {
         assert_eq!(t.max_batch(100), 10);
         t.reserve(500);
         assert_eq!(t.max_batch(100), 5);
+        // A zero-byte row footprint is a modeling bug, not free memory:
+        // it must admit nothing rather than a huge batch.
+        assert_eq!(t.max_batch(0), 0);
     }
 
     #[test]

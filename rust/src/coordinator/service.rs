@@ -204,7 +204,7 @@ impl ShardProfile for ConvProfile {
             .and_then(|lens| lens.iter().find(|&&b| b >= req.len))
             .map(|&b| (Self::kind_tag(req.kind), b));
         let cost = key.and_then(|k| self.weights.get(&k).copied()).unwrap_or(1);
-        RoutePlan { key, cost }
+        RoutePlan { key, cost, pin: None }
     }
 
     fn run_shard(

@@ -56,6 +56,32 @@ pub trait Engine {
     fn workspace_stats(&self) -> Option<crate::fft::workspace::WorkspaceStats> {
         None
     }
+
+    /// Open an incremental-decode session keyed by `session`; `args` is
+    /// the full operand list with the prompt in the tokens input.
+    /// Returns the prompt's last-position logits. Default: unsupported.
+    fn decode_open(&mut self, session: u64, args: &[&HostTensor]) -> crate::Result<Vec<f32>> {
+        let _ = (session, args);
+        crate::bail!("this engine does not support incremental decode")
+    }
+
+    /// Advance an open session by one token; returns `Ok(None)` when the
+    /// session is unknown (e.g. the worker holding it was respawned).
+    fn decode_step(
+        &mut self,
+        session: u64,
+        token: i32,
+        args: &[&HostTensor],
+    ) -> crate::Result<Option<Vec<f32>>> {
+        let _ = (session, token, args);
+        crate::bail!("this engine does not support incremental decode")
+    }
+
+    /// Drop a session's state; `Ok(false)` when it was not open.
+    fn decode_close(&mut self, session: u64) -> crate::Result<bool> {
+        let _ = session;
+        crate::bail!("this engine does not support incremental decode")
+    }
 }
 
 /// An execution backend: manifest + fixture bytes + per-artifact engines.
@@ -342,6 +368,67 @@ impl Artifact {
             self.fixed[pos] = Some(t);
         }
         Ok(rest)
+    }
+
+    /// Build the full operand list with `tokens` in the single runtime
+    /// input slot and run `f` on the engine (decode entry points share
+    /// this: decode sessions are only defined for artifacts whose one
+    /// runtime input is the token window).
+    fn with_decode_args<R>(
+        &mut self,
+        prompt: &[i32],
+        f: impl FnOnce(&mut dyn Engine, &[&HostTensor]) -> crate::Result<R>,
+    ) -> crate::Result<R> {
+        let rt_idx = self.spec.runtime_input_indices();
+        if rt_idx.len() != 1 {
+            bail!(
+                "artifact {} has {} runtime inputs; decode sessions need exactly one (tokens)",
+                self.spec.name,
+                rt_idx.len()
+            );
+        }
+        let want = &self.spec.inputs[rt_idx[0]].spec;
+        let n: usize = want.shape.iter().product();
+        if prompt.len() > n {
+            bail!(
+                "decode prompt of {} tokens exceeds the {} input ({n} elements)",
+                prompt.len(),
+                want.name
+            );
+        }
+        // Prompt in row 0 of the declared (batch, seq) shape; the rest
+        // stays zero (decode runs batch 1, the engine reads row 0).
+        let mut buf = vec![0i32; n];
+        buf[..prompt.len()].copy_from_slice(prompt);
+        let tokens = HostTensor::i32(buf, &want.shape);
+        let mut args: Vec<&HostTensor> = Vec::with_capacity(self.fixed.len());
+        for slot in &self.fixed {
+            match slot {
+                Some(t) => args.push(t),
+                None => args.push(&tokens),
+            }
+        }
+        f(self.engine.as_mut(), &args)
+    }
+
+    /// Open incremental-decode session `session` over `prompt` (exactly
+    /// the artifact's context length). Returns the prompt's
+    /// last-position logits. See [`Engine::decode_open`].
+    pub fn decode_open(&mut self, session: u64, prompt: &[i32]) -> crate::Result<Vec<f32>> {
+        self.calls += 1;
+        self.with_decode_args(prompt, |e, args| e.decode_open(session, args))
+    }
+
+    /// Advance session `session` by one token; `Ok(None)` when the
+    /// session is unknown to this engine (state lost, e.g. respawn).
+    pub fn decode_step(&mut self, session: u64, token: i32) -> crate::Result<Option<Vec<f32>>> {
+        self.calls += 1;
+        self.with_decode_args(&[], |e, args| e.decode_step(session, token, args))
+    }
+
+    /// Drop session `session`; `Ok(false)` when it was not open here.
+    pub fn decode_close(&mut self, session: u64) -> crate::Result<bool> {
+        self.engine.decode_close(session)
     }
 
     /// Read back a state/const operand by input name (e.g. a trained

@@ -1030,7 +1030,11 @@ fn lm_forward_spectral(
 // ---------------------------------------------------------------------------
 
 /// Forward-logits engine over the [`crate::zoo::hyena`] LM: backs the
-/// `lm_fwd_logits` serving artifact and the Table 5 `e2e_*` zoo.
+/// `lm_fwd_logits` serving artifact and the Table 5 `e2e_*` zoo. Also
+/// hosts incremental-decode sessions ([`Engine::decode_open`]): each
+/// open session owns a [`hyena::DecodeState`] keyed by session id, so a
+/// serving worker advances generations one token at a time without
+/// re-running the context window.
 struct NativeLmLogitsEngine {
     lm: hyena::HyenaLm,
     batch: usize,
@@ -1039,6 +1043,36 @@ struct NativeLmLogitsEngine {
     idx_norm_f: usize,
     /// Per layer: (norm1, win, wout, short, k) operand positions.
     layer_idx: Vec<[usize; 5]>,
+    /// Open incremental-decode sessions (serving pins each id to one
+    /// engine; state dies with the engine).
+    sessions: std::collections::HashMap<u64, hyena::DecodeState>,
+}
+
+/// Cap on concurrently open decode sessions per engine — a leak guard,
+/// not a throughput limit (each state holds O(layers · dim · seq) f64s).
+const MAX_DECODE_SESSIONS: usize = 256;
+
+/// Borrow the LM parameter set out of a full operand list.
+fn lm_params<'a>(
+    args: &[&'a HostTensor],
+    idx_embed: usize,
+    idx_norm_f: usize,
+    layer_idx: &[[usize; 5]],
+) -> hyena::HyenaParams<'a> {
+    hyena::HyenaParams {
+        embed: args[idx_embed].as_f32(),
+        norm_f: args[idx_norm_f].as_f32(),
+        layers: layer_idx
+            .iter()
+            .map(|ix| hyena::LayerParams {
+                norm1: args[ix[0]].as_f32(),
+                win: args[ix[1]].as_f32(),
+                wout: args[ix[2]].as_f32(),
+                short: args[ix[3]].as_f32(),
+                k: args[ix[4]].as_f32(),
+            })
+            .collect(),
+    }
 }
 
 impl NativeLmLogitsEngine {
@@ -1077,27 +1111,14 @@ impl NativeLmLogitsEngine {
             idx_embed,
             idx_norm_f,
             layer_idx,
+            sessions: std::collections::HashMap::new(),
         })
     }
 }
 
 impl Engine for NativeLmLogitsEngine {
     fn execute(&mut self, args: &[&HostTensor]) -> crate::Result<Vec<HostTensor>> {
-        let params = hyena::HyenaParams {
-            embed: args[self.idx_embed].as_f32(),
-            norm_f: args[self.idx_norm_f].as_f32(),
-            layers: self
-                .layer_idx
-                .iter()
-                .map(|ix| hyena::LayerParams {
-                    norm1: args[ix[0]].as_f32(),
-                    win: args[ix[1]].as_f32(),
-                    wout: args[ix[2]].as_f32(),
-                    short: args[ix[3]].as_f32(),
-                    k: args[ix[4]].as_f32(),
-                })
-                .collect(),
-        };
+        let params = lm_params(args, self.idx_embed, self.idx_norm_f, &self.layer_idx);
         let tokens = args[self.idx_tokens].as_i32();
         let logits = self.lm.forward(tokens, self.batch, &params)?;
         let cfg = *self.lm.config();
@@ -1106,6 +1127,38 @@ impl Engine for NativeLmLogitsEngine {
 
     fn workspace_stats(&self) -> Option<WorkspaceStats> {
         Some(self.lm.workspace_stats())
+    }
+
+    fn decode_open(&mut self, session: u64, args: &[&HostTensor]) -> crate::Result<Vec<f32>> {
+        if self.sessions.len() >= MAX_DECODE_SESSIONS
+            && !self.sessions.contains_key(&session)
+        {
+            bail!("engine at its decode-session cap ({MAX_DECODE_SESSIONS})");
+        }
+        let seq = self.lm.config().seq;
+        let params = lm_params(args, self.idx_embed, self.idx_norm_f, &self.layer_idx);
+        // Row 0 of the (batch, seq) tokens tensor carries the prompt.
+        let prompt = &args[self.idx_tokens].as_i32()[..seq];
+        let (logits, st) = self.lm.open_decode(prompt, &params)?;
+        self.sessions.insert(session, st);
+        Ok(logits)
+    }
+
+    fn decode_step(
+        &mut self,
+        session: u64,
+        token: i32,
+        args: &[&HostTensor],
+    ) -> crate::Result<Option<Vec<f32>>> {
+        let params = lm_params(args, self.idx_embed, self.idx_norm_f, &self.layer_idx);
+        let Some(st) = self.sessions.get_mut(&session) else {
+            return Ok(None);
+        };
+        self.lm.decode_step(st, token, &params).map(Some)
+    }
+
+    fn decode_close(&mut self, session: u64) -> crate::Result<bool> {
+        Ok(self.sessions.remove(&session).is_some())
     }
 }
 

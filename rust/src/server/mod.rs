@@ -22,8 +22,30 @@
 //! environment has no tokio; the threaded design mirrors a vLLM-style
 //! router. Greedy decoding over a running server lives in
 //! [`crate::zoo::sample`].
+//!
+//! ## Decode-session lifecycle
+//!
+//! [`ModelServer::open_session`] places an incremental-decode session on
+//! the least-loaded live shard, runs the prompt forward there once, and
+//! returns a [`DecodeSession`] handle plus the prompt's last-position
+//! logits. The session's per-layer state
+//! ([`crate::zoo::hyena::DecodeState`]) is *owned by that worker's
+//! engine*, keyed by a server-unique id — so every subsequent
+//! [`DecodeSession::step`] is pinned to the same shard
+//! ([`crate::coordinator::fleet::RoutePlan::pin`]) and bypasses the
+//! balancer. Steps run inline on the worker (never batched): each costs
+//! amortized near-constant work, far less than a full forward.
+//!
+//! Respawn semantics: session state does **not** survive a worker
+//! respawn. A step racing the worker's death fails fast with the
+//! retryable [`FleetError::ShardDied`]; a step that reaches the
+//! respawned (state-empty) worker gets the non-retryable
+//! [`FleetError::SessionLost`] — the client opens a fresh session and
+//! replays its prompt. [`DecodeSession::close`] (or dropping the
+//! handle) frees the worker-side state; a close for an already-lost
+//! session is a harmless no-op.
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -32,7 +54,8 @@ use crate::{bail, format_err};
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::fleet::{
-    FleetConfig, FleetDispatcher, FleetReply, ReplySlot, RoutePlan, ShardMsg, ShardProfile,
+    FleetConfig, FleetDispatcher, FleetError, FleetReply, ReplySlot, RoutePlan, ShardMsg,
+    ShardProfile,
 };
 use crate::coordinator::service::ServiceStats;
 use crate::runtime::{Artifact, BackendConfig, HostTensor};
@@ -41,6 +64,30 @@ use crate::runtime::{Artifact, BackendConfig, HostTensor};
 #[derive(Debug, Clone)]
 pub struct InferRequest {
     pub tokens: Vec<i32>,
+}
+
+/// One decode-session operation (always pinned to the session's shard).
+#[derive(Debug, Clone)]
+pub enum SessionOp {
+    /// Open session `id` over a full-context prompt; replies with the
+    /// prompt's last-position logits.
+    Open { id: u64, prompt: Vec<i32> },
+    /// Advance session `id` by one token; replies with its logits.
+    Step { id: u64, token: i32 },
+    /// Free session `id`'s worker-side state; replies with an empty row.
+    Close { id: u64 },
+}
+
+/// What a model shard consumes: batched full-window inference or a
+/// pinned decode-session operation.
+#[derive(Debug, Clone)]
+pub enum ModelRequest {
+    Infer(InferRequest),
+    Session {
+        /// The shard whose engine holds (or will hold) the session.
+        shard: usize,
+        op: SessionOp,
+    },
 }
 
 /// Reply: logits for the last position (greedy-decode ready), or a typed
@@ -111,13 +158,32 @@ impl ModelProfile {
 }
 
 impl ShardProfile for ModelProfile {
-    type Request = InferRequest;
+    type Request = ModelRequest;
     type Control = NoControl;
 
-    fn plan(&self, _req: &Self::Request) -> RoutePlan {
-        // One artifact, one bucket: the key is the context length, the
-        // weight the modeled per-row forward cost.
-        RoutePlan { key: Some((0, self.seq_len)), cost: self.row_cost }
+    fn plan(&self, req: &Self::Request) -> RoutePlan {
+        match req {
+            // One artifact, one bucket: the key is the context length,
+            // the weight the modeled per-row forward cost.
+            ModelRequest::Infer(_) => {
+                RoutePlan { key: Some((0, self.seq_len)), cost: self.row_cost, pin: None }
+            }
+            // Session traffic is sticky: state lives in one worker's
+            // engine. Opens cost a full forward row; steps are amortized
+            // near-constant (weighted at a seq_len-th of a forward so a
+            // shard hosting active sessions still takes batch traffic);
+            // closes are nominal.
+            ModelRequest::Session { shard, op } => {
+                let cost = match op {
+                    SessionOp::Open { .. } => self.row_cost,
+                    SessionOp::Step { .. } => {
+                        (self.row_cost / self.seq_len.max(1) as u64).max(1)
+                    }
+                    SessionOp::Close { .. } => 1,
+                };
+                RoutePlan { key: None, cost, pin: Some(*shard) }
+            }
+        }
     }
 
     fn run_shard(
@@ -145,6 +211,8 @@ impl FleetDispatcher<ModelProfile> {
 /// original single-worker contract).
 pub struct ModelServer {
     fleet: FleetDispatcher<ModelProfile>,
+    /// Server-unique decode-session id source.
+    session_seq: AtomicU64,
     pub seq_len: usize,
     pub vocab: usize,
 }
@@ -175,7 +243,7 @@ impl ModelServer {
             FleetConfig { shards, max_inflight, policy },
         )?;
         let (seq_len, vocab) = (fleet.profile().seq_len(), fleet.profile().vocab());
-        Ok(Self { fleet, seq_len, vocab })
+        Ok(Self { fleet, session_seq: AtomicU64::new(0), seq_len, vocab })
     }
 
     /// Submit a request (tokens must be exactly `seq_len` long). Never
@@ -183,12 +251,38 @@ impl ModelServer {
     /// errors and are counted — a failed hand-off is no longer silently
     /// ignored.
     pub fn submit(&self, req: InferRequest) -> Receiver<InferReply> {
-        self.fleet.submit_or_reply(req)
+        self.fleet.submit_or_reply(ModelRequest::Infer(req))
     }
 
     /// Submit and wait (blocks for an admission slot, then the reply).
     pub fn call(&self, req: InferRequest) -> crate::Result<Vec<f32>> {
-        self.fleet.call(req).map_err(|e| format_err!(e))
+        self.fleet.call(ModelRequest::Infer(req)).map_err(|e| format_err!(e))
+    }
+
+    /// Open an incremental-decode session: run `prompt` (exactly
+    /// `seq_len` tokens) once on the least-loaded live shard and pin the
+    /// session's state there. Returns the session handle plus the
+    /// prompt's last-position logits. Retries placement a few times when
+    /// a shard dies mid-open (see the module docs for the lifecycle).
+    pub fn open_session(&self, prompt: &[i32]) -> crate::Result<(DecodeSession<'_>, Vec<f32>)> {
+        if prompt.len() != self.seq_len {
+            bail!("prompt length {} != server context {}", prompt.len(), self.seq_len);
+        }
+        let mut last_err = None;
+        for _ in 0..5 {
+            let Some(shard) = self.fleet.least_loaded_live_shard() else {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            };
+            let id = self.session_seq.fetch_add(1, Ordering::Relaxed);
+            let op = SessionOp::Open { id, prompt: prompt.to_vec() };
+            match self.fleet.call(ModelRequest::Session { shard, op }) {
+                Ok(logits) => return Ok((DecodeSession { server: self, id, shard }, logits)),
+                Err(e) if e.retryable() => last_err = Some(e),
+                Err(e) => return Err(format_err!(e)),
+            }
+        }
+        Err(format_err!(last_err.unwrap_or(FleetError::ShardDied)))
     }
 
     /// Live statistics of shard 0 (the only shard for `start`); use
@@ -200,6 +294,53 @@ impl ModelServer {
     /// The underlying dispatcher (fleet statistics, poison hook).
     pub fn fleet(&self) -> &FleetDispatcher<ModelProfile> {
         &self.fleet
+    }
+}
+
+/// One open incremental-decode session (see the module docs for the
+/// lifecycle). Steps return typed [`FleetError`]s so callers can tell a
+/// retryable [`FleetError::ShardDied`] race from the terminal
+/// [`FleetError::SessionLost`]. Dropping the handle closes the session
+/// best-effort.
+pub struct DecodeSession<'a> {
+    server: &'a ModelServer,
+    id: u64,
+    shard: usize,
+}
+
+impl DecodeSession<'_> {
+    /// Server-unique session id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The shard this session's state is pinned to.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Advance the session by one token; returns its logits.
+    pub fn step(&self, token: i32) -> Result<Vec<f32>, FleetError> {
+        self.server.fleet.call(ModelRequest::Session {
+            shard: self.shard,
+            op: SessionOp::Step { id: self.id, token },
+        })
+    }
+
+    /// Free the worker-side state now (Drop does the same best-effort).
+    pub fn close(self) {
+        // Drop runs the close submit.
+    }
+}
+
+impl Drop for DecodeSession<'_> {
+    fn drop(&mut self) {
+        // Best-effort: a dead or respawned shard simply no longer holds
+        // the state, so a lost close is harmless.
+        let _ = self.server.fleet.submit(ModelRequest::Session {
+            shard: self.shard,
+            op: SessionOp::Close { id: self.id },
+        });
     }
 }
 
@@ -253,20 +394,26 @@ impl Worker {
             let now = Instant::now();
             let timeout = self.queue.deadline_in(now).unwrap_or(Duration::from_millis(50));
             match rx.recv_timeout(timeout) {
-                Ok(ShardMsg::Job { req, reply, t_submit }) => {
-                    if req.tokens.len() != self.seq_len {
-                        reply.fulfill(Err(format!(
-                            "expected {} tokens, got {}",
-                            self.seq_len,
-                            req.tokens.len()
-                        )));
-                    } else {
-                        self.queue.push(
-                            Job { tokens: req.tokens, reply, t: t_submit },
-                            Instant::now(),
-                        );
+                Ok(ShardMsg::Job { req, reply, t_submit }) => match req {
+                    ModelRequest::Infer(req) => {
+                        if req.tokens.len() != self.seq_len {
+                            reply.fulfill(Err(format!(
+                                "expected {} tokens, got {}",
+                                self.seq_len,
+                                req.tokens.len()
+                            )));
+                        } else {
+                            self.queue.push(
+                                Job { tokens: req.tokens, reply, t: t_submit },
+                                Instant::now(),
+                            );
+                        }
                     }
-                }
+                    // Session ops run inline, never batched: a step is
+                    // amortized near-constant work, and interleaving
+                    // with the batch queue would only add latency.
+                    ModelRequest::Session { op, .. } => self.session_op(op, reply, t_submit),
+                },
                 Ok(ShardMsg::Control { op, .. }) => match op {},
                 Ok(ShardMsg::Poison) => {
                     panic!("model shard worker poisoned (failure-injection hook)");
@@ -282,6 +429,48 @@ impl Worker {
                 }
             }
             self.drain(false);
+        }
+    }
+
+    /// Execute one decode-session operation against this worker's
+    /// engine. A `Step` for a session this engine does not hold (the
+    /// worker was respawned, or the session was closed) is answered
+    /// with the typed, non-retryable [`FleetError::SessionLost`].
+    fn session_op(&mut self, op: SessionOp, reply: ReplySlot, t_submit: Instant) {
+        let done = |stats: &ServiceStats, t: Instant| {
+            let lat = Instant::now().duration_since(t).as_nanos() as u64;
+            stats.record_latency(lat);
+        };
+        match op {
+            SessionOp::Open { id, prompt } => {
+                if prompt.len() != self.seq_len {
+                    reply.fulfill(Err(format!(
+                        "expected {} prompt tokens, got {}",
+                        self.seq_len,
+                        prompt.len()
+                    )));
+                    return;
+                }
+                let r = self.artifact.decode_open(id, &prompt);
+                self.stats.rows_executed.fetch_add(1, Ordering::Relaxed);
+                if let Some(ws) = self.artifact.workspace_stats() {
+                    self.stats.workspace_peak_bytes.fetch_max(ws.peak_bytes, Ordering::Relaxed);
+                }
+                done(&self.stats, t_submit);
+                reply.fulfill(r.map_err(|e| format!("{e:#}")));
+            }
+            SessionOp::Step { id, token } => match self.artifact.decode_step(id, token) {
+                Ok(Some(logits)) => {
+                    done(&self.stats, t_submit);
+                    reply.fulfill(Ok(logits));
+                }
+                Ok(None) => reply.fail(FleetError::SessionLost),
+                Err(e) => reply.fulfill(Err(format!("{e:#}"))),
+            },
+            SessionOp::Close { id } => {
+                let r = self.artifact.decode_close(id).map(|_| vec![]);
+                reply.fulfill(r.map_err(|e| format!("{e:#}")));
+            }
         }
     }
 

@@ -12,6 +12,27 @@
 //! `monarch` and a `baseline` (radix-2 FFT) variant so the two
 //! implementations can be benchmarked and cross-checked against each
 //! other on identical parameters.
+//!
+//! ## Incremental decode (Flash-Inference-style sessions)
+//!
+//! Greedy generation used to re-run the full context window per token —
+//! O(N²) over a generation. [`HyenaLm::open_decode`] instead captures a
+//! per-layer [`DecodeState`] while running the ordinary prompt forward:
+//! the planned causal conv already evaluates a `2L`-point circular
+//! convolution per layer, and its upper half (which the batch forward
+//! discards) is exactly the prompt's contribution to the next `L` future
+//! positions — the *spectral prefix cache*, obtained for free. Each
+//! [`HyenaLm::decode_step`] then costs `O(dim²)` pointwise work plus a
+//! short tail gather: new gated values accumulate in a small tail buffer
+//! and are periodically *folded* into the cache ring through one batched
+//! [`RealConvPlan`] conv per `block ≈ sqrt(L·log L)` tokens, so the
+//! amortized per-token cost grows sublinearly in context length. The
+//! short depthwise conv keeps a `short_len - 1` tail window of pre-gate
+//! inputs. [`HyenaLm::decode_oracle`] is the full-recompute parity
+//! oracle: a direct time-domain forward over the whole growing sequence
+//! with identical causal semantics, used by the `decode_parity_*` tests.
+//! Decode state assumes the parameter set stays fixed for the life of
+//! the session (serving guarantees this: params are fixture operands).
 
 use std::sync::Arc;
 
@@ -275,6 +296,20 @@ impl HyenaLm {
         batch: usize,
         p: &HyenaParams,
     ) -> crate::Result<Vec<f32>> {
+        self.forward_capture(tokens, batch, p, None)
+    }
+
+    /// Forward pass that optionally seeds a decode session: with
+    /// `capture`, each layer's spectral prefix cache and short-conv tail
+    /// window are recorded from intermediates the batch forward computes
+    /// anyway (requires `batch == 1` and the planned variant).
+    fn forward_capture(
+        &mut self,
+        tokens: &[i32],
+        batch: usize,
+        p: &HyenaParams,
+        mut capture: Option<&mut DecodeState>,
+    ) -> crate::Result<Vec<f32>> {
         let (l, d, v) = (self.cfg.seq, self.cfg.dim, self.cfg.vocab);
         ensure!(tokens.len() == batch * l, "token buffer mismatch");
         ensure!(p.layers.len() == self.cfg.layers, "layer param count mismatch");
@@ -404,6 +439,25 @@ impl HyenaLm {
                 }
                 full
             };
+            // Decode-session capture: columns `l..2l` of the circular
+            // conv grid are the prompt's contribution to absolute
+            // positions `l..2l-1` — the spectral prefix cache. The ring
+            // slot for absolute position `q` is `q % l`.
+            if let Some(st) = capture.as_deref_mut() {
+                debug_assert_eq!(batch, 1);
+                let lst = &mut st.layers[li];
+                for c in 0..d {
+                    lst.cache[c * l..(c + 1) * l]
+                        .copy_from_slice(&conv[c * m + l..(c + 1) * m]);
+                }
+                for (i, t) in (l + 1 - sl..l).enumerate() {
+                    for c in 0..d {
+                        lst.u_hist[i * d + c] = pu[t * d + c];
+                    }
+                }
+                lst.absorbed = l;
+                lst.tail_len = 0;
+            }
             let mut y = vec![0.0f64; batch * l * d];
             for b in 0..batch {
                 for c in 0..d {
@@ -448,6 +502,335 @@ impl HyenaLm {
             }
         }
         Ok(logits)
+    }
+
+    /// Open an incremental-decode session over a full-context prompt.
+    ///
+    /// Runs one ordinary prompt forward (batch 1), capturing each layer's
+    /// spectral prefix cache and short-conv tail window along the way.
+    /// Returns the prompt's last-position logits plus the session state;
+    /// feed generated tokens to [`HyenaLm::decode_step`]. Monarch
+    /// (planned) variant only: the baseline keeps no half-spectrum
+    /// planes to fold tail blocks through.
+    pub fn open_decode(
+        &mut self,
+        tokens: &[i32],
+        p: &HyenaParams,
+    ) -> crate::Result<(Vec<f32>, DecodeState)> {
+        let (l, d, v) = (self.cfg.seq, self.cfg.dim, self.cfg.vocab);
+        ensure!(
+            self.plan.is_some(),
+            "incremental decode needs the monarch (planned) variant"
+        );
+        ensure!(
+            tokens.len() == l,
+            "decode prompt length {} != context {}",
+            tokens.len(),
+            l
+        );
+        let sl = self.cfg.short_len;
+        let block = decode_block(l);
+        let mut st = DecodeState {
+            pos: l,
+            block,
+            layers: (0..self.cfg.layers)
+                .map(|_| LayerDecodeState {
+                    cache: vec![0.0; d * l],
+                    tail: vec![0.0; block * d],
+                    tail_len: 0,
+                    absorbed: 0,
+                    u_hist: vec![0.0; (sl - 1) * d],
+                })
+                .collect(),
+            ws: ConvWorkspace::new(),
+            sx: vec![0.0; d],
+            sh: vec![0.0; d],
+            su: vec![0.0; d],
+            sv: vec![0.0; d],
+            sw: vec![0.0; d],
+            sg: vec![0.0; d],
+        };
+        let logits = self.forward_capture(tokens, 1, p, Some(&mut st))?;
+        Ok((logits[(l - 1) * v..l * v].to_vec(), st))
+    }
+
+    /// One incremental decode step: append `token` to the session and
+    /// return the logits at its position.
+    ///
+    /// Per-step cost is `O(dim²)` projection work plus an `O(tail)`
+    /// gather; every `block` tokens the tail folds into the cache ring
+    /// through one batched planned conv, for amortized per-token cost
+    /// `O(dim · sqrt(L log L))` in the conv — sublinear in context.
+    pub fn decode_step(
+        &mut self,
+        st: &mut DecodeState,
+        token: i32,
+        p: &HyenaParams,
+    ) -> crate::Result<Vec<f32>> {
+        let (l, d, v) = (self.cfg.seq, self.cfg.dim, self.cfg.vocab);
+        let sl = self.cfg.short_len;
+        ensure!(p.layers.len() == self.cfg.layers, "layer param count mismatch");
+        ensure!(st.layers.len() == self.cfg.layers, "decode state layer mismatch");
+        if token < 0 || token as usize >= v {
+            bail!("token {token} out of range for vocab {v}");
+        }
+        let Some(rp) = self.plan.clone() else {
+            bail!("incremental decode needs the monarch (planned) variant")
+        };
+        self.refresh_spectra(p);
+        let DecodeState { pos, block, layers, ws, sx, sh, su, sv, sw, sg } = st;
+        let t_ring = *pos % l;
+        for c in 0..d {
+            sx[c] = p.embed[token as usize * d + c] as f64;
+        }
+        for (li, (lp, lst)) in p.layers.iter().zip(layers.iter_mut()).enumerate() {
+            // RMSNorm + input projection at this single position.
+            let ms: f64 = sx.iter().map(|&a| a * a).sum::<f64>() / d as f64;
+            let scale = 1.0 / (ms + 1e-6).sqrt();
+            for c in 0..d {
+                sh[c] = sx[c] * scale * lp.norm1[c] as f64;
+            }
+            for j in 0..d {
+                let (mut au, mut av, mut aw) = (0.0f64, 0.0, 0.0);
+                for (c, &hc) in sh.iter().enumerate() {
+                    let row = c * 3 * d;
+                    au += hc * lp.win[row + j] as f64;
+                    av += hc * lp.win[row + d + j] as f64;
+                    aw += hc * lp.win[row + 2 * d + j] as f64;
+                }
+                su[j] = au;
+                sv[j] = av;
+                sw[j] = aw;
+            }
+            // Short depthwise conv from the tail window, then pre-gate.
+            for c in 0..d {
+                let mut acc = su[c] * lp.short[c * sl] as f64;
+                for s in 1..sl {
+                    acc += lst.u_hist[(sl - 1 - s) * d + c] * lp.short[c * sl + s] as f64;
+                }
+                sg[c] = acc * sw[c];
+            }
+            // Long causal conv at this position: the ring slot carries
+            // every absorbed position's contribution; unabsorbed tail
+            // positions and the current token contribute direct taps.
+            for c in 0..d {
+                let co = c * l;
+                let mut acc = lst.cache[co + t_ring];
+                lst.cache[co + t_ring] = 0.0; // slot re-accumulates for pos + l
+                for i in 0..lst.tail_len {
+                    let lag = *pos - lst.absorbed - i;
+                    acc += lst.tail[i * d + c] * lp.k[co + lag] as f64;
+                }
+                acc += sg[c] * lp.k[co] as f64;
+                sh[c] = sv[c] * acc; // post-gate; sh reused as y
+            }
+            // Residual through the output projection.
+            for j in 0..d {
+                let mut acc = 0.0f64;
+                for c in 0..d {
+                    acc += sh[c] * lp.wout[c * d + j] as f64;
+                }
+                sx[j] += acc;
+            }
+            // Roll the short-conv window and append to the tail.
+            if sl > 1 {
+                lst.u_hist.copy_within(d.., 0);
+                lst.u_hist[(sl - 2) * d..].copy_from_slice(&su[..d]);
+            }
+            lst.tail[lst.tail_len * d..(lst.tail_len + 1) * d].copy_from_slice(&sg[..d]);
+            lst.tail_len += 1;
+            if lst.tail_len == *block {
+                // Fold the tail into the ring: one batched planned conv
+                // against the cached half-spectrum planes. Row c, column
+                // j of the result is the block's contribution to
+                // absolute position `absorbed + j`; only strictly-future
+                // columns (j >= block) enter the ring, so the slot this
+                // step just consumed is never re-written for the past.
+                let m = 2 * l;
+                let (kre, kim) = (&self.spec_re[li], &self.spec_im[li]);
+                let mut gblk = ws.take(d * m); // zero-filled by take()
+                for c in 0..d {
+                    for i in 0..*block {
+                        gblk[c * m + i] = lst.tail[i * d + c];
+                    }
+                }
+                let mut yblk = ws.take(d * m);
+                rp.conv_rows_into(&gblk, d, kre, kim, |r| r, &mut yblk, ws);
+                for c in 0..d {
+                    for j in *block..(*block + l - 1) {
+                        lst.cache[c * l + (lst.absorbed + j) % l] += yblk[c * m + j];
+                    }
+                }
+                lst.absorbed += *block;
+                lst.tail_len = 0;
+                ws.give(gblk);
+                ws.give(yblk);
+            }
+        }
+        // Final norm + tied-embedding head at this single position.
+        let ms: f64 = sx.iter().map(|&a| a * a).sum::<f64>() / d as f64;
+        let scale = 1.0 / (ms + 1e-6).sqrt();
+        for c in 0..d {
+            sh[c] = sx[c] * scale * p.norm_f[c] as f64;
+        }
+        let mut logits = vec![0.0f32; v];
+        for (tok, lo) in logits.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for (c, &xc) in sh.iter().enumerate() {
+                acc += xc * p.embed[tok * d + c] as f64;
+            }
+            *lo = acc as f32;
+        }
+        *pos += 1;
+        Ok(logits)
+    }
+
+    /// Full-recompute decode oracle: last-position logits of the growing
+    /// sequence `tokens` (prompt plus generated tokens, any length ≥ 1)
+    /// under the same causal semantics as the incremental path —
+    /// computed directly in the time domain, O(n·L) per layer, no FFT
+    /// and no cache. The `decode_parity_*` tests pin
+    /// [`HyenaLm::open_decode`]/[`HyenaLm::decode_step`] against this
+    /// independent math path.
+    pub fn decode_oracle(&self, tokens: &[i32], p: &HyenaParams) -> crate::Result<Vec<f32>> {
+        let (l, d, v) = (self.cfg.seq, self.cfg.dim, self.cfg.vocab);
+        let n = tokens.len();
+        ensure!(n >= 1, "oracle needs at least one token");
+        ensure!(p.layers.len() == self.cfg.layers, "layer param count mismatch");
+        let sl = self.cfg.short_len;
+        let mut x = vec![0.0f64; n * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            if tok < 0 || tok as usize >= v {
+                bail!("token {tok} out of range for vocab {v}");
+            }
+            for c in 0..d {
+                x[t * d + c] = p.embed[tok as usize * d + c] as f64;
+            }
+        }
+        let mut h = vec![0.0f64; d];
+        for lp in &p.layers {
+            let mut pu = vec![0.0f64; n * d];
+            let mut pv = vec![0.0f64; n * d];
+            let mut pw = vec![0.0f64; n * d];
+            for t in 0..n {
+                let off = t * d;
+                let ms: f64 =
+                    x[off..off + d].iter().map(|&a| a * a).sum::<f64>() / d as f64;
+                let scale = 1.0 / (ms + 1e-6).sqrt();
+                for c in 0..d {
+                    h[c] = x[off + c] * scale * lp.norm1[c] as f64;
+                }
+                for j in 0..d {
+                    let (mut au, mut av, mut aw) = (0.0f64, 0.0, 0.0);
+                    for (c, &hc) in h.iter().enumerate() {
+                        let row = c * 3 * d;
+                        au += hc * lp.win[row + j] as f64;
+                        av += hc * lp.win[row + d + j] as f64;
+                        aw += hc * lp.win[row + 2 * d + j] as f64;
+                    }
+                    pu[off + j] = au;
+                    pv[off + j] = av;
+                    pw[off + j] = aw;
+                }
+            }
+            let mut g = vec![0.0f64; n * d];
+            for t in 0..n {
+                for c in 0..d {
+                    let mut acc = 0.0f64;
+                    for s in 0..sl.min(t + 1) {
+                        acc += pu[(t - s) * d + c] * lp.short[c * sl + s] as f64;
+                    }
+                    g[t * d + c] = acc * pw[t * d + c];
+                }
+            }
+            for t in 0..n {
+                let off = t * d;
+                for c in 0..d {
+                    let mut acc = 0.0f64;
+                    for s in 0..l.min(t + 1) {
+                        acc += lp.k[c * l + s] as f64 * g[(t - s) * d + c];
+                    }
+                    h[c] = pv[off + c] * acc;
+                }
+                for j in 0..d {
+                    let mut acc = 0.0f64;
+                    for c in 0..d {
+                        acc += h[c] * lp.wout[c * d + j] as f64;
+                    }
+                    x[off + j] += acc;
+                }
+            }
+        }
+        let off = (n - 1) * d;
+        let ms: f64 = x[off..off + d].iter().map(|&a| a * a).sum::<f64>() / d as f64;
+        let scale = 1.0 / (ms + 1e-6).sqrt();
+        for c in 0..d {
+            h[c] = x[off + c] * scale * p.norm_f[c] as f64;
+        }
+        let mut logits = vec![0.0f32; v];
+        for (tok, lo) in logits.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for (c, &xc) in h.iter().enumerate() {
+                acc += xc * p.embed[tok * d + c] as f64;
+            }
+            *lo = acc as f32;
+        }
+        Ok(logits)
+    }
+}
+
+/// Fold-block size for context length `l`: ~`sqrt(L · log2 L)` rounded
+/// up to a power of two, balancing the `O(block)` per-step tail gather
+/// against the amortized `O(L log L / block)` fold so per-token work
+/// grows sublinearly in context length.
+fn decode_block(l: usize) -> usize {
+    let raw = ((l as f64) * (l as f64).log2().max(1.0)).sqrt().ceil() as usize;
+    raw.next_power_of_two().max(8).min((l / 2).max(1))
+}
+
+/// Per-layer incremental-decode state (see the module docs).
+struct LayerDecodeState {
+    /// `(dim, seq)` contribution ring: slot `q % seq` accumulates every
+    /// absorbed position's contribution to absolute position `q`;
+    /// consumed (and zeroed) when the step for `q` runs.
+    cache: Vec<f64>,
+    /// Chronological unabsorbed gated values, `(tail_len, dim)` flat.
+    tail: Vec<f64>,
+    tail_len: usize,
+    /// Count of positions folded into `cache`; invariant
+    /// `absorbed + tail_len == pos` entering each step.
+    absorbed: usize,
+    /// Last `short_len - 1` pre-gate inputs, chronological, newest last.
+    u_hist: Vec<f64>,
+}
+
+/// Opaque per-session incremental-decode state returned by
+/// [`HyenaLm::open_decode`] and advanced by [`HyenaLm::decode_step`].
+///
+/// Owns its own [`ConvWorkspace`] so concurrent sessions on one engine
+/// never contend, plus small per-step scratch vectors — a step allocates
+/// nothing but the returned logits. The state is valid indefinitely:
+/// contributions naturally decay out of the `seq`-slot ring once they
+/// fall outside the filter's support.
+pub struct DecodeState {
+    /// Absolute position of the next token to decode (starts at `seq`).
+    pos: usize,
+    /// Tail fold granularity (see `decode_block`).
+    block: usize,
+    layers: Vec<LayerDecodeState>,
+    ws: ConvWorkspace,
+    sx: Vec<f64>,
+    sh: Vec<f64>,
+    su: Vec<f64>,
+    sv: Vec<f64>,
+    sw: Vec<f64>,
+    sg: Vec<f64>,
+}
+
+impl DecodeState {
+    /// Total positions consumed so far (prompt + generated).
+    pub fn context_len(&self) -> usize {
+        self.pos
     }
 }
 
@@ -563,5 +946,108 @@ mod tests {
         assert!(logits.iter().all(|v| v.is_finite()));
         let max = logits.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         assert!(max < 20.0, "untrained logits should be O(1), got {max}");
+    }
+
+    fn cfg_seq(seq: usize) -> HyenaConfig {
+        HyenaConfig { vocab: 16, dim: 8, layers: 2, seq, short_len: 4, baseline: false }
+    }
+
+    #[test]
+    fn decode_parity_incremental_matches_oracle() {
+        // Incremental decode must track the independent time-domain
+        // full-recompute oracle over >= 64 generated tokens at two
+        // context lengths (several cache folds at each).
+        for seq in [32usize, 64] {
+            let c = cfg_seq(seq);
+            let init = init_params(&c, 42);
+            let p = params_of(&init, &c);
+            let mut lm = HyenaLm::new(c).unwrap();
+            let mut rng = Rng::new(11);
+            let mut toks: Vec<i32> = (0..seq).map(|_| rng.below(16) as i32).collect();
+
+            let (open_logits, mut st) = lm.open_decode(&toks, &p).unwrap();
+            let full = lm.forward(&toks, 1, &p).unwrap();
+            let last = &full[(seq - 1) * 16..seq * 16];
+            for (a, b) in open_logits.iter().zip(last) {
+                assert!((a - b).abs() < 1e-5, "open vs forward at seq {seq}");
+            }
+            let oracle0 = lm.decode_oracle(&toks, &p).unwrap();
+            for (a, b) in open_logits.iter().zip(&oracle0) {
+                assert!((a - b).abs() < 1e-4, "open vs oracle at seq {seq}");
+            }
+
+            for step in 0..64 {
+                let tok = rng.below(16) as i32;
+                toks.push(tok);
+                let got = lm.decode_step(&mut st, tok, &p).unwrap();
+                let want = lm.decode_oracle(&toks, &p).unwrap();
+                let worst = got
+                    .iter()
+                    .zip(&want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(worst < 1e-4, "seq {seq} step {step}: divergence {worst}");
+            }
+            assert_eq!(st.context_len(), seq + 64);
+        }
+    }
+
+    #[test]
+    fn decode_parity_greedy_argmax_chain() {
+        // A greedy chain (each step's argmax fed back in) must agree
+        // with the oracle's argmax at every step — the end-to-end
+        // generation property the serving path relies on.
+        let c = cfg_seq(32);
+        let init = init_params(&c, 7);
+        let p = params_of(&init, &c);
+        let mut lm = HyenaLm::new(c).unwrap();
+        let mut toks: Vec<i32> = (0..32).map(|t| ((t * 5 + 3) % 16) as i32).collect();
+        let (mut logits, mut st) = lm.open_decode(&toks, &p).unwrap();
+        for _ in 0..32 {
+            let tok = crate::zoo::sample::argmax(&logits).unwrap() as i32;
+            toks.push(tok);
+            logits = lm.decode_step(&mut st, tok, &p).unwrap();
+            let want = lm.decode_oracle(&toks, &p).unwrap();
+            assert_eq!(
+                crate::zoo::sample::argmax(&logits).unwrap(),
+                crate::zoo::sample::argmax(&want).unwrap(),
+            );
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_inputs() {
+        let c = cfg_seq(32);
+        let init = init_params(&c, 1);
+        let p = params_of(&init, &c);
+        // Baseline variant has no planned spectra to decode with.
+        let cb = HyenaConfig { baseline: true, ..c };
+        let initb = init_params(&cb, 1);
+        assert!(HyenaLm::new(cb)
+            .unwrap()
+            .open_decode(&vec![0; 32], &params_of(&initb, &cb))
+            .is_err());
+        let mut lm = HyenaLm::new(c).unwrap();
+        // Wrong prompt length.
+        assert!(lm.open_decode(&vec![0; 16], &p).is_err());
+        // Out-of-range token at step time.
+        let (_, mut st) = lm.open_decode(&vec![0; 32], &p).unwrap();
+        assert!(lm.decode_step(&mut st, 99, &p).is_err());
+        assert!(lm.decode_step(&mut st, -1, &p).is_err());
+        // State still usable after a rejected token.
+        assert!(lm.decode_step(&mut st, 3, &p).is_ok());
+    }
+
+    #[test]
+    fn decode_block_is_sublinear_and_bounded() {
+        for l in [8usize, 32, 64, 2048, 4096] {
+            let b = super::decode_block(l);
+            assert!(b >= 1 && b <= (l / 2).max(1), "block {b} for l {l}");
+            assert!(b.is_power_of_two());
+        }
+        assert_eq!(super::decode_block(32), 16);
+        assert_eq!(super::decode_block(64), 32);
+        // Large contexts: block grows like sqrt(L log L), far below L.
+        assert!(super::decode_block(4096) <= 512);
     }
 }

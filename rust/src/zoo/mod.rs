@@ -30,6 +30,17 @@
 //! operand resolution, and checkpoint/transfer workflows
 //! (`Artifact::state` / `set_operand`) all agree. [`sample`] holds the
 //! greedy-decoding helpers used by the serving example and tests.
+//!
+//! Generation runs through incremental decode sessions: [`hyena`] keeps
+//! a per-layer spectral prefix cache ([`hyena::DecodeState`], opened via
+//! `HyenaLm::open_decode`, advanced via `decode_step`) so a session
+//! processes its prompt once and then pays amortized near-constant work
+//! per token instead of a full O(context) forward. Sessions are owned by
+//! one serving shard for their whole life —
+//! [`crate::server::ModelServer::open_session`] places them, sticky
+//! routing pins every step there, and [`sample::greedy_extend`] drives
+//! the open → step → close lifecycle (with [`sample::greedy_extend_full`]
+//! kept as the full-recompute cost baseline).
 
 pub mod hyena;
 pub mod pathfinder;

@@ -1,30 +1,104 @@
 //! Greedy decoding over a running [`crate::server::ModelServer`].
 //!
-//! The server returns last-position logits for a fixed-length token
-//! window; generation slides that window one token at a time. Decoding is
+//! [`greedy_extend`] generates through an incremental decode session
+//! ([`crate::server::ModelServer::open_session`]): the prompt is
+//! processed once, then each new token costs amortized near-constant
+//! work on the pinned shard. [`greedy_extend_full`] is the legacy
+//! full-recompute path — it re-submits the trailing context window for
+//! every token (O(N²) over a generation) — kept as the cost comparator
+//! for `benches/table_decode.rs`.
+//!
+//! The two paths differ semantically once generation passes the context
+//! length: the session keeps the true growing history (prompt fixed,
+//! filter taps over absolute positions), while the sliding window
+//! re-truncates the convolution at the window start each step. The
+//! numerical parity oracle for the session path is
+//! [`crate::zoo::hyena::HyenaLm::decode_oracle`], a direct time-domain
+//! full recompute with identical causal semantics. Decoding is
 //! deterministic (argmax, first-winner tie-break), which is what the
 //! serving determinism tests pin down.
 
 use crate::server::{InferRequest, ModelServer};
-use crate::{ensure, format_err};
+use crate::{bail, ensure, format_err};
 
-/// Index of the largest element (first winner on ties).
-pub fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0usize;
+/// Index of the largest element (first winner on ties; NaN entries can
+/// neither win nor mask a winner).
+///
+/// Errors on an empty slice and on all-NaN input — the silent-`0`
+/// fallback the old version had would decode as token 0.
+pub fn argmax(xs: &[f32]) -> crate::Result<usize> {
+    let mut best: Option<(usize, f32)> = None;
     for (i, &v) in xs.iter().enumerate() {
-        if v > xs[best] {
-            best = i;
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, b)) if v <= b => {}
+            _ => best = Some((i, v)),
         }
     }
-    best
+    match best {
+        Some((i, _)) => Ok(i),
+        None if xs.is_empty() => bail!("argmax of an empty slice"),
+        None => bail!("argmax of all-NaN input"),
+    }
 }
 
-/// Greedily extend `prompt` by `new_tokens` tokens through the server.
+/// Validate one logits vector from the server.
+fn check_logits(logits: &[f32], vocab: usize) -> crate::Result<()> {
+    if logits.len() != vocab {
+        return Err(format_err!(
+            "server returned {} logits, expected vocab {}",
+            logits.len(),
+            vocab
+        ));
+    }
+    ensure!(logits.iter().all(|v| v.is_finite()), "non-finite logits from server");
+    Ok(())
+}
+
+/// Greedily extend `prompt` by `new_tokens` tokens through an
+/// incremental decode session.
 ///
-/// The prompt must be exactly the server's context length; each step
-/// feeds the trailing context window and appends the argmax token.
-/// Returns prompt + generated tokens.
+/// The prompt must be exactly the server's context length; it is
+/// processed once at open, then each generated token is one
+/// near-constant-work step on the session's pinned shard. Returns
+/// prompt + generated tokens.
 pub fn greedy_extend(
+    server: &ModelServer,
+    prompt: &[i32],
+    new_tokens: usize,
+) -> crate::Result<Vec<i32>> {
+    let mut seq = prompt.to_vec();
+    if new_tokens == 0 {
+        ensure!(
+            prompt.len() == server.seq_len,
+            "prompt length {} != server context {}",
+            prompt.len(),
+            server.seq_len
+        );
+        return Ok(seq);
+    }
+    let (session, mut logits) = server.open_session(prompt)?;
+    loop {
+        check_logits(&logits, server.vocab)?;
+        seq.push(argmax(&logits)? as i32);
+        if seq.len() == prompt.len() + new_tokens {
+            break;
+        }
+        logits = session
+            .step(*seq.last().unwrap())
+            .map_err(|e| format_err!("decode step failed: {e}"))?;
+    }
+    session.close();
+    Ok(seq)
+}
+
+/// Greedily extend `prompt` by `new_tokens` via full-window recompute:
+/// every step re-submits the trailing `seq_len` context window as a
+/// fresh inference. O(N²) over a generation — the baseline
+/// `benches/table_decode.rs` measures sessions against.
+pub fn greedy_extend_full(
     server: &ModelServer,
     prompt: &[i32],
     new_tokens: usize,
@@ -39,15 +113,8 @@ pub fn greedy_extend(
     for _ in 0..new_tokens {
         let window = seq[seq.len() - server.seq_len..].to_vec();
         let logits = server.call(InferRequest { tokens: window })?;
-        if logits.len() != server.vocab {
-            return Err(format_err!(
-                "server returned {} logits, expected vocab {}",
-                logits.len(),
-                server.vocab
-            ));
-        }
-        ensure!(logits.iter().all(|v| v.is_finite()), "non-finite logits from server");
-        seq.push(argmax(&logits) as i32);
+        check_logits(&logits, server.vocab)?;
+        seq.push(argmax(&logits)? as i32);
     }
     Ok(seq)
 }
@@ -58,8 +125,25 @@ mod tests {
 
     #[test]
     fn argmax_picks_first_winner() {
-        assert_eq!(argmax(&[0.0, 3.0, 3.0, -1.0]), 1);
-        assert_eq!(argmax(&[-5.0]), 0);
-        assert_eq!(argmax(&[1.0, 2.0, 5.0, 4.0]), 2);
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, -1.0]).unwrap(), 1);
+        assert_eq!(argmax(&[-5.0]).unwrap(), 0);
+        assert_eq!(argmax(&[1.0, 2.0, 5.0, 4.0]).unwrap(), 2);
+    }
+
+    #[test]
+    fn argmax_rejects_empty_and_all_nan() {
+        assert!(argmax(&[]).is_err());
+        assert!(argmax(&[f32::NAN, f32::NAN]).is_err());
+    }
+
+    #[test]
+    fn argmax_ignores_nan_entries() {
+        // NaN can neither win (comparisons are skipped) nor mask a
+        // later genuine winner.
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]).unwrap(), 2);
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]).unwrap(), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NAN]).unwrap(), 0);
+        // Infinities are still ordinary values.
+        assert_eq!(argmax(&[0.0, f32::INFINITY, f32::NAN]).unwrap(), 1);
     }
 }

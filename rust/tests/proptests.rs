@@ -685,3 +685,79 @@ fn prop_fleet_reply_pairing_across_shards() {
         Ok(())
     }
 }
+
+#[test]
+fn prop_latency_quantiles_monotone_and_bracketing() {
+    // LatencyHistogram::quantile_ms invariants over random sample sets:
+    // monotone in q, p0/p100 bracket the recorded samples (up to the
+    // documented bucket-upper-bound rounding), and samples past the last
+    // bucket report the finite overflow bound instead of a misleading
+    // in-range value.
+    use flashfftconv::coordinator::fleet::LatencyHistogram;
+
+    let overflow_ms = LatencyHistogram::overflow_bound_ms();
+    assert!(overflow_ms.is_finite() && overflow_ms > 0.0);
+
+    prop::forall_ok(
+        "latency quantiles monotone and bracketing",
+        41,
+        prop::default_cases(),
+        |rng| {
+            let n = 1 + gen::index(rng, 0, 64);
+            (0..n)
+                .map(|_| {
+                    // Mix scales: sub-µs, µs..s, and past-the-last-bucket
+                    // values (bucket 39 starts at 2^38 µs ≈ 76 hours).
+                    match gen::index(rng, 0, 4) {
+                        0 => gen::index(rng, 0, 1_000) as u64,
+                        1 => 1_000u64 << gen::index(rng, 0, 20),
+                        2 => 1_000_000u64 * (1 + gen::index(rng, 0, 10_000) as u64),
+                        _ => u64::MAX - gen::index(rng, 0, 1_000_000) as u64,
+                    }
+                })
+                .collect::<Vec<u64>>()
+        },
+        |samples| {
+            let h = LatencyHistogram::default();
+            for &ns in samples {
+                h.record(ns);
+            }
+            let counts = h.counts();
+            if counts.iter().sum::<u64>() != samples.len() as u64 {
+                return Err("every sample must land in exactly one bucket".into());
+            }
+            let qs = [1e-9, 0.01, 0.25, 0.50, 0.75, 0.90, 0.99, 0.999, 1.0];
+            let mut prev = 0.0f64;
+            for &q in &qs {
+                let v = LatencyHistogram::quantile_ms(&counts, q);
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!("q={q}: non-finite quantile {v}"));
+                }
+                if v + 1e-12 < prev {
+                    return Err(format!("quantiles not monotone at q={q}: {v} < {prev}"));
+                }
+                if v > overflow_ms {
+                    return Err(format!("q={q}: {v} exceeds overflow bound {overflow_ms}"));
+                }
+                prev = v;
+            }
+            let min_ms = samples.iter().min().map(|&ns| ns as f64 / 1e6).unwrap();
+            let max_ms = samples.iter().max().map(|&ns| ns as f64 / 1e6).unwrap();
+            let p0 = LatencyHistogram::quantile_ms(&counts, 1e-9);
+            let p100 = LatencyHistogram::quantile_ms(&counts, 1.0);
+            // Bucket upper bounds: p0 covers the smallest sample (within
+            // its 2x-wide bucket, floored at the <1µs bucket), p100
+            // covers the largest (clamped to the overflow bound).
+            if p0 + 1e-12 < min_ms.min(overflow_ms) {
+                return Err(format!("p0 {p0} below smallest sample {min_ms}"));
+            }
+            if p0 > (2.0 * min_ms).max(1e-3).min(overflow_ms) {
+                return Err(format!("p0 {p0} far above smallest sample {min_ms}"));
+            }
+            if p100 + 1e-12 < max_ms.min(overflow_ms) {
+                return Err(format!("p100 {p100} below largest sample {max_ms}"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -13,8 +13,10 @@ use flashfftconv::server::{InferRequest, ModelServer};
 use flashfftconv::trainer::data::{PathfinderGen, TokenGen};
 use flashfftconv::trainer::run::Budget;
 use flashfftconv::trainer::{TrainConfig, Trainer};
+use flashfftconv::coordinator::fleet::FleetError;
+use flashfftconv::server::{ModelRequest, SessionOp};
 use flashfftconv::util::Rng;
-use flashfftconv::zoo::sample::greedy_extend;
+use flashfftconv::zoo::sample::{greedy_extend, greedy_extend_full};
 
 fn start_server() -> ModelServer {
     ModelServer::start(
@@ -64,6 +66,98 @@ fn model_server_batches_concurrent_generation_requests() {
         assert_eq!(r, &replies[0], "identical requests must get identical logits");
     }
     assert_eq!(replies[0].len(), server.vocab);
+}
+
+#[test]
+fn decode_session_matches_full_recompute_first_token_and_open_logits() {
+    let server = start_server();
+    let mut gen = TokenGen::new(server.vocab, 21);
+    let prompt = gen.batch(1, server.seq_len);
+
+    // For the very first generated token the full path's context window
+    // IS the prompt, so the session chain and the sliding-window chain
+    // must agree there (they are allowed to diverge later: growing
+    // history vs re-truncated window).
+    let a = greedy_extend(&server, &prompt, 4).unwrap();
+    let b = greedy_extend_full(&server, &prompt, 4).unwrap();
+    assert_eq!(a[server.seq_len], b[server.seq_len], "first generated token must agree");
+    assert_eq!(a.len(), server.seq_len + 4);
+    assert!(a[server.seq_len..].iter().all(|&t| t >= 0 && (t as usize) < server.vocab));
+
+    // The open-reply logits are exactly one full forward of the prompt.
+    let (session, open_logits) = server.open_session(&prompt).unwrap();
+    let full = server.call(InferRequest { tokens: prompt.clone() }).unwrap();
+    assert_eq!(open_logits, full, "open_session logits must equal a plain forward");
+    let step = session.step(a[server.seq_len]).unwrap();
+    assert_eq!(step.len(), server.vocab);
+    assert!(step.iter().all(|v| v.is_finite()));
+    session.close();
+
+    // Bad prompt lengths are rejected before any shard is touched.
+    assert!(server.open_session(&prompt[..server.seq_len - 1]).is_err());
+}
+
+#[test]
+fn decode_step_after_close_is_session_lost() {
+    let server = start_server();
+    let mut gen = TokenGen::new(server.vocab, 5);
+    let prompt = gen.batch(1, server.seq_len);
+    let (session, _) = server.open_session(&prompt).unwrap();
+    let (id, shard) = (session.id(), session.shard());
+    session.step(1).unwrap();
+    session.close();
+    // The close is enqueued on the shard channel before this step, so
+    // the worker sees them in order: the state is gone and the step must
+    // come back as the typed, non-retryable SessionLost.
+    let err = server
+        .fleet()
+        .call(ModelRequest::Session { shard, op: SessionOp::Step { id, token: 1 } })
+        .unwrap_err();
+    assert!(matches!(err, FleetError::SessionLost), "got {err}");
+    assert!(!err.retryable(), "SessionLost must not be retryable");
+}
+
+#[test]
+fn decode_session_dies_with_its_shard_and_reopens() {
+    let server = ModelServer::start_sharded(
+        BackendConfig::Native,
+        "lm_fwd_logits",
+        BatchPolicy { batch_size: 4, max_wait: Duration::from_millis(1) },
+        2,
+        64,
+    )
+    .unwrap();
+    let mut gen = TokenGen::new(server.vocab, 9);
+    let prompt = gen.batch(1, server.seq_len);
+
+    let (session, _) = server.open_session(&prompt).unwrap();
+    session.step(0).unwrap();
+    server.fleet().poison_shard(session.shard());
+
+    // Steps racing the death may fail retryably (ShardDied); once the
+    // supervisor has respawned the worker, its engine no longer holds the
+    // state and the step must settle on the terminal SessionLost.
+    let mut terminal = None;
+    for _ in 0..200 {
+        match session.step(0) {
+            Ok(_) => panic!("session state must not survive a worker respawn"),
+            Err(e) if e.retryable() => std::thread::sleep(Duration::from_millis(10)),
+            Err(e) => {
+                terminal = Some(e);
+                break;
+            }
+        }
+    }
+    assert!(
+        matches!(terminal, Some(FleetError::SessionLost)),
+        "expected SessionLost after respawn, got {terminal:?}"
+    );
+
+    // The documented recovery: open a fresh session and replay.
+    let (fresh, logits) = server.open_session(&prompt).unwrap();
+    assert_eq!(logits.len(), server.vocab);
+    fresh.step(0).unwrap();
+    fresh.close();
 }
 
 fn eval_accuracy(eval: &mut Artifact, side: usize, batch: usize, seq: usize, seed: u64) -> f64 {
