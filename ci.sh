@@ -67,6 +67,59 @@ else
         && echo "BENCH_fleet.json OK (grep check; python3 unavailable)"
 fi
 
+# Ingress soak under an explicit wall-clock bound: the wire codec
+# property suite plus the loopback TCP end-to-end suite (concurrent wire
+# clients, parity vs in-process, drain + filter swaps mid-soak, session
+# reaping) must converge — a hang here is a connection-pool or
+# FIFO-writer bug, not a slow box.
+echo "==> ingress soak: cargo test --test ingress_wire --test ingress_e2e (bounded)"
+if command -v timeout >/dev/null 2>&1; then
+    timeout 900 cargo test -q --test ingress_wire
+    timeout 900 cargo test -q --test ingress_e2e
+else
+    cargo test -q --test ingress_wire
+    cargo test -q --test ingress_e2e
+fi
+
+# Ingress perf artifact: a small loopback soak through the bench must
+# emit BENCH_ingress.json with the paired 1-shard/N-shard records (and
+# the swap-racing row) so the network-front trajectory accumulates
+# across PRs.
+echo "==> ingress perf smoke: cargo bench --bench table_ingress"
+rm -f BENCH_ingress.json
+FFC_INGRESS_REQUESTS=96 FFC_INGRESS_CLIENTS=4 cargo bench --bench table_ingress >/dev/null
+test -s BENCH_ingress.json || { echo "FAIL: BENCH_ingress.json missing or empty"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PY'
+import json
+recs = json.load(open("BENCH_ingress.json"))
+by_name = {r["name"]: r for r in recs}
+single = by_name.get("ingress_1shard")
+fleet = by_name.get("ingress_fleet")
+swap = by_name.get("ingress_fleet_swap")
+assert single and fleet, f"missing paired ingress records: {sorted(by_name)}"
+assert swap, f"missing swap-racing ingress record: {sorted(by_name)}"
+for r in (single, fleet, swap):
+    missing = {"name", "shards", "rows", "rows_per_sec", "p50_ms", "p99_ms"} - set(r)
+    assert not missing, f"record missing {missing}: {r}"
+    assert r["rows"] > 0 and r["rows_per_sec"] > 0, f"degenerate record: {r}"
+    assert r["p99_ms"] >= r["p50_ms"] > 0, f"bad percentiles: {r}"
+assert single["shards"] == 1 and fleet["shards"] > 1, \
+    f"records not paired 1-shard/N-shard: {single} {fleet}"
+assert swap["swaps"] > 0, f"swap row recorded no filter installs: {swap}"
+speedup = fleet["rows_per_sec"] / single["rows_per_sec"]
+print(f"BENCH_ingress.json OK (fleet vs 1-shard over the wire: {speedup:.2f}x; "
+      f"p99 {fleet['p99_ms']:.2f} ms plain vs {swap['p99_ms']:.2f} ms under swaps)")
+if speedup <= 1.0:
+    print(f"WARN: fleet did not beat one shard over the wire this run ({speedup:.2f}x)")
+PY
+else
+    grep -q '"ingress_1shard"' BENCH_ingress.json \
+        && grep -q '"ingress_fleet"' BENCH_ingress.json \
+        && grep -q '"p99_ms"' BENCH_ingress.json \
+        && echo "BENCH_ingress.json OK (grep check; python3 unavailable)"
+fi
+
 # Decode artifact: a one-iteration smoke through the decode bench must
 # emit BENCH_decode.json with paired cached/full records per context
 # length so the sessions-vs-recompute trajectory accumulates across PRs.

@@ -1,0 +1,268 @@
+//! Ingress serving soak: the wire-framed TCP front over the conv fleet,
+//! measured over loopback.
+//!
+//! Each configuration binds an [`IngressServer`] on an ephemeral
+//! loopback port over a fresh service, then drives it with closed-loop
+//! TCP clients speaking the v1 wire protocol. Client-side latencies
+//! (send -> matching reply) give p50/p99 including framing, socket, and
+//! FIFO-writer overhead — the number an external caller actually sees.
+//! Three rows: a single worker, the N-shard fleet, and the N-shard fleet
+//! with concurrent `install_filter` swaps racing the soak (the two-phase
+//! epoch path must not dent throughput or tail latency). Emits
+//! `BENCH_ingress.json`; ci.sh validates the paired 1-shard/N-shard
+//! records and the p99 column.
+//!
+//! Env knobs: `FFC_FLEET_SHARDS` (default 4), `FFC_INGRESS_REQUESTS`
+//! (total, default 256), `FFC_INGRESS_CLIENTS` (default 8).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flashfftconv::bench::Table;
+use flashfftconv::coordinator::service::ConvService;
+use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::ingress::client::IngressClient;
+use flashfftconv::ingress::wire::{Reply, Request};
+use flashfftconv::ingress::{IngressConfig, IngressServer};
+use flashfftconv::runtime::BackendConfig;
+use flashfftconv::util::Rng;
+
+const HEADS: usize = 16;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// One measured configuration for the JSON artifact.
+struct IngRecord {
+    name: String,
+    shards: usize,
+    swaps: u64,
+    rows: u64,
+    rows_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn records_json(recs: &[IngRecord]) -> String {
+    let rows: Vec<String> = recs
+        .iter()
+        .map(|r| {
+            format!(
+                "  {{\"name\": \"{}\", \"shards\": {}, \"swaps\": {}, \"rows\": {}, \
+                 \"rows_per_sec\": {:.1}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}}}",
+                r.name, r.shards, r.swaps, r.rows, r.rows_per_sec, r.p50_ms, r.p99_ms
+            )
+        })
+        .collect();
+    format!("[\n{}\n]\n", rows.join(",\n"))
+}
+
+fn quantile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * q).round() as usize;
+    sorted_ms[idx]
+}
+
+/// The soak mix: mostly the 256 bucket (some padded), every 4th request
+/// the 1024 bucket — same shape as the fleet soak test.
+fn soak_len(slot: usize) -> usize {
+    match slot % 4 {
+        0 => 1024,
+        1 => 200, // pads into 256
+        _ => 256,
+    }
+}
+
+/// Touch every bucket on every shard in-process so artifact loads stay
+/// out of the measured window (concurrent burst per bucket, as in
+/// `table5_fleet`).
+fn warmup(service: &ConvService, n_shards: usize) {
+    use flashfftconv::coordinator::router::ConvKind;
+    use flashfftconv::coordinator::service::ConvRequest;
+    let mut rng = Rng::new(1);
+    for len in [256usize, 1024, 200] {
+        let pending: Vec<_> = (0..2 * n_shards)
+            .map(|_| {
+                let u = rng.normal_vec(HEADS * len);
+                service
+                    .fleet()
+                    .submit_blocking(ConvRequest {
+                        kind: ConvKind::Forward,
+                        len,
+                        streams: vec![u],
+                    })
+                    .expect("warmup admitted")
+            })
+            .collect();
+        for rx in pending {
+            rx.recv().expect("fleet alive").expect("warmup conv ok");
+        }
+    }
+}
+
+/// Run one configuration: `clients` closed-loop TCP clients, optional
+/// concurrent filter-swap client, client-side latency percentiles.
+fn run_config(
+    name: &str,
+    backend: BackendConfig,
+    shards: usize,
+    with_swaps: bool,
+    total: usize,
+    clients: usize,
+) -> IngRecord {
+    let policy = BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(2) };
+    let service = Arc::new(
+        ConvService::start_sharded(backend, "monarch", policy, shards, 8 * shards.max(2))
+            .expect("service starts"),
+    );
+    warmup(&service, shards);
+    let ingress = IngressServer::bind(
+        "127.0.0.1:0",
+        Some(Arc::clone(&service)),
+        None,
+        IngressConfig::default(),
+    )
+    .expect("ingress binds");
+    let addr = ingress.local_addr();
+
+    let stop = AtomicBool::new(false);
+    let swaps = AtomicU64::new(0);
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(total);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        // Filter swaps racing the soak: a dedicated wire client installs
+        // a fresh Forward/256 filter in a tight loop. Every install is a
+        // fleet-wide two-phase epoch bump.
+        let swapper = with_swaps.then(|| {
+            let stop = &stop;
+            let swaps = &swaps;
+            s.spawn(move || {
+                let mut client = IngressClient::connect(addr).expect("swap client connects");
+                let mut rng = Rng::new(0x5A4B);
+                while !stop.load(Ordering::Relaxed) {
+                    let taps = rng.normal_vec(HEADS * 256);
+                    let req = Request::InstallFilter { kind: 0, bucket: 256, taps };
+                    match client
+                        .call_retry(&req, 1024, Duration::from_micros(200))
+                        .expect("swap round trip")
+                    {
+                        Reply::Ok { .. } => {
+                            swaps.fetch_add(1, Ordering::Relaxed);
+                        }
+                        other => panic!("filter swap failed: {other:?}"),
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                client.finish();
+            })
+        });
+
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut rng = Rng::new(7_000 + c as u64);
+                    let mut client = IngressClient::connect(addr).expect("client connects");
+                    let per_client = total / clients.max(1);
+                    let mut lats = Vec::with_capacity(per_client);
+                    for i in 0..per_client {
+                        let len = soak_len(i + c);
+                        let u = rng.normal_vec(HEADS * len);
+                        let req =
+                            Request::Conv { kind: 0, len: len as u32, streams: vec![u] };
+                        let t = Instant::now();
+                        match client
+                            .call_retry(&req, 4096, Duration::from_micros(200))
+                            .expect("wire round trip")
+                        {
+                            Reply::Ok { data, .. } => assert_eq!(data.len(), HEADS * len),
+                            other => panic!("client {c}: unexpected reply: {other:?}"),
+                        }
+                        lats.push(t.elapsed().as_secs_f64() * 1e3);
+                    }
+                    client.finish();
+                    lats
+                })
+            })
+            .collect();
+        for h in handles {
+            lat_ms.extend(h.join().expect("client thread"));
+        }
+        stop.store(true, Ordering::Relaxed);
+        if let Some(h) = swapper {
+            h.join().expect("swap thread");
+        }
+    });
+    let wall = t0.elapsed();
+
+    let rows = lat_ms.len() as u64;
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = service.fleet().stats();
+    assert_eq!(stats.errors, 0, "{name}: soak must be error-free");
+    assert_eq!(stats.shard_deaths, 0, "{name}: no shard may die during the soak");
+    IngRecord {
+        name: name.to_string(),
+        shards,
+        swaps: swaps.load(Ordering::Relaxed),
+        rows,
+        rows_per_sec: rows as f64 / wall.as_secs_f64(),
+        p50_ms: quantile(&lat_ms, 0.50),
+        p99_ms: quantile(&lat_ms, 0.99),
+    }
+}
+
+fn main() {
+    let shards = env_usize("FFC_FLEET_SHARDS", 4).max(2);
+    let total = env_usize("FFC_INGRESS_REQUESTS", 256).max(16);
+    let clients = env_usize("FFC_INGRESS_CLIENTS", 8).max(1);
+
+    println!("== Ingress loopback soak: wire-framed TCP front over the conv fleet ==");
+    println!("   {total} requests from {clients} TCP clients, mixed 256/1024 buckets\n");
+
+    let recs = vec![
+        run_config("ingress_1shard", BackendConfig::Native, 1, false, total, clients),
+        run_config(
+            "ingress_fleet",
+            BackendConfig::NativeRowThreads(1),
+            shards,
+            false,
+            total,
+            clients,
+        ),
+        run_config(
+            "ingress_fleet_swap",
+            BackendConfig::NativeRowThreads(1),
+            shards,
+            true,
+            total,
+            clients,
+        ),
+    ];
+
+    let mut t =
+        Table::new(&["config", "shards", "rows", "rows_per_s", "p50_ms", "p99_ms", "swaps"]);
+    for r in &recs {
+        t.row(vec![
+            r.name.clone(),
+            r.shards.to_string(),
+            r.rows.to_string(),
+            format!("{:.1}", r.rows_per_sec),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p99_ms),
+            r.swaps.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n(swap row races a two-phase filter install every ~2ms against the soak; \
+         {} installs landed)",
+        recs[2].swaps
+    );
+
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_ingress.json");
+    std::fs::write(out, records_json(&recs)).expect("write BENCH_ingress.json");
+    eprintln!("(wrote {out}: {} records)", recs.len());
+}

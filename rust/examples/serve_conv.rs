@@ -10,12 +10,17 @@
 //! cargo run --release --example serve_conv -- --requests 64 --shards 2
 //! ```
 
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use flashfftconv::coordinator::fleet::LatencyHistogram;
 use flashfftconv::coordinator::router::ConvKind;
 use flashfftconv::coordinator::service::{ConvRequest, ConvService};
 use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::ingress::client::IngressClient;
+use flashfftconv::ingress::wire::{Reply, Request};
+use flashfftconv::ingress::{IngressConfig, IngressServer};
 use flashfftconv::runtime::BackendConfig;
 use flashfftconv::util::{Args, Rng};
 
@@ -29,13 +34,13 @@ fn main() -> flashfftconv::Result<()> {
     args.finish()?;
 
     let policy = BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(4) };
-    let service = ConvService::start_sharded(
+    let service = Arc::new(ConvService::start_sharded(
         BackendConfig::Auto("artifacts".into()),
         &variant,
         policy,
         shards,
         max_inflight,
-    )?;
+    )?);
     let heads = 16usize;
 
     // Pretend-pretrained filter banks for two buckets, broadcast to every
@@ -136,5 +141,55 @@ fn main() -> flashfftconv::Result<()> {
     for s in &f.shards {
         println!("  {}", s.summary());
     }
+
+    // --- The same fleet behind the TCP ingress ---------------------------
+    // Bind the wire-framed front on an ephemeral loopback port and drive
+    // it with real TCP clients, including a live filter install over the
+    // wire (two-phase epoch swap, acked with the visible epoch).
+    let ingress = IngressServer::bind(
+        "127.0.0.1:0",
+        Some(Arc::clone(&service)),
+        None,
+        IngressConfig::default(),
+    )?;
+    let addr = ingress.local_addr();
+    println!("\ningress listening on {addr} (wire v1); driving {clients} TCP clients...");
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            s.spawn(move || {
+                let mut rng = Rng::new(500 + c as u64);
+                let mut client = IngressClient::connect(addr).expect("client connects");
+                for i in 0..4usize {
+                    let len = if (i + c) % 3 == 0 { 1000usize } else { 256 };
+                    let u = rng.normal_vec(heads * len);
+                    let req = Request::Conv { kind: 0, len: len as u32, streams: vec![u] };
+                    match client
+                        .call_retry(&req, 64, Duration::from_millis(1))
+                        .expect("wire round trip")
+                    {
+                        Reply::Ok { data, .. } => assert_eq!(data.len(), heads * len),
+                        other => panic!("unexpected wire reply: {other:?}"),
+                    }
+                }
+                client.finish();
+            });
+        }
+    });
+    let mut client = IngressClient::connect(addr)?;
+    let taps = rng.normal_vec(heads * 256);
+    let epoch = match client.call(&Request::InstallFilter { kind: 0, bucket: 256, taps })? {
+        Reply::Ok { epoch, .. } => epoch,
+        other => panic!("filter install over the wire failed: {other:?}"),
+    };
+    client.finish();
+    let ist = ingress.stats();
+    println!(
+        "ingress: {} connections, {} frames in, {} replies out, {} busy; \
+         filter swap visible at epoch {epoch}",
+        ist.accepted.load(Ordering::Relaxed),
+        ist.frames_in.load(Ordering::Relaxed),
+        ist.replies_out.load(Ordering::Relaxed),
+        ist.busy_replies.load(Ordering::Relaxed),
+    );
     Ok(())
 }

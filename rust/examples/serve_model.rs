@@ -11,14 +11,19 @@
 //! cargo run --release --example serve_model -- --new-tokens 32
 //! ```
 
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::ingress::client::IngressClient;
+use flashfftconv::ingress::wire::{Reply, Request};
+use flashfftconv::ingress::{IngressConfig, IngressServer};
 use flashfftconv::runtime::BackendConfig;
 use flashfftconv::server::ModelServer;
 use flashfftconv::trainer::data::TokenGen;
 use flashfftconv::util::Args;
-use flashfftconv::zoo::sample::greedy_extend;
+use flashfftconv::zoo::sample::{argmax, greedy_extend};
 
 fn main() -> flashfftconv::Result<()> {
     let args = Args::parse_from(std::env::args().skip(1))?;
@@ -30,13 +35,13 @@ fn main() -> flashfftconv::Result<()> {
     args.finish()?;
 
     let policy = BatchPolicy { batch_size: 4, max_wait: Duration::from_millis(2) };
-    let server = ModelServer::start_sharded(
+    let server = Arc::new(ModelServer::start_sharded(
         BackendConfig::Auto("artifacts".into()),
         &artifact,
         policy,
         shards,
         max_inflight,
-    )?;
+    )?);
     println!(
         "serving {artifact}: context {} tokens, vocab {} ({shards} shard(s), \
          max_inflight {max_inflight})",
@@ -67,5 +72,65 @@ fn main() -> flashfftconv::Result<()> {
         f.p99_ms,
     );
     assert_eq!(generated.len(), new_tokens);
+
+    // --- Incremental decode over the TCP ingress --------------------------
+    // Same fleet, reached through the wire protocol: full-context logits,
+    // then an open_session / step / close_session decode whose tokens must
+    // match the in-process greedy decode (the stack stays deterministic
+    // through the network boundary).
+    let ingress = IngressServer::bind(
+        "127.0.0.1:0",
+        None,
+        Some(Arc::clone(&server)),
+        IngressConfig::default(),
+    )?;
+    let addr = ingress.local_addr();
+    println!("\ningress listening on {addr} (wire v1); decoding over the wire...");
+    let mut client = IngressClient::connect(addr)?;
+
+    let logits = match client.call_retry(
+        &Request::LmLogits { tokens: prompt.clone() },
+        64,
+        Duration::from_millis(1),
+    )? {
+        Reply::Ok { data, .. } => data,
+        other => panic!("lm_logits over the wire failed: {other:?}"),
+    };
+    assert_eq!(logits.len(), server.vocab);
+
+    let (sid, mut logits) = match client.call_retry(
+        &Request::OpenSession { prompt: prompt.clone() },
+        64,
+        Duration::from_millis(1),
+    )? {
+        Reply::Ok { session: Some(sid), data, .. } => (sid, data),
+        other => panic!("open_session over the wire failed: {other:?}"),
+    };
+    let mut wire_tokens: Vec<i32> = Vec::new();
+    for _ in 0..new_tokens.min(8) {
+        let next = argmax(&logits)? as i32;
+        wire_tokens.push(next);
+        logits = match client.call(&Request::Step { session: sid, token: next })? {
+            Reply::Ok { data, .. } => data,
+            other => panic!("step over the wire failed: {other:?}"),
+        };
+    }
+    match client.call(&Request::CloseSession { session: sid })? {
+        Reply::Ok { .. } => {}
+        other => panic!("close_session over the wire failed: {other:?}"),
+    }
+    client.finish();
+    assert_eq!(
+        &wire_tokens[..],
+        &generated[..wire_tokens.len()],
+        "wire decode must match the in-process greedy decode"
+    );
+    let ist = ingress.stats();
+    println!(
+        "wire decode : {wire_tokens:?} (matches in-process)  \
+         [{} frames in / {} replies out]",
+        ist.frames_in.load(Ordering::Relaxed),
+        ist.replies_out.load(Ordering::Relaxed),
+    );
     Ok(())
 }

@@ -32,14 +32,36 @@
 //!   and [`FleetStats::restarts`] counts the respawns.
 //! * **Statistics** — per-shard [`ServiceStats`] (now including a
 //!   fixed-bucket latency histogram for p50/p99) plus a fleet rollup:
-//!   admission rejections, worker deaths, restarts, occupancy.
+//!   admission rejections, worker deaths, restarts, occupancy, and a
+//!   per-shard in-flight request gauge ([`ShardStatsSnapshot::inflight_requests`])
+//!   so ingress shed decisions can see saturation per shard.
+//! * **Versioned control (two-phase)** — [`FleetDispatcher::control`]
+//!   runs every broadcast op as *prepare then flip*: the op is staged on
+//!   every live shard (validated but inactive), and only once every live
+//!   shard has acknowledged does the dispatcher advance the fleet-wide
+//!   **filter epoch** ([`FleetShared`]'s `AtomicU64`, readable via
+//!   [`FleetDispatcher::filter_epoch`]). Workers activate staged ops the
+//!   first time they observe `filter_epoch >=` the op's tag, and every
+//!   data reply carries the epoch it was served under
+//!   ([`FleetOk::epoch`]) — so a config swap is never *torn*: no request
+//!   executes under a mix of old and new state, and a shard that dies
+//!   mid-broadcast converges through the replay log before it serves
+//!   again (the staged op activates on its first batch, because the
+//!   global epoch already moved).
+//! * **Drain / scale** — [`FleetDispatcher::drain`] takes one shard out
+//!   of rotation while traffic flows: new dispatch skips the draining
+//!   shard, in-flight work flushes, and the worker is then either
+//!   respawned fresh ([`DrainOutcome::Respawn`], e.g. to pick up a new
+//!   backend) or retired ([`DrainOutcome::Retire`], scale-down);
+//!   [`FleetDispatcher::revive`] scales a retired shard back up.
 //!
 //! The shard payload is pluggable through [`ShardProfile`]; the two
 //! implementations are the convolution worker
 //! ([`super::service::ConvProfile`]) and the LM inference worker
 //! ([`crate::server::ModelProfile`]). The single-worker services are thin
 //! facades over a 1-shard fleet, so every request in the crate flows
-//! through the same admission path.
+//! through the same admission path. The network front in
+//! [`crate::ingress`] sits directly on these dispatcher APIs.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -166,8 +188,19 @@ impl std::fmt::Display for FleetError {
     }
 }
 
-/// Every fleet reply: a result row or a typed failure.
-pub type FleetReply = Result<Vec<f32>, FleetError>;
+/// A successful fleet reply: the result row plus the filter epoch the
+/// request was served under (see [`FleetDispatcher::control`] — the
+/// worker tags data replies with the epoch whose staged config it
+/// executed with, so clients can observe exactly when a two-phase swap
+/// became visible to them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetOk {
+    pub data: Vec<f32>,
+    pub epoch: u64,
+}
+
+/// Every fleet reply: a result row (epoch-tagged) or a typed failure.
+pub type FleetReply = Result<FleetOk, FleetError>;
 
 // ---------------------------------------------------------------------------
 // Shared dispatcher state
@@ -183,15 +216,35 @@ struct FleetShared {
     /// the sum of [`RoutePlan::cost`] over dispatched-but-unanswered
     /// requests.
     outstanding: Vec<AtomicU64>,
+    /// Dispatched-but-unanswered *request count* per shard (the
+    /// saturation gauge surfaced as
+    /// [`ShardStatsSnapshot::inflight_requests`]; `outstanding` above is
+    /// the cost-weighted twin used for balancing).
+    dispatched: Vec<AtomicU64>,
     alive: Vec<AtomicBool>,
     /// Permanently-dead shards (worker start failed; never respawned).
     defunct: Vec<AtomicBool>,
+    /// Shards taken out of rotation by [`FleetDispatcher::drain`]:
+    /// `pick_shard` skips them; the flag stays set on a retired shard
+    /// until [`FleetDispatcher::revive`].
+    draining: Vec<AtomicBool>,
+    /// Whether a draining shard respawns (true) or retires (false) once
+    /// its worker exits cleanly.
+    drain_respawn: Vec<AtomicBool>,
+    /// The fleet-wide config epoch: advanced by the two-phase
+    /// [`FleetDispatcher::control`] *after* every live shard staged the
+    /// op. Shared with workers (via [`ShardCtx`]) which use it to
+    /// activate staged ops and tag replies. SeqCst everywhere: epoch
+    /// reads must be totally ordered against the flip.
+    filter_epoch: Arc<AtomicU64>,
     shutting_down: AtomicBool,
     submitted: AtomicU64,
     completed: AtomicU64,
     busy_rejections: AtomicU64,
     shard_deaths: AtomicU64,
     restarts: AtomicU64,
+    /// Graceful drains completed (respawn or retire).
+    drains: AtomicU64,
 }
 
 impl FleetShared {
@@ -201,14 +254,19 @@ impl FleetShared {
             inflight: Mutex::new(0),
             cv: Condvar::new(),
             outstanding: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            dispatched: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             alive: (0..shards).map(|_| AtomicBool::new(true)).collect(),
             defunct: (0..shards).map(|_| AtomicBool::new(false)).collect(),
+            draining: (0..shards).map(|_| AtomicBool::new(false)).collect(),
+            drain_respawn: (0..shards).map(|_| AtomicBool::new(false)).collect(),
+            filter_epoch: Arc::new(AtomicU64::new(0)),
             shutting_down: AtomicBool::new(false),
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             busy_rejections: AtomicU64::new(0),
             shard_deaths: AtomicU64::new(0),
             restarts: AtomicU64::new(0),
+            drains: AtomicU64::new(0),
         }
     }
 
@@ -262,9 +320,11 @@ impl FleetShared {
     }
 
     /// Finish one dispatched request on `shard`, returning its modeled
-    /// cost to the balancer.
+    /// cost to the balancer and settling the in-flight request gauge.
     fn complete(&self, shard: usize, cost: u64) {
         self.outstanding[shard].fetch_sub(cost, Ordering::Relaxed);
+        let prev = self.dispatched[shard].fetch_sub(1, Ordering::Relaxed);
+        debug_assert!(prev > 0, "per-shard dispatched gauge underflow");
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.release();
     }
@@ -303,9 +363,19 @@ impl ReplySlot {
         Self { client: Some(client), shared, stats, shard, cost }
     }
 
-    /// Deliver the worker's answer (errors become [`FleetError::Failed`]).
-    pub fn fulfill(mut self, r: Result<Vec<f32>, String>) {
-        self.finish(r.map_err(FleetError::Failed));
+    /// Deliver the worker's answer (errors become [`FleetError::Failed`]),
+    /// tagged with the fleet's current filter epoch. Workers that apply
+    /// staged config themselves use [`ReplySlot::fulfill_at`] to tag
+    /// with the exact epoch the request executed under.
+    pub fn fulfill(self, r: Result<Vec<f32>, String>) {
+        let epoch = self.shared.filter_epoch.load(Ordering::SeqCst);
+        self.fulfill_at(r, epoch);
+    }
+
+    /// Deliver the worker's answer tagged with the filter epoch whose
+    /// (staged) config the request was actually served under.
+    pub fn fulfill_at(mut self, r: Result<Vec<f32>, String>, epoch: u64) {
+        self.finish(r.map(|data| FleetOk { data, epoch }).map_err(FleetError::Failed));
     }
 
     /// Deliver a typed failure (e.g. [`FleetError::SessionLost`] when a
@@ -375,14 +445,34 @@ pub struct RoutePlan {
 pub enum ShardMsg<P: ShardProfile> {
     /// One admitted request plus its reply obligation.
     Job { req: P::Request, reply: ReplySlot, t_submit: Instant },
-    /// A broadcast control operation (e.g. a filter install).
-    Control { op: P::Control, done: Sender<Result<(), String>> },
+    /// Phase one of a broadcast control operation: validate and *stage*
+    /// the op (tagged with its target epoch), acking through `done`. The
+    /// op must not take effect until the worker observes the fleet
+    /// filter epoch reach `epoch` (phase two — the dispatcher flips the
+    /// epoch only after every live shard acked).
+    Control { op: P::Control, epoch: u64, done: Sender<Result<(), String>> },
+    /// Un-stage a rejected control op (some peer shard refused it, so
+    /// its epoch will never activate and must not linger in staging).
+    Discard { epoch: u64 },
     /// Failure-injection hook: the worker panics on receipt. Used by the
     /// supervision tests to kill a shard mid-stream; never sent by the
     /// normal request path.
     Poison,
     /// Drain queued work and exit the worker loop.
     Shutdown,
+}
+
+/// Per-worker runtime context handed to [`ShardProfile::run_shard`]:
+/// the dispatcher-shared state a worker loop needs beyond its own
+/// channel and stats.
+#[derive(Clone)]
+pub struct ShardCtx {
+    /// The fleet-wide filter epoch (see [`FleetDispatcher::control`]).
+    /// Workers activate staged control ops once this reaches the op's
+    /// tag, and tag data replies with the epoch they executed under.
+    /// Load with `SeqCst` — activation must be totally ordered against
+    /// the dispatcher's flip.
+    pub filter_epoch: Arc<AtomicU64>,
 }
 
 /// One kind of shard worker: how to route its requests at admission and
@@ -404,12 +494,14 @@ pub trait ShardProfile: Clone + Send + Sync + 'static {
     /// Build and run one shard worker until `Shutdown`/disconnect. A
     /// panic in here is caught by the supervisor, which fails the
     /// worker's in-flight slots fast and respawns from the same
-    /// `BackendConfig`.
+    /// `BackendConfig`. `ctx` carries the dispatcher-shared filter
+    /// epoch for two-phase control activation and reply tagging.
     fn run_shard(
         &self,
         backend: &BackendConfig,
         policy: &BatchPolicy,
         stats: &Arc<ServiceStats>,
+        ctx: ShardCtx,
         rx: Receiver<ShardMsg<Self>>,
     ) -> crate::Result<()>;
 }
@@ -423,6 +515,9 @@ pub trait ShardProfile: Clone + Send + Sync + 'static {
 pub struct ShardStatsSnapshot {
     pub shard: usize,
     pub alive: bool,
+    /// Out of rotation: draining now, or retired (alive=false) until
+    /// revived.
+    pub draining: bool,
     pub requests: u64,
     pub batches: u64,
     pub rows_executed: u64,
@@ -430,6 +525,9 @@ pub struct ShardStatsSnapshot {
     /// Modeled cost of dispatched-but-unanswered requests (the weighted
     /// load-balancing signal; cost-model units, not rows).
     pub outstanding_cost: u64,
+    /// Dispatched-but-unanswered request *count* on this shard right now
+    /// — the queue-depth/saturation gauge ingress shed decisions read.
+    pub inflight_requests: u64,
     /// Peak bytes of reusable plan scratch checked out at once inside
     /// this shard's engines (0 until the worker reports).
     pub workspace_peak_bytes: u64,
@@ -472,6 +570,11 @@ pub struct FleetStats {
     pub shard_deaths: u64,
     /// Worker respawns performed by the supervisor.
     pub restarts: u64,
+    /// Graceful shard drains completed (respawn or retire).
+    pub drains: u64,
+    /// The fleet-wide filter epoch at snapshot time (see
+    /// [`FleetDispatcher::control`]).
+    pub filter_epoch: u64,
     /// Rollups over the per-shard stats.
     pub requests: u64,
     pub batches: u64,
@@ -513,10 +616,8 @@ impl FleetStats {
 // Supervision plumbing
 // ---------------------------------------------------------------------------
 
-const SENTINEL: usize = usize::MAX;
-
 enum ExitKind {
-    /// Worker returned normally (shutdown or channel teardown).
+    /// Worker returned normally (shutdown, drain, or channel teardown).
     Clean,
     /// Worker loop panicked (or poison): respawn.
     Panicked,
@@ -527,6 +628,28 @@ enum ExitKind {
 struct ShardExit {
     shard: usize,
     kind: ExitKind,
+}
+
+/// What the supervisor thread reacts to.
+enum SupervisorMsg {
+    /// A worker thread exited (its last act).
+    Exit(ShardExit),
+    /// Scale-up request: respawn the (retired or dead) shard.
+    Revive(usize),
+    /// Re-check shutdown state (sent by the dispatcher's Drop).
+    Wake,
+}
+
+/// What happens to a drained shard once its in-flight work has flushed
+/// (see [`FleetDispatcher::drain`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainOutcome {
+    /// Exit the worker and immediately respawn it fresh (same
+    /// `BackendConfig`, control log replayed) — rolling-restart style.
+    Respawn,
+    /// Exit the worker and leave the shard out of rotation (scale-down);
+    /// bring it back later with [`FleetDispatcher::revive`].
+    Retire,
 }
 
 /// Fleet configuration: shard count, admission bound, batch policy.
@@ -556,11 +679,14 @@ pub struct FleetDispatcher<P: ShardProfile> {
     shared: Arc<FleetShared>,
     stats: Vec<Arc<ServiceStats>>,
     senders: Arc<Mutex<Vec<Sender<ShardMsg<P>>>>>,
-    /// Applied control ops (tagged with a sequence id), replayed onto
+    /// Accepted control ops tagged with their epoch, replayed onto
     /// respawned workers. Entries for rejected ops are removed.
     controls: Arc<Mutex<Vec<(u64, P::Control)>>>,
+    /// Serializes two-phase control ops (stage → ack → epoch flip must
+    /// not interleave between concurrent `control()` callers).
+    control_gate: Mutex<()>,
     control_seq: AtomicU64,
-    monitor_tx: Sender<ShardExit>,
+    monitor_tx: Sender<SupervisorMsg>,
     supervisor: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -571,14 +697,15 @@ fn spawn_worker<P: ShardProfile>(
     backend: BackendConfig,
     policy: BatchPolicy,
     stats: Arc<ServiceStats>,
-    monitor: Sender<ShardExit>,
+    ctx: ShardCtx,
+    monitor: Sender<SupervisorMsg>,
 ) -> crate::Result<(Sender<ShardMsg<P>>, std::thread::JoinHandle<()>)> {
     let (tx, rx) = channel::<ShardMsg<P>>();
     let handle = std::thread::Builder::new()
         .name(format!("fleet-shard-{shard}.{generation}"))
         .spawn(move || {
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                profile.run_shard(&backend, &policy, &stats, rx)
+                profile.run_shard(&backend, &policy, &stats, ctx, rx)
             }));
             // On panic, `rx` and the worker's queues unwound: every queued
             // ReplySlot already failed its client fast via Drop.
@@ -587,7 +714,7 @@ fn spawn_worker<P: ShardProfile>(
                 Ok(Err(e)) => ExitKind::StartFailed(format!("{e:#}")),
                 Err(_) => ExitKind::Panicked,
             };
-            let _ = monitor.send(ShardExit { shard, kind });
+            let _ = monitor.send(SupervisorMsg::Exit(ShardExit { shard, kind }));
         })?;
     Ok((tx, handle))
 }
@@ -599,7 +726,8 @@ impl<P: ShardProfile> FleetDispatcher<P> {
         let shared = Arc::new(FleetShared::new(shards, cfg.max_inflight));
         let stats: Vec<Arc<ServiceStats>> =
             (0..shards).map(|_| Arc::new(ServiceStats::default())).collect();
-        let (monitor_tx, monitor_rx) = channel::<ShardExit>();
+        let (monitor_tx, monitor_rx) = channel::<SupervisorMsg>();
+        let ctx = ShardCtx { filter_epoch: Arc::clone(&shared.filter_epoch) };
 
         let mut txs = Vec::with_capacity(shards);
         // One JoinHandle slot per shard (replaced on respawn, dead
@@ -613,6 +741,7 @@ impl<P: ShardProfile> FleetDispatcher<P> {
                 backend.clone(),
                 cfg.policy.clone(),
                 Arc::clone(&stats[i]),
+                ctx.clone(),
                 monitor_tx.clone(),
             )?;
             txs.push(tx);
@@ -620,9 +749,9 @@ impl<P: ShardProfile> FleetDispatcher<P> {
         }
         let senders = Arc::new(Mutex::new(txs));
 
-        // Supervisor: respawn panicked workers, replay control state,
-        // account restarts; exits once shutdown has collected every live
-        // worker.
+        // Supervisor: respawn panicked/drained workers, replay control
+        // state, serve revive (scale-up) requests, account restarts;
+        // exits once shutdown has collected every live worker.
         let controls: Arc<Mutex<Vec<(u64, P::Control)>>> = Arc::new(Mutex::new(Vec::new()));
         let supervisor = {
             let shared = Arc::clone(&shared);
@@ -636,31 +765,111 @@ impl<P: ShardProfile> FleetDispatcher<P> {
             std::thread::Builder::new().name("fleet-supervisor".into()).spawn(move || {
                 let mut live = shards;
                 let mut generation = 0u64;
-                while let Ok(exit) = monitor_rx.recv() {
-                    let mut txs = senders.lock().unwrap();
-                    if exit.shard != SENTINEL {
-                        live -= 1;
-                        shared.alive[exit.shard].store(false, Ordering::Release);
-                        // The exiting thread sent this event as its last
-                        // act; reap its handle now so the vec stays
-                        // bounded across respawns.
-                        if let Some(h) = handles[exit.shard].take() {
-                            let _ = h.join();
+                // Spawn a fresh worker for `shard` and converge it with
+                // its peers: the control log is replayed *before* the
+                // shard is marked alive (all under the senders lock, the
+                // same lock control() stages under — an op is either in
+                // the log already or will be sent to this sender, never
+                // neither). Staged replays activate on the worker's
+                // first batch because the global epoch already moved.
+                let respawn = |shard: usize,
+                                   generation: u64,
+                                   txs: &mut Vec<Sender<ShardMsg<P>>>,
+                                   handles: &mut Vec<Option<std::thread::JoinHandle<()>>>,
+                                   live: &mut usize| {
+                    match spawn_worker(
+                        shard,
+                        generation,
+                        profile.clone(),
+                        backend.clone(),
+                        policy.clone(),
+                        Arc::clone(&stats[shard]),
+                        ShardCtx { filter_epoch: Arc::clone(&shared.filter_epoch) },
+                        monitor_tx.clone(),
+                    ) {
+                        Ok((tx, handle)) => {
+                            for (epoch, op) in controls.lock().unwrap().iter() {
+                                let (done, _done_rx) = channel();
+                                let _ = tx.send(ShardMsg::Control {
+                                    op: op.clone(),
+                                    epoch: *epoch,
+                                    done,
+                                });
+                            }
+                            txs[shard] = tx;
+                            handles[shard] = Some(handle);
+                            *live += 1;
+                            shared.alive[shard].store(true, Ordering::Release);
+                            true
+                        }
+                        Err(e) => {
+                            shared.defunct[shard].store(true, Ordering::Release);
+                            crate::log_warn!("fleet shard {shard} respawn failed: {e:#}");
+                            false
                         }
                     }
+                };
+                while let Ok(msg) = monitor_rx.recv() {
+                    let mut txs = senders.lock().unwrap();
+                    let exit = match msg {
+                        SupervisorMsg::Exit(exit) => {
+                            live -= 1;
+                            shared.alive[exit.shard].store(false, Ordering::Release);
+                            // The exiting thread sent this event as its
+                            // last act; reap its handle now so the vec
+                            // stays bounded across respawns.
+                            if let Some(h) = handles[exit.shard].take() {
+                                let _ = h.join();
+                            }
+                            Some(exit)
+                        }
+                        SupervisorMsg::Revive(shard) => {
+                            if !shared.shutting_down.load(Ordering::Acquire)
+                                && !shared.alive[shard].load(Ordering::Acquire)
+                                && handles[shard].is_none()
+                            {
+                                generation += 1;
+                                if respawn(shard, generation, &mut txs, &mut handles, &mut live) {
+                                    shared.defunct[shard].store(false, Ordering::Release);
+                                    shared.draining[shard].store(false, Ordering::Release);
+                                }
+                            }
+                            None
+                        }
+                        SupervisorMsg::Wake => None,
+                    };
                     if shared.shutting_down.load(Ordering::Acquire) {
                         if live == 0 {
                             break;
                         }
                         continue;
                     }
-                    if exit.shard == SENTINEL {
-                        continue;
-                    }
+                    let Some(exit) = exit else { continue };
                     match exit.kind {
                         ExitKind::Clean => {
-                            // Channel teardown without shutdown: dispatcher
-                            // gone; nothing to do.
+                            if shared.draining[exit.shard].load(Ordering::Acquire) {
+                                // Graceful drain completed. Respawn-drains
+                                // come straight back into rotation;
+                                // retire-drains stay down (and draining
+                                // stays set to mark the shard retired)
+                                // until revive().
+                                shared.drains.fetch_add(1, Ordering::Relaxed);
+                                if shared.drain_respawn[exit.shard].swap(false, Ordering::AcqRel) {
+                                    generation += 1;
+                                    if respawn(
+                                        exit.shard,
+                                        generation,
+                                        &mut txs,
+                                        &mut handles,
+                                        &mut live,
+                                    ) {
+                                        shared.draining[exit.shard]
+                                            .store(false, Ordering::Release);
+                                    }
+                                }
+                            }
+                            // Otherwise: channel teardown without
+                            // shutdown — dispatcher gone; nothing to do.
                         }
                         ExitKind::StartFailed(e) => {
                             shared.defunct[exit.shard].store(true, Ordering::Release);
@@ -677,43 +886,7 @@ impl<P: ShardProfile> FleetDispatcher<P> {
                                 exit.shard,
                                 shared.restarts.load(Ordering::Relaxed)
                             );
-                            match spawn_worker(
-                                exit.shard,
-                                generation,
-                                profile.clone(),
-                                backend.clone(),
-                                policy.clone(),
-                                Arc::clone(&stats[exit.shard]),
-                                monitor_tx.clone(),
-                            ) {
-                                Ok((tx, handle)) => {
-                                    // Replay installed control state so the
-                                    // fresh worker converges with its peers
-                                    // before it is marked alive. (Holding the
-                                    // senders lock here pairs with control()
-                                    // logging under the same lock: an op is
-                                    // either in the log already or will be
-                                    // sent to this sender — never neither.)
-                                    for (_, op) in controls.lock().unwrap().iter() {
-                                        let (done, _done_rx) = channel();
-                                        let _ = tx.send(ShardMsg::Control {
-                                            op: op.clone(),
-                                            done,
-                                        });
-                                    }
-                                    txs[exit.shard] = tx;
-                                    handles[exit.shard] = Some(handle);
-                                    live += 1;
-                                    shared.alive[exit.shard].store(true, Ordering::Release);
-                                }
-                                Err(e) => {
-                                    shared.defunct[exit.shard].store(true, Ordering::Release);
-                                    crate::log_warn!(
-                                        "fleet shard {} respawn failed: {e:#}",
-                                        exit.shard
-                                    );
-                                }
-                            }
+                            respawn(exit.shard, generation, &mut txs, &mut handles, &mut live);
                         }
                     }
                 }
@@ -730,6 +903,7 @@ impl<P: ShardProfile> FleetDispatcher<P> {
             stats,
             senders,
             controls,
+            control_gate: Mutex::new(()),
             control_seq: AtomicU64::new(0),
             monitor_tx,
             supervisor: Some(supervisor),
@@ -750,7 +924,9 @@ impl<P: ShardProfile> FleetDispatcher<P> {
         let n = self.stats.len();
         let mut best: Option<(usize, u64)> = None;
         for i in 0..n {
-            if !self.shared.alive[i].load(Ordering::Acquire) {
+            if !self.shared.alive[i].load(Ordering::Acquire)
+                || self.shared.draining[i].load(Ordering::Acquire)
+            {
                 continue;
             }
             let load = self.shared.outstanding[i].load(Ordering::Relaxed);
@@ -766,6 +942,7 @@ impl<P: ShardProfile> FleetDispatcher<P> {
                 .wrapping_mul(0x100_0000_01B3);
             let affinity = (h % n as u64) as usize;
             if self.shared.alive[affinity].load(Ordering::Acquire)
+                && !self.shared.draining[affinity].load(Ordering::Acquire)
                 && self.shared.outstanding[affinity].load(Ordering::Relaxed) == min_load
             {
                 pick = affinity;
@@ -845,6 +1022,7 @@ impl<P: ShardProfile> FleetDispatcher<P> {
             };
             self.stats[shard].requests.fetch_add(1, Ordering::Relaxed);
             self.shared.outstanding[shard].fetch_add(plan.cost, Ordering::Relaxed);
+            self.shared.dispatched[shard].fetch_add(1, Ordering::Relaxed);
             let slot = ReplySlot::new(
                 client_tx.clone(),
                 Arc::clone(&self.shared),
@@ -862,6 +1040,7 @@ impl<P: ShardProfile> FleetDispatcher<P> {
                     self.shared.alive[shard].store(false, Ordering::Release);
                     self.stats[shard].requests.fetch_sub(1, Ordering::Relaxed);
                     self.shared.outstanding[shard].fetch_sub(plan.cost, Ordering::Relaxed);
+                    self.shared.dispatched[shard].fetch_sub(1, Ordering::Relaxed);
                     let ShardMsg::Job { req: r, reply, .. } = m else { unreachable!() };
                     let _ = reply.disarm();
                     req = r;
@@ -924,8 +1103,14 @@ impl<P: ShardProfile> FleetDispatcher<P> {
     }
 
     /// Blocking submit-and-wait: waits for an admission slot instead of
-    /// returning `Busy`, then waits for the reply.
+    /// returning `Busy`, then waits for the reply (data only; use
+    /// [`FleetDispatcher::call_tagged`] for the served-under epoch).
     pub fn call(&self, req: P::Request) -> Result<Vec<f32>, FleetError> {
+        self.call_tagged(req).map(|ok| ok.data)
+    }
+
+    /// Blocking submit-and-wait returning the full epoch-tagged reply.
+    pub fn call_tagged(&self, req: P::Request) -> Result<FleetOk, FleetError> {
         let rx = self.submit_blocking(req)?;
         match rx.recv() {
             Ok(r) => r,
@@ -935,22 +1120,40 @@ impl<P: ShardProfile> FleetDispatcher<P> {
         }
     }
 
-    /// Broadcast a control operation to every shard and wait for each to
-    /// acknowledge. Ops must be idempotent: the op is logged *before* it
-    /// is sent (both under the senders lock, the same lock the supervisor
-    /// holds while replaying the log onto a respawned worker), so a shard
-    /// death concurrent with a control op can never lose the op — at
-    /// worst a fresh worker receives it twice. Rejected ops are removed
-    /// from the log.
-    pub fn control(&self, op: P::Control) -> crate::Result<()> {
-        let id = self.control_seq.fetch_add(1, Ordering::Relaxed);
+    /// Broadcast a control operation to every shard with a **two-phase
+    /// apply** and return the filter epoch it became visible at.
+    ///
+    /// Phase one (*prepare*): the op is logged and sent to every shard
+    /// tagged with its target epoch (both under the senders lock, the
+    /// same lock the supervisor holds while replaying the log onto a
+    /// respawned worker — a shard death concurrent with a control op can
+    /// never lose the op, at worst a fresh worker stages it twice, and
+    /// staging is idempotent). Each worker validates and *stages* the op
+    /// without applying it, then acks.
+    ///
+    /// Phase two (*flip*): once every live shard has acked, the shared
+    /// filter epoch advances to the op's tag. Workers activate staged
+    /// ops the first time they observe the epoch at or past the tag —
+    /// before executing a batch — so no request anywhere in the fleet is
+    /// served under the new config until *all* shards hold it: the swap
+    /// is visible to all shards or to none. A shard that dies
+    /// mid-broadcast converges through replay (its staged copy activates
+    /// on its first batch, the epoch having already moved); a rejected
+    /// op is un-logged and un-staged everywhere and the epoch never
+    /// advances.
+    ///
+    /// Concurrent `control()` calls are serialized; epochs are strictly
+    /// increasing across successful ops.
+    pub fn control(&self, op: P::Control) -> crate::Result<u64> {
+        let _gate = self.control_gate.lock().unwrap();
+        let epoch = self.control_seq.fetch_add(1, Ordering::Relaxed) + 1;
         let mut waits = Vec::new();
         {
             let txs = self.senders.lock().unwrap();
-            self.controls.lock().unwrap().push((id, op.clone()));
+            self.controls.lock().unwrap().push((epoch, op.clone()));
             for tx in txs.iter() {
                 let (done, done_rx) = channel();
-                if tx.send(ShardMsg::Control { op: op.clone(), done }).is_ok() {
+                if tx.send(ShardMsg::Control { op: op.clone(), epoch, done }).is_ok() {
                     waits.push(done_rx);
                 }
                 // A dead shard is fine: the respawn replays the logged op.
@@ -959,7 +1162,7 @@ impl<P: ShardProfile> FleetDispatcher<P> {
                 // Nothing accepted the op and nothing will ack it: un-log
                 // it *while still holding the senders lock* so a racing
                 // respawn can never replay an op we report as failed.
-                self.controls.lock().unwrap().retain(|(i, _)| *i != id);
+                self.controls.lock().unwrap().retain(|(e, _)| *e != epoch);
             }
         }
         if waits.is_empty() {
@@ -974,11 +1177,26 @@ impl<P: ShardProfile> FleetDispatcher<P> {
             }
         }
         if let Some(e) = rejection {
-            // A rejected op must not replay onto future respawns.
-            self.controls.lock().unwrap().retain(|(i, _)| *i != id);
+            // A rejected op must not replay onto future respawns, and
+            // must not linger staged on the shards that accepted it (a
+            // later successful epoch would otherwise activate it).
+            let txs = self.senders.lock().unwrap();
+            self.controls.lock().unwrap().retain(|(i, _)| *i != epoch);
+            for tx in txs.iter() {
+                let _ = tx.send(ShardMsg::Discard { epoch });
+            }
             crate::bail!("control op rejected: {e}");
         }
-        Ok(())
+        // Every live shard holds the staged op: make it visible fleet-wide.
+        self.shared.filter_epoch.fetch_max(epoch, Ordering::SeqCst);
+        Ok(epoch)
+    }
+
+    /// The current fleet-wide filter epoch (see
+    /// [`FleetDispatcher::control`]): 0 until the first successful
+    /// control op.
+    pub fn filter_epoch(&self) -> u64 {
+        self.shared.filter_epoch.load(Ordering::SeqCst)
     }
 
     /// Merged per-shard latency histogram counts (for interval quantiles:
@@ -992,6 +1210,122 @@ impl<P: ShardProfile> FleetDispatcher<P> {
             }
         }
         hist
+    }
+
+    /// Gracefully drain one shard while traffic flows: take it out of
+    /// rotation (new dispatch skips it; admission stays open on the
+    /// remaining shards), wait for its dispatched requests to flush,
+    /// then stop the worker cleanly and either respawn it fresh
+    /// ([`DrainOutcome::Respawn`] — a rolling restart that replays the
+    /// control log) or retire it ([`DrainOutcome::Retire`] — scale-down;
+    /// bring it back with [`FleetDispatcher::revive`]). Clients never
+    /// see a failed request from a drain: queued work is flushed before
+    /// the worker exits, and the worst a racing submit sees is the
+    /// retryable `Busy`/`ShardDied` it must already handle.
+    ///
+    /// Pinned (decode-session) traffic ignores rotation, so a shard
+    /// hosting active sessions may never go idle — the `timeout` bounds
+    /// the wait; on expiry the shard is put back into rotation and an
+    /// error returned. A drained shard's session state dies with the
+    /// worker (steps answer `SessionLost` after a respawn).
+    pub fn drain(
+        &self,
+        shard: usize,
+        outcome: DrainOutcome,
+        timeout: Duration,
+    ) -> crate::Result<()> {
+        // One config-plane operation at a time: drains serialize with
+        // each other and with control ops (the drains counter below is
+        // fleet-wide, so concurrent drains would cross signals).
+        let _gate = self.control_gate.lock().unwrap();
+        crate::ensure!(shard < self.stats.len(), "no shard {shard}");
+        crate::ensure!(
+            !self.shared.defunct[shard].load(Ordering::Acquire),
+            "shard {shard} is defunct"
+        );
+        crate::ensure!(
+            !self.shared.draining[shard].swap(true, Ordering::AcqRel),
+            "shard {shard} is already draining or retired"
+        );
+        let in_rotation = |i: usize| {
+            self.shared.alive[i].load(Ordering::Acquire)
+                && !self.shared.draining[i].load(Ordering::Acquire)
+        };
+        if outcome == DrainOutcome::Retire && !(0..self.stats.len()).any(in_rotation) {
+            self.shared.draining[shard].store(false, Ordering::Release);
+            crate::bail!("refusing to retire shard {shard}: it is the last shard in rotation");
+        }
+        self.shared.drain_respawn[shard]
+            .store(outcome == DrainOutcome::Respawn, Ordering::Release);
+        let deadline = Instant::now() + timeout;
+        let give_up = |msg: &str| -> crate::Result<()> {
+            // Put the shard back into rotation before failing.
+            self.shared.drain_respawn[shard].store(false, Ordering::Release);
+            self.shared.draining[shard].store(false, Ordering::Release);
+            crate::bail!("drain of shard {shard} {msg} after {timeout:?}")
+        };
+        // Flush: wait for every dispatched-but-unanswered request on the
+        // shard to settle (new dispatch already skips it).
+        while self.shared.dispatched[shard].load(Ordering::Relaxed) > 0 {
+            if Instant::now() > deadline {
+                return give_up("timed out flushing in-flight requests");
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Stop the worker; its Shutdown path force-flushes anything that
+        // raced into its queue before exiting cleanly. The supervisor
+        // bumps the drains counter once it has processed the exit (and,
+        // for Respawn, brought the fresh worker up) — poll that, not the
+        // alive flag, which flips back too fast to observe on a respawn.
+        let drains0 = self.shared.drains.load(Ordering::Relaxed);
+        {
+            let txs = self.senders.lock().unwrap();
+            let _ = txs[shard].send(ShardMsg::Shutdown);
+        }
+        while self.shared.drains.load(Ordering::Relaxed) == drains0 {
+            if Instant::now() > deadline {
+                return give_up("timed out waiting for the worker to exit");
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        if outcome == DrainOutcome::Respawn {
+            while !self.shared.alive[shard].load(Ordering::Acquire) {
+                if self.shared.defunct[shard].load(Ordering::Acquire) {
+                    crate::bail!("shard {shard} failed to respawn after drain (defunct)");
+                }
+                if Instant::now() > deadline {
+                    crate::bail!("drain of shard {shard} timed out waiting for the respawn");
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        Ok(())
+    }
+
+    /// Scale a retired (or start-failed) shard back up: respawn its
+    /// worker, replay the control log, and return it to rotation. A
+    /// no-op for a shard that is already alive.
+    pub fn revive(&self, shard: usize, timeout: Duration) -> crate::Result<()> {
+        crate::ensure!(shard < self.stats.len(), "no shard {shard}");
+        if self.shared.alive[shard].load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let _ = self.monitor_tx.send(SupervisorMsg::Revive(shard));
+        let deadline = Instant::now() + timeout;
+        while !self.shared.alive[shard].load(Ordering::Acquire) {
+            if Instant::now() > deadline {
+                crate::bail!(
+                    "revive of shard {shard} timed out after {timeout:?}{}",
+                    if self.shared.defunct[shard].load(Ordering::Acquire) {
+                        " (worker failed to start; shard is defunct)"
+                    } else {
+                        ""
+                    }
+                );
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Ok(())
     }
 
     /// Failure-injection hook (tests, chaos drills): make shard `i` panic
@@ -1040,11 +1374,13 @@ impl<P: ShardProfile> FleetDispatcher<P> {
             shards.push(ShardStatsSnapshot {
                 shard: i,
                 alive: self.shared.alive[i].load(Ordering::Acquire),
+                draining: self.shared.draining[i].load(Ordering::Acquire),
                 requests: sr,
                 batches: sb,
                 rows_executed: sx,
                 errors: se,
                 outstanding_cost: self.shared.outstanding[i].load(Ordering::Relaxed),
+                inflight_requests: self.shared.dispatched[i].load(Ordering::Relaxed),
                 workspace_peak_bytes: sw,
                 mean_occupancy: s.mean_occupancy(),
                 mean_latency_ms: s.mean_latency_ms(),
@@ -1060,6 +1396,8 @@ impl<P: ShardProfile> FleetDispatcher<P> {
             busy_rejections: self.shared.busy_rejections.load(Ordering::Relaxed),
             shard_deaths: self.shared.shard_deaths.load(Ordering::Relaxed),
             restarts: self.shared.restarts.load(Ordering::Relaxed),
+            drains: self.shared.drains.load(Ordering::Relaxed),
+            filter_epoch: self.shared.filter_epoch.load(Ordering::SeqCst),
             requests,
             batches,
             rows_executed: rows,
@@ -1091,7 +1429,7 @@ impl<P: ShardProfile> Drop for FleetDispatcher<P> {
         // Wake any admission waiters (they observe Shutdown) and the
         // supervisor (in case every worker already exited).
         self.shared.cv.notify_all();
-        let _ = self.monitor_tx.send(ShardExit { shard: SENTINEL, kind: ExitKind::Clean });
+        let _ = self.monitor_tx.send(SupervisorMsg::Wake);
         if let Some(h) = self.supervisor.take() {
             let _ = h.join();
         }
@@ -1146,13 +1484,15 @@ mod tests {
         let stats = Arc::new(ServiceStats::default());
         assert!(shared.try_admit());
         shared.outstanding[0].fetch_add(7, Ordering::Relaxed);
+        shared.dispatched[0].fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel::<FleetReply>();
         let slot = ReplySlot::new(tx, Arc::clone(&shared), Arc::clone(&stats), 0, 7);
         slot.fulfill(Ok(vec![1.0])); // consumes the slot; Drop runs here too
-        assert_eq!(rx.recv().unwrap().unwrap(), vec![1.0]);
+        assert_eq!(rx.recv().unwrap().unwrap().data, vec![1.0]);
         assert!(rx.recv().is_err(), "exactly one reply is delivered");
         assert_eq!(shared.inflight_now(), 0, "admission settled exactly once");
         assert_eq!(shared.outstanding[0].load(Ordering::Relaxed), 0);
+        assert_eq!(shared.dispatched[0].load(Ordering::Relaxed), 0, "gauge settled");
         assert_eq!(shared.completed.load(Ordering::Relaxed), 1);
         assert_eq!(shared.shard_deaths.load(Ordering::Relaxed), 0);
         assert_eq!(stats.errors.load(Ordering::Relaxed), 0);
@@ -1160,21 +1500,49 @@ mod tests {
         // A dropped (never-fulfilled) slot settles once too, as ShardDied.
         assert!(shared.try_admit());
         shared.outstanding[0].fetch_add(3, Ordering::Relaxed);
+        shared.dispatched[0].fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel::<FleetReply>();
         drop(ReplySlot::new(tx, Arc::clone(&shared), Arc::clone(&stats), 0, 3));
         assert_eq!(rx.recv().unwrap(), Err(FleetError::ShardDied));
         assert_eq!(shared.inflight_now(), 0);
         assert_eq!(shared.outstanding[0].load(Ordering::Relaxed), 0);
+        assert_eq!(shared.dispatched[0].load(Ordering::Relaxed), 0);
         assert_eq!(shared.shard_deaths.load(Ordering::Relaxed), 1);
 
         // A typed failure path (fail()) also settles exactly once.
         assert!(shared.try_admit());
+        shared.dispatched[0].fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel::<FleetReply>();
         ReplySlot::new(tx, Arc::clone(&shared), Arc::clone(&stats), 0, 0)
             .fail(FleetError::SessionLost);
         assert_eq!(rx.recv().unwrap(), Err(FleetError::SessionLost));
         assert_eq!(shared.inflight_now(), 0);
         assert_eq!(shared.shard_deaths.load(Ordering::Relaxed), 1, "fail() is not a death");
+    }
+
+    #[test]
+    fn replies_carry_the_filter_epoch() {
+        // fulfill() tags with the shared epoch at delivery time;
+        // fulfill_at() tags with the epoch the worker executed under.
+        let shared = Arc::new(FleetShared::new(1, 8));
+        let stats = Arc::new(ServiceStats::default());
+        shared.filter_epoch.store(3, Ordering::SeqCst);
+
+        assert!(shared.try_admit());
+        shared.outstanding[0].fetch_add(1, Ordering::Relaxed);
+        shared.dispatched[0].fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel::<FleetReply>();
+        ReplySlot::new(tx, Arc::clone(&shared), Arc::clone(&stats), 0, 1).fulfill(Ok(vec![2.0]));
+        let ok = rx.recv().unwrap().unwrap();
+        assert_eq!(ok, FleetOk { data: vec![2.0], epoch: 3 });
+
+        assert!(shared.try_admit());
+        shared.outstanding[0].fetch_add(1, Ordering::Relaxed);
+        shared.dispatched[0].fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel::<FleetReply>();
+        ReplySlot::new(tx, Arc::clone(&shared), Arc::clone(&stats), 0, 1)
+            .fulfill_at(Ok(vec![5.0]), 2);
+        assert_eq!(rx.recv().unwrap().unwrap().epoch, 2, "explicit tag wins over shared");
     }
 
     #[test]

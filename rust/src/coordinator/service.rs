@@ -26,8 +26,8 @@ use crate::format_err;
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::fleet::{
-    FleetConfig, FleetDispatcher, FleetReply, LatencyHistogram, ReplySlot, RoutePlan, ShardMsg,
-    ShardProfile,
+    FleetConfig, FleetDispatcher, FleetReply, LatencyHistogram, ReplySlot, RoutePlan, ShardCtx,
+    ShardMsg, ShardProfile,
 };
 use crate::coordinator::router::{ConvKind, Router};
 use crate::runtime::{Artifact, BackendConfig, HostTensor};
@@ -212,9 +212,11 @@ impl ShardProfile for ConvProfile {
         backend: &BackendConfig,
         policy: &BatchPolicy,
         stats: &Arc<ServiceStats>,
+        ctx: ShardCtx,
         rx: Receiver<ShardMsg<Self>>,
     ) -> crate::Result<()> {
-        let mut w = ServiceWorker::new(backend, &self.variant, policy.clone(), Arc::clone(stats))?;
+        let mut w =
+            ServiceWorker::new(backend, &self.variant, policy.clone(), Arc::clone(stats), ctx)?;
         w.run(rx);
         Ok(())
     }
@@ -277,8 +279,11 @@ impl ConvService {
     }
 
     /// Install a filter bank for a (kind, bucket) on every shard; rows
-    /// are `heads * len`.
-    pub fn set_filter(&self, kind: ConvKind, bucket: usize, k: Vec<f32>) -> crate::Result<()> {
+    /// are `heads * len`. The install is a two-phase swap (see
+    /// [`FleetDispatcher::control`]): the returned filter epoch is the
+    /// version tag data replies carry once they are served under the
+    /// new bank — the swap is visible to all shards or to none.
+    pub fn set_filter(&self, kind: ConvKind, bucket: usize, k: Vec<f32>) -> crate::Result<u64> {
         self.fleet.control(ConvControl::SetFilter { kind, bucket, k })
     }
 
@@ -307,6 +312,14 @@ struct ServiceWorker {
     artifacts: BTreeMap<String, Artifact>,
     queues: BTreeMap<(ConvKind, usize), Batcher<RowJob>>,
     filters: BTreeMap<(ConvKind, usize), Vec<f32>>,
+    /// Prepared-but-inactive control ops, tagged with their target epoch
+    /// (phase one of the two-phase swap). Activated into `filters` the
+    /// first time the shared epoch reaches the tag — checked before
+    /// every executed batch — so no batch anywhere in the fleet runs
+    /// under a half-installed config.
+    staged: Vec<(u64, ConvControl)>,
+    /// The dispatcher-shared filter epoch ([`ShardCtx`]).
+    ctx: ShardCtx,
     policy: BatchPolicy,
     stats: Arc<ServiceStats>,
 }
@@ -317,6 +330,7 @@ impl ServiceWorker {
         variant: &str,
         policy: BatchPolicy,
         stats: Arc<ServiceStats>,
+        ctx: ShardCtx,
     ) -> crate::Result<Self> {
         let runtime = backend.connect()?;
         crate::log_info!("conv service worker up on the {} backend", runtime.backend_name());
@@ -327,6 +341,8 @@ impl ServiceWorker {
             artifacts: BTreeMap::new(),
             queues: BTreeMap::new(),
             filters: BTreeMap::new(),
+            staged: Vec::new(),
+            ctx,
             policy,
             stats,
         })
@@ -346,13 +362,22 @@ impl ServiceWorker {
                 Ok(ShardMsg::Job { req, reply, t_submit }) => {
                     self.enqueue(req, reply, t_submit);
                 }
-                Ok(ShardMsg::Control { op, done }) => {
+                Ok(ShardMsg::Control { op, epoch, done }) => {
+                    // Phase one: validate and *stage* — the filter bank
+                    // only becomes servable once the fleet epoch reaches
+                    // `epoch` (the dispatcher flips it after every live
+                    // shard acked), checked before each executed batch.
                     let ConvControl::SetFilter { kind, bucket, k } = op;
                     let r = self.check_filter(kind, bucket, &k);
                     if r.is_ok() {
-                        self.filters.insert((kind, bucket), k);
+                        self.staged.push((epoch, ConvControl::SetFilter { kind, bucket, k }));
                     }
                     let _ = done.send(r.map_err(|e| format!("{e:#}")));
+                }
+                Ok(ShardMsg::Discard { epoch }) => {
+                    // A peer shard rejected the op: its epoch never
+                    // activates; drop our staged copy.
+                    self.staged.retain(|(e, _)| *e != epoch);
                 }
                 Ok(ShardMsg::Poison) => {
                     // Failure-injection hook: die mid-stream. Queued jobs
@@ -436,8 +461,30 @@ impl ServiceWorker {
         }
     }
 
+    /// Activate staged control ops covered by `epoch` (phase two of the
+    /// swap, observed worker-side), oldest tag first.
+    fn activate_staged(&mut self, epoch: u64) {
+        if self.staged.is_empty() || self.staged.iter().all(|(e, _)| *e > epoch) {
+            return;
+        }
+        self.staged.sort_by_key(|(e, _)| *e);
+        for (e, op) in std::mem::take(&mut self.staged) {
+            if e <= epoch {
+                let ConvControl::SetFilter { kind, bucket, k } = op;
+                self.filters.insert((kind, bucket), k);
+            } else {
+                self.staged.push((e, op));
+            }
+        }
+    }
+
     fn execute(&mut self, key: (ConvKind, usize), batch: crate::coordinator::batcher::Batch<RowJob>) {
         let (kind, bucket) = key;
+        // Read the fleet epoch once per batch and activate whatever it
+        // covers: every row in this batch executes — and is tagged —
+        // under exactly this config version.
+        let epoch = self.ctx.filter_epoch.load(Ordering::SeqCst);
+        self.activate_staged(epoch);
         let route = self.router.route(kind, bucket).expect("bucket exists");
         let result = self.execute_inner(kind, &route, &batch);
         // Surface the engines' reusable-scratch peak on this worker's
@@ -453,13 +500,13 @@ impl ServiceWorker {
                 for (job, row) in batch.rows.into_iter().zip(rows) {
                     let lat = t_done.duration_since(job.payload.t_submit).as_nanos() as u64;
                     self.stats.record_latency(lat);
-                    job.payload.reply.fulfill(Ok(row));
+                    job.payload.reply.fulfill_at(Ok(row), epoch);
                 }
             }
             Err(e) => {
                 let msg = format!("{e:#}");
                 for job in batch.rows {
-                    job.payload.reply.fulfill(Err(msg.clone()));
+                    job.payload.reply.fulfill_at(Err(msg.clone()), epoch);
                 }
             }
         }

@@ -1,0 +1,88 @@
+//! A blocking wire-protocol client for the [`crate::ingress`] front.
+//!
+//! Thin by design: it owns one TCP connection, assigns request ids, and
+//! exposes both a synchronous `call` path and a split `send`/`recv` pair
+//! for pipelining (the server guarantees FIFO replies per connection, so
+//! `recv` returns replies in exactly the order requests were sent).
+//! [`IngressClient::call_retry`] adds the canonical backoff loop for the
+//! retryable statuses (`busy`, `shard_died`).
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::format_err;
+use crate::ingress::wire::{self, Reply, Request};
+
+/// One client connection to an [`crate::ingress::IngressServer`].
+pub struct IngressClient {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+impl IngressClient {
+    /// Connect to an ingress endpoint.
+    pub fn connect(addr: impl ToSocketAddrs) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let w = BufWriter::new(stream.try_clone()?);
+        Ok(Self { r: BufReader::new(stream), w, next_id: 1 })
+    }
+
+    /// Send one request frame without waiting for the reply; returns the
+    /// request id the reply will carry. Use with [`IngressClient::recv`]
+    /// to pipeline.
+    pub fn send(&mut self, req: &Request) -> crate::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.w.write_all(&wire::encode_request(id, req))?;
+        self.w.flush()?;
+        Ok(id)
+    }
+
+    /// Receive the next reply in FIFO order. Errors if the connection
+    /// closed or the frame did not decode.
+    pub fn recv(&mut self) -> crate::Result<(u64, Reply)> {
+        let body = wire::read_frame(&mut self.r)?
+            .ok_or_else(|| format_err!("connection closed by server"))?;
+        wire::decode_reply(&body).map_err(|e| format_err!(e))
+    }
+
+    /// Synchronous request/reply round trip.
+    pub fn call(&mut self, req: &Request) -> crate::Result<Reply> {
+        let id = self.send(req)?;
+        let (rid, reply) = self.recv()?;
+        if rid != id {
+            // Only possible if the caller mixed `send` pipelining with
+            // `call` and dropped a pending reply on the floor.
+            return Err(format_err!("reply id {rid} does not match request id {id}"));
+        }
+        Ok(reply)
+    }
+
+    /// `call`, retrying retryable statuses (`busy`, `shard_died`) with a
+    /// fixed backoff. Returns the first terminal reply, or the last
+    /// retryable one once attempts are exhausted.
+    pub fn call_retry(
+        &mut self,
+        req: &Request,
+        max_attempts: usize,
+        backoff: Duration,
+    ) -> crate::Result<Reply> {
+        let mut last = self.call(req)?;
+        for _ in 1..max_attempts {
+            if !last.retryable() {
+                return Ok(last);
+            }
+            std::thread::sleep(backoff);
+            last = self.call(req)?;
+        }
+        Ok(last)
+    }
+
+    /// Half-close the write side so the server sees a clean EOF.
+    pub fn finish(&mut self) {
+        let _ = self.w.flush();
+        let _ = self.w.get_ref().shutdown(Shutdown::Write);
+    }
+}

@@ -1,0 +1,496 @@
+//! Network ingress: a wire-framed TCP front over the serving fleet.
+//!
+//! This is the boundary that turns the in-process [`ConvService`] /
+//! [`ModelServer`] fleets into a *server*: external clients speak the
+//! length-prefixed binary protocol documented in [`wire`] (frame layout,
+//! opcodes, status codes, version byte, epoch semantics) over plain TCP,
+//! and the ingress translates frames into the existing `(kind, bucket)`
+//! admission without any new dependencies — std sockets and threads only.
+//!
+//! ## Architecture
+//!
+//! ```text
+//! accept thread ── bounded pool ──► per-connection reader ──► fleet admission
+//!                                        │ (decode, submit,        │
+//!                                        │  session ops)           │ Receiver<FleetReply>
+//!                                        ▼                         ▼
+//!                                  FIFO pending queue ──► per-connection writer
+//!                                                          (epoch watermark,
+//!                                                           encode, write)
+//! ```
+//!
+//! * **Acceptor + bounded pool.** One accept loop; each accepted
+//!   connection gets a reader thread and a writer thread. Connections
+//!   beyond [`IngressConfig::max_connections`] are shed with a `busy`
+//!   frame (request id 0) and closed — the same retryable status the
+//!   fleet uses, so clients need one backoff path.
+//! * **Load shed, never block.** `conv` / `lm_logits` frames go through
+//!   the fleet's non-blocking admission ([`FleetDispatcher::try_submit`]
+//!   semantics); `FleetError::Busy` becomes a retryable `busy` reply on
+//!   the wire instead of TCP backpressure, so a saturated fleet stays
+//!   observable from outside.
+//! * **FIFO replies.** Replies are delivered in request order per
+//!   connection (a pending queue carries either resolved replies or
+//!   fleet receivers; the writer resolves them in order). Pipelining is
+//!   therefore safe, and the per-connection **epoch watermark** is
+//!   well-defined: the writer delivers every `ok` with
+//!   `max(watermark, served_epoch)` and ratchets the watermark, so a
+//!   client never observes filter epoch `e` and then `e - 1`
+//!   (see [`wire`] for the full two-phase-swap contract).
+//! * **Session hygiene.** Decode sessions opened on a connection are
+//!   tracked by the reader and best-effort closed on connection teardown
+//!   (client disconnect, shed, or server shutdown), so a vanished client
+//!   cannot strand slots in the engine's capped session map.
+//!
+//! The ingress is profile-agnostic at bind time: pass the conv service,
+//! the model server, or both; frames addressing an unbound service get a
+//! `bad_request` reply.
+
+pub mod client;
+pub mod wire;
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::fleet::{FleetError, FleetReply};
+use crate::coordinator::router::ConvKind;
+use crate::coordinator::service::{ConvRequest, ConvService};
+use crate::server::{InferRequest, ModelRequest, ModelServer};
+use wire::{Reply, Request};
+
+/// Ingress tuning knobs.
+#[derive(Debug, Clone)]
+pub struct IngressConfig {
+    /// Concurrent connection cap; connections beyond it are shed with a
+    /// `busy` frame and closed.
+    pub max_connections: usize,
+}
+
+impl Default for IngressConfig {
+    fn default() -> Self {
+        Self { max_connections: 64 }
+    }
+}
+
+/// Live ingress counters (lock-free reads from any thread).
+#[derive(Debug, Default)]
+pub struct IngressStats {
+    /// Connections accepted into the pool.
+    pub accepted: AtomicU64,
+    /// Connections shed at the pool cap.
+    pub shed: AtomicU64,
+    /// Request frames decoded.
+    pub frames_in: AtomicU64,
+    /// Reply frames written.
+    pub replies_out: AtomicU64,
+    /// `busy` replies sent (admission shed + pool shed).
+    pub busy_replies: AtomicU64,
+    /// Frames rejected with `bad_request`.
+    pub bad_frames: AtomicU64,
+    /// Decode sessions closed because their connection went away.
+    pub sessions_reaped: AtomicU64,
+}
+
+/// One entry in a connection's FIFO reply queue.
+enum Pending {
+    /// Already resolved by the reader (session ops, control ops, shed).
+    Now { id: u64, reply: Reply },
+    /// In flight in the fleet; the writer resolves it in FIFO position.
+    Wait { id: u64, rx: Receiver<FleetReply> },
+    /// Reader is done; the writer drains and exits.
+    Done,
+}
+
+/// FIFO queue between a connection's reader and writer threads.
+#[derive(Default)]
+struct PendingQueue {
+    q: Mutex<std::collections::VecDeque<Pending>>,
+    cv: Condvar,
+}
+
+impl PendingQueue {
+    fn push(&self, p: Pending) {
+        self.q.lock().unwrap().push_back(p);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> Pending {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(p) = q.pop_front() {
+                return p;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+}
+
+struct Inner {
+    conv: Option<Arc<ConvService>>,
+    model: Option<Arc<ModelServer>>,
+    cfg: IngressConfig,
+    stats: IngressStats,
+    shutdown: AtomicBool,
+    /// Read-half registry so shutdown can unblock parked readers.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    conn_handles: Mutex<Vec<JoinHandle<()>>>,
+    next_conn: AtomicU64,
+}
+
+/// The TCP front. Bind it over a [`ConvService`], a [`ModelServer`], or
+/// both; drop it to stop accepting, unblock every connection, and join
+/// all worker threads.
+pub struct IngressServer {
+    inner: Arc<Inner>,
+    local_addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl IngressServer {
+    /// Bind `addr` (use port 0 for an ephemeral loopback port) and start
+    /// accepting. At least one of `conv` / `model` should be provided —
+    /// frames for an absent service are rejected with `bad_request`.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        conv: Option<Arc<ConvService>>,
+        model: Option<Arc<ModelServer>>,
+        cfg: IngressConfig,
+    ) -> crate::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let inner = Arc::new(Inner {
+            conv,
+            model,
+            cfg,
+            stats: IngressStats::default(),
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(HashMap::new()),
+            conn_handles: Mutex::new(Vec::new()),
+            next_conn: AtomicU64::new(0),
+        });
+        let acc_inner = Arc::clone(&inner);
+        let acceptor = std::thread::Builder::new()
+            .name("ingress-accept".into())
+            .spawn(move || accept_loop(listener, acc_inner))?;
+        Ok(Self { inner, local_addr, acceptor: Some(acceptor) })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Live ingress counters.
+    pub fn stats(&self) -> &IngressStats {
+        &self.inner.stats
+    }
+}
+
+impl Drop for IngressServer {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the acceptor with a throwaway connection, then every
+        // parked reader by shutting its socket down.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for (_, s) in self.inner.conns.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let handles = std::mem::take(&mut *self.inner.conn_handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<Inner>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // Shed over-cap connections with a retryable busy frame.
+        if inner.conns.lock().unwrap().len() >= inner.cfg.max_connections {
+            inner.stats.shed.fetch_add(1, Ordering::Relaxed);
+            inner.stats.busy_replies.fetch_add(1, Ordering::Relaxed);
+            let mut s = stream;
+            let _ = s.write_all(&wire::encode_reply(0, &Reply::Busy));
+            let _ = s.flush();
+            let _ = s.shutdown(Shutdown::Both);
+            continue;
+        }
+        inner.stats.accepted.fetch_add(1, Ordering::Relaxed);
+        let conn_id = inner.next_conn.fetch_add(1, Ordering::Relaxed);
+        let registered = match stream.try_clone() {
+            Ok(clone) => {
+                inner.conns.lock().unwrap().insert(conn_id, clone);
+                true
+            }
+            Err(_) => false,
+        };
+        if !registered {
+            let _ = stream.shutdown(Shutdown::Both);
+            continue;
+        }
+        let conn_inner = Arc::clone(&inner);
+        let handle = std::thread::Builder::new()
+            .name(format!("ingress-conn-{conn_id}"))
+            .spawn(move || {
+                run_connection(conn_id, stream, &conn_inner);
+                conn_inner.conns.lock().unwrap().remove(&conn_id);
+            });
+        match handle {
+            Ok(h) => inner.conn_handles.lock().unwrap().push(h),
+            Err(_) => {
+                inner.conns.lock().unwrap().remove(&conn_id);
+            }
+        }
+    }
+}
+
+/// Reader side of one connection: decode frames, drive the fleet, track
+/// sessions, and feed the FIFO reply queue. Joins the writer, then reaps
+/// any sessions the client left open.
+fn run_connection(conn_id: u64, stream: TcpStream, inner: &Arc<Inner>) {
+    let queue = Arc::new(PendingQueue::default());
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let w_queue = Arc::clone(&queue);
+    let w_inner = Arc::clone(inner);
+    let read_half = stream.try_clone().ok();
+    let writer = std::thread::Builder::new()
+        .name(format!("ingress-write-{conn_id}"))
+        .spawn(move || {
+            write_loop(write_half, &w_queue, &w_inner, read_half);
+        });
+    let writer = match writer {
+        Ok(h) => h,
+        Err(_) => return,
+    };
+
+    // Wire session id -> owning shard, for step/close routing and
+    // teardown reaping.
+    let mut sessions: HashMap<u64, usize> = HashMap::new();
+    let mut reader = BufReader::new(stream);
+
+    loop {
+        let body = match wire::read_frame(&mut reader) {
+            Ok(Some(b)) => b,
+            // Clean EOF, torn frame, or a shutdown kick: stop reading.
+            Ok(None) | Err(_) => break,
+        };
+        inner.stats.frames_in.fetch_add(1, Ordering::Relaxed);
+        match wire::decode_request(&body) {
+            Ok((id, req)) => handle_request(id, req, inner, &mut sessions, &queue),
+            Err(e) => {
+                // Best-effort request-id recovery so the client can
+                // correlate the rejection (the id sits after version +
+                // code whenever that much of the header parsed).
+                let id = if body.len() >= wire::MIN_FRAME {
+                    u64::from_le_bytes(body[2..10].try_into().unwrap())
+                } else {
+                    0
+                };
+                inner.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+                queue.push(Pending::Now { id, reply: Reply::BadRequest { msg: e.to_string() } });
+            }
+        }
+    }
+
+    queue.push(Pending::Done);
+    let _ = writer.join();
+
+    // Satellite of the session-slot leak fix: a client that vanished
+    // mid-decode must not strand engine slots.
+    if let Some(model) = &inner.model {
+        for (id, shard) in sessions {
+            model.session_close_raw(shard, id);
+            inner.stats.sessions_reaped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn conv_kind(tag: u8) -> ConvKind {
+    match tag {
+        0 => ConvKind::Forward,
+        1 => ConvKind::Gated,
+        _ => ConvKind::Causal,
+    }
+}
+
+/// Dispatch one decoded request. Fleet-bound work (`conv`, `lm_logits`)
+/// is submitted non-blocking and parked as a `Wait`; session and control
+/// ops resolve synchronously (FIFO order holds either way).
+fn handle_request(
+    id: u64,
+    req: Request,
+    inner: &Arc<Inner>,
+    sessions: &mut HashMap<u64, usize>,
+    queue: &Arc<PendingQueue>,
+) {
+    let reply = match req {
+        Request::Conv { kind, len, streams } => {
+            let Some(conv) = &inner.conv else {
+                queue.push(no_service(id, "no conv service bound", &inner.stats));
+                return;
+            };
+            let req = ConvRequest { kind: conv_kind(kind), len: len as usize, streams };
+            match conv.fleet().submit(req) {
+                Ok(rx) => {
+                    queue.push(Pending::Wait { id, rx });
+                    return;
+                }
+                Err(e) => fleet_reply(e, &inner.stats),
+            }
+        }
+        Request::LmLogits { tokens } => {
+            let Some(model) = &inner.model else {
+                queue.push(no_service(id, "no model server bound", &inner.stats));
+                return;
+            };
+            match model.fleet().submit(ModelRequest::Infer(InferRequest { tokens })) {
+                Ok(rx) => {
+                    queue.push(Pending::Wait { id, rx });
+                    return;
+                }
+                Err(e) => fleet_reply(e, &inner.stats),
+            }
+        }
+        Request::OpenSession { prompt } => {
+            let Some(model) = &inner.model else {
+                queue.push(no_service(id, "no model server bound", &inner.stats));
+                return;
+            };
+            match model.session_open_raw(&prompt) {
+                Ok((sid, shard, ok)) => {
+                    sessions.insert(sid, shard);
+                    Reply::Ok { epoch: ok.epoch, session: Some(sid), data: ok.data }
+                }
+                Err(e) => fleet_reply(e, &inner.stats),
+            }
+        }
+        Request::Step { session, token } => {
+            let Some(model) = &inner.model else {
+                queue.push(no_service(id, "no model server bound", &inner.stats));
+                return;
+            };
+            match sessions.get(&session) {
+                None => Reply::SessionLost,
+                Some(&shard) => match model.session_step_raw(shard, session, token) {
+                    Ok(ok) => Reply::Ok { epoch: ok.epoch, session: None, data: ok.data },
+                    Err(e) => {
+                        // A lost session will never come back; forget it
+                        // so teardown doesn't re-close.
+                        if matches!(e, FleetError::SessionLost) {
+                            sessions.remove(&session);
+                        }
+                        fleet_reply(e, &inner.stats)
+                    }
+                },
+            }
+        }
+        Request::CloseSession { session } => {
+            let Some(model) = &inner.model else {
+                queue.push(no_service(id, "no model server bound", &inner.stats));
+                return;
+            };
+            match sessions.remove(&session) {
+                None => Reply::SessionLost,
+                Some(shard) => {
+                    model.session_close_raw(shard, session);
+                    // Epoch 0 ratchets up to the connection watermark.
+                    Reply::Ok { epoch: 0, session: None, data: Vec::new() }
+                }
+            }
+        }
+        Request::InstallFilter { kind, bucket, taps } => {
+            let Some(conv) = &inner.conv else {
+                queue.push(no_service(id, "no conv service bound", &inner.stats));
+                return;
+            };
+            match conv.set_filter(conv_kind(kind), bucket as usize, taps) {
+                Ok(epoch) => Reply::Ok { epoch, session: None, data: Vec::new() },
+                Err(e) => Reply::Failed { msg: e.to_string() },
+            }
+        }
+    };
+    queue.push(Pending::Now { id, reply });
+}
+
+fn no_service(id: u64, msg: &str, stats: &IngressStats) -> Pending {
+    stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+    Pending::Now { id, reply: Reply::BadRequest { msg: msg.into() } }
+}
+
+fn fleet_reply(e: FleetError, stats: &IngressStats) -> Reply {
+    if matches!(e, FleetError::Busy) {
+        stats.busy_replies.fetch_add(1, Ordering::Relaxed);
+    }
+    Reply::from_fleet_error(e)
+}
+
+/// Writer side of one connection: resolve the FIFO queue in order,
+/// ratchet the served-epoch watermark, encode, write. On a write failure
+/// it kicks the read half so the reader unparks and tears down.
+fn write_loop(
+    stream: TcpStream,
+    queue: &PendingQueue,
+    inner: &Inner,
+    read_half: Option<TcpStream>,
+) {
+    let mut w = BufWriter::new(stream);
+    // Per-connection epoch watermark: max served epoch delivered so far.
+    // Monotonic delivery is what lets clients treat the epoch as "config
+    // at least this new" (wire.rs, "Epoch semantics").
+    let mut watermark: u64 = 0;
+    let mut broken = false;
+    loop {
+        let (id, mut reply) = match queue.pop() {
+            Pending::Done => break,
+            Pending::Now { id, reply } => (id, reply),
+            Pending::Wait { id, rx } => {
+                let reply = match rx.recv() {
+                    Ok(Ok(ok)) => Reply::Ok { epoch: ok.epoch, session: None, data: ok.data },
+                    Ok(Err(e)) => fleet_reply(e, &inner.stats),
+                    // The reply slot guarantees delivery; a torn channel
+                    // means the worker died with the slot.
+                    Err(_) => Reply::ShardDied,
+                };
+                (id, reply)
+            }
+        };
+        if broken {
+            continue; // keep draining so the reader's Done arrives
+        }
+        if let Reply::Ok { epoch, .. } = &mut reply {
+            watermark = watermark.max(*epoch);
+            *epoch = watermark;
+        }
+        let frame = wire::encode_reply(id, &reply);
+        if w.write_all(&frame).and_then(|_| w.flush()).is_err() {
+            broken = true;
+            if let Some(r) = &read_half {
+                let _ = r.shutdown(Shutdown::Both);
+            }
+            continue;
+        }
+        inner.stats.replies_out.fetch_add(1, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,524 @@
+//! The ingress wire format: length-prefixed binary frames over TCP.
+//!
+//! Everything is little-endian. One frame per request or reply:
+//!
+//! ```text
+//! [u32 frame_len]   length of everything after this field
+//! [u8  version]     protocol version, currently 1 (WIRE_VERSION)
+//! [u8  code]        request opcode or reply status (below)
+//! [u64 request_id]  client-chosen, echoed verbatim in the reply
+//! [payload...]      opcode/status-specific body
+//! ```
+//!
+//! `frame_len` is capped at [`MAX_FRAME`] (64 MiB) and is validated
+//! *before* any allocation; a frame that claims more is rejected without
+//! reading it. Decoding never panics: every malformed input maps to a
+//! typed [`WireError`].
+//!
+//! ## Request opcodes (client → server)
+//!
+//! | op  | name            | payload |
+//! |-----|-----------------|---------|
+//! | 1   | `conv`          | `[u8 kind][u32 len][u8 n_streams]` then per stream `[u32 count][count × f32]` |
+//! | 2   | `lm_logits`     | `[u32 count][count × i32]` (exactly the server's context length) |
+//! | 3   | `open_session`  | `[u32 count][count × i32]` prompt |
+//! | 4   | `step`          | `[u64 session_id][i32 token]` |
+//! | 5   | `close_session` | `[u64 session_id]` |
+//! | 6   | `install_filter`| `[u8 kind][u32 bucket][u32 count][count × f32]` |
+//!
+//! Conv `kind`: 0 = forward (circular), 1 = gated (3 streams: u, v, w),
+//! 2 = causal.
+//!
+//! ## Reply statuses (server → client)
+//!
+//! | st  | name          | payload | retryable |
+//! |-----|---------------|---------|-----------|
+//! | 0   | `ok`          | `[u64 epoch][u8 has_session][u64 session_id?][u32 count][count × f32]` | — |
+//! | 1   | `busy`        | none    | yes (load shed: back off and resubmit) |
+//! | 2   | `shard_died`  | none    | yes (the worker died mid-request; it respawns) |
+//! | 3   | `failed`      | `[u32 len][utf-8 message]` | no |
+//! | 4   | `session_lost`| none    | no as-is (re-open the session) |
+//! | 5   | `shutdown`    | none    | no |
+//! | 6   | `bad_request` | `[u32 len][utf-8 message]` | no (the frame decoded but was semantically invalid, or did not decode) |
+//!
+//! ## Version negotiation
+//!
+//! Every frame carries the version byte; the server rejects any frame
+//! whose version it does not speak with `bad_request` naming the
+//! supported version, and the client surfaces [`WireError::BadVersion`].
+//! There is no handshake round-trip — version 1 clients simply never see
+//! anything but version 1 replies.
+//!
+//! ## Epoch semantics
+//!
+//! `ok` replies carry the **filter epoch**
+//! ([`crate::coordinator::fleet::FleetOk::epoch`]) as a per-connection
+//! *watermark*: the maximum config epoch any reply delivered on the
+//! connection so far was served under. Config swaps
+//! (`install_filter`) are two-phase fleet-wide
+//! ([`crate::coordinator::fleet::FleetDispatcher::control`]), which
+//! gives a client two guarantees: the epoch it observes never goes
+//! backwards, and once it has observed epoch `e`, every request it
+//! submits afterwards is served under a config at least as new as `e`
+//! (the flip happened before `e` was ever reported, so no later batch
+//! anywhere in the fleet can read an older epoch). The `install_filter`
+//! ack's epoch field is the epoch the install became visible at.
+
+use crate::coordinator::fleet::FleetError;
+
+/// The protocol version this build speaks.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Hard cap on `frame_len` (bytes after the length prefix), enforced
+/// before any allocation: 64 MiB comfortably holds the largest bucket's
+/// gated conv request (3 streams) while bounding a malicious or corrupt
+/// length word.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Smallest valid `frame_len`: version + code + request id.
+pub const MIN_FRAME: usize = 1 + 1 + 8;
+
+/// Typed decode failures. Framing errors (`Truncated` / `Oversized` /
+/// `BadVersion`) mean the byte stream is unusable and the connection
+/// should close; the rest poison only the offending frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The frame ended before its payload did.
+    Truncated,
+    /// `frame_len` exceeded [`MAX_FRAME`] (or undercut [`MIN_FRAME`]).
+    Oversized(usize),
+    /// Unknown protocol version byte.
+    BadVersion(u8),
+    /// Unknown request opcode.
+    BadOpcode(u8),
+    /// Unknown reply status byte.
+    BadStatus(u8),
+    /// Structurally invalid payload (wrong kind tag, trailing bytes,
+    /// non-UTF-8 message, ...).
+    BadPayload(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "frame truncated"),
+            WireError::Oversized(n) => {
+                write!(f, "frame length {n} outside [{MIN_FRAME}, {MAX_FRAME}]")
+            }
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported wire version {v} (this build speaks {WIRE_VERSION})")
+            }
+            WireError::BadOpcode(op) => write!(f, "unknown request opcode {op}"),
+            WireError::BadStatus(st) => write!(f, "unknown reply status {st}"),
+            WireError::BadPayload(what) => write!(f, "bad frame payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One decoded client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// A convolution row for the conv fleet (`kind` as in the table
+    /// above; gated requests carry 3 streams, others 1).
+    Conv { kind: u8, len: u32, streams: Vec<Vec<f32>> },
+    /// Full-context LM forward; replies with last-position logits.
+    LmLogits { tokens: Vec<i32> },
+    /// Open an incremental-decode session over a full-context prompt.
+    OpenSession { prompt: Vec<i32> },
+    /// Advance an open session by one token.
+    Step { session: u64, token: i32 },
+    /// Free a session's worker-side state.
+    CloseSession { session: u64 },
+    /// Two-phase filter install on the conv fleet (the ack's epoch is
+    /// the version the swap became visible at).
+    InstallFilter { kind: u8, bucket: u32, taps: Vec<f32> },
+}
+
+/// One decoded server reply.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    /// Success: the data row (logits / convolved row / empty for closes
+    /// and filter acks), the connection's epoch watermark, and — for
+    /// `open_session` only — the new session id.
+    Ok { epoch: u64, session: Option<u64>, data: Vec<f32> },
+    /// Admission rejected (load shed). Retryable: back off, resubmit.
+    Busy,
+    /// The owning worker died mid-request. Retryable.
+    ShardDied,
+    /// The request executed and failed, or was rejected by the worker.
+    Failed { msg: String },
+    /// The session's state is gone (worker respawn or prior close).
+    SessionLost,
+    /// The fleet is shutting down.
+    Shutdown,
+    /// The frame did not decode, or decoded into something the server
+    /// cannot route.
+    BadRequest { msg: String },
+}
+
+impl Reply {
+    /// Whether the client may expect the same request to succeed later
+    /// (mirrors [`FleetError::retryable`]).
+    pub fn retryable(&self) -> bool {
+        matches!(self, Reply::Busy | Reply::ShardDied)
+    }
+
+    /// Map a fleet-level failure to its wire status.
+    pub fn from_fleet_error(e: FleetError) -> Self {
+        match e {
+            FleetError::Busy => Reply::Busy,
+            FleetError::ShardDied => Reply::ShardDied,
+            FleetError::Failed(msg) => Reply::Failed { msg },
+            FleetError::SessionLost => Reply::SessionLost,
+            FleetError::Shutdown => Reply::Shutdown,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+struct FrameBuf {
+    buf: Vec<u8>,
+}
+
+impl FrameBuf {
+    /// Start a frame: length placeholder + version + code + request id.
+    fn new(code: u8, request_id: u64) -> Self {
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.push(WIRE_VERSION);
+        buf.push(code);
+        buf.extend_from_slice(&request_id.to_le_bytes());
+        Self { buf }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn i32s(&mut self, vs: &[i32]) {
+        self.u32(vs.len() as u32);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn f32s(&mut self, vs: &[f32]) {
+        self.u32(vs.len() as u32);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Backpatch the length prefix and return the finished frame.
+    fn finish(mut self) -> Vec<u8> {
+        let len = (self.buf.len() - 4) as u32;
+        self.buf[..4].copy_from_slice(&len.to_le_bytes());
+        self.buf
+    }
+}
+
+/// Encode a request into a complete wire frame (length prefix included).
+pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
+    match req {
+        Request::Conv { kind, len, streams } => {
+            let mut f = FrameBuf::new(1, request_id);
+            f.u8(*kind);
+            f.u32(*len);
+            f.u8(streams.len() as u8);
+            for s in streams {
+                f.f32s(s);
+            }
+            f.finish()
+        }
+        Request::LmLogits { tokens } => {
+            let mut f = FrameBuf::new(2, request_id);
+            f.i32s(tokens);
+            f.finish()
+        }
+        Request::OpenSession { prompt } => {
+            let mut f = FrameBuf::new(3, request_id);
+            f.i32s(prompt);
+            f.finish()
+        }
+        Request::Step { session, token } => {
+            let mut f = FrameBuf::new(4, request_id);
+            f.u64(*session);
+            f.buf.extend_from_slice(&token.to_le_bytes());
+            f.finish()
+        }
+        Request::CloseSession { session } => {
+            let mut f = FrameBuf::new(5, request_id);
+            f.u64(*session);
+            f.finish()
+        }
+        Request::InstallFilter { kind, bucket, taps } => {
+            let mut f = FrameBuf::new(6, request_id);
+            f.u8(*kind);
+            f.u32(*bucket);
+            f.f32s(taps);
+            f.finish()
+        }
+    }
+}
+
+/// Encode a reply into a complete wire frame (length prefix included).
+pub fn encode_reply(request_id: u64, reply: &Reply) -> Vec<u8> {
+    match reply {
+        Reply::Ok { epoch, session, data } => {
+            let mut f = FrameBuf::new(0, request_id);
+            f.u64(*epoch);
+            match session {
+                Some(id) => {
+                    f.u8(1);
+                    f.u64(*id);
+                }
+                None => f.u8(0),
+            }
+            f.f32s(data);
+            f.finish()
+        }
+        Reply::Busy => FrameBuf::new(1, request_id).finish(),
+        Reply::ShardDied => FrameBuf::new(2, request_id).finish(),
+        Reply::Failed { msg } => {
+            let mut f = FrameBuf::new(3, request_id);
+            f.str(msg);
+            f.finish()
+        }
+        Reply::SessionLost => FrameBuf::new(4, request_id).finish(),
+        Reply::Shutdown => FrameBuf::new(5, request_id).finish(),
+        Reply::BadRequest { msg } => {
+            let mut f = FrameBuf::new(6, request_id);
+            f.str(msg);
+            f.finish()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, p: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.p
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, WireError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `[u32 count]` that prefixes `count` 4-byte items: checked
+    /// against the remaining bytes *before* any allocation, so a corrupt
+    /// count can never trigger a huge reserve.
+    fn counted(&mut self) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        if n.checked_mul(4).map_or(true, |bytes| bytes > self.remaining()) {
+            return Err(WireError::Truncated);
+        }
+        Ok(n)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.counted()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    fn i32s(&mut self) -> Result<Vec<i32>, WireError> {
+        let n = self.counted()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.i32()?);
+        }
+        Ok(out)
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadPayload("non-utf8 message"))
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::BadPayload("trailing bytes"));
+        }
+        Ok(())
+    }
+}
+
+/// Validate a raw `frame_len` word (the 4 bytes before the body)
+/// against the protocol bounds.
+pub fn check_frame_len(len: usize) -> Result<usize, WireError> {
+    if !(MIN_FRAME..=MAX_FRAME).contains(&len) {
+        return Err(WireError::Oversized(len));
+    }
+    Ok(len)
+}
+
+/// Shared header decode: version + code + request id.
+fn header(cur: &mut Cursor<'_>) -> Result<(u8, u64), WireError> {
+    if cur.b.len() < MIN_FRAME {
+        return Err(WireError::Truncated);
+    }
+    let version = cur.u8()?;
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let code = cur.u8()?;
+    let request_id = cur.u64()?;
+    Ok((code, request_id))
+}
+
+/// Decode a request frame body (everything after the length prefix).
+pub fn decode_request(body: &[u8]) -> Result<(u64, Request), WireError> {
+    let mut cur = Cursor::new(body);
+    let (code, request_id) = header(&mut cur)?;
+    let req = match code {
+        1 => {
+            let kind = cur.u8()?;
+            if kind > 2 {
+                return Err(WireError::BadPayload("conv kind must be 0, 1, or 2"));
+            }
+            let len = cur.u32()?;
+            let n_streams = cur.u8()? as usize;
+            let expect = if kind == 1 { 3 } else { 1 };
+            if n_streams != expect {
+                return Err(WireError::BadPayload("wrong stream count for conv kind"));
+            }
+            let mut streams = Vec::with_capacity(n_streams);
+            for _ in 0..n_streams {
+                streams.push(cur.f32s()?);
+            }
+            Request::Conv { kind, len, streams }
+        }
+        2 => Request::LmLogits { tokens: cur.i32s()? },
+        3 => Request::OpenSession { prompt: cur.i32s()? },
+        4 => Request::Step { session: cur.u64()?, token: cur.i32()? },
+        5 => Request::CloseSession { session: cur.u64()? },
+        6 => {
+            let kind = cur.u8()?;
+            if kind > 2 {
+                return Err(WireError::BadPayload("conv kind must be 0, 1, or 2"));
+            }
+            Request::InstallFilter { kind, bucket: cur.u32()?, taps: cur.f32s()? }
+        }
+        op => return Err(WireError::BadOpcode(op)),
+    };
+    cur.done()?;
+    Ok((request_id, req))
+}
+
+/// Decode a reply frame body (everything after the length prefix).
+pub fn decode_reply(body: &[u8]) -> Result<(u64, Reply), WireError> {
+    let mut cur = Cursor::new(body);
+    let (status, request_id) = header(&mut cur)?;
+    let reply = match status {
+        0 => {
+            let epoch = cur.u64()?;
+            let session = match cur.u8()? {
+                0 => None,
+                1 => Some(cur.u64()?),
+                _ => return Err(WireError::BadPayload("session flag must be 0 or 1")),
+            };
+            Reply::Ok { epoch, session, data: cur.f32s()? }
+        }
+        1 => Reply::Busy,
+        2 => Reply::ShardDied,
+        3 => Reply::Failed { msg: cur.str()? },
+        4 => Reply::SessionLost,
+        5 => Reply::Shutdown,
+        6 => Reply::BadRequest { msg: cur.str()? },
+        st => return Err(WireError::BadStatus(st)),
+    };
+    cur.done()?;
+    Ok((request_id, reply))
+}
+
+// ---------------------------------------------------------------------------
+// Stream I/O
+// ---------------------------------------------------------------------------
+
+/// Read one frame body from a byte stream (blocking). Returns the bytes
+/// after the length prefix; the length word is bounds-checked before the
+/// body is allocated or read. An EOF cleanly *between* frames returns
+/// `Ok(None)`; anything else surfaces as the underlying I/O error (bad
+/// lengths become `InvalidData` carrying a [`WireError`]).
+pub fn read_frame(r: &mut impl std::io::Read) -> std::io::Result<Option<Vec<u8>>> {
+    let mut lenb = [0u8; 4];
+    // Manual first-byte read to distinguish clean EOF from mid-frame EOF.
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut lenb[got..])? {
+            0 if got == 0 => return Ok(None),
+            0 => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    WireError::Truncated,
+                ))
+            }
+            n => got += n,
+        }
+    }
+    let len = check_frame_len(u32::from_le_bytes(lenb) as usize)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+/// Write one already-encoded frame to a byte stream.
+pub fn write_frame(w: &mut impl std::io::Write, frame: &[u8]) -> std::io::Result<()> {
+    w.write_all(frame)
+}

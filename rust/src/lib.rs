@@ -41,6 +41,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod costmodel;
 pub mod fft;
+pub mod ingress;
 pub mod prop;
 pub mod runtime;
 pub mod server;

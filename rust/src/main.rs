@@ -10,7 +10,8 @@
 //! flashfftconv eval-sparse                   # Table 9 quality column
 //! flashfftconv extend       [--total-len N]  # Table 8 sliding-window
 //! flashfftconv serve        [--requests N] [--shards S] [--max-inflight M]
-//!                                            # serving-fleet smoke + stats
+//!                           [--listen ADDR] # serving-fleet smoke + stats;
+//!                                            # --listen puts it behind the TCP ingress
 //! flashfftconv pathfinder   [--steps N]      # Table 2 train + accuracy
 //! flashfftconv costmodel    [--hw a100]      # Figure 4 series (CSV)
 //! ```
@@ -324,7 +325,10 @@ fn cmd_extend(dir: &str, args: &Args) -> flashfftconv::Result<()> {
 }
 
 /// Serving-path smoke: submit random conv requests through the fleet
-/// dispatcher (1 shard by default), print the fleet statistics.
+/// dispatcher (1 shard by default), print the fleet statistics. With
+/// `--listen ADDR` the fleet goes behind the TCP ingress: requests run
+/// over loopback through the wire protocol (`--requests 0` skips the
+/// smoke and serves until killed).
 fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
     let requests = args.get_usize("requests", 32)?;
     let len = args.get_usize("len", 1024)?;
@@ -332,6 +336,7 @@ fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
     let wait_ms = args.get_usize("max-wait-ms", 5)?;
     let shards = args.get_usize("shards", 1)?;
     let max_inflight = args.get_usize("max-inflight", 256)?;
+    let listen = args.opt("listen");
     args.finish()?;
     let policy = BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(wait_ms as u64) };
     let service = ConvService::start_sharded(
@@ -341,6 +346,9 @@ fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
         shards,
         max_inflight,
     )?;
+    if let Some(addr) = listen {
+        return cmd_serve_listen(service, &addr, requests, len);
+    }
     let mut rng = Rng::new(1);
     let heads = 16usize;
     let mut pending = vec![];
@@ -369,6 +377,55 @@ fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
     for s in &f.shards {
         println!("  {}", s.summary());
     }
+    Ok(())
+}
+
+/// `serve --listen ADDR`: expose the conv fleet over the TCP ingress.
+/// `--requests N` (N > 0) runs a self-driving loopback smoke through a
+/// real wire client and exits; `--requests 0` serves until killed.
+fn cmd_serve_listen(
+    service: ConvService,
+    addr: &str,
+    requests: usize,
+    len: usize,
+) -> flashfftconv::Result<()> {
+    use flashfftconv::ingress::client::IngressClient;
+    use flashfftconv::ingress::wire::{Reply, Request};
+    use flashfftconv::ingress::{IngressConfig, IngressServer};
+
+    let service = std::sync::Arc::new(service);
+    let server =
+        IngressServer::bind(addr, Some(std::sync::Arc::clone(&service)), None, IngressConfig::default())?;
+    println!("ingress listening on {} (wire v1)", server.local_addr());
+    if requests == 0 {
+        // Serve until the process is killed.
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    let heads = 16usize;
+    let mut rng = Rng::new(1);
+    let mut client = IngressClient::connect(server.local_addr())?;
+    let mut ok = 0usize;
+    for _ in 0..requests {
+        let u = rng.normal_vec(heads * len);
+        let req = Request::Conv { kind: 0, len: len as u32, streams: vec![u] };
+        match client.call_retry(&req, 64, Duration::from_millis(1))? {
+            Reply::Ok { .. } => ok += 1,
+            other => flashfftconv::bail!("ingress smoke request failed: {other:?}"),
+        }
+    }
+    let f = service.fleet().stats();
+    let s = server.stats();
+    println!(
+        "ingress served {ok}/{requests} rows over loopback  frames-in {}  replies {}  busy {}  \
+         epoch {}",
+        s.frames_in.load(std::sync::atomic::Ordering::Relaxed),
+        s.replies_out.load(std::sync::atomic::Ordering::Relaxed),
+        s.busy_replies.load(std::sync::atomic::Ordering::Relaxed),
+        f.filter_epoch,
+    );
+    println!("fleet: {}", f.summary());
     Ok(())
 }
 

@@ -44,6 +44,20 @@
 //! replays its prompt. [`DecodeSession::close`] (or dropping the
 //! handle) frees the worker-side state; a close for an already-lost
 //! session is a harmless no-op.
+//!
+//! ## Network path
+//!
+//! In-process callers hold [`ModelServer`] / [`DecodeSession`]
+//! directly; over the network the [`crate::ingress`] TCP front drives
+//! the same admission path through the handle-free session API
+//! ([`ModelServer::session_open_raw`] /
+//! [`ModelServer::session_step_raw`] /
+//! [`ModelServer::session_close_raw`]). The ingress tracks the sessions
+//! each connection opened and closes them on connection teardown, so a
+//! disconnecting client can never strand a slot in the capped
+//! per-engine session map. Wire framing, status codes, and the filter
+//! epoch carried on every reply are documented in
+//! [`crate::ingress::wire`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
@@ -54,8 +68,8 @@ use crate::{bail, format_err};
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::fleet::{
-    FleetConfig, FleetDispatcher, FleetError, FleetReply, ReplySlot, RoutePlan, ShardMsg,
-    ShardProfile,
+    FleetConfig, FleetDispatcher, FleetError, FleetOk, FleetReply, ReplySlot, RoutePlan, ShardCtx,
+    ShardMsg, ShardProfile,
 };
 use crate::coordinator::service::ServiceStats;
 use crate::runtime::{Artifact, BackendConfig, HostTensor};
@@ -191,8 +205,12 @@ impl ShardProfile for ModelProfile {
         backend: &BackendConfig,
         policy: &BatchPolicy,
         stats: &Arc<ServiceStats>,
+        _ctx: ShardCtx,
         rx: Receiver<ShardMsg<Self>>,
     ) -> crate::Result<()> {
+        // No broadcast controls on model shards (`NoControl`), so the
+        // epoch context is unused: replies tag via the default
+        // `fulfill` path, which reads the shared epoch.
         let mut w = Worker::new(backend, &self.artifact, policy.clone(), Arc::clone(stats))?;
         w.run(rx);
         Ok(())
@@ -265,8 +283,23 @@ impl ModelServer {
     /// prompt's last-position logits. Retries placement a few times when
     /// a shard dies mid-open (see the module docs for the lifecycle).
     pub fn open_session(&self, prompt: &[i32]) -> crate::Result<(DecodeSession<'_>, Vec<f32>)> {
+        let (id, shard, ok) = self.session_open_raw(prompt).map_err(|e| format_err!(e))?;
+        Ok((DecodeSession { server: self, id, shard }, ok.data))
+    }
+
+    /// Handle-free session open (the network ingress path, which cannot
+    /// hold a borrowing [`DecodeSession`] across requests): returns the
+    /// server-unique session id, the shard the state is pinned to, and
+    /// the epoch-tagged prompt logits. Callers own the lifecycle — pair
+    /// with [`ModelServer::session_step_raw`] and (always, including on
+    /// client disconnect) [`ModelServer::session_close_raw`].
+    pub fn session_open_raw(&self, prompt: &[i32]) -> Result<(u64, usize, FleetOk), FleetError> {
         if prompt.len() != self.seq_len {
-            bail!("prompt length {} != server context {}", prompt.len(), self.seq_len);
+            return Err(FleetError::Failed(format!(
+                "prompt length {} != server context {}",
+                prompt.len(),
+                self.seq_len
+            )));
         }
         let mut last_err = None;
         for _ in 0..5 {
@@ -276,13 +309,33 @@ impl ModelServer {
             };
             let id = self.session_seq.fetch_add(1, Ordering::Relaxed);
             let op = SessionOp::Open { id, prompt: prompt.to_vec() };
-            match self.fleet.call(ModelRequest::Session { shard, op }) {
-                Ok(logits) => return Ok((DecodeSession { server: self, id, shard }, logits)),
+            match self.fleet.call_tagged(ModelRequest::Session { shard, op }) {
+                Ok(ok) => return Ok((id, shard, ok)),
                 Err(e) if e.retryable() => last_err = Some(e),
-                Err(e) => return Err(format_err!(e)),
+                Err(e) => return Err(e),
             }
         }
-        Err(format_err!(last_err.unwrap_or(FleetError::ShardDied)))
+        Err(last_err.unwrap_or(FleetError::ShardDied))
+    }
+
+    /// Advance a raw (handle-free) session by one token.
+    pub fn session_step_raw(&self, shard: usize, id: u64, token: i32) -> Result<FleetOk, FleetError> {
+        self.fleet.call_tagged(ModelRequest::Session { shard, op: SessionOp::Step { id, token } })
+    }
+
+    /// Best-effort close of a raw session: frees the worker-side state
+    /// slot (the per-engine session map is capped, so leaking closes
+    /// eventually starves opens). Retries briefly through `Busy`
+    /// admission pushback — a close dropped on the floor under load was
+    /// exactly the old slot-leak bug; a dead or respawned shard is fine
+    /// (the state died with the worker).
+    pub fn session_close_raw(&self, shard: usize, id: u64) {
+        for _ in 0..8 {
+            match self.fleet.submit(ModelRequest::Session { shard, op: SessionOp::Close { id } }) {
+                Err(FleetError::Busy) => std::thread::sleep(Duration::from_millis(1)),
+                _ => return,
+            }
+        }
     }
 
     /// Live statistics of shard 0 (the only shard for `start`); use
@@ -335,12 +388,10 @@ impl DecodeSession<'_> {
 
 impl Drop for DecodeSession<'_> {
     fn drop(&mut self) {
-        // Best-effort: a dead or respawned shard simply no longer holds
-        // the state, so a lost close is harmless.
-        let _ = self.server.fleet.submit(ModelRequest::Session {
-            shard: self.shard,
-            op: SessionOp::Close { id: self.id },
-        });
+        // A dropped handle must not strand its slot in the worker's
+        // capped session map (disconnecting clients drop handles all the
+        // time); the close retries briefly through Busy pushback.
+        self.server.session_close_raw(self.shard, self.id);
     }
 }
 
@@ -415,6 +466,7 @@ impl Worker {
                     ModelRequest::Session { op, .. } => self.session_op(op, reply, t_submit),
                 },
                 Ok(ShardMsg::Control { op, .. }) => match op {},
+                Ok(ShardMsg::Discard { .. }) => {}
                 Ok(ShardMsg::Poison) => {
                     panic!("model shard worker poisoned (failure-injection hook)");
                 }

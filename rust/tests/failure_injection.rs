@@ -280,8 +280,8 @@ fn shard_death_respawns_and_fails_fast() {
             .recv_timeout(Duration::from_secs(60))
             .expect("no hung clients: every in-flight request must get a reply")
         {
-            Ok(row) => {
-                assert!(!row.is_empty() && row.iter().all(|v| v.is_finite()));
+            Ok(reply) => {
+                assert!(!reply.data.is_empty() && reply.data.iter().all(|v| v.is_finite()));
                 ok += 1;
             }
             Err(FleetError::ShardDied) => died += 1,
@@ -322,6 +322,93 @@ fn shard_death_respawns_and_fails_fast() {
                 std::thread::sleep(Duration::from_millis(20));
             }
             Err(e) => panic!("unexpected error after respawn: {e}"),
+        }
+    }
+}
+
+#[test]
+fn control_ops_survive_poisoned_shard_and_converge_on_one_epoch() {
+    // Kill a shard and land a control op in the same breath: the op is
+    // logged under the senders lock, so the supervisor's respawn replays
+    // it onto the fresh worker and the whole fleet converges on one
+    // epoch — no shard may keep serving the pre-swap filter, and no
+    // reply may carry a pre-swap epoch after the flip.
+    use flashfftconv::coordinator::fleet::{FleetConfig, FleetDispatcher};
+    use flashfftconv::coordinator::service::{ConvControl, ConvRequest, ConvService};
+    use flashfftconv::coordinator::BatchPolicy;
+    use flashfftconv::util::Rng;
+    use std::time::{Duration, Instant};
+
+    const HEADS: usize = 16;
+    let policy = BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(1) };
+    let fleet = FleetDispatcher::conv(
+        BackendConfig::NativeRowThreads(1),
+        "monarch",
+        FleetConfig { shards: 2, max_inflight: 1024, policy: policy.clone() },
+    )
+    .expect("fleet starts");
+    let single =
+        ConvService::start(BackendConfig::Native, "monarch", policy).expect("reference starts");
+
+    let kind = ConvKind::Forward;
+    let mut rng = Rng::new(0xE04);
+    let k1 = rng.normal_vec(HEADS * 256);
+    let e1 = fleet
+        .control(ConvControl::SetFilter { kind, bucket: 256, k: k1 })
+        .expect("first install");
+    assert_eq!(e1, 1);
+
+    // Poison shard 0, then immediately broadcast the second install: the
+    // dying shard's ack channel tears mid-broadcast, yet the op must
+    // still become visible fleet-wide.
+    fleet.poison_shard(0);
+    let k2 = rng.normal_vec(HEADS * 256);
+    let e2 = fleet
+        .control(ConvControl::SetFilter { kind, bucket: 256, k: k2.clone() })
+        .expect("control must apply across a mid-broadcast shard death");
+    assert_eq!(e2, 2);
+    assert_eq!(fleet.filter_epoch(), 2);
+    single.set_filter(kind, 256, k2).expect("reference install");
+
+    // Wait for the supervisor to respawn the poisoned worker (the
+    // respawn replays the control log before the shard goes live).
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while fleet.stats().restarts == 0 {
+        assert!(Instant::now() < deadline, "supervisor never respawned the shard");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Concurrent bursts so both shards serve: every reply must carry the
+    // post-swap epoch and the k2 outputs — a respawned worker stuck on
+    // the pre-swap filter (or a reply tagged with a stale epoch) fails
+    // here.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut done = 0usize;
+    while done < 12 {
+        assert!(Instant::now() < deadline, "fleet never recovered after the respawn");
+        let mut pending = vec![];
+        for _ in 0..6 {
+            let u = rng.normal_vec(HEADS * 256);
+            let req = ConvRequest { kind, len: 256, streams: vec![u.clone()] };
+            match fleet.submit_blocking(req) {
+                Ok(rx) => pending.push((u, rx)),
+                Err(e) if e.retryable() => std::thread::sleep(Duration::from_millis(10)),
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        for (u, rx) in pending {
+            match rx.recv().expect("every admitted request gets a reply") {
+                Ok(ok) => {
+                    assert_eq!(ok.epoch, e2, "reply carried a pre-swap epoch");
+                    let want = single
+                        .call(ConvRequest { kind, len: 256, streams: vec![u] })
+                        .expect("reference conv");
+                    assert_eq!(ok.data, want, "a shard served the pre-swap filter");
+                    done += 1;
+                }
+                Err(e) if e.retryable() => std::thread::sleep(Duration::from_millis(10)),
+                Err(e) => panic!("unexpected reply error: {e}"),
+            }
         }
     }
 }

@@ -111,7 +111,8 @@ fn soak_concurrent_clients_bitwise_parity_and_reconciled_stats() {
                                         let y = rx
                                             .recv()
                                             .expect("no lost replies")
-                                            .expect("conv ok");
+                                            .expect("conv ok")
+                                            .data;
                                         done.push((len, u, y));
                                     }
                                     None => std::thread::sleep(Duration::from_micros(200)),
@@ -122,7 +123,7 @@ fn soak_concurrent_clients_bitwise_parity_and_reconciled_stats() {
                     }
                 }
                 for (len, u, rx) in pending {
-                    let y = rx.recv().expect("no lost replies").expect("conv ok");
+                    let y = rx.recv().expect("no lost replies").expect("conv ok").data;
                     done.push((len, u, y));
                 }
                 assert_eq!(done.len(), PER_CLIENT, "client {c} lost replies");
@@ -221,7 +222,7 @@ fn blocking_call_waits_out_backpressure() {
         let fleet = &fleet;
         let req = forward(256, u2);
         let caller = s.spawn(move || fleet.call(req));
-        let y1 = rx.recv().expect("fleet alive").expect("conv ok");
+        let y1 = rx.recv().expect("fleet alive").expect("conv ok").data;
         assert_eq!(y1.len(), HEADS * 256);
         let y2 =
             caller.join().expect("caller thread").expect("blocking call admits and succeeds");

@@ -1,0 +1,558 @@
+//! Ingress end-to-end: real TCP clients over loopback against the
+//! sharded fleet, behind the wire-framed front.
+//!
+//! The acceptance soak drives >= 8 concurrent pipelined clients into a
+//! 4-shard conv fleet while a concurrent wire client races two-phase
+//! filter swaps, and checks: bitwise parity with a direct in-process
+//! single-worker `ConvService`, zero lost or duplicated replies (FIFO
+//! ids), and per-connection epoch monotonicity (no client ever observes
+//! epoch `e` then `e - 1`). Further tests cover graceful shard drain
+//! under live wire traffic (zero non-retryable client failures), the
+//! connection-pool load shed, malformed-frame handling on a live socket,
+//! session reaping for vanished clients, and the per-shard inflight
+//! gauge reconciliation.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flashfftconv::coordinator::fleet::DrainOutcome;
+use flashfftconv::coordinator::router::ConvKind;
+use flashfftconv::coordinator::service::{ConvRequest, ConvService};
+use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::ingress::client::IngressClient;
+use flashfftconv::ingress::wire::{self, Reply, Request};
+use flashfftconv::ingress::{IngressConfig, IngressServer};
+use flashfftconv::runtime::BackendConfig;
+use flashfftconv::server::ModelServer;
+use flashfftconv::util::Rng;
+
+const HEADS: usize = 16;
+
+fn sharded(shards: usize, max_inflight: usize) -> Arc<ConvService> {
+    Arc::new(
+        ConvService::start_sharded(
+            BackendConfig::NativeRowThreads(1),
+            "monarch",
+            BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(2) },
+            shards,
+            max_inflight,
+        )
+        .expect("sharded service starts"),
+    )
+}
+
+fn forward(len: usize, u: Vec<f32>) -> ConvRequest {
+    ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] }
+}
+
+/// Same request mix as the fleet soak: mostly 256 (some padded), every
+/// 4th request in the 1024 bucket.
+fn soak_len(c: usize, i: usize) -> usize {
+    match (c + i) % 4 {
+        0 => 1024,
+        1 => 200, // pads into 256
+        _ => 256,
+    }
+}
+
+/// Poll `cond` until it holds or `secs` elapse.
+fn eventually(secs: u64, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        if cond() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn soak_wire_clients_parity_epoch_monotonic_under_concurrent_swaps() {
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 32;
+    const WINDOW: usize = 4;
+
+    let service = sharded(4, 64);
+    let single = ConvService::start(
+        BackendConfig::Native,
+        "monarch",
+        BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(1) },
+    )
+    .expect("reference service starts");
+
+    // Identical Forward filter banks on both sides; the concurrent swaps
+    // below hit the *Causal* 512 bucket, which the soak never routes to,
+    // so bitwise parity must hold throughout.
+    let mut rng = Rng::new(4242);
+    for bucket in [256usize, 1024] {
+        let k = rng.normal_vec(HEADS * bucket);
+        service
+            .set_filter(ConvKind::Forward, bucket, k.clone())
+            .expect("fleet filter installs");
+        single.set_filter(ConvKind::Forward, bucket, k).expect("single filter installs");
+    }
+
+    let ingress = IngressServer::bind(
+        "127.0.0.1:0",
+        Some(Arc::clone(&service)),
+        None,
+        IngressConfig::default(),
+    )
+    .expect("ingress binds");
+    let addr = ingress.local_addr();
+
+    let stop = AtomicBool::new(false);
+    let swaps = AtomicU64::new(0);
+    let retried = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        // Two-phase filter swaps racing the soak over their own wire
+        // connection.
+        {
+            let (stop, swaps) = (&stop, &swaps);
+            s.spawn(move || {
+                let mut client = IngressClient::connect(addr).expect("swap client connects");
+                let mut rng = Rng::new(0x5A4B);
+                while !stop.load(Ordering::Relaxed) {
+                    let taps = rng.normal_vec(HEADS * 512);
+                    let req = Request::InstallFilter { kind: 2, bucket: 512, taps };
+                    match client
+                        .call_retry(&req, 4096, Duration::from_micros(200))
+                        .expect("swap round trip")
+                    {
+                        Reply::Ok { .. } => {
+                            swaps.fetch_add(1, Ordering::Relaxed);
+                        }
+                        other => panic!("filter swap failed: {other:?}"),
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                client.finish();
+            });
+        }
+
+        let mut handles = Vec::new();
+        for c in 0..CLIENTS {
+            let (single, retried) = (&single, &retried);
+            handles.push(s.spawn(move || {
+                let mut rng = Rng::new(9_000 + c as u64);
+                let mut client = IngressClient::connect(addr).expect("client connects");
+                let mut to_send: VecDeque<(usize, Vec<f32>)> = (0..PER_CLIENT)
+                    .map(|i| {
+                        let len = soak_len(c, i);
+                        (len, rng.normal_vec(HEADS * len))
+                    })
+                    .collect();
+                let mut queue: VecDeque<(u64, usize, Vec<f32>)> = VecDeque::new();
+                let mut done: Vec<(usize, Vec<f32>, Vec<f32>)> = Vec::new();
+                let mut watermark = 0u64;
+                while done.len() < PER_CLIENT {
+                    // Keep a pipelining window of requests on the wire.
+                    while queue.len() < WINDOW {
+                        match to_send.pop_front() {
+                            Some((len, u)) => {
+                                let req = Request::Conv {
+                                    kind: 0,
+                                    len: len as u32,
+                                    streams: vec![u.clone()],
+                                };
+                                let id = client.send(&req).expect("send");
+                                queue.push_back((id, len, u));
+                            }
+                            None => break,
+                        }
+                    }
+                    let (id, len, u) = queue.pop_front().expect("a request is outstanding");
+                    let (rid, reply) = client.recv().expect("reply arrives");
+                    // FIFO ids: exactly one reply per request, in order —
+                    // nothing lost, nothing duplicated.
+                    assert_eq!(rid, id, "client {c}: reply out of order");
+                    match reply {
+                        Reply::Ok { epoch, session, data } => {
+                            assert!(session.is_none());
+                            assert!(
+                                epoch >= watermark,
+                                "client {c}: observed epoch {epoch} after {watermark}"
+                            );
+                            watermark = epoch;
+                            assert_eq!(data.len(), HEADS * len);
+                            done.push((len, u, data));
+                        }
+                        r if r.retryable() => {
+                            // Load shed under the swap races: resubmit
+                            // with a fresh id at the back of the window.
+                            retried.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(Duration::from_micros(200));
+                            to_send.push_back((len, u));
+                        }
+                        other => panic!("client {c}: non-retryable reply: {other:?}"),
+                    }
+                }
+                client.finish();
+                // Bitwise parity vs the direct in-process service.
+                for (len, u, y) in done {
+                    let want = single.call(forward(len, u)).expect("single-worker conv ok");
+                    assert_eq!(y, want, "client {c}: wire output diverged from in-process");
+                }
+                watermark
+            }));
+        }
+        for h in handles {
+            h.join().expect("client thread");
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    let n_swaps = swaps.load(Ordering::Relaxed);
+    assert!(n_swaps >= 1, "at least one concurrent swap must have landed");
+
+    // Epoch accounting: 2 initial installs + every landed swap.
+    let stats = service.fleet().stats();
+    assert_eq!(stats.filter_epoch, 2 + n_swaps, "control epochs must be dense");
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.shard_deaths, 0);
+    assert_eq!(stats.inflight, 0, "quiescent fleet holds no slots");
+    for sh in &stats.shards {
+        assert_eq!(
+            sh.inflight_requests, 0,
+            "shard {} gauge must reconcile to zero at rest",
+            sh.shard
+        );
+    }
+
+    // Every request frame got exactly one reply frame (the writer's
+    // counter trails the client's last read by a flush, so poll).
+    let ist = ingress.stats();
+    assert!(
+        eventually(5, || {
+            ist.replies_out.load(Ordering::Relaxed) == ist.frames_in.load(Ordering::Relaxed)
+        }),
+        "replies_out must converge to frames_in: {} vs {}",
+        ist.replies_out.load(Ordering::Relaxed),
+        ist.frames_in.load(Ordering::Relaxed)
+    );
+    assert_eq!(ist.bad_frames.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn drain_during_wire_soak_never_fails_a_client_request() {
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 24;
+
+    let service = sharded(4, 64);
+    let ingress = IngressServer::bind(
+        "127.0.0.1:0",
+        Some(Arc::clone(&service)),
+        None,
+        IngressConfig::default(),
+    )
+    .expect("ingress binds");
+    let addr = ingress.local_addr();
+
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            s.spawn(move || {
+                let mut rng = Rng::new(3_000 + c as u64);
+                let mut client = IngressClient::connect(addr).expect("client connects");
+                for i in 0..PER_CLIENT {
+                    let len = soak_len(c, i);
+                    let u = rng.normal_vec(HEADS * len);
+                    let req =
+                        Request::Conv { kind: 0, len: len as u32, streams: vec![u] };
+                    // A graceful drain must surface as — at worst — a
+                    // retryable Busy, never a failure or a dead shard.
+                    loop {
+                        match client.call(&req).expect("wire round trip") {
+                            Reply::Ok { data, .. } => {
+                                assert_eq!(data.len(), HEADS * len);
+                                break;
+                            }
+                            Reply::Busy => std::thread::sleep(Duration::from_micros(200)),
+                            other => panic!(
+                                "client {c}: request failed during drain: {other:?}"
+                            ),
+                        }
+                    }
+                }
+                client.finish();
+            });
+        }
+
+        // Mid-soak: rolling-restart one shard, then scale another down
+        // and back up, all while traffic flows.
+        std::thread::sleep(Duration::from_millis(30));
+        service
+            .fleet()
+            .drain(1, DrainOutcome::Respawn, Duration::from_secs(60))
+            .expect("drain-respawn while serving");
+        service
+            .fleet()
+            .drain(2, DrainOutcome::Retire, Duration::from_secs(60))
+            .expect("drain-retire while serving");
+        std::thread::sleep(Duration::from_millis(20));
+        service.fleet().revive(2, Duration::from_secs(60)).expect("revive while serving");
+    });
+
+    let stats = service.fleet().stats();
+    assert!(stats.drains >= 2, "both drains must be recorded (got {})", stats.drains);
+    assert_eq!(stats.shard_deaths, 0, "graceful drain must not strand replies");
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.inflight, 0);
+    assert!(
+        stats.shards.iter().all(|sh| sh.alive && !sh.draining),
+        "every shard must be back in rotation after the drain cycle"
+    );
+}
+
+#[test]
+fn over_cap_connections_are_shed_with_busy() {
+    let service = Arc::new(
+        ConvService::start(
+            BackendConfig::Native,
+            "monarch",
+            BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(1) },
+        )
+        .expect("service starts"),
+    );
+    let ingress = IngressServer::bind(
+        "127.0.0.1:0",
+        Some(Arc::clone(&service)),
+        None,
+        IngressConfig { max_connections: 1 },
+    )
+    .expect("ingress binds");
+    let addr = ingress.local_addr();
+
+    // First connection occupies the only pool slot (prove it works).
+    let mut a = IngressClient::connect(addr).expect("first client connects");
+    let mut rng = Rng::new(5);
+    let u = rng.normal_vec(HEADS * 256);
+    match a
+        .call_retry(&Request::Conv { kind: 0, len: 256, streams: vec![u] }, 64, Duration::from_millis(1))
+        .expect("first client round trip")
+    {
+        Reply::Ok { data, .. } => assert_eq!(data.len(), HEADS * 256),
+        other => panic!("pooled connection must serve: {other:?}"),
+    }
+
+    // Wait until the pool actually registered the first connection, then
+    // the second one must be shed with a retryable busy frame (id 0).
+    assert!(
+        eventually(5, || {
+            let mut b = match IngressClient::connect(addr) {
+                Ok(b) => b,
+                Err(_) => return false,
+            };
+            matches!(b.recv(), Ok((0, Reply::Busy)))
+        }),
+        "over-cap connection must receive the busy shed frame"
+    );
+    assert!(ingress.stats().shed.load(Ordering::Relaxed) >= 1);
+
+    // Freeing the slot re-opens the pool.
+    a.finish();
+    drop(a);
+    assert!(
+        eventually(10, || {
+            let mut c = match IngressClient::connect(addr) {
+                Ok(c) => c,
+                Err(_) => return false,
+            };
+            let u: Vec<f32> = vec![0.0; HEADS * 256];
+            let req = Request::Conv { kind: 0, len: 256, streams: vec![u] };
+            matches!(
+                c.call_retry(&req, 64, Duration::from_millis(1)),
+                Ok(Reply::Ok { .. })
+            )
+        }),
+        "pool slot must free up after the first client disconnects"
+    );
+}
+
+#[test]
+fn malformed_frames_get_bad_request_and_the_connection_survives() {
+    use std::io::Write;
+
+    let service = Arc::new(
+        ConvService::start(
+            BackendConfig::Native,
+            "monarch",
+            BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(1) },
+        )
+        .expect("service starts"),
+    );
+    let ingress = IngressServer::bind(
+        "127.0.0.1:0",
+        Some(Arc::clone(&service)),
+        None,
+        IngressConfig::default(),
+    )
+    .expect("ingress binds");
+
+    let mut stream =
+        std::net::TcpStream::connect(ingress.local_addr()).expect("raw connect");
+
+    // Unknown opcode 99, request id 77: the reply must be bad_request and
+    // must echo the id so the client can correlate it.
+    let mut body = vec![wire::WIRE_VERSION, 99];
+    body.extend_from_slice(&77u64.to_le_bytes());
+    let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+    frame.extend_from_slice(&body);
+    stream.write_all(&frame).expect("write malformed frame");
+    let reply = wire::read_frame(&mut stream).expect("read ok").expect("reply present");
+    let (rid, reply) = wire::decode_reply(&reply).expect("reply decodes");
+    assert_eq!(rid, 77);
+    assert!(matches!(reply, Reply::BadRequest { .. }), "got {reply:?}");
+
+    // Wrong version byte: rejected, message names the version.
+    let mut body = vec![wire::WIRE_VERSION + 1, 1];
+    body.extend_from_slice(&78u64.to_le_bytes());
+    let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+    frame.extend_from_slice(&body);
+    stream.write_all(&frame).expect("write wrong-version frame");
+    let reply = wire::read_frame(&mut stream).expect("read ok").expect("reply present");
+    match wire::decode_reply(&reply).expect("reply decodes") {
+        (78, Reply::BadRequest { msg }) => {
+            assert!(msg.contains("version"), "message must name the version: {msg}")
+        }
+        other => panic!("expected bad_request for wrong version, got {other:?}"),
+    }
+
+    // The same connection still serves valid requests afterwards.
+    let mut rng = Rng::new(6);
+    let u = rng.normal_vec(HEADS * 256);
+    let frame =
+        wire::encode_request(79, &Request::Conv { kind: 0, len: 256, streams: vec![u] });
+    stream.write_all(&frame).expect("write valid frame");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let reply = wire::read_frame(&mut stream).expect("read ok").expect("reply present");
+        match wire::decode_reply(&reply).expect("reply decodes") {
+            (79, Reply::Ok { data, .. }) => {
+                assert_eq!(data.len(), HEADS * 256);
+                break;
+            }
+            (79, Reply::Busy) => {
+                assert!(Instant::now() < deadline, "service stayed busy");
+                std::thread::sleep(Duration::from_millis(1));
+                let u = rng.normal_vec(HEADS * 256);
+                let f = wire::encode_request(
+                    79,
+                    &Request::Conv { kind: 0, len: 256, streams: vec![u] },
+                );
+                stream.write_all(&f).expect("rewrite valid frame");
+            }
+            other => panic!("poisoned connection after bad frames: {other:?}"),
+        }
+    }
+    assert!(ingress.stats().bad_frames.load(Ordering::Relaxed) >= 2);
+}
+
+#[test]
+fn vanished_connection_reaps_its_open_sessions() {
+    let server = Arc::new(
+        ModelServer::start(
+            BackendConfig::Native,
+            "lm_fwd_logits",
+            BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(2) },
+        )
+        .expect("model server starts"),
+    );
+    let ingress = IngressServer::bind(
+        "127.0.0.1:0",
+        None,
+        Some(Arc::clone(&server)),
+        IngressConfig::default(),
+    )
+    .expect("ingress binds");
+    let addr = ingress.local_addr();
+
+    let prompt = vec![1i32; server.seq_len];
+    let mut client = IngressClient::connect(addr).expect("client connects");
+
+    // Full-context inference over the wire works.
+    match client
+        .call_retry(&Request::LmLogits { tokens: prompt.clone() }, 64, Duration::from_millis(1))
+        .expect("lm_logits round trip")
+    {
+        Reply::Ok { data, .. } => assert_eq!(data.len(), server.vocab),
+        other => panic!("lm_logits failed: {other:?}"),
+    }
+
+    // Open a decode session, step it once — then vanish without closing.
+    let sid = match client
+        .call_retry(&Request::OpenSession { prompt }, 64, Duration::from_millis(1))
+        .expect("open round trip")
+    {
+        Reply::Ok { session: Some(sid), data, .. } => {
+            assert_eq!(data.len(), server.vocab);
+            sid
+        }
+        other => panic!("open_session failed: {other:?}"),
+    };
+    match client.call(&Request::Step { session: sid, token: 1 }).expect("step round trip") {
+        Reply::Ok { data, .. } => assert_eq!(data.len(), server.vocab),
+        other => panic!("step failed: {other:?}"),
+    }
+    drop(client); // connection dies with the session still open
+
+    // The connection teardown must best-effort close the session so the
+    // engine's capped session map gets its slot back.
+    let ist = ingress.stats();
+    assert!(
+        eventually(30, || ist.sessions_reaped.load(Ordering::Relaxed) >= 1),
+        "teardown must reap the abandoned session"
+    );
+
+    // A different connection never shares session visibility: the id is
+    // rejected before it can touch another client's state.
+    let mut other = IngressClient::connect(addr).expect("second client connects");
+    match other.call(&Request::Step { session: sid, token: 2 }).expect("round trip") {
+        Reply::SessionLost => {}
+        other => panic!("foreign session id must read as lost, got {other:?}"),
+    }
+    other.finish();
+}
+
+#[test]
+fn inflight_gauges_track_and_reconcile() {
+    // One shard, long batch window: admitted requests deterministically
+    // stay in flight until the deadline flush, so the per-shard gauge is
+    // exact mid-flight and must return to zero at rest.
+    let service = Arc::new(
+        ConvService::start_sharded(
+            BackendConfig::NativeRowThreads(1),
+            "monarch",
+            BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(250) },
+            1,
+            8,
+        )
+        .expect("service starts"),
+    );
+    let mut rng = Rng::new(31);
+    let pending: Vec<_> = [256usize, 1024, 4096]
+        .iter()
+        .map(|&len| {
+            let u = rng.normal_vec(HEADS * len);
+            service.fleet().submit(forward(len, u)).expect("admitted")
+        })
+        .collect();
+
+    let stats = service.fleet().stats();
+    assert_eq!(stats.inflight, 3);
+    assert_eq!(stats.shards[0].inflight_requests, 3, "per-shard gauge tracks dispatch");
+
+    for rx in pending {
+        rx.recv().expect("fleet alive").expect("conv ok");
+    }
+    let stats = service.fleet().stats();
+    assert_eq!(stats.inflight, 0);
+    assert_eq!(stats.shards[0].inflight_requests, 0, "gauge reconciles to zero");
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.submitted, 3);
+    assert_eq!(stats.requests, 3, "dispatched == admitted == completed");
+}

@@ -1,0 +1,331 @@
+//! Wire-codec properties (satellite of the ingress PR): every frame type
+//! round-trips bit-exactly through encode/decode, and malformed input —
+//! truncations, oversized length words, wrong version bytes, unknown
+//! opcodes/statuses, trailing bytes, corrupt count fields, random junk —
+//! is rejected with a typed [`WireError`] without panicking or
+//! allocating unbounded memory.
+
+use std::io::Read;
+
+use flashfftconv::ingress::wire::{
+    self, Reply, Request, WireError, MAX_FRAME, MIN_FRAME, WIRE_VERSION,
+};
+use flashfftconv::prop::{default_cases, forall, gen};
+use flashfftconv::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------------
+
+fn gen_tokens(rng: &mut Rng, max: usize) -> Vec<i32> {
+    (0..gen::index(rng, 0, max)).map(|_| rng.range(-10_000, 10_000) as i32).collect()
+}
+
+fn gen_msg(rng: &mut Rng) -> String {
+    (0..gen::index(rng, 0, 48)).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+}
+
+fn gen_request(rng: &mut Rng) -> Request {
+    match rng.below(6) {
+        0 => {
+            let kind = rng.below(3) as u8;
+            let n_streams = if kind == 1 { 3usize } else { 1 };
+            let m = gen::index(rng, 0, 64);
+            let streams = (0..n_streams).map(|_| rng.normal_vec(m)).collect();
+            Request::Conv { kind, len: rng.below(4096) as u32, streams }
+        }
+        1 => Request::LmLogits { tokens: gen_tokens(rng, 64) },
+        2 => Request::OpenSession { prompt: gen_tokens(rng, 64) },
+        3 => Request::Step {
+            session: rng.next_u64(),
+            token: rng.range(-10_000, 10_000) as i32,
+        },
+        4 => Request::CloseSession { session: rng.next_u64() },
+        _ => Request::InstallFilter {
+            kind: rng.below(3) as u8,
+            bucket: rng.below(8192) as u32,
+            taps: rng.normal_vec(gen::index(rng, 0, 64)),
+        },
+    }
+}
+
+fn gen_reply(rng: &mut Rng) -> Reply {
+    match rng.below(7) {
+        0 => Reply::Ok {
+            epoch: rng.next_u64(),
+            session: if rng.chance(0.5) { Some(rng.next_u64()) } else { None },
+            data: rng.normal_vec(gen::index(rng, 0, 64)),
+        },
+        1 => Reply::Busy,
+        2 => Reply::ShardDied,
+        3 => Reply::Failed { msg: gen_msg(rng) },
+        4 => Reply::SessionLost,
+        5 => Reply::Shutdown,
+        _ => Reply::BadRequest { msg: gen_msg(rng) },
+    }
+}
+
+/// Split an encoded frame into (validated length word, body).
+fn split(frame: &[u8]) -> (usize, &[u8]) {
+    let len = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+    assert_eq!(len, frame.len() - 4, "length prefix must cover exactly the body");
+    wire::check_frame_len(len).expect("encoded frames stay within protocol bounds");
+    (len, &frame[4..])
+}
+
+// ---------------------------------------------------------------------------
+// Round trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_request_round_trips_bit_exactly() {
+    forall(
+        "request round trip",
+        0x11A1,
+        default_cases().max(64),
+        |rng| (rng.next_u64(), gen_request(rng)),
+        |(id, req)| {
+            let frame = wire::encode_request(*id, req);
+            let (_, body) = split(&frame);
+            let (rid, back) = wire::decode_request(body).expect("valid frame decodes");
+            rid == *id && back == *req
+        },
+    );
+}
+
+#[test]
+fn every_reply_round_trips_bit_exactly() {
+    forall(
+        "reply round trip",
+        0x11A2,
+        default_cases().max(64),
+        |rng| (rng.next_u64(), gen_reply(rng)),
+        |(id, reply)| {
+            let frame = wire::encode_reply(*id, reply);
+            let (_, body) = split(&frame);
+            let (rid, back) = wire::decode_reply(body).expect("valid frame decodes");
+            rid == *id && back == *reply
+        },
+    );
+}
+
+#[test]
+fn read_frame_round_trips_pipelined_frames_then_clean_eof() {
+    let mut rng = Rng::new(0x11A3);
+    let frames: Vec<(u64, Request)> =
+        (0..8).map(|_| (rng.next_u64(), gen_request(&mut rng))).collect();
+    let mut stream = Vec::new();
+    for (id, req) in &frames {
+        stream.extend_from_slice(&wire::encode_request(*id, req));
+    }
+    let mut r = std::io::Cursor::new(stream);
+    for (id, req) in &frames {
+        let body = wire::read_frame(&mut r).expect("read ok").expect("frame present");
+        let (rid, back) = wire::decode_request(&body).expect("decodes");
+        assert_eq!(rid, *id);
+        assert_eq!(&back, req);
+    }
+    assert!(
+        wire::read_frame(&mut r).expect("clean eof is not an error").is_none(),
+        "EOF between frames must read as None"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Rejection: every malformed shape errors, none panic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn any_strict_prefix_of_a_valid_frame_is_rejected() {
+    // Counts are explicit in the byte stream, so removing trailing bytes
+    // can only starve a later read: every strict prefix must error (and
+    // must not panic).
+    forall(
+        "strict prefixes rejected",
+        0x11B1,
+        default_cases(),
+        |rng| (rng.next_u64(), gen_request(rng), gen_reply(rng)),
+        |(id, req, reply)| {
+            let body = wire::encode_request(*id, req)[4..].to_vec();
+            for cut in 0..body.len() {
+                if wire::decode_request(&body[..cut]).is_ok() {
+                    return false;
+                }
+            }
+            let body = wire::encode_reply(*id, reply)[4..].to_vec();
+            for cut in 0..body.len() {
+                if wire::decode_reply(&body[..cut]).is_ok() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn trailing_bytes_are_rejected() {
+    forall(
+        "trailing bytes rejected",
+        0x11B2,
+        default_cases(),
+        |rng| (rng.next_u64(), gen_request(rng)),
+        |(id, req)| {
+            let mut body = wire::encode_request(*id, req)[4..].to_vec();
+            body.push(0);
+            wire::decode_request(&body) == Err(WireError::BadPayload("trailing bytes"))
+        },
+    );
+}
+
+#[test]
+fn wrong_version_byte_is_rejected_as_bad_version() {
+    let body = wire::encode_request(7, &Request::CloseSession { session: 1 })[4..].to_vec();
+    for v in [0u8, 2, 0xFF] {
+        let mut b = body.clone();
+        b[0] = v;
+        assert_eq!(wire::decode_request(&b), Err(WireError::BadVersion(v)));
+        assert_eq!(wire::decode_reply(&b), Err(WireError::BadVersion(v)));
+    }
+    assert_eq!(body[0], WIRE_VERSION, "encoder must stamp the supported version");
+}
+
+#[test]
+fn unknown_opcode_and_status_are_rejected() {
+    let mut body = wire::encode_request(7, &Request::CloseSession { session: 1 })[4..].to_vec();
+    body[1] = 99;
+    assert_eq!(wire::decode_request(&body), Err(WireError::BadOpcode(99)));
+    let mut body = wire::encode_reply(7, &Reply::Busy)[4..].to_vec();
+    body[1] = 200;
+    assert_eq!(wire::decode_reply(&body), Err(WireError::BadStatus(200)));
+}
+
+#[test]
+fn oversized_and_undersized_length_words_are_rejected_before_allocation() {
+    assert_eq!(wire::check_frame_len(MAX_FRAME + 1), Err(WireError::Oversized(MAX_FRAME + 1)));
+    assert_eq!(wire::check_frame_len(MIN_FRAME - 1), Err(WireError::Oversized(MIN_FRAME - 1)));
+    assert_eq!(wire::check_frame_len(0), Err(WireError::Oversized(0)));
+    assert!(wire::check_frame_len(MIN_FRAME).is_ok());
+    assert!(wire::check_frame_len(MAX_FRAME).is_ok());
+
+    // A stream claiming a 4 GiB frame errors out of read_frame without
+    // the body ever being allocated.
+    let huge = (u32::MAX).to_le_bytes();
+    let err = wire::read_frame(&mut std::io::Cursor::new(huge.to_vec()))
+        .expect_err("oversized length must be an error");
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+}
+
+#[test]
+fn corrupt_count_fields_error_without_huge_allocation() {
+    // An lm_logits body whose count word claims u32::MAX tokens but
+    // carries none: `counted()` checks against the remaining bytes before
+    // reserving, so this must fail fast as Truncated.
+    let mut body = vec![WIRE_VERSION, 2];
+    body.extend_from_slice(&7u64.to_le_bytes());
+    body.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert_eq!(wire::decode_request(&body), Err(WireError::Truncated));
+
+    // Same for the f32 payload of an ok reply.
+    let mut body = vec![WIRE_VERSION, 0];
+    body.extend_from_slice(&7u64.to_le_bytes());
+    body.extend_from_slice(&0u64.to_le_bytes()); // epoch
+    body.push(0); // no session id
+    body.extend_from_slice(&0xFFFF_FF00u32.to_le_bytes());
+    assert_eq!(wire::decode_reply(&body), Err(WireError::Truncated));
+}
+
+#[test]
+fn semantically_invalid_payloads_are_rejected() {
+    // Conv kind out of range.
+    let mut body = vec![WIRE_VERSION, 1];
+    body.extend_from_slice(&1u64.to_le_bytes());
+    body.push(3); // kind 3 does not exist
+    assert!(matches!(wire::decode_request(&body), Err(WireError::BadPayload(_))));
+
+    // Gated conv with the wrong stream count.
+    let frame = wire::encode_request(
+        1,
+        &Request::Conv { kind: 1, len: 8, streams: vec![vec![0.0; 8]] },
+    );
+    assert!(matches!(wire::decode_request(&frame[4..]), Err(WireError::BadPayload(_))));
+
+    // Ok reply with a session flag that is neither 0 nor 1.
+    let mut body = vec![WIRE_VERSION, 0];
+    body.extend_from_slice(&1u64.to_le_bytes());
+    body.extend_from_slice(&0u64.to_le_bytes());
+    body.push(2);
+    assert!(matches!(wire::decode_reply(&body), Err(WireError::BadPayload(_))));
+
+    // Failed reply with a non-UTF-8 message.
+    let mut body = vec![WIRE_VERSION, 3];
+    body.extend_from_slice(&1u64.to_le_bytes());
+    body.extend_from_slice(&2u32.to_le_bytes());
+    body.extend_from_slice(&[0xFF, 0xFE]);
+    assert_eq!(
+        wire::decode_reply(&body),
+        Err(WireError::BadPayload("non-utf8 message"))
+    );
+}
+
+#[test]
+fn mid_frame_eof_is_distinguished_from_clean_eof() {
+    // Length word promises 32 bytes, stream carries 5: UnexpectedEof.
+    let mut stream = (32u32).to_le_bytes().to_vec();
+    stream.extend_from_slice(&[1, 2, 3, 4, 5]);
+    let err = wire::read_frame(&mut std::io::Cursor::new(stream))
+        .expect_err("torn frame must be an error");
+    assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+
+    // A torn length word itself is also UnexpectedEof, not a clean end.
+    let err = wire::read_frame(&mut std::io::Cursor::new(vec![9u8, 0]))
+        .expect_err("torn length word must be an error");
+    assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+
+    // Empty stream: clean EOF.
+    assert!(wire::read_frame(&mut std::io::Cursor::new(Vec::new())).unwrap().is_none());
+}
+
+#[test]
+fn random_junk_never_panics_the_decoders() {
+    forall(
+        "random junk never panics",
+        0x11B3,
+        default_cases().max(256),
+        |rng| {
+            let n = gen::index(rng, 0, 128);
+            (0..n).map(|_| rng.below(256) as u8).collect::<Vec<u8>>()
+        },
+        |bytes| {
+            // The property is "no panic"; the results themselves are
+            // unconstrained (a junk body may accidentally parse).
+            let _ = wire::decode_request(bytes);
+            let _ = wire::decode_reply(bytes);
+            let _ = wire::read_frame(&mut std::io::Cursor::new(bytes.clone()));
+            true
+        },
+    );
+}
+
+#[test]
+fn read_frame_handles_dribbling_reads() {
+    // A reader that yields one byte at a time must still assemble the
+    // frame (the length-word loop cannot assume a single read).
+    struct OneByte<R: Read>(R);
+    impl<R: Read> Read for OneByte<R> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if buf.is_empty() {
+                return Ok(0);
+            }
+            self.0.read(&mut buf[..1])
+        }
+    }
+    let id = 42u64;
+    let req = Request::Step { session: 7, token: -3 };
+    let frame = wire::encode_request(id, &req);
+    let mut r = OneByte(std::io::Cursor::new(frame));
+    let body = wire::read_frame(&mut r).expect("read ok").expect("frame present");
+    let (rid, back) = wire::decode_request(&body).expect("decodes");
+    assert_eq!((rid, back), (id, req));
+    assert!(wire::read_frame(&mut r).expect("clean eof").is_none());
+}

@@ -662,12 +662,13 @@ fn prop_fleet_reply_pairing_across_shards() {
         lens: &[usize],
         li: usize,
         c: f64,
-        rx: std::sync::mpsc::Receiver<Result<Vec<f32>, FleetError>>,
+        rx: std::sync::mpsc::Receiver<flashfftconv::coordinator::fleet::FleetReply>,
     ) -> Result<(), String> {
         let y = rx
             .recv()
             .map_err(|_| "lost reply".to_string())?
-            .map_err(|e| format!("conv failed: {e}"))?;
+            .map_err(|e| format!("conv failed: {e}"))?
+            .data;
         let base = &ones[li];
         if y.len() != base.len() {
             return Err(format!("reply length {} != expected {}", y.len(), base.len()));

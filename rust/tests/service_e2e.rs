@@ -52,7 +52,7 @@ fn concurrent_submits_across_buckets_all_answered() {
                     ));
                 }
                 for (len, rx) in pending {
-                    let row = rx.recv().expect("service alive").expect("conv ok");
+                    let row = rx.recv().expect("service alive").expect("conv ok").data;
                     assert_eq!(row.len(), HEADS * len);
                     assert!(row.iter().all(|v| v.is_finite()));
                 }

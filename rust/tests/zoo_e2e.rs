@@ -5,7 +5,7 @@
 //! monarch/baseline pairs agreeing on shared parameters.
 
 use std::collections::BTreeMap;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use flashfftconv::coordinator::BatchPolicy;
 use flashfftconv::runtime::{Artifact, BackendConfig, HostTensor, Runtime};
@@ -60,7 +60,7 @@ fn model_server_batches_concurrent_generation_requests() {
         .collect();
     let mut replies = vec![];
     for rx in pending {
-        replies.push(rx.recv().expect("server alive").expect("inference ok"));
+        replies.push(rx.recv().expect("server alive").expect("inference ok").data);
     }
     for r in &replies[1..] {
         assert_eq!(r, &replies[0], "identical requests must get identical logits");
@@ -115,6 +115,42 @@ fn decode_step_after_close_is_session_lost() {
         .unwrap_err();
     assert!(matches!(err, FleetError::SessionLost), "got {err}");
     assert!(!err.retryable(), "SessionLost must not be retryable");
+}
+
+#[test]
+fn dropped_session_handle_frees_its_slot() {
+    // Regression: a DecodeSession that fell out of scope without close()
+    // used to strand its worker-side slot until the engine's capped
+    // session map filled up. Drop now best-effort closes the session.
+    let server = start_server();
+    let mut gen = TokenGen::new(server.vocab, 6);
+    let prompt = gen.batch(1, server.seq_len);
+    let (session, _) = server.open_session(&prompt).unwrap();
+    let (id, shard) = (session.id(), session.shard());
+    session.step(1).unwrap();
+    drop(session); // no close(): the Drop impl must reap the slot
+
+    // The close rides the normal admission queue, so it lands
+    // asynchronously: probe with a bounded retry until the worker
+    // answers the typed SessionLost for the dead id.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match server
+            .fleet()
+            .call(ModelRequest::Session { shard, op: SessionOp::Step { id, token: 1 } })
+        {
+            Err(FleetError::SessionLost) => break,
+            Ok(_) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "dropped session handle never freed its worker-side slot"
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) if e.retryable() => std::thread::sleep(Duration::from_millis(10)),
+            Err(e) => panic!("unexpected probe error: {e}"),
+        }
+    }
 }
 
 #[test]
