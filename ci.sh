@@ -81,6 +81,22 @@ else
     cargo test -q --test ingress_e2e
 fi
 
+# Fault injection under an explicit wall-clock bound: the chaos suite
+# (slow-loris eviction, dribbled/cut/stalled frames through the chaos
+# proxy, quota sheds, reply deadlines, streamed-reply teardown, shard
+# poison mid-soak) must surface every failure as a typed status and
+# converge — a hang here IS the bug the suite exists to catch. The CLI
+# integration test then drives the real compiled `serve --listen` binary
+# through spawn/handshake/wire traffic/stdin-EOF drain.
+echo "==> fault injection: cargo test --test ingress_chaos --test serve_listen_cli (bounded)"
+if command -v timeout >/dev/null 2>&1; then
+    timeout 900 cargo test -q --test ingress_chaos
+    timeout 900 cargo test -q --test serve_listen_cli
+else
+    cargo test -q --test ingress_chaos
+    cargo test -q --test serve_listen_cli
+fi
+
 # Ingress perf artifact: a small loopback soak through the bench must
 # emit BENCH_ingress.json with the paired 1-shard/N-shard records (and
 # the swap-racing row) so the network-front trajectory accumulates
@@ -118,6 +134,46 @@ else
         && grep -q '"ingress_fleet"' BENCH_ingress.json \
         && grep -q '"p99_ms"' BENCH_ingress.json \
         && echo "BENCH_ingress.json OK (grep check; python3 unavailable)"
+fi
+
+# Streamed-reply perf artifact: the wire-v2 chunked reply path vs the
+# single-frame baseline at two payload sizes must land in
+# BENCH_ingress_stream.json so the streaming overhead stays visible
+# across PRs (both modes present per size, sane percentiles).
+echo "==> ingress stream smoke: cargo bench --bench table_ingress_stream"
+rm -f BENCH_ingress_stream.json
+FFC_STREAM_REQUESTS=32 cargo bench --bench table_ingress_stream >/dev/null
+test -s BENCH_ingress_stream.json \
+    || { echo "FAIL: BENCH_ingress_stream.json missing or empty"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PY'
+import json
+recs = json.load(open("BENCH_ingress_stream.json"))
+by = {r["name"]: r for r in recs}
+lens = sorted({r["len"] for r in recs})
+assert len(lens) >= 2, f"need >=2 payload sizes, got {lens}"
+for n in lens:
+    single = by.get(f"single_{n}")
+    streamed = by.get(f"streamed_{n}")
+    assert single and streamed, f"missing mode pair at len {n}: {sorted(by)}"
+    for r in (single, streamed):
+        missing = {"name", "mode", "len", "points", "chunk_points", "chunks_out",
+                   "rows_per_sec", "p50_ms", "p99_ms"} - set(r)
+        assert not missing, f"record missing {missing}: {r}"
+        assert r["rows_per_sec"] > 0, f"degenerate record: {r}"
+        assert r["p99_ms"] >= r["p50_ms"] > 0, f"bad percentiles: {r}"
+    assert streamed["chunks_out"] > 0, f"streamed row never chunked: {streamed}"
+    assert single["chunks_out"] == 0, f"single-frame row chunked: {single}"
+largest = max(lens)
+ratio = by[f"streamed_{largest}"]["p50_ms"] / by[f"single_{largest}"]["p50_ms"]
+print(f"BENCH_ingress_stream.json OK ({len(lens)} payload sizes; streamed/single "
+      f"p50 at {largest}: {ratio:.2f}x)")
+PY
+else
+    grep -q '"streamed_' BENCH_ingress_stream.json \
+        && grep -q '"single_' BENCH_ingress_stream.json \
+        && grep -q '"p99_ms"' BENCH_ingress_stream.json \
+        && echo "BENCH_ingress_stream.json OK (grep check; python3 unavailable)"
 fi
 
 # Decode artifact: a one-iteration smoke through the decode bench must

@@ -1,0 +1,202 @@
+//! Streamed vs single-frame reply throughput over the TCP ingress.
+//!
+//! PR 8 added wire-v2 chunked replies so a long-sequence conv result
+//! streams in bounded frames instead of one giant allocation. This bench
+//! quantifies what the chunk run costs on the reply path: the same conv
+//! fleet is bound behind two ingress configurations — one whose
+//! `stream_chunk_points` threshold is above every reply (single-frame
+//! path) and one whose threshold forces a multi-chunk run — and a
+//! closed-loop wire client measures call latency at two payload sizes.
+//! Emits `BENCH_ingress_stream.json`; ci.sh validates that both modes
+//! are present at both payload sizes and that p50 <= p99 per record.
+//!
+//! Env knobs: `FFC_STREAM_REQUESTS` (per config, default 64),
+//! `FFC_STREAM_CHUNK` (streamed-mode chunk points, default 4096).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flashfftconv::bench::Table;
+use flashfftconv::coordinator::router::ConvKind;
+use flashfftconv::coordinator::service::{ConvRequest, ConvService};
+use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::ingress::client::IngressClient;
+use flashfftconv::ingress::wire::{Reply, Request};
+use flashfftconv::ingress::{IngressConfig, IngressServer};
+use flashfftconv::runtime::BackendConfig;
+use flashfftconv::util::Rng;
+
+const HEADS: usize = 16;
+/// The two reply payload sizes: 16,384 points (64 KiB) and 65,536
+/// points (256 KiB) — small enough to soak quickly, large enough that
+/// the streamed mode runs real multi-chunk replies.
+const LENS: [usize; 2] = [1024, 4096];
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct StreamRecord {
+    name: String,
+    mode: &'static str,
+    len: usize,
+    points: usize,
+    chunk_points: usize,
+    chunks_out: u64,
+    rows_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn records_json(recs: &[StreamRecord]) -> String {
+    let rows: Vec<String> = recs
+        .iter()
+        .map(|r| {
+            format!(
+                "  {{\"name\": \"{}\", \"mode\": \"{}\", \"len\": {}, \"points\": {}, \
+                 \"chunk_points\": {}, \"chunks_out\": {}, \"rows_per_sec\": {:.1}, \
+                 \"p50_ms\": {:.3}, \"p99_ms\": {:.3}}}",
+                r.name,
+                r.mode,
+                r.len,
+                r.points,
+                r.chunk_points,
+                r.chunks_out,
+                r.rows_per_sec,
+                r.p50_ms,
+                r.p99_ms
+            )
+        })
+        .collect();
+    format!("[\n{}\n]\n", rows.join(",\n"))
+}
+
+fn quantile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * q).round() as usize;
+    sorted_ms[idx]
+}
+
+/// One configuration: bind a fresh ingress (its own chunk threshold)
+/// over the shared warm service and run `total` closed-loop calls.
+fn run_config(
+    service: &Arc<ConvService>,
+    mode: &'static str,
+    len: usize,
+    chunk_points: usize,
+    total: usize,
+) -> StreamRecord {
+    let ingress = IngressServer::bind(
+        "127.0.0.1:0",
+        Some(Arc::clone(service)),
+        None,
+        IngressConfig { stream_chunk_points: chunk_points, ..IngressConfig::default() },
+    )
+    .expect("ingress binds");
+
+    let mut rng = Rng::new(9_000 + len as u64);
+    let mut client = IngressClient::connect(ingress.local_addr()).expect("client connects");
+    let mut lat_ms = Vec::with_capacity(total);
+    let t0 = Instant::now();
+    for _ in 0..total {
+        let u = rng.normal_vec(HEADS * len);
+        let req = Request::Conv { kind: 0, len: len as u32, streams: vec![u] };
+        let t = Instant::now();
+        match client.call_retry(&req, 4096, Duration::from_micros(200)).expect("round trip") {
+            Reply::Ok { data, .. } => assert_eq!(data.len(), HEADS * len),
+            other => panic!("{mode}/{len}: unexpected reply: {other:?}"),
+        }
+        lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall = t0.elapsed();
+    client.finish();
+
+    let chunks_out =
+        ingress.stats().chunks_out.load(std::sync::atomic::Ordering::Relaxed);
+    let points = HEADS * len;
+    match mode {
+        "streamed" => assert!(
+            chunks_out as usize >= total * 2,
+            "streamed mode must actually chunk ({chunks_out} chunks for {total} calls)"
+        ),
+        _ => assert_eq!(chunks_out, 0, "single-frame mode must not chunk"),
+    }
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    StreamRecord {
+        name: format!("{mode}_{len}"),
+        mode,
+        len,
+        points,
+        chunk_points,
+        chunks_out,
+        rows_per_sec: total as f64 / wall.as_secs_f64(),
+        p50_ms: quantile(&lat_ms, 0.50),
+        p99_ms: quantile(&lat_ms, 0.99),
+    }
+}
+
+fn main() {
+    let total = env_usize("FFC_STREAM_REQUESTS", 64).max(8);
+    let chunk = env_usize("FFC_STREAM_CHUNK", 4096).max(1);
+
+    println!("== Streamed vs single-frame ingress replies (wire v2 chunk runs) ==");
+    println!("   {total} closed-loop calls per config, chunk = {chunk} points\n");
+
+    let service = Arc::new(
+        ConvService::start(
+            BackendConfig::Native,
+            "monarch",
+            BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(2) },
+        )
+        .expect("service starts"),
+    );
+    // Warm both buckets in-process so artifact compile stays out of the
+    // measured window.
+    let mut rng = Rng::new(1);
+    for len in LENS {
+        let u = rng.normal_vec(HEADS * len);
+        service
+            .call(ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] })
+            .expect("warmup conv ok");
+    }
+
+    let mut recs = Vec::new();
+    for len in LENS {
+        // Single-frame: threshold above any reply in this bench.
+        recs.push(run_config(&service, "single", len, usize::MAX / 2, total));
+        // Streamed: every reply becomes a multi-chunk run.
+        recs.push(run_config(&service, "streamed", len, chunk, total));
+    }
+
+    let mut t = Table::new(&[
+        "config",
+        "points",
+        "chunk_pts",
+        "chunks",
+        "rows_per_s",
+        "p50_ms",
+        "p99_ms",
+    ]);
+    for r in &recs {
+        t.row(vec![
+            r.name.clone(),
+            r.points.to_string(),
+            if r.mode == "streamed" { r.chunk_points.to_string() } else { "-".into() },
+            r.chunks_out.to_string(),
+            format!("{:.1}", r.rows_per_sec),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p99_ms),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n(streamed rows pay per-chunk framing on the reply path; the single-frame \
+         rows are the v1-equivalent baseline)"
+    );
+
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_ingress_stream.json");
+    std::fs::write(out, records_json(&recs)).expect("write BENCH_ingress_stream.json");
+    eprintln!("(wrote {out}: {} records)", recs.len());
+}

@@ -145,15 +145,27 @@ fn main() -> flashfftconv::Result<()> {
     // --- The same fleet behind the TCP ingress ---------------------------
     // Bind the wire-framed front on an ephemeral loopback port and drive
     // it with real TCP clients, including a live filter install over the
-    // wire (two-phase epoch swap, acked with the visible epoch).
+    // wire (two-phase epoch swap, acked with the visible epoch). The
+    // config is the hardened deployment shape: lifecycle deadlines so a
+    // stalled peer cannot pin a pool slot, and a reply deadline so no
+    // request outlives its usefulness on the wire.
     let ingress = IngressServer::bind(
         "127.0.0.1:0",
         Some(Arc::clone(&service)),
         None,
-        IngressConfig::default(),
+        IngressConfig {
+            idle_timeout: Some(Duration::from_secs(30)),
+            frame_timeout: Some(Duration::from_secs(5)),
+            write_timeout: Some(Duration::from_secs(5)),
+            reply_deadline: Some(Duration::from_secs(10)),
+            ..IngressConfig::default()
+        },
     )?;
     let addr = ingress.local_addr();
-    println!("\ningress listening on {addr} (wire v1); driving {clients} TCP clients...");
+    println!(
+        "\ningress listening on {addr} (wire v{}); driving {clients} TCP clients...",
+        flashfftconv::ingress::wire::WIRE_VERSION
+    );
     std::thread::scope(|s| {
         for c in 0..clients {
             s.spawn(move || {
@@ -191,5 +203,8 @@ fn main() -> flashfftconv::Result<()> {
         ist.replies_out.load(Ordering::Relaxed),
         ist.busy_replies.load(Ordering::Relaxed),
     );
+    // Graceful teardown: drain in-flight replies before closing.
+    ingress.shutdown(Duration::from_secs(2));
+    println!("ingress drained and shut down");
     Ok(())
 }

@@ -78,14 +78,25 @@ fn main() -> flashfftconv::Result<()> {
     // then an open_session / step / close_session decode whose tokens must
     // match the in-process greedy decode (the stack stays deterministic
     // through the network boundary).
+    // Hardened front: lifecycle deadlines evict stalled peers, a reply
+    // deadline bounds every wire round trip.
     let ingress = IngressServer::bind(
         "127.0.0.1:0",
         None,
         Some(Arc::clone(&server)),
-        IngressConfig::default(),
+        IngressConfig {
+            idle_timeout: Some(Duration::from_secs(30)),
+            frame_timeout: Some(Duration::from_secs(5)),
+            write_timeout: Some(Duration::from_secs(5)),
+            reply_deadline: Some(Duration::from_secs(10)),
+            ..IngressConfig::default()
+        },
     )?;
     let addr = ingress.local_addr();
-    println!("\ningress listening on {addr} (wire v1); decoding over the wire...");
+    println!(
+        "\ningress listening on {addr} (wire v{}); decoding over the wire...",
+        flashfftconv::ingress::wire::WIRE_VERSION
+    );
     let mut client = IngressClient::connect(addr)?;
 
     let logits = match client.call_retry(
@@ -132,5 +143,9 @@ fn main() -> flashfftconv::Result<()> {
         ist.frames_in.load(Ordering::Relaxed),
         ist.replies_out.load(Ordering::Relaxed),
     );
+    // Graceful teardown: the drained sessions were closed above, so this
+    // returns as soon as the pool is quiet.
+    ingress.shutdown(Duration::from_secs(2));
+    println!("ingress drained and shut down");
     Ok(())
 }

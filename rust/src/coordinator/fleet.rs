@@ -1413,6 +1413,30 @@ impl<P: ShardProfile> FleetDispatcher<P> {
             p99_ms: LatencyHistogram::quantile_ms(&hist, 0.99),
         }
     }
+
+    /// Wait until every admitted request has settled (the in-flight
+    /// gauge reads zero) or `timeout` elapses; returns whether the fleet
+    /// went quiet. Graceful front-end shutdown uses this to let accepted
+    /// work drain before tearing down the wire — new submissions are the
+    /// caller's problem (stop feeding the fleet first).
+    pub fn quiesce(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.shared.inflight.lock().unwrap();
+        loop {
+            if *g == 0 {
+                return true;
+            }
+            let rem = deadline.saturating_duration_since(Instant::now());
+            if rem.is_zero() {
+                return false;
+            }
+            // The completion condvar signals on every release; a short
+            // cap makes a lost wakeup harmless.
+            let (g2, _) =
+                self.shared.cv.wait_timeout(g, rem.min(Duration::from_millis(50))).unwrap();
+            g = g2;
+        }
+    }
 }
 
 impl<P: ShardProfile> Drop for FleetDispatcher<P> {

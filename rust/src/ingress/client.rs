@@ -4,14 +4,26 @@
 //! exposes both a synchronous `call` path and a split `send`/`recv` pair
 //! for pipelining (the server guarantees FIFO replies per connection, so
 //! `recv` returns replies in exactly the order requests were sent).
-//! [`IngressClient::call_retry`] adds the canonical backoff loop for the
-//! retryable statuses (`busy`, `shard_died`).
+//!
+//! The client speaks [`wire::WIRE_VERSION`] by default and can be pinned
+//! to an older version with [`IngressClient::connect_v`] (the server
+//! answers every request at the version it arrived in). At v2, `recv`
+//! transparently reassembles streamed `ok_chunk` runs back into one
+//! [`Reply::Ok`] — callers see identical results whether the server
+//! streamed or not; [`IngressClient::recv_raw`] exposes the raw frames
+//! for tests and incremental consumers.
+//!
+//! [`IngressClient::call_retry`] adds the canonical retry loop for the
+//! retryable statuses (`busy`, `shard_died`, `timed_out`) with capped
+//! jittered exponential backoff ([`crate::ingress::limits`]), so a
+//! thundering herd that sheds together does not retry together.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::format_err;
+use crate::ingress::limits;
 use crate::ingress::wire::{self, Reply, Request};
 
 /// One client connection to an [`crate::ingress::IngressServer`].
@@ -19,14 +31,58 @@ pub struct IngressClient {
     r: BufReader<TcpStream>,
     w: BufWriter<TcpStream>,
     next_id: u64,
+    version: u8,
+    backoff_seed: u64,
 }
 
 impl IngressClient {
-    /// Connect to an ingress endpoint.
+    /// Connect to an ingress endpoint speaking the current wire version.
     pub fn connect(addr: impl ToSocketAddrs) -> crate::Result<Self> {
+        Self::connect_v(addr, wire::WIRE_VERSION)
+    }
+
+    /// Connect pinned to a specific wire version (compatibility testing,
+    /// or talking to an older server). `version` must be within
+    /// [`wire::MIN_WIRE_VERSION`]`..=`[`wire::WIRE_VERSION`].
+    pub fn connect_v(addr: impl ToSocketAddrs, version: u8) -> crate::Result<Self> {
+        if !(wire::MIN_WIRE_VERSION..=wire::WIRE_VERSION).contains(&version) {
+            return Err(format_err!(
+                "unsupported wire version {version} (valid: {}..={})",
+                wire::MIN_WIRE_VERSION,
+                wire::WIRE_VERSION
+            ));
+        }
         let stream = TcpStream::connect(addr)?;
+        // Seed the retry jitter from the ephemeral port: cheap, unique
+        // per connection, and deterministic once the connection exists.
+        let seed = stream.local_addr().map(|a| a.port() as u64).unwrap_or(1) | 1;
         let w = BufWriter::new(stream.try_clone()?);
-        Ok(Self { r: BufReader::new(stream), w, next_id: 1 })
+        Ok(Self {
+            r: BufReader::new(stream),
+            w,
+            next_id: 1,
+            version,
+            backoff_seed: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        })
+    }
+
+    /// The wire version this client speaks.
+    pub fn version(&self) -> u8 {
+        self.version
+    }
+
+    /// Apply socket-level read/write timeouts, so tests (and cautious
+    /// callers) can bound every blocking client op against a wedged or
+    /// stalled server. `None` restores indefinite blocking.
+    pub fn set_timeouts(
+        &mut self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> crate::Result<()> {
+        let s = self.r.get_ref();
+        s.set_read_timeout(read.map(|d| d.max(Duration::from_millis(1))))?;
+        s.set_write_timeout(write.map(|d| d.max(Duration::from_millis(1))))?;
+        Ok(())
     }
 
     /// Send one request frame without waiting for the reply; returns the
@@ -35,34 +91,77 @@ impl IngressClient {
     pub fn send(&mut self, req: &Request) -> crate::Result<u64> {
         let id = self.next_id;
         self.next_id += 1;
-        self.w.write_all(&wire::encode_request(id, req))?;
+        self.w.write_all(&wire::encode_request_v(id, req, self.version))?;
         self.w.flush()?;
         Ok(id)
     }
 
-    /// Receive the next reply in FIFO order. Errors if the connection
-    /// closed or the frame did not decode.
-    pub fn recv(&mut self) -> crate::Result<(u64, Reply)> {
+    /// Receive the next reply frame as-is — no chunk reassembly. A
+    /// streamed reply surfaces as its individual [`Reply::OkChunk`]
+    /// frames, in order.
+    pub fn recv_raw(&mut self) -> crate::Result<(u64, Reply)> {
         let body = wire::read_frame(&mut self.r)?
             .ok_or_else(|| format_err!("connection closed by server"))?;
         wire::decode_reply(&body).map_err(|e| format_err!(e))
+    }
+
+    /// Receive the next *logical* reply in FIFO order, reassembling a
+    /// streamed `ok_chunk` run into one [`Reply::Ok`]. Errors if the
+    /// connection closed, a frame did not decode, or a chunk run is
+    /// torn (id change, non-contiguous `seq`, or EOF before `fin`).
+    pub fn recv(&mut self) -> crate::Result<(u64, Reply)> {
+        let (id, first) = self.recv_raw()?;
+        let Reply::OkChunk { epoch, seq, fin, data } = first else {
+            return Ok((id, first));
+        };
+        if seq != 0 {
+            return Err(format_err!("streamed reply began at seq {seq}, expected 0"));
+        }
+        let mut all = data;
+        let mut done = fin;
+        let mut expect = 1u32;
+        while !done {
+            let (cid, part) = self.recv_raw()?;
+            let Reply::OkChunk { seq, fin, data, .. } = part else {
+                return Err(format_err!("chunk run for request {id} torn by a non-chunk frame"));
+            };
+            if cid != id {
+                return Err(format_err!(
+                    "chunk run for request {id} interleaved with request {cid}"
+                ));
+            }
+            if seq != expect {
+                return Err(format_err!(
+                    "chunk run for request {id}: got seq {seq}, expected {expect}"
+                ));
+            }
+            all.extend_from_slice(&data);
+            expect += 1;
+            done = fin;
+        }
+        Ok((id, Reply::Ok { epoch, session: None, data: all }))
     }
 
     /// Synchronous request/reply round trip.
     pub fn call(&mut self, req: &Request) -> crate::Result<Reply> {
         let id = self.send(req)?;
         let (rid, reply) = self.recv()?;
-        if rid != id {
+        if rid != id && rid != 0 {
             // Only possible if the caller mixed `send` pipelining with
-            // `call` and dropped a pending reply on the floor.
+            // `call` and dropped a pending reply on the floor. Id 0 is
+            // exempt: server notices (deadline / quota) carry it.
             return Err(format_err!("reply id {rid} does not match request id {id}"));
         }
         Ok(reply)
     }
 
-    /// `call`, retrying retryable statuses (`busy`, `shard_died`) with a
-    /// fixed backoff. Returns the first terminal reply, or the last
-    /// retryable one once attempts are exhausted.
+    /// `call`, retrying retryable statuses (`busy`, `shard_died`,
+    /// `timed_out`) with capped jittered exponential backoff: the slot
+    /// starts at `backoff`, doubles per attempt, caps at
+    /// `backoff << `[`limits::BACKOFF_MAX_SHIFT`], and each sleep is
+    /// uniformly jittered in `[slot/2, slot]`. Returns the first
+    /// terminal reply, or the last retryable one once attempts are
+    /// exhausted.
     pub fn call_retry(
         &mut self,
         req: &Request,
@@ -70,11 +169,15 @@ impl IngressClient {
         backoff: Duration,
     ) -> crate::Result<Reply> {
         let mut last = self.call(req)?;
-        for _ in 1..max_attempts {
+        for attempt in 1..max_attempts {
             if !last.retryable() {
                 return Ok(last);
             }
-            std::thread::sleep(backoff);
+            std::thread::sleep(limits::backoff_delay(
+                backoff,
+                (attempt - 1) as u32,
+                &mut self.backoff_seed,
+            ));
             last = self.call(req)?;
         }
         Ok(last)

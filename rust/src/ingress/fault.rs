@@ -1,0 +1,332 @@
+//! Fault injection for the ingress front: a byte-stream wrapper that
+//! dribbles, delays, and cuts ([`FaultyStream`]), and a TCP
+//! man-in-the-middle ([`ChaosProxy`]) that applies a [`FaultPlan`] per
+//! direction — including *held-open stalls*, the slow-loris shape a
+//! plain stream wrapper cannot express without blocking its caller.
+//!
+//! This lives in the library (not `tests/`) on purpose: the chaos suite,
+//! the e2e suites, and ad-hoc soak binaries all drive the same faults,
+//! and keeping the injector next to the ingress keeps its semantics in
+//! lockstep with the deadline machinery it exists to prove.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// What to do to one direction of a byte stream.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan {
+    /// Forward at most this many bytes per read/write (0 = unlimited):
+    /// `chunk: 1` is the canonical dribbler.
+    pub chunk: usize,
+    /// Sleep this long before each forwarded chunk.
+    pub delay: Duration,
+    /// After this many bytes, stop forwarding but *hold the connection
+    /// open* (proxy) / fail further ops with `TimedOut` (stream wrapper,
+    /// which must never block its caller forever).
+    pub stall_after: Option<usize>,
+    /// After this many bytes, close abruptly (mid-frame disconnect).
+    pub cut_after: Option<usize>,
+}
+
+impl FaultPlan {
+    /// Pass-through: no faults.
+    pub fn clean() -> Self {
+        Self::default()
+    }
+
+    /// One byte at a time with `delay` between bytes.
+    pub fn dribble(delay: Duration) -> Self {
+        Self { chunk: 1, delay, ..Self::default() }
+    }
+
+    /// Forward `n` bytes normally, then cut the connection.
+    pub fn cut_after(n: usize) -> Self {
+        Self { cut_after: Some(n), ..Self::default() }
+    }
+
+    /// Forward `n` bytes normally, then stall (hold open, forward
+    /// nothing more).
+    pub fn stall_after(n: usize) -> Self {
+        Self { stall_after: Some(n), ..Self::default() }
+    }
+}
+
+/// A `Read + Write` wrapper that applies a [`FaultPlan`] to each
+/// direction independently. Unlike the proxy, a stalled wrapper returns
+/// `ErrorKind::TimedOut` instead of parking — a unit-test harness must
+/// never be able to hang on its own injector.
+pub struct FaultyStream<S> {
+    inner: S,
+    read_plan: FaultPlan,
+    write_plan: FaultPlan,
+    read_bytes: usize,
+    write_bytes: usize,
+}
+
+impl<S> FaultyStream<S> {
+    /// Wrap `inner` with the same plan in both directions.
+    pub fn new(inner: S, plan: FaultPlan) -> Self {
+        Self::split(inner, plan, plan)
+    }
+
+    /// Wrap `inner` with independent read/write plans.
+    pub fn split(inner: S, read_plan: FaultPlan, write_plan: FaultPlan) -> Self {
+        Self { inner, read_plan, write_plan, read_bytes: 0, write_bytes: 0 }
+    }
+
+    /// The wrapped stream (for shutdown calls etc.).
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    fn gate(plan: &FaultPlan, so_far: usize) -> std::io::Result<()> {
+        if plan.cut_after.map_or(false, |c| so_far >= c) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "fault injection: connection cut",
+            ));
+        }
+        if plan.stall_after.map_or(false, |s| so_far >= s) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "fault injection: stream stalled",
+            ));
+        }
+        if !plan.delay.is_zero() {
+            std::thread::sleep(plan.delay);
+        }
+        Ok(())
+    }
+
+    /// Bytes the plan allows through right now: bounded by `chunk` and
+    /// clipped so a single large read/write can never overshoot a
+    /// `stall_after` / `cut_after` threshold — fault points are
+    /// byte-exact, which the deadline tests rely on.
+    fn clip(plan: &FaultPlan, so_far: usize, want: usize) -> usize {
+        let mut n = if plan.chunk == 0 { want } else { want.min(plan.chunk) };
+        if let Some(c) = plan.cut_after {
+            n = n.min(c - so_far);
+        }
+        if let Some(s) = plan.stall_after {
+            n = n.min(s - so_far);
+        }
+        n
+    }
+}
+
+impl<S: Read> Read for FaultyStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        Self::gate(&self.read_plan, self.read_bytes)?;
+        let n = Self::clip(&self.read_plan, self.read_bytes, buf.len());
+        let got = self.inner.read(&mut buf[..n])?;
+        self.read_bytes += got;
+        Ok(got)
+    }
+}
+
+impl<S: Write> Write for FaultyStream<S> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        Self::gate(&self.write_plan, self.write_bytes)?;
+        let n = Self::clip(&self.write_plan, self.write_bytes, buf.len());
+        let put = self.inner.write(&buf[..n])?;
+        self.write_bytes += put;
+        Ok(put)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Per-connection state the proxy keeps for teardown.
+struct ProxyShared {
+    shutdown: AtomicBool,
+    /// Clones of every live socket (both legs of every pair) so `Drop`
+    /// can unblock parked pumps and release held-open stalls.
+    socks: Mutex<Vec<TcpStream>>,
+    pumps: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A chaos TCP proxy: listens on an ephemeral loopback port, forwards
+/// every accepted connection to `upstream`, and applies `up` (client →
+/// server) and `down` (server → client) fault plans to the byte flow.
+/// `stall_after` here genuinely holds the connection open doing nothing
+/// — the slow-loris / stalled-reply shapes — until the proxy is dropped.
+pub struct ChaosProxy {
+    local_addr: SocketAddr,
+    shared: Arc<ProxyShared>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Start proxying `127.0.0.1:0` → `upstream`.
+    pub fn start(upstream: SocketAddr, up: FaultPlan, down: FaultPlan) -> crate::Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(ProxyShared {
+            shutdown: AtomicBool::new(false),
+            socks: Mutex::new(Vec::new()),
+            pumps: Mutex::new(Vec::new()),
+        });
+        let acc = Arc::clone(&shared);
+        let acceptor = std::thread::Builder::new().name("chaos-accept".into()).spawn(move || {
+            loop {
+                let client = match listener.accept() {
+                    Ok((s, _)) => s,
+                    Err(_) => return,
+                };
+                if acc.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let server = match TcpStream::connect(upstream) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        let _ = client.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                };
+                // Register both legs for teardown, then pump each
+                // direction on its own thread.
+                {
+                    let mut socks = acc.socks.lock().unwrap();
+                    if let (Ok(c), Ok(s)) = (client.try_clone(), server.try_clone()) {
+                        socks.push(c);
+                        socks.push(s);
+                    }
+                }
+                let legs = [
+                    (client.try_clone(), server.try_clone(), up),
+                    (server.try_clone(), client.try_clone(), down),
+                ];
+                for (src, dst, plan) in legs {
+                    let (Ok(src), Ok(dst)) = (src, dst) else { continue };
+                    let h = std::thread::Builder::new()
+                        .name("chaos-pump".into())
+                        .spawn(move || pump(src, dst, plan));
+                    if let Ok(h) = h {
+                        acc.pumps.lock().unwrap().push(h);
+                    }
+                }
+            }
+        })?;
+        Ok(Self { local_addr, shared, acceptor: Some(acceptor) })
+    }
+
+    /// The address clients should connect to.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Kick the acceptor off `accept()`, then release every held
+        // socket so stalled pumps and held-open connections die.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for s in self.shared.socks.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let pumps = std::mem::take(&mut *self.shared.pumps.lock().unwrap());
+        for h in pumps {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Forward bytes `src` → `dst` under `plan`. Exits on EOF (propagating
+/// the half-close), on error, on `cut_after` (hard close both legs), or
+/// on `stall_after` (exit silently; registered clones keep the pair
+/// open until the proxy is dropped).
+fn pump(mut src: TcpStream, mut dst: TcpStream, plan: FaultPlan) {
+    let cap = if plan.chunk == 0 { 16 << 10 } else { plan.chunk };
+    let mut buf = vec![0u8; cap];
+    let mut forwarded = 0usize;
+    loop {
+        if plan.cut_after.map_or(false, |c| forwarded >= c) {
+            let _ = src.shutdown(Shutdown::Both);
+            let _ = dst.shutdown(Shutdown::Both);
+            return;
+        }
+        if plan.stall_after.map_or(false, |s| forwarded >= s) {
+            return; // held open: registry clones own the sockets now
+        }
+        // Clip each read so the fault point is byte-exact: a single
+        // large read must not carry bytes past the threshold.
+        let budget = FaultyStream::<TcpStream>::clip(&plan, forwarded, buf.len());
+        let n = match src.read(&mut buf[..budget]) {
+            Ok(0) => {
+                let _ = dst.shutdown(Shutdown::Write);
+                return;
+            }
+            Ok(n) => n,
+            Err(_) => {
+                let _ = dst.shutdown(Shutdown::Both);
+                return;
+            }
+        };
+        if !plan.delay.is_zero() {
+            std::thread::sleep(plan.delay);
+        }
+        if dst.write_all(&buf[..n]).and_then(|_| dst.flush()).is_err() {
+            let _ = src.shutdown(Shutdown::Both);
+            return;
+        }
+        forwarded += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn faulty_stream_dribbles_and_counts() {
+        let data = b"hello world".to_vec();
+        let mut s = FaultyStream::new(std::io::Cursor::new(data.clone()), FaultPlan::dribble(
+            Duration::ZERO,
+        ));
+        let mut out = Vec::new();
+        let mut one = [0u8; 8];
+        loop {
+            match s.read(&mut one).unwrap() {
+                0 => break,
+                n => {
+                    assert_eq!(n, 1, "dribble must hand out one byte per read");
+                    out.extend_from_slice(&one[..n]);
+                }
+            }
+        }
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn faulty_stream_cut_is_a_typed_error_not_a_hang() {
+        let mut s = FaultyStream::new(
+            std::io::Cursor::new(vec![0u8; 64]),
+            FaultPlan { chunk: 4, cut_after: Some(8), ..FaultPlan::default() },
+        );
+        let mut buf = [0u8; 16];
+        assert_eq!(s.read(&mut buf).unwrap(), 4);
+        assert_eq!(s.read(&mut buf).unwrap(), 4);
+        let err = s.read(&mut buf).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::ConnectionReset);
+    }
+
+    #[test]
+    fn faulty_stream_stall_times_out_instead_of_blocking() {
+        let mut s = FaultyStream::new(
+            std::io::Cursor::new(Vec::new()),
+            FaultPlan { stall_after: Some(0), ..FaultPlan::default() },
+        );
+        let err = s.write(b"x").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+    }
+}

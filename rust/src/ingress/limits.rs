@@ -1,0 +1,170 @@
+//! Quota primitives for the ingress front: a token-bucket rate limiter
+//! and the capped-jittered-exponential retry backoff schedule shared by
+//! [`crate::ingress::client::IngressClient::call_retry`].
+//!
+//! Both are deterministic under test: the bucket takes an explicit
+//! `Instant` so time can be advanced synthetically, and the backoff
+//! schedule is a pure function of `(base, attempt, seed)`.
+
+use std::time::{Duration, Instant};
+
+/// Rate-limit configuration: sustained requests/second plus a burst
+/// allowance (the bucket capacity).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateLimit {
+    /// Steady-state refill rate, requests per second. Must be positive.
+    pub per_sec: f64,
+    /// Bucket capacity: how many requests may arrive back-to-back after
+    /// an idle period before shedding starts. Clamped to at least 1.
+    pub burst: f64,
+}
+
+impl RateLimit {
+    /// A limiter allowing `per_sec` sustained with `burst` headroom.
+    pub fn new(per_sec: f64, burst: f64) -> Self {
+        Self { per_sec: per_sec.max(f64::MIN_POSITIVE), burst: burst.max(1.0) }
+    }
+}
+
+/// Classic token bucket: `burst` capacity, `per_sec` refill, one token
+/// per request. Time is injected so tests are deterministic and the
+/// caller pays for exactly one `Instant::now()` per frame.
+#[derive(Debug)]
+pub struct TokenBucket {
+    limit: RateLimit,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// A full bucket as of `now`.
+    pub fn new(limit: RateLimit, now: Instant) -> Self {
+        Self { limit, tokens: limit.burst, last: now }
+    }
+
+    /// Try to take one token at time `now`; `false` means shed. `now`
+    /// values that go backwards (monotonic clock oddities across
+    /// threads) refill nothing rather than panicking.
+    pub fn try_take(&mut self, now: Instant) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.limit.per_sec).min(self.limit.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tokens currently available (diagnostics / tests).
+    pub fn available(&self) -> f64 {
+        self.tokens
+    }
+}
+
+/// How many doublings the backoff slot grows before capping. With a 1 ms
+/// base the cap is 64 ms per retry — bounded worst-case retry latency.
+pub const BACKOFF_MAX_SHIFT: u32 = 6;
+
+/// The jittered backoff delay before retry number `attempt` (0-based:
+/// the delay between the first and second tries is `attempt == 0`).
+///
+/// The slot doubles per attempt and caps at `base << BACKOFF_MAX_SHIFT`;
+/// the returned delay is uniformly jittered in `[slot/2, slot]` (a
+/// "decorrelated half-jitter": concurrent clients that shed together do
+/// not retry together). `seed` advances an xorshift state, so a fixed
+/// seed gives a reproducible schedule.
+pub fn backoff_delay(base: Duration, attempt: u32, seed: &mut u64) -> Duration {
+    let base = base.max(Duration::from_micros(1));
+    let slot = base.saturating_mul(1u32 << attempt.min(BACKOFF_MAX_SHIFT));
+    // xorshift64* — tiny, seedable, good enough for jitter.
+    let mut x = (*seed).max(1);
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *seed = x;
+    let unit = (x >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+    slot.div_f64(2.0) + slot.div_f64(2.0).mul_f64(unit)
+}
+
+/// The full delay schedule for `attempts` retries — what a
+/// `call_retry(req, attempts + 1, base)` loop will sleep between tries.
+/// Exposed so tests (and capacity planning) can audit the envelope
+/// without sleeping through it.
+pub fn backoff_schedule(base: Duration, attempts: usize, mut seed: u64) -> Vec<Duration> {
+    (0..attempts).map(|a| backoff_delay(base, a as u32, &mut seed)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_sheds_past_burst_and_refills() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(RateLimit::new(10.0, 3.0), t0);
+        // The burst drains in full, then sheds.
+        assert!(b.try_take(t0));
+        assert!(b.try_take(t0));
+        assert!(b.try_take(t0));
+        assert!(!b.try_take(t0), "4th back-to-back request must shed at burst 3");
+        // 100 ms at 10/s refills exactly one token.
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(b.try_take(t1));
+        assert!(!b.try_take(t1));
+        // A long idle refills to capacity, never beyond.
+        let t2 = t1 + Duration::from_secs(60);
+        for _ in 0..3 {
+            assert!(b.try_take(t2));
+        }
+        assert!(!b.try_take(t2), "bucket must cap at burst after idle");
+    }
+
+    #[test]
+    fn token_bucket_tolerates_non_monotonic_now() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(RateLimit::new(1000.0, 1.0), t0 + Duration::from_secs(1));
+        assert!(b.try_take(t0 + Duration::from_secs(1)));
+        // An earlier `now` must not panic or mint tokens.
+        assert!(!b.try_take(t0));
+    }
+
+    #[test]
+    fn backoff_is_jittered_bounded_and_monotone_capped() {
+        let base = Duration::from_millis(1);
+        let sched = backoff_schedule(base, 12, 0xC0FFEE);
+        assert_eq!(sched.len(), 12);
+        for (a, d) in sched.iter().enumerate() {
+            let slot = base * (1u32 << (a as u32).min(BACKOFF_MAX_SHIFT));
+            assert!(
+                *d >= slot / 2 && *d <= slot,
+                "attempt {a}: delay {d:?} outside jitter window [{:?}, {slot:?}]",
+                slot / 2
+            );
+        }
+        // Monotone-capped envelope: the slot ceiling never decreases and
+        // stops growing at the cap.
+        let cap = base * (1u32 << BACKOFF_MAX_SHIFT);
+        assert!(sched[BACKOFF_MAX_SHIFT as usize..].iter().all(|d| *d <= cap && *d >= cap / 2));
+        // Total worst-case sleep for N retries is bounded: sum of slots.
+        let total: Duration = sched.iter().sum();
+        let bound: Duration =
+            (0..12u32).map(|a| base * (1u32 << a.min(BACKOFF_MAX_SHIFT))).sum();
+        assert!(total <= bound);
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_per_seed() {
+        let base = Duration::from_millis(2);
+        assert_eq!(backoff_schedule(base, 8, 7), backoff_schedule(base, 8, 7));
+        assert_ne!(backoff_schedule(base, 8, 7), backoff_schedule(base, 8, 8));
+    }
+
+    #[test]
+    fn backoff_zero_base_is_clamped() {
+        let mut seed = 1;
+        let d = backoff_delay(Duration::ZERO, 3, &mut seed);
+        assert!(d > Duration::ZERO, "zero base must not produce a hot-spin retry loop");
+    }
+}

@@ -3,20 +3,24 @@
 //! This is the boundary that turns the in-process [`ConvService`] /
 //! [`ModelServer`] fleets into a *server*: external clients speak the
 //! length-prefixed binary protocol documented in [`wire`] (frame layout,
-//! opcodes, status codes, version byte, epoch semantics) over plain TCP,
-//! and the ingress translates frames into the existing `(kind, bucket)`
-//! admission without any new dependencies — std sockets and threads only.
+//! opcodes, status codes, version negotiation, epoch semantics) over
+//! plain TCP, and the ingress translates frames into the existing
+//! `(kind, bucket)` admission without any new dependencies — std sockets
+//! and threads only.
 //!
 //! ## Architecture
 //!
 //! ```text
 //! accept thread ── bounded pool ──► per-connection reader ──► fleet admission
-//!                                        │ (decode, submit,        │
-//!                                        │  session ops)           │ Receiver<FleetReply>
+//!                                        │ (deadline reads,        │
+//!                                        │  quotas, decode,        │ Receiver<FleetReply>
+//!                                        │  submit, sessions)      │
 //!                                        ▼                         ▼
 //!                                  FIFO pending queue ──► per-connection writer
-//!                                                          (epoch watermark,
-//!                                                           encode, write)
+//!                                                          (reply deadlines,
+//!                                                           epoch watermark,
+//!                                                           chunked streaming,
+//!                                                           write deadlines)
 //! ```
 //!
 //! * **Acceptor + bounded pool.** One accept loop; each accepted
@@ -25,55 +29,148 @@
 //!   frame (request id 0) and closed — the same retryable status the
 //!   fleet uses, so clients need one backoff path.
 //! * **Load shed, never block.** `conv` / `lm_logits` frames go through
-//!   the fleet's non-blocking admission ([`FleetDispatcher::try_submit`]
-//!   semantics); `FleetError::Busy` becomes a retryable `busy` reply on
-//!   the wire instead of TCP backpressure, so a saturated fleet stays
-//!   observable from outside.
+//!   the fleet's non-blocking admission; `FleetError::Busy` becomes a
+//!   retryable `busy` reply on the wire instead of TCP backpressure, so
+//!   a saturated fleet stays observable from outside.
 //! * **FIFO replies.** Replies are delivered in request order per
 //!   connection (a pending queue carries either resolved replies or
 //!   fleet receivers; the writer resolves them in order). Pipelining is
-//!   therefore safe, and the per-connection **epoch watermark** is
-//!   well-defined: the writer delivers every `ok` with
-//!   `max(watermark, served_epoch)` and ratchets the watermark, so a
-//!   client never observes filter epoch `e` and then `e - 1`
-//!   (see [`wire`] for the full two-phase-swap contract).
+//!   therefore safe, the chunk run of a streamed reply is contiguous,
+//!   and the per-connection **epoch watermark** is well-defined: the
+//!   writer delivers every `ok` with `max(watermark, served_epoch)` and
+//!   ratchets the watermark, so a client never observes filter epoch `e`
+//!   and then `e - 1` (see [`wire`] for the two-phase-swap contract).
 //! * **Session hygiene.** Decode sessions opened on a connection are
 //!   tracked by the reader and best-effort closed on connection teardown
-//!   (client disconnect, shed, or server shutdown), so a vanished client
-//!   cannot strand slots in the engine's capped session map.
+//!   (client disconnect, shed, deadline eviction, or server shutdown),
+//!   so a vanished client cannot strand slots in the engine's capped
+//!   session map.
+//!
+//! ## Deadlines, quotas, and streaming
+//!
+//! The deployment-hardening layer (PR 8). All knobs live on
+//! [`IngressConfig`] and every enforcement point answers with a *typed*
+//! wire status — a misbehaving or unlucky peer sees `busy` / `timed_out`
+//! / `quota` frames, never a silent close or an unbounded wait:
+//!
+//! * **Read deadlines.** [`IngressConfig::idle_timeout`] bounds the wait
+//!   for the *first byte* of the next frame; once a frame has started,
+//!   [`IngressConfig::frame_timeout`] bounds the whole frame against an
+//!   *absolute* deadline, so a slow-loris dribbling one byte per
+//!   keep-alive interval cannot reset the clock and pin a pool slot.
+//!   On expiry the connection gets a `timed_out` frame and is closed;
+//!   other connections are unaffected.
+//! * **Write deadlines.** [`IngressConfig::write_timeout`] caps each
+//!   writer syscall, so a peer that stops reading (full TCP window)
+//!   cannot park the FIFO writer forever; the connection is torn down
+//!   and its fleet slots drain harmlessly.
+//! * **Reply deadlines.** [`IngressConfig::reply_deadline`] bounds how
+//!   long the writer waits for the fleet; past it the client gets a
+//!   retryable `timed_out` and the eventual fleet reply is discarded
+//!   (reply slots tolerate an abandoned receiver), so no request
+//!   outlives its deadline on the wire.
+//! * **Per-connection quotas.** [`IngressConfig::max_inflight_per_conn`]
+//!   sheds pipelined requests beyond the cap with retryable `busy`;
+//!   [`IngressConfig::rate_limit`] is a token bucket shedding with
+//!   `busy`; [`IngressConfig::conn_byte_budget`] is a *cumulative*
+//!   decoded-payload budget — exhausting it earns a non-retryable
+//!   `quota` frame and a close.
+//! * **Streaming replies.** Replies larger than
+//!   [`IngressConfig::stream_chunk_points`] stream to wire-v2 requesters
+//!   as a contiguous `ok_chunk` run (`seq` + `fin`), so a ≥1M-point
+//!   genome-length conv reply crosses the wire in bounded frames; v1
+//!   requesters keep single-frame replies (with a typed `failed` if one
+//!   cannot fit [`wire::MAX_FRAME`]).
+//! * **Graceful shutdown.** [`IngressServer::shutdown`] stops the
+//!   acceptor, half-closes every connection's read side, and gives
+//!   in-flight replies a grace window to drain before hard-closing —
+//!   `Drop` remains the immediate teardown path.
+//!
+//! The fault-injection harness for all of the above lives in [`fault`]
+//! (a reusable [`fault::FaultyStream`] + [`fault::ChaosProxy`]) and the
+//! `ingress_chaos` test suite.
 //!
 //! The ingress is profile-agnostic at bind time: pass the conv service,
 //! the model server, or both; frames addressing an unbound service get a
 //! `bad_request` reply.
 
 pub mod client;
+pub mod fault;
+pub mod limits;
 pub mod wire;
 
 use std::collections::HashMap;
-use std::io::{BufReader, BufWriter, Write};
+use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::Receiver;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::fleet::{FleetError, FleetReply};
 use crate::coordinator::router::ConvKind;
 use crate::coordinator::service::{ConvRequest, ConvService};
 use crate::server::{InferRequest, ModelRequest, ModelServer};
+use limits::{RateLimit, TokenBucket};
 use wire::{Reply, Request};
 
-/// Ingress tuning knobs.
+/// Ceiling on the effective stream chunk (f32 points per frame): keeps
+/// every chunk frame comfortably under [`wire::MAX_FRAME`] even if the
+/// configured chunk size is absurd.
+const MAX_CHUNK_POINTS: usize = 4 << 20;
+
+/// Ingress tuning knobs: the pool bound, the connection-lifecycle
+/// deadlines, the per-connection quotas, and the streaming chunk size.
+/// See the module docs ("Deadlines, quotas, and streaming") for the
+/// semantics of each enforcement point.
 #[derive(Debug, Clone)]
 pub struct IngressConfig {
     /// Concurrent connection cap; connections beyond it are shed with a
     /// `busy` frame and closed.
     pub max_connections: usize,
+    /// Max wait for the first byte of the next frame (`None` = wait
+    /// forever). Expiry evicts the connection with `timed_out`.
+    pub idle_timeout: Option<Duration>,
+    /// Max wall-clock for one whole frame once its first byte arrived —
+    /// an absolute deadline, immune to byte-dribbling resets.
+    pub frame_timeout: Option<Duration>,
+    /// Per-syscall cap on the FIFO writer's writes (`None` = block).
+    pub write_timeout: Option<Duration>,
+    /// Max wait for a fleet reply before answering `timed_out` and
+    /// abandoning the receiver (`None` = wait for the fleet).
+    pub reply_deadline: Option<Duration>,
+    /// Max fleet-bound requests in flight per connection; excess sheds
+    /// with retryable `busy`.
+    pub max_inflight_per_conn: usize,
+    /// Optional per-connection token-bucket request rate limit; sheds
+    /// with retryable `busy`.
+    pub rate_limit: Option<RateLimit>,
+    /// Optional cumulative decoded-payload byte budget per connection;
+    /// exhaustion earns a non-retryable `quota` frame and a close.
+    pub conn_byte_budget: Option<u64>,
+    /// Replies with more f32 points than this stream to v2 requesters as
+    /// `ok_chunk` runs of at most this many points each.
+    pub stream_chunk_points: usize,
+    /// How long [`IngressServer::shutdown`] lets in-flight replies drain
+    /// before hard-closing stragglers.
+    pub drain_grace: Duration,
 }
 
 impl Default for IngressConfig {
     fn default() -> Self {
-        Self { max_connections: 64 }
+        Self {
+            max_connections: 64,
+            idle_timeout: Some(Duration::from_secs(120)),
+            frame_timeout: Some(Duration::from_secs(30)),
+            write_timeout: Some(Duration::from_secs(30)),
+            reply_deadline: None,
+            max_inflight_per_conn: 1024,
+            rate_limit: None,
+            conn_byte_budget: None,
+            stream_chunk_points: 1 << 16,
+            drain_grace: Duration::from_secs(5),
+        }
     }
 }
 
@@ -86,22 +183,41 @@ pub struct IngressStats {
     pub shed: AtomicU64,
     /// Request frames decoded.
     pub frames_in: AtomicU64,
-    /// Reply frames written.
+    /// Logical replies written (a streamed chunk run counts once).
     pub replies_out: AtomicU64,
-    /// `busy` replies sent (admission shed + pool shed).
+    /// `busy` replies sent (admission shed + pool shed + quota sheds).
     pub busy_replies: AtomicU64,
     /// Frames rejected with `bad_request`.
     pub bad_frames: AtomicU64,
     /// Decode sessions closed because their connection went away.
     pub sessions_reaped: AtomicU64,
+    /// Connections evicted by the idle/frame read deadlines.
+    pub read_timeouts: AtomicU64,
+    /// Writer-side deadline hits (peer stopped reading).
+    pub write_timeouts: AtomicU64,
+    /// Requests answered `timed_out` at the reply deadline.
+    pub reply_timeouts: AtomicU64,
+    /// Requests shed by the per-connection rate limit.
+    pub rate_shed: AtomicU64,
+    /// Requests shed by the per-connection inflight cap.
+    pub inflight_shed: AtomicU64,
+    /// Connections closed for exhausting their byte budget.
+    pub quota_closed: AtomicU64,
+    /// `ok_chunk` frames written (streamed replies only).
+    pub chunks_out: AtomicU64,
 }
 
 /// One entry in a connection's FIFO reply queue.
 enum Pending {
     /// Already resolved by the reader (session ops, control ops, shed).
-    Now { id: u64, reply: Reply },
-    /// In flight in the fleet; the writer resolves it in FIFO position.
-    Wait { id: u64, rx: Receiver<FleetReply> },
+    Now { id: u64, version: u8, reply: Reply },
+    /// In flight in the fleet; the writer resolves it in FIFO position,
+    /// bounded by `deadline` when set.
+    Wait { id: u64, version: u8, rx: Receiver<FleetReply>, deadline: Option<Instant> },
+    /// A server-originated notice (deadline eviction, quota close): not
+    /// correlated to a decoded request, written with id 0 and not
+    /// counted in `replies_out`.
+    Notice { version: u8, reply: Reply },
     /// Reader is done; the writer drains and exits.
     Done,
 }
@@ -136,6 +252,9 @@ struct Inner {
     cfg: IngressConfig,
     stats: IngressStats,
     shutdown: AtomicBool,
+    /// Teardown-ran-already latch: `shutdown()` and `Drop` share one
+    /// idempotent path.
+    closed: AtomicBool,
     /// Read-half registry so shutdown can unblock parked readers.
     conns: Mutex<HashMap<u64, TcpStream>>,
     conn_handles: Mutex<Vec<JoinHandle<()>>>,
@@ -143,8 +262,9 @@ struct Inner {
 }
 
 /// The TCP front. Bind it over a [`ConvService`], a [`ModelServer`], or
-/// both; drop it to stop accepting, unblock every connection, and join
-/// all worker threads.
+/// both. [`IngressServer::shutdown`] drains gracefully; dropping the
+/// server stops accepting, unblocks every connection immediately, and
+/// joins all worker threads.
 pub struct IngressServer {
     inner: Arc<Inner>,
     local_addr: SocketAddr,
@@ -169,6 +289,7 @@ impl IngressServer {
             cfg,
             stats: IngressStats::default(),
             shutdown: AtomicBool::new(false),
+            closed: AtomicBool::new(false),
             conns: Mutex::new(HashMap::new()),
             conn_handles: Mutex::new(Vec::new()),
             next_conn: AtomicU64::new(0),
@@ -189,17 +310,46 @@ impl IngressServer {
     pub fn stats(&self) -> &IngressStats {
         &self.inner.stats
     }
-}
 
-impl Drop for IngressServer {
-    fn drop(&mut self) {
+    /// Connections currently held in the pool (reader threads alive).
+    pub fn open_connections(&self) -> usize {
+        self.inner.conns.lock().unwrap().len()
+    }
+
+    /// Graceful shutdown: stop accepting, half-close every connection's
+    /// read side (clients see EOF; no new requests are read), let the
+    /// FIFO writers drain in-flight replies for up to `grace`, then
+    /// hard-close stragglers and join every thread. Idempotent with
+    /// `Drop` (which uses a zero grace).
+    pub fn shutdown(mut self, grace: Duration) {
+        self.teardown(grace);
+    }
+
+    fn teardown(&mut self, grace: Duration) {
+        if self.inner.closed.swap(true, Ordering::SeqCst) {
+            return;
+        }
         self.inner.shutdown.store(true, Ordering::SeqCst);
-        // Unblock the acceptor with a throwaway connection, then every
-        // parked reader by shutting its socket down.
+        // Unblock the acceptor with a throwaway connection, then join it
+        // — after this, the pool can only shrink.
         let _ = TcpStream::connect(self.local_addr);
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
         }
+        // Half-close read sides: parked readers wake with EOF, finish
+        // their FIFO, and their writers flush whatever the fleet still
+        // owes. Writers keep working during the grace window.
+        for (_, s) in self.inner.conns.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Read);
+        }
+        let deadline = Instant::now() + grace;
+        while Instant::now() < deadline {
+            if self.inner.conns.lock().unwrap().is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Hard-close stragglers (or everything, when grace is zero).
         for (_, s) in self.inner.conns.lock().unwrap().iter() {
             let _ = s.shutdown(Shutdown::Both);
         }
@@ -207,6 +357,12 @@ impl Drop for IngressServer {
         for h in handles {
             let _ = h.join();
         }
+    }
+}
+
+impl Drop for IngressServer {
+    fn drop(&mut self) {
+        self.teardown(Duration::ZERO);
     }
 }
 
@@ -229,7 +385,7 @@ fn accept_loop(listener: TcpListener, inner: Arc<Inner>) {
             inner.stats.shed.fetch_add(1, Ordering::Relaxed);
             inner.stats.busy_replies.fetch_add(1, Ordering::Relaxed);
             let mut s = stream;
-            let _ = s.write_all(&wire::encode_reply(0, &Reply::Busy));
+            let _ = s.write_all(&wire::encode_reply_v(0, &Reply::Busy, wire::MIN_WIRE_VERSION));
             let _ = s.flush();
             let _ = s.shutdown(Shutdown::Both);
             continue;
@@ -263,22 +419,119 @@ fn accept_loop(listener: TcpListener, inner: Arc<Inner>) {
     }
 }
 
-/// Reader side of one connection: decode frames, drive the fleet, track
-/// sessions, and feed the FIFO reply queue. Joins the writer, then reaps
-/// any sessions the client left open.
-fn run_connection(conn_id: u64, stream: TcpStream, inner: &Arc<Inner>) {
+/// Outcome of one deadline-bounded frame read.
+enum FrameRead {
+    Frame(Vec<u8>),
+    /// Clean EOF between frames.
+    Eof,
+    /// A read deadline fired; the name says which.
+    TimedOut(&'static str),
+    /// Torn frame, bad length word, or I/O error: the stream is
+    /// unusable.
+    Broken,
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Read some bytes with an absolute deadline, mapping the platform's
+/// `SO_RCVTIMEO` expiry (`WouldBlock` on Unix, `TimedOut` on Windows)
+/// back to a deadline check. `None` deadline blocks indefinitely.
+fn read_some(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: Option<Instant>,
+) -> std::io::Result<usize> {
+    loop {
+        let timeout = match deadline {
+            None => None,
+            Some(d) => {
+                let rem = d.saturating_duration_since(Instant::now());
+                if rem.is_zero() {
+                    return Err(std::io::ErrorKind::TimedOut.into());
+                }
+                // `set_read_timeout(Some(ZERO))` is an error; clamp up.
+                Some(rem.max(Duration::from_millis(1)))
+            }
+        };
+        stream.set_read_timeout(timeout)?;
+        match stream.read(buf) {
+            Ok(n) => return Ok(n),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            // Timeout kinds loop back so the deadline check (not the
+            // per-syscall timer) is authoritative.
+            Err(e) if is_timeout(&e) => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Read one frame under the connection-lifecycle deadlines: the *idle*
+/// deadline bounds the wait for the first byte; from that byte on, the
+/// whole frame must land before an absolute *frame* deadline — dribbling
+/// bytes does not reset it (the anti-slow-loris property).
+fn read_frame_deadline(stream: &mut TcpStream, cfg: &IngressConfig) -> FrameRead {
+    let idle_deadline = cfg.idle_timeout.map(|d| Instant::now() + d);
+    let mut frame_deadline: Option<Instant> = None;
+    let mut started = false;
+
+    let mut lenb = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let dl = if started { frame_deadline } else { idle_deadline };
+        match read_some(stream, &mut lenb[got..], dl) {
+            Ok(0) if got == 0 => return FrameRead::Eof,
+            Ok(0) => return FrameRead::Broken,
+            Ok(n) => {
+                if !started {
+                    started = true;
+                    frame_deadline = cfg.frame_timeout.map(|d| Instant::now() + d);
+                }
+                got += n;
+            }
+            Err(e) if is_timeout(&e) => {
+                return FrameRead::TimedOut(if started { "frame" } else { "idle" });
+            }
+            Err(_) => return FrameRead::Broken,
+        }
+    }
+    let len = match wire::check_frame_len(u32::from_le_bytes(lenb) as usize) {
+        Ok(l) => l,
+        Err(_) => return FrameRead::Broken,
+    };
+    let mut body = vec![0u8; len];
+    let mut off = 0usize;
+    while off < len {
+        match read_some(stream, &mut body[off..], frame_deadline) {
+            Ok(0) => return FrameRead::Broken,
+            Ok(n) => off += n,
+            Err(e) if is_timeout(&e) => return FrameRead::TimedOut("frame"),
+            Err(_) => return FrameRead::Broken,
+        }
+    }
+    FrameRead::Frame(body)
+}
+
+/// Reader side of one connection: deadline-bounded frame reads, quota
+/// enforcement, decode, fleet dispatch, session tracking, and the FIFO
+/// reply queue. Joins the writer, then reaps any sessions the client
+/// left open.
+fn run_connection(conn_id: u64, mut stream: TcpStream, inner: &Arc<Inner>) {
     let queue = Arc::new(PendingQueue::default());
+    let inflight = Arc::new(AtomicUsize::new(0));
     let write_half = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     };
     let w_queue = Arc::clone(&queue);
     let w_inner = Arc::clone(inner);
+    let w_inflight = Arc::clone(&inflight);
     let read_half = stream.try_clone().ok();
     let writer = std::thread::Builder::new()
         .name(format!("ingress-write-{conn_id}"))
         .spawn(move || {
-            write_loop(write_half, &w_queue, &w_inner, read_half);
+            write_loop(write_half, &w_queue, &w_inner, read_half, &w_inflight);
         });
     let writer = match writer {
         Ok(h) => h,
@@ -288,17 +541,60 @@ fn run_connection(conn_id: u64, stream: TcpStream, inner: &Arc<Inner>) {
     // Wire session id -> owning shard, for step/close routing and
     // teardown reaping.
     let mut sessions: HashMap<u64, usize> = HashMap::new();
-    let mut reader = BufReader::new(stream);
+    let mut bucket = inner.cfg.rate_limit.map(|rl| TokenBucket::new(rl, Instant::now()));
+    let mut spent_bytes: u64 = 0;
+    // Version of the most recent well-formed frame: server-originated
+    // notices speak whatever the client last spoke.
+    let mut peer_version = wire::MIN_WIRE_VERSION;
 
     loop {
-        let body = match wire::read_frame(&mut reader) {
-            Ok(Some(b)) => b,
-            // Clean EOF, torn frame, or a shutdown kick: stop reading.
-            Ok(None) | Err(_) => break,
+        let body = match read_frame_deadline(&mut stream, &inner.cfg) {
+            FrameRead::Frame(b) => b,
+            FrameRead::Eof | FrameRead::Broken => break,
+            FrameRead::TimedOut(which) => {
+                inner.stats.read_timeouts.fetch_add(1, Ordering::Relaxed);
+                queue.push(Pending::Notice {
+                    version: peer_version,
+                    reply: Reply::TimedOut {
+                        msg: format!("{which} deadline exceeded; closing connection"),
+                    },
+                });
+                break;
+            }
         };
         inner.stats.frames_in.fetch_add(1, Ordering::Relaxed);
+
+        // Cumulative decoded-payload budget: breach earns a typed quota
+        // frame and a close (non-retryable on this connection).
+        spent_bytes = spent_bytes.saturating_add(body.len() as u64);
+        if inner.cfg.conn_byte_budget.map_or(false, |b| spent_bytes > b) {
+            inner.stats.quota_closed.fetch_add(1, Ordering::Relaxed);
+            queue.push(Pending::Notice {
+                version: peer_version.max(wire::frame_version(&body).unwrap_or(1)),
+                reply: Reply::Quota {
+                    msg: format!(
+                        "connection byte budget exhausted ({spent_bytes} B decoded)"
+                    ),
+                },
+            });
+            break;
+        }
+
         match wire::decode_request(&body) {
-            Ok((id, req)) => handle_request(id, req, inner, &mut sessions, &queue),
+            Ok((id, req)) => {
+                let version = wire::frame_version(&body).unwrap_or(wire::MIN_WIRE_VERSION);
+                peer_version = version;
+                // Token-bucket rate limit: shed with retryable busy.
+                if let Some(b) = bucket.as_mut() {
+                    if !b.try_take(Instant::now()) {
+                        inner.stats.rate_shed.fetch_add(1, Ordering::Relaxed);
+                        inner.stats.busy_replies.fetch_add(1, Ordering::Relaxed);
+                        queue.push(Pending::Now { id, version, reply: Reply::Busy });
+                        continue;
+                    }
+                }
+                handle_request(id, version, req, inner, &mut sessions, &queue, &inflight);
+            }
             Err(e) => {
                 // Best-effort request-id recovery so the client can
                 // correlate the rejection (the id sits after version +
@@ -309,7 +605,11 @@ fn run_connection(conn_id: u64, stream: TcpStream, inner: &Arc<Inner>) {
                     0
                 };
                 inner.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
-                queue.push(Pending::Now { id, reply: Reply::BadRequest { msg: e.to_string() } });
+                queue.push(Pending::Now {
+                    id,
+                    version: peer_version,
+                    reply: Reply::BadRequest { msg: e.to_string() },
+                });
             }
         }
     }
@@ -336,25 +636,45 @@ fn conv_kind(tag: u8) -> ConvKind {
 }
 
 /// Dispatch one decoded request. Fleet-bound work (`conv`, `lm_logits`)
-/// is submitted non-blocking and parked as a `Wait`; session and control
-/// ops resolve synchronously (FIFO order holds either way).
+/// is submitted non-blocking — bounded by the per-connection inflight
+/// cap — and parked as a `Wait`; session and control ops resolve
+/// synchronously (FIFO order holds either way).
 fn handle_request(
     id: u64,
+    version: u8,
     req: Request,
     inner: &Arc<Inner>,
     sessions: &mut HashMap<u64, usize>,
     queue: &Arc<PendingQueue>,
+    inflight: &Arc<AtomicUsize>,
 ) {
+    // Per-connection inflight cap for fleet-bound requests: the reader
+    // is the only incrementer, so a plain load is race-free here.
+    let over_cap = || {
+        if inflight.load(Ordering::Relaxed) >= inner.cfg.max_inflight_per_conn {
+            inner.stats.inflight_shed.fetch_add(1, Ordering::Relaxed);
+            inner.stats.busy_replies.fetch_add(1, Ordering::Relaxed);
+            queue.push(Pending::Now { id, version, reply: Reply::Busy });
+            true
+        } else {
+            false
+        }
+    };
+    let deadline = inner.cfg.reply_deadline.map(|d| Instant::now() + d);
     let reply = match req {
         Request::Conv { kind, len, streams } => {
             let Some(conv) = &inner.conv else {
-                queue.push(no_service(id, "no conv service bound", &inner.stats));
+                queue.push(no_service(id, version, "no conv service bound", &inner.stats));
                 return;
             };
+            if over_cap() {
+                return;
+            }
             let req = ConvRequest { kind: conv_kind(kind), len: len as usize, streams };
             match conv.fleet().submit(req) {
                 Ok(rx) => {
-                    queue.push(Pending::Wait { id, rx });
+                    inflight.fetch_add(1, Ordering::Relaxed);
+                    queue.push(Pending::Wait { id, version, rx, deadline });
                     return;
                 }
                 Err(e) => fleet_reply(e, &inner.stats),
@@ -362,12 +682,16 @@ fn handle_request(
         }
         Request::LmLogits { tokens } => {
             let Some(model) = &inner.model else {
-                queue.push(no_service(id, "no model server bound", &inner.stats));
+                queue.push(no_service(id, version, "no model server bound", &inner.stats));
                 return;
             };
+            if over_cap() {
+                return;
+            }
             match model.fleet().submit(ModelRequest::Infer(InferRequest { tokens })) {
                 Ok(rx) => {
-                    queue.push(Pending::Wait { id, rx });
+                    inflight.fetch_add(1, Ordering::Relaxed);
+                    queue.push(Pending::Wait { id, version, rx, deadline });
                     return;
                 }
                 Err(e) => fleet_reply(e, &inner.stats),
@@ -375,7 +699,7 @@ fn handle_request(
         }
         Request::OpenSession { prompt } => {
             let Some(model) = &inner.model else {
-                queue.push(no_service(id, "no model server bound", &inner.stats));
+                queue.push(no_service(id, version, "no model server bound", &inner.stats));
                 return;
             };
             match model.session_open_raw(&prompt) {
@@ -388,7 +712,7 @@ fn handle_request(
         }
         Request::Step { session, token } => {
             let Some(model) = &inner.model else {
-                queue.push(no_service(id, "no model server bound", &inner.stats));
+                queue.push(no_service(id, version, "no model server bound", &inner.stats));
                 return;
             };
             match sessions.get(&session) {
@@ -408,7 +732,7 @@ fn handle_request(
         }
         Request::CloseSession { session } => {
             let Some(model) = &inner.model else {
-                queue.push(no_service(id, "no model server bound", &inner.stats));
+                queue.push(no_service(id, version, "no model server bound", &inner.stats));
                 return;
             };
             match sessions.remove(&session) {
@@ -422,7 +746,7 @@ fn handle_request(
         }
         Request::InstallFilter { kind, bucket, taps } => {
             let Some(conv) = &inner.conv else {
-                queue.push(no_service(id, "no conv service bound", &inner.stats));
+                queue.push(no_service(id, version, "no conv service bound", &inner.stats));
                 return;
             };
             match conv.set_filter(conv_kind(kind), bucket as usize, taps) {
@@ -431,12 +755,12 @@ fn handle_request(
             }
         }
     };
-    queue.push(Pending::Now { id, reply });
+    queue.push(Pending::Now { id, version, reply });
 }
 
-fn no_service(id: u64, msg: &str, stats: &IngressStats) -> Pending {
+fn no_service(id: u64, version: u8, msg: &str, stats: &IngressStats) -> Pending {
     stats.bad_frames.fetch_add(1, Ordering::Relaxed);
-    Pending::Now { id, reply: Reply::BadRequest { msg: msg.into() } }
+    Pending::Now { id, version, reply: Reply::BadRequest { msg: msg.into() } }
 }
 
 fn fleet_reply(e: FleetError, stats: &IngressStats) -> Reply {
@@ -446,34 +770,126 @@ fn fleet_reply(e: FleetError, stats: &IngressStats) -> Reply {
     Reply::from_fleet_error(e)
 }
 
-/// Writer side of one connection: resolve the FIFO queue in order,
-/// ratchet the served-epoch watermark, encode, write. On a write failure
-/// it kicks the read half so the reader unparks and tears down.
+/// Resolve a fleet receiver, bounded by the reply deadline. Past the
+/// deadline the receiver is dropped — reply slots tolerate an abandoned
+/// receiver ([`crate::coordinator::fleet`]), so the eventual worker
+/// reply is discarded harmlessly and the admission slot still frees.
+fn resolve_wait(
+    rx: Receiver<FleetReply>,
+    deadline: Option<Instant>,
+    stats: &IngressStats,
+) -> Reply {
+    let fleet = match deadline {
+        None => rx.recv().map_err(|_| None),
+        Some(d) => loop {
+            let rem = d.saturating_duration_since(Instant::now());
+            if rem.is_zero() {
+                break Err(Some(()));
+            }
+            match rx.recv_timeout(rem) {
+                Ok(r) => break Ok(r),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break Err(None),
+            }
+        },
+    };
+    match fleet {
+        Ok(Ok(ok)) => Reply::Ok { epoch: ok.epoch, session: None, data: ok.data },
+        Ok(Err(e)) => fleet_reply(e, stats),
+        // The reply slot guarantees delivery; a torn channel means the
+        // worker died with the slot.
+        Err(None) => Reply::ShardDied,
+        Err(Some(())) => {
+            stats.reply_timeouts.fetch_add(1, Ordering::Relaxed);
+            Reply::TimedOut { msg: "reply deadline exceeded; request abandoned".into() }
+        }
+    }
+}
+
+/// Encode + write one logical reply, streaming it as a chunk run when
+/// the requester speaks v2 and the data exceeds the chunk size.
+fn emit_reply(
+    w: &mut TcpStream,
+    id: u64,
+    version: u8,
+    reply: &Reply,
+    inner: &Inner,
+) -> std::io::Result<()> {
+    let chunk = inner.cfg.stream_chunk_points.clamp(1, MAX_CHUNK_POINTS);
+    if version >= 2 {
+        if let Reply::Ok { epoch, session: None, data } = reply {
+            if data.len() > chunk {
+                let mut seq = 0u32;
+                let mut off = 0usize;
+                while off < data.len() {
+                    let end = (off + chunk).min(data.len());
+                    let part = Reply::OkChunk {
+                        epoch: *epoch,
+                        seq,
+                        fin: end == data.len(),
+                        data: data[off..end].to_vec(),
+                    };
+                    w.write_all(&wire::encode_reply_v(id, &part, version))?;
+                    inner.stats.chunks_out.fetch_add(1, Ordering::Relaxed);
+                    seq += 1;
+                    off = end;
+                }
+                return w.flush();
+            }
+        }
+        w.write_all(&wire::encode_reply_v(id, reply, version))?;
+        return w.flush();
+    }
+    // v1: a reply that cannot fit one frame is refused with a typed
+    // failure naming the fix (reconnect speaking v2).
+    let frame_points = wire::MAX_FRAME / 4 - 64;
+    let oversize;
+    let reply = match reply {
+        Reply::Ok { data, .. } if data.len() > frame_points => {
+            oversize = Reply::Failed {
+                msg: format!(
+                    "reply of {} points exceeds the wire-v1 single-frame limit; \
+                     reconnect with wire v2 for streamed replies",
+                    data.len()
+                ),
+            };
+            &oversize
+        }
+        r => r,
+    };
+    w.write_all(&wire::encode_reply_v(id, reply, version))?;
+    w.flush()
+}
+
+/// Writer side of one connection: resolve the FIFO queue in order under
+/// the reply deadline, ratchet the served-epoch watermark, encode
+/// (chunking large v2 replies), write under the write deadline. On a
+/// write failure it kicks the read half so the reader unparks and tears
+/// down.
 fn write_loop(
-    stream: TcpStream,
+    mut stream: TcpStream,
     queue: &PendingQueue,
     inner: &Inner,
     read_half: Option<TcpStream>,
+    inflight: &AtomicUsize,
 ) {
-    let mut w = BufWriter::new(stream);
+    if let Some(wt) = inner.cfg.write_timeout {
+        let _ = stream.set_write_timeout(Some(wt.max(Duration::from_millis(1))));
+    }
     // Per-connection epoch watermark: max served epoch delivered so far.
     // Monotonic delivery is what lets clients treat the epoch as "config
     // at least this new" (wire.rs, "Epoch semantics").
     let mut watermark: u64 = 0;
     let mut broken = false;
     loop {
-        let (id, mut reply) = match queue.pop() {
+        let (id, version, mut reply, counted) = match queue.pop() {
             Pending::Done => break,
-            Pending::Now { id, reply } => (id, reply),
-            Pending::Wait { id, rx } => {
-                let reply = match rx.recv() {
-                    Ok(Ok(ok)) => Reply::Ok { epoch: ok.epoch, session: None, data: ok.data },
-                    Ok(Err(e)) => fleet_reply(e, &inner.stats),
-                    // The reply slot guarantees delivery; a torn channel
-                    // means the worker died with the slot.
-                    Err(_) => Reply::ShardDied,
-                };
-                (id, reply)
+            Pending::Notice { version, reply } => (0, version, reply, false),
+            Pending::Now { id, version, reply } => (id, version, reply, true),
+            Pending::Wait { id, version, rx, deadline } => {
+                let reply = resolve_wait(rx, deadline, &inner.stats);
+                inflight.fetch_sub(1, Ordering::Relaxed);
+                (id, version, reply, true)
             }
         };
         if broken {
@@ -483,14 +899,18 @@ fn write_loop(
             watermark = watermark.max(*epoch);
             *epoch = watermark;
         }
-        let frame = wire::encode_reply(id, &reply);
-        if w.write_all(&frame).and_then(|_| w.flush()).is_err() {
+        if let Err(e) = emit_reply(&mut stream, id, version, &reply, inner) {
+            if is_timeout(&e) {
+                inner.stats.write_timeouts.fetch_add(1, Ordering::Relaxed);
+            }
             broken = true;
             if let Some(r) = &read_half {
                 let _ = r.shutdown(Shutdown::Both);
             }
             continue;
         }
-        inner.stats.replies_out.fetch_add(1, Ordering::Relaxed);
+        if counted {
+            inner.stats.replies_out.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }

@@ -1,10 +1,11 @@
 //! The ingress wire format: length-prefixed binary frames over TCP.
 //!
-//! Everything is little-endian. One frame per request or reply:
+//! Everything is little-endian. One frame per request; one *or more*
+//! frames per reply (v2 streaming, below):
 //!
 //! ```text
 //! [u32 frame_len]   length of everything after this field
-//! [u8  version]     protocol version, currently 1 (WIRE_VERSION)
+//! [u8  version]     protocol version: 1 or 2 (WIRE_VERSION = 2)
 //! [u8  code]        request opcode or reply status (below)
 //! [u64 request_id]  client-chosen, echoed verbatim in the reply
 //! [payload...]      opcode/status-specific body
@@ -15,7 +16,7 @@
 //! reading it. Decoding never panics: every malformed input maps to a
 //! typed [`WireError`].
 //!
-//! ## Request opcodes (client → server)
+//! ## Request opcodes (client → server, identical in v1 and v2)
 //!
 //! | op  | name            | payload |
 //! |-----|-----------------|---------|
@@ -31,27 +32,50 @@
 //!
 //! ## Reply statuses (server → client)
 //!
-//! | st  | name          | payload | retryable |
-//! |-----|---------------|---------|-----------|
-//! | 0   | `ok`          | `[u64 epoch][u8 has_session][u64 session_id?][u32 count][count × f32]` | — |
-//! | 1   | `busy`        | none    | yes (load shed: back off and resubmit) |
-//! | 2   | `shard_died`  | none    | yes (the worker died mid-request; it respawns) |
-//! | 3   | `failed`      | `[u32 len][utf-8 message]` | no |
-//! | 4   | `session_lost`| none    | no as-is (re-open the session) |
-//! | 5   | `shutdown`    | none    | no |
-//! | 6   | `bad_request` | `[u32 len][utf-8 message]` | no (the frame decoded but was semantically invalid, or did not decode) |
+//! | st  | name          | since | payload | retryable |
+//! |-----|---------------|-------|---------|-----------|
+//! | 0   | `ok`          | v1    | `[u64 epoch][u8 has_session][u64 session_id?][u32 count][count × f32]` | — |
+//! | 1   | `busy`        | v1    | none    | yes (load shed / quota shed: back off and resubmit) |
+//! | 2   | `shard_died`  | v1    | none    | yes (the worker died mid-request; it respawns) |
+//! | 3   | `failed`      | v1    | `[u32 len][utf-8 message]` | no |
+//! | 4   | `session_lost`| v1    | none    | no as-is (re-open the session) |
+//! | 5   | `shutdown`    | v1    | none    | no |
+//! | 6   | `bad_request` | v1    | `[u32 len][utf-8 message]` | no (the frame decoded but was semantically invalid, or did not decode) |
+//! | 7   | `ok_chunk`    | v2    | `[u64 epoch][u32 seq][u8 fin][u32 count][count × f32]` | — |
+//! | 8   | `timed_out`   | v2    | `[u32 len][utf-8 message]` | yes (a server-side deadline fired; the work was abandoned) |
+//! | 9   | `quota`       | v2    | `[u32 len][utf-8 message]` | no (a cumulative per-connection budget is exhausted) |
 //!
 //! ## Version negotiation
 //!
-//! Every frame carries the version byte; the server rejects any frame
-//! whose version it does not speak with `bad_request` naming the
-//! supported version, and the client surfaces [`WireError::BadVersion`].
-//! There is no handshake round-trip — version 1 clients simply never see
-//! anything but version 1 replies.
+//! Every frame carries the version byte; the server accepts 1 and 2 and
+//! answers each request **at the version the request arrived in** — a v1
+//! client only ever sees v1 statuses. A frame with any other version is
+//! rejected with `bad_request` naming the supported range, and the
+//! decoder surfaces [`WireError::BadVersion`]. There is no handshake
+//! round trip. When a v2-only status must be delivered to a v1 requester
+//! it is downgraded on encode ([`encode_reply_v`]): `timed_out` becomes
+//! the retryable `busy`, `quota` becomes `failed`, and `ok_chunk` (which
+//! a conforming server never emits at v1) becomes `failed`.
+//!
+//! ## Streaming replies (v2)
+//!
+//! A reply whose data exceeds the server's configured chunk size is
+//! delivered to v2 requesters as a contiguous run of `ok_chunk` frames —
+//! `seq` counts from 0, `fin` marks the last — all carrying the same
+//! `request_id` and the same epoch watermark. FIFO reply order makes the
+//! run contiguous: no other frame for this connection interleaves.
+//! Clients reassemble by concatenating chunk data in `seq` order
+//! ([`crate::ingress::client::IngressClient::recv`] does this
+//! transparently); a gap or out-of-order `seq` is a protocol error. Each
+//! chunk is its own `MAX_FRAME`-bounded frame, so a genome-length reply
+//! (the paper's 2.3M-base-pair scenario) streams in bounded memory
+//! instead of one giant frame. v1 requesters always get single-frame
+//! `ok` replies; a v1 reply that would not fit `MAX_FRAME` is refused
+//! with `failed` (the client should reconnect speaking v2).
 //!
 //! ## Epoch semantics
 //!
-//! `ok` replies carry the **filter epoch**
+//! `ok` / `ok_chunk` replies carry the **filter epoch**
 //! ([`crate::coordinator::fleet::FleetOk::epoch`]) as a per-connection
 //! *watermark*: the maximum config epoch any reply delivered on the
 //! connection so far was served under. Config swaps
@@ -66,8 +90,11 @@
 
 use crate::coordinator::fleet::FleetError;
 
-/// The protocol version this build speaks.
-pub const WIRE_VERSION: u8 = 1;
+/// The newest protocol version this build speaks.
+pub const WIRE_VERSION: u8 = 2;
+
+/// The oldest protocol version this build still accepts.
+pub const MIN_WIRE_VERSION: u8 = 1;
 
 /// Hard cap on `frame_len` (bytes after the length prefix), enforced
 /// before any allocation: 64 MiB comfortably holds the largest bucket's
@@ -106,7 +133,11 @@ impl std::fmt::Display for WireError {
                 write!(f, "frame length {n} outside [{MIN_FRAME}, {MAX_FRAME}]")
             }
             WireError::BadVersion(v) => {
-                write!(f, "unsupported wire version {v} (this build speaks {WIRE_VERSION})")
+                write!(
+                    f,
+                    "unsupported wire version {v} (this build speaks \
+                     {MIN_WIRE_VERSION}..={WIRE_VERSION})"
+                )
             }
             WireError::BadOpcode(op) => write!(f, "unknown request opcode {op}"),
             WireError::BadStatus(st) => write!(f, "unknown reply status {st}"),
@@ -136,14 +167,15 @@ pub enum Request {
     InstallFilter { kind: u8, bucket: u32, taps: Vec<f32> },
 }
 
-/// One decoded server reply.
+/// One decoded server reply frame.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Reply {
     /// Success: the data row (logits / convolved row / empty for closes
     /// and filter acks), the connection's epoch watermark, and — for
     /// `open_session` only — the new session id.
     Ok { epoch: u64, session: Option<u64>, data: Vec<f32> },
-    /// Admission rejected (load shed). Retryable: back off, resubmit.
+    /// Admission rejected (fleet load shed, or a per-connection rate /
+    /// inflight quota shed). Retryable: back off, resubmit.
     Busy,
     /// The owning worker died mid-request. Retryable.
     ShardDied,
@@ -156,13 +188,24 @@ pub enum Reply {
     /// The frame did not decode, or decoded into something the server
     /// cannot route.
     BadRequest { msg: String },
+    /// One bounded slice of a streamed v2 reply: chunk `seq` (from 0) of
+    /// a contiguous run; `fin` marks the last chunk.
+    OkChunk { epoch: u64, seq: u32, fin: bool, data: Vec<f32> },
+    /// A server-side deadline fired (stalled read, stalled write, or a
+    /// reply outliving [`crate::ingress::IngressConfig::reply_deadline`])
+    /// and the work was abandoned. Retryable.
+    TimedOut { msg: String },
+    /// A cumulative per-connection budget (decoded payload bytes) is
+    /// exhausted. Not retryable on this connection.
+    Quota { msg: String },
 }
 
 impl Reply {
     /// Whether the client may expect the same request to succeed later
-    /// (mirrors [`FleetError::retryable`]).
+    /// (mirrors [`FleetError::retryable`], plus the ingress deadline
+    /// statuses).
     pub fn retryable(&self) -> bool {
-        matches!(self, Reply::Busy | Reply::ShardDied)
+        matches!(self, Reply::Busy | Reply::ShardDied | Reply::TimedOut { .. })
     }
 
     /// Map a fleet-level failure to its wire status.
@@ -187,10 +230,10 @@ struct FrameBuf {
 
 impl FrameBuf {
     /// Start a frame: length placeholder + version + code + request id.
-    fn new(code: u8, request_id: u64) -> Self {
+    fn new(version: u8, code: u8, request_id: u64) -> Self {
         let mut buf = Vec::with_capacity(64);
         buf.extend_from_slice(&0u32.to_le_bytes());
-        buf.push(WIRE_VERSION);
+        buf.push(version);
         buf.push(code);
         buf.extend_from_slice(&request_id.to_le_bytes());
         Self { buf }
@@ -235,11 +278,18 @@ impl FrameBuf {
     }
 }
 
-/// Encode a request into a complete wire frame (length prefix included).
+/// Encode a request at the current [`WIRE_VERSION`].
 pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
+    encode_request_v(request_id, req, WIRE_VERSION)
+}
+
+/// Encode a request into a complete wire frame (length prefix included)
+/// at an explicit protocol version. Request payloads are identical in v1
+/// and v2; only the version byte differs.
+pub fn encode_request_v(request_id: u64, req: &Request, version: u8) -> Vec<u8> {
     match req {
         Request::Conv { kind, len, streams } => {
-            let mut f = FrameBuf::new(1, request_id);
+            let mut f = FrameBuf::new(version, 1, request_id);
             f.u8(*kind);
             f.u32(*len);
             f.u8(streams.len() as u8);
@@ -249,28 +299,28 @@ pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
             f.finish()
         }
         Request::LmLogits { tokens } => {
-            let mut f = FrameBuf::new(2, request_id);
+            let mut f = FrameBuf::new(version, 2, request_id);
             f.i32s(tokens);
             f.finish()
         }
         Request::OpenSession { prompt } => {
-            let mut f = FrameBuf::new(3, request_id);
+            let mut f = FrameBuf::new(version, 3, request_id);
             f.i32s(prompt);
             f.finish()
         }
         Request::Step { session, token } => {
-            let mut f = FrameBuf::new(4, request_id);
+            let mut f = FrameBuf::new(version, 4, request_id);
             f.u64(*session);
             f.buf.extend_from_slice(&token.to_le_bytes());
             f.finish()
         }
         Request::CloseSession { session } => {
-            let mut f = FrameBuf::new(5, request_id);
+            let mut f = FrameBuf::new(version, 5, request_id);
             f.u64(*session);
             f.finish()
         }
         Request::InstallFilter { kind, bucket, taps } => {
-            let mut f = FrameBuf::new(6, request_id);
+            let mut f = FrameBuf::new(version, 6, request_id);
             f.u8(*kind);
             f.u32(*bucket);
             f.f32s(taps);
@@ -279,11 +329,39 @@ pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
     }
 }
 
-/// Encode a reply into a complete wire frame (length prefix included).
+/// Encode a reply at the current [`WIRE_VERSION`].
 pub fn encode_reply(request_id: u64, reply: &Reply) -> Vec<u8> {
+    encode_reply_v(request_id, reply, WIRE_VERSION)
+}
+
+/// Encode a reply into a complete wire frame (length prefix included) at
+/// an explicit protocol version — the version the request arrived in, so
+/// a v1 client never sees a status byte it cannot decode. v2-only
+/// statuses are *downgraded* at v1: `timed_out` → `busy` (still
+/// retryable), `quota` → `failed`, and `ok_chunk` → `failed` (a
+/// conforming server never streams to a v1 requester; this is the
+/// defensive mapping, not a code path).
+pub fn encode_reply_v(request_id: u64, reply: &Reply, version: u8) -> Vec<u8> {
+    if version < 2 {
+        match reply {
+            Reply::TimedOut { .. } => {
+                return encode_reply_v(request_id, &Reply::Busy, version);
+            }
+            Reply::Quota { msg } => {
+                let down = Reply::Failed { msg: format!("quota exhausted: {msg}") };
+                return encode_reply_v(request_id, &down, version);
+            }
+            Reply::OkChunk { .. } => {
+                let down =
+                    Reply::Failed { msg: "streamed reply requires wire v2".into() };
+                return encode_reply_v(request_id, &down, version);
+            }
+            _ => {}
+        }
+    }
     match reply {
         Reply::Ok { epoch, session, data } => {
-            let mut f = FrameBuf::new(0, request_id);
+            let mut f = FrameBuf::new(version, 0, request_id);
             f.u64(*epoch);
             match session {
                 Some(id) => {
@@ -295,17 +373,35 @@ pub fn encode_reply(request_id: u64, reply: &Reply) -> Vec<u8> {
             f.f32s(data);
             f.finish()
         }
-        Reply::Busy => FrameBuf::new(1, request_id).finish(),
-        Reply::ShardDied => FrameBuf::new(2, request_id).finish(),
+        Reply::Busy => FrameBuf::new(version, 1, request_id).finish(),
+        Reply::ShardDied => FrameBuf::new(version, 2, request_id).finish(),
         Reply::Failed { msg } => {
-            let mut f = FrameBuf::new(3, request_id);
+            let mut f = FrameBuf::new(version, 3, request_id);
             f.str(msg);
             f.finish()
         }
-        Reply::SessionLost => FrameBuf::new(4, request_id).finish(),
-        Reply::Shutdown => FrameBuf::new(5, request_id).finish(),
+        Reply::SessionLost => FrameBuf::new(version, 4, request_id).finish(),
+        Reply::Shutdown => FrameBuf::new(version, 5, request_id).finish(),
         Reply::BadRequest { msg } => {
-            let mut f = FrameBuf::new(6, request_id);
+            let mut f = FrameBuf::new(version, 6, request_id);
+            f.str(msg);
+            f.finish()
+        }
+        Reply::OkChunk { epoch, seq, fin, data } => {
+            let mut f = FrameBuf::new(version, 7, request_id);
+            f.u64(*epoch);
+            f.u32(*seq);
+            f.u8(u8::from(*fin));
+            f.f32s(data);
+            f.finish()
+        }
+        Reply::TimedOut { msg } => {
+            let mut f = FrameBuf::new(version, 8, request_id);
+            f.str(msg);
+            f.finish()
+        }
+        Reply::Quota { msg } => {
+            let mut f = FrameBuf::new(version, 9, request_id);
             f.str(msg);
             f.finish()
         }
@@ -407,24 +503,36 @@ pub fn check_frame_len(len: usize) -> Result<usize, WireError> {
     Ok(len)
 }
 
+/// The version byte of a frame body, validated against the accepted
+/// range. The server uses this to answer each request at the version it
+/// arrived in.
+pub fn frame_version(body: &[u8]) -> Result<u8, WireError> {
+    let v = *body.first().ok_or(WireError::Truncated)?;
+    if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&v) {
+        return Err(WireError::BadVersion(v));
+    }
+    Ok(v)
+}
+
 /// Shared header decode: version + code + request id.
-fn header(cur: &mut Cursor<'_>) -> Result<(u8, u64), WireError> {
+fn header(cur: &mut Cursor<'_>) -> Result<(u8, u8, u64), WireError> {
     if cur.b.len() < MIN_FRAME {
         return Err(WireError::Truncated);
     }
     let version = cur.u8()?;
-    if version != WIRE_VERSION {
+    if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&version) {
         return Err(WireError::BadVersion(version));
     }
     let code = cur.u8()?;
     let request_id = cur.u64()?;
-    Ok((code, request_id))
+    Ok((version, code, request_id))
 }
 
 /// Decode a request frame body (everything after the length prefix).
+/// Accepts v1 and v2 frames (request payloads are version-identical).
 pub fn decode_request(body: &[u8]) -> Result<(u64, Request), WireError> {
     let mut cur = Cursor::new(body);
-    let (code, request_id) = header(&mut cur)?;
+    let (_version, code, request_id) = header(&mut cur)?;
     let req = match code {
         1 => {
             let kind = cur.u8()?;
@@ -461,9 +569,13 @@ pub fn decode_request(body: &[u8]) -> Result<(u64, Request), WireError> {
 }
 
 /// Decode a reply frame body (everything after the length prefix).
+/// Accepts v1 and v2 frames; the v2-only statuses (7–9) decode
+/// regardless of the frame's version byte (a conforming server never
+/// emits them at v1, and a lenient decoder keeps the error typed rather
+/// than positional if one ever does).
 pub fn decode_reply(body: &[u8]) -> Result<(u64, Reply), WireError> {
     let mut cur = Cursor::new(body);
-    let (status, request_id) = header(&mut cur)?;
+    let (_version, status, request_id) = header(&mut cur)?;
     let reply = match status {
         0 => {
             let epoch = cur.u64()?;
@@ -480,6 +592,18 @@ pub fn decode_reply(body: &[u8]) -> Result<(u64, Reply), WireError> {
         4 => Reply::SessionLost,
         5 => Reply::Shutdown,
         6 => Reply::BadRequest { msg: cur.str()? },
+        7 => {
+            let epoch = cur.u64()?;
+            let seq = cur.u32()?;
+            let fin = match cur.u8()? {
+                0 => false,
+                1 => true,
+                _ => return Err(WireError::BadPayload("fin flag must be 0 or 1")),
+            };
+            Reply::OkChunk { epoch, seq, fin, data: cur.f32s()? }
+        }
+        8 => Reply::TimedOut { msg: cur.str()? },
+        9 => Reply::Quota { msg: cur.str()? },
         st => return Err(WireError::BadStatus(st)),
     };
     cur.done()?;

@@ -12,6 +12,12 @@
 //! flashfftconv serve        [--requests N] [--shards S] [--max-inflight M]
 //!                           [--listen ADDR] # serving-fleet smoke + stats;
 //!                                            # --listen puts it behind the TCP ingress
+//!                           [--idle-ms N] [--frame-ms N] [--write-ms N] [--reply-ms N]
+//!                           [--rate R --burst B] [--conn-inflight N] [--byte-budget B]
+//!                           [--stream-chunk P] [--max-conns N] [--grace-ms N]
+//!                                            # ingress deadlines/quotas (0 disables);
+//!                                            # --requests 0 serves until stdin EOF,
+//!                                            # then drains gracefully
 //! flashfftconv pathfinder   [--steps N]      # Table 2 train + accuracy
 //! flashfftconv costmodel    [--hw a100]      # Figure 4 series (CSV)
 //! ```
@@ -337,6 +343,35 @@ fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
     let shards = args.get_usize("shards", 1)?;
     let max_inflight = args.get_usize("max-inflight", 256)?;
     let listen = args.opt("listen");
+    // Ingress hardening knobs (only meaningful with --listen); 0 means
+    // "disabled" for every optional deadline/quota.
+    let ingress_cfg = {
+        use flashfftconv::ingress::{limits::RateLimit, IngressConfig};
+        let d = IngressConfig::default();
+        let ms = |v: usize| Duration::from_millis(v as u64);
+        let opt_ms = |v: usize| if v == 0 { None } else { Some(ms(v)) };
+        let dms = |o: Option<Duration>| o.map(|d| d.as_millis() as usize).unwrap_or(0);
+        let rate = args.get_usize("rate", 0)?;
+        IngressConfig {
+            max_connections: args.get_usize("max-conns", d.max_connections)?,
+            idle_timeout: opt_ms(args.get_usize("idle-ms", dms(d.idle_timeout))?),
+            frame_timeout: opt_ms(args.get_usize("frame-ms", dms(d.frame_timeout))?),
+            write_timeout: opt_ms(args.get_usize("write-ms", dms(d.write_timeout))?),
+            reply_deadline: opt_ms(args.get_usize("reply-ms", 0)?),
+            max_inflight_per_conn: args.get_usize("conn-inflight", d.max_inflight_per_conn)?,
+            rate_limit: if rate == 0 {
+                None
+            } else {
+                Some(RateLimit::new(rate as f64, args.get_usize("burst", rate)? as f64))
+            },
+            conn_byte_budget: match args.get_usize("byte-budget", 0)? {
+                0 => None,
+                b => Some(b as u64),
+            },
+            stream_chunk_points: args.get_usize("stream-chunk", d.stream_chunk_points)?,
+            drain_grace: ms(args.get_usize("grace-ms", d.drain_grace.as_millis() as usize)?),
+        }
+    };
     args.finish()?;
     let policy = BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(wait_ms as u64) };
     let service = ConvService::start_sharded(
@@ -347,7 +382,7 @@ fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
         max_inflight,
     )?;
     if let Some(addr) = listen {
-        return cmd_serve_listen(service, &addr, requests, len);
+        return cmd_serve_listen(service, &addr, requests, len, ingress_cfg);
     }
     let mut rng = Rng::new(1);
     let heads = 16usize;
@@ -382,26 +417,37 @@ fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
 
 /// `serve --listen ADDR`: expose the conv fleet over the TCP ingress.
 /// `--requests N` (N > 0) runs a self-driving loopback smoke through a
-/// real wire client and exits; `--requests 0` serves until killed.
+/// real wire client and exits; `--requests 0` serves until stdin closes,
+/// then drains gracefully — so a supervising process (or an integration
+/// test) gets a clean, deadline-bounded shutdown instead of a kill.
 fn cmd_serve_listen(
     service: ConvService,
     addr: &str,
     requests: usize,
     len: usize,
+    cfg: flashfftconv::ingress::IngressConfig,
 ) -> flashfftconv::Result<()> {
     use flashfftconv::ingress::client::IngressClient;
-    use flashfftconv::ingress::wire::{Reply, Request};
-    use flashfftconv::ingress::{IngressConfig, IngressServer};
+    use flashfftconv::ingress::wire::{self, Reply, Request};
+    use flashfftconv::ingress::IngressServer;
+    use std::io::{Read as _, Write as _};
 
+    let grace = cfg.drain_grace;
     let service = std::sync::Arc::new(service);
-    let server =
-        IngressServer::bind(addr, Some(std::sync::Arc::clone(&service)), None, IngressConfig::default())?;
-    println!("ingress listening on {} (wire v1)", server.local_addr());
+    let server = IngressServer::bind(addr, Some(std::sync::Arc::clone(&service)), None, cfg)?;
+    println!("ingress listening on {} (wire v{})", server.local_addr(), wire::WIRE_VERSION);
+    // The bound-address line is the machine-readable handshake for
+    // whoever spawned us; a block-buffered pipe must not sit on it.
+    let _ = std::io::stdout().flush();
     if requests == 0 {
-        // Serve until the process is killed.
-        loop {
-            std::thread::sleep(Duration::from_secs(3600));
-        }
+        // Serve until stdin closes (the supervisor's shutdown signal).
+        let mut sink = Vec::new();
+        let _ = std::io::stdin().read_to_end(&mut sink);
+        service.fleet().quiesce(grace);
+        server.shutdown(grace);
+        println!("ingress drained and shut down");
+        let _ = std::io::stdout().flush();
+        return Ok(());
     }
     let heads = 16usize;
     let mut rng = Rng::new(1);

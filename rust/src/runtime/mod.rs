@@ -112,6 +112,12 @@ pub enum BackendConfig {
     /// `NativeRowThreads(1)` so parallelism comes from the shard workers
     /// instead of oversubscribing cores with per-engine thread pools.
     NativeRowThreads(usize),
+    /// The native backend extended with one batch-1 long-sequence
+    /// `conv_fwd` bucket at this length (e.g. 65536 → a ~1.05M-point
+    /// reply row, the wire-v2 streamed-reply shape). Kept out of
+    /// [`BackendConfig::Native`] so exhaustive per-bucket tests stay
+    /// fast.
+    NativeLongForward(usize),
     /// Artifact directory when present (with the `pjrt` feature), the
     /// native backend otherwise.
     Auto(PathBuf),
@@ -126,6 +132,7 @@ impl BackendConfig {
         match self {
             BackendConfig::Native => Runtime::native(),
             BackendConfig::NativeRowThreads(t) => Runtime::native_row_threads(*t),
+            BackendConfig::NativeLongForward(n) => Runtime::native_long_forward(*n),
             BackendConfig::Auto(dir) => Runtime::new(dir),
             #[cfg(feature = "pjrt")]
             BackendConfig::Pjrt(dir) => Runtime::pjrt(dir),
@@ -161,6 +168,14 @@ impl Runtime {
             needle,
             &format!("meta group conv\nmeta conv_threads {}\n", threads.max(1)),
         );
+        Self::native_from(&text, files)
+    }
+
+    /// The native runtime plus one batch-1 long-sequence `conv_fwd`
+    /// bucket at length `n` (see
+    /// [`native::long_forward_fleet_parts`]).
+    pub fn native_long_forward(n: usize) -> crate::Result<Self> {
+        let (text, files) = native::long_forward_fleet_parts(n);
         Self::native_from(&text, files)
     }
 

@@ -1327,8 +1327,29 @@ impl FleetBuilder {
     /// an order-3 artifact in the default fleet for golden cross-checks
     /// now that the calibrated model picks order 2 at small lengths).
     fn conv(&mut self, kind: &str, variant: &str, n: usize, golden: bool, order_pin: Option<usize>) {
-        let name = format!("{kind}_{variant}_n{n}");
-        let (b, h) = (2usize, 16usize);
+        self.conv_shaped(kind, variant, n, 2, 16, golden, order_pin);
+    }
+
+    /// Like [`FleetBuilder::conv`] but with an explicit `(batch, heads)`
+    /// shape — long-sequence buckets keep the per-artifact footprint
+    /// bounded by trading batch for length (e.g. `b = 1` at `n = 64Ki`
+    /// still yields a ≥1M-point reply row).
+    #[allow(clippy::too_many_arguments)]
+    fn conv_shaped(
+        &mut self,
+        kind: &str,
+        variant: &str,
+        n: usize,
+        b: usize,
+        h: usize,
+        golden: bool,
+        order_pin: Option<usize>,
+    ) {
+        let name = if (b, h) == (2, 16) {
+            format!("{kind}_{variant}_n{n}")
+        } else {
+            format!("{kind}_{variant}_n{n}_b{b}h{h}")
+        };
         let causal = kind == "conv_causal";
         let gated = kind == "conv_gated";
         let fft_len = if causal { 2 * n } else { n };
@@ -1802,6 +1823,19 @@ pub fn default_fleet_parts() -> (String, BTreeMap<String, Vec<u8>>) {
     static CACHE: std::sync::OnceLock<(String, BTreeMap<String, Vec<u8>>)> =
         std::sync::OnceLock::new();
     CACHE.get_or_init(build_default_fleet).clone()
+}
+
+/// The default fleet extended with one long-sequence forward bucket:
+/// `conv_fwd` at `seq_len = n`, batch 1, heads 16, no golden (the
+/// oracle replay would dominate startup at these lengths). At
+/// `n = 65536` one reply row is 16 × 65536 ≈ 1.05M f32 points — the
+/// shape the wire-v2 streamed-reply path exists for. Kept out of the
+/// default fleet so the exhaustive per-bucket oracle tests stay fast.
+pub fn long_forward_fleet_parts(n: usize) -> (String, BTreeMap<String, Vec<u8>>) {
+    let (text, files) = default_fleet_parts();
+    let mut fb = FleetBuilder { text, files };
+    fb.conv_shaped("conv_fwd", "monarch", n, 1, 16, false, None);
+    (fb.text, fb.files)
 }
 
 fn build_default_fleet() -> (String, BTreeMap<String, Vec<u8>>) {

@@ -58,6 +58,15 @@
 //! per-engine session map. Wire framing, status codes, and the filter
 //! epoch carried on every reply are documented in
 //! [`crate::ingress::wire`].
+//!
+//! The ingress additionally bounds every connection with lifecycle
+//! deadlines and per-connection quotas (idle/frame read deadlines,
+//! write deadlines, a reply deadline, token-bucket rates, byte
+//! budgets) and streams oversized replies as wire-v2 chunk runs — see
+//! the [`crate::ingress`] module docs ("Deadlines, quotas, and
+//! streaming"). None of that changes the session contract here: a
+//! deadline-evicted connection tears down exactly like a disconnect,
+//! so its sessions are reaped the same way.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};

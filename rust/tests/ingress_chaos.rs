@@ -1,0 +1,838 @@
+//! Fault-injection suite for the hardened ingress (PR 8 tentpole):
+//! every adversarial shape — slow-loris dribbles, mid-frame disconnects,
+//! stalled readers, quota abuse, shard poison mid-stream — must surface
+//! as a *typed* retryable/non-retryable wire status, never a hang, a
+//! panic, or a silently dropped reply. Faults are injected with the
+//! reusable [`flashfftconv::ingress::fault`] layer (direct
+//! `FaultyStream` wrapping and the `ChaosProxy` TCP man-in-the-middle).
+//!
+//! The acceptance soak at the bottom drives a 4-shard fleet with 8
+//! well-behaved wire clients (bitwise parity against an in-process
+//! `ConvService`, zero lost or duplicated replies, per-connection epoch
+//! monotonicity) while chaos clients dribble and cut and a shard is
+//! poisoned mid-soak; a ≥1M-point conv reply round-trips bit-exactly
+//! through the wire-v2 streamed chunk path.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flashfftconv::coordinator::router::ConvKind;
+use flashfftconv::coordinator::service::{ConvRequest, ConvService};
+use flashfftconv::coordinator::BatchPolicy;
+use flashfftconv::ingress::client::IngressClient;
+use flashfftconv::ingress::fault::{ChaosProxy, FaultPlan};
+use flashfftconv::ingress::limits::RateLimit;
+use flashfftconv::ingress::wire::{self, Reply, Request};
+use flashfftconv::ingress::{IngressConfig, IngressServer};
+use flashfftconv::runtime::BackendConfig;
+use flashfftconv::util::Rng;
+
+const HEADS: usize = 16;
+
+fn single() -> Arc<ConvService> {
+    Arc::new(
+        ConvService::start(
+            BackendConfig::Native,
+            "monarch",
+            BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(2) },
+        )
+        .expect("service starts"),
+    )
+}
+
+fn sharded(shards: usize, max_inflight: usize) -> Arc<ConvService> {
+    Arc::new(
+        ConvService::start_sharded(
+            BackendConfig::NativeRowThreads(1),
+            "monarch",
+            BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(2) },
+            shards,
+            max_inflight,
+        )
+        .expect("sharded service starts"),
+    )
+}
+
+fn bind(service: &Arc<ConvService>, cfg: IngressConfig) -> IngressServer {
+    IngressServer::bind("127.0.0.1:0", Some(Arc::clone(service)), None, cfg)
+        .expect("ingress binds")
+}
+
+fn conv_req(len: usize, u: Vec<f32>) -> Request {
+    Request::Conv { kind: 0, len: len as u32, streams: vec![u] }
+}
+
+/// Poll `cond` until it holds or `secs` elapse.
+fn eventually(secs: u64, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        if cond() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Read deadlines: slow-loris and dribblers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slow_loris_is_evicted_while_other_connections_progress() {
+    let service = single();
+    let ingress = bind(
+        &service,
+        IngressConfig {
+            idle_timeout: Some(Duration::from_secs(10)),
+            frame_timeout: Some(Duration::from_millis(300)),
+            ..IngressConfig::default()
+        },
+    );
+    let addr = ingress.local_addr();
+
+    // The loris: one clean round trip (so the server knows it speaks
+    // v2 and will answer with a typed timed_out), then two bytes of a
+    // new frame and silence, pinning a pool slot — until the frame
+    // deadline evicts it.
+    let mut loris = TcpStream::connect(addr).expect("loris connects");
+    loris.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut rng = Rng::new(0xC4A0);
+    let u = rng.normal_vec(HEADS * 256);
+    loris.write_all(&wire::encode_request(1, &conv_req(256, u))).expect("clean frame");
+    let body = wire::read_frame(&mut loris).expect("read ok").expect("reply present");
+    assert!(matches!(
+        wire::decode_reply(&body).expect("decodes"),
+        (1, Reply::Ok { .. }) | (1, Reply::Busy)
+    ));
+    let t0 = Instant::now();
+    loris.write_all(&[0xAB, 0xCD]).expect("dribble two bytes");
+
+    // While the loris stalls, a well-behaved connection keeps serving.
+    let mut good = IngressClient::connect(addr).expect("good client connects");
+    for _ in 0..4 {
+        let u = rng.normal_vec(HEADS * 256);
+        match good
+            .call_retry(&conv_req(256, u), 64, Duration::from_millis(1))
+            .expect("good client round trip")
+        {
+            Reply::Ok { data, .. } => assert_eq!(data.len(), HEADS * 256),
+            other => panic!("good client starved by the loris: {other:?}"),
+        }
+    }
+    good.finish();
+
+    // The loris gets a typed timed_out notice, then EOF — well before
+    // the 10 s idle timeout (the *frame* deadline is what fires: partial
+    // bytes must not count as keep-alive).
+    let body = wire::read_frame(&mut loris).expect("read ok").expect("notice present");
+    match wire::decode_reply(&body).expect("notice decodes") {
+        (0, Reply::TimedOut { msg }) => {
+            assert!(msg.contains("deadline"), "notice must name the deadline: {msg}")
+        }
+        other => panic!("expected timed_out eviction notice, got {other:?}"),
+    }
+    assert!(
+        wire::read_frame(&mut loris).expect("post-notice read").is_none(),
+        "the connection must be closed after the eviction notice"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(8),
+        "eviction must beat the idle timeout (frame deadline governs): {:?}",
+        t0.elapsed()
+    );
+    assert!(ingress.stats().read_timeouts.load(Ordering::Relaxed) >= 1);
+    assert!(eventually(10, || ingress.open_connections() == 0));
+}
+
+#[test]
+fn dribbled_request_completes_under_a_generous_frame_deadline() {
+    let service = single();
+    let ingress = bind(
+        &service,
+        IngressConfig {
+            idle_timeout: Some(Duration::from_secs(10)),
+            frame_timeout: Some(Duration::from_secs(8)),
+            ..IngressConfig::default()
+        },
+    );
+    // 512-byte chunks with 1 ms pauses: a ~16 KiB conv frame arrives in
+    // ~35 dribbles, well inside the deadline — throttled-but-honest
+    // clients are served, not evicted.
+    let proxy = ChaosProxy::start(
+        ingress.local_addr(),
+        FaultPlan { chunk: 512, delay: Duration::from_millis(1), ..FaultPlan::default() },
+        FaultPlan::clean(),
+    )
+    .expect("proxy starts");
+
+    let mut rng = Rng::new(0xD81B);
+    let mut client = IngressClient::connect(proxy.local_addr()).expect("client connects");
+    client.set_timeouts(Some(Duration::from_secs(30)), None).expect("timeouts set");
+    let u = rng.normal_vec(HEADS * 256);
+    match client
+        .call_retry(&conv_req(256, u), 64, Duration::from_millis(1))
+        .expect("dribbled round trip")
+    {
+        Reply::Ok { data, .. } => assert_eq!(data.len(), HEADS * 256),
+        other => panic!("dribbled-but-timely request must serve: {other:?}"),
+    }
+    client.finish();
+    assert_eq!(ingress.stats().read_timeouts.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn stall_past_the_frame_deadline_is_evicted_with_timed_out() {
+    let service = single();
+    let ingress = bind(
+        &service,
+        IngressConfig {
+            idle_timeout: Some(Duration::from_secs(10)),
+            frame_timeout: Some(Duration::from_millis(300)),
+            ..IngressConfig::default()
+        },
+    );
+    // Forward the first request intact, then stall 20 bytes into the
+    // second frame (held open, not closed): the absolute frame deadline
+    // must fire even though the connection looks alive.
+    let mut rng = Rng::new(0x57A1);
+    let u1 = rng.normal_vec(HEADS * 256);
+    let first = wire::encode_request(1, &conv_req(256, u1));
+    let proxy = ChaosProxy::start(
+        ingress.local_addr(),
+        FaultPlan::stall_after(first.len() + 20),
+        FaultPlan::clean(),
+    )
+    .expect("proxy starts");
+
+    let mut stream = TcpStream::connect(proxy.local_addr()).expect("connect via proxy");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.write_all(&first).expect("first frame");
+    let u2 = rng.normal_vec(HEADS * 256);
+    stream.write_all(&wire::encode_request(2, &conv_req(256, u2))).expect("second frame");
+
+    // First request serves; the second stalls mid-frame and earns the
+    // typed eviction.
+    let body = wire::read_frame(&mut stream).expect("read ok").expect("reply present");
+    assert!(matches!(
+        wire::decode_reply(&body).expect("decodes"),
+        (1, Reply::Ok { .. }) | (1, Reply::Busy)
+    ));
+    let body = wire::read_frame(&mut stream).expect("read ok").expect("notice present");
+    match wire::decode_reply(&body).expect("notice decodes") {
+        (0, Reply::TimedOut { .. }) => {}
+        other => panic!("expected timed_out for the stalled frame, got {other:?}"),
+    }
+    assert!(wire::read_frame(&mut stream).expect("post-notice read").is_none());
+    assert!(ingress.stats().read_timeouts.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn mid_frame_disconnect_tears_down_cleanly() {
+    let service = single();
+    let ingress = bind(&service, IngressConfig::default());
+    let mut rng = Rng::new(0xCC17);
+    let frame = wire::encode_request(1, &conv_req(256, rng.normal_vec(HEADS * 256)));
+    // Cut the connection 10 bytes into the frame body.
+    let proxy =
+        ChaosProxy::start(ingress.local_addr(), FaultPlan::cut_after(14), FaultPlan::clean())
+            .expect("proxy starts");
+
+    let mut stream = TcpStream::connect(proxy.local_addr()).expect("connect via proxy");
+    stream.set_read_timeout(Some(Duration::from_secs(15))).unwrap();
+    let _ = stream.write_all(&frame); // the cut may surface as a write error
+    // Whatever the client sees (reset or EOF), it must see it promptly —
+    // and the server side must fully tear down without a reply leak.
+    let t0 = Instant::now();
+    let _ = wire::read_frame(&mut stream);
+    assert!(t0.elapsed() < Duration::from_secs(15), "client must not hang on a cut");
+    assert!(
+        eventually(15, || ingress.open_connections() == 0),
+        "server must reap the torn connection"
+    );
+    // The front still serves.
+    drop(proxy);
+    let mut client = IngressClient::connect(ingress.local_addr()).expect("fresh client");
+    let u = rng.normal_vec(HEADS * 256);
+    match client.call_retry(&conv_req(256, u), 64, Duration::from_millis(1)).expect("round trip")
+    {
+        Reply::Ok { data, .. } => assert_eq!(data.len(), HEADS * 256),
+        other => panic!("front wedged after mid-frame cut: {other:?}"),
+    }
+    client.finish();
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection quotas
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rate_limit_sheds_with_busy_then_refills() {
+    let service = single();
+    let ingress = bind(
+        &service,
+        IngressConfig {
+            rate_limit: Some(RateLimit::new(20.0, 2.0)),
+            ..IngressConfig::default()
+        },
+    );
+    let mut rng = Rng::new(0x8A7E);
+    let mut client = IngressClient::connect(ingress.local_addr()).expect("client connects");
+
+    // Burst 6 pipelined requests: the bucket (burst 2) admits the first
+    // two and sheds the rest with retryable busy.
+    let mut ids = Vec::new();
+    for _ in 0..6 {
+        let u = rng.normal_vec(HEADS * 256);
+        ids.push(client.send(&conv_req(256, u)).expect("send"));
+    }
+    let (mut ok, mut busy) = (0, 0);
+    for id in ids {
+        let (rid, reply) = client.recv().expect("reply arrives");
+        assert_eq!(rid, id, "rate shed must preserve FIFO reply order");
+        match reply {
+            Reply::Ok { data, .. } => {
+                assert_eq!(data.len(), HEADS * 256);
+                ok += 1;
+            }
+            Reply::Busy => busy += 1,
+            other => panic!("unexpected reply under rate shed: {other:?}"),
+        }
+    }
+    assert!(ok >= 2, "the burst allowance must serve (got {ok} ok)");
+    assert!(busy >= 3, "past-burst requests must shed (got {busy} busy)");
+    assert!(ingress.stats().rate_shed.load(Ordering::Relaxed) >= 3);
+
+    // After a refill interval the same connection serves again.
+    std::thread::sleep(Duration::from_millis(300));
+    let u = rng.normal_vec(HEADS * 256);
+    match client.call(&conv_req(256, u)).expect("post-refill round trip") {
+        Reply::Ok { data, .. } => assert_eq!(data.len(), HEADS * 256),
+        other => panic!("bucket must refill: {other:?}"),
+    }
+    client.finish();
+}
+
+#[test]
+fn per_connection_inflight_cap_sheds_with_busy() {
+    // Slow flush (big batch, long window) keeps admitted requests in
+    // flight while the reader races ahead, so the per-connection cap is
+    // what decides.
+    let service = Arc::new(
+        ConvService::start(
+            BackendConfig::Native,
+            "monarch",
+            BatchPolicy { batch_size: 8, max_wait: Duration::from_millis(400) },
+        )
+        .expect("service starts"),
+    );
+    let ingress = bind(
+        &service,
+        IngressConfig { max_inflight_per_conn: 2, ..IngressConfig::default() },
+    );
+    let mut rng = Rng::new(0x1F17);
+    let mut client = IngressClient::connect(ingress.local_addr()).expect("client connects");
+    let mut ids = Vec::new();
+    for _ in 0..6 {
+        let u = rng.normal_vec(HEADS * 256);
+        ids.push(client.send(&conv_req(256, u)).expect("send"));
+    }
+    let (mut ok, mut busy) = (0, 0);
+    for id in ids {
+        let (rid, reply) = client.recv().expect("reply arrives");
+        assert_eq!(rid, id, "inflight shed must preserve FIFO reply order");
+        match reply {
+            Reply::Ok { .. } => ok += 1,
+            Reply::Busy => busy += 1,
+            other => panic!("unexpected reply under inflight shed: {other:?}"),
+        }
+    }
+    assert_eq!((ok, busy), (2, 4), "cap 2 must admit 2 and shed 4");
+    assert!(ingress.stats().inflight_shed.load(Ordering::Relaxed) >= 4);
+    client.finish();
+}
+
+#[test]
+fn byte_budget_exhaustion_gets_quota_and_a_close() {
+    let service = single();
+    let ingress = bind(
+        &service,
+        IngressConfig { conn_byte_budget: Some(20_000), ..IngressConfig::default() },
+    );
+    let mut rng = Rng::new(0xB06D);
+    let mut client = IngressClient::connect(ingress.local_addr()).expect("client connects");
+    client.set_timeouts(Some(Duration::from_secs(30)), None).expect("timeouts set");
+
+    // First ~16 KiB frame fits the budget and serves.
+    let u = rng.normal_vec(HEADS * 256);
+    match client.call_retry(&conv_req(256, u), 64, Duration::from_millis(1)).expect("round trip")
+    {
+        Reply::Ok { data, .. } => assert_eq!(data.len(), HEADS * 256),
+        other => panic!("in-budget request must serve: {other:?}"),
+    }
+    // The second breaches the cumulative budget: typed non-retryable
+    // quota, then close.
+    let u = rng.normal_vec(HEADS * 256);
+    let (rid, reply) = {
+        client.send(&conv_req(256, u)).expect("send");
+        client.recv().expect("quota notice arrives")
+    };
+    assert_eq!(rid, 0, "quota notices are server-originated (id 0)");
+    match reply {
+        Reply::Quota { msg } => {
+            assert!(msg.contains("budget"), "quota must name the budget: {msg}")
+        }
+        other => panic!("expected quota, got {other:?}"),
+    }
+    assert!(!Reply::Quota { msg: String::new() }.retryable());
+    assert!(client.recv().is_err(), "the connection must be closed after quota");
+    assert_eq!(ingress.stats().quota_closed.load(Ordering::Relaxed), 1);
+}
+
+// ---------------------------------------------------------------------------
+// Reply deadline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reply_deadline_times_out_retryably_and_releases_the_slot() {
+    // batch_size 2: a *pair* of requests flushes immediately (fast
+    // replies), a lone request waits out the 2 s window — longer than
+    // the 400 ms reply deadline.
+    let service = Arc::new(
+        ConvService::start(
+            BackendConfig::Native,
+            "monarch",
+            BatchPolicy { batch_size: 2, max_wait: Duration::from_secs(2) },
+        )
+        .expect("service starts"),
+    );
+    let ingress = bind(
+        &service,
+        IngressConfig {
+            reply_deadline: Some(Duration::from_millis(400)),
+            ..IngressConfig::default()
+        },
+    );
+    let mut rng = Rng::new(0xDEAD);
+    let mut client = IngressClient::connect(ingress.local_addr()).expect("client connects");
+    client.set_timeouts(Some(Duration::from_secs(60)), None).expect("timeouts set");
+
+    // Warm the bucket with a full pair (pays engine compile outside the
+    // deadline-sensitive part; batch flushes on size, not the window).
+    let a = client.send(&conv_req(256, rng.normal_vec(HEADS * 256))).expect("send");
+    let b = client.send(&conv_req(256, rng.normal_vec(HEADS * 256))).expect("send");
+    for id in [a, b] {
+        let (rid, reply) = client.recv().expect("warm reply");
+        assert_eq!(rid, id);
+        assert!(matches!(reply, Reply::Ok { .. }), "warmup pair must serve: {reply:?}");
+    }
+
+    // A lone request stalls in the batch window past the deadline: the
+    // client gets a typed, *retryable* timed_out within bounded time.
+    let t0 = Instant::now();
+    let reply = client
+        .call(&conv_req(256, rng.normal_vec(HEADS * 256)))
+        .expect("deadline round trip");
+    match &reply {
+        Reply::TimedOut { .. } => {}
+        other => panic!("expected timed_out past the reply deadline, got {other:?}"),
+    }
+    assert!(reply.retryable(), "reply-deadline expiry must be retryable");
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "timed_out must beat the batch window: {:?}",
+        t0.elapsed()
+    );
+    assert!(ingress.stats().reply_timeouts.load(Ordering::Relaxed) >= 1);
+
+    // The connection keeps serving: one follow-up request pairs with the
+    // abandoned one still queued in the batcher, flushing both fast.
+    let reply = client
+        .call(&conv_req(256, rng.normal_vec(HEADS * 256)))
+        .expect("post-timeout round trip");
+    assert!(matches!(reply, Reply::Ok { .. }), "connection must survive: {reply:?}");
+    client.finish();
+
+    // The abandoned receiver must not leak its admission slot: once the
+    // batch flushes, the fleet settles to zero in flight.
+    assert!(
+        eventually(30, || service.fleet().stats().inflight == 0),
+        "abandoned reply must still settle its fleet slot"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Wire-v2 streamed replies
+// ---------------------------------------------------------------------------
+
+#[test]
+fn million_point_reply_streams_bit_exactly_over_wire_v2() {
+    // The long-forward bucket: seq_len 65536 × 16 heads = 1,048,576
+    // points per reply row — the genome-length shape the chunked reply
+    // path exists for.
+    const LONG: usize = 65_536;
+    let service = Arc::new(
+        ConvService::start(
+            BackendConfig::NativeLongForward(LONG),
+            "monarch",
+            BatchPolicy { batch_size: 1, max_wait: Duration::from_millis(1) },
+        )
+        .expect("long-forward service starts"),
+    );
+    let ingress = bind(&service, IngressConfig::default());
+
+    let mut rng = Rng::new(0x1_000_000);
+    let u = rng.normal_vec(HEADS * LONG);
+
+    // In-process reference through the same fleet.
+    let want = service
+        .call(ConvRequest { kind: ConvKind::Forward, len: LONG, streams: vec![u.clone()] })
+        .expect("in-process long conv ok");
+    assert_eq!(want.len(), HEADS * LONG);
+
+    // Over the wire at v2: the reply must arrive as a streamed chunk run
+    // (default chunk is 65536 points ≪ the 1,048,576-point reply) and
+    // reassemble bit-exactly.
+    let mut client = IngressClient::connect(ingress.local_addr()).expect("client connects");
+    client.set_timeouts(Some(Duration::from_secs(300)), None).expect("timeouts set");
+    match client
+        .call_retry(&conv_req(LONG, u), 8, Duration::from_millis(50))
+        .expect("streamed round trip")
+    {
+        Reply::Ok { data, .. } => {
+            assert_eq!(data.len(), HEADS * LONG);
+            assert_eq!(data, want, "streamed v2 reply must match in-process bit-exactly");
+        }
+        other => panic!("long conv over the wire failed: {other:?}"),
+    }
+    client.finish();
+
+    let ist = ingress.stats();
+    assert!(
+        ist.chunks_out.load(Ordering::Relaxed) >= 2,
+        "a ≥1M-point reply must stream as multiple chunks (got {})",
+        ist.chunks_out.load(Ordering::Relaxed)
+    );
+    // One logical reply regardless of chunk count.
+    assert!(
+        eventually(5, || {
+            ist.replies_out.load(Ordering::Relaxed) == ist.frames_in.load(Ordering::Relaxed)
+        }),
+        "a chunk run must count as one logical reply"
+    );
+}
+
+#[test]
+fn proxy_cut_mid_stream_is_a_typed_client_error_not_a_hang() {
+    let service = single();
+    let ingress = bind(
+        &service,
+        // Tiny chunks so a 4096-length reply (65,536 points) streams as
+        // many frames and the cut lands mid-run.
+        IngressConfig { stream_chunk_points: 1024, ..IngressConfig::default() },
+    );
+    // Requests pass clean; the reply direction is cut ~6 KB in (mid
+    // second chunk frame).
+    let proxy = ChaosProxy::start(
+        ingress.local_addr(),
+        FaultPlan::clean(),
+        FaultPlan::cut_after(6_000),
+    )
+    .expect("proxy starts");
+
+    let mut rng = Rng::new(0xCC2);
+    let mut client = IngressClient::connect(proxy.local_addr()).expect("client connects");
+    client.set_timeouts(Some(Duration::from_secs(15)), None).expect("timeouts set");
+    client.send(&conv_req(4096, rng.normal_vec(HEADS * 4096))).expect("send");
+    let t0 = Instant::now();
+    let got = client.recv();
+    assert!(
+        got.is_err(),
+        "a chunk run torn by a dead connection must error, got {got:?}"
+    );
+    assert!(t0.elapsed() < Duration::from_secs(15), "torn stream must not hang the client");
+    // Server side drains cleanly too.
+    assert!(eventually(15, || ingress.open_connections() == 0));
+    assert!(eventually(15, || service.fleet().stats().inflight == 0));
+}
+
+// ---------------------------------------------------------------------------
+// Graceful shutdown
+// ---------------------------------------------------------------------------
+
+#[test]
+fn graceful_shutdown_drains_in_flight_replies() {
+    // Long batch window: replies are pending when shutdown starts, and
+    // must still be delivered before the connection closes.
+    let service = Arc::new(
+        ConvService::start(
+            BackendConfig::Native,
+            "monarch",
+            BatchPolicy { batch_size: 8, max_wait: Duration::from_millis(300) },
+        )
+        .expect("service starts"),
+    );
+    let ingress = bind(&service, IngressConfig::default());
+    let addr = ingress.local_addr();
+
+    let mut stream = TcpStream::connect(addr).expect("client connects");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut rng = Rng::new(0x5D0);
+    for i in 0..3u64 {
+        let u = rng.normal_vec(HEADS * 256);
+        stream.write_all(&wire::encode_request(1 + i, &conv_req(256, u))).expect("send");
+    }
+    // Give the reader time to admit all three, then shut down while they
+    // are still waiting on the batch window.
+    std::thread::sleep(Duration::from_millis(50));
+    let t0 = Instant::now();
+    ingress.shutdown(Duration::from_secs(20));
+    let shutdown_wall = t0.elapsed();
+    assert!(shutdown_wall < Duration::from_secs(20), "drain must finish inside grace");
+
+    // Every in-flight reply was flushed before the close.
+    for want_id in 1..=3u64 {
+        let body = wire::read_frame(&mut stream)
+            .expect("read ok")
+            .expect("drained reply present");
+        match wire::decode_reply(&body).expect("decodes") {
+            (id, Reply::Ok { data, .. }) => {
+                assert_eq!(id, want_id, "drained replies stay FIFO");
+                assert_eq!(data.len(), HEADS * 256);
+            }
+            other => panic!("in-flight request lost to shutdown: {other:?}"),
+        }
+    }
+    assert!(
+        wire::read_frame(&mut stream).expect("post-drain read").is_none(),
+        "connection must close cleanly after the drain"
+    );
+    // The acceptor is gone: new connections are refused (or reset).
+    assert!(
+        TcpStream::connect(addr).is_err()
+            || TcpStream::connect(addr)
+                .and_then(|mut s| {
+                    s.set_read_timeout(Some(Duration::from_secs(5)))?;
+                    let mut b = [0u8; 1];
+                    use std::io::Read;
+                    s.read(&mut b)
+                })
+                .map_or(true, |n| n == 0),
+        "a shut-down ingress must not accept new work"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance soak: chaos + poison + parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chaos_soak_parity_with_poison_and_misbehaving_peers() {
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 16;
+    const WINDOW: usize = 4;
+
+    let service = sharded(4, 64);
+    let single_ref = ConvService::start(
+        BackendConfig::Native,
+        "monarch",
+        BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(1) },
+    )
+    .expect("reference service starts");
+
+    let mut rng = Rng::new(0x50AC);
+    for bucket in [256usize, 1024] {
+        let k = rng.normal_vec(HEADS * bucket);
+        service.set_filter(ConvKind::Forward, bucket, k.clone()).expect("fleet filter");
+        single_ref.set_filter(ConvKind::Forward, bucket, k).expect("single filter");
+    }
+
+    let ingress = bind(
+        &service,
+        IngressConfig {
+            idle_timeout: Some(Duration::from_secs(30)),
+            frame_timeout: Some(Duration::from_secs(2)),
+            write_timeout: Some(Duration::from_secs(10)),
+            reply_deadline: Some(Duration::from_secs(30)),
+            ..IngressConfig::default()
+        },
+    );
+    let addr = ingress.local_addr();
+
+    let stop = AtomicBool::new(false);
+    let swaps = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        // Chaos peer 1: slow loris — one clean exchange, then a stalled
+        // partial frame pinning its slot until the frame deadline.
+        s.spawn(|| {
+            let mut loris = match TcpStream::connect(addr) {
+                Ok(s) => s,
+                Err(_) => return,
+            };
+            let _ = loris.set_read_timeout(Some(Duration::from_secs(60)));
+            let mut rng = Rng::new(0x10F1);
+            let u = rng.normal_vec(HEADS * 256);
+            let _ = loris.write_all(&wire::encode_request(1, &conv_req(256, u)));
+            let _ = wire::read_frame(&mut loris);
+            let _ = loris.write_all(&[0x01, 0x02, 0x03]);
+            // Hold until evicted: the next read returns the notice/EOF.
+            let _ = wire::read_frame(&mut loris);
+            let _ = wire::read_frame(&mut loris);
+        });
+        // Chaos peer 2: mid-frame cut through the proxy.
+        s.spawn(|| {
+            let proxy =
+                match ChaosProxy::start(addr, FaultPlan::cut_after(20), FaultPlan::clean()) {
+                    Ok(p) => p,
+                    Err(_) => return,
+                };
+            if let Ok(mut s) = TcpStream::connect(proxy.local_addr()) {
+                let mut rng = Rng::new(0x2C2);
+                let u = rng.normal_vec(HEADS * 256);
+                let _ = s.write_all(&wire::encode_request(1, &conv_req(256, u)));
+                let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+                let _ = wire::read_frame(&mut s);
+            }
+        });
+        // Concurrent two-phase filter swaps on a bucket the soak never
+        // routes to (epoch churn without breaking parity).
+        {
+            let (stop, swaps) = (&stop, &swaps);
+            s.spawn(move || {
+                let mut client = match IngressClient::connect(addr) {
+                    Ok(c) => c,
+                    Err(_) => return,
+                };
+                let mut rng = Rng::new(0x5A4C);
+                while !stop.load(Ordering::Relaxed) {
+                    let taps = rng.normal_vec(HEADS * 512);
+                    let req = Request::InstallFilter { kind: 2, bucket: 512, taps };
+                    if let Ok(Reply::Ok { .. }) =
+                        client.call_retry(&req, 4096, Duration::from_micros(200))
+                    {
+                        swaps.fetch_add(1, Ordering::Relaxed);
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                client.finish();
+            });
+        }
+        // Poison a shard mid-soak: in-flight work on it surfaces as
+        // retryable shard_died; the supervisor respawns it.
+        {
+            let service = &service;
+            s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(80));
+                service.fleet().poison_shard(1);
+            });
+        }
+
+        // The 8 well-behaved pipelined clients.
+        let mut handles = Vec::new();
+        for c in 0..CLIENTS {
+            let single_ref = &single_ref;
+            handles.push(s.spawn(move || {
+                let mut rng = Rng::new(7_000 + c as u64);
+                let mut client = IngressClient::connect(addr).expect("client connects");
+                client
+                    .set_timeouts(Some(Duration::from_secs(120)), None)
+                    .expect("timeouts set");
+                let mut to_send: std::collections::VecDeque<(usize, Vec<f32>)> = (0
+                    ..PER_CLIENT)
+                    .map(|i| {
+                        let len = if (c + i) % 4 == 0 { 1024 } else { 256 };
+                        (len, rng.normal_vec(HEADS * len))
+                    })
+                    .collect();
+                let mut queue: std::collections::VecDeque<(u64, usize, Vec<f32>)> =
+                    std::collections::VecDeque::new();
+                let mut done: Vec<(usize, Vec<f32>, Vec<f32>)> = Vec::new();
+                let mut watermark = 0u64;
+                while done.len() < PER_CLIENT {
+                    while queue.len() < WINDOW {
+                        match to_send.pop_front() {
+                            Some((len, u)) => {
+                                let id =
+                                    client.send(&conv_req(len, u.clone())).expect("send");
+                                queue.push_back((id, len, u));
+                            }
+                            None => break,
+                        }
+                    }
+                    let (id, len, u) = queue.pop_front().expect("request outstanding");
+                    let (rid, reply) = client.recv().expect("reply arrives");
+                    assert_eq!(rid, id, "client {c}: lost or duplicated reply");
+                    match reply {
+                        Reply::Ok { epoch, session, data } => {
+                            assert!(session.is_none());
+                            assert!(
+                                epoch >= watermark,
+                                "client {c}: epoch went backwards ({epoch} < {watermark})"
+                            );
+                            watermark = epoch;
+                            assert_eq!(data.len(), HEADS * len);
+                            done.push((len, u, data));
+                        }
+                        r if r.retryable() => {
+                            std::thread::sleep(Duration::from_micros(300));
+                            to_send.push_back((len, u));
+                        }
+                        other => panic!("client {c}: non-retryable failure: {other:?}"),
+                    }
+                }
+                client.finish();
+                for (len, u, y) in done {
+                    let want = single_ref
+                        .call(ConvRequest {
+                            kind: ConvKind::Forward,
+                            len,
+                            streams: vec![u],
+                        })
+                        .expect("reference conv ok");
+                    assert_eq!(
+                        y, want,
+                        "client {c}: wire output diverged from in-process under chaos"
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("soak client thread");
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    // The loris was evicted by a deadline while the soak progressed.
+    let ist = ingress.stats();
+    assert!(
+        ist.read_timeouts.load(Ordering::Relaxed) >= 1,
+        "the slow loris must have been evicted"
+    );
+    // The poisoned shard died and came back; the fleet settled.
+    let stats = service.fleet().stats();
+    assert!(stats.shard_deaths >= 1, "poison must register a shard death");
+    assert!(
+        eventually(30, || service.fleet().stats().shards.iter().all(|sh| sh.alive)),
+        "the poisoned shard must respawn"
+    );
+    assert!(
+        eventually(30, || service.fleet().stats().inflight == 0),
+        "fleet must settle to zero in flight"
+    );
+    assert!(swaps.load(Ordering::Relaxed) >= 1, "epoch churn must have landed");
+    // Zero lost or duplicated replies: every decoded request frame got
+    // exactly one logical reply (notices are uncounted on both sides).
+    assert!(
+        eventually(10, || {
+            ist.replies_out.load(Ordering::Relaxed) == ist.frames_in.load(Ordering::Relaxed)
+        }),
+        "replies_out must converge to frames_in: {} vs {}",
+        ist.replies_out.load(Ordering::Relaxed),
+        ist.frames_in.load(Ordering::Relaxed)
+    );
+}

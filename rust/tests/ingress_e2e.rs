@@ -9,8 +9,9 @@
 //! epoch `e` then `e - 1`). Further tests cover graceful shard drain
 //! under live wire traffic (zero non-retryable client failures), the
 //! connection-pool load shed, malformed-frame handling on a live socket,
-//! session reaping for vanished clients, and the per-shard inflight
-//! gauge reconciliation.
+//! session reaping for vanished clients, the per-shard inflight gauge
+//! reconciliation, and writer teardown on a peer killed mid-reply
+//! (half-written frames must release the pool slot and reap sessions).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -322,7 +323,7 @@ fn over_cap_connections_are_shed_with_busy() {
         "127.0.0.1:0",
         Some(Arc::clone(&service)),
         None,
-        IngressConfig { max_connections: 1 },
+        IngressConfig { max_connections: 1, ..IngressConfig::default() },
     )
     .expect("ingress binds");
     let addr = ingress.local_addr();
@@ -516,6 +517,91 @@ fn vanished_connection_reaps_its_open_sessions() {
         other => panic!("foreign session id must read as lost, got {other:?}"),
     }
     other.finish();
+}
+
+#[test]
+fn peer_killed_mid_reply_releases_the_slot_and_reaps_sessions() {
+    use std::io::Write;
+    use std::net::Shutdown;
+
+    // Conv + model behind one front: large conv replies to wedge the
+    // writer mid-frame, a decode session to prove teardown still reaps.
+    let service = sharded(1, 32);
+    let server = Arc::new(
+        ModelServer::start(
+            BackendConfig::Native,
+            "lm_fwd_logits",
+            BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(2) },
+        )
+        .expect("model server starts"),
+    );
+    let ingress = IngressServer::bind(
+        "127.0.0.1:0",
+        Some(Arc::clone(&service)),
+        Some(Arc::clone(&server)),
+        IngressConfig {
+            // Bound the writer even if the kernel buffers the kill.
+            write_timeout: Some(Duration::from_secs(2)),
+            ..IngressConfig::default()
+        },
+    )
+    .expect("ingress binds");
+
+    let mut stream = std::net::TcpStream::connect(ingress.local_addr()).expect("raw connect");
+
+    // Open a session (and read its reply, so it is definitely open).
+    let prompt = vec![1i32; server.seq_len];
+    stream
+        .write_all(&wire::encode_request(1, &Request::OpenSession { prompt }))
+        .expect("open frame");
+    let body = wire::read_frame(&mut stream).expect("read ok").expect("reply present");
+    match wire::decode_reply(&body).expect("decodes") {
+        (1, Reply::Ok { session: Some(_), .. }) => {}
+        other => panic!("open_session failed: {other:?}"),
+    }
+
+    // Pipeline large conv requests (each reply is HEADS * 4096 f32s ≈
+    // 256 KiB — far beyond a loopback socket buffer once we stop
+    // reading), then kill the connection without reading a byte: the
+    // writer is mid-frame or about to be.
+    let mut rng = Rng::new(77);
+    for i in 0..6u64 {
+        let u = rng.normal_vec(HEADS * 4096);
+        let req = Request::Conv { kind: 0, len: 4096, streams: vec![u] };
+        stream.write_all(&wire::encode_request(10 + i, &req)).expect("conv frame");
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    let _ = stream.shutdown(Shutdown::Both);
+    drop(stream);
+
+    // The half-written reply must not wedge anything: the writer exits,
+    // the pool slot frees, the abandoned session is reaped, and every
+    // fleet slot settles.
+    let ist = ingress.stats();
+    assert!(
+        eventually(30, || ingress.open_connections() == 0),
+        "killed connection must leave the pool"
+    );
+    assert!(
+        eventually(30, || ist.sessions_reaped.load(Ordering::Relaxed) >= 1),
+        "mid-write teardown must still reap sessions"
+    );
+    assert!(
+        eventually(30, || service.fleet().stats().inflight == 0),
+        "fleet slots must settle after the peer dies"
+    );
+
+    // The front still serves new connections afterwards.
+    let mut client = IngressClient::connect(ingress.local_addr()).expect("fresh client");
+    let u = rng.normal_vec(HEADS * 256);
+    match client
+        .call_retry(&Request::Conv { kind: 0, len: 256, streams: vec![u] }, 64, Duration::from_millis(1))
+        .expect("round trip")
+    {
+        Reply::Ok { data, .. } => assert_eq!(data.len(), HEADS * 256),
+        other => panic!("front wedged after mid-write kill: {other:?}"),
+    }
+    client.finish();
 }
 
 #[test]

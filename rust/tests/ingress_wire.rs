@@ -50,7 +50,7 @@ fn gen_request(rng: &mut Rng) -> Request {
 }
 
 fn gen_reply(rng: &mut Rng) -> Reply {
-    match rng.below(7) {
+    match rng.below(10) {
         0 => Reply::Ok {
             epoch: rng.next_u64(),
             session: if rng.chance(0.5) { Some(rng.next_u64()) } else { None },
@@ -61,7 +61,15 @@ fn gen_reply(rng: &mut Rng) -> Reply {
         3 => Reply::Failed { msg: gen_msg(rng) },
         4 => Reply::SessionLost,
         5 => Reply::Shutdown,
-        _ => Reply::BadRequest { msg: gen_msg(rng) },
+        6 => Reply::BadRequest { msg: gen_msg(rng) },
+        7 => Reply::OkChunk {
+            epoch: rng.next_u64(),
+            seq: rng.below(1 << 20) as u32,
+            fin: rng.chance(0.5),
+            data: rng.normal_vec(gen::index(rng, 0, 64)),
+        },
+        8 => Reply::TimedOut { msg: gen_msg(rng) },
+        _ => Reply::Quota { msg: gen_msg(rng) },
     }
 }
 
@@ -181,13 +189,85 @@ fn trailing_bytes_are_rejected() {
 #[test]
 fn wrong_version_byte_is_rejected_as_bad_version() {
     let body = wire::encode_request(7, &Request::CloseSession { session: 1 })[4..].to_vec();
-    for v in [0u8, 2, 0xFF] {
+    for v in [0u8, WIRE_VERSION + 1, 0xFF] {
         let mut b = body.clone();
         b[0] = v;
         assert_eq!(wire::decode_request(&b), Err(WireError::BadVersion(v)));
         assert_eq!(wire::decode_reply(&b), Err(WireError::BadVersion(v)));
+        assert_eq!(wire::frame_version(&b), Err(WireError::BadVersion(v)));
     }
     assert_eq!(body[0], WIRE_VERSION, "encoder must stamp the supported version");
+    assert_eq!(wire::frame_version(&body), Ok(WIRE_VERSION));
+    assert_eq!(wire::frame_version(&[]), Err(WireError::Truncated));
+}
+
+// ---------------------------------------------------------------------------
+// Version negotiation: v1 compatibility and v2-only status downgrades
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v1_frames_still_round_trip_and_carry_their_version() {
+    forall(
+        "v1 compatibility round trip",
+        0x11C1,
+        default_cases().max(64),
+        |rng| (rng.next_u64(), gen_request(rng)),
+        |(id, req)| {
+            let frame = wire::encode_request_v(*id, req, 1);
+            let (_, body) = split(&frame);
+            if wire::frame_version(body) != Ok(1) {
+                return false;
+            }
+            let (rid, back) = wire::decode_request(body).expect("v1 frame decodes");
+            rid == *id && back == *req
+        },
+    );
+}
+
+#[test]
+fn v2_only_statuses_downgrade_at_v1_and_stay_typed_at_v2() {
+    let timed = Reply::TimedOut { msg: "deadline".into() };
+    let quota = Reply::Quota { msg: "budget".into() };
+    let chunk = Reply::OkChunk { epoch: 3, seq: 0, fin: true, data: vec![1.0] };
+
+    // At v2 each status survives encode/decode as itself.
+    for r in [&timed, &quota, &chunk] {
+        let (_, body) = {
+            let f = wire::encode_reply_v(9, r, 2);
+            (0, f[4..].to_vec())
+        };
+        let (_, back) = wire::decode_reply(&body).expect("v2 status decodes");
+        assert_eq!(&back, r);
+    }
+
+    // At v1 the encoder downgrades: timed_out stays *retryable* (busy),
+    // quota and chunk become typed failures a v1 client can decode.
+    let (_, back) = wire::decode_reply(&wire::encode_reply_v(9, &timed, 1)[4..]).unwrap();
+    assert_eq!(back, Reply::Busy, "timed_out must stay retryable at v1");
+    assert!(back.retryable());
+    let (_, back) = wire::decode_reply(&wire::encode_reply_v(9, &quota, 1)[4..]).unwrap();
+    assert!(
+        matches!(&back, Reply::Failed { msg } if msg.contains("quota")),
+        "quota must downgrade to a failed naming the cause, got {back:?}"
+    );
+    let (_, back) = wire::decode_reply(&wire::encode_reply_v(9, &chunk, 1)[4..]).unwrap();
+    assert!(
+        matches!(&back, Reply::Failed { msg } if msg.contains("v2")),
+        "ok_chunk must downgrade to a failed naming the fix, got {back:?}"
+    );
+
+    // The downgraded frames carry version byte 1 (a v1 client's range).
+    for r in [&timed, &quota, &chunk] {
+        assert_eq!(wire::frame_version(&wire::encode_reply_v(9, r, 1)[4..]), Ok(1));
+    }
+
+    // Retryability contract across the full status set.
+    assert!(Reply::Busy.retryable());
+    assert!(Reply::ShardDied.retryable());
+    assert!(timed.retryable());
+    assert!(!quota.retryable());
+    assert!(!Reply::SessionLost.retryable());
+    assert!(!Reply::Shutdown.retryable());
 }
 
 #[test]

@@ -1,0 +1,194 @@
+//! Integration test for `flashfftconv serve --listen` driving the real
+//! compiled binary end to end: spawn it, parse the bound address off its
+//! stdout handshake line, run wire round trips against it from this
+//! process, then close its stdin — the `--requests 0` shutdown signal —
+//! and require a graceful, successful exit with the drain marker.
+//!
+//! Everything is deadline-bounded: a watchdog kills the child if it
+//! outlives the test budget, so a regression hangs the suite for seconds,
+//! not forever.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use flashfftconv::ingress::client::IngressClient;
+use flashfftconv::ingress::wire::{Reply, Request};
+use flashfftconv::util::Rng;
+
+const BIN: &str = env!("CARGO_BIN_EXE_flashfftconv");
+const HEADS: usize = 16;
+
+/// Stream the child's stdout line-by-line over a channel (so the test
+/// can apply its own receive deadlines instead of blocking on a pipe).
+fn line_reader(child: &mut Child) -> Receiver<String> {
+    let stdout = child.stdout.take().expect("stdout piped");
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        for line in BufReader::new(stdout).lines() {
+            let Ok(line) = line else { break };
+            if tx.send(line).is_err() {
+                break;
+            }
+        }
+    });
+    rx
+}
+
+/// Kill the child if it is still running when `budget` expires. Returns
+/// a guard; dropping it disarms nothing (the watchdog exits on its own
+/// once the child is reaped).
+fn watchdog(child: Arc<Mutex<Child>>, budget: Duration) {
+    std::thread::spawn(move || {
+        let deadline = Instant::now() + budget;
+        loop {
+            {
+                let mut c = child.lock().unwrap();
+                match c.try_wait() {
+                    Ok(Some(_)) => return, // exited; nothing to do
+                    Ok(None) if Instant::now() >= deadline => {
+                        let _ = c.kill();
+                        return;
+                    }
+                    _ => {}
+                }
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    });
+}
+
+/// Wait for the child with a deadline; panics (after killing it) if it
+/// does not exit in time.
+fn wait_bounded(child: &Arc<Mutex<Child>>, budget: Duration) -> std::process::ExitStatus {
+    let deadline = Instant::now() + budget;
+    loop {
+        {
+            let mut c = child.lock().unwrap();
+            if let Ok(Some(status)) = c.try_wait() {
+                return status;
+            }
+            if Instant::now() >= deadline {
+                let _ = c.kill();
+                panic!("serve binary did not exit within {budget:?}");
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[test]
+fn serve_listen_round_trips_and_drains_on_stdin_eof() {
+    let mut child = Command::new(BIN)
+        .args([
+            "serve",
+            "--listen",
+            "127.0.0.1:0",
+            "--requests",
+            "0",
+            "--shards",
+            "1",
+            "--max-wait-ms",
+            "1",
+            "--idle-ms",
+            "30000",
+            "--frame-ms",
+            "10000",
+            "--grace-ms",
+            "10000",
+        ])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("serve binary spawns");
+    let stdin = child.stdin.take().expect("stdin piped");
+    let lines = line_reader(&mut child);
+    let child = Arc::new(Mutex::new(child));
+    watchdog(Arc::clone(&child), Duration::from_secs(240));
+
+    // Handshake: scan stdout for the machine-readable listening line.
+    let mut addr = None;
+    let hs_deadline = Instant::now() + Duration::from_secs(120);
+    while addr.is_none() {
+        let rem = hs_deadline.saturating_duration_since(Instant::now());
+        match lines.recv_timeout(rem.max(Duration::from_millis(1))) {
+            Ok(line) => {
+                if let Some(rest) = line.strip_prefix("ingress listening on ") {
+                    assert!(
+                        rest.contains("(wire v2)"),
+                        "handshake must advertise the wire version: {line}"
+                    );
+                    addr = rest.split_whitespace().next().map(str::to_string);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => panic!("no listening handshake within 120s"),
+            Err(RecvTimeoutError::Disconnected) => {
+                panic!("serve binary exited before the listening handshake")
+            }
+        }
+    }
+    let addr = addr.expect("bound address parsed");
+
+    // Real wire traffic against the spawned process: convs at two
+    // lengths plus a live filter install.
+    let mut rng = Rng::new(0xC11);
+    let mut client = IngressClient::connect(&*addr).expect("client connects to spawned serve");
+    client
+        .set_timeouts(Some(Duration::from_secs(120)), Some(Duration::from_secs(30)))
+        .expect("timeouts set");
+    for len in [256usize, 1024, 256] {
+        let u = rng.normal_vec(HEADS * len);
+        let req = Request::Conv { kind: 0, len: len as u32, streams: vec![u] };
+        match client
+            .call_retry(&req, 64, Duration::from_millis(2))
+            .expect("wire round trip against the binary")
+        {
+            Reply::Ok { data, .. } => assert_eq!(data.len(), HEADS * len),
+            other => panic!("spawned serve rejected a conv: {other:?}"),
+        }
+    }
+    let taps = rng.normal_vec(HEADS * 256);
+    match client
+        .call_retry(&Request::InstallFilter { kind: 0, bucket: 256, taps }, 64, Duration::from_millis(2))
+        .expect("filter install round trip")
+    {
+        Reply::Ok { epoch, .. } => assert!(epoch >= 1, "install must bump the epoch"),
+        other => panic!("filter install over the wire failed: {other:?}"),
+    }
+    client.finish();
+
+    // Closing stdin is the shutdown signal: the binary quiesces the
+    // fleet, drains the ingress, prints the marker, and exits zero.
+    drop(stdin);
+    let status = wait_bounded(&child, Duration::from_secs(60));
+    assert!(status.success(), "serve must exit cleanly on stdin EOF: {status:?}");
+    let tail: Vec<String> = lines.try_iter().collect();
+    assert!(
+        tail.iter().any(|l| l.contains("ingress drained and shut down")),
+        "drain marker missing from serve output: {tail:?}"
+    );
+}
+
+#[test]
+fn serve_listen_self_driving_smoke_exits_cleanly() {
+    let mut child = Command::new(BIN)
+        .args(["serve", "--listen", "127.0.0.1:0", "--requests", "4", "--len", "256"])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("serve binary spawns");
+    let lines = line_reader(&mut child);
+    let child = Arc::new(Mutex::new(child));
+    watchdog(Arc::clone(&child), Duration::from_secs(240));
+    let status = wait_bounded(&child, Duration::from_secs(240));
+    assert!(status.success(), "self-driving smoke must exit zero: {status:?}");
+    let out: Vec<String> = lines.try_iter().collect();
+    assert!(
+        out.iter().any(|l| l.contains("ingress served 4/4")),
+        "smoke must report a full serve: {out:?}"
+    );
+}
