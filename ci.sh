@@ -17,6 +17,12 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# Same suite with the portable kernel tier pinned: every SIMD microkernel
+# has a scalar twin, and the whole tree must pass on it — this is what a
+# host without AVX2/FMA (or a miscompiled target-feature gate) would run.
+echo "==> cargo test -q (FFC_FORCE_SCALAR=1, portable kernel tier)"
+FFC_FORCE_SCALAR=1 cargo test -q
+
 # The pjrt feature compiles against the vendored xla API stub offline;
 # keep it building so backend-trait changes never strand the HLO path.
 echo "==> cargo check --features pjrt"
@@ -246,6 +252,59 @@ PY
 else
     grep -q '"mean_ns"' BENCH_table3.json && grep -q '"name"' BENCH_table3.json \
         && echo "BENCH_table3.json OK (grep check; python3 unavailable)"
+fi
+
+# GEMM kernel artifact: the microkernel bench must emit BENCH_gemm.json
+# with the per-tier stage-GEMM records (portable vs FMA tiers vs the f32
+# serving tier) and the autotuned-vs-model dispatch pairs. The SIMD
+# speedup and the tuned-never-loses bar are asserted as warnings at
+# smoke scale (1 iteration is jitter-dominated); full-scale runs are
+# where the acceptance numbers come from.
+echo "==> gemm kernel smoke: FFC_BENCH_ITERS=1 cargo bench --bench table_gemm"
+rm -f BENCH_gemm.json
+FFC_BENCH_ITERS=1 FFC_BENCH_MAX_SECS=5 cargo bench --bench table_gemm >/dev/null
+test -s BENCH_gemm.json || { echo "FAIL: BENCH_gemm.json missing or empty"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PY'
+import json
+recs = json.load(open("BENCH_gemm.json"))
+by = {r["name"]: r for r in recs}
+for r in recs:
+    missing = {"name", "n", "kernel", "precision", "median_ns", "gflops"} - set(r)
+    assert not missing, f"record missing {missing}: {r}"
+    assert r["median_ns"] > 0, f"degenerate record: {r}"
+gemm = [r for r in recs if r["name"].startswith("gemm_") and r["precision"] == "f64"]
+assert gemm, f"no f64 gemm records: {sorted(by)}"
+lens = sorted({r["n"] for r in gemm})
+assert len(lens) >= 3, f"need >=3 gemm lengths, got {lens}"
+for n in lens:
+    port = by.get(f"gemm_portable_n{n}")
+    assert port, f"missing portable baseline at n={n}: {sorted(by)}"
+    f32 = [r for r in recs if r["precision"] == "f32" and r["n"] == n]
+    assert f32, f"missing f32 serving-tier record at n={n}"
+simd = by.get("gemm_avx2fma_n4096")
+if simd:
+    speedup = by["gemm_portable_n4096"]["median_ns"] / simd["median_ns"]
+    print(f"BENCH_gemm.json: avx2fma vs portable at n=4096: {speedup:.2f}x")
+    if speedup < 1.5:
+        print(f"WARN: AVX2+FMA under the 1.5x bar this run ({speedup:.2f}x)")
+else:
+    print("BENCH_gemm.json: no AVX2+FMA tier on this host (portable/scalar only)")
+pairs = 0
+for n in lens:
+    model = by.get(f"dispatch_model_n{n}")
+    tuned = by.get(f"dispatch_tuned_n{n}")
+    assert model and tuned, f"missing dispatch pair at n={n}: {sorted(by)}"
+    pairs += 1
+    ratio = tuned["median_ns"] / model["median_ns"]
+    if ratio > 1.10:
+        print(f"WARN: tuned dispatch slower than model at n={n} ({ratio:.2f}x)")
+print(f"BENCH_gemm.json OK ({len(recs)} records, {pairs} dispatch pairs)")
+PY
+else
+    grep -q '"gemm_portable_n4096"' BENCH_gemm.json \
+        && grep -q '"dispatch_tuned_n' BENCH_gemm.json \
+        && echo "BENCH_gemm.json OK (grep check; python3 unavailable)"
 fi
 
 # Memory artifact: the table16 bench measures steady-state allocations

@@ -1,0 +1,211 @@
+//! GEMM microkernel + dispatch bench (`BENCH_gemm.json`).
+//!
+//! Two questions, answered on this host and recorded across PRs:
+//!
+//! 1. **Kernel tiers** — the explicit AVX2+FMA and scalar-FMA
+//!    split-complex microkernels vs the portable fallback (and the f32
+//!    serving tier vs f64) on stage-shaped GEMMs: the `(rows·n2) × n1 ·
+//!    n1 × n1` multiply a Monarch order-2 plan issues at each conv
+//!    length. The acceptance bar is AVX2+FMA ≥ 1.5× portable at
+//!    fft_len ≥ 4096 on an AVX2 host (ci.sh warns when a run misses it).
+//! 2. **Dispatch** — autotuned order selection (`fft::tune`, measured
+//!    winner) vs the pure §3.2 cost-model order, timed through the real
+//!    planned conv: the tuned choice must not lose to the model's on the
+//!    probed ladder.
+//!
+//! Run: `cargo bench --bench table_gemm` (honours `FFC_BENCH_ITERS` /
+//! `FFC_BENCH_MAX_SECS`); ci.sh validates the emitted artifact.
+
+use flashfftconv::bench::{bench, BenchConfig, Table};
+use flashfftconv::costmodel;
+use flashfftconv::fft::gemm::{self, KernelBackend};
+use flashfftconv::fft::workspace::ConvWorkspace;
+use flashfftconv::fft::{self, plan, tune};
+use flashfftconv::util::Rng;
+
+/// Rows batched per stage GEMM (a representative row-block slice).
+const ROWS: usize = 4;
+
+struct GemmRecord {
+    name: String,
+    n: usize,
+    kernel: String,
+    precision: &'static str,
+    median_ns: f64,
+    gflops: f64,
+}
+
+fn records_json(recs: &[GemmRecord]) -> String {
+    let rows: Vec<String> = recs
+        .iter()
+        .map(|r| {
+            format!(
+                "  {{\"name\": \"{}\", \"n\": {}, \"kernel\": \"{}\", \
+                 \"precision\": \"{}\", \"median_ns\": {:.1}, \"gflops\": {:.3}}}",
+                r.name, r.n, r.kernel, r.precision, r.median_ns, r.gflops
+            )
+        })
+        .collect();
+    format!("[\n{}\n]\n", rows.join(",\n"))
+}
+
+/// The kernel tiers worth pitting against each other on this host:
+/// portable always, plus every FMA tier the CPU actually executes
+/// (requesting an unsupported tier would silently benchmark its
+/// downgrade under the wrong label).
+fn host_tiers() -> Vec<KernelBackend> {
+    match gemm::active_backend() {
+        KernelBackend::Avx2Fma => {
+            vec![KernelBackend::Portable, KernelBackend::ScalarFma, KernelBackend::Avx2Fma]
+        }
+        KernelBackend::ScalarFma => vec![KernelBackend::Portable, KernelBackend::ScalarFma],
+        KernelBackend::Portable => vec![KernelBackend::Portable],
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut recs: Vec<GemmRecord> = vec![];
+
+    println!("\n=== GEMM microkernels: split-complex stage shapes ===");
+    println!("active backend: {}", gemm::active_backend().label());
+    let mut t = Table::new(&["fft_len", "m x k x n", "kernel", "prec", "median", "GFLOP/s"]);
+    for &fft_len in &[1024usize, 4096, 16384] {
+        // The stage-0 GEMM an order-2 real plan issues: the inner complex
+        // length nh = fft_len/2 factors as (n1, n2); each of ROWS
+        // transforms multiplies its n2 columns through the n1 × n1 DFT
+        // stage matrix.
+        let nh = fft_len / 2;
+        let fs = fft::monarch_factors(nh, 2);
+        let (n1, n2) = (fs[0], fs[1]);
+        let (m, k, nn) = (ROWS * n2, n1, n1);
+        let mut rng = Rng::new(0x6E44 ^ fft_len as u64);
+        let a_re: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let a_im: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let b_re: Vec<f64> = (0..k * nn).map(|_| rng.normal()).collect();
+        let b_im: Vec<f64> = (0..k * nn).map(|_| rng.normal()).collect();
+        let mut c_re = vec![0.0f64; m * nn];
+        let mut c_im = vec![0.0f64; m * nn];
+        // 4 real multiplies + 4 real adds per complex MAC.
+        let flops = 8.0 * (m * k * nn) as f64;
+        for &tier in &host_tiers() {
+            let r = bench(&format!("gemm_{}_n{fft_len}", tier.label()), &cfg, || {
+                gemm::matmul_sc_with(
+                    tier, m, k, nn, &a_re, &a_im, k, &b_re, &b_im, nn, &mut c_re, &mut c_im,
+                    nn,
+                );
+                std::hint::black_box(&c_re);
+            });
+            let gflops = flops / r.median_ns;
+            t.row(vec![
+                fft_len.to_string(),
+                format!("{m}x{k}x{nn}"),
+                tier.label().into(),
+                "f64".into(),
+                format!("{:.1}us", r.median_ns / 1e3),
+                format!("{gflops:.2}"),
+            ]);
+            recs.push(GemmRecord {
+                name: format!("gemm_{}_n{fft_len}", tier.label()),
+                n: fft_len,
+                kernel: tier.label().into(),
+                precision: "f64",
+                median_ns: r.median_ns,
+                gflops,
+            });
+        }
+        // f32 serving tier on the active backend (twice the lane width).
+        let af_re: Vec<f32> = a_re.iter().map(|&v| v as f32).collect();
+        let af_im: Vec<f32> = a_im.iter().map(|&v| v as f32).collect();
+        let bf_re: Vec<f32> = b_re.iter().map(|&v| v as f32).collect();
+        let bf_im: Vec<f32> = b_im.iter().map(|&v| v as f32).collect();
+        let mut cf_re = vec![0.0f32; m * nn];
+        let mut cf_im = vec![0.0f32; m * nn];
+        let tier = gemm::active_backend();
+        let r = bench(&format!("gemm_f32_{}_n{fft_len}", tier.label()), &cfg, || {
+            gemm::matmul_sc_f32_with(
+                tier, m, k, nn, &af_re, &af_im, k, &bf_re, &bf_im, nn, &mut cf_re,
+                &mut cf_im, nn,
+            );
+            std::hint::black_box(&cf_re);
+        });
+        let gflops = flops / r.median_ns;
+        t.row(vec![
+            fft_len.to_string(),
+            format!("{m}x{k}x{nn}"),
+            tier.label().into(),
+            "f32".into(),
+            format!("{:.1}us", r.median_ns / 1e3),
+            format!("{gflops:.2}"),
+        ]);
+        recs.push(GemmRecord {
+            name: format!("gemm_f32_{}_n{fft_len}", tier.label()),
+            n: fft_len,
+            kernel: tier.label().into(),
+            precision: "f32",
+            median_ns: r.median_ns,
+            gflops,
+        });
+    }
+    t.print();
+
+    println!("\n=== Plan dispatch: autotuned order vs cost-model order ===");
+    let mut t = Table::new(&["fft_len", "model", "tuned (strategy)", "model", "tuned", "delta"]);
+    let rows = 8usize;
+    for &fft_len in &[1024usize, 4096, 16384] {
+        let model_order = costmodel::best_native_order(fft_len);
+        let tuned_order = tune::tuned_order(fft_len, rows);
+        let strategy = tune::tuned_choice(fft_len, rows)
+            .map(|c| c.strategy)
+            .unwrap_or_else(|| "?".into());
+        let mut rng = Rng::new(0xD15 ^ fft_len as u64);
+        let x: Vec<f64> = (0..rows * fft_len).map(|_| rng.normal()).collect();
+        let kb: Vec<f64> = (0..fft_len).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f64; rows * fft_len];
+        let mut ws = ConvWorkspace::new();
+        let mut time_order = |tag: &str, order: usize| -> f64 {
+            let rp = plan::real_plan(fft_len, order).expect("plan");
+            let (kre, kim) = rp.rfft_rows(&kb, 1);
+            // Warm plan + workspace outside the timed region.
+            rp.conv_rows_into(&x, rows, &kre, &kim, |_| 0, &mut y, &mut ws);
+            let r = bench(&format!("dispatch_{tag}_n{fft_len}"), &cfg, || {
+                rp.conv_rows_into(&x, rows, &kre, &kim, |_| 0, &mut y, &mut ws);
+                std::hint::black_box(&y);
+            });
+            r.median_ns
+        };
+        let model_ns = time_order("model", model_order);
+        let tuned_ns = time_order("tuned", tuned_order);
+        recs.push(GemmRecord {
+            name: format!("dispatch_model_n{fft_len}"),
+            n: fft_len,
+            kernel: format!("o{model_order}"),
+            precision: "f64",
+            median_ns: model_ns,
+            gflops: 0.0,
+        });
+        recs.push(GemmRecord {
+            name: format!("dispatch_tuned_n{fft_len}"),
+            n: fft_len,
+            kernel: strategy.clone(),
+            precision: "f64",
+            median_ns: tuned_ns,
+            gflops: 0.0,
+        });
+        t.row(vec![
+            fft_len.to_string(),
+            format!("o{model_order}"),
+            format!("o{tuned_order} ({strategy})"),
+            format!("{:.1}us", model_ns / 1e3),
+            format!("{:.1}us", tuned_ns / 1e3),
+            format!("{:.2}x", model_ns / tuned_ns),
+        ]);
+    }
+    t.print();
+
+    // Anchor to the workspace root: cargo runs bench executables with
+    // the package root as CWD.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gemm.json");
+    std::fs::write(path, records_json(&recs)).expect("write BENCH_gemm.json");
+    println!("wrote {path}");
+}

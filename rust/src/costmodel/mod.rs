@@ -12,6 +12,13 @@
 //! where γ(N_i) is the matmul throughput if N_i fills the matrix unit and
 //! the general-arithmetic throughput otherwise, and ω(i) is the bandwidth
 //! of the memory level holding step i's intermediates.
+//!
+//! Since PR 9 this model is the **prior, not the final word**, for
+//! native dispatch: `fft::tune` measures the candidate orders once per
+//! `(fft_len, rows-class)` and caches the winner, consulting the model
+//! to prune hopeless candidates and to break near-ties (and trusting it
+//! outright past the measurement cap and under `FFC_PLAN_TUNE=model`).
+//! [`best_native_order`] remains the analytic answer by itself.
 
 /// Empirical hardware constants (Table 19 for A100; H100 from §2.2).
 #[derive(Debug, Clone, Copy)]

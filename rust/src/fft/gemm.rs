@@ -1,34 +1,141 @@
-//! Split-complex GEMM + twiddle kernels for the planned Monarch stages.
+//! Split-complex GEMM + twiddle microkernels for the planned Monarch
+//! stages — the §3.1 "FFT as matmuls" hot loop, now with explicit SIMD.
 //!
 //! The plan executor ([`super::plan`]) reduces every FFT stage to a dense
-//! matrix multiply against a precomputed DFT factor matrix — the §3.1
-//! recasting of the FFT as matmuls. This module is the hot loop: complex
-//! arithmetic over separate re/im planes (split-complex, so every lane of
-//! a SIMD register does useful work), [`fmadd`]-based inner loops, and a
-//! column tile that keeps the streamed operand cache-resident. No trig,
-//! no branching in the inner loop, and **no allocation**: every kernel
-//! here writes into caller-provided planes, so the plan layer can run
-//! steady-state traffic entirely out of a warm
+//! matrix multiply against a precomputed DFT factor matrix. This module
+//! supplies that multiply (and the stage twiddle products) as a menu of
+//! *named microkernel backends* selected once per process by **runtime
+//! feature detection** — replacing the old compile-time
+//! `cfg!(target_feature = "fma")` guess, which baked the decision into
+//! the binary and silently fell back to libm soft-fma on hosts the build
+//! flags mispredicted:
+//!
+//! * [`KernelBackend::Avx2Fma`] — explicit `std::arch` AVX2+FMA kernels.
+//!   The GEMM accumulates a register-blocked C tile (4 re + 4 im ymm
+//!   accumulators per output row strip) across the entire k loop, so the
+//!   inner loop does 4 FMAs per 2 loads with **no C traffic**; the
+//!   twiddle kernels are 4-wide complex multiplies.
+//! * [`KernelBackend::ScalarFma`] — scalar `mul_add` loops compiled under
+//!   `#[target_feature(enable = "fma")]` so `mul_add` lowers to hardware
+//!   `vfmadd` regardless of build flags. Each output element's
+//!   accumulation chain performs the *same operations in the same order*
+//!   as the AVX2 kernel's lanes, so the two tiers are **bitwise
+//!   identical** (property-tested in this module).
+//! * [`KernelBackend::Portable`] — plain `a * b + c` loops with a column
+//!   tile ([`J_TILE`]), the pre-PR-9 code path: no feature requirements,
+//!   auto-vectorizable, and the correctness referee on machines without
+//!   FMA. Differs from the FMA tiers only by intermediate rounding
+//!   (≤ 2 ULP per accumulation step).
+//!
+//! [`active_backend`] picks the best supported tier once (cached) and
+//! `FFC_FORCE_SCALAR=1` pins [`KernelBackend::Portable`] for the whole
+//! process — CI runs the full test suite once in that mode so the
+//! fallback stays green on hosts without AVX2. Every kernel also has an
+//! explicit `*_with(backend, ..)` entry point (parity tests, benches);
+//! a requested backend the host cannot run is downgraded to the best
+//! supported tier rather than faulting.
+//!
+//! # f32 precision tier
+//!
+//! Every kernel exists in f64 (the default, oracle-grade precision) and
+//! f32 (`*_f32`): the f32 tier halves memory traffic and doubles SIMD
+//! lane width for serving paths that tolerate reduced precision
+//! (opt-in per plan — see `fft::plan::real_plan_f32` for the tolerance
+//! gate; the kernels themselves are precision-agnostic).
+//!
+//! No trig, no branching in the inner loops, and **no allocation**:
+//! every kernel writes into caller-provided planes, so the plan layer
+//! runs steady-state traffic entirely out of a warm
 //! [`super::workspace::ConvWorkspace`].
 
-/// Column-tile width: bounds the C/B working set the inner loops sweep
-/// (a tile of f64 re+im planes is `2 * 8 * J_TILE` bytes per row, well
-/// inside L1 alongside one streamed B row).
+use std::sync::OnceLock;
+
+/// Column-tile width of the portable GEMM: bounds the C/B working set
+/// the inner loops sweep (a tile of f64 re+im planes is `2 * 8 * J_TILE`
+/// bytes per row, well inside L1 alongside one streamed B row).
 const J_TILE: usize = 512;
 
-/// Fused multiply-add that lowers to a hardware FMA when the target has
-/// one and to separate mul+add otherwise. The fallback matters: without
-/// the `fma` target feature, `f64::mul_add` becomes a correctly-rounded
-/// *software* fma (a libm call per element), which is far slower than
-/// the plain expression the optimizer can vectorize.
-#[inline(always)]
-pub fn fmadd(a: f64, b: f64, c: f64) -> f64 {
-    if cfg!(target_feature = "fma") {
-        a.mul_add(b, c)
-    } else {
-        a * b + c
+/// A named microkernel tier (the cuDNN-style "algorithm menu" entry the
+/// plan autotuner composes with the Monarch order — see `fft::tune`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Explicit AVX2+FMA `std::arch` kernels (x86-64 with avx2+fma).
+    Avx2Fma,
+    /// Scalar `mul_add` compiled with the `fma` target feature (x86-64
+    /// with fma but not avx2; bitwise identical to `Avx2Fma`).
+    ScalarFma,
+    /// Portable mul+add loops — any host, and the `FFC_FORCE_SCALAR=1`
+    /// pin.
+    Portable,
+}
+
+impl KernelBackend {
+    /// Short stable label (bench artifacts, autotuner strategy names).
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelBackend::Avx2Fma => "avx2fma",
+            KernelBackend::ScalarFma => "scalarfma",
+            KernelBackend::Portable => "portable",
+        }
     }
 }
+
+/// True when `FFC_FORCE_SCALAR=1` pins the portable tier (read once and
+/// cached: env reads are racy under multithreaded tests, and the kernel
+/// tier must be stable for the lifetime of the process-wide plan
+/// registries).
+pub fn force_scalar() -> bool {
+    static V: OnceLock<bool> = OnceLock::new();
+    *V.get_or_init(|| {
+        std::env::var("FFC_FORCE_SCALAR").map(|v| v == "1" || v == "true").unwrap_or(false)
+    })
+}
+
+/// The microkernel tier this process dispatches, chosen once by runtime
+/// feature detection (`is_x86_feature_detected!`) and cached.
+pub fn active_backend() -> KernelBackend {
+    static B: OnceLock<KernelBackend> = OnceLock::new();
+    *B.get_or_init(|| {
+        if force_scalar() {
+            return KernelBackend::Portable;
+        }
+        detect_best()
+    })
+}
+
+/// Best tier the host supports, ignoring the `FFC_FORCE_SCALAR` pin.
+fn detect_best() -> KernelBackend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return KernelBackend::Avx2Fma;
+        }
+        if std::arch::is_x86_feature_detected!("fma") {
+            return KernelBackend::ScalarFma;
+        }
+    }
+    KernelBackend::Portable
+}
+
+/// Downgrade a requested tier to one the host can actually execute (the
+/// explicit `*_with` entry points accept any tier so parity tests and
+/// benches can name their kernel; faulting on an unsupported host would
+/// make those tests host-dependent in the wrong direction).
+fn supported(requested: KernelBackend) -> KernelBackend {
+    let best = detect_best();
+    match (requested, best) {
+        (KernelBackend::Portable, _) => KernelBackend::Portable,
+        (KernelBackend::ScalarFma, KernelBackend::Portable) => KernelBackend::Portable,
+        (KernelBackend::ScalarFma, _) => KernelBackend::ScalarFma,
+        (KernelBackend::Avx2Fma, b) => b,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public dispatchers
+// ---------------------------------------------------------------------------
 
 /// `C = A · B` over split-complex planes.
 ///
@@ -37,8 +144,262 @@ pub fn fmadd(a: f64, b: f64, c: f64) -> f64 {
 /// the block-sparse inverse multiplies against the leading rows/columns
 /// of a stage matrix without copying it. `A` is `m × k`, `B` is `k × n`,
 /// `C` (`m × n`) is overwritten.
+///
+/// Slice contract (debug-asserted): `a_* ≥ (m-1)·lda + k`,
+/// `b_* ≥ (k-1)·ldb + n`, `c_* ≥ (m-1)·ldc + n`.
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_sc(
+    m: usize,
+    k: usize,
+    n: usize,
+    a_re: &[f64],
+    a_im: &[f64],
+    lda: usize,
+    b_re: &[f64],
+    b_im: &[f64],
+    ldb: usize,
+    c_re: &mut [f64],
+    c_im: &mut [f64],
+    ldc: usize,
+) {
+    matmul_sc_with(active_backend(), m, k, n, a_re, a_im, lda, b_re, b_im, ldb, c_re, c_im, ldc);
+}
+
+/// [`matmul_sc`] through an explicitly named kernel tier (downgraded if
+/// the host lacks it). Parity tests and the `table_gemm` bench use this
+/// to pit tiers against each other inside one process.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sc_with(
+    backend: KernelBackend,
+    m: usize,
+    k: usize,
+    n: usize,
+    a_re: &[f64],
+    a_im: &[f64],
+    lda: usize,
+    b_re: &[f64],
+    b_im: &[f64],
+    ldb: usize,
+    c_re: &mut [f64],
+    c_im: &mut [f64],
+    ldc: usize,
+) {
+    debug_assert_gemm(m, k, n, a_re.len(), a_im.len(), lda, b_re.len(), b_im.len(), ldb,
+        c_re.len(), c_im.len(), ldc);
+    if m == 0 || n == 0 {
+        return;
+    }
+    match supported(backend) {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2Fma => unsafe {
+            matmul_sc_avx2_f64(m, k, n, a_re, a_im, lda, b_re, b_im, ldb, c_re, c_im, ldc)
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::ScalarFma => unsafe {
+            matmul_sc_fma_f64(m, k, n, a_re, a_im, lda, b_re, b_im, ldb, c_re, c_im, ldc)
+        },
+        _ => matmul_sc_portable_f64(m, k, n, a_re, a_im, lda, b_re, b_im, ldb, c_re, c_im, ldc),
+    }
+}
+
+/// f32 [`matmul_sc`] — the reduced-precision serving tier (same layout
+/// and slice contract; twice the SIMD lane width).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sc_f32(
+    m: usize,
+    k: usize,
+    n: usize,
+    a_re: &[f32],
+    a_im: &[f32],
+    lda: usize,
+    b_re: &[f32],
+    b_im: &[f32],
+    ldb: usize,
+    c_re: &mut [f32],
+    c_im: &mut [f32],
+    ldc: usize,
+) {
+    matmul_sc_f32_with(active_backend(), m, k, n, a_re, a_im, lda, b_re, b_im, ldb, c_re, c_im, ldc);
+}
+
+/// [`matmul_sc_f32`] through an explicitly named kernel tier.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sc_f32_with(
+    backend: KernelBackend,
+    m: usize,
+    k: usize,
+    n: usize,
+    a_re: &[f32],
+    a_im: &[f32],
+    lda: usize,
+    b_re: &[f32],
+    b_im: &[f32],
+    ldb: usize,
+    c_re: &mut [f32],
+    c_im: &mut [f32],
+    ldc: usize,
+) {
+    debug_assert_gemm(m, k, n, a_re.len(), a_im.len(), lda, b_re.len(), b_im.len(), ldb,
+        c_re.len(), c_im.len(), ldc);
+    if m == 0 || n == 0 {
+        return;
+    }
+    match supported(backend) {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2Fma => unsafe {
+            matmul_sc_avx2_f32(m, k, n, a_re, a_im, lda, b_re, b_im, ldb, c_re, c_im, ldc)
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::ScalarFma => unsafe {
+            matmul_sc_fma_f32(m, k, n, a_re, a_im, lda, b_re, b_im, ldb, c_re, c_im, ldc)
+        },
+        _ => matmul_sc_portable_f32(m, k, n, a_re, a_im, lda, b_re, b_im, ldb, c_re, c_im, ldc),
+    }
+}
+
+/// `dst = src ⊙ tw` elementwise over split-complex planes — the forward
+/// Monarch stage twiddle applied on the way out of a stage GEMM.
+///
+/// Contract (debug-asserted at the call boundary so misuse fails loudly
+/// here, not as an opaque slice-index panic mid-kernel): **all six
+/// slices must have exactly equal length.**
+pub fn twiddle_mul(
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    src_re: &[f64],
+    src_im: &[f64],
+    tw_re: &[f64],
+    tw_im: &[f64],
+) {
+    debug_assert_twiddle4(dst_re.len(), dst_im.len(), src_re.len(), src_im.len(), tw_re.len(),
+        tw_im.len());
+    match supported(active_backend()) {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2Fma => unsafe {
+            twiddle_mul_avx2_f64(dst_re, dst_im, src_re, src_im, tw_re, tw_im)
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::ScalarFma => unsafe {
+            twiddle_mul_fma_f64(dst_re, dst_im, src_re, src_im, tw_re, tw_im)
+        },
+        _ => twiddle_mul_portable_f64(dst_re, dst_im, src_re, src_im, tw_re, tw_im),
+    }
+}
+
+/// f32 [`twiddle_mul`] (same six-equal-lengths contract).
+pub fn twiddle_mul_f32(
+    dst_re: &mut [f32],
+    dst_im: &mut [f32],
+    src_re: &[f32],
+    src_im: &[f32],
+    tw_re: &[f32],
+    tw_im: &[f32],
+) {
+    debug_assert_twiddle4(dst_re.len(), dst_im.len(), src_re.len(), src_im.len(), tw_re.len(),
+        tw_im.len());
+    match supported(active_backend()) {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2Fma => unsafe {
+            twiddle_mul_avx2_f32(dst_re, dst_im, src_re, src_im, tw_re, tw_im)
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::ScalarFma => unsafe {
+            twiddle_mul_fma_f32(dst_re, dst_im, src_re, src_im, tw_re, tw_im)
+        },
+        _ => twiddle_mul_portable_f32(dst_re, dst_im, src_re, src_im, tw_re, tw_im),
+    }
+}
+
+/// `x = x ⊙ conj(tw)` elementwise, in place — the inverse stage undoing
+/// its forward twiddle before the inverse factor GEMM.
+///
+/// Contract (debug-asserted at the call boundary): **all four slices
+/// must have exactly equal length.**
+pub fn twiddle_mul_conj(re: &mut [f64], im: &mut [f64], tw_re: &[f64], tw_im: &[f64]) {
+    debug_assert_twiddle2(re.len(), im.len(), tw_re.len(), tw_im.len());
+    match supported(active_backend()) {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2Fma => unsafe { twiddle_mul_conj_avx2_f64(re, im, tw_re, tw_im) },
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::ScalarFma => unsafe { twiddle_mul_conj_fma_f64(re, im, tw_re, tw_im) },
+        _ => twiddle_mul_conj_portable_f64(re, im, tw_re, tw_im),
+    }
+}
+
+/// f32 [`twiddle_mul_conj`] (same four-equal-lengths contract).
+pub fn twiddle_mul_conj_f32(re: &mut [f32], im: &mut [f32], tw_re: &[f32], tw_im: &[f32]) {
+    debug_assert_twiddle2(re.len(), im.len(), tw_re.len(), tw_im.len());
+    match supported(active_backend()) {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2Fma => unsafe { twiddle_mul_conj_avx2_f32(re, im, tw_re, tw_im) },
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::ScalarFma => unsafe { twiddle_mul_conj_fma_f32(re, im, tw_re, tw_im) },
+        _ => twiddle_mul_conj_portable_f32(re, im, tw_re, tw_im),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Contract guards (satellite: fail at the call boundary, not mid-kernel)
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn debug_assert_gemm(
+    m: usize,
+    k: usize,
+    n: usize,
+    a_re: usize,
+    a_im: usize,
+    lda: usize,
+    b_re: usize,
+    b_im: usize,
+    ldb: usize,
+    c_re: usize,
+    c_im: usize,
+    ldc: usize,
+) {
+    debug_assert!(lda >= k && ldb >= n && ldc >= n, "gemm strides under row width");
+    if m > 0 {
+        let need_a = (m - 1) * lda + k;
+        let need_c = (m - 1) * ldc + n;
+        debug_assert!(a_re >= need_a && a_im >= need_a, "gemm A planes too short");
+        debug_assert!(c_re >= need_c && c_im >= need_c, "gemm C planes too short");
+    }
+    if k > 0 && n > 0 {
+        let need_b = (k - 1) * ldb + n;
+        debug_assert!(b_re >= need_b && b_im >= need_b, "gemm B planes too short");
+    }
+}
+
+#[inline]
+fn debug_assert_twiddle4(
+    dst_re: usize,
+    dst_im: usize,
+    src_re: usize,
+    src_im: usize,
+    tw_re: usize,
+    tw_im: usize,
+) {
+    debug_assert_eq!(dst_re, dst_im, "twiddle_mul: dst planes differ in length");
+    debug_assert_eq!(dst_re, src_re, "twiddle_mul: src_re length != dst length");
+    debug_assert_eq!(dst_re, src_im, "twiddle_mul: src_im length != dst length");
+    debug_assert_eq!(dst_re, tw_re, "twiddle_mul: tw_re length != dst length");
+    debug_assert_eq!(dst_re, tw_im, "twiddle_mul: tw_im length != dst length");
+}
+
+#[inline]
+fn debug_assert_twiddle2(re: usize, im: usize, tw_re: usize, tw_im: usize) {
+    debug_assert_eq!(re, im, "twiddle_mul_conj: data planes differ in length");
+    debug_assert_eq!(re, tw_re, "twiddle_mul_conj: tw_re length != data length");
+    debug_assert_eq!(re, tw_im, "twiddle_mul_conj: tw_im length != data length");
+}
+
+// ---------------------------------------------------------------------------
+// Portable tier (pre-PR-9 path: mul+add, auto-vectorizable, any host)
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn matmul_sc_portable_f64(
     m: usize,
     k: usize,
     n: usize,
@@ -72,8 +433,8 @@ pub fn matmul_sc(
                 let cr = &mut c_re[co..co + jw];
                 let ci = &mut c_im[co..co + jw];
                 for j in 0..jw {
-                    cr[j] = fmadd(-ai, bi[j], fmadd(ar, br[j], cr[j]));
-                    ci[j] = fmadd(ai, br[j], fmadd(ar, bi[j], ci[j]));
+                    cr[j] = ar * br[j] - ai * bi[j] + cr[j];
+                    ci[j] = ar * bi[j] + ai * br[j] + ci[j];
                 }
             }
         }
@@ -81,10 +442,51 @@ pub fn matmul_sc(
     }
 }
 
-/// `dst = src ⊙ tw` elementwise over split-complex planes — the forward
-/// Monarch stage twiddle applied on the way out of a stage GEMM. All six
-/// slices must have equal length.
-pub fn twiddle_mul(
+#[allow(clippy::too_many_arguments)]
+fn matmul_sc_portable_f32(
+    m: usize,
+    k: usize,
+    n: usize,
+    a_re: &[f32],
+    a_im: &[f32],
+    lda: usize,
+    b_re: &[f32],
+    b_im: &[f32],
+    ldb: usize,
+    c_re: &mut [f32],
+    c_im: &mut [f32],
+    ldc: usize,
+) {
+    for i in 0..m {
+        let co = i * ldc;
+        c_re[co..co + n].fill(0.0);
+        c_im[co..co + n].fill(0.0);
+    }
+    let mut j0 = 0;
+    while j0 < n {
+        let jw = (2 * J_TILE).min(n - j0);
+        for i in 0..m {
+            let ao = i * lda;
+            let co = i * ldc + j0;
+            for l in 0..k {
+                let ar = a_re[ao + l];
+                let ai = a_im[ao + l];
+                let bo = l * ldb + j0;
+                let br = &b_re[bo..bo + jw];
+                let bi = &b_im[bo..bo + jw];
+                let cr = &mut c_re[co..co + jw];
+                let ci = &mut c_im[co..co + jw];
+                for j in 0..jw {
+                    cr[j] = ar * br[j] - ai * bi[j] + cr[j];
+                    ci[j] = ar * bi[j] + ai * br[j] + ci[j];
+                }
+            }
+        }
+        j0 += jw;
+    }
+}
+
+fn twiddle_mul_portable_f64(
     dst_re: &mut [f64],
     dst_im: &mut [f64],
     src_re: &[f64],
@@ -95,19 +497,460 @@ pub fn twiddle_mul(
     for j in 0..dst_re.len() {
         let (xr, xi) = (src_re[j], src_im[j]);
         let (tr, ti) = (tw_re[j], tw_im[j]);
-        dst_re[j] = fmadd(xr, tr, -(xi * ti));
-        dst_im[j] = fmadd(xr, ti, xi * tr);
+        dst_re[j] = xr * tr - xi * ti;
+        dst_im[j] = xr * ti + xi * tr;
     }
 }
 
-/// `x = x ⊙ conj(tw)` elementwise, in place — the inverse stage undoing
-/// its forward twiddle before the inverse factor GEMM.
-pub fn twiddle_mul_conj(re: &mut [f64], im: &mut [f64], tw_re: &[f64], tw_im: &[f64]) {
+fn twiddle_mul_portable_f32(
+    dst_re: &mut [f32],
+    dst_im: &mut [f32],
+    src_re: &[f32],
+    src_im: &[f32],
+    tw_re: &[f32],
+    tw_im: &[f32],
+) {
+    for j in 0..dst_re.len() {
+        let (xr, xi) = (src_re[j], src_im[j]);
+        let (tr, ti) = (tw_re[j], tw_im[j]);
+        dst_re[j] = xr * tr - xi * ti;
+        dst_im[j] = xr * ti + xi * tr;
+    }
+}
+
+fn twiddle_mul_conj_portable_f64(re: &mut [f64], im: &mut [f64], tw_re: &[f64], tw_im: &[f64]) {
     for j in 0..re.len() {
         let (xr, xi) = (re[j], im[j]);
         let (tr, ti) = (tw_re[j], tw_im[j]);
-        re[j] = fmadd(xr, tr, xi * ti);
-        im[j] = fmadd(xi, tr, -(xr * ti));
+        re[j] = xr * tr + xi * ti;
+        im[j] = xi * tr - xr * ti;
+    }
+}
+
+fn twiddle_mul_conj_portable_f32(re: &mut [f32], im: &mut [f32], tw_re: &[f32], tw_im: &[f32]) {
+    for j in 0..re.len() {
+        let (xr, xi) = (re[j], im[j]);
+        let (tr, ti) = (tw_re[j], tw_im[j]);
+        re[j] = xr * tr + xi * ti;
+        im[j] = xi * tr - xr * ti;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ScalarFma tier: mul_add under #[target_feature(enable = "fma")].
+//
+// Each output element's accumulation chain is operation-for-operation
+// the chain the AVX2 lanes execute (same order over l, fused negate-
+// multiply-add for the -ai·bi term), so ScalarFma and Avx2Fma results
+// are bitwise identical — the property the parity tests pin.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "fma")]
+unsafe fn matmul_sc_fma_f64(
+    m: usize,
+    k: usize,
+    n: usize,
+    a_re: &[f64],
+    a_im: &[f64],
+    lda: usize,
+    b_re: &[f64],
+    b_im: &[f64],
+    ldb: usize,
+    c_re: &mut [f64],
+    c_im: &mut [f64],
+    ldc: usize,
+) {
+    for i in 0..m {
+        let ao = i * lda;
+        let co = i * ldc;
+        for j in 0..n {
+            let mut cr = 0.0f64;
+            let mut ci = 0.0f64;
+            for l in 0..k {
+                let ar = a_re[ao + l];
+                let ai = a_im[ao + l];
+                let br = b_re[l * ldb + j];
+                let bi = b_im[l * ldb + j];
+                cr = (-ai).mul_add(bi, ar.mul_add(br, cr));
+                ci = ai.mul_add(br, ar.mul_add(bi, ci));
+            }
+            c_re[co + j] = cr;
+            c_im[co + j] = ci;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "fma")]
+unsafe fn matmul_sc_fma_f32(
+    m: usize,
+    k: usize,
+    n: usize,
+    a_re: &[f32],
+    a_im: &[f32],
+    lda: usize,
+    b_re: &[f32],
+    b_im: &[f32],
+    ldb: usize,
+    c_re: &mut [f32],
+    c_im: &mut [f32],
+    ldc: usize,
+) {
+    for i in 0..m {
+        let ao = i * lda;
+        let co = i * ldc;
+        for j in 0..n {
+            let mut cr = 0.0f32;
+            let mut ci = 0.0f32;
+            for l in 0..k {
+                let ar = a_re[ao + l];
+                let ai = a_im[ao + l];
+                let br = b_re[l * ldb + j];
+                let bi = b_im[l * ldb + j];
+                cr = (-ai).mul_add(bi, ar.mul_add(br, cr));
+                ci = ai.mul_add(br, ar.mul_add(bi, ci));
+            }
+            c_re[co + j] = cr;
+            c_im[co + j] = ci;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn twiddle_mul_fma_f64(
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    src_re: &[f64],
+    src_im: &[f64],
+    tw_re: &[f64],
+    tw_im: &[f64],
+) {
+    for j in 0..dst_re.len() {
+        let (xr, xi) = (src_re[j], src_im[j]);
+        let (tr, ti) = (tw_re[j], tw_im[j]);
+        dst_re[j] = xr.mul_add(tr, -(xi * ti));
+        dst_im[j] = xr.mul_add(ti, xi * tr);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn twiddle_mul_fma_f32(
+    dst_re: &mut [f32],
+    dst_im: &mut [f32],
+    src_re: &[f32],
+    src_im: &[f32],
+    tw_re: &[f32],
+    tw_im: &[f32],
+) {
+    for j in 0..dst_re.len() {
+        let (xr, xi) = (src_re[j], src_im[j]);
+        let (tr, ti) = (tw_re[j], tw_im[j]);
+        dst_re[j] = xr.mul_add(tr, -(xi * ti));
+        dst_im[j] = xr.mul_add(ti, xi * tr);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn twiddle_mul_conj_fma_f64(re: &mut [f64], im: &mut [f64], tw_re: &[f64], tw_im: &[f64]) {
+    for j in 0..re.len() {
+        let (xr, xi) = (re[j], im[j]);
+        let (tr, ti) = (tw_re[j], tw_im[j]);
+        re[j] = xr.mul_add(tr, xi * ti);
+        im[j] = xi.mul_add(tr, -(xr * ti));
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn twiddle_mul_conj_fma_f32(re: &mut [f32], im: &mut [f32], tw_re: &[f32], tw_im: &[f32]) {
+    for j in 0..re.len() {
+        let (xr, xi) = (re[j], im[j]);
+        let (tr, ti) = (tw_re[j], tw_im[j]);
+        re[j] = xr.mul_add(tr, xi * ti);
+        im[j] = xi.mul_add(tr, -(xr * ti));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Avx2Fma tier: explicit std::arch microkernels.
+//
+// The GEMM holds a register-blocked C strip (4 re + 4 im ymm
+// accumulators = 16 f64 outputs per row) across the entire k loop —
+// the inner loop is 2 broadcasts + 2 loads + 4 FMAs with zero C
+// traffic, vs the portable tier's load/store of C every (l, j) step.
+// Remainder columns run the ScalarFma chain (mul_add lowers to vfmadd
+// inside this target_feature scope), keeping the whole kernel bitwise
+// identical to the ScalarFma tier at every shape.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn matmul_sc_avx2_f64(
+    m: usize,
+    k: usize,
+    n: usize,
+    a_re: &[f64],
+    a_im: &[f64],
+    lda: usize,
+    b_re: &[f64],
+    b_im: &[f64],
+    ldb: usize,
+    c_re: &mut [f64],
+    c_im: &mut [f64],
+    ldc: usize,
+) {
+    use std::arch::x86_64::*;
+    // 4 ymm lanes of 4 f64 per plane per j-strip.
+    const JV: usize = 16;
+    let mut j0 = 0usize;
+    while j0 < n {
+        let jw = JV.min(n - j0);
+        let full = jw & !3; // multiple-of-4 prefix served by vector lanes
+        for i in 0..m {
+            let ao = i * lda;
+            let co = i * ldc + j0;
+            if full > 0 {
+                let mut accr = [_mm256_setzero_pd(); 4];
+                let mut acci = [_mm256_setzero_pd(); 4];
+                let nv = full / 4;
+                for l in 0..k {
+                    let ar = _mm256_set1_pd(a_re[ao + l]);
+                    let ai = _mm256_set1_pd(a_im[ao + l]);
+                    let bo = l * ldb + j0;
+                    for (s, (r, im)) in
+                        accr[..nv].iter_mut().zip(acci[..nv].iter_mut()).enumerate()
+                    {
+                        let br = _mm256_loadu_pd(b_re.as_ptr().add(bo + 4 * s));
+                        let bi = _mm256_loadu_pd(b_im.as_ptr().add(bo + 4 * s));
+                        *r = _mm256_fnmadd_pd(ai, bi, _mm256_fmadd_pd(ar, br, *r));
+                        *im = _mm256_fmadd_pd(ai, br, _mm256_fmadd_pd(ar, bi, *im));
+                    }
+                }
+                for s in 0..nv {
+                    _mm256_storeu_pd(c_re.as_mut_ptr().add(co + 4 * s), accr[s]);
+                    _mm256_storeu_pd(c_im.as_mut_ptr().add(co + 4 * s), acci[s]);
+                }
+            }
+            for j in full..jw {
+                let mut cr = 0.0f64;
+                let mut ci = 0.0f64;
+                for l in 0..k {
+                    let ar = a_re[ao + l];
+                    let ai = a_im[ao + l];
+                    let br = b_re[l * ldb + j0 + j];
+                    let bi = b_im[l * ldb + j0 + j];
+                    cr = (-ai).mul_add(bi, ar.mul_add(br, cr));
+                    ci = ai.mul_add(br, ar.mul_add(bi, ci));
+                }
+                c_re[co + j] = cr;
+                c_im[co + j] = ci;
+            }
+        }
+        j0 += jw;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn matmul_sc_avx2_f32(
+    m: usize,
+    k: usize,
+    n: usize,
+    a_re: &[f32],
+    a_im: &[f32],
+    lda: usize,
+    b_re: &[f32],
+    b_im: &[f32],
+    ldb: usize,
+    c_re: &mut [f32],
+    c_im: &mut [f32],
+    ldc: usize,
+) {
+    use std::arch::x86_64::*;
+    // 4 ymm lanes of 8 f32 per plane per j-strip.
+    const JV: usize = 32;
+    let mut j0 = 0usize;
+    while j0 < n {
+        let jw = JV.min(n - j0);
+        let full = jw & !7;
+        for i in 0..m {
+            let ao = i * lda;
+            let co = i * ldc + j0;
+            if full > 0 {
+                let mut accr = [_mm256_setzero_ps(); 4];
+                let mut acci = [_mm256_setzero_ps(); 4];
+                let nv = full / 8;
+                for l in 0..k {
+                    let ar = _mm256_set1_ps(a_re[ao + l]);
+                    let ai = _mm256_set1_ps(a_im[ao + l]);
+                    let bo = l * ldb + j0;
+                    for (s, (r, im)) in
+                        accr[..nv].iter_mut().zip(acci[..nv].iter_mut()).enumerate()
+                    {
+                        let br = _mm256_loadu_ps(b_re.as_ptr().add(bo + 8 * s));
+                        let bi = _mm256_loadu_ps(b_im.as_ptr().add(bo + 8 * s));
+                        *r = _mm256_fnmadd_ps(ai, bi, _mm256_fmadd_ps(ar, br, *r));
+                        *im = _mm256_fmadd_ps(ai, br, _mm256_fmadd_ps(ar, bi, *im));
+                    }
+                }
+                for s in 0..nv {
+                    _mm256_storeu_ps(c_re.as_mut_ptr().add(co + 8 * s), accr[s]);
+                    _mm256_storeu_ps(c_im.as_mut_ptr().add(co + 8 * s), acci[s]);
+                }
+            }
+            for j in full..jw {
+                let mut cr = 0.0f32;
+                let mut ci = 0.0f32;
+                for l in 0..k {
+                    let ar = a_re[ao + l];
+                    let ai = a_im[ao + l];
+                    let br = b_re[l * ldb + j0 + j];
+                    let bi = b_im[l * ldb + j0 + j];
+                    cr = (-ai).mul_add(bi, ar.mul_add(br, cr));
+                    ci = ai.mul_add(br, ar.mul_add(bi, ci));
+                }
+                c_re[co + j] = cr;
+                c_im[co + j] = ci;
+            }
+        }
+        j0 += jw;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn twiddle_mul_avx2_f64(
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    src_re: &[f64],
+    src_im: &[f64],
+    tw_re: &[f64],
+    tw_im: &[f64],
+) {
+    use std::arch::x86_64::*;
+    let n = dst_re.len();
+    let full = n & !3;
+    let mut j = 0usize;
+    while j < full {
+        let xr = _mm256_loadu_pd(src_re.as_ptr().add(j));
+        let xi = _mm256_loadu_pd(src_im.as_ptr().add(j));
+        let tr = _mm256_loadu_pd(tw_re.as_ptr().add(j));
+        let ti = _mm256_loadu_pd(tw_im.as_ptr().add(j));
+        // xr·tr − (xi·ti) / xr·ti + (xi·tr), same roundings as ScalarFma.
+        let re = _mm256_fmsub_pd(xr, tr, _mm256_mul_pd(xi, ti));
+        let im = _mm256_fmadd_pd(xr, ti, _mm256_mul_pd(xi, tr));
+        _mm256_storeu_pd(dst_re.as_mut_ptr().add(j), re);
+        _mm256_storeu_pd(dst_im.as_mut_ptr().add(j), im);
+        j += 4;
+    }
+    for j in full..n {
+        let (xr, xi) = (src_re[j], src_im[j]);
+        let (tr, ti) = (tw_re[j], tw_im[j]);
+        dst_re[j] = xr.mul_add(tr, -(xi * ti));
+        dst_im[j] = xr.mul_add(ti, xi * tr);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn twiddle_mul_avx2_f32(
+    dst_re: &mut [f32],
+    dst_im: &mut [f32],
+    src_re: &[f32],
+    src_im: &[f32],
+    tw_re: &[f32],
+    tw_im: &[f32],
+) {
+    use std::arch::x86_64::*;
+    let n = dst_re.len();
+    let full = n & !7;
+    let mut j = 0usize;
+    while j < full {
+        let xr = _mm256_loadu_ps(src_re.as_ptr().add(j));
+        let xi = _mm256_loadu_ps(src_im.as_ptr().add(j));
+        let tr = _mm256_loadu_ps(tw_re.as_ptr().add(j));
+        let ti = _mm256_loadu_ps(tw_im.as_ptr().add(j));
+        let re = _mm256_fmsub_ps(xr, tr, _mm256_mul_ps(xi, ti));
+        let im = _mm256_fmadd_ps(xr, ti, _mm256_mul_ps(xi, tr));
+        _mm256_storeu_ps(dst_re.as_mut_ptr().add(j), re);
+        _mm256_storeu_ps(dst_im.as_mut_ptr().add(j), im);
+        j += 8;
+    }
+    for j in full..n {
+        let (xr, xi) = (src_re[j], src_im[j]);
+        let (tr, ti) = (tw_re[j], tw_im[j]);
+        dst_re[j] = xr.mul_add(tr, -(xi * ti));
+        dst_im[j] = xr.mul_add(ti, xi * tr);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn twiddle_mul_conj_avx2_f64(
+    re: &mut [f64],
+    im: &mut [f64],
+    tw_re: &[f64],
+    tw_im: &[f64],
+) {
+    use std::arch::x86_64::*;
+    let n = re.len();
+    let full = n & !3;
+    let mut j = 0usize;
+    while j < full {
+        let xr = _mm256_loadu_pd(re.as_ptr().add(j));
+        let xi = _mm256_loadu_pd(im.as_ptr().add(j));
+        let tr = _mm256_loadu_pd(tw_re.as_ptr().add(j));
+        let ti = _mm256_loadu_pd(tw_im.as_ptr().add(j));
+        let r = _mm256_fmadd_pd(xr, tr, _mm256_mul_pd(xi, ti));
+        let i = _mm256_fmsub_pd(xi, tr, _mm256_mul_pd(xr, ti));
+        _mm256_storeu_pd(re.as_mut_ptr().add(j), r);
+        _mm256_storeu_pd(im.as_mut_ptr().add(j), i);
+        j += 4;
+    }
+    for j in full..n {
+        let (xr, xi) = (re[j], im[j]);
+        let (tr, ti) = (tw_re[j], tw_im[j]);
+        re[j] = xr.mul_add(tr, xi * ti);
+        im[j] = xi.mul_add(tr, -(xr * ti));
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn twiddle_mul_conj_avx2_f32(
+    re: &mut [f32],
+    im: &mut [f32],
+    tw_re: &[f32],
+    tw_im: &[f32],
+) {
+    use std::arch::x86_64::*;
+    let n = re.len();
+    let full = n & !7;
+    let mut j = 0usize;
+    while j < full {
+        let xr = _mm256_loadu_ps(re.as_ptr().add(j));
+        let xi = _mm256_loadu_ps(im.as_ptr().add(j));
+        let tr = _mm256_loadu_ps(tw_re.as_ptr().add(j));
+        let ti = _mm256_loadu_ps(tw_im.as_ptr().add(j));
+        let r = _mm256_fmadd_ps(xr, tr, _mm256_mul_ps(xi, ti));
+        let i = _mm256_fmsub_ps(xi, tr, _mm256_mul_ps(xr, ti));
+        _mm256_storeu_ps(re.as_mut_ptr().add(j), r);
+        _mm256_storeu_ps(im.as_mut_ptr().add(j), i);
+        j += 8;
+    }
+    for j in full..n {
+        let (xr, xi) = (re[j], im[j]);
+        let (tr, ti) = (tw_re[j], tw_im[j]);
+        re[j] = xr.mul_add(tr, xi * ti);
+        im[j] = xi.mul_add(tr, -(xr * ti));
     }
 }
 
@@ -117,13 +960,7 @@ mod tests {
     use crate::fft::Cpx;
     use crate::util::Rng;
 
-    fn naive(
-        m: usize,
-        k: usize,
-        n: usize,
-        a: &[Cpx],
-        b: &[Cpx],
-    ) -> Vec<Cpx> {
+    fn naive(m: usize, k: usize, n: usize, a: &[Cpx], b: &[Cpx]) -> Vec<Cpx> {
         let mut c = vec![Cpx::ZERO; m * n];
         for i in 0..m {
             for l in 0..k {
@@ -223,5 +1060,230 @@ mod tests {
         let z = vec![0.0; 4];
         matmul_sc(2, 2, 2, &z, &z, 2, &z, &z, 2, &mut c_re, &mut c_im, 2);
         assert!(c_re.iter().chain(&c_im).all(|&v| v == 0.0));
+        // Backends that never ran on this process's dispatch must also
+        // overwrite (the register-accumulated tiers store, not add).
+        let mut c_re = vec![7.0f64; 4];
+        let mut c_im = vec![7.0f64; 4];
+        for be in [KernelBackend::Avx2Fma, KernelBackend::ScalarFma, KernelBackend::Portable] {
+            matmul_sc_with(be, 2, 2, 2, &z, &z, 2, &z, &z, 2, &mut c_re, &mut c_im, 2);
+            assert!(c_re.iter().chain(&c_im).all(|&v| v == 0.0), "{be:?}");
+            c_re.fill(7.0);
+            c_im.fill(7.0);
+        }
+    }
+
+    #[test]
+    fn backend_detection_is_stable_and_force_scalar_pins_portable() {
+        let a = active_backend();
+        let b = active_backend();
+        assert_eq!(a, b, "detection must be cached, not re-derived");
+        if force_scalar() {
+            assert_eq!(a, KernelBackend::Portable, "FFC_FORCE_SCALAR must pin the scalar tier");
+        }
+        // Labels are stable identifiers for artifacts and tuner keys.
+        assert_eq!(KernelBackend::Avx2Fma.label(), "avx2fma");
+        assert_eq!(KernelBackend::Portable.label(), "portable");
+    }
+
+    /// GEMM shapes that cover the Monarch stage geometry across the
+    /// 64…16384 ladder: the innermost stacked GEMM (`m = rows·n/n1`,
+    /// `k = n = n1`) and the outer per-sub-row GEMM (`m = k = n1`,
+    /// `n = m2`), at the balanced order-2 factorizations.
+    fn ladder_shapes() -> Vec<(usize, usize, usize)> {
+        let mut shapes = vec![];
+        for &len in &[64usize, 256, 1024, 4096, 16384] {
+            let fs = crate::fft::monarch_factors(len, 2);
+            let (n1, n2) = (fs[0], fs[1]);
+            shapes.push((2 * n2, n1, n1)); // innermost stacked form (2 rows)
+            shapes.push((n1, n1, n2)); // outer per-sub-row form
+        }
+        shapes.push((3, 5, 21)); // ragged tails exercise every remainder path
+        shapes.push((1, 7, 13));
+        shapes
+    }
+
+    #[test]
+    fn fma_tiers_are_bitwise_identical_across_the_ladder() {
+        // Avx2Fma and ScalarFma execute the same per-element FMA chain
+        // in the same order — results must match bit for bit at every
+        // stage shape of the 64…16384 ladder. (On hosts without AVX2
+        // both requests downgrade to the same tier, which holds
+        // trivially.)
+        let mut rng = Rng::new(0xF1);
+        for (m, k, n) in ladder_shapes() {
+            let a = rand_cpx(&mut rng, m * k);
+            let b = rand_cpx(&mut rng, k * n);
+            let (a_re, a_im) = planes(&a);
+            let (b_re, b_im) = planes(&b);
+            let mut v_re = vec![0.0; m * n];
+            let mut v_im = vec![0.0; m * n];
+            let mut s_re = vec![0.0; m * n];
+            let mut s_im = vec![0.0; m * n];
+            matmul_sc_with(
+                KernelBackend::Avx2Fma,
+                m, k, n, &a_re, &a_im, k, &b_re, &b_im, n, &mut v_re, &mut v_im, n,
+            );
+            matmul_sc_with(
+                KernelBackend::ScalarFma,
+                m, k, n, &a_re, &a_im, k, &b_re, &b_im, n, &mut s_re, &mut s_im, n,
+            );
+            for i in 0..m * n {
+                assert_eq!(
+                    v_re[i].to_bits(),
+                    s_re[i].to_bits(),
+                    "({m},{k},{n}) re[{i}]: avx2 {} vs scalar-fma {}",
+                    v_re[i],
+                    s_re[i]
+                );
+                assert_eq!(v_im[i].to_bits(), s_im[i].to_bits(), "({m},{k},{n}) im[{i}]");
+            }
+        }
+    }
+
+    /// Max ULP distance between two f64s (0 for bitwise equality).
+    fn ulp_diff(a: f64, b: f64) -> u64 {
+        if a == b {
+            return 0;
+        }
+        let (ia, ib) = (a.to_bits() as i64, b.to_bits() as i64);
+        // Same sign assumed for nearby values; distant values saturate.
+        (ia - ib).unsigned_abs()
+    }
+
+    #[test]
+    fn portable_tier_stays_within_accumulation_tolerance() {
+        // The portable tier differs from the FMA tiers only by the
+        // intermediate rounding of each accumulation step: per output
+        // element the divergence is bounded by ~2 ULP per step times the
+        // chain length, far below the 1e-9 the plan-layer oracles gate.
+        let mut rng = Rng::new(0xF2);
+        for (m, k, n) in ladder_shapes() {
+            let a = rand_cpx(&mut rng, m * k);
+            let b = rand_cpx(&mut rng, k * n);
+            let (a_re, a_im) = planes(&a);
+            let (b_re, b_im) = planes(&b);
+            let mut p_re = vec![0.0; m * n];
+            let mut p_im = vec![0.0; m * n];
+            let mut f_re = vec![0.0; m * n];
+            let mut f_im = vec![0.0; m * n];
+            matmul_sc_with(
+                KernelBackend::Portable,
+                m, k, n, &a_re, &a_im, k, &b_re, &b_im, n, &mut p_re, &mut p_im, n,
+            );
+            matmul_sc_with(
+                KernelBackend::Avx2Fma,
+                m, k, n, &a_re, &a_im, k, &b_re, &b_im, n, &mut f_re, &mut f_im, n,
+            );
+            let bound = 4 * (k as u64) + 4;
+            for i in 0..m * n {
+                assert!(
+                    ulp_diff(p_re[i], f_re[i]) <= bound && ulp_diff(p_im[i], f_im[i]) <= bound,
+                    "({m},{k},{n}) entry {i}: portable {} vs fma {}",
+                    p_re[i],
+                    f_re[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn twiddle_kernels_agree_across_tiers() {
+        let mut rng = Rng::new(0xF3);
+        for &n in &[1usize, 3, 4, 7, 64, 1023, 4096] {
+            let x = rand_cpx(&mut rng, n);
+            let tw: Vec<Cpx> = (0..n)
+                .map(|j| Cpx::cis(-2.0 * std::f64::consts::PI * j as f64 / (n.max(2)) as f64))
+                .collect();
+            let (x_re, x_im) = planes(&x);
+            let (tw_re, tw_im) = planes(&tw);
+            // twiddle_mul parity.
+            let mut out: Vec<(Vec<f64>, Vec<f64>)> = vec![];
+            for be in
+                [KernelBackend::Avx2Fma, KernelBackend::ScalarFma, KernelBackend::Portable]
+            {
+                let mut re = vec![0.0; n];
+                let mut im = vec![0.0; n];
+                match supported(be) {
+                    #[cfg(target_arch = "x86_64")]
+                    KernelBackend::Avx2Fma => unsafe {
+                        twiddle_mul_avx2_f64(&mut re, &mut im, &x_re, &x_im, &tw_re, &tw_im)
+                    },
+                    #[cfg(target_arch = "x86_64")]
+                    KernelBackend::ScalarFma => unsafe {
+                        twiddle_mul_fma_f64(&mut re, &mut im, &x_re, &x_im, &tw_re, &tw_im)
+                    },
+                    _ => twiddle_mul_portable_f64(&mut re, &mut im, &x_re, &x_im, &tw_re, &tw_im),
+                }
+                out.push((re, im));
+            }
+            // FMA pair bitwise; portable within 2 ULP.
+            for j in 0..n {
+                assert_eq!(out[0].0[j].to_bits(), out[1].0[j].to_bits(), "n={n} re[{j}]");
+                assert_eq!(out[0].1[j].to_bits(), out[1].1[j].to_bits(), "n={n} im[{j}]");
+                assert!(ulp_diff(out[0].0[j], out[2].0[j]) <= 2, "n={n} re[{j}] vs portable");
+                assert!(ulp_diff(out[0].1[j], out[2].1[j]) <= 2, "n={n} im[{j}] vs portable");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_gemm_tracks_f64_reference_under_absolute_gate() {
+        // The f32 tier runs the same kernels at half precision: against
+        // the f64 result the error is bounded by the f32 epsilon times
+        // the accumulation length (absolute gate, inputs are O(1)).
+        let mut rng = Rng::new(0xF4);
+        for (m, k, n) in ladder_shapes() {
+            let a = rand_cpx(&mut rng, m * k);
+            let b = rand_cpx(&mut rng, k * n);
+            let (a_re, a_im) = planes(&a);
+            let (b_re, b_im) = planes(&b);
+            let a32r: Vec<f32> = a_re.iter().map(|&v| v as f32).collect();
+            let a32i: Vec<f32> = a_im.iter().map(|&v| v as f32).collect();
+            let b32r: Vec<f32> = b_re.iter().map(|&v| v as f32).collect();
+            let b32i: Vec<f32> = b_im.iter().map(|&v| v as f32).collect();
+            let mut c_re = vec![0.0f64; m * n];
+            let mut c_im = vec![0.0f64; m * n];
+            let mut c32r = vec![0.0f32; m * n];
+            let mut c32i = vec![0.0f32; m * n];
+            matmul_sc(m, k, n, &a_re, &a_im, k, &b_re, &b_im, n, &mut c_re, &mut c_im, n);
+            matmul_sc_f32(m, k, n, &a32r, &a32i, k, &b32r, &b32i, n, &mut c32r, &mut c32i, n);
+            let tol = 1e-5 * (k as f64) * 8.0 + 1e-4;
+            for i in 0..m * n {
+                assert!(
+                    (c32r[i] as f64 - c_re[i]).abs() < tol
+                        && (c32i[i] as f64 - c_im[i]).abs() < tol,
+                    "({m},{k},{n}) entry {i}: f32 ({}, {}) vs f64 ({}, {})",
+                    c32r[i],
+                    c32i[i],
+                    c_re[i],
+                    c_im[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_twiddle_kernels_invert_each_other() {
+        let mut rng = Rng::new(0xF5);
+        let n = 301usize;
+        let x = rand_cpx(&mut rng, n);
+        let x_re: Vec<f32> = x.iter().map(|c| c.re as f32).collect();
+        let x_im: Vec<f32> = x.iter().map(|c| c.im as f32).collect();
+        let tw_re: Vec<f32> = (0..n)
+            .map(|j| (-2.0 * std::f64::consts::PI * j as f64 / n as f64).cos() as f32)
+            .collect();
+        let tw_im: Vec<f32> = (0..n)
+            .map(|j| (-2.0 * std::f64::consts::PI * j as f64 / n as f64).sin() as f32)
+            .collect();
+        let mut re = vec![0.0f32; n];
+        let mut im = vec![0.0f32; n];
+        twiddle_mul_f32(&mut re, &mut im, &x_re, &x_im, &tw_re, &tw_im);
+        twiddle_mul_conj_f32(&mut re, &mut im, &tw_re, &tw_im);
+        for j in 0..n {
+            assert!(
+                (re[j] - x_re[j]).abs() < 1e-5 && (im[j] - x_im[j]).abs() < 1e-5,
+                "slot {j}"
+            );
+        }
     }
 }

@@ -14,12 +14,26 @@
 //! 3. **Coordinator utilities** — host-side spectrum manipulation for the
 //!    partial/frequency-sparse workflows (truncating or masking kernels
 //!    without re-entering Python).
-//! 4. **Planned hot path** ([`plan`] / [`gemm`] / [`workspace`]) — the
-//!    §3.1 recasting of the Monarch FFT as GEMMs against precomputed
-//!    per-stage factor matrices and twiddle vectors, batched over many
-//!    rows, with r2c half-spectrum packing for real signals. This is what
-//!    the native engines and the model zoo actually execute; every
-//!    planned path is property-tested against the role-1 oracles.
+//! 4. **Planned hot path** ([`plan`] / [`gemm`] / [`workspace`] /
+//!    [`tune`]) — the §3.1 recasting of the Monarch FFT as GEMMs against
+//!    precomputed per-stage factor matrices and twiddle vectors, batched
+//!    over many rows, with r2c half-spectrum packing for real signals.
+//!    This is what the native engines and the model zoo actually
+//!    execute; every planned path is property-tested against the role-1
+//!    oracles. Since PR 9 the layer has three moving parts on top of the
+//!    plans themselves:
+//!    * [`gemm`] — explicit AVX2+FMA microkernels behind **runtime
+//!      feature detection** (portable fallback retained;
+//!      `FFC_FORCE_SCALAR=1` pins it), in both f64 and f32.
+//!    * an **f32 serving tier** — [`plan::real_plan_f32`] mirrors a
+//!      cached f64 plan at single precision, tolerance-gated at build
+//!      and opt-in per backend (`meta precision f32` /
+//!      `BackendConfig::NativeConvF32`); the f64 tier remains the
+//!      default and the oracle.
+//!    * [`tune`] — a measured **autotuner** for Monarch order dispatch
+//!      (cuDNN-style named-strategy menu, winner cached per
+//!      `(fft_len, rows-class)`, §3.2 cost model as prior/tie-break;
+//!      `FFC_PLAN_TUNE=model` pins the analytic choice).
 //!
 //! # Workspace lifecycle (the zero-alloc serving contract)
 //!
@@ -46,6 +60,7 @@
 
 pub mod gemm;
 pub mod plan;
+pub mod tune;
 pub mod workspace;
 
 use crate::bail;

@@ -31,12 +31,29 @@
 //! against the naive oracles in `fft::` (see `tests/plan_layer.rs` and
 //! `tests/proptests.rs`) — layout, values, round trips, and the
 //! block-sparse inverse all match to well under 1e-8.
+//!
+//! Two PR-9 additions ride this layer:
+//!
+//! * **Poison-proof registries** — the process-wide plan caches recover
+//!   from [`std::sync::PoisonError`] instead of unwrapping it (the maps
+//!   are insert-only and never torn mid-write, so the data behind a
+//!   poisoned lock is valid), and plan *construction* happens outside
+//!   the critical section, so a panic while building can no longer
+//!   poison anything. [`poison_registries`] is the failure-injection
+//!   hook proving it (see `tests/failure_injection.rs`).
+//! * **f32 serving tier** — [`real_plan_f32`] caches a reduced-precision
+//!   mirror of a cached f64 plan ([`RealConvPlanF32`]), *tolerance-
+//!   gated* at build time: the f32 plan must reproduce the f64 plan's
+//!   conv on a deterministic probe row within an accumulation-scaled
+//!   bound or the registry refuses to serve it.
 
 use std::collections::HashMap;
 use std::f64::consts::PI;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 
-use super::gemm::{matmul_sc, twiddle_mul, twiddle_mul_conj};
+use super::gemm::{
+    matmul_sc, matmul_sc_f32, twiddle_mul, twiddle_mul_conj, twiddle_mul_conj_f32, twiddle_mul_f32,
+};
 use super::workspace::ConvWorkspace;
 use super::{is_pow2, try_monarch_factors};
 use crate::bail;
@@ -600,6 +617,347 @@ impl RealConvPlan {
 }
 
 // ---------------------------------------------------------------------------
+// f32 serving tier
+// ---------------------------------------------------------------------------
+
+/// One Monarch stage rounded to f32 (mirror of [`Stage`]).
+struct StageF32 {
+    n1: usize,
+    m: usize,
+    f_re: Vec<f32>,
+    f_im: Vec<f32>,
+    fi_re: Vec<f32>,
+    fi_im: Vec<f32>,
+    tw_re: Vec<f32>,
+    tw_im: Vec<f32>,
+}
+
+fn to_f32(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+impl StageF32 {
+    fn from_f64(st: &Stage) -> Self {
+        Self {
+            n1: st.n1,
+            m: st.m,
+            f_re: to_f32(&st.f_re),
+            f_im: to_f32(&st.f_im),
+            fi_re: to_f32(&st.fi_re),
+            fi_im: to_f32(&st.fi_im),
+            tw_re: to_f32(&st.tw_re),
+            tw_im: to_f32(&st.tw_im),
+        }
+    }
+}
+
+/// Reduced-precision mirror of a [`RealConvPlan`] for serving paths that
+/// tolerate f32: same Monarch stages, r2c/c2r packing, and workspace
+/// discipline (via the `f32` scratch class), with half the memory
+/// traffic per point and twice the SIMD lanes per instruction in
+/// [`super::gemm`]. Built only through [`real_plan_f32`], which
+/// tolerance-gates it against its f64 parent — this type intentionally
+/// has no ungated constructor.
+pub struct RealConvPlanF32 {
+    fft_len: usize,
+    nh: usize,
+    bins: usize,
+    stages: Vec<StageF32>,
+    slot_of: Vec<usize>,
+    w_re: Vec<f32>,
+    w_im: Vec<f32>,
+}
+
+impl RealConvPlanF32 {
+    fn from_f64(rp: &RealConvPlan) -> Self {
+        Self {
+            fft_len: rp.fft_len,
+            nh: rp.nh,
+            bins: rp.bins,
+            stages: rp.inner.stages.iter().map(StageF32::from_f64).collect(),
+            slot_of: rp.slot_of.clone(),
+            w_re: to_f32(&rp.w_re),
+            w_im: to_f32(&rp.w_im),
+        }
+    }
+
+    /// FFT length `N` this plan transforms.
+    pub fn fft_len(&self) -> usize {
+        self.fft_len
+    }
+
+    /// Half-spectrum bin count (`N/2 + 1`).
+    pub fn bins(&self) -> usize {
+        self.bins
+    }
+
+    /// Build-time gate: the f32 plan must reproduce the parent f64
+    /// plan's conv on a deterministic random probe row within an
+    /// accumulation-scaled absolute bound (conv outputs of O(1) inputs
+    /// are O(√N), and single-precision error grows with √N·log N — the
+    /// bound scales the same way with ~15× margin on a correct build,
+    /// while a genuinely broken kernel or table misses it by orders of
+    /// magnitude).
+    fn tolerance_gate(&self, rp64: &RealConvPlan) -> crate::Result<()> {
+        let n = self.fft_len;
+        let mut rng = crate::util::Rng::new(0x5EED ^ n as u64);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let k: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (kre, kim) = rp64.rfft_rows(&k, 1);
+        let want = rp64.conv_rows(&x, 1, &kre, &kim, |_| 0);
+        let x32 = to_f32(&x);
+        let k32 = to_f32(&k);
+        let mut ws = ConvWorkspace::new();
+        let (k32re, k32im) = self.rfft_rows(&k32, 1);
+        let mut got = vec![0.0f32; n];
+        self.conv_rows_into(&x32, 1, &k32re, &k32im, |_| 0, &mut got, &mut ws);
+        let err = got
+            .iter()
+            .zip(&want)
+            .map(|(&g, &w)| (g as f64 - w).abs())
+            .fold(0.0f64, f64::max);
+        let logn = (n.max(2) as f64).log2();
+        let tol = (n as f64).sqrt() * logn * 2e-6 + 1e-4;
+        if !err.is_finite() || err > tol {
+            bail!(
+                "real plan f32: tolerance gate failed at fft_len {n}: \
+                 max |f32 - f64| = {err:.3e} > {tol:.3e}"
+            );
+        }
+        Ok(())
+    }
+
+    fn check_planes(&self, re: &[f32], im: &[f32], rows: usize) {
+        assert_eq!(re.len(), rows * self.nh, "re plane size");
+        assert_eq!(im.len(), rows * self.nh, "im plane size");
+    }
+
+    /// f32 mirror of [`FftPlan::forward_ws`] over the inner complex
+    /// length (scratch from the workspace's f32 class).
+    fn forward_ws(&self, re: &mut [f32], im: &mut [f32], rows: usize, ws: &mut ConvWorkspace) {
+        self.check_planes(re, im, rows);
+        if rows == 0 {
+            return;
+        }
+        let total = rows * self.nh;
+        let mut scr_re = ws.take_f32(total);
+        let mut scr_im = ws.take_f32(total);
+        let mut nsub = rows;
+        for st in &self.stages {
+            let len = st.n1 * st.m;
+            if st.m == 1 {
+                matmul_sc_f32(
+                    nsub, st.n1, st.n1, re, im, st.n1, &st.f_re, &st.f_im, st.n1,
+                    &mut scr_re, &mut scr_im, st.n1,
+                );
+                re.copy_from_slice(&scr_re);
+                im.copy_from_slice(&scr_im);
+            } else {
+                for r in 0..nsub {
+                    let o = r * len;
+                    matmul_sc_f32(
+                        st.n1, st.n1, st.m,
+                        &st.f_re, &st.f_im, st.n1,
+                        &re[o..o + len], &im[o..o + len], st.m,
+                        &mut scr_re[o..o + len], &mut scr_im[o..o + len], st.m,
+                    );
+                    twiddle_mul_f32(
+                        &mut re[o..o + len],
+                        &mut im[o..o + len],
+                        &scr_re[o..o + len],
+                        &scr_im[o..o + len],
+                        &st.tw_re,
+                        &st.tw_im,
+                    );
+                }
+                nsub *= st.n1;
+            }
+        }
+        ws.give_f32(scr_re);
+        ws.give_f32(scr_im);
+    }
+
+    /// f32 mirror of [`FftPlan::inverse_ws`].
+    fn inverse_ws(&self, re: &mut [f32], im: &mut [f32], rows: usize, ws: &mut ConvWorkspace) {
+        self.check_planes(re, im, rows);
+        if rows == 0 {
+            return;
+        }
+        let total = rows * self.nh;
+        let mut scr_re = ws.take_f32(total);
+        let mut scr_im = ws.take_f32(total);
+        let p = self.stages.len();
+        let mut nsub: usize =
+            rows * self.stages[..p - 1].iter().map(|st| st.n1).product::<usize>();
+        for (s, st) in self.stages.iter().enumerate().rev() {
+            let len = st.n1 * st.m;
+            if st.m == 1 {
+                matmul_sc_f32(
+                    nsub, st.n1, st.n1, re, im, st.n1, &st.fi_re, &st.fi_im,
+                    st.n1, &mut scr_re, &mut scr_im, st.n1,
+                );
+                re.copy_from_slice(&scr_re);
+                im.copy_from_slice(&scr_im);
+            } else {
+                for r in 0..nsub {
+                    let o = r * len;
+                    twiddle_mul_conj_f32(
+                        &mut re[o..o + len],
+                        &mut im[o..o + len],
+                        &st.tw_re,
+                        &st.tw_im,
+                    );
+                    matmul_sc_f32(
+                        st.n1, st.n1, st.m,
+                        &st.fi_re, &st.fi_im, st.n1,
+                        &re[o..o + len], &im[o..o + len], st.m,
+                        &mut scr_re[o..o + len], &mut scr_im[o..o + len], st.m,
+                    );
+                    re[o..o + len].copy_from_slice(&scr_re[o..o + len]);
+                    im[o..o + len].copy_from_slice(&scr_im[o..o + len]);
+                }
+            }
+            if s > 0 {
+                nsub /= self.stages[s - 1].n1;
+            }
+        }
+        ws.give_f32(scr_re);
+        ws.give_f32(scr_im);
+    }
+
+    /// f32 mirror of [`RealConvPlan::rfft_rows`] (filter-spectrum
+    /// precompute; allocates its own output planes).
+    pub fn rfft_rows(&self, x: &[f32], rows: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut sre = vec![0.0f32; rows * self.bins];
+        let mut sim = vec![0.0f32; rows * self.bins];
+        self.rfft_rows_into(x, rows, &mut sre, &mut sim, &mut ConvWorkspace::new());
+        (sre, sim)
+    }
+
+    /// f32 mirror of [`RealConvPlan::rfft_rows_into`].
+    pub fn rfft_rows_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        sre: &mut [f32],
+        sim: &mut [f32],
+        ws: &mut ConvWorkspace,
+    ) {
+        assert_eq!(x.len(), rows * self.fft_len, "input rows size");
+        assert_eq!(sre.len(), rows * self.bins, "re spectrum size");
+        assert_eq!(sim.len(), rows * self.bins, "im spectrum size");
+        let nh = self.nh;
+        let mut zre = ws.take_f32(rows * nh);
+        let mut zim = ws.take_f32(rows * nh);
+        for r in 0..rows {
+            let xo = r * self.fft_len;
+            let zo = r * nh;
+            for j in 0..nh {
+                zre[zo + j] = x[xo + 2 * j];
+                zim[zo + j] = x[xo + 2 * j + 1];
+            }
+        }
+        self.forward_ws(&mut zre, &mut zim, rows, ws);
+        for r in 0..rows {
+            let zo = r * nh;
+            let so = r * self.bins;
+            for k in 0..self.bins {
+                let a = self.slot_of[k % nh];
+                let b = self.slot_of[(nh - k) % nh];
+                let (zkr, zki) = (zre[zo + a], zim[zo + a]);
+                let (znr, zni) = (zre[zo + b], zim[zo + b]);
+                let xe_r = 0.5 * (zkr + znr);
+                let xe_i = 0.5 * (zki - zni);
+                let xo_r = 0.5 * (zki + zni);
+                let xo_i = 0.5 * (znr - zkr);
+                let (wr, wi) = (self.w_re[k], self.w_im[k]);
+                sre[so + k] = xe_r + wr * xo_r - wi * xo_i;
+                sim[so + k] = xe_i + wr * xo_i + wi * xo_r;
+            }
+        }
+        ws.give_f32(zre);
+        ws.give_f32(zim);
+    }
+
+    /// f32 mirror of [`RealConvPlan::irfft_rows_into`].
+    pub fn irfft_rows_into(
+        &self,
+        sre: &[f32],
+        sim: &[f32],
+        rows: usize,
+        y: &mut [f32],
+        ws: &mut ConvWorkspace,
+    ) {
+        assert_eq!(sre.len(), rows * self.bins, "re spectrum size");
+        assert_eq!(sim.len(), rows * self.bins, "im spectrum size");
+        assert_eq!(y.len(), rows * self.fft_len, "output rows size");
+        let nh = self.nh;
+        let mut zre = ws.take_f32(rows * nh);
+        let mut zim = ws.take_f32(rows * nh);
+        for r in 0..rows {
+            let so = r * self.bins;
+            let zo = r * nh;
+            for k in 0..nh {
+                let (ar, ai) = (sre[so + k], sim[so + k]);
+                let (br, bi) = (sre[so + nh - k], sim[so + nh - k]);
+                let xe_r = 0.5 * (ar + br);
+                let xe_i = 0.5 * (ai - bi);
+                let dr = ar - br;
+                let di = ai + bi;
+                let (wr, wi) = (self.w_re[k], self.w_im[k]);
+                let xo_r = 0.5 * (dr * wr + di * wi);
+                let xo_i = 0.5 * (di * wr - dr * wi);
+                let slot = self.slot_of[k];
+                zre[zo + slot] = xe_r - xo_i;
+                zim[zo + slot] = xe_i + xo_r;
+            }
+        }
+        self.inverse_ws(&mut zre, &mut zim, rows, ws);
+        for r in 0..rows {
+            let zo = r * nh;
+            let yo = r * self.fft_len;
+            for j in 0..nh {
+                y[yo + 2 * j] = zre[zo + j];
+                y[yo + 2 * j + 1] = zim[zo + j];
+            }
+        }
+        ws.give_f32(zre);
+        ws.give_f32(zim);
+    }
+
+    /// f32 mirror of [`RealConvPlan::conv_rows_into`] — the zero-alloc
+    /// reduced-precision serving hot path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_rows_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        k_re: &[f32],
+        k_im: &[f32],
+        head_of: impl Fn(usize) -> usize,
+        y: &mut [f32],
+        ws: &mut ConvWorkspace,
+    ) {
+        let mut sre = ws.take_f32(rows * self.bins);
+        let mut sim = ws.take_f32(rows * self.bins);
+        self.rfft_rows_into(x, rows, &mut sre, &mut sim, ws);
+        for r in 0..rows {
+            let so = r * self.bins;
+            let ko = head_of(r) * self.bins;
+            for k in 0..self.bins {
+                let (ar, ai) = (sre[so + k], sim[so + k]);
+                let (br, bi) = (k_re[ko + k], k_im[ko + k]);
+                sre[so + k] = ar * br - ai * bi;
+                sim[so + k] = ar * bi + ai * br;
+            }
+        }
+        self.irfft_rows_into(&sre, &sim, rows, y, ws);
+        ws.give_f32(sre);
+        ws.give_f32(sim);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Process-wide plan registries
 // ---------------------------------------------------------------------------
 
@@ -611,6 +969,43 @@ fn plan_registry() -> &'static Mutex<HashMap<(usize, usize), Arc<FftPlan>>> {
 fn real_registry() -> &'static Mutex<HashMap<(usize, usize), Arc<RealConvPlan>>> {
     static R: OnceLock<Mutex<HashMap<(usize, usize), Arc<RealConvPlan>>>> = OnceLock::new();
     R.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn real32_registry() -> &'static Mutex<HashMap<(usize, usize), Arc<RealConvPlanF32>>> {
+    static R: OnceLock<Mutex<HashMap<(usize, usize), Arc<RealConvPlanF32>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Lock a registry, recovering from poisoning. The registries are
+/// insert-only maps of *completed* `Arc`ed plans — no writer ever leaves
+/// one mid-mutation (`HashMap::insert` either finishes or the entry was
+/// never linked in), so the data behind a poisoned lock is as valid as
+/// behind a clean one. The old `.lock().unwrap()` here turned one
+/// panicking thread anywhere near the registry into a permanent,
+/// fleet-wide "poisoned lock" panic on every later plan lookup — the
+/// supervisor's respawn-with-replay cannot save a process whose shared
+/// registry throws on every access.
+fn lock_registry<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Failure-injection hook: deliberately poison every plan registry by
+/// panicking while holding each lock (on a scratch thread, so the
+/// caller's test keeps running). After this, any lookup through a
+/// non-recovering `lock().unwrap()` would panic forever — the regression
+/// suite calls this and then proves plan lookups and full fleet requests
+/// still succeed.
+pub fn poison_registries() {
+    fn poison<T: Send>(m: &'static Mutex<T>) {
+        let _ = std::thread::spawn(move || {
+            let _guard = lock_registry(m);
+            panic!("deliberate registry poison (failure injection)");
+        })
+        .join();
+    }
+    poison(plan_registry());
+    poison(real_registry());
+    poison(real32_registry());
 }
 
 /// Largest Monarch order `n` supports, used to clamp cost-model choices
@@ -630,13 +1025,16 @@ pub fn plan(n: usize, order: usize) -> crate::Result<Arc<FftPlan>> {
     }
     let order = clamp_order(n, order);
     let key = (n, order);
-    let mut reg = plan_registry().lock().unwrap();
-    if let Some(p) = reg.get(&key) {
+    if let Some(p) = lock_registry(plan_registry()).get(&key) {
         return Ok(Arc::clone(p));
     }
-    let p = Arc::new(FftPlan::new(n, try_monarch_factors(n, order)?)?);
-    reg.insert(key, Arc::clone(&p));
-    Ok(p)
+    // Build outside the lock: a panic mid-construction can then never
+    // poison the registry, and other shapes keep resolving while this
+    // one computes its stage matrices. First insert wins, so repeated
+    // lookups stay pointer-identical (`registries_cache_by_shape`).
+    let built = Arc::new(FftPlan::new(n, try_monarch_factors(n, order)?)?);
+    let mut reg = lock_registry(plan_registry());
+    Ok(Arc::clone(reg.entry(key).or_insert(built)))
 }
 
 /// Process-wide cached r2c/c2r plan for real signals of `fft_len`
@@ -647,13 +1045,50 @@ pub fn real_plan(fft_len: usize, order: usize) -> crate::Result<Arc<RealConvPlan
     }
     let order = clamp_order(fft_len / 2, order);
     let key = (fft_len, order);
-    let mut reg = real_registry().lock().unwrap();
-    if let Some(p) = reg.get(&key) {
+    if let Some(p) = lock_registry(real_registry()).get(&key) {
         return Ok(Arc::clone(p));
     }
-    let p = Arc::new(RealConvPlan::new(fft_len, order)?);
-    reg.insert(key, Arc::clone(&p));
-    Ok(p)
+    let built = Arc::new(RealConvPlan::new(fft_len, order)?);
+    let mut reg = lock_registry(real_registry());
+    Ok(Arc::clone(reg.entry(key).or_insert(built)))
+}
+
+/// Longest transform the f32 tier serves: beyond this the accumulated
+/// single-precision rounding across the stage chain erodes the tier's
+/// accuracy budget faster than the bandwidth win is worth, and the
+/// build-time tolerance gate would need ever-looser bounds to pass.
+pub const F32_MAX_LEN: usize = 1 << 18;
+
+/// Process-wide cached **f32 serving tier** mirror of
+/// [`real_plan`]`(fft_len, order)`.
+///
+/// The plan is converted from the cached f64 plan (stage matrices,
+/// twiddles, and unpack tables rounded once to f32) and then
+/// **tolerance-gated**: it must reproduce the f64 plan's circular conv
+/// on a deterministic random probe row within an accumulation-scaled
+/// absolute bound, or this returns an error instead of a plan — a build
+/// that quietly lost precision can never reach serving traffic.
+pub fn real_plan_f32(fft_len: usize, order: usize) -> crate::Result<Arc<RealConvPlanF32>> {
+    if !is_pow2(fft_len) || fft_len < 2 {
+        bail!("real plan f32: fft length {fft_len} must be an even power of two");
+    }
+    if fft_len > F32_MAX_LEN {
+        bail!(
+            "real plan f32: fft length {fft_len} exceeds the f32 tier cap {F32_MAX_LEN} \
+             (single-precision accumulation is not validated past it; use the f64 tier)"
+        );
+    }
+    let order = clamp_order(fft_len / 2, order);
+    let key = (fft_len, order);
+    if let Some(p) = lock_registry(real32_registry()).get(&key) {
+        return Ok(Arc::clone(p));
+    }
+    let rp64 = real_plan(fft_len, order)?;
+    let p32 = RealConvPlanF32::from_f64(&rp64);
+    p32.tolerance_gate(&rp64)?;
+    let built = Arc::new(p32);
+    let mut reg = lock_registry(real32_registry());
+    Ok(Arc::clone(reg.entry(key).or_insert(built)))
 }
 
 #[cfg(test)]
@@ -878,5 +1313,78 @@ mod tests {
         assert!(plan(12, 2).is_err());
         assert!(FftPlan::new(16, vec![4, 8]).is_err());
         assert!(real_plan(1, 2).is_err());
+    }
+
+    #[test]
+    fn poisoned_registries_recover() {
+        // Warm all three registries, poison every lock via a panicking
+        // scratch thread, then prove lookups still work — both cache
+        // hits (pointer-identical to the pre-poison plan) and fresh
+        // builds that must insert through the recovered lock.
+        let before = plan(128, 2).unwrap();
+        let rbefore = real_plan(128, 2).unwrap();
+        let _ = real_plan_f32(128, 2).unwrap();
+        poison_registries();
+        let after = plan(128, 2).unwrap();
+        assert!(Arc::ptr_eq(&before, &after), "cache hit through a poisoned lock");
+        assert!(Arc::ptr_eq(&rbefore, &real_plan(128, 2).unwrap()));
+        let fresh = plan(8192, 3).unwrap();
+        assert_eq!(fresh.n(), 8192, "fresh insert through a poisoned lock");
+        assert!(real_plan_f32(128, 2).is_ok());
+    }
+
+    #[test]
+    fn f32_plan_tracks_f64_conv_and_round_trips() {
+        let mut rng = Rng::new(31);
+        let mut ws = ConvWorkspace::new();
+        for &(n, order) in &[(64usize, 2usize), (256, 2), (1024, 3), (4096, 2)] {
+            let rp = real_plan(n, order).unwrap();
+            let rp32 = real_plan_f32(n, order).unwrap();
+            let (rows, heads) = (3usize, 2usize);
+            let x: Vec<f64> = (0..rows * n).map(|_| rng.normal()).collect();
+            let kb: Vec<f64> = (0..heads * n).map(|_| rng.normal()).collect();
+            let (kre, kim) = rp.rfft_rows(&kb, heads);
+            let want = rp.conv_rows(&x, rows, &kre, &kim, |r| r % heads);
+            let x32 = to_f32(&x);
+            let kb32 = to_f32(&kb);
+            let (k32re, k32im) = rp32.rfft_rows(&kb32, heads);
+            let mut got = vec![0.0f32; rows * n];
+            rp32.conv_rows_into(&x32, rows, &k32re, &k32im, |r| r % heads, &mut got, &mut ws);
+            let tol = (n as f64).sqrt() * (n as f64).log2() * 2e-6 + 1e-4;
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g as f64 - w).abs() < tol,
+                    "n={n} order={order} slot {i}: f32 {g} vs f64 {w} (tol {tol:.2e})"
+                );
+            }
+            // r2c → c2r round trip at f32 precision.
+            let mut sre = vec![0.0f32; rows * rp32.bins()];
+            let mut sim = vec![0.0f32; rows * rp32.bins()];
+            rp32.rfft_rows_into(&x32, rows, &mut sre, &mut sim, &mut ws);
+            let mut back = vec![0.0f32; rows * n];
+            rp32.irfft_rows_into(&sre, &sim, rows, &mut back, &mut ws);
+            for (a, b) in back.iter().zip(&x32) {
+                assert!((a - b).abs() < 1e-3, "n={n} round trip");
+            }
+        }
+        // Steady state: warm f32 workspace serves without allocating.
+        ws.reset();
+        let rp32 = real_plan_f32(256, 2).unwrap();
+        let x32 = vec![0.5f32; 3 * 256];
+        let ones = vec![1.0f32; 256];
+        let (kre, kim) = rp32.rfft_rows(&ones, 1);
+        let mut y = vec![0.0f32; 3 * 256];
+        rp32.conv_rows_into(&x32, 3, &kre, &kim, |_| 0, &mut y, &mut ws);
+        assert_eq!(ws.stats().allocs, 0, "warm f32 workspace must not allocate");
+    }
+
+    #[test]
+    fn f32_registry_caches_and_enforces_the_length_cap() {
+        let a = real_plan_f32(512, 2).unwrap();
+        let b = real_plan_f32(512, 2).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let err = real_plan_f32(2 * F32_MAX_LEN, 2).unwrap_err().to_string();
+        assert!(err.contains("f32 tier cap"), "unexpected error: {err}");
+        assert!(real_plan_f32(12, 2).is_err());
     }
 }

@@ -1,0 +1,314 @@
+//! Measured autotuner for Monarch plan dispatch — the cuDNN-style
+//! "menu of named algorithms, pick by measuring" layer (SNIPPETS.md's
+//! `ImplicitGemm` / `Gemm` / `FftTiling` pattern) on top of the §3.2
+//! analytic cost model.
+//!
+//! Before PR 9, every conv consumer asked `costmodel::best_native_order`
+//! — a calibrated but *static* prediction — which Monarch order to run.
+//! This module turns that decision into a measurement: at first use of a
+//! `(fft_len, rows-class)` shape it times each **named candidate
+//! strategy** (`{kernel tier}-o{order}` for every order the length
+//! supports, e.g. `avx2fma-o2` vs `avx2fma-o3`; under `FFC_FORCE_SCALAR`
+//! the menu becomes `portable-o*`) on a representative row block through
+//! the real cached plan, caches the winner in a process-wide registry,
+//! and dispatches it forever after. The cost model is demoted to **prior
+//! and tie-break**: candidates it predicts to be hopeless (≥3× the best
+//! modeled cost) are never measured, and when measurement is within 5%
+//! of the model's pick, the model's pick wins — timing jitter should not
+//! flip a decision the physics says is a coin toss.
+//!
+//! # Determinism
+//!
+//! `FFC_PLAN_TUNE=model` pins every choice to the analytic model (no
+//! measurement, bit-for-bit reproducible dispatch — CI sets this where
+//! timing could flap); `FFC_PLAN_TUNE=measure` (the default) measures.
+//! Winners are cached per key, and the cache entry records how many
+//! times the key was measured — exactly once, which
+//! `tests/plan_layer.rs` pins. Measurement is capped at
+//! [`MEASURE_MAX_LEN`]: past it the calibrated model is trusted outright
+//! (its regime — ≥512K points — is exactly where it was calibrated, and
+//! a multi-second probe at 1M+ points would cost more than a lifetime of
+//! slightly-suboptimal dispatch).
+//!
+//! The registry lock recovers from poisoning for the same reason the
+//! plan registries do (insert-only map of completed decisions; see
+//! `fft::plan`).
+
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Duration;
+
+use super::gemm::active_backend;
+use super::plan::real_plan;
+use super::workspace::ConvWorkspace;
+use crate::bench::{bench, BenchConfig};
+use crate::costmodel::{self, CPU, MAX_NATIVE_ORDER};
+
+/// Longest transform the tuner will measure; beyond this it defers to
+/// the calibrated cost model unconditionally.
+pub const MEASURE_MAX_LEN: usize = 1 << 17;
+
+/// Rows measured per candidate probe (a representative slice of the
+/// fleet's per-block row fan-out — enough to amortize the stage
+/// matrices like real traffic does, small enough to keep first-use
+/// latency in the low milliseconds).
+const PROBE_ROWS: usize = 4;
+
+/// How plan dispatch decides between candidate strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuneMode {
+    /// Trust the §3.2 analytic cost model (deterministic, no timing).
+    Model,
+    /// Measure candidates once per shape and cache the winner.
+    Measure,
+}
+
+/// Process-wide mode from `FFC_PLAN_TUNE` (`model` | `measure`), read
+/// once and cached; defaults to [`TuneMode::Measure`].
+pub fn tune_mode() -> TuneMode {
+    static M: OnceLock<TuneMode> = OnceLock::new();
+    *M.get_or_init(|| match std::env::var("FFC_PLAN_TUNE").as_deref() {
+        Ok("model") => TuneMode::Model,
+        _ => TuneMode::Measure,
+    })
+}
+
+/// The cached outcome of tuning one `(fft_len, rows-class)` key.
+#[derive(Debug, Clone)]
+pub struct TunedChoice {
+    /// Winning Monarch order.
+    pub order: usize,
+    /// Winning strategy's stable name (`{kernel}-o{order}`).
+    pub strategy: String,
+    /// False when the model decided (pinned mode, cap, or single
+    /// candidate); true when a measurement ran.
+    pub measured: bool,
+    /// Times this key ran a measurement — stays at ≤1 forever because
+    /// the winner is cached (pinned by the determinism test).
+    pub measure_runs: u32,
+}
+
+type TuneKey = (usize, usize);
+
+fn registry() -> &'static Mutex<HashMap<TuneKey, TunedChoice>> {
+    static R: OnceLock<Mutex<HashMap<TuneKey, TunedChoice>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn lock_registry() -> MutexGuard<'static, HashMap<TuneKey, TunedChoice>> {
+    registry().lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Log-bucket a row count: plan cost scales with rows but the *ranking*
+/// of orders only shifts across decades of them, so keys bucket rows by
+/// power of two to keep the registry (and the number of measurements)
+/// small.
+pub fn rows_class(rows: usize) -> usize {
+    rows.max(1).next_power_of_two().trailing_zeros() as usize
+}
+
+/// Candidate Monarch orders for a conv FFT length: every native order
+/// its inner complex length supports (the real plan halves the length;
+/// a too-deep order would silently clamp to a duplicate plan, so
+/// duplicates are excluded at the source).
+fn candidate_orders(fft_len: usize) -> Vec<usize> {
+    let lognh = (fft_len / 2).max(2).trailing_zeros() as usize;
+    let c: Vec<usize> = (2..=MAX_NATIVE_ORDER).filter(|&p| p <= lognh).collect();
+    if c.is_empty() {
+        vec![costmodel::best_native_order(fft_len)]
+    } else {
+        c
+    }
+}
+
+/// The Monarch order the autotuner dispatches for a conv of `fft_len`
+/// points over ~`rows` rows, under the process-wide [`tune_mode`].
+/// First use per `(fft_len, rows-class)` may measure (see module docs);
+/// every later call is a map hit.
+pub fn tuned_order(fft_len: usize, rows: usize) -> usize {
+    tuned_order_with(fft_len, rows, tune_mode())
+}
+
+/// [`tuned_order`] under an explicit mode (deterministic tests pin
+/// [`TuneMode::Model`] without touching the process environment).
+pub fn tuned_order_with(fft_len: usize, rows: usize, mode: TuneMode) -> usize {
+    let key = (fft_len, rows_class(rows));
+    // The lock is held across measurement on purpose: it guarantees
+    // exactly one measurement per key under concurrent first use, and
+    // candidate probing takes low milliseconds at the capped lengths.
+    let mut reg = lock_registry();
+    if let Some(c) = reg.get(&key) {
+        return c.order;
+    }
+    let choice = decide(fft_len, rows, mode);
+    let order = choice.order;
+    reg.insert(key, choice);
+    order
+}
+
+/// The cached tuning outcome for a key, if that key has been decided.
+pub fn tuned_choice(fft_len: usize, rows: usize) -> Option<TunedChoice> {
+    lock_registry().get(&(fft_len, rows_class(rows))).cloned()
+}
+
+fn model_pick(fft_len: usize, candidates: &[usize]) -> usize {
+    let best = costmodel::best_native_order(fft_len);
+    if candidates.contains(&best) {
+        best
+    } else {
+        candidates[0]
+    }
+}
+
+fn strategy_name(order: usize) -> String {
+    format!("{}-o{}", active_backend().label(), order)
+}
+
+fn decide(fft_len: usize, rows: usize, mode: TuneMode) -> TunedChoice {
+    let candidates = candidate_orders(fft_len);
+    let prior = model_pick(fft_len, &candidates);
+    if mode == TuneMode::Model || fft_len > MEASURE_MAX_LEN || candidates.len() == 1 {
+        return TunedChoice {
+            order: prior,
+            strategy: strategy_name(prior),
+            measured: false,
+            measure_runs: 0,
+        };
+    }
+    // Cost-model prior: never measure a candidate modeled ≥3× worse
+    // than the best — the model is calibrated well enough to rule out
+    // hopeless orders, and each skipped probe is first-use latency
+    // saved.
+    let costs: Vec<f64> =
+        candidates.iter().map(|&p| costmodel::conv_cost(fft_len, p, 1, rows.max(1), &CPU)).collect();
+    let best_cost = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let probe: Vec<usize> = candidates
+        .iter()
+        .zip(&costs)
+        .filter(|&(_, &c)| c <= 3.0 * best_cost)
+        .map(|(&p, _)| p)
+        .collect();
+
+    match measure_candidates(fft_len, rows, &probe) {
+        Some(timed) => {
+            let (&win_order, &win_ns) =
+                timed.iter().min_by(|a, b| a.1.total_cmp(b.1)).expect("probe set is non-empty");
+            // Tie-break: within 5% the model's pick stands — jitter at
+            // that margin flips coin tosses, not real wins.
+            let order = match timed.get(&prior) {
+                Some(&prior_ns) if prior_ns <= win_ns * 1.05 => prior,
+                _ => win_order,
+            };
+            TunedChoice {
+                order,
+                strategy: strategy_name(order),
+                measured: true,
+                measure_runs: 1,
+            }
+        }
+        // A shape the probe cannot plan (never happens for the pow-2
+        // lengths the fleet serves): fall back to the model.
+        None => TunedChoice {
+            order: prior,
+            strategy: strategy_name(prior),
+            measured: false,
+            measure_runs: 0,
+        },
+    }
+}
+
+/// Median wall time per candidate order for a representative conv on
+/// the real cached plans. Returns `None` if any candidate fails to plan.
+fn measure_candidates(
+    fft_len: usize,
+    rows: usize,
+    candidates: &[usize],
+) -> Option<HashMap<usize, f64>> {
+    let rows = rows.clamp(1, PROBE_ROWS);
+    let cfg = BenchConfig { warmup: 1, iters: 3, max_time: Duration::from_millis(250) };
+    let mut ws = ConvWorkspace::new();
+    let x = vec![0.5f64; rows * fft_len];
+    let ones = vec![1.0f64; fft_len];
+    let mut y = vec![0.0f64; rows * fft_len];
+    let mut out = HashMap::new();
+    for &p in candidates {
+        let rp = real_plan(fft_len, p).ok()?;
+        let (kre, kim) = rp.rfft_rows(&ones, 1);
+        // Warm the workspace outside the timed region so candidate #1
+        // doesn't pay the cold-alloc cost the others skip.
+        rp.conv_rows_into(&x, rows, &kre, &kim, |_| 0, &mut y, &mut ws);
+        let r = bench(&format!("tune_{fft_len}_o{p}"), &cfg, || {
+            rp.conv_rows_into(&x, rows, &kre, &kim, |_| 0, &mut y, &mut ws);
+        });
+        out.insert(p, r.median_ns);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tests that assert on *which* choice a key holds use dedicated
+    // rows-classes (rows 512/1024 → classes 9/10): the registry is
+    // process-wide, and other tests in this binary (hyena at rows 8,
+    // fleet generation at rows 32) legitimately insert measured winners
+    // under their own keys first.
+
+    #[test]
+    fn model_mode_pins_the_analytic_choice() {
+        for lg in 7..=17 {
+            let n = 1usize << lg;
+            let got = tuned_order_with(n, 512, TuneMode::Model);
+            let want = costmodel::best_native_order(n);
+            let cands = candidate_orders(n);
+            if cands.contains(&want) {
+                assert_eq!(got, want, "n={n}");
+            } else {
+                assert!(cands.contains(&got), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn beyond_the_measure_cap_the_model_decides() {
+        let n = 2 * MEASURE_MAX_LEN;
+        let order = tuned_order_with(n, 1024, TuneMode::Measure);
+        assert_eq!(order, costmodel::best_native_order(n));
+        let c = tuned_choice(n, 1024).unwrap();
+        assert!(!c.measured, "capped length must not be measured");
+        assert_eq!(c.measure_runs, 0);
+    }
+
+    #[test]
+    fn winner_is_cached_with_at_most_one_measurement() {
+        // A dedicated rows-class so no other test shares the key.
+        let (n, rows) = (256usize, 1usize);
+        let first = tuned_order_with(n, rows, TuneMode::Measure);
+        for _ in 0..3 {
+            assert_eq!(tuned_order_with(n, rows, TuneMode::Measure), first);
+        }
+        let c = tuned_choice(n, rows).expect("key must be cached");
+        assert!(c.measure_runs <= 1, "cached winner must not re-measure");
+        assert!(c.strategy.ends_with(&format!("-o{first}")));
+        assert!(c.strategy.starts_with(active_backend().label()));
+    }
+
+    #[test]
+    fn rows_class_buckets_by_power_of_two() {
+        assert_eq!(rows_class(0), 0);
+        assert_eq!(rows_class(1), 0);
+        assert_eq!(rows_class(2), 1);
+        assert_eq!(rows_class(3), 2);
+        assert_eq!(rows_class(8), 3);
+        assert_eq!(rows_class(9), 4);
+    }
+
+    #[test]
+    fn candidates_respect_the_inner_length() {
+        // fft_len 8 → inner length 4 → only order 2 fits.
+        assert_eq!(candidate_orders(8), vec![2]);
+        // fft_len 64 → inner 32 → orders 2..=4 all fit.
+        assert_eq!(candidate_orders(64), vec![2, 3, 4]);
+    }
+}

@@ -28,6 +28,11 @@
 //!   identical to a fresh `vec![0.0; len]`, so workspace-threaded
 //!   execution matches the allocate-internally convenience wrappers bit
 //!   for bit (property-tested in `tests/proptests.rs`).
+//! * **Precision classes** — the f32 serving tier (PR 9) borrows from a
+//!   parallel `f32` free list via [`ConvWorkspace::take_f32`] /
+//!   [`ConvWorkspace::give_f32`]; the two element types never alias one
+//!   another's storage, and f32 buffers are accounted at 4 bytes per
+//!   element in the same counters.
 
 /// Number of power-of-two size classes (2^0 ..= 2^47 elements — far past
 /// any transform this crate plans).
@@ -66,6 +71,8 @@ pub struct ConvWorkspace {
     /// `free[c]` holds buffers of capacity `>= 2^c` (and `< 2^(c+1)`
     /// for buffers this workspace allocated itself).
     free: Vec<Vec<Vec<f64>>>,
+    /// f32 size classes (serving tier), same bucketing at 4 B/element.
+    free32: Vec<Vec<Vec<f32>>>,
     /// Bytes currently checked out via `take`.
     live_bytes: u64,
     peak_bytes: u64,
@@ -144,6 +151,50 @@ impl ConvWorkspace {
             self.free.resize_with(class + 1, Vec::new);
         }
         self.free[class].push(buf);
+    }
+
+    /// Borrow a zero-filled `f32` buffer of exactly `len` elements — the
+    /// serving-tier sibling of [`ConvWorkspace::take`], drawing from a
+    /// separate `f32` free list (4 bytes/element in the shared
+    /// accounting). Pair with [`ConvWorkspace::give_f32`].
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        self.takes += 1;
+        let class = class_of_len(len);
+        let hit = (class..self.free32.len().min(CLASSES))
+            .find_map(|c| self.free32.get_mut(c).and_then(Vec::pop));
+        let mut buf = match hit {
+            Some(b) => b,
+            None => {
+                self.allocs += 1;
+                let b = Vec::with_capacity(1usize << class);
+                self.resident_bytes += (b.capacity() * 4) as u64;
+                b
+            }
+        };
+        buf.clear();
+        buf.resize(len, 0.0);
+        self.live_bytes += (buf.capacity() * 4) as u64;
+        self.peak_bytes = self.peak_bytes.max(self.live_bytes);
+        buf
+    }
+
+    /// Return an `f32` buffer for reuse (the [`ConvWorkspace::give`]
+    /// contract, including foreign-buffer adoption, at 4 bytes/element).
+    pub fn give_f32(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let bytes = (buf.capacity() * 4) as u64;
+        if bytes <= self.live_bytes {
+            self.live_bytes -= bytes;
+        } else {
+            self.resident_bytes += bytes;
+        }
+        let class = class_of_cap(buf.capacity());
+        if self.free32.len() <= class {
+            self.free32.resize_with(class + 1, Vec::new);
+        }
+        self.free32[class].push(buf);
     }
 
     /// Start a fresh accounting window: zero the peak/take/alloc counters
@@ -250,6 +301,37 @@ mod tests {
         assert!(b.is_empty());
         ws.give(b);
         ws.give(Vec::new()); // capacity-0 give is a no-op
+    }
+
+    #[test]
+    fn f32_class_is_reused_zeroed_and_separately_bucketed() {
+        let mut ws = ConvWorkspace::new();
+        let mut a = ws.take_f32(100);
+        assert_eq!(a.len(), 100);
+        assert!(a.iter().all(|&v| v == 0.0));
+        a.iter_mut().for_each(|v| *v = 7.0);
+        let cap = a.capacity();
+        ws.give_f32(a);
+        let b = ws.take_f32(90);
+        assert!(b.iter().all(|&v| v == 0.0));
+        assert_eq!(b.capacity(), cap, "must reuse the cached f32 buffer");
+        assert_eq!(ws.stats().allocs, 1, "second f32 take must be a hit");
+        ws.give_f32(b);
+        // f64 takes never drain the f32 list and vice versa.
+        let c = ws.take(100);
+        assert_eq!(ws.stats().allocs, 2, "f64 take must not hit the f32 pool");
+        ws.give(c);
+    }
+
+    #[test]
+    fn f32_accounting_uses_four_bytes_per_element() {
+        let mut ws = ConvWorkspace::new();
+        let a = ws.take_f32(128);
+        assert_eq!(ws.stats().peak_bytes, 128 * 4);
+        assert_eq!(ws.stats().resident_bytes, 128 * 4);
+        ws.give_f32(a);
+        ws.give_f32(Vec::with_capacity(256)); // foreign f32 adoption
+        assert_eq!(ws.stats().resident_bytes, 128 * 4 + 256 * 4);
     }
 
     #[test]

@@ -10,8 +10,9 @@
 //!   [`crate::fft`] library. It self-generates an in-memory manifest,
 //!   fixtures, and golden transcripts, so everything above it runs from a
 //!   clean checkout: no Python step, no `make artifacts`, no network.
-//!   Covers every artifact family: conv kernels (Monarch order 2/3 by the
-//!   §3.2 cost model, block-sparse variants), train steps, evals, and the
+//!   Covers every artifact family: conv kernels (Monarch orders 2–4 via
+//!   the measured autotuner seeded by the §3.2 cost-model prior,
+//!   block-sparse variants), train steps, evals, and the
 //!   [`crate::zoo`] model families (`lm_logits`, `clf_logits`,
 //!   pathfinder training), so serving and the pathfinder CLI run with no
 //!   feature flags.
@@ -118,6 +119,12 @@ pub enum BackendConfig {
     /// [`BackendConfig::Native`] so exhaustive per-bucket tests stay
     /// fast.
     NativeLongForward(usize),
+    /// The native backend with every conv artifact opted into the
+    /// reduced-precision f32 serving tier (`meta precision f32`). The
+    /// hint is honoured by dense Monarch conv engines — whole-pipeline
+    /// f32 through tolerance-gated plans built from the f64 stage
+    /// matrices — and ignored by sparse/baseline paths, which stay f64.
+    NativeConvF32,
     /// Artifact directory when present (with the `pjrt` feature), the
     /// native backend otherwise.
     Auto(PathBuf),
@@ -133,6 +140,7 @@ impl BackendConfig {
             BackendConfig::Native => Runtime::native(),
             BackendConfig::NativeRowThreads(t) => Runtime::native_row_threads(*t),
             BackendConfig::NativeLongForward(n) => Runtime::native_long_forward(*n),
+            BackendConfig::NativeConvF32 => Runtime::native_conv_f32(),
             BackendConfig::Auto(dir) => Runtime::new(dir),
             #[cfg(feature = "pjrt")]
             BackendConfig::Pjrt(dir) => Runtime::pjrt(dir),
@@ -168,6 +176,24 @@ impl Runtime {
             needle,
             &format!("meta group conv\nmeta conv_threads {}\n", threads.max(1)),
         );
+        Self::native_from(&text, files)
+    }
+
+    /// The native runtime with every conv artifact carrying the
+    /// `meta precision f32` execution hint: dense Monarch conv engines
+    /// run the tolerance-gated f32 plan tier end to end (packing,
+    /// transforms, spectrum product, inverse — all single precision);
+    /// sparse and baseline conv paths ignore the hint and stay in f64.
+    pub fn native_conv_f32() -> crate::Result<Self> {
+        let (text, files) = native::default_fleet_parts();
+        let needle = "meta group conv\n";
+        // Fail loudly if the generated manifest shape drifts — a silent
+        // no-op here would quietly leave every conv engine in f64.
+        crate::ensure!(
+            text.contains(needle),
+            "native manifest has no {needle:?} lines to attach precision to"
+        );
+        let text = text.replace(needle, "meta group conv\nmeta precision f32\n");
         Self::native_from(&text, files)
     }
 

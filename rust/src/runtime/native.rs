@@ -125,6 +125,10 @@ impl Backend for NativeBackend {
 /// calibration located the measured order-4 crossover (fft_len >= 512K,
 /// past the SRAM spill point) the cap sits at
 /// [`costmodel::MAX_NATIVE_ORDER`] instead of the old hard-coded 3.
+/// Since PR 9 this is the analytic *prior* only: unpinned engine dispatch
+/// goes through [`fft::tune::tuned_order`], which measures the shortlist
+/// once per shape class and caches the winner (`FFC_PLAN_TUNE=model`
+/// restores the pure-model behaviour).
 pub fn best_implemented_order(fft_len: usize) -> usize {
     costmodel::best_native_order(fft_len)
 }
@@ -210,6 +214,10 @@ struct NativeConvEngine {
     /// Planned executor for the dense Monarch path: batched r2c
     /// half-spectrum conv through precomputed stage matrices.
     rplan: Option<Arc<crate::fft::plan::RealConvPlan>>,
+    /// Tolerance-gated f32 executor (`meta precision f32`, dense Monarch
+    /// path only); when present it takes precedence over `rplan` at
+    /// execute time, with the whole row pipeline staying in f32.
+    rplan32: Option<Arc<crate::fft::plan::RealConvPlanF32>>,
     /// Planned executor for the block-sparse Monarch path: full-length
     /// complex plan whose inverse skips the zeroed blocks.
     cplan: Option<Arc<crate::fft::plan::FftPlan>>,
@@ -244,6 +252,10 @@ struct NativeConvEngine {
     /// (`(h, fft_len)`) on the sparse path.
     kspec_re: Vec<f64>,
     kspec_im: Vec<f64>,
+    /// f32 filter planes for the reduced-precision tier (empty unless
+    /// `rplan32` is active).
+    kspec32_re: Vec<f32>,
+    kspec32_im: Vec<f32>,
 }
 
 impl NativeConvEngine {
@@ -280,7 +292,11 @@ impl NativeConvEngine {
             // Block patterns live on the order-2 layout grid, so sparse
             // artifacts stay there regardless of the cost-model choice.
             None if sparse.is_some() => 2,
-            None => best_implemented_order(fft_len),
+            // Unpinned artifacts go through the autotuner: the §3.2 cost
+            // model proposes, a one-shot measurement (cached per shape
+            // class, `FFC_PLAN_TUNE=model` to pin the analytic choice)
+            // disposes.
+            None => fft::tune::tuned_order(fft_len, b * h),
             Some(o) if (2..=costmodel::MAX_NATIVE_ORDER).contains(&o) => o,
             Some(o) => bail!(
                 "conv artifact {}: order {o} has no native dispatch (orders 2..={})",
@@ -302,6 +318,22 @@ impl NativeConvEngine {
             }
             (ConvPath::Monarch, Some(_)) => (None, Some(fft::plan::plan(fft_len, 2)?)),
             (ConvPath::Baseline, _) => (None, None),
+        };
+        // Optional reduced-precision serving tier. `meta precision f32` is
+        // an execution *hint*: only the dense Monarch path has a planned
+        // f32 executor (tolerance-gated against its f64 parent at build —
+        // a gate miss or length-cap overflow fails loudly here, it never
+        // silently degrades). Sparse and baseline paths stay in f64.
+        let rplan32 = match spec.meta("precision") {
+            None | Some("f64") => None,
+            Some("f32") if rplan.is_some() => {
+                Some(fft::plan::real_plan_f32(fft_len, order)?)
+            }
+            Some("f32") => None,
+            Some(other) => bail!(
+                "conv artifact {}: unknown precision {other:?} (expected f64 or f32)",
+                spec.name
+            ),
         };
         let threads = match spec.meta_usize("conv_threads") {
             Some(t) => t.max(1),
@@ -338,6 +370,7 @@ impl NativeConvEngine {
             n1,
             n2,
             rplan,
+            rplan32,
             cplan,
             sparse,
             threads,
@@ -352,6 +385,8 @@ impl NativeConvEngine {
             cached_specs: vec![],
             kspec_re: vec![],
             kspec_im: vec![],
+            kspec32_re: vec![],
+            kspec32_im: vec![],
         })
     }
 
@@ -397,7 +432,17 @@ impl NativeConvEngine {
         }
         let (h, n) = (self.h, self.n);
         let m = if self.op == ConvOp::Causal { 2 * n } else { n };
-        if let Some(rp) = self.rplan.clone() {
+        if let Some(rp32) = self.rplan32.clone() {
+            // Reduced-precision tier: the filter bank is already f32, so
+            // pad-and-transform stays entirely in single precision.
+            let mut kp = vec![0.0f32; h * m];
+            for hi in 0..h {
+                kp[hi * m..hi * m + n].copy_from_slice(&k[hi * n..(hi + 1) * n]);
+            }
+            let (kre, kim) = rp32.rfft_rows(&kp, h);
+            self.kspec32_re = kre;
+            self.kspec32_im = kim;
+        } else if let Some(rp) = self.rplan.clone() {
             let mut kp = vec![0.0f64; h * m];
             for hi in 0..h {
                 for t in 0..n {
@@ -523,10 +568,55 @@ impl Engine for NativeConvEngine {
                 }
             }
         };
+        let pack_row_f32 = |xp: &mut [f32], row: usize| {
+            let off = row * n;
+            match gates {
+                Some((_, w)) => {
+                    for t in 0..n {
+                        xp[t] = u[off + t] * w[off + t];
+                    }
+                }
+                None => xp.copy_from_slice(&u[off..off + n]),
+            }
+        };
+        let post_row_f32 = |out: &mut [f32], conv: &[f32], row: usize| {
+            let off = row * n;
+            match gates {
+                Some((v, _)) => {
+                    for t in 0..n {
+                        out[t] = v[off + t] * conv[t];
+                    }
+                }
+                None => out.copy_from_slice(conv),
+            }
+        };
         let run_block = |blk: std::ops::Range<usize>, ws: &mut ConvWorkspace| -> Vec<f32> {
             let cnt = blk.len();
             let mut out = vec![0.0f32; cnt * n];
-            if let Some(rp) = &this.rplan {
+            if let Some(rp32) = &this.rplan32 {
+                // Reduced-precision Monarch path (`meta precision f32`):
+                // pack, transform, pointwise product, and inverse all stay
+                // in f32, borrowing from the workspace's f32 size class.
+                let mut xp = ws.take_f32(cnt * m);
+                for (i, row) in blk.clone().enumerate() {
+                    pack_row_f32(&mut xp[i * m..i * m + n], row);
+                }
+                let mut y = ws.take_f32(cnt * m);
+                rp32.conv_rows_into(
+                    &xp,
+                    cnt,
+                    &this.kspec32_re,
+                    &this.kspec32_im,
+                    |i| (blk.start + i) % h,
+                    &mut y,
+                    ws,
+                );
+                for (i, row) in blk.clone().enumerate() {
+                    post_row_f32(&mut out[i * n..(i + 1) * n], &y[i * m..i * m + n], row);
+                }
+                ws.give_f32(xp);
+                ws.give_f32(y);
+            } else if let Some(rp) = &this.rplan {
                 // Dense Monarch path: batched planned r2c conv, all
                 // intermediates borrowed from this worker's workspace.
                 let mut xp = ws.take(cnt * m);
@@ -1370,10 +1460,11 @@ impl FleetBuilder {
         push_f32(&mut fix, &tw_im);
         self.files.insert(fix_name.clone(), fix);
 
-        // Execution order per the §3.2 cost model unless pinned (the
-        // twiddle-grid fixture operands stay on the order-2 (n1, n2)
-        // factorization either way).
-        let order = order_pin.unwrap_or_else(|| best_implemented_order(fft_len));
+        // Execution order via the autotuner (cost-model prior, one-shot
+        // measurement) unless pinned; the twiddle-grid fixture operands
+        // stay on the order-2 (n1, n2) factorization either way.
+        let order =
+            order_pin.unwrap_or_else(|| fft::tune::tuned_order(fft_len, b * h));
         self.text.push_str(&format!(
             "artifact {name}\nhlo {name}.hlo.txt\nmeta group conv\nmeta kind {kind}\n\
              meta variant {variant}\nmeta seq_len {n}\nmeta batch {b}\nmeta heads {h}\n\

@@ -68,7 +68,15 @@ impl Rng {
     pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
         // Inverse-CDF on the continuous approximation; clamp to range.
         let u = self.uniform();
-        let x = ((n as f64).powf(1.0 - s) * u + (1.0 - u)).powf(1.0 / (1.0 - s));
+        let x = if (1.0 - s).abs() < 1e-9 {
+            // Harmonic limit: at s = 1 the general inverse CDF divides
+            // by 1 − s (the old code produced powf(±inf) → every draw
+            // collapsed to token 0, silently degenerating the corpus).
+            // CDF(x) ∝ ln x over [1, n] inverts to x = n^u.
+            (n as f64).powf(u)
+        } else {
+            ((n as f64).powf(1.0 - s) * u + (1.0 - u)).powf(1.0 / (1.0 - s))
+        };
         (x.floor() as u64).clamp(1, n) - 1
     }
 
@@ -126,6 +134,35 @@ mod tests {
             counts[r.zipf(8, 1.2) as usize] += 1;
         }
         assert!(counts[0] > counts[7] * 3, "{counts:?}");
+    }
+
+    #[test]
+    fn zipf_is_finite_in_range_and_non_degenerate_across_exponents() {
+        // Property sweep including the classic s = 1.0, which the old
+        // divide-by-(1 − s) inverse CDF degenerated to all-zeros.
+        for &s in &[0.5f64, 1.0, 1.5] {
+            let mut r = Rng::new(0x21F ^ s.to_bits());
+            let n = 64u64;
+            let mut counts = vec![0usize; n as usize];
+            for _ in 0..16_000 {
+                let x = r.zipf(n, s);
+                assert!(x < n, "s={s}: draw {x} out of range");
+                counts[x as usize] += 1;
+            }
+            let nonzero = counts.iter().filter(|&&c| c > 0).count();
+            assert!(
+                nonzero > n as usize / 4,
+                "s={s}: only {nonzero}/{n} tokens ever drawn — degenerate: {counts:?}"
+            );
+            assert!(
+                counts[0] < 16_000,
+                "s={s}: every draw collapsed to token 0 (the 1/(1-s) bug)"
+            );
+            // Still Zipf-shaped: head beats tail.
+            let head: usize = counts[..8].iter().sum();
+            let tail: usize = counts[56..].iter().sum();
+            assert!(head > 2 * tail, "s={s}: head {head} vs tail {tail}");
+        }
     }
 
     #[test]

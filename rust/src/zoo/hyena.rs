@@ -184,10 +184,11 @@ impl HyenaLm {
         let plan = if cfg.baseline {
             None
         } else {
-            // The calibrated §3.2 cost model picks the Monarch order for
-            // the causal FFT length, same dispatch as the conv engines
-            // (orders 2..=4 since the order-4 cap raise).
-            let order = crate::costmodel::best_native_order(2 * cfg.seq);
+            // The autotuner picks the Monarch order for the causal FFT
+            // length (measured winner, §3.2 cost model as prior), same
+            // dispatch as the conv engines. The model's per-layer conv
+            // batches `dim` rows per call.
+            let order = fft::tune::tuned_order(2 * cfg.seq, cfg.dim);
             Some(fft::plan::real_plan(2 * cfg.seq, order)?)
         };
         Ok(Self {

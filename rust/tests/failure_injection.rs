@@ -412,3 +412,51 @@ fn control_ops_survive_poisoned_shard_and_converge_on_one_epoch() {
         }
     }
 }
+
+#[test]
+fn poisoned_plan_registry_recovers_and_serves() {
+    // Headline PR-9 regression: a panic on any thread holding a plan
+    // registry lock used to poison the process-wide Mutex, turning every
+    // subsequent plan lookup — and therefore every later engine build in
+    // the process — into a cascading panic far from the original fault.
+    // The registries are insert-only maps of finished plans (a panicking
+    // holder cannot leave a torn entry), so the locks now shrug off
+    // poisoning and a wounded process keeps serving.
+    use flashfftconv::coordinator::fleet::{FleetConfig, FleetDispatcher};
+    use flashfftconv::coordinator::service::ConvRequest;
+    use flashfftconv::coordinator::BatchPolicy;
+    use flashfftconv::fft::plan;
+    use flashfftconv::util::Rng;
+    use std::time::Duration;
+
+    // Deliberately panic worker threads while they hold each registry
+    // lock (the failure-injection hook marks every registry poisoned).
+    plan::poison_registries();
+
+    // Plan lookups recover instead of propagating the old panic —
+    // both cache hits (the fleets below re-request these shapes) and
+    // fresh builds.
+    plan::plan(256, 2).expect("complex plan lookup after poisoning");
+    plan::real_plan(512, 2).expect("real plan lookup after poisoning");
+    plan::real_plan_f32(512, 2).expect("f32 plan lookup after poisoning");
+
+    // And the full request path — backend build, engine construction,
+    // plan registry traffic, dispatch, execute — still works end to end.
+    const HEADS: usize = 16;
+    let fleet = FleetDispatcher::conv(
+        BackendConfig::NativeRowThreads(1),
+        "monarch",
+        FleetConfig {
+            shards: 1,
+            max_inflight: 64,
+            policy: BatchPolicy { batch_size: 2, max_wait: Duration::from_millis(1) },
+        },
+    )
+    .expect("fleet starts on poisoned registries");
+    let mut rng = Rng::new(0x9015);
+    let u = rng.normal_vec(HEADS * 256);
+    let row = fleet
+        .call(ConvRequest { kind: ConvKind::Forward, len: 256, streams: vec![u] })
+        .expect("conv request served after registry poisoning");
+    assert_eq!(row.len(), HEADS * 256);
+}
