@@ -341,6 +341,46 @@ else
         && echo "BENCH_memory.json OK (grep check; python3 unavailable)"
 fi
 
+# Chunked-streaming artifact: the genome-length act of table7 runs one
+# >=1M-point causal partial conv through the chunked bucket and through
+# a monolithic bucket of the same length, and BENCH_chunked.json must
+# prove the memory headline mechanically: chunked workspace peak at most
+# 1/8 of the monolithic peak (it is typically ~100x smaller). Throughput
+# is recorded for the trajectory but not gated at 1-iteration scale.
+echo "==> chunked conv smoke: FFC_BENCH_ITERS=1 cargo bench --bench table7_partial"
+rm -f BENCH_chunked.json
+FFC_BENCH_ITERS=1 FFC_BENCH_MAX_SECS=60 cargo bench --bench table7_partial >/dev/null
+test -s BENCH_chunked.json || { echo "FAIL: BENCH_chunked.json missing or empty"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PY'
+import json
+recs = json.load(open("BENCH_chunked.json"))
+by = {r["name"]: r for r in recs}
+chunked = by.get("chunked")
+mono = by.get("monolithic")
+assert chunked and mono, f"missing chunked/monolithic pair: {sorted(by)}"
+for r in (chunked, mono):
+    missing = {"name", "n", "filter_len", "median_ms", "points_per_sec",
+               "workspace_peak_bytes"} - set(r)
+    assert not missing, f"record missing {missing}: {r}"
+    assert r["points_per_sec"] > 0 and r["median_ms"] > 0, f"degenerate record: {r}"
+assert chunked["n"] == mono["n"] >= 1 << 20, \
+    f"genome-length record must be >=1M points: {chunked['n']}"
+ratio = mono["workspace_peak_bytes"] / max(chunked["workspace_peak_bytes"], 1)
+assert ratio >= 8.0, \
+    f"chunked workspace peak must be <= 1/8 of monolithic, got {ratio:.2f}x " \
+    f"({chunked['workspace_peak_bytes']} vs {mono['workspace_peak_bytes']} B)"
+tp = chunked["points_per_sec"] / mono["points_per_sec"]
+print(f"BENCH_chunked.json OK (workspace peak {ratio:.0f}x smaller chunked; "
+      f"chunked/monolithic throughput {tp:.2f}x at n={chunked['n']})")
+PY
+else
+    grep -q '"chunked"' BENCH_chunked.json \
+        && grep -q '"monolithic"' BENCH_chunked.json \
+        && grep -q '"workspace_peak_bytes"' BENCH_chunked.json \
+        && echo "BENCH_chunked.json OK (grep check; python3 unavailable)"
+fi
+
 lint_mode="${FFC_CI_LINT:-advisory}"
 
 if cargo fmt --version >/dev/null 2>&1; then

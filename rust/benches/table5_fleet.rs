@@ -36,7 +36,7 @@ fn request(rng: &mut Rng, slot: usize) -> ConvRequest {
         1 => 200, // pads into 256
         _ => 256,
     };
-    ConvRequest { kind: ConvKind::Forward, len, streams: vec![rng.normal_vec(HEADS * len)] }
+    ConvRequest { kind: ConvKind::Forward, len, streams: vec![rng.normal_vec(HEADS * len)], chunk_tx: None }
 }
 
 /// Drive `total` requests from `clients` closed-loop client threads
@@ -98,7 +98,7 @@ fn warmup(fleet: &FleetDispatcher<ConvProfile>, n_shards: usize) {
             .map(|_| {
                 let u = rng.normal_vec(HEADS * len);
                 fleet
-                    .submit_blocking(ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] })
+                    .submit_blocking(ConvRequest { kind: ConvKind::Forward, len, streams: vec![u], chunk_tx: None })
                     .expect("warmup burst admitted")
             })
             .collect();

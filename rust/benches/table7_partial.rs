@@ -4,12 +4,23 @@
 //! column) and the memory model (footprint column); also times the eval
 //! call per truncation to show runtime is insensitive to the mask (the
 //! savings are in memory/offload, not this kernel).
+//!
+//! Second act: the genome-length partial conv, chunked vs monolithic.
+//! One >=1M-point causal conv runs through a `NativeLongConv` bucket
+//! (chunked overlap-add under a workspace budget) and through a
+//! monolithic pow-2 bucket of the same length; both records land in
+//! `BENCH_chunked.json` with measured throughput *and*
+//! `workspace_peak_bytes`, so CI can assert the memory headline
+//! (chunked peak <= 1/8 of monolithic) mechanically. Env knobs:
+//! `FFC_CHUNKED_N` (default 1<<20).
 
 use flashfftconv::bench::{bench, fmt_ms, workloads, BenchConfig, Table};
 use flashfftconv::coordinator::memory;
 use flashfftconv::coordinator::partial::filter_mask;
-use flashfftconv::runtime::HostTensor;
+use flashfftconv::fft::chunked::chunk_scratch_bytes;
+use flashfftconv::runtime::{HostTensor, Runtime};
 use flashfftconv::trainer::data::TokenGen;
+use flashfftconv::util::Rng;
 
 fn main() {
     let cfg = BenchConfig::from_env();
@@ -57,4 +68,145 @@ fn main() {
         "\nshape check: loss degrades only gently (untrained-model analogue of the \
          flat-PPL row) while the modeled training footprint falls monotonically."
     );
+
+    chunked_vs_monolithic(&cfg);
+}
+
+/// One measured mode of the genome-length partial conv.
+struct ChunkRecord {
+    name: String,
+    n: usize,
+    filter_len: usize,
+    median_ms: f64,
+    points_per_sec: f64,
+    workspace_peak_bytes: u64,
+}
+
+fn chunk_records_json(recs: &[ChunkRecord]) -> String {
+    let rows: Vec<String> = recs
+        .iter()
+        .map(|r| {
+            format!(
+                "  {{\"name\": \"{}\", \"n\": {}, \"filter_len\": {}, \
+                 \"median_ms\": {:.3}, \"points_per_sec\": {:.1}, \
+                 \"workspace_peak_bytes\": {}}}",
+                r.name, r.n, r.filter_len, r.median_ms, r.points_per_sec, r.workspace_peak_bytes
+            )
+        })
+        .collect();
+    format!("[\n{}\n]\n", rows.join(",\n"))
+}
+
+/// The genome-length act: a >=1M-point causal partial conv through the
+/// chunked bucket (workspace budget forces overlap-add) and through a
+/// monolithic pow-2 bucket, both measured for throughput and workspace
+/// peak. Emits `BENCH_chunked.json`.
+fn chunked_vs_monolithic(cfg: &BenchConfig) {
+    let n: usize = std::env::var("FFC_CHUNKED_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1usize << 20)
+        .next_power_of_two();
+    let lk = 1024usize;
+    // Budget sized for an 8K chunk: ~50x under the monolithic scratch.
+    let budget = chunk_scratch_bytes(2 * 8192, 1);
+    println!(
+        "\n== genome-length partial conv: chunked (budget {budget} B) vs monolithic, \
+         n = {n}, filter = {lk} taps =="
+    );
+    // Long-running transforms: keep the warmup to one pass.
+    let mut cfg = cfg.clone();
+    cfg.warmup = cfg.warmup.min(1);
+
+    let mut rng = Rng::new(0xD11A);
+    let u = HostTensor::f32(rng.normal_vec(n), &[1, 1, n]);
+    let k = HostTensor::f32(rng.normal_vec(lk), &[1, lk]);
+
+    let chunked_rt = Runtime::native_long_conv(n, lk, budget).expect("chunked runtime");
+    let mut chunked = chunked_rt.load(&format!("conv_causal_long_n{n}")).expect("chunked bucket");
+    let mono_rt = Runtime::native_from(
+        &format!(
+            "version 1\n\
+             artifact conv_causal_mono_n{n}\n\
+             hlo conv_causal_mono_n{n}.hlo.txt\n\
+             meta group conv\nmeta kind conv_causal\nmeta variant monarch\n\
+             meta seq_len {n}\nmeta batch 1\nmeta heads 1\n\
+             meta filter_len {lk}\nmeta order 2\n\
+             input u f32 1,1,{n} runtime\n\
+             input k f32 1,{lk} runtime\n\
+             output y f32 1,1,{n}\n\
+             end\n"
+        ),
+        std::collections::BTreeMap::new(),
+    )
+    .expect("monolithic runtime");
+    let mut mono = mono_rt.load(&format!("conv_causal_mono_n{n}")).expect("monolithic bucket");
+
+    // Parity spot-check before timing: the two modes agree to f32
+    // accumulation tolerance on a sampled grid.
+    let want = mono.call(&[u.clone(), k.clone()]).expect("monolithic conv")[0].as_f32().to_vec();
+    let got = chunked.call(&[u.clone(), k.clone()]).expect("chunked conv")[0].as_f32().to_vec();
+    let mut worst = 0.0f64;
+    for i in (0..n).step_by(4099) {
+        worst = worst.max((got[i] as f64 - want[i] as f64).abs());
+    }
+    assert!(worst < 1e-3, "chunked/monolithic divergence {worst} at n={n}");
+
+    let rc = bench("chunked", &cfg, || {
+        let mut points = 0usize;
+        let streamed = chunked
+            .call_chunked(&[u.clone(), k.clone()], &mut |part: &[f32]| {
+                points += part.len();
+                Ok(())
+            })
+            .expect("chunked stream");
+        assert!(streamed, "long bucket must take the chunked path");
+        assert_eq!(points, n);
+    });
+    let rm = bench("monolithic", &cfg, || {
+        mono.call(&[u.clone(), k.clone()]).expect("monolithic conv");
+    });
+
+    let peak = |a: &flashfftconv::runtime::Artifact| {
+        a.workspace_stats().map(|s| s.peak_bytes).unwrap_or(0)
+    };
+    let recs = [
+        ChunkRecord {
+            name: "chunked".into(),
+            n,
+            filter_len: lk,
+            median_ms: rc.median_ms(),
+            points_per_sec: n as f64 / (rc.median_ms() / 1e3),
+            workspace_peak_bytes: peak(&chunked),
+        },
+        ChunkRecord {
+            name: "monolithic".into(),
+            n,
+            filter_len: lk,
+            median_ms: rm.median_ms(),
+            points_per_sec: n as f64 / (rm.median_ms() / 1e3),
+            workspace_peak_bytes: peak(&mono),
+        },
+    ];
+
+    let mut t = Table::new(&["mode", "n", "median_ms", "Mpts/s", "workspace_peak_MB"]);
+    for r in &recs {
+        t.row(vec![
+            r.name.clone(),
+            r.n.to_string(),
+            fmt_ms(r.median_ms),
+            format!("{:.2}", r.points_per_sec / 1e6),
+            format!("{:.2}", r.workspace_peak_bytes as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    let ratio = recs[1].workspace_peak_bytes as f64 / recs[0].workspace_peak_bytes.max(1) as f64;
+    println!(
+        "\nworkspace peak: monolithic / chunked = {ratio:.1}x \
+         (headline requires >= 8x; budget was {budget} bytes)"
+    );
+
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_chunked.json");
+    std::fs::write(out, chunk_records_json(&recs)).expect("write BENCH_chunked.json");
+    println!("wrote {out}");
 }

@@ -93,7 +93,7 @@ fn warmup(service: &ConvService, n_shards: usize) {
                     .submit_blocking(ConvRequest {
                         kind: ConvKind::Forward,
                         len,
-                        streams: vec![u],
+                        streams: vec![u], chunk_tx: None
                     })
                     .expect("warmup admitted")
             })

@@ -158,7 +158,7 @@ fn main() {
     for len in LENS {
         let u = rng.normal_vec(HEADS * len);
         service
-            .call(ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] })
+            .call(ConvRequest { kind: ConvKind::Forward, len, streams: vec![u], chunk_tx: None })
             .expect("warmup conv ok");
     }
 

@@ -64,7 +64,7 @@ fn main() -> flashfftconv::Result<()> {
                     .submit_blocking(ConvRequest {
                         kind: ConvKind::Forward,
                         len: bucket,
-                        streams: vec![u],
+                        streams: vec![u], chunk_tx: None
                     })
                     .expect("warmup admitted")
             })
@@ -94,7 +94,7 @@ fn main() -> flashfftconv::Result<()> {
                     let len = if (i + c) % 3 == 0 { 1000 } else { 256 };
                     let u = rng.normal_vec(heads * len);
                     let req =
-                        ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] };
+                        ConvRequest { kind: ConvKind::Forward, len, streams: vec![u], chunk_tx: None };
                     // Bounded admission: block until the fleet admits
                     // (backpressure without a spin loop).
                     let rx = service

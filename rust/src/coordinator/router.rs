@@ -45,20 +45,23 @@ pub struct Route {
     pub batch: usize,
     /// Head count of the compiled artifact.
     pub heads: usize,
+    /// Filter taps the artifact expects per head (`meta filter_len`,
+    /// default the bucket length — partial-conv buckets declare fewer).
+    pub filter_len: usize,
 }
 
 /// Sequence-length router over the artifact manifest.
 #[derive(Debug)]
 pub struct Router {
-    /// kind -> sorted (bucket_len -> (artifact, batch, heads)).
-    buckets: BTreeMap<ConvKind, BTreeMap<usize, (String, usize, usize)>>,
+    /// kind -> sorted (bucket_len -> (artifact, batch, heads, filter_len)).
+    buckets: BTreeMap<ConvKind, BTreeMap<usize, (String, usize, usize, usize)>>,
     variant: String,
 }
 
 impl Router {
     /// Index all conv artifacts of the given variant ("monarch"/"baseline").
     pub fn from_manifest(manifest: &Manifest, variant: &str) -> crate::Result<Self> {
-        let mut buckets: BTreeMap<ConvKind, BTreeMap<usize, (String, usize, usize)>> =
+        let mut buckets: BTreeMap<ConvKind, BTreeMap<usize, (String, usize, usize, usize)>> =
             BTreeMap::new();
         for kind in [ConvKind::Forward, ConvKind::Gated, ConvKind::Causal] {
             for spec in manifest.with_meta("kind", kind.meta_value()) {
@@ -70,10 +73,11 @@ impl Router {
                     .ok_or_else(|| format_err!("artifact {} missing seq_len", spec.name))?;
                 let batch = spec.meta_usize("batch").unwrap_or(1);
                 let heads = spec.meta_usize("heads").unwrap_or(1);
+                let filter_len = spec.meta_usize("filter_len").unwrap_or(len);
                 buckets
                     .entry(kind)
                     .or_default()
-                    .insert(len, (spec.name.clone(), batch, heads));
+                    .insert(len, (spec.name.clone(), batch, heads, filter_len));
             }
         }
         if buckets.values().all(BTreeMap::is_empty) {
@@ -99,7 +103,7 @@ impl Router {
             .get(&kind)
             .filter(|m| !m.is_empty())
             .ok_or_else(|| format_err!("no artifacts for {kind:?}"))?;
-        let (bucket, (artifact, batch, heads)) = table
+        let (bucket, (artifact, batch, heads, filter_len)) = table
             .range(len..)
             .next()
             .ok_or_else(|| {
@@ -114,6 +118,7 @@ impl Router {
             padding: bucket - len,
             batch: *batch,
             heads: *heads,
+            filter_len: *filter_len,
         })
     }
 }

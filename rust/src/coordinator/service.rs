@@ -42,6 +42,13 @@ pub struct ConvRequest {
     pub len: usize,
     /// Row data: `[u]` or `[u, v, w]`, each of `heads * len` f32s.
     pub streams: Vec<Vec<f32>>,
+    /// Optional chunk stream: when set *and* the request lands alone on a
+    /// batch-1 single-head chunk-capable bucket, the worker forwards each
+    /// output chunk through this sender as it completes (padding already
+    /// truncated) and the final reply arrives with empty `data` — so a
+    /// genome-length reply is never buffered whole. In every other case
+    /// the sender is ignored and the full row rides the reply as usual.
+    pub chunk_tx: Option<std::sync::mpsc::Sender<Vec<f32>>>,
 }
 
 /// The service's reply: the convolved row, or a typed fleet error
@@ -304,6 +311,8 @@ struct RowJob {
     len: usize,
     reply: ReplySlot,
     t_submit: Instant,
+    /// See [`ConvRequest::chunk_tx`].
+    chunk_tx: Option<std::sync::mpsc::Sender<Vec<f32>>>,
 }
 
 struct ServiceWorker {
@@ -403,7 +412,7 @@ impl ServiceWorker {
         if route.bucket != bucket {
             crate::bail!("no exact bucket {bucket} for {kind:?}");
         }
-        let expect = route.heads * bucket;
+        let expect = route.heads * route.filter_len;
         if k.len() != expect {
             crate::bail!("filter for bucket {bucket} needs {expect} f32s, got {}", k.len());
         }
@@ -436,7 +445,16 @@ impl ServiceWorker {
         let mut policy = self.policy.clone();
         policy.batch_size = policy.batch_size.min(route.batch.max(1));
         let q = self.queues.entry(key).or_insert_with(|| Batcher::new(policy));
-        q.push(RowJob { streams: req.streams, len: req.len, reply, t_submit }, Instant::now());
+        q.push(
+            RowJob {
+                streams: req.streams,
+                len: req.len,
+                reply,
+                t_submit,
+                chunk_tx: req.chunk_tx,
+            },
+            Instant::now(),
+        );
     }
 
     fn drain_all(&mut self, force: bool) {
@@ -536,21 +554,47 @@ impl ServiceWorker {
                 }
             }
         }
+        let lk = route.filter_len;
         let filter = self
             .filters
             .entry((kind, n))
             .or_insert_with(|| {
                 // Default smoke filter: deterministic random bank.
                 let mut rng = Rng::new(n as u64 ^ 0xF17E);
-                rng.normal_vec(h * n)
+                rng.normal_vec(h * lk)
             })
             .clone();
 
         let mut inputs: Vec<HostTensor> =
             streams.into_iter().map(|s| HostTensor::f32(s, &[b, h, n])).collect();
-        inputs.push(HostTensor::f32(filter, &[h, n]));
+        inputs.push(HostTensor::f32(filter, &[h, lk]));
 
         let art = self.artifacts.get_mut(&route.artifact).unwrap();
+        // Streamed path: one ungated request alone on a batch-1
+        // single-head bucket, with a chunk sender attached. The engine
+        // pushes each output chunk through the sender as it completes
+        // (padding truncated, receiver-gone ignored — the client may
+        // have hung up); the reply then carries empty data as the
+        // completion marker. Chunk-incapable engines return `false` and
+        // fall through to the buffered call, whose reply carries the
+        // full row — the wire layer treats both shapes uniformly.
+        if b == 1 && h == 1 && n_streams == 1 && batch.rows.len() == 1 {
+            if let Some(tx) = batch.rows[0].payload.chunk_tx.clone() {
+                let cap = batch.rows[0].payload.len;
+                let mut sent = 0usize;
+                let streamed = art.call_chunked(&inputs, &mut |part| {
+                    if sent < cap {
+                        let take = part.len().min(cap - sent);
+                        let _ = tx.send(part[..take].to_vec());
+                        sent += take;
+                    }
+                    Ok(())
+                })?;
+                if streamed {
+                    return Ok(vec![vec![]]);
+                }
+            }
+        }
         let outs = art.call(&inputs)?;
         let y = outs[0].as_f32();
         // Scatter back per-row, truncating padding.
@@ -593,6 +637,7 @@ mod tests {
             kind: ConvKind::Forward,
             len: 2000,
             streams: vec![vec![0.0; 16 * 2000]],
+            chunk_tx: None,
         };
         let plan = profile.plan(&req);
         assert_eq!(plan.key, Some((0, 4096)));
@@ -600,7 +645,8 @@ mod tests {
 
         // Unroutable requests: no key, nominal unit cost (the worker owns
         // the rejection reply).
-        let req = ConvRequest { kind: ConvKind::Forward, len: 1 << 22, streams: vec![] };
+        let req =
+            ConvRequest { kind: ConvKind::Forward, len: 1 << 22, streams: vec![], chunk_tx: None };
         let plan = profile.plan(&req);
         assert_eq!(plan.key, None);
         assert_eq!(plan.cost, 1);

@@ -1,0 +1,496 @@
+//! Chunked overlap-add execution for genome-length causal/partial convs.
+//!
+//! The monolithic planned path materializes the whole padded sequence in
+//! one [`RealConvPlan`] execution, so `workspace_peak_bytes` scales
+//! linearly with N and a single 2.3M-point request (the paper's §5.4 DNA
+//! scenario) dwarfs every other bucket. A [`ChunkedConvPlan`] instead
+//! splits the length-N signal into `K = ⌈N/C⌉` chunks of `C` points,
+//! convolves each chunk against the length-`L ≤ C` filter at FFT size
+//! `2C` through the existing `conv_rows_into` + [`ConvWorkspace`] path,
+//! and folds the `L−1`-point linear-conv tail of each chunk forward into
+//! the head of the next (classic overlap-add over the partial-conv
+//! structure) — peak scratch is **O(C)**, independent of N.
+//!
+//! Correctness: a C-point block against L taps spans `C + L − 1 ≤ 2C`
+//! points, so the length-2C circular conv equals the linear conv of the
+//! block — no wraparound ever aliases. Summing the shifted block convs
+//! is exactly the causal conv by linearity.
+//!
+//! Determinism: for a fixed chunk size the output is **bitwise
+//! deterministic** — every chunk runs the same plan and
+//! [`ConvWorkspace::take`] hands out buffers bitwise identical to fresh
+//! `vec![0.0; len]` (workspace contract), so chunked results don't
+//! depend on workspace history. Across *different* chunk sizes the FFT
+//! length changes, so results agree only within accumulation tolerance
+//! of the monolithic plan (property-tested in `tests/proptests.rs`).
+
+use std::sync::Arc;
+
+use crate::bail;
+use crate::costmodel;
+
+use super::plan::{real_plan, RealConvPlan};
+use super::workspace::ConvWorkspace;
+
+/// Smallest chunk the selector will pick: below this the per-chunk plan
+/// overhead swamps the transform work.
+pub const MIN_CHUNK: usize = 1 << 10;
+
+/// Upper bound on the workspace bytes one streamed chunk pass needs at
+/// FFT size `fft_len` with `rows` concurrent rows: the engine-side
+/// pack/output pair (`2·m` per row), the conv internals (half-spectrum
+/// planes plus packing and stage scratch, `≈ 3m + small` per row), and
+/// one carried overlap tail (`≤ m/2`). Deliberately generous — the
+/// budget contract is "estimate ≤ budget ⇒ measured peak ≤ budget",
+/// verified by the counting-allocator budget test.
+pub fn chunk_scratch_bytes(fft_len: usize, rows: usize) -> u64 {
+    8 * (rows as u64 * (6 * fft_len as u64 + 16) + fft_len as u64)
+}
+
+/// Pick the chunk size: among power-of-two candidates whose streamed
+/// scratch fits `budget_bytes`, choose the one with the lowest §3.2
+/// model cost (`K` per-chunk convs at FFT size `2C`, plus a per-chunk
+/// boundary term for the pack/carry/emit traffic). The cost model is the
+/// *prior* for C; the *measured* autotuner ([`crate::fft::tune`]) then
+/// picks the Monarch order at the chosen chunk's FFT size when the plan
+/// is built. Ties go to the larger chunk (fewer wire chunks). Returns
+/// `None` when even [`MIN_CHUNK`] (clamped up to the filter length) does
+/// not fit the budget.
+pub fn pick_chunk(
+    n: usize,
+    filter_len: usize,
+    budget_bytes: u64,
+    rows: usize,
+) -> Option<usize> {
+    let floor = MIN_CHUNK.max(filter_len.next_power_of_two());
+    let ceil = n.next_power_of_two().max(floor);
+    let mut best: Option<(usize, f64)> = None;
+    let mut c = floor;
+    while c <= ceil {
+        if chunk_scratch_bytes(2 * c, rows) <= budget_bytes {
+            let k = n.div_ceil(c);
+            let p = costmodel::best_native_order(2 * c);
+            // Per-chunk boundary overhead: one extra O(C) pass of memory
+            // traffic for the pack + carry fold + emit copy.
+            let boundary = 8.0 * (2 * c) as f64 / costmodel::CPU.hbm_bw;
+            let cost = k as f64
+                * (costmodel::conv_cost(2 * c, p, 1, rows, &costmodel::CPU) + boundary);
+            if best.map_or(true, |(_, bc)| cost <= bc) {
+                best = Some((c, cost));
+            }
+        }
+        c *= 2;
+    }
+    best.map(|(c, _)| c)
+}
+
+/// A planned overlap-add decomposition of one length-`n` causal conv
+/// with a length-`filter_len` filter into fixed-scratch chunks. Build
+/// once per `(n, filter_len, chunk)`, reuse across requests — the inner
+/// [`RealConvPlan`] comes from the shared process-wide plan registry.
+pub struct ChunkedConvPlan {
+    n: usize,
+    chunk: usize,
+    filter_len: usize,
+    plan: Arc<RealConvPlan>,
+}
+
+impl ChunkedConvPlan {
+    /// Plan a chunked causal conv. `chunk` must be a power of two with
+    /// `filter_len <= chunk`; the per-chunk FFT runs at `2·chunk` with
+    /// the Monarch order picked by the measured autotuner
+    /// ([`crate::fft::tune::tuned_order`]) for that size.
+    pub fn new(n: usize, filter_len: usize, chunk: usize) -> crate::Result<Self> {
+        Self::with_order(n, filter_len, chunk, None)
+    }
+
+    /// [`Self::new`] with an explicit Monarch order (tests pin orders to
+    /// keep goldens deterministic; `None` = autotuned).
+    pub fn with_order(
+        n: usize,
+        filter_len: usize,
+        chunk: usize,
+        order: Option<usize>,
+    ) -> crate::Result<Self> {
+        if n == 0 {
+            bail!("chunked conv: signal length must be >= 1");
+        }
+        if !super::is_pow2(chunk) {
+            bail!("chunked conv: chunk size {chunk} must be a power of two");
+        }
+        if filter_len == 0 || filter_len > chunk {
+            bail!(
+                "chunked conv: filter length {filter_len} must be in 1..={chunk} \
+                 (the L <= C overlap-add requirement)"
+            );
+        }
+        let fft_len = 2 * chunk;
+        let order = order.unwrap_or_else(|| super::tune::tuned_order(fft_len, 1));
+        let plan = real_plan(fft_len, order)?;
+        Ok(Self { n, chunk, filter_len, plan })
+    }
+
+    /// Total signal length N.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True iff the planned signal is empty (never: `new` rejects 0).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Chunk size C.
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Filter length L.
+    pub fn filter_len(&self) -> usize {
+        self.filter_len
+    }
+
+    /// Per-chunk FFT length (`2·C`).
+    pub fn fft_len(&self) -> usize {
+        self.plan.fft_len()
+    }
+
+    /// Number of chunks `K = ⌈N/C⌉`.
+    pub fn num_chunks(&self) -> usize {
+        self.n.div_ceil(self.chunk)
+    }
+
+    /// The inner per-chunk plan (shared registry entry).
+    pub fn inner(&self) -> &Arc<RealConvPlan> {
+        &self.plan
+    }
+
+    /// Upper bound on the workspace bytes [`Self::conv_stream`] checks
+    /// out at once (see [`chunk_scratch_bytes`]).
+    pub fn scratch_bytes(&self) -> u64 {
+        chunk_scratch_bytes(self.fft_len(), 1)
+    }
+
+    /// Half spectrum of the length-L filter zero-padded to the chunk FFT
+    /// length: `(re, im)`, each [`RealConvPlan::bins`] long. Compute once
+    /// per filter, reuse across every chunk and request.
+    pub fn filter_spectrum(&self, k: &[f64]) -> crate::Result<(Vec<f64>, Vec<f64>)> {
+        if k.len() != self.filter_len {
+            bail!(
+                "chunked conv: filter has {} taps, plan expects {}",
+                k.len(),
+                self.filter_len
+            );
+        }
+        let mut kp = k.to_vec();
+        kp.resize(self.fft_len(), 0.0);
+        Ok(self.plan.rfft_rows(&kp, 1))
+    }
+
+    /// Stream the causal conv of `u` (length N) against the filter
+    /// spectrum from [`Self::filter_spectrum`]: `emit` is called once per
+    /// chunk, in order, with that chunk's `min(C, remaining)` output
+    /// points — the concatenation of all emitted slices is exactly the
+    /// length-N causal conv. Scratch is borrowed from `ws` and fully
+    /// returned before each `emit`, so peak checkout stays O(C) no
+    /// matter how long the signal is. An `emit` error aborts the stream.
+    pub fn conv_stream(
+        &self,
+        u: &[f64],
+        k_re: &[f64],
+        k_im: &[f64],
+        ws: &mut ConvWorkspace,
+        mut emit: impl FnMut(&[f64]) -> crate::Result<()>,
+    ) -> crate::Result<()> {
+        if u.len() != self.n {
+            bail!("chunked conv: signal has {} points, plan expects {}", u.len(), self.n);
+        }
+        self.stream_impl(
+            &mut |dst, off, len| dst[..len].copy_from_slice(&u[off..off + len]),
+            k_re,
+            k_im,
+            ws,
+            &mut emit,
+        )
+    }
+
+    /// [`Self::conv_stream`] over an `f32` signal: each chunk is widened
+    /// to `f64` directly into the O(C) pack buffer, so no length-N `f64`
+    /// copy of the input ever exists. Output chunks are still emitted at
+    /// `f64` — narrowing (if wanted) happens in the caller's sink.
+    pub fn conv_stream_f32(
+        &self,
+        u: &[f32],
+        k_re: &[f64],
+        k_im: &[f64],
+        ws: &mut ConvWorkspace,
+        mut emit: impl FnMut(&[f64]) -> crate::Result<()>,
+    ) -> crate::Result<()> {
+        if u.len() != self.n {
+            bail!("chunked conv: signal has {} points, plan expects {}", u.len(), self.n);
+        }
+        self.stream_impl(
+            &mut |dst, off, len| {
+                for (d, &s) in dst[..len].iter_mut().zip(&u[off..off + len]) {
+                    *d = s as f64;
+                }
+            },
+            k_re,
+            k_im,
+            ws,
+            &mut emit,
+        )
+    }
+
+    /// Shared overlap-add loop: `pack(dst, off, len)` fills the head of
+    /// the zeroed FFT buffer with `len` input points starting at `off`.
+    fn stream_impl(
+        &self,
+        pack: &mut dyn FnMut(&mut [f64], usize, usize),
+        k_re: &[f64],
+        k_im: &[f64],
+        ws: &mut ConvWorkspace,
+        emit: &mut dyn FnMut(&[f64]) -> crate::Result<()>,
+    ) -> crate::Result<()> {
+        let bins = self.plan.bins();
+        if k_re.len() != bins || k_im.len() != bins {
+            bail!(
+                "chunked conv: filter spectrum planes must be {bins} bins, got {}/{}",
+                k_re.len(),
+                k_im.len()
+            );
+        }
+        let (c, m, l) = (self.chunk, self.fft_len(), self.filter_len);
+        // The L−1-point tail carried from the previous chunk. Borrowed
+        // (not allocated) so steady-state streaming stays alloc-free.
+        let mut carry = ws.take(l.saturating_sub(1));
+        let mut off = 0usize;
+        let mut result = Ok(());
+        while off < self.n {
+            let take_len = c.min(self.n - off);
+            let mut xp = ws.take(m);
+            pack(&mut xp, off, take_len);
+            let mut y = ws.take(m);
+            self.plan.conv_rows_into(&xp, 1, k_re, k_im, |_| 0, &mut y, ws);
+            // Fold the previous chunk's tail into this chunk's head.
+            for (dst, &src) in y.iter_mut().zip(carry.iter()) {
+                *dst += src;
+            }
+            // Save this chunk's tail y[C..C+L−1] for the next chunk; the
+            // final chunk has no successor, but saving is harmless and
+            // keeps the loop branch-free. (For a short final chunk the
+            // tail would fall past N — linear-conv points we truncate,
+            // exactly like the monolithic causal path.)
+            carry.copy_from_slice(&y[c..c + l.saturating_sub(1)]);
+            result = emit(&y[..take_len]);
+            ws.give(xp);
+            ws.give(y);
+            if result.is_err() {
+                break;
+            }
+            off += take_len;
+        }
+        ws.give(carry);
+        result
+    }
+
+    /// [`Self::conv_stream`] materializing into a caller-provided
+    /// length-N buffer (tests and small callers; the streaming form is
+    /// the point of the type).
+    pub fn conv_into(
+        &self,
+        u: &[f64],
+        k_re: &[f64],
+        k_im: &[f64],
+        y: &mut [f64],
+        ws: &mut ConvWorkspace,
+    ) -> crate::Result<()> {
+        if y.len() != self.n {
+            bail!("chunked conv: output has {} points, plan expects {}", y.len(), self.n);
+        }
+        let mut off = 0usize;
+        self.conv_stream(u, k_re, k_im, ws, |part| {
+            y[off..off + part.len()].copy_from_slice(part);
+            off += part.len();
+            Ok(())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{causal_conv, max_abs_diff, random_signal};
+    use crate::util::Rng;
+
+    fn chunked(n: usize, l: usize, c: usize, u: &[f64], k: &[f64]) -> Vec<f64> {
+        let plan = ChunkedConvPlan::with_order(n, l, c, Some(2)).unwrap();
+        let (kre, kim) = plan.filter_spectrum(k).unwrap();
+        let mut ws = ConvWorkspace::new();
+        let mut y = vec![0.0; n];
+        plan.conv_into(u, &kre, &kim, &mut y, &mut ws).unwrap();
+        y
+    }
+
+    #[test]
+    fn matches_monolithic_causal_conv() {
+        let mut rng = Rng::new(0xC0DE);
+        // {divisor, non-divisor tail, single-chunk degenerate} × filter
+        // lengths {1, mid, L = chunk}.
+        for &(n, c) in &[(1024usize, 256usize), (1000, 256), (700, 64), (100, 256)] {
+            for &l in &[1usize, 17, 64] {
+                let u = random_signal(n, &mut rng);
+                let k = random_signal(l, &mut rng);
+                let mut kfull = k.clone();
+                kfull.resize(n.max(l), 0.0);
+                let ufull = {
+                    let mut v = u.clone();
+                    v.resize(n.max(l), 0.0);
+                    v
+                };
+                let want = &causal_conv(&ufull, &kfull)[..n];
+                let got = chunked(n, l, c.max(l.next_power_of_two()), &u, &k);
+                assert!(
+                    max_abs_diff(&got, want) < 1e-9,
+                    "n={n} c={c} l={l}: {}",
+                    max_abs_diff(&got, want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bitwise_deterministic_for_fixed_chunk_and_warm_workspace() {
+        let mut rng = Rng::new(0xBEEF);
+        let (n, l, c) = (3000usize, 33usize, 512usize);
+        let u = random_signal(n, &mut rng);
+        let k = random_signal(l, &mut rng);
+        let plan = ChunkedConvPlan::with_order(n, l, c, Some(2)).unwrap();
+        let (kre, kim) = plan.filter_spectrum(&k).unwrap();
+        // Cold workspace vs a workspace dirtied by an unrelated pass:
+        // the take() zeroing contract makes the outputs bit-identical.
+        let mut y1 = vec![0.0; n];
+        plan.conv_into(&u, &kre, &kim, &mut y1, &mut ConvWorkspace::new()).unwrap();
+        let mut ws = ConvWorkspace::new();
+        let mut y0 = vec![0.0; n];
+        let unrelated: Vec<f64> = k.repeat(n / l + 1)[..n].to_vec();
+        plan.conv_into(&unrelated, &kre, &kim, &mut y0, &mut ws).unwrap();
+        let mut y2 = vec![0.0; n];
+        plan.conv_into(&u, &kre, &kim, &mut y2, &mut ws).unwrap();
+        for (a, b) in y1.iter().zip(&y2) {
+            assert_eq!(a.to_bits(), b.to_bits(), "warm workspace must not change bits");
+        }
+    }
+
+    #[test]
+    fn emit_slices_cover_exactly_n_and_scratch_returns_between_chunks() {
+        let mut rng = Rng::new(7);
+        let (n, l, c) = (2500usize, 16usize, 1024usize);
+        let u = random_signal(n, &mut rng);
+        let k = random_signal(l, &mut rng);
+        let plan = ChunkedConvPlan::with_order(n, l, c, Some(2)).unwrap();
+        let (kre, kim) = plan.filter_spectrum(&k).unwrap();
+        let mut ws = ConvWorkspace::new();
+        let mut lens = Vec::new();
+        plan.conv_stream(&u, &kre, &kim, &mut ws, |part| {
+            lens.push(part.len());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(lens, vec![1024, 1024, 452]);
+        assert_eq!(plan.num_chunks(), 3);
+        // Everything borrowed went back, and the peak respects the
+        // documented O(C) estimate.
+        let s = ws.stats();
+        assert!(s.peak_bytes <= plan.scratch_bytes(), "{s:?} vs {}", plan.scratch_bytes());
+        // A second pass on the warm workspace allocates nothing.
+        ws.reset();
+        plan.conv_stream(&u, &kre, &kim, &mut ws, |_| Ok(())).unwrap();
+        assert_eq!(ws.stats().allocs, 0, "steady-state chunk stream must be alloc-free");
+    }
+
+    #[test]
+    fn f32_stream_matches_widened_f64_stream_bitwise() {
+        let mut rng = Rng::new(0xF32);
+        let (n, l, c) = (2100usize, 21usize, 512usize);
+        let u32v: Vec<f32> = random_signal(n, &mut rng).iter().map(|&x| x as f32).collect();
+        let u64v: Vec<f64> = u32v.iter().map(|&x| x as f64).collect();
+        let k = random_signal(l, &mut rng);
+        let plan = ChunkedConvPlan::with_order(n, l, c, Some(2)).unwrap();
+        let (kre, kim) = plan.filter_spectrum(&k).unwrap();
+        let mut ws = ConvWorkspace::new();
+        let mut a = Vec::with_capacity(n);
+        plan.conv_stream_f32(&u32v, &kre, &kim, &mut ws, |p| {
+            a.extend_from_slice(p);
+            Ok(())
+        })
+        .unwrap();
+        let mut b = Vec::with_capacity(n);
+        plan.conv_stream(&u64v, &kre, &kim, &mut ws, |p| {
+            b.extend_from_slice(p);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(a.len(), n);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "f32 widening pack must be exact");
+        }
+        assert!(plan.conv_stream_f32(&u32v[..n - 1], &kre, &kim, &mut ws, |_| Ok(())).is_err());
+    }
+
+    #[test]
+    fn emit_error_aborts_the_stream() {
+        let (n, l, c) = (4096usize, 8usize, 1024usize);
+        let u = vec![1.0; n];
+        let k = vec![1.0; l];
+        let plan = ChunkedConvPlan::with_order(n, l, c, Some(2)).unwrap();
+        let (kre, kim) = plan.filter_spectrum(&k).unwrap();
+        let mut calls = 0usize;
+        let err = plan
+            .conv_stream(&u, &kre, &kim, &mut ConvWorkspace::new(), |_| {
+                calls += 1;
+                if calls == 2 {
+                    crate::bail!("sink full")
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("sink full"));
+        assert_eq!(calls, 2, "stream must stop at the failing emit");
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        assert!(ChunkedConvPlan::new(0, 1, 64).is_err());
+        assert!(ChunkedConvPlan::new(100, 65, 64).is_err(), "L > C must be rejected");
+        assert!(ChunkedConvPlan::new(100, 0, 64).is_err());
+        assert!(ChunkedConvPlan::new(100, 1, 100).is_err(), "non-pow2 chunk");
+        let p = ChunkedConvPlan::with_order(100, 4, 64, Some(2)).unwrap();
+        assert!(p.filter_spectrum(&[1.0; 5]).is_err());
+        let (kre, kim) = p.filter_spectrum(&[1.0; 4]).unwrap();
+        let mut ws = ConvWorkspace::new();
+        assert!(p.conv_stream(&[0.0; 99], &kre, &kim, &mut ws, |_| Ok(())).is_err());
+        let mut y = vec![0.0; 99];
+        assert!(p.conv_into(&[0.0; 100], &kre, &kim, &mut y, &mut ws).is_err());
+    }
+
+    #[test]
+    fn pick_chunk_respects_budget_and_filter_floor() {
+        // A budget that only fits the minimum chunk forces it.
+        let tight = pick_chunk(1 << 20, 256, chunk_scratch_bytes(2 * MIN_CHUNK, 1), 1);
+        assert_eq!(tight, Some(MIN_CHUNK));
+        // Any unbounded-budget pick must be a feasible power of two at
+        // or above the floor (the cost prior chooses within that set).
+        let free = pick_chunk(1 << 16, 256, u64::MAX, 1).unwrap();
+        assert!(crate::fft::is_pow2(free) && free >= MIN_CHUNK, "got {free}");
+        // The filter floor wins over MIN_CHUNK.
+        let floored = pick_chunk(1 << 20, 3000, u64::MAX, 1).unwrap();
+        assert!(floored >= 4096);
+        // A bigger budget never picks an infeasible (over-budget) chunk.
+        let budget = chunk_scratch_bytes(2 * (MIN_CHUNK * 4), 1);
+        let c = pick_chunk(1 << 20, 256, budget, 1).unwrap();
+        assert!(chunk_scratch_bytes(2 * c, 1) <= budget);
+        // An impossible budget yields None.
+        assert_eq!(pick_chunk(1 << 20, 256, 64, 1), None);
+    }
+}

@@ -57,7 +57,39 @@
 //! The allocate-internally convenience wrappers (`forward`, `conv_rows`,
 //! …) remain for oracles, examples, and property tests; they are bitwise
 //! identical to the workspace path.
+//!
+//! # Chunked execution (genome-length convs under a fixed budget)
+//!
+//! A monolithic planned conv checks out O(N) scratch, so one 2.3M-point
+//! request dwarfs every other bucket's footprint. [`chunked::ChunkedConvPlan`]
+//! bounds it with classic **overlap-add**: split the length-N causal
+//! conv with an L-tap filter (`L ≤ C`) into `K = ⌈N/C⌉` chunks, convolve
+//! each chunk at FFT size `2C` through the same `conv_rows_into` +
+//! workspace path, and fold each chunk's `L−1`-point linear-conv tail
+//! into the next chunk's head. The contract:
+//!
+//! * **Overlap-add parity** — the concatenated chunk outputs equal the
+//!   monolithic causal conv within accumulation tolerance (different FFT
+//!   sizes round differently); for a *fixed* chunk size the output is
+//!   **bitwise deterministic**, because `ConvWorkspace::take` zeroing
+//!   makes results independent of workspace history.
+//! * **Budget semantics** — peak workspace checkout is O(C), bounded by
+//!   [`chunked::chunk_scratch_bytes`] (a documented upper estimate:
+//!   estimate ≤ budget ⇒ measured peak ≤ budget, enforced by the
+//!   counting-allocator budget test). [`workspace::ConvWorkspace::trim`]
+//!   drops cached buffers above the budget afterwards so one giant
+//!   request cannot pin its scratch forever.
+//! * **When the engine auto-chunks** — `NativeConvEngine` switches a
+//!   causal conv to chunked execution when a `workspace_budget` is
+//!   configured and the monolithic scratch estimate exceeds it (and the
+//!   filter fits a feasible chunk). [`chunked::pick_chunk`] chooses C by
+//!   §3.2 model cost among budget-feasible candidates; the measured
+//!   autotuner ([`tune`]) then picks the Monarch order at that chunk's
+//!   FFT size. Chunk outputs stream to the caller as they complete, so
+//!   the fleet can forward them as wire `ok_chunk` frames without
+//!   buffering the whole reply.
 
+pub mod chunked;
 pub mod gemm;
 pub mod plan;
 pub mod tune;

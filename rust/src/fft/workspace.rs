@@ -205,6 +205,37 @@ impl ConvWorkspace {
         self.allocs = 0;
     }
 
+    /// Release cached buffers until the resident footprint fits
+    /// `budget_bytes`, dropping the **largest free buffers first** (one
+    /// giant request must not pin its oversized scratch forever — the
+    /// chunked-execution engine calls this after every budgeted request).
+    /// Only free-list buffers are droppable; bytes checked out via `take`
+    /// stay live, so the post-trim resident floor is the checked-out
+    /// footprint. Returns the number of bytes released.
+    pub fn trim(&mut self, budget_bytes: u64) -> u64 {
+        let mut released = 0u64;
+        // Walk size classes from the largest down; within a class the
+        // f64 and f32 pools shrink together.
+        let top = self.free.len().max(self.free32.len());
+        for c in (0..top).rev() {
+            while self.resident_bytes > budget_bytes {
+                let popped = if let Some(b) = self.free.get_mut(c).and_then(Vec::pop) {
+                    (b.capacity() * 8) as u64
+                } else if let Some(b) = self.free32.get_mut(c).and_then(Vec::pop) {
+                    (b.capacity() * 4) as u64
+                } else {
+                    break;
+                };
+                self.resident_bytes -= popped;
+                released += popped;
+            }
+            if self.resident_bytes <= budget_bytes {
+                break;
+            }
+        }
+        released
+    }
+
     /// Accounting snapshot.
     pub fn stats(&self) -> WorkspaceStats {
         WorkspaceStats {
@@ -332,6 +363,40 @@ mod tests {
         ws.give_f32(a);
         ws.give_f32(Vec::with_capacity(256)); // foreign f32 adoption
         assert_eq!(ws.stats().resident_bytes, 128 * 4 + 256 * 4);
+    }
+
+    #[test]
+    fn trim_drops_largest_free_buffers_first_and_spares_live_ones() {
+        let mut ws = ConvWorkspace::new();
+        // Cache one small and one giant buffer, plus an f32 sibling.
+        let small = ws.take(64); // 512 B
+        let big = ws.take(1 << 16); // 512 KiB
+        let f32buf = ws.take_f32(1 << 12); // 16 KiB
+        ws.give(big);
+        ws.give_f32(f32buf);
+        // `small` is still checked out: trim must not touch it, and the
+        // giant free buffer goes first.
+        let before = ws.stats().resident_bytes;
+        let released = ws.trim(64 * 8 + (1 << 12) * 4);
+        assert_eq!(released, (1 << 16) * 8);
+        assert_eq!(ws.stats().resident_bytes, before - released);
+        // Under budget now: a second trim is a no-op.
+        assert_eq!(ws.trim(64 * 8 + (1 << 12) * 4), 0);
+        // The giant class is gone, so a giant take re-allocates...
+        ws.reset();
+        let b = ws.take(1 << 16);
+        assert_eq!(ws.stats().allocs, 1, "trimmed class must be cold again");
+        ws.give(b);
+        // ...but the spared f32 buffer still serves without allocating.
+        let f = ws.take_f32(1 << 12);
+        assert_eq!(ws.stats().allocs, 1, "f32 buffer under budget must survive");
+        ws.give_f32(f);
+        ws.give(small);
+        // A zero budget empties every free list; only live bytes remain.
+        let live = ws.take(64);
+        ws.trim(0);
+        assert_eq!(ws.stats().resident_bytes, (live.capacity() * 8) as u64);
+        ws.give(live);
     }
 
     #[test]

@@ -10,8 +10,11 @@
 //! answers every request at the version it arrived in). At v2, `recv`
 //! transparently reassembles streamed `ok_chunk` runs back into one
 //! [`Reply::Ok`] — callers see identical results whether the server
-//! streamed or not; [`IngressClient::recv_raw`] exposes the raw frames
-//! for tests and incremental consumers.
+//! streamed or not; [`IngressClient::recv_chunks`] delivers each chunk
+//! through a callback as its frame lands (O(chunk) client memory for
+//! genome-length replies, the intended consumer for live-streamed
+//! convs); [`IngressClient::recv_raw`] exposes the raw frames for tests
+//! and incremental consumers.
 //!
 //! [`IngressClient::call_retry`] adds the canonical retry loop for the
 //! retryable statuses (`busy`, `shard_died`, `timed_out`) with capped
@@ -105,24 +108,42 @@ impl IngressClient {
         wire::decode_reply(&body).map_err(|e| format_err!(e))
     }
 
-    /// Receive the next *logical* reply in FIFO order, reassembling a
-    /// streamed `ok_chunk` run into one [`Reply::Ok`]. Errors if the
-    /// connection closed, a frame did not decode, or a chunk run is
-    /// torn (id change, non-contiguous `seq`, or EOF before `fin`).
-    pub fn recv(&mut self) -> crate::Result<(u64, Reply)> {
+    /// Receive the next *logical* reply in FIFO order, delivering the
+    /// payload incrementally instead of reassembling it: `on_chunk` is
+    /// called once per data-carrying frame as it arrives (a plain `ok`
+    /// delivers its whole payload in one call; a streamed `ok_chunk` run
+    /// delivers each chunk the moment its frame lands), so client-side
+    /// peak memory for a genome-length reply is one chunk, not the whole
+    /// sequence. Returns the request id and the final reply with its
+    /// `data` drained (empty); for a chunk run the returned epoch is the
+    /// `fin` frame's — the authoritative served epoch. Error replies
+    /// pass through unchanged without invoking the callback. Errors if
+    /// the connection closed, a frame did not decode, a chunk run is
+    /// torn (id change, non-contiguous `seq`, non-chunk frame, or EOF
+    /// before `fin`), or `on_chunk` itself fails — after a mid-run
+    /// callback error the connection's frame position is lost, so treat
+    /// the client as dead.
+    pub fn recv_chunks(
+        &mut self,
+        mut on_chunk: impl FnMut(&[f32]) -> crate::Result<()>,
+    ) -> crate::Result<(u64, Reply)> {
         let (id, first) = self.recv_raw()?;
-        let Reply::OkChunk { epoch, seq, fin, data } = first else {
-            return Ok((id, first));
+        let (mut epoch, seq, mut done, data) = match first {
+            Reply::Ok { epoch, session, data } => {
+                on_chunk(&data)?;
+                return Ok((id, Reply::Ok { epoch, session, data: Vec::new() }));
+            }
+            Reply::OkChunk { epoch, seq, fin, data } => (epoch, seq, fin, data),
+            other => return Ok((id, other)),
         };
         if seq != 0 {
             return Err(format_err!("streamed reply began at seq {seq}, expected 0"));
         }
-        let mut all = data;
-        let mut done = fin;
+        on_chunk(&data)?;
         let mut expect = 1u32;
         while !done {
             let (cid, part) = self.recv_raw()?;
-            let Reply::OkChunk { seq, fin, data, .. } = part else {
+            let Reply::OkChunk { epoch: e, seq, fin, data } = part else {
                 return Err(format_err!("chunk run for request {id} torn by a non-chunk frame"));
             };
             if cid != id {
@@ -135,11 +156,28 @@ impl IngressClient {
                     "chunk run for request {id}: got seq {seq}, expected {expect}"
                 ));
             }
-            all.extend_from_slice(&data);
+            on_chunk(&data)?;
+            epoch = e;
             expect += 1;
             done = fin;
         }
-        Ok((id, Reply::Ok { epoch, session: None, data: all }))
+        Ok((id, Reply::Ok { epoch, session: None, data: Vec::new() }))
+    }
+
+    /// Receive the next *logical* reply in FIFO order, reassembling a
+    /// streamed `ok_chunk` run into one [`Reply::Ok`]. Errors if the
+    /// connection closed, a frame did not decode, or a chunk run is
+    /// torn (id change, non-contiguous `seq`, or EOF before `fin`).
+    pub fn recv(&mut self) -> crate::Result<(u64, Reply)> {
+        let mut all = Vec::new();
+        let (id, reply) = self.recv_chunks(|part| {
+            all.extend_from_slice(part);
+            Ok(())
+        })?;
+        match reply {
+            Reply::Ok { epoch, session, .. } => Ok((id, Reply::Ok { epoch, session, data: all })),
+            other => Ok((id, other)),
+        }
     }
 
     /// Synchronous request/reply round trip.

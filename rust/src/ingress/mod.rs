@@ -81,6 +81,13 @@
 //!   genome-length conv reply crosses the wire in bounded frames; v1
 //!   requesters keep single-frame replies (with a typed `failed` if one
 //!   cannot fit [`wire::MAX_FRAME`]).
+//! * **Live conv streaming.** Conv requests of at least
+//!   [`IngressConfig::stream_conv_threshold_points`] points from v2
+//!   requesters ride a chunk channel straight from the shard: each conv
+//!   chunk becomes `ok_chunk` frames *as it is computed*, so server-side
+//!   peak memory for a genome-length reply is one conv chunk, not the
+//!   whole sequence. Buckets that cannot chunk fall back to the buffered
+//!   run above transparently.
 //! * **Graceful shutdown.** [`IngressServer::shutdown`] stops the
 //!   acceptor, half-closes every connection's read side, and gives
 //!   in-flight replies a grace window to drain before hard-closing —
@@ -152,6 +159,14 @@ pub struct IngressConfig {
     /// Replies with more f32 points than this stream to v2 requesters as
     /// `ok_chunk` runs of at most this many points each.
     pub stream_chunk_points: usize,
+    /// Conv requests of at least this many points from v2 requesters are
+    /// submitted with a live chunk channel: the shard forwards each conv
+    /// chunk as it completes and the writer emits it as an `ok_chunk`
+    /// frame immediately, so a genome-length reply is never buffered
+    /// whole on the server (chunk-incapable buckets fall back to the
+    /// buffered reply transparently). Below the threshold — or at v1 —
+    /// requests take the classic buffered path.
+    pub stream_conv_threshold_points: usize,
     /// How long [`IngressServer::shutdown`] lets in-flight replies drain
     /// before hard-closing stragglers.
     pub drain_grace: Duration,
@@ -169,6 +184,7 @@ impl Default for IngressConfig {
             rate_limit: None,
             conn_byte_budget: None,
             stream_chunk_points: 1 << 16,
+            stream_conv_threshold_points: 1 << 20,
             drain_grace: Duration::from_secs(5),
         }
     }
@@ -214,6 +230,18 @@ enum Pending {
     /// In flight in the fleet; the writer resolves it in FIFO position,
     /// bounded by `deadline` when set.
     Wait { id: u64, version: u8, rx: Receiver<FleetReply>, deadline: Option<Instant> },
+    /// In flight in the fleet with a live chunk channel: the writer
+    /// forwards each conv chunk from `parts` as an `ok_chunk` frame the
+    /// moment it arrives, then resolves `rx` for the final frame. If the
+    /// shard never streamed (chunk-incapable bucket), `parts` disconnects
+    /// without data and the entry degrades to a plain `Wait`.
+    WaitStream {
+        id: u64,
+        version: u8,
+        parts: Receiver<Vec<f32>>,
+        rx: Receiver<FleetReply>,
+        deadline: Option<Instant>,
+    },
     /// A server-originated notice (deadline eviction, quota close): not
     /// correlated to a decoded request, written with id 0 and not
     /// counted in `replies_out`.
@@ -670,11 +698,28 @@ fn handle_request(
             if over_cap() {
                 return;
             }
-            let req = ConvRequest { kind: conv_kind(kind), len: len as usize, streams };
+            // Genome-length v2 requests ride a live chunk channel so the
+            // reply streams out as the shard computes it; if the routed
+            // bucket can't chunk, the channel disconnects empty and the
+            // writer degrades to the buffered path.
+            let stream_live =
+                version >= 2 && len as usize >= inner.cfg.stream_conv_threshold_points;
+            let (chunk_tx, parts) = if stream_live {
+                let (tx, rx) = std::sync::mpsc::channel();
+                (Some(tx), Some(rx))
+            } else {
+                (None, None)
+            };
+            let req = ConvRequest { kind: conv_kind(kind), len: len as usize, streams, chunk_tx };
             match conv.fleet().submit(req) {
                 Ok(rx) => {
                     inflight.fetch_add(1, Ordering::Relaxed);
-                    queue.push(Pending::Wait { id, version, rx, deadline });
+                    match parts {
+                        Some(parts) => {
+                            queue.push(Pending::WaitStream { id, version, parts, rx, deadline });
+                        }
+                        None => queue.push(Pending::Wait { id, version, rx, deadline }),
+                    }
                     return;
                 }
                 Err(e) => fleet_reply(e, &inner.stats),
@@ -861,6 +906,125 @@ fn emit_reply(
     w.flush()
 }
 
+/// Resolve a live-streamed conv slot: forward each chunk from the shard
+/// as `ok_chunk` frames the moment it arrives (split at the configured
+/// chunk size, flushed per frame), then resolve the fleet receiver for
+/// the closing frame. Three endings:
+///
+/// * shard streamed, final reply `ok` (empty data by the worker
+///   contract) — a `fin` chunk closes the run;
+/// * shard never streamed (chunk-incapable bucket) — zero frames were
+///   written, so the buffered [`emit_reply`] path delivers the reply
+///   unchanged;
+/// * failure after streamed frames — the typed error frame tears the
+///   run, which clients observe as a hard (retryable) protocol error
+///   rather than a hang.
+#[allow(clippy::too_many_arguments)]
+fn resolve_wait_stream(
+    stream: &mut TcpStream,
+    id: u64,
+    version: u8,
+    parts: Receiver<Vec<f32>>,
+    rx: Receiver<FleetReply>,
+    deadline: Option<Instant>,
+    inner: &Inner,
+    watermark: &mut u64,
+    broken: &mut bool,
+    read_half: &Option<TcpStream>,
+    inflight: &AtomicUsize,
+) {
+    let mut frames = 0u32;
+    if !*broken {
+        let chunk = inner.cfg.stream_chunk_points.clamp(1, MAX_CHUNK_POINTS);
+        'parts: loop {
+            let part = match deadline {
+                None => match parts.recv() {
+                    Ok(p) => p,
+                    Err(_) => break 'parts,
+                },
+                Some(d) => {
+                    let rem = d.saturating_duration_since(Instant::now());
+                    if rem.is_zero() {
+                        // Past the reply deadline: stop forwarding; the
+                        // final resolve below answers `timed_out`.
+                        break 'parts;
+                    }
+                    match parts.recv_timeout(rem) {
+                        Ok(p) => p,
+                        Err(RecvTimeoutError::Timeout) => continue 'parts,
+                        Err(RecvTimeoutError::Disconnected) => break 'parts,
+                    }
+                }
+            };
+            let mut off = 0usize;
+            while off < part.len() {
+                let end = (off + chunk).min(part.len());
+                let frame = Reply::OkChunk {
+                    epoch: *watermark,
+                    seq: frames,
+                    fin: false,
+                    data: part[off..end].to_vec(),
+                };
+                if let Err(e) = stream
+                    .write_all(&wire::encode_reply_v(id, &frame, version))
+                    .and_then(|()| stream.flush())
+                {
+                    if is_timeout(&e) {
+                        inner.stats.write_timeouts.fetch_add(1, Ordering::Relaxed);
+                    }
+                    *broken = true;
+                    if let Some(r) = read_half {
+                        let _ = r.shutdown(Shutdown::Both);
+                    }
+                    break 'parts;
+                }
+                inner.stats.chunks_out.fetch_add(1, Ordering::Relaxed);
+                frames += 1;
+                off = end;
+            }
+        }
+    }
+    // Dropping the receiver turns any remaining shard sends into no-ops.
+    drop(parts);
+    let mut reply = resolve_wait(rx, deadline, &inner.stats);
+    inflight.fetch_sub(1, Ordering::Relaxed);
+    if *broken {
+        return;
+    }
+    if let Reply::Ok { epoch, .. } = &mut reply {
+        *watermark = (*watermark).max(*epoch);
+        *epoch = *watermark;
+    }
+    let outcome = if frames == 0 {
+        emit_reply(stream, id, version, &reply, inner)
+    } else {
+        let fin = match reply {
+            Reply::Ok { epoch, data, .. } => {
+                inner.stats.chunks_out.fetch_add(1, Ordering::Relaxed);
+                Reply::OkChunk { epoch, seq: frames, fin: true, data }
+            }
+            other => other,
+        };
+        stream
+            .write_all(&wire::encode_reply_v(id, &fin, version))
+            .and_then(|()| stream.flush())
+    };
+    match outcome {
+        Ok(()) => {
+            inner.stats.replies_out.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(e) => {
+            if is_timeout(&e) {
+                inner.stats.write_timeouts.fetch_add(1, Ordering::Relaxed);
+            }
+            *broken = true;
+            if let Some(r) = read_half {
+                let _ = r.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
 /// Writer side of one connection: resolve the FIFO queue in order under
 /// the reply deadline, ratchet the served-epoch watermark, encode
 /// (chunking large v2 replies), write under the write deadline. On a
@@ -890,6 +1054,22 @@ fn write_loop(
                 let reply = resolve_wait(rx, deadline, &inner.stats);
                 inflight.fetch_sub(1, Ordering::Relaxed);
                 (id, version, reply, true)
+            }
+            Pending::WaitStream { id, version, parts, rx, deadline } => {
+                resolve_wait_stream(
+                    &mut stream,
+                    id,
+                    version,
+                    parts,
+                    rx,
+                    deadline,
+                    inner,
+                    &mut watermark,
+                    &mut broken,
+                    &read_half,
+                    inflight,
+                );
+                continue
             }
         };
         if broken {

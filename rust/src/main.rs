@@ -14,7 +14,8 @@
 //!                                            # --listen puts it behind the TCP ingress
 //!                           [--idle-ms N] [--frame-ms N] [--write-ms N] [--reply-ms N]
 //!                           [--rate R --burst B] [--conn-inflight N] [--byte-budget B]
-//!                           [--stream-chunk P] [--max-conns N] [--grace-ms N]
+//!                           [--stream-chunk P] [--stream-conv-threshold P]
+//!                           [--max-conns N] [--grace-ms N]
 //!                                            # ingress deadlines/quotas (0 disables);
 //!                                            # --requests 0 serves until stdin EOF,
 //!                                            # then drains gracefully
@@ -369,6 +370,8 @@ fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
                 b => Some(b as u64),
             },
             stream_chunk_points: args.get_usize("stream-chunk", d.stream_chunk_points)?,
+            stream_conv_threshold_points: args
+                .get_usize("stream-conv-threshold", d.stream_conv_threshold_points)?,
             drain_grace: ms(args.get_usize("grace-ms", d.drain_grace.as_millis() as usize)?),
         }
     };
@@ -389,7 +392,7 @@ fn cmd_serve(dir: &str, args: &Args) -> flashfftconv::Result<()> {
     let mut pending = vec![];
     for _ in 0..requests {
         let u = rng.normal_vec(heads * len);
-        let req = ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] };
+        let req = ConvRequest { kind: ConvKind::Forward, len, streams: vec![u], chunk_tx: None };
         // Bounded admission can push back; block until the fleet admits.
         match service.fleet().submit_blocking(req) {
             Ok(rx) => pending.push(rx),

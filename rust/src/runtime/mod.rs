@@ -51,6 +51,23 @@ pub use tensor::HostTensor;
 pub trait Engine {
     fn execute(&mut self, args: &[&HostTensor]) -> crate::Result<Vec<HostTensor>>;
 
+    /// Streaming variant of [`Engine::execute`] for engines that can
+    /// produce their (single) output incrementally without materializing
+    /// it: `sink` is called with consecutive row-major slices whose
+    /// concatenation is exactly the flattened output tensor. Returns
+    /// `Ok(Some(points))` (total f32 points streamed) when the engine
+    /// streamed, `Ok(None)` when this engine/request does not stream —
+    /// the caller falls back to [`Engine::execute`]. A sink error aborts
+    /// the stream and propagates.
+    fn execute_chunked(
+        &mut self,
+        args: &[&HostTensor],
+        sink: &mut dyn FnMut(&[f32]) -> crate::Result<()>,
+    ) -> crate::Result<Option<usize>> {
+        let _ = (args, sink);
+        Ok(None)
+    }
+
     /// Merged scratch-workspace accounting for engines that execute the
     /// zero-alloc planned hot path (`fft::workspace`); `None` for engines
     /// without reusable scratch. Serving workers surface this per shard.
@@ -119,6 +136,14 @@ pub enum BackendConfig {
     /// [`BackendConfig::Native`] so exhaustive per-bucket tests stay
     /// fast.
     NativeLongForward(usize),
+    /// The native backend extended with one batch-1, single-head
+    /// genome-length `conv_causal` bucket: sequence length `n` against a
+    /// `filter_len`-tap partial filter, executed through the chunked
+    /// overlap-add path whenever the monolithic plan's scratch estimate
+    /// exceeds `budget_bytes` (see `fft::chunked`). Chunk outputs stream
+    /// through [`Engine::execute_chunked`] so the fleet forwards them as
+    /// wire `ok_chunk` frames without buffering the whole reply.
+    NativeLongConv { n: usize, filter_len: usize, budget_bytes: u64 },
     /// The native backend with every conv artifact opted into the
     /// reduced-precision f32 serving tier (`meta precision f32`). The
     /// hint is honoured by dense Monarch conv engines — whole-pipeline
@@ -140,6 +165,9 @@ impl BackendConfig {
             BackendConfig::Native => Runtime::native(),
             BackendConfig::NativeRowThreads(t) => Runtime::native_row_threads(*t),
             BackendConfig::NativeLongForward(n) => Runtime::native_long_forward(*n),
+            BackendConfig::NativeLongConv { n, filter_len, budget_bytes } => {
+                Runtime::native_long_conv(*n, *filter_len, *budget_bytes)
+            }
             BackendConfig::NativeConvF32 => Runtime::native_conv_f32(),
             BackendConfig::Auto(dir) => Runtime::new(dir),
             #[cfg(feature = "pjrt")]
@@ -202,6 +230,19 @@ impl Runtime {
     /// [`native::long_forward_fleet_parts`]).
     pub fn native_long_forward(n: usize) -> crate::Result<Self> {
         let (text, files) = native::long_forward_fleet_parts(n);
+        Self::native_from(&text, files)
+    }
+
+    /// The native runtime plus one batch-1, single-head genome-length
+    /// `conv_causal` bucket: length `n` against a `filter_len`-tap
+    /// partial filter under a `budget_bytes` workspace budget (see
+    /// [`native::long_conv_fleet_parts`] and `fft::chunked`).
+    pub fn native_long_conv(
+        n: usize,
+        filter_len: usize,
+        budget_bytes: u64,
+    ) -> crate::Result<Self> {
+        let (text, files) = native::long_conv_fleet_parts(n, filter_len, budget_bytes);
         Self::native_from(&text, files)
     }
 
@@ -393,6 +434,50 @@ impl Artifact {
     /// Execute with host tensors (validated against the manifest signature).
     pub fn call(&mut self, runtime_inputs: &[HostTensor]) -> crate::Result<Vec<HostTensor>> {
         self.execute(runtime_inputs)
+    }
+
+    /// Streaming execute: forward consecutive row-major slices of the
+    /// single output to `sink` as the engine produces them (see
+    /// [`Engine::execute_chunked`]). Returns `Ok(true)` when the engine
+    /// streamed — the slices' total length is checked against the
+    /// manifest output element count — and `Ok(false)` when it does not
+    /// support streaming for this request (fall back to
+    /// [`Artifact::call`]; the sink has then seen nothing).
+    pub fn call_chunked(
+        &mut self,
+        runtime_inputs: &[HostTensor],
+        sink: &mut dyn FnMut(&[f32]) -> crate::Result<()>,
+    ) -> crate::Result<bool> {
+        self.validate(runtime_inputs)?;
+        let mut rt = runtime_inputs.iter();
+        let mut args: Vec<&HostTensor> = Vec::with_capacity(self.fixed.len());
+        for slot in &self.fixed {
+            match slot {
+                Some(t) => args.push(t),
+                None => args.push(rt.next().expect("validated arity")),
+            }
+        }
+        match self.engine.execute_chunked(&args, sink)? {
+            None => Ok(false),
+            Some(points) => {
+                self.calls += 1;
+                if self.spec.outputs.len() != 1 {
+                    bail!(
+                        "artifact {} streamed {} outputs; chunked calls require exactly one",
+                        self.spec.name,
+                        self.spec.outputs.len()
+                    );
+                }
+                let want: usize = self.spec.outputs[0].shape.iter().product();
+                if points != want {
+                    bail!(
+                        "artifact {} streamed {points} points, manifest output holds {want}",
+                        self.spec.name
+                    );
+                }
+                Ok(true)
+            }
+        }
     }
 
     /// Execute and round-trip training state: the first `n_state` outputs

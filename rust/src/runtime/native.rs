@@ -221,6 +221,19 @@ struct NativeConvEngine {
     /// Planned executor for the block-sparse Monarch path: full-length
     /// complex plan whose inverse skips the zeroed blocks.
     cplan: Option<Arc<crate::fft::plan::FftPlan>>,
+    /// Chunked overlap-add executor (`fft::chunked`): present when a
+    /// `meta workspace_budget` is set on a causal dense-Monarch bucket
+    /// and the monolithic plan's scratch estimate would exceed it (or
+    /// `seq_len` is not a power of two, which only the chunked path
+    /// supports). When present it takes precedence over every other
+    /// plan, and execution streams chunk-by-chunk in O(chunk) scratch.
+    chunked: Option<Arc<crate::fft::chunked::ChunkedConvPlan>>,
+    /// Filter taps per head (`meta filter_len`, default `seq_len`): the
+    /// partial-conv structure the chunked path exploits (L ≤ C).
+    filter_len: usize,
+    /// Workspace byte budget (`meta workspace_budget`): the engine trims
+    /// its workspace back under this after every chunked request.
+    budget: Option<u64>,
     /// Frequency-sparsity block pattern over the (n1, n2) layout grid
     /// (`sparse_*` variants); the engine skips the zeroed blocks.
     sparse: Option<SparsityPattern>,
@@ -276,33 +289,110 @@ impl NativeConvEngine {
             other => bail!("unknown conv variant {other:?} for {}", spec.name),
         };
         let n = need_meta(spec, "seq_len")?;
-        if !fft::is_pow2(n) {
-            bail!("conv artifact {}: seq_len {n} must be a power of two", spec.name);
-        }
         let b = need_meta(spec, "batch")?;
         let h = need_meta(spec, "heads")?;
+        let filter_len = match spec.meta_usize("filter_len") {
+            Some(l) if (1..=n).contains(&l) => l,
+            Some(l) => bail!(
+                "conv artifact {}: filter_len {l} must be in 1..={n}",
+                spec.name
+            ),
+            None => n,
+        };
+        let budget = spec.meta_usize("workspace_budget").map(|v| v as u64);
         let fft_len = if op == ConvOp::Causal { 2 * n } else { n };
-        let fs = fft::try_monarch_factors(fft_len, 2)?;
-        let (n1, n2) = (fs[0], fs[1]);
-        let sparse = match (spec.meta_usize("keep_rows"), spec.meta_usize("keep_cols")) {
+        let pinned_order = match spec.meta_usize("order") {
+            Some(o) if (2..=costmodel::MAX_NATIVE_ORDER).contains(&o) => Some(o),
+            Some(o) => bail!(
+                "conv artifact {}: order {o} has no native dispatch (orders 2..={})",
+                spec.name,
+                costmodel::MAX_NATIVE_ORDER
+            ),
+            None => None,
+        };
+        let keep = (spec.meta_usize("keep_rows"), spec.meta_usize("keep_cols"));
+        // Budgeted dispatch: a causal dense-Monarch bucket with a
+        // workspace budget runs the chunked overlap-add path whenever the
+        // monolithic plan's scratch estimate would blow the budget — or
+        // whenever seq_len is not a power of two, which only the chunked
+        // path supports (the monolithic Monarch factorization needs a
+        // pow-2 length; the per-chunk FFTs always run at pow-2 sizes).
+        let chunk_eligible =
+            op == ConvOp::Causal && path == ConvPath::Monarch && keep.0.is_none();
+        let need_chunk = match budget {
+            Some(bud) => {
+                let mono = fft::chunked::chunk_scratch_bytes(
+                    (2 * n).next_power_of_two(),
+                    b * h,
+                );
+                chunk_eligible && (!fft::is_pow2(n) || mono > bud)
+            }
+            None => false,
+        };
+        if !need_chunk && !fft::is_pow2(n) {
+            bail!(
+                "conv artifact {}: seq_len {n} must be a power of two (only causal \
+                 monarch buckets with a `meta workspace_budget` may chunk)",
+                spec.name
+            );
+        }
+        let chunked = if need_chunk {
+            let bud = budget.expect("need_chunk implies a budget");
+            let chunk = match spec.meta_usize("chunk") {
+                Some(c) => c,
+                None => fft::chunked::pick_chunk(n, filter_len, bud, 1).ok_or_else(
+                    || {
+                        crate::format_err!(
+                            "conv artifact {}: no chunk size fits workspace budget {bud} \
+                             (need >= {} bytes for the minimum chunk)",
+                            spec.name,
+                            fft::chunked::chunk_scratch_bytes(
+                                2 * fft::chunked::MIN_CHUNK
+                                    .max(filter_len.next_power_of_two()),
+                                1,
+                            )
+                        )
+                    },
+                )?,
+            };
+            // The Monarch order at the *chunk* FFT size comes from the
+            // measured autotuner unless the manifest pinned one; the
+            // tune cache is process-wide, so every engine built for this
+            // bucket picks the same order (bitwise-stable replies).
+            Some(Arc::new(fft::chunked::ChunkedConvPlan::with_order(
+                n,
+                filter_len,
+                chunk,
+                pinned_order,
+            )?))
+        } else {
+            None
+        };
+        // Monolithic plan layout: skipped entirely when chunking — the
+        // factorization/order dispatch below would build (and autotune) a
+        // genome-length plan, the exact thing the budget forbids.
+        let (n1, n2) = if need_chunk {
+            (0, 0)
+        } else {
+            let fs = fft::try_monarch_factors(fft_len, 2)?;
+            (fs[0], fs[1])
+        };
+        let sparse = match keep {
             (Some(kr), Some(kc)) => Some(SparsityPattern::new(n1, n2, kr, kc)?),
             _ => None,
         };
-        let order = match spec.meta_usize("order") {
+        let order = match pinned_order {
             // Block patterns live on the order-2 layout grid, so sparse
             // artifacts stay there regardless of the cost-model choice.
             None if sparse.is_some() => 2,
             // Unpinned artifacts go through the autotuner: the §3.2 cost
             // model proposes, a one-shot measurement (cached per shape
             // class, `FFC_PLAN_TUNE=model` to pin the analytic choice)
-            // disposes.
-            None => fft::tune::tuned_order(fft_len, b * h),
-            Some(o) if (2..=costmodel::MAX_NATIVE_ORDER).contains(&o) => o,
-            Some(o) => bail!(
-                "conv artifact {}: order {o} has no native dispatch (orders 2..={})",
-                spec.name,
-                costmodel::MAX_NATIVE_ORDER
-            ),
+            // disposes. Chunked buckets skip this — their order dispatch
+            // happened above at the chunk FFT size.
+            None if chunked.is_none() => fft::tune::tuned_order(fft_len, b * h),
+            None => 2,
+            Some(o) => o,
         };
         if sparse.is_some() && order != 2 {
             bail!("sparse conv {}: block patterns require the order-2 layout", spec.name);
@@ -311,8 +401,10 @@ impl NativeConvEngine {
         // shape via the process-wide registry): the dense Monarch path
         // rides the r2c half-spectrum plan at the dispatched order; sparse
         // patterns live on the order-2 layout grid and use the full-length
-        // complex plan, whose inverse skips the zeroed blocks.
+        // complex plan, whose inverse skips the zeroed blocks. Chunked
+        // buckets build neither — their only plan is the per-chunk one.
         let (rplan, cplan) = match (path, &sparse) {
+            _ if chunked.is_some() => (None, None),
             (ConvPath::Monarch, None) => {
                 (Some(fft::plan::real_plan(fft_len, order)?), None)
             }
@@ -349,7 +441,7 @@ impl NativeConvEngine {
         } else {
             (0, 0)
         };
-        let idx_k = require_input(spec, "k", F32, &[h, n])?;
+        let idx_k = require_input(spec, "k", F32, &[h, filter_len])?;
         let idx_tw = match (input_index(spec, "tw_re"), input_index(spec, "tw_im")) {
             (Some(_), Some(_)) => Some((
                 require_input(spec, "tw_re", F32, &[n1, n2])?,
@@ -357,6 +449,13 @@ impl NativeConvEngine {
             )),
             _ => None,
         };
+        if chunked.is_some() && idx_tw.is_some() {
+            bail!(
+                "conv artifact {}: chunked buckets have no monolithic (n1, n2) grid, \
+                 so twiddle operands cannot be declared",
+                spec.name
+            );
+        }
         let tw_expect = if idx_tw.is_some() {
             twiddle_grid(n1, n2, fft_len)
         } else {
@@ -372,6 +471,9 @@ impl NativeConvEngine {
             rplan,
             rplan32,
             cplan,
+            chunked,
+            filter_len,
+            budget,
             sparse,
             threads,
             workspaces: vec![],
@@ -426,18 +528,33 @@ impl NativeConvEngine {
     /// half-spectrum planes via one batched r2c. Sparse planned path:
     /// Monarch-layout planes with everything outside the kept block
     /// zeroed. Baseline: per-head radix-2 spectra.
-    fn refresh_filter_cache(&mut self, k: &[f32]) {
+    fn refresh_filter_cache(&mut self, k: &[f32]) -> crate::Result<()> {
         if self.cached_k.as_slice() == k {
-            return;
+            return Ok(());
         }
-        let (h, n) = (self.h, self.n);
-        let m = if self.op == ConvOp::Causal { 2 * n } else { n };
-        if let Some(rp32) = self.rplan32.clone() {
+        let (h, lk) = (self.h, self.filter_len);
+        let m = if self.op == ConvOp::Causal { 2 * self.n } else { self.n };
+        if let Some(cp) = self.chunked.clone() {
+            // Chunked path: per-head half spectra at the *chunk* FFT
+            // size, stored as (h, bins) planes like the dense path.
+            let bins = cp.inner().bins();
+            let mut kre = vec![0.0f64; h * bins];
+            let mut kim = vec![0.0f64; h * bins];
+            for hi in 0..h {
+                let krow: Vec<f64> =
+                    k[hi * lk..(hi + 1) * lk].iter().map(|&v| v as f64).collect();
+                let (re, im) = cp.filter_spectrum(&krow)?;
+                kre[hi * bins..(hi + 1) * bins].copy_from_slice(&re);
+                kim[hi * bins..(hi + 1) * bins].copy_from_slice(&im);
+            }
+            self.kspec_re = kre;
+            self.kspec_im = kim;
+        } else if let Some(rp32) = self.rplan32.clone() {
             // Reduced-precision tier: the filter bank is already f32, so
             // pad-and-transform stays entirely in single precision.
             let mut kp = vec![0.0f32; h * m];
             for hi in 0..h {
-                kp[hi * m..hi * m + n].copy_from_slice(&k[hi * n..(hi + 1) * n]);
+                kp[hi * m..hi * m + lk].copy_from_slice(&k[hi * lk..(hi + 1) * lk]);
             }
             let (kre, kim) = rp32.rfft_rows(&kp, h);
             self.kspec32_re = kre;
@@ -445,8 +562,8 @@ impl NativeConvEngine {
         } else if let Some(rp) = self.rplan.clone() {
             let mut kp = vec![0.0f64; h * m];
             for hi in 0..h {
-                for t in 0..n {
-                    kp[hi * m + t] = k[hi * n + t] as f64;
+                for t in 0..lk {
+                    kp[hi * m + t] = k[hi * lk + t] as f64;
                 }
             }
             let (kre, kim) = rp.rfft_rows(&kp, h);
@@ -456,8 +573,8 @@ impl NativeConvEngine {
             let mut kre = vec![0.0f64; h * m];
             let mut kim = vec![0.0f64; h * m];
             for hi in 0..h {
-                for t in 0..n {
-                    kre[hi * m + t] = k[hi * n + t] as f64;
+                for t in 0..lk {
+                    kre[hi * m + t] = k[hi * lk + t] as f64;
                 }
             }
             cp.forward(&mut kre, &mut kim, h);
@@ -479,13 +596,64 @@ impl NativeConvEngine {
             let specs: Vec<Vec<Cpx>> = (0..h)
                 .map(|hi| {
                     let krow: Vec<f64> =
-                        k[hi * n..(hi + 1) * n].iter().map(|&v| v as f64).collect();
+                        k[hi * lk..(hi + 1) * lk].iter().map(|&v| v as f64).collect();
                     self.filter_spectrum(&krow)
                 })
                 .collect();
             self.cached_specs = specs;
         }
         self.cached_k = k.to_vec();
+        Ok(())
+    }
+
+    /// Chunked overlap-add execution: stream every `(batch, head)` row
+    /// through the chunk plan in order, emitting each chunk's f32 output
+    /// slice as it completes. Scratch is borrowed from one persistent
+    /// workspace (peak O(chunk), independent of `seq_len`), the f32→f64
+    /// widening happens per chunk inside the plan (no length-N copy ever
+    /// exists), and the workspace is trimmed back under the budget
+    /// afterwards so one genome-length request cannot pin oversized
+    /// buffers. Returns the total f32 points emitted (`b · h · n`).
+    fn run_chunked(
+        &mut self,
+        u: &[f32],
+        k: &[f32],
+        emit: &mut dyn FnMut(&[f32]) -> crate::Result<()>,
+    ) -> crate::Result<usize> {
+        self.refresh_filter_cache(k)?;
+        let cp = self.chunked.clone().expect("run_chunked without a chunked plan");
+        let (h, n) = (self.h, self.n);
+        let bins = cp.inner().bins();
+        if self.workspaces.is_empty() {
+            self.workspaces.push(ConvWorkspace::new());
+        }
+        let ws = &mut self.workspaces[0];
+        // One chunk-sized f32 staging buffer for the f64→f32 narrowing
+        // before each emit — borrowed, so steady state stays alloc-free.
+        let mut stage = ws.take_f32(cp.chunk());
+        let mut total = 0usize;
+        let mut result = Ok(());
+        for row in 0..self.b * h {
+            let hi = row % h;
+            let kre = &self.kspec_re[hi * bins..(hi + 1) * bins];
+            let kim = &self.kspec_im[hi * bins..(hi + 1) * bins];
+            result = cp.conv_stream_f32(&u[row * n..(row + 1) * n], kre, kim, ws, |part| {
+                for (d, &s) in stage.iter_mut().zip(part) {
+                    *d = s as f32;
+                }
+                total += part.len();
+                emit(&stage[..part.len()])
+            });
+            if result.is_err() {
+                break;
+            }
+        }
+        ws.give_f32(stage);
+        if let Some(bud) = self.budget {
+            ws.trim(bud);
+        }
+        result?;
+        Ok(total)
     }
 }
 
@@ -517,7 +685,18 @@ impl Engine for NativeConvEngine {
             }
         }
         // Filter spectra, cached across calls for a static bank.
-        self.refresh_filter_cache(k);
+        self.refresh_filter_cache(k)?;
+        // Chunked buckets stream through the overlap-add path and
+        // materialize here; `execute_chunked` shares the same row loop,
+        // so streamed and materialized results agree bitwise.
+        if self.chunked.is_some() {
+            let mut out = Vec::with_capacity(b * h * n);
+            self.run_chunked(u, k, &mut |part| {
+                out.extend_from_slice(part);
+                Ok(())
+            })?;
+            return Ok(vec![HostTensor::f32(out, &[b, h, n])]);
+        }
         // Fan the (batch, head) rows across the worker pool in contiguous
         // row *blocks*: each worker pushes its whole block through the
         // batched plan, so every precomputed stage matrix is amortized
@@ -687,6 +866,19 @@ impl Engine for NativeConvEngine {
         let out_blocks: Vec<Vec<f32>> = parallel_map_ctx(blocks, &mut wss[..nblocks], run_block);
         self.workspaces = wss;
         Ok(vec![HostTensor::f32(out_blocks.concat(), &[b, h, n])])
+    }
+
+    fn execute_chunked(
+        &mut self,
+        args: &[&HostTensor],
+        sink: &mut dyn FnMut(&[f32]) -> crate::Result<()>,
+    ) -> crate::Result<Option<usize>> {
+        if self.chunked.is_none() {
+            return Ok(None);
+        }
+        let u = args[self.idx_u].as_f32();
+        let k = args[self.idx_k].as_f32();
+        Ok(Some(self.run_chunked(u, k, sink)?))
     }
 
     fn workspace_stats(&self) -> Option<WorkspaceStats> {
@@ -1531,6 +1723,28 @@ impl FleetBuilder {
         self.text.push_str("end\n");
     }
 
+    /// One batch-1, single-head genome-length `conv_causal` bucket with a
+    /// `filter_len`-tap partial filter and a workspace budget: the engine
+    /// auto-selects the chunked overlap-add path (see `fft::chunked`)
+    /// whenever the monolithic scratch estimate exceeds the budget, which
+    /// also lifts the pow-2 `seq_len` requirement. No twiddle operands
+    /// (there is no monolithic (n1, n2) grid to verify) and no golden
+    /// (an O(N log N) oracle replay at genome length would dominate
+    /// startup); parity is covered by the chunked-vs-monolithic tests.
+    fn conv_long(&mut self, n: usize, filter_len: usize, budget_bytes: u64) {
+        let name = format!("conv_causal_long_n{n}");
+        self.text.push_str(&format!(
+            "artifact {name}\nhlo {name}.hlo.txt\nmeta group conv\n\
+             meta kind conv_causal\nmeta variant monarch\nmeta seq_len {n}\n\
+             meta batch 1\nmeta heads 1\nmeta filter_len {filter_len}\n\
+             meta workspace_budget {budget_bytes}\n"
+        ));
+        self.text.push_str(&format!("input u f32 1,1,{n} runtime\n"));
+        self.text.push_str(&format!("input k f32 1,{filter_len} runtime\n"));
+        self.text.push_str(&format!("output y f32 1,1,{n}\n"));
+        self.text.push_str("end\n");
+    }
+
     /// Shared param-fixture writer for train/eval artifacts. Returns the
     /// manifest `input` lines for the four param/state operands.
     fn lm_fixture(
@@ -1929,6 +2143,24 @@ pub fn long_forward_fleet_parts(n: usize) -> (String, BTreeMap<String, Vec<u8>>)
     (fb.text, fb.files)
 }
 
+/// The default fleet extended with one batch-1, single-head genome-length
+/// `conv_causal` bucket: `seq_len = n` (any length ≥ 1 — chunked
+/// execution lifts the pow-2 requirement) against a `filter_len`-tap
+/// partial filter under a `budget_bytes` workspace budget. The engine
+/// streams chunk outputs through [`crate::runtime::Engine::execute_chunked`],
+/// so the fleet can forward them as wire `ok_chunk` frames as they
+/// complete instead of buffering a whole genome-length reply.
+pub fn long_conv_fleet_parts(
+    n: usize,
+    filter_len: usize,
+    budget_bytes: u64,
+) -> (String, BTreeMap<String, Vec<u8>>) {
+    let (text, files) = default_fleet_parts();
+    let mut fb = FleetBuilder { text, files };
+    fb.conv_long(n, filter_len, budget_bytes);
+    (fb.text, fb.files)
+}
+
 fn build_default_fleet() -> (String, BTreeMap<String, Vec<u8>>) {
     let mut fb = FleetBuilder::new();
     for variant in ["monarch", "baseline"] {
@@ -2281,6 +2513,82 @@ mod tests {
         let backend = NativeBackend::with_default_fleet().unwrap();
         let err = backend.file_bytes("nope.fix").unwrap_err();
         assert!(format!("{err:#}").contains("not present"));
+    }
+
+    #[test]
+    fn long_conv_bucket_chunks_and_matches_the_monolithic_oracle() {
+        // Non-pow2 genome-ish length: only the chunked path can serve it,
+        // and the budget forces chunking regardless.
+        let (n, lk) = (50_000usize, 129usize);
+        let budget = fft::chunked::chunk_scratch_bytes(2 * 4096, 1);
+        let rt = crate::runtime::Runtime::native_long_conv(n, lk, budget).unwrap();
+        let mut art = rt.load(&format!("conv_causal_long_n{n}")).unwrap();
+        let mut rng = Rng::new(0xD9A);
+        let u = rng.normal_vec(n);
+        let k = rng.normal_vec(lk);
+        let tu = HostTensor::f32(u.clone(), &[1, 1, n]);
+        let tk = HostTensor::f32(k.clone(), &[1, lk]);
+        let outs = art.call(&[tu.clone(), tk.clone()]).unwrap();
+        let y = outs[0].as_f32();
+        assert_eq!(outs[0].shape, vec![1, 1, n]);
+        // Oracle: monolithic radix-2 causal conv in f64.
+        let urow: Vec<f64> = u.iter().map(|&x| x as f64).collect();
+        let mut krow: Vec<f64> = k.iter().map(|&x| x as f64).collect();
+        krow.resize(n, 0.0);
+        let want = fft::causal_conv(&urow, &krow);
+        for t in (0..n).step_by(997) {
+            assert!(
+                (y[t] as f64 - want[t]).abs() < 1e-3,
+                "t {t}: {} vs {}",
+                y[t],
+                want[t]
+            );
+        }
+        // The budget is respected at peak, not just at rest, and the
+        // post-request trim keeps the resident set under it too.
+        let s = art.workspace_stats().unwrap();
+        assert!(s.peak_bytes <= budget, "peak {} > budget {budget}", s.peak_bytes);
+        assert!(s.resident_bytes <= budget, "resident {} > budget {budget}", s.resident_bytes);
+        // Streamed execution is the same row loop: bitwise equal, and
+        // chunk slices cover exactly the output.
+        let mut streamed = Vec::with_capacity(n);
+        let mut parts = 0usize;
+        let ok = art
+            .call_chunked(&[tu, tk], &mut |part| {
+                streamed.extend_from_slice(part);
+                parts += 1;
+                Ok(())
+            })
+            .unwrap();
+        assert!(ok, "a budgeted long-conv bucket must stream");
+        assert!(parts > 1, "expected multiple chunks, got {parts}");
+        assert_eq!(streamed.len(), n);
+        for (a, b) in streamed.iter().zip(y) {
+            assert_eq!(a.to_bits(), b.to_bits(), "streamed vs materialized");
+        }
+    }
+
+    #[test]
+    fn long_conv_bucket_rejects_an_impossible_budget() {
+        let rt = crate::runtime::Runtime::native_long_conv(1 << 20, 64, 64).unwrap();
+        let err = rt.load("conv_causal_long_n1048576").unwrap_err();
+        assert!(format!("{err:#}").contains("workspace budget"), "{err:#}");
+    }
+
+    #[test]
+    fn short_conv_buckets_never_chunk() {
+        // A budget large enough for the monolithic plan leaves the
+        // monolithic path in place — no streaming, pow-2 still required.
+        let (n, lk) = (1024usize, 32usize);
+        let budget = 1u64 << 40;
+        let rt = crate::runtime::Runtime::native_long_conv(n, lk, budget).unwrap();
+        let mut art = rt.load("conv_causal_long_n1024").unwrap();
+        let mut rng = Rng::new(0x5C);
+        let tu = HostTensor::f32(rng.normal_vec(n), &[1, 1, n]);
+        let tk = HostTensor::f32(rng.normal_vec(lk), &[1, lk]);
+        let ok = art.call_chunked(&[tu.clone(), tk.clone()], &mut |_| Ok(())).unwrap();
+        assert!(!ok, "an in-budget monolithic plan must not stream");
+        art.call(&[tu, tk]).unwrap();
     }
 
     #[test]

@@ -1,0 +1,119 @@
+//! Counting-allocator proof of the chunked-streaming budget contract:
+//! once the workspace is warm, streaming a genome-scale conv through a
+//! `ChunkedConvPlan` touches the heap zero times, and the measured
+//! workspace peak stays under both the plan's own `scratch_bytes()`
+//! estimate and the byte budget the chunk size was picked for
+//! ("estimate <= budget => measured peak <= budget").
+//!
+//! This binary installs a counting global allocator, so it deliberately
+//! holds exactly one `#[test]`: concurrent test threads in the same
+//! binary would pollute the allocation counters.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use flashfftconv::fft::chunked::{chunk_scratch_bytes, pick_chunk, ChunkedConvPlan};
+use flashfftconv::fft::workspace::ConvWorkspace;
+use flashfftconv::util::Rng;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn chunked_streaming_is_zero_alloc_and_respects_the_budget() {
+    let mut rng = Rng::new(0xD0A);
+    // A signal ~50x longer than the chunk the budget allows: the whole
+    // point is that peak scratch depends on C, not N.
+    let n = 200_000usize;
+    let l = 129usize;
+    let budget = chunk_scratch_bytes(2 * 2048, 1);
+    let chunk = pick_chunk(n, l, budget, 1).expect("budget admits a chunk");
+    assert!(
+        chunk_scratch_bytes(2 * chunk, 1) <= budget,
+        "pick_chunk must honor the budget (chunk {chunk}, budget {budget})"
+    );
+    // Order pinned so the measured loop exercises no autotuner state.
+    let plan = ChunkedConvPlan::with_order(n, l, chunk, Some(2)).expect("plan builds");
+    assert!(plan.scratch_bytes() <= budget, "estimate must fit the budget");
+
+    let u32v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let k: Vec<f64> = (0..l).map(|_| rng.normal()).collect();
+    let (kre, kim) = plan.filter_spectrum(&k).expect("spectrum");
+
+    // Sink buffer owned by the test: the emit callback narrows into it
+    // by index, so the measured loop can't allocate through the sink.
+    let mut out = vec![0.0f32; n];
+    let mut ws = ConvWorkspace::new();
+    let mut run = |ws: &mut ConvWorkspace, out: &mut [f32]| {
+        let mut off = 0usize;
+        plan.conv_stream_f32(&u32v, &kre, &kim, ws, |part| {
+            for (dst, &src) in out[off..off + part.len()].iter_mut().zip(part) {
+                *dst = src as f32;
+            }
+            off += part.len();
+            Ok(())
+        })
+        .expect("stream");
+        assert_eq!(off, n, "emitted slices must cover exactly N");
+    };
+
+    // Warm pass: cold misses populate the workspace free lists.
+    run(&mut ws, &mut out);
+    ws.reset();
+
+    let before = allocs();
+    for _ in 0..3 {
+        run(&mut ws, &mut out);
+    }
+    let delta = allocs() - before;
+    let stats = ws.stats();
+    assert_eq!(
+        delta, 0,
+        "steady-state chunked streaming must perform zero heap allocations \
+         (counted {delta} over 3 passes; workspace stats {stats:?})"
+    );
+    assert_eq!(stats.allocs, 0, "no cold misses after warm-up: {stats:?}");
+    assert!(
+        stats.peak_bytes <= plan.scratch_bytes(),
+        "measured peak {} must stay under the plan estimate {}",
+        stats.peak_bytes,
+        plan.scratch_bytes()
+    );
+    assert!(
+        stats.peak_bytes <= budget,
+        "measured peak {} must stay under the byte budget {budget}",
+        stats.peak_bytes
+    );
+
+    // The budget can also be *imposed* after the fact: trim() releases
+    // cached buffers down to the cap and the next pass still runs.
+    ws.trim(budget / 2);
+    run(&mut ws, &mut out);
+    assert!(out.iter().any(|&v| v != 0.0), "stream actually computed something");
+}

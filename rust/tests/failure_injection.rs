@@ -171,19 +171,19 @@ fn router_rejects_oversize_and_service_reports_bad_streams() {
     .unwrap();
     // Wrong stream count for a gated request.
     let reply = service
-        .submit(ConvRequest { kind: ConvKind::Gated, len: 256, streams: vec![vec![0.0; 16 * 256]] })
+        .submit(ConvRequest { kind: ConvKind::Gated, len: 256, streams: vec![vec![0.0; 16 * 256]], chunk_tx: None })
         .recv()
         .unwrap();
     assert!(reply.is_err());
     // Wrong stream size.
     let reply = service
-        .submit(ConvRequest { kind: ConvKind::Forward, len: 256, streams: vec![vec![0.0; 7]] })
+        .submit(ConvRequest { kind: ConvKind::Forward, len: 256, streams: vec![vec![0.0; 7]], chunk_tx: None })
         .recv()
         .unwrap();
     assert!(reply.is_err());
     // Oversize request routes to an error, not a crash.
     let reply = service
-        .submit(ConvRequest { kind: ConvKind::Forward, len: 1 << 24, streams: vec![vec![]] })
+        .submit(ConvRequest { kind: ConvKind::Forward, len: 1 << 24, streams: vec![vec![]], chunk_tx: None })
         .recv()
         .unwrap();
     assert!(reply.is_err());
@@ -268,7 +268,7 @@ fn shard_death_respawns_and_fails_fast() {
         for _ in 0..2 {
             let u = rng.normal_vec(HEADS * len);
             let req =
-                ConvRequest { kind: flashfftconv::coordinator::router::ConvKind::Forward, len, streams: vec![u] };
+                ConvRequest { kind: flashfftconv::coordinator::router::ConvKind::Forward, len, streams: vec![u], chunk_tx: None };
             pending.push(fleet.submit(req).expect("admitted"));
         }
     }
@@ -310,7 +310,7 @@ fn shard_death_respawns_and_fails_fast() {
         let req = ConvRequest {
             kind: flashfftconv::coordinator::router::ConvKind::Forward,
             len: 256,
-            streams: vec![u],
+            streams: vec![u], chunk_tx: None
         };
         match fleet.call(req) {
             Ok(row) => {
@@ -389,7 +389,7 @@ fn control_ops_survive_poisoned_shard_and_converge_on_one_epoch() {
         let mut pending = vec![];
         for _ in 0..6 {
             let u = rng.normal_vec(HEADS * 256);
-            let req = ConvRequest { kind, len: 256, streams: vec![u.clone()] };
+            let req = ConvRequest { kind, len: 256, streams: vec![u.clone()], chunk_tx: None };
             match fleet.submit_blocking(req) {
                 Ok(rx) => pending.push((u, rx)),
                 Err(e) if e.retryable() => std::thread::sleep(Duration::from_millis(10)),
@@ -401,7 +401,7 @@ fn control_ops_survive_poisoned_shard_and_converge_on_one_epoch() {
                 Ok(ok) => {
                     assert_eq!(ok.epoch, e2, "reply carried a pre-swap epoch");
                     let want = single
-                        .call(ConvRequest { kind, len: 256, streams: vec![u] })
+                        .call(ConvRequest { kind, len: 256, streams: vec![u], chunk_tx: None })
                         .expect("reference conv");
                     assert_eq!(ok.data, want, "a shard served the pre-swap filter");
                     done += 1;
@@ -456,7 +456,7 @@ fn poisoned_plan_registry_recovers_and_serves() {
     let mut rng = Rng::new(0x9015);
     let u = rng.normal_vec(HEADS * 256);
     let row = fleet
-        .call(ConvRequest { kind: ConvKind::Forward, len: 256, streams: vec![u] })
+        .call(ConvRequest { kind: ConvKind::Forward, len: 256, streams: vec![u], chunk_tx: None })
         .expect("conv request served after registry poisoning");
     assert_eq!(row.len(), HEADS * 256);
 }

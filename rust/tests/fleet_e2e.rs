@@ -40,7 +40,7 @@ fn conv_fleet(
 }
 
 fn forward(len: usize, u: Vec<f32>) -> ConvRequest {
-    ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] }
+    ConvRequest { kind: ConvKind::Forward, len, streams: vec![u], chunk_tx: None }
 }
 
 /// The soak workload's request length for client `c`, request `i`:
@@ -181,7 +181,7 @@ fn busy_exactly_at_max_inflight_never_spurious() {
         }
         {
             let u = rng.normal_vec(HEADS * 512);
-            let req = ConvRequest { kind: ConvKind::Causal, len: 512, streams: vec![u] };
+            let req = ConvRequest { kind: ConvKind::Causal, len: 512, streams: vec![u], chunk_tx: None };
             match fleet.submit(req) {
                 Ok(rx) => pending.push(rx),
                 Err(e) => panic!("round {round}: causal admission spuriously rejected: {e}"),

@@ -491,7 +491,7 @@ fn million_point_reply_streams_bit_exactly_over_wire_v2() {
 
     // In-process reference through the same fleet.
     let want = service
-        .call(ConvRequest { kind: ConvKind::Forward, len: LONG, streams: vec![u.clone()] })
+        .call(ConvRequest { kind: ConvKind::Forward, len: LONG, streams: vec![u.clone()], chunk_tx: None })
         .expect("in-process long conv ok");
     assert_eq!(want.len(), HEADS * LONG);
 
@@ -791,7 +791,7 @@ fn chaos_soak_parity_with_poison_and_misbehaving_peers() {
                         .call(ConvRequest {
                             kind: ConvKind::Forward,
                             len,
-                            streams: vec![u],
+                            streams: vec![u], chunk_tx: None
                         })
                         .expect("reference conv ok");
                     assert_eq!(

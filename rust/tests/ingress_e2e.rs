@@ -45,7 +45,7 @@ fn sharded(shards: usize, max_inflight: usize) -> Arc<ConvService> {
 }
 
 fn forward(len: usize, u: Vec<f32>) -> ConvRequest {
-    ConvRequest { kind: ConvKind::Forward, len, streams: vec![u] }
+    ConvRequest { kind: ConvKind::Forward, len, streams: vec![u], chunk_tx: None }
 }
 
 /// Same request mix as the fleet soak: mostly 256 (some padded), every
@@ -641,4 +641,106 @@ fn inflight_gauges_track_and_reconcile() {
     assert_eq!(stats.completed, 3);
     assert_eq!(stats.submitted, 3);
     assert_eq!(stats.requests, 3, "dispatched == admitted == completed");
+}
+
+#[test]
+fn live_streamed_long_conv_matches_in_process_bitwise() {
+    // A genome-style bucket small enough for CI: 50k points, 129 taps,
+    // and a workspace budget that forces the chunked overlap-add path.
+    let n = 50_000usize;
+    let lk = 129usize;
+    let budget = flashfftconv::fft::chunked::chunk_scratch_bytes(2 * 4096, 1);
+    let service = Arc::new(
+        ConvService::start_sharded(
+            BackendConfig::NativeLongConv { n, filter_len: lk, budget_bytes: budget },
+            "monarch",
+            BatchPolicy { batch_size: 1, max_wait: Duration::from_millis(1) },
+            1,
+            16,
+        )
+        .expect("long-conv service starts"),
+    );
+    let mut rng = Rng::new(0x10C0);
+    let epoch =
+        service.set_filter(ConvKind::Causal, n, rng.normal_vec(lk)).expect("filter installs");
+    let u = rng.normal_vec(n);
+
+    // In-process reference through the very same engine (materialized).
+    let rx = service
+        .fleet()
+        .submit(ConvRequest {
+            kind: ConvKind::Causal,
+            len: n,
+            streams: vec![u.clone()],
+            chunk_tx: None,
+        })
+        .expect("in-process submit");
+    let want = rx.recv().expect("reply slot").expect("in-process ok");
+    assert_eq!(want.data.len(), n);
+    assert_eq!(want.epoch, epoch);
+
+    // The same request over TCP with live streaming forced on for every
+    // conv (threshold 1) and small frames so the run is many chunks.
+    let ingress = IngressServer::bind(
+        "127.0.0.1:0",
+        Some(service.clone()),
+        None,
+        IngressConfig {
+            stream_conv_threshold_points: 1,
+            stream_chunk_points: 1 << 13,
+            ..IngressConfig::default()
+        },
+    )
+    .expect("ingress binds");
+    let mut client = IngressClient::connect(ingress.local_addr()).expect("client connects");
+    let id = client
+        .send(&Request::Conv { kind: 2, len: n as u32, streams: vec![u] })
+        .expect("send");
+    let mut got: Vec<f32> = Vec::with_capacity(n);
+    let mut calls = 0usize;
+    let (rid, reply) = client
+        .recv_chunks(|part| {
+            calls += 1;
+            got.extend_from_slice(part);
+            Ok(())
+        })
+        .expect("streamed reply");
+    assert_eq!(rid, id);
+    let Reply::Ok { epoch: served, data, .. } = reply else {
+        panic!("expected ok, got {reply:?}");
+    };
+    assert!(data.is_empty(), "recv_chunks drains the payload through the callback");
+    assert_eq!(served, epoch, "fin frame carries the served filter epoch");
+    assert!(calls > 1, "a streamed reply must arrive as multiple live chunks ({calls})");
+    assert_eq!(got.len(), n);
+    for (i, (a, b)) in got.iter().zip(&want.data).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "streamed/in-process bit mismatch at {i}: {a:e} vs {b:e}"
+        );
+    }
+    assert!(ingress.stats().chunks_out.load(Ordering::Relaxed) > 1);
+
+    // A short causal request on the same connection: the chunk channel
+    // still attaches (threshold 1), but the routed 512-bucket is
+    // batch-2/16-head and cannot chunk, so the reply transparently
+    // degrades to the buffered path — same client code, one callback.
+    let short = 256usize;
+    let us = rng.normal_vec(HEADS * short);
+    let sid = client
+        .send(&Request::Conv { kind: 2, len: short as u32, streams: vec![us] })
+        .expect("short send");
+    let mut short_calls = 0usize;
+    let mut short_got: Vec<f32> = Vec::new();
+    let (srid, sreply) = client
+        .recv_chunks(|part| {
+            short_calls += 1;
+            short_got.extend_from_slice(part);
+            Ok(())
+        })
+        .expect("short reply");
+    assert_eq!(srid, sid);
+    assert!(matches!(sreply, Reply::Ok { .. }), "short conv ok, got {sreply:?}");
+    assert_eq!(short_got.len(), HEADS * short);
+    assert_eq!(short_calls, 1, "buffered fallback arrives as one callback");
 }

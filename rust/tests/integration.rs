@@ -194,7 +194,7 @@ fn service_conv_matches_native_fft_oracle() {
     service.set_filter(ConvKind::Forward, len, k.clone()).unwrap();
     let u: Vec<f32> = rng.normal_vec(h * len);
     let y = service
-        .call(ConvRequest { kind: ConvKind::Forward, len, streams: vec![u.clone()] })
+        .call(ConvRequest { kind: ConvKind::Forward, len, streams: vec![u.clone()], chunk_tx: None })
         .unwrap();
     assert_eq!(y.len(), h * len);
     for hi in 0..h {
@@ -217,7 +217,7 @@ fn service_pads_shorter_requests() {
     let mut rng = Rng::new(6);
     let u: Vec<f32> = rng.normal_vec(h * len);
     let y = service
-        .call(ConvRequest { kind: ConvKind::Causal, len, streams: vec![u.clone()] })
+        .call(ConvRequest { kind: ConvKind::Causal, len, streams: vec![u.clone()], chunk_tx: None })
         .unwrap();
     assert_eq!(y.len(), h * len);
     assert!(y.iter().all(|v| v.is_finite()));

@@ -603,7 +603,7 @@ fn prop_fleet_reply_pairing_across_shards() {
                 .call(ConvRequest {
                     kind: ConvKind::Forward,
                     len,
-                    streams: vec![vec![1.0; HEADS * len]],
+                    streams: vec![vec![1.0; HEADS * len]], chunk_tx: None
                 })
                 .expect("baseline all-ones conv")
         })
@@ -627,7 +627,7 @@ fn prop_fleet_reply_pairing_across_shards() {
                 let mut req = ConvRequest {
                     kind: ConvKind::Forward,
                     len,
-                    streams: vec![vec![c as f32; HEADS * len]],
+                    streams: vec![vec![c as f32; HEADS * len]], chunk_tx: None
                 };
                 loop {
                     match fleet.try_submit(req) {
@@ -759,6 +759,105 @@ fn prop_latency_quantiles_monotone_and_bracketing() {
                 return Err(format!("p100 {p100} below largest sample {max_ms}"));
             }
             Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chunked_overlap_add_matches_monolithic_causal_conv() {
+    use flashfftconv::fft::chunked::ChunkedConvPlan;
+    use flashfftconv::fft::workspace::ConvWorkspace;
+    prop::forall_ok(
+        "chunked overlap-add == monolithic causal conv",
+        21,
+        prop::default_cases(),
+        |rng| {
+            let c = gen::pow2(rng, 4, 8);
+            // Edge-heavy geometry: single-chunk (n <= c), exact divisor,
+            // and random non-divisor tails.
+            let n = match gen::index(rng, 0, 4) {
+                0 => gen::index(rng, 1, c + 1),
+                1 => c * gen::index(rng, 1, 5),
+                _ => gen::index(rng, 1, 5 * c),
+            };
+            // Edge-heavy filters: one tap, full-chunk taps, or interior.
+            let l = match gen::index(rng, 0, 4) {
+                0 => 1,
+                1 => c,
+                _ => gen::index(rng, 1, c + 1),
+            };
+            (gen::signal(rng, n), gen::signal(rng, l), c)
+        },
+        |(u, k, c)| {
+            let (n, l) = (u.len(), k.len());
+            let plan = ChunkedConvPlan::with_order(n, l, *c, Some(2))
+                .map_err(|e| format!("plan: {e}"))?;
+            let (kre, kim) = plan.filter_spectrum(k).map_err(|e| format!("spec: {e}"))?;
+            let mut got = vec![0.0; n];
+            plan.conv_into(u, &kre, &kim, &mut got, &mut ConvWorkspace::new())
+                .map_err(|e| format!("conv: {e}"))?;
+            let m = n.max(l);
+            let mut up = u.clone();
+            up.resize(m, 0.0);
+            let mut kp = k.clone();
+            kp.resize(m, 0.0);
+            let want = &fft::causal_conv(&up, &kp)[..n];
+            let err = fft::max_abs_diff(&got, want);
+            if err < 1e-8 {
+                Ok(())
+            } else {
+                Err(format!("n={n} l={l} c={c}: err {err}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_chunked_bitwise_per_chunk_size_and_tolerant_across() {
+    use flashfftconv::fft::chunked::ChunkedConvPlan;
+    use flashfftconv::fft::workspace::ConvWorkspace;
+    prop::forall_ok(
+        "chunked conv: bitwise per chunk size, tolerance across sizes",
+        22,
+        prop::default_cases(),
+        |rng| {
+            let c1 = gen::pow2(rng, 5, 7);
+            let c2 = gen::pow2(rng, 5, 7);
+            let n = gen::index(rng, 1, 6 * c1);
+            let l = gen::index(rng, 1, c1.min(c2) + 1);
+            (gen::signal(rng, n), gen::signal(rng, l), c1, c2)
+        },
+        |(u, k, c1, c2)| {
+            let (n, l) = (u.len(), k.len());
+            let run = |c: usize, ws: &mut ConvWorkspace| -> Result<Vec<f64>, String> {
+                let plan = ChunkedConvPlan::with_order(n, l, c, Some(2))
+                    .map_err(|e| format!("plan: {e}"))?;
+                let (kre, kim) = plan.filter_spectrum(k).map_err(|e| format!("spec: {e}"))?;
+                let mut y = vec![0.0; n];
+                plan.conv_into(u, &kre, &kim, &mut y, ws).map_err(|e| format!("conv: {e}"))?;
+                Ok(y)
+            };
+            // Same chunk size, cold workspace vs one dirtied by a prior
+            // pass at a *different* chunk size: bitwise identical (the
+            // workspace take() zeroing contract).
+            let a = run(*c1, &mut ConvWorkspace::new())?;
+            let mut ws = ConvWorkspace::new();
+            let b_other = run(*c2, &mut ws)?;
+            let b = run(*c1, &mut ws)?;
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!(
+                        "c={c1}: bit mismatch at {i} ({x:e} vs {y:e}) after a c={c2} pass"
+                    ));
+                }
+            }
+            // Different chunk sizes agree within accumulation tolerance.
+            let err = fft::max_abs_diff(&a, &b_other);
+            if err < 1e-8 {
+                Ok(())
+            } else {
+                Err(format!("n={n} l={l} c1={c1} c2={c2}: cross-chunk err {err}"))
+            }
         },
     );
 }

@@ -47,7 +47,7 @@ fn concurrent_submits_across_buckets_all_answered() {
                         service.submit(ConvRequest {
                             kind: ConvKind::Forward,
                             len,
-                            streams: vec![u],
+                            streams: vec![u], chunk_tx: None
                         }),
                     ));
                 }
@@ -77,7 +77,7 @@ fn batches_fill_beyond_one_row_under_load() {
     let pending: Vec<_> = (0..rows)
         .map(|_| {
             let u = rng.normal_vec(HEADS * n);
-            service.submit(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u] })
+            service.submit(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u], chunk_tx: None })
         })
         .collect();
     for rx in pending {
@@ -104,11 +104,11 @@ fn set_filter_mid_stream_changes_outputs() {
 
     service.set_filter(ConvKind::Forward, n, k1.clone()).unwrap();
     let y1 = service
-        .call(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u.clone()] })
+        .call(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u.clone()], chunk_tx: None })
         .unwrap();
     service.set_filter(ConvKind::Forward, n, k2.clone()).unwrap();
     let y2 = service
-        .call(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u.clone()] })
+        .call(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u.clone()], chunk_tx: None })
         .unwrap();
 
     let max_delta = y1
@@ -152,7 +152,7 @@ fn shutdown_drains_pending_requests() {
     let pending: Vec<_> = (0..5)
         .map(|_| {
             let u = rng.normal_vec(HEADS * n);
-            service.submit(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u] })
+            service.submit(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u], chunk_tx: None })
         })
         .collect();
     drop(service);
@@ -170,7 +170,7 @@ fn latency_stats_are_consistent() {
     for _ in 0..6 {
         let u = rng.normal_vec(HEADS * n);
         service
-            .call(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u] })
+            .call(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u], chunk_tx: None })
             .unwrap();
     }
     let s = service.stats();
@@ -203,7 +203,7 @@ fn gated_requests_serve_three_streams() {
         .call(ConvRequest {
             kind: ConvKind::Gated,
             len: n,
-            streams: vec![u.clone(), v.clone(), w.clone()],
+            streams: vec![u.clone(), v.clone(), w.clone()], chunk_tx: None
         })
         .unwrap();
     assert_eq!(y.len(), h * n);
@@ -235,10 +235,10 @@ fn two_services_share_nothing() {
     // different outputs across the two services.
     let u: Vec<f32> = rng.normal_vec(HEADS * n);
     let ya = a
-        .call(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u.clone()] })
+        .call(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u.clone()], chunk_tx: None })
         .unwrap();
     let yb = b
-        .call(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u] })
+        .call(ConvRequest { kind: ConvKind::Forward, len: n, streams: vec![u], chunk_tx: None })
         .unwrap();
     let delta = ya.iter().zip(&yb).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
     assert!(delta > 1e-3, "independent services must not share filters");
